@@ -1,0 +1,137 @@
+//! Figure 1 reproduction: `lapply()` over ten `slow_fcn(x)` calls via
+//! futures on four multisession workers, rendered as a schedule chart.
+//!
+//! Run: `cargo run --release --example figure1_trace`
+//!
+//! The paper's Figure 1 shows ten futures distributed over four background
+//! R processes: each future launches when a worker is free, the 5th+ wait,
+//! and results (plus relayed output) are collected at the end.  This driver
+//! records the same lifecycle (create → launch → exec span → collect) from
+//! the metrics layer and prints an ASCII Gantt chart plus a CSV
+//! (`figure1_trace.csv`) with the raw timestamps.
+
+use std::fmt::Write as _;
+
+use rustures::api::future::reset_session_counter;
+use rustures::prelude::*;
+
+const WORKERS: usize = 4;
+const TASKS: usize = 10;
+
+fn main() {
+    plan(PlanSpec::multiprocess(WORKERS));
+    reset_session_counter();
+
+    let have_kernels = rustures::runtime::global().is_some();
+    let mut env = Env::new();
+    let payload = if have_kernels {
+        // The real slow_fcn: an AOT-compiled JAX/Pallas matmul chain,
+        // called repeatedly so one future ≈ tens of milliseconds.
+        let mut rng = RngStream::from_seed(1);
+        let x = Tensor::new(vec![128, 128], rng.unif_f32(128 * 128)).unwrap();
+        env.insert("x", x);
+        Expr::seq(vec![
+            Expr::call("slow_fcn_heavy", vec![Expr::var("x")]),
+            Expr::call("slow_fcn_heavy", vec![Expr::var("x")]),
+            Expr::call("slow_fcn_heavy", vec![Expr::var("x")]),
+            Expr::lit(0i64),
+        ])
+    } else {
+        eprintln!("(artifacts missing: using Spin payload — run `make artifacts`)");
+        Expr::Spin { millis: 60 }
+    };
+
+    // Warm the workers: the first kernel call per worker pays the one-time
+    // PJRT runtime load + artifact compile; Figure 1 traces steady state.
+    if have_kernels {
+        let warm: Vec<Future> =
+            (0..WORKERS).map(|_| future(payload.clone(), &env).unwrap()).collect();
+        for f in &warm {
+            let _ = f.value();
+        }
+        reset_session_counter();
+    }
+
+    println!("Figure 1: {TASKS} slow_fcn futures on {WORKERS} multisession workers\n");
+
+    let t0 = std::time::Instant::now();
+    let epoch = now_ns();
+
+    // lapply(xs, function(x) future(slow_fcn(x))): create all futures...
+    let futures: Vec<Future> = (0..TASKS)
+        .map(|i| {
+            future_with(
+                payload.clone(),
+                &env,
+                FutureOpts::new().label(&format!("slow_fcn(xs[{i}])")),
+            )
+            .unwrap()
+        })
+        .collect();
+    // ...then collect the values (relaying output) at the end.
+    let mut rows = Vec::new();
+    for (i, f) in futures.iter().enumerate() {
+        let result = f.result().unwrap();
+        let create = f.trace.created_ns.saturating_sub(epoch);
+        let launch =
+            f.trace.event_ns("launch").unwrap_or(f.trace.created_ns).saturating_sub(epoch);
+        let exec_start = result.metrics.started_ns.saturating_sub(epoch);
+        let exec_end = result.metrics.finished_ns.saturating_sub(epoch);
+        rows.push((i, create, launch, exec_start, exec_end));
+    }
+    let wall = t0.elapsed();
+
+    // ASCII Gantt: '.' queued, '#' executing.
+    let total_ns = rows.iter().map(|r| r.4).max().unwrap_or(1).max(1);
+    let width = 64usize;
+    let scale = |ns: u64| ((ns as f64 / total_ns as f64) * width as f64) as usize;
+    println!("{:>3} {:<10} {}", "f#", "exec(ms)", "timeline (. queued, # executing)");
+    for (i, create, _launch, es, ee) in &rows {
+        let (a, b, c) = (scale(*create), scale(*es), scale(*ee));
+        let mut line = String::new();
+        for _ in 0..a {
+            line.push(' ');
+        }
+        for _ in a..b {
+            line.push('.');
+        }
+        for _ in b..c.max(b + 1) {
+            line.push('#');
+        }
+        println!("{i:>3} {:<10.2} {line}", (*ee - *es) as f64 / 1e6);
+    }
+    println!("\nwall clock: {wall:?} ({TASKS} tasks, {WORKERS} workers)");
+
+    // The Figure-1 shape: with 4 workers, at most 4 tasks execute
+    // concurrently, later tasks queue until a worker frees.
+    let mut events: Vec<(u64, i32)> = Vec::new();
+    for (_, _, _, es, ee) in &rows {
+        events.push((*es, 1));
+        events.push((*ee, -1));
+    }
+    events.sort();
+    let mut now = 0;
+    let mut peak = 0;
+    for (_, d) in events {
+        now += d;
+        peak = peak.max(now);
+    }
+    println!("peak concurrent executions: {peak} (≤ {WORKERS} expected)");
+
+    // CSV for plotting.
+    let mut csv = String::from("future,create_ns,launch_ns,exec_start_ns,exec_end_ns\n");
+    for (i, c, l, es, ee) in &rows {
+        writeln!(csv, "{i},{c},{l},{es},{ee}").unwrap();
+    }
+    std::fs::write("figure1_trace.csv", csv).unwrap();
+    println!("wrote figure1_trace.csv");
+
+    plan(PlanSpec::sequential());
+}
+
+fn now_ns() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap_or_default()
+        .as_nanos() as u64
+}

@@ -1,0 +1,98 @@
+//! Quickstart — the paper's introductory examples, end to end.
+//!
+//! Run: `cargo run --release --example quickstart`
+//!
+//! Covers: the three atomic constructs, creation-time globals capture,
+//! plan() switching (the end-user's knob), future assignments + listenv,
+//! error relay, and a parallel map with load balancing.
+
+use rustures::api::future::values;
+use rustures::api::promise::FuturePromise;
+use rustures::prelude::*;
+
+fn main() {
+    // ----------------------------------------------------------------
+    // 1. The assignment decoupled:  f <- future(expr);  v <- value(f)
+    // ----------------------------------------------------------------
+    plan(PlanSpec::sequential());
+    let mut env = Env::new();
+    env.insert("x", 1.0);
+
+    let f = future(Expr::mul(Expr::var("x"), Expr::lit(100.0)), &env).unwrap();
+    env.insert("x", 2.0); // reassigned after creation...
+    let v = f.value().unwrap();
+    println!("1. future(x * 100) with x=1 at creation, x=2 at collect → {v}");
+    assert_eq!(v, Value::F64(100.0)); // ...the future saw x = 1
+
+    // ----------------------------------------------------------------
+    // 2. The end-user picks the backend: plan(multisession)
+    // ----------------------------------------------------------------
+    plan(PlanSpec::multiprocess(2));
+    println!("2. plan(multisession, workers = 2)");
+
+    // Three futures, two workers: the third create blocks until a worker
+    // frees (the paper's blocking example).
+    let env2 = Env::new();
+    let futures: Vec<Future> = (1..=3)
+        .map(|i| {
+            future(
+                Expr::seq(vec![Expr::Spin { millis: 50 }, Expr::lit(i as i64)]),
+                &env2,
+            )
+            .unwrap()
+        })
+        .collect();
+    let vs = values(&futures).unwrap();
+    println!("   three futures on two workers → {vs:?}");
+
+    // ----------------------------------------------------------------
+    // 3. v %<-% expr  (future assignment) and listenv
+    // ----------------------------------------------------------------
+    let p = FuturePromise::assign(Expr::add(Expr::lit(40.0), Expr::lit(2.0)), &env2).unwrap();
+    println!("3. v %<-% (40 + 2) → {}", p.get().unwrap());
+
+    let mut lv = ListEnv::new();
+    for i in 0..4usize {
+        lv.assign(i, Expr::mul(Expr::lit(i as i64), Expr::lit(i as i64)), &env2).unwrap();
+    }
+    println!("   listenv squares → {:?}", lv.as_list().unwrap());
+
+    // ----------------------------------------------------------------
+    // 4. Errors relay as-is; tryCatch-style handling
+    // ----------------------------------------------------------------
+    let bad = future(Expr::stop(Expr::lit("non-numeric argument")), &env2).unwrap();
+    match bad.value() {
+        Err(FutureError::Eval(e)) => println!("4. relayed error: \"{e}\""),
+        other => panic!("unexpected: {other:?}"),
+    }
+
+    // ----------------------------------------------------------------
+    // 5. Parallel map-reduce with load balancing + parallel RNG
+    // ----------------------------------------------------------------
+    let xs: Vec<Value> = (0..10i64).map(Value::I64).collect();
+    let body = Expr::add(Expr::var("x"), Expr::runif(1));
+    let out = future_lapply(&xs, "x", &body, &env2, &LapplyOpts::new().seed(42)).unwrap();
+    println!("5. future_lapply(xs, x + runif(1)), seeded → {} results", out.len());
+    // Rerun: identical (reproducible regardless of backend/workers).
+    let out2 = future_lapply(&xs, "x", &body, &env2, &LapplyOpts::new().seed(42)).unwrap();
+    assert_eq!(out, out2);
+    println!("   rerun is bit-identical ✓");
+
+    // ----------------------------------------------------------------
+    // 6. future_either — first resolved wins
+    // ----------------------------------------------------------------
+    plan(PlanSpec::multicore(3));
+    let winner = future_either(
+        vec![
+            Expr::seq(vec![Expr::Spin { millis: 300 }, Expr::lit("shell sort")]),
+            Expr::seq(vec![Expr::Spin { millis: 10 }, Expr::lit("quick sort")]),
+            Expr::seq(vec![Expr::Spin { millis: 300 }, Expr::lit("radix sort")]),
+        ],
+        &env2,
+    )
+    .unwrap();
+    println!("6. future_either(3 sorts) → winner: {winner}");
+
+    plan(PlanSpec::sequential());
+    println!("\nquickstart OK");
+}

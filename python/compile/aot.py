@@ -1,0 +1,82 @@
+"""AOT compile path: lower every L2 entry to HLO *text* + a manifest.
+
+HLO text (NOT ``lowered.compiler_ir("hlo").as_hlo_text()`` via serialized
+protos) is the interchange format: jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which xla_extension 0.5.1 (behind the Rust ``xla``
+crate) rejects; the text parser reassigns ids and round-trips cleanly.
+
+Run once by ``make artifacts``; the Rust binary is self-contained afterwards.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import ENTRIES
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for the loader)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_json(s):
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def lower_entry(name, fn, example_args):
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    out_avals = lowered.out_info
+    outputs = [
+        {"shape": list(o.shape), "dtype": str(o.dtype)}
+        for o in jax.tree_util.tree_leaves(out_avals)
+    ]
+    return text, outputs
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--only", default=None, help="comma-separated entry names")
+    args = p.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {"format": 1, "entries": []}
+    for name, (fn, example_args) in ENTRIES.items():
+        if only and name not in only:
+            continue
+        text, outputs = lower_entry(name, fn, example_args)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"].append(
+            {
+                "name": name,
+                "file": fname,
+                "args": [_spec_json(s) for s in example_args],
+                "outputs": outputs,
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            }
+        )
+        print(f"lowered {name}: {len(text)} chars, {len(outputs)} outputs")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest['entries'])} entries")
+
+
+if __name__ == "__main__":
+    main()

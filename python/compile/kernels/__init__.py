@@ -1,0 +1,2 @@
+# L1: Pallas kernels for the compute hot-spots; ref.py is the jnp oracle.
+from . import matmul, ref, resample  # noqa: F401

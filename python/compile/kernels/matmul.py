@@ -1,0 +1,98 @@
+"""L1 Pallas kernel: tiled matmul shaped for the TPU MXU.
+
+The paper's ``slow_fcn(x)`` payloads and the MLP train step bottom out in
+dense matmuls.  This kernel expresses the classic HBM->VMEM tiling schedule
+with ``BlockSpec``: a 3-D grid over (M/bm, N/bn, K/bk), f32 accumulation in
+the output tile across the K dimension (``preferred_element_type``), blocks
+sized as multiples of (8, 128) for the MXU systolic array.
+
+``interpret=True`` is mandatory on this image: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.  Interpret mode lowers
+to plain HLO so the same artifact runs on the Rust CPU client.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes.  128x128x128 is the MXU-native shape; tests shrink the
+# tiles to force multi-step grids on small operands.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One (bm, bn) output tile; accumulates over the K grid dimension.
+
+    o_ref doubles as the accumulator: zeroed on the first K step, flushed
+    implicitly on the last.  This is the standard Pallas accumulation idiom
+    and keeps the kernel scratch-free (interpret-mode friendly).
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x, y, *, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK):
+    """Tiled matmul ``x @ y`` via a Pallas kernel.
+
+    Args:
+      x: f32[M, K]; M % bm == 0 and K % bk == 0.
+      y: f32[K, N]; N % bn == 0.
+      bm/bn/bk: tile sizes (multiples of 8 and 128 on real TPU).
+
+    Returns:
+      f32[M, N].
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {y.shape}"
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shapes {(m, k, n)} not divisible by tiles {(bm, bk, bn)}"
+    )
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+@jax.custom_vjp
+def mm(x, y):
+    """Differentiable wrapper around the Pallas matmul.
+
+    ``pallas_call`` has no autodiff rule, so the MLP train step (which takes
+    ``jax.grad`` through its matmuls) routes both the forward and the two
+    backward products through the same kernel via ``custom_vjp``.
+    """
+    return matmul(x, y)
+
+
+def _mm_fwd(x, y):
+    return matmul(x, y), (x, y)
+
+
+def _mm_bwd(res, g):
+    x, y = res
+    # dX = g @ Y^T ; dY = X^T @ g — both through the Pallas kernel.
+    return matmul(g, y.T), matmul(x.T, g)
+
+
+mm.defvjp(_mm_fwd, _mm_bwd)

@@ -1,0 +1,109 @@
+"""L1 Pallas kernels: blocked streaming reductions.
+
+Two reduction kernels back the paper-style workloads:
+
+* ``weighted_moments`` — the bootstrap hot-spot.  Given (x, y) pairs and a
+  bootstrap weight vector, it streams blocks of rows through VMEM and
+  accumulates the five weighted moments a weighted least-squares fit needs
+  (sum w, sum w*x, sum w*y, sum w*x^2, sum w*x*y) plus sum w*y^2 for R^2.
+
+* ``count_in_circle`` — the Monte-Carlo-pi hot-spot: counts uniform points
+  falling inside the unit quarter-circle, block by block.
+
+Both use the grid-accumulation idiom (output tile is the accumulator, zeroed
+at grid step 0) and (8, 128)-aligned blocks.  interpret=True throughout: the
+CPU PJRT plugin cannot run Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Number of accumulated moments, padded to 8 lanes for layout friendliness.
+N_MOMENTS = 8
+DEFAULT_BLOCK = 512
+
+
+def _moments_kernel(xy_ref, w_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xy = xy_ref[...]  # (bn, 2)
+    w = w_ref[...]  # (bn,)
+    x = xy[:, 0]
+    y = xy[:, 1]
+    o_ref[...] += jnp.stack(
+        [
+            jnp.sum(w),
+            jnp.sum(w * x),
+            jnp.sum(w * y),
+            jnp.sum(w * x * x),
+            jnp.sum(w * x * y),
+            jnp.sum(w * y * y),
+            jnp.array(0.0, jnp.float32),
+            jnp.array(0.0, jnp.float32),
+        ]
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def weighted_moments(xy, w, *, block=DEFAULT_BLOCK):
+    """Weighted moment vector of (x, y) rows under bootstrap weights ``w``.
+
+    Args:
+      xy: f32[N, 2] data rows; N % block == 0.
+      w: f32[N] bootstrap weights (multinomial counts or continuous).
+      block: rows streamed through VMEM per grid step.
+
+    Returns:
+      f32[8]: [Sw, Swx, Swy, Swxx, Swxy, Swyy, 0, 0].
+    """
+    n = xy.shape[0]
+    block = min(block, n)
+    assert xy.shape == (n, 2) and w.shape == (n,)
+    assert n % block == 0, f"N={n} not divisible by block={block}"
+    grid = (n // block,)
+    return pl.pallas_call(
+        _moments_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, 2), lambda i: (i, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((N_MOMENTS,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((N_MOMENTS,), jnp.float32),
+        interpret=True,
+    )(xy, w)
+
+
+def _circle_kernel(u_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    u = u_ref[...]  # (bn, 2)
+    inside = (u[:, 0] * u[:, 0] + u[:, 1] * u[:, 1]) <= 1.0
+    o_ref[0] += jnp.sum(inside.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def count_in_circle(u, *, block=DEFAULT_BLOCK):
+    """Number of rows of ``u`` (f32[N, 2] uniforms) inside the unit circle.
+
+    Returns f32[1] so the accumulator keeps an array layout.
+    """
+    n = u.shape[0]
+    block = min(block, n)
+    assert u.shape == (n, 2)
+    assert n % block == 0, f"N={n} not divisible by block={block}"
+    return pl.pallas_call(
+        _circle_kernel,
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block, 2), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=True,
+    )(u)

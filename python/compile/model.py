@@ -1,0 +1,129 @@
+"""L2: the JAX compute graphs behind the paper's ``slow_fcn(x)`` payloads.
+
+The futures paper keeps its workload abstract ("a slow function").  Here each
+payload is a real compute graph, calling the L1 Pallas kernels, AOT-lowered
+once by aot.py and executed by Rust workers through PJRT.  Nothing in this
+file runs on the request path.
+
+Payloads (all static shapes — required for AOT):
+
+* ``slow_fcn``       — the paper's generic expensive function: an iterated,
+                       normalized matmul chain over f32[128,128].
+* ``slow_fcn_heavy`` — same, 4x the iterations (for future_either races and
+                       overhead/throughput benches).
+* ``bootstrap_stat`` — one bootstrap replicate: weighted least-squares fit
+                       of y~x under a bootstrap weight vector (the e2e
+                       example's per-future payload).
+* ``mc_pi_block``    — Monte-Carlo pi from a block of uniforms.
+* ``mlp_step``       — one SGD step of a 2-layer MLP (fwd+bwd through the
+                       Pallas matmul via custom_vjp): the "train a model
+                       inside a future" workload.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.matmul import mm
+from .kernels.resample import count_in_circle, weighted_moments
+
+# Static workload shapes (the AOT contract; mirrored in artifacts/manifest.json).
+SLOW_DIM = 128
+BOOT_N = 4096
+PI_N = 8192
+MLP_DIM = 128
+SLOW_ITERS = 8
+HEAVY_ITERS = 32
+LEARNING_RATE = 0.01
+
+
+def _slow_chain(x, iters):
+    """Iterated normalized matmul: y <- tanh(y @ x / dim), ``iters`` times."""
+    scale = 1.0 / x.shape[0]
+    y = x
+    for _ in range(iters):
+        y = jnp.tanh(mm(y, x) * scale)
+    return (y,)
+
+
+def slow_fcn(x):
+    """f32[128,128] -> (f32[128,128],): the paper's generic slow payload."""
+    return _slow_chain(x, SLOW_ITERS)
+
+
+def slow_fcn_heavy(x):
+    """As slow_fcn but 4x the matmul chain — a deliberately slower racer."""
+    return _slow_chain(x, HEAVY_ITERS)
+
+
+def bootstrap_stat(xy, w):
+    """One bootstrap replicate of a weighted least-squares fit.
+
+    Args:
+      xy: f32[4096, 2] (x, y) rows.
+      w: f32[4096] bootstrap weights for this replicate.
+
+    Returns:
+      (slope f32[], intercept f32[]).
+    """
+    s = weighted_moments(xy, w)
+    sw, swx, swy, swxx, swxy = s[0], s[1], s[2], s[3], s[4]
+    denom = sw * swxx - swx * swx
+    slope = (sw * swxy - swx * swy) / denom
+    intercept = (swy - slope * swx) / sw
+    return (slope, intercept)
+
+
+def mc_pi_block(u):
+    """Monte-Carlo pi estimate from f32[8192, 2] uniforms in [0,1)^2."""
+    count = count_in_circle(u)[0]
+    return (4.0 * count / u.shape[0],)
+
+
+def _mlp_loss(w1, b1, w2, b2, x, y):
+    h = jnp.tanh(mm(x, w1) + b1)
+    pred = mm(h, w2) + b2
+    return jnp.mean((pred - y) ** 2)
+
+
+def mlp_step(w1, b1, w2, b2, x, y):
+    """One SGD step of a 2-layer MLP; fwd+bwd run through the Pallas matmul.
+
+    Returns (loss, w1', b1', w2', b2').
+    """
+    loss, grads = jax.value_and_grad(_mlp_loss, argnums=(0, 1, 2, 3))(
+        w1, b1, w2, b2, x, y
+    )
+    g1, gb1, g2, gb2 = grads
+    return (
+        loss,
+        w1 - LEARNING_RATE * g1,
+        b1 - LEARNING_RATE * gb1,
+        w2 - LEARNING_RATE * g2,
+        b2 - LEARNING_RATE * gb2,
+    )
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+# AOT entry registry: name -> (fn, example_args).  aot.py lowers each entry
+# to artifacts/<name>.hlo.txt; the Rust runtime loads them by name via
+# artifacts/manifest.json.
+ENTRIES = {
+    "slow_fcn": (slow_fcn, (_f32(SLOW_DIM, SLOW_DIM),)),
+    "slow_fcn_heavy": (slow_fcn_heavy, (_f32(SLOW_DIM, SLOW_DIM),)),
+    "bootstrap_stat": (bootstrap_stat, (_f32(BOOT_N, 2), _f32(BOOT_N))),
+    "mc_pi_block": (mc_pi_block, (_f32(PI_N, 2),)),
+    "mlp_step": (
+        mlp_step,
+        (
+            _f32(MLP_DIM, MLP_DIM),
+            _f32(MLP_DIM),
+            _f32(MLP_DIM, MLP_DIM),
+            _f32(MLP_DIM),
+            _f32(MLP_DIM, MLP_DIM),
+            _f32(MLP_DIM, MLP_DIM),
+        ),
+    ),
+}

@@ -1,0 +1,108 @@
+"""L2 correctness: the payload graphs vs direct jnp computation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_slow_fcn_shape_and_determinism():
+    x = jax.random.uniform(jax.random.PRNGKey(0), (128, 128), jnp.float32)
+    (y1,) = model.slow_fcn(x)
+    (y2,) = model.slow_fcn(x)
+    assert y1.shape == (128, 128)
+    np.testing.assert_array_equal(y1, y2)
+    assert float(jnp.max(jnp.abs(y1))) <= 1.0  # tanh-bounded
+
+
+def test_slow_fcn_heavy_differs_from_slow_fcn():
+    x = jax.random.uniform(jax.random.PRNGKey(1), (128, 128), jnp.float32)
+    (a,) = model.slow_fcn(x)
+    (b,) = model.slow_fcn_heavy(x)
+    assert not np.allclose(a, b)
+
+
+def test_bootstrap_stat_recovers_known_slope():
+    """y = 2x + 1 exactly -> WLS fit must return (2, 1) for any weights."""
+    key = jax.random.PRNGKey(2)
+    x = jax.random.uniform(key, (model.BOOT_N,), jnp.float32, -2, 2)
+    xy = jnp.stack([x, 2.0 * x + 1.0], axis=1)
+    w = jax.random.uniform(jax.random.PRNGKey(3), (model.BOOT_N,), jnp.float32, 0.1, 2.0)
+    slope, intercept = model.bootstrap_stat(xy, w)
+    assert abs(float(slope) - 2.0) < 1e-3
+    assert abs(float(intercept) - 1.0) < 1e-3
+
+
+def test_bootstrap_stat_matches_wls_oracle():
+    kx, ky, kw = jax.random.split(jax.random.PRNGKey(4), 3)
+    x = jax.random.uniform(kx, (model.BOOT_N,), jnp.float32, -1, 1)
+    y = 0.5 * x + 0.1 * jax.random.normal(ky, (model.BOOT_N,), jnp.float32)
+    xy = jnp.stack([x, y], axis=1)
+    w = jax.random.uniform(kw, (model.BOOT_N,), jnp.float32, 0.0, 2.0)
+    slope, intercept = model.bootstrap_stat(xy, w)
+    rs, ri = ref.wls_fit_ref(xy, w)
+    np.testing.assert_allclose(float(slope), float(rs), rtol=1e-3)
+    np.testing.assert_allclose(float(intercept), float(ri), atol=1e-3)
+
+
+def test_mc_pi_block_estimates_pi():
+    u = jax.random.uniform(jax.random.PRNGKey(5), (model.PI_N, 2), jnp.float32)
+    (pi_hat,) = model.mc_pi_block(u)
+    assert abs(float(pi_hat) - np.pi) < 0.1  # 8192 samples: ~0.02 stderr
+
+
+def test_mlp_step_reduces_loss():
+    keys = jax.random.split(jax.random.PRNGKey(6), 6)
+    d = model.MLP_DIM
+    w1 = jax.random.normal(keys[0], (d, d), jnp.float32) * 0.1
+    b1 = jnp.zeros(d, jnp.float32)
+    w2 = jax.random.normal(keys[1], (d, d), jnp.float32) * 0.1
+    b2 = jnp.zeros(d, jnp.float32)
+    x = jax.random.normal(keys[2], (d, d), jnp.float32)
+    y = jax.random.normal(keys[3], (d, d), jnp.float32) * 0.5
+
+    losses = []
+    for _ in range(5):
+        loss, w1, b1, w2, b2 = model.mlp_step(w1, b1, w2, b2, x, y)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], f"loss did not decrease: {losses}"
+
+
+def test_mlp_step_grads_match_pure_jnp():
+    """One step through Pallas mm vs the identical graph through jnp matmul."""
+    keys = jax.random.split(jax.random.PRNGKey(7), 4)
+    d = model.MLP_DIM
+    w1 = jax.random.normal(keys[0], (d, d), jnp.float32) * 0.1
+    b1 = jnp.zeros(d, jnp.float32)
+    w2 = jax.random.normal(keys[1], (d, d), jnp.float32) * 0.1
+    b2 = jnp.zeros(d, jnp.float32)
+    x = jax.random.normal(keys[2], (d, d), jnp.float32)
+    y = jax.random.normal(keys[3], (d, d), jnp.float32)
+
+    def jnp_loss(w1, b1, w2, b2):
+        h = jnp.tanh(x @ w1 + b1)
+        return jnp.mean((h @ w2 + b2 - y) ** 2)
+
+    loss, nw1, nb1, nw2, nb2 = model.mlp_step(w1, b1, w2, b2, x, y)
+    rloss, rgrads = jax.value_and_grad(jnp_loss, argnums=(0, 1, 2, 3))(w1, b1, w2, b2)
+    np.testing.assert_allclose(float(loss), float(rloss), rtol=1e-4)
+    np.testing.assert_allclose(nw1, w1 - model.LEARNING_RATE * rgrads[0], rtol=1e-3, atol=1e-5)
+    np.testing.assert_allclose(nw2, w2 - model.LEARNING_RATE * rgrads[2], rtol=1e-3, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", list(model.ENTRIES))
+def test_entries_are_callable_with_example_shapes(name):
+    fn, example = model.ENTRIES[name]
+    args = [
+        jax.random.uniform(jax.random.PRNGKey(i), s.shape, s.dtype, 0.0, 1.0)
+        for i, s in enumerate(example)
+    ]
+    out = fn(*args)
+    assert isinstance(out, tuple) and len(out) >= 1
+    for o in out:
+        assert jnp.all(jnp.isfinite(o)), f"{name} produced non-finite output"

@@ -1,0 +1,58 @@
+//! E2 — blocking semantics: `future()` creation latency when workers are
+//! free vs all-busy.
+//!
+//! Paper: "the first two futures are created in a non-blocking way ...
+//! however, when we attempt to create a third future ... future() blocks
+//! until one of the workers is available."
+
+mod common;
+
+use common::{fmt_dur, header, row, Stats};
+use rustures::api::plan::{with_plan, PlanSpec};
+use rustures::prelude::*;
+use std::time::Instant;
+
+fn main() {
+    header(
+        "E2: future() creation latency (2 workers, 60ms payloads)",
+        &["backend     ", "create #", "state      ", "p50       "],
+    );
+
+    for spec in [PlanSpec::multicore(2), PlanSpec::multiprocess(2)] {
+        let mut free_samples = Vec::new();
+        let mut busy_samples = Vec::new();
+        with_plan(spec.clone(), || {
+            for _ in 0..15 {
+                let env = Env::new();
+                let t0 = Instant::now();
+                let f1 = future(Expr::Sleep { millis: 60 }, &env).unwrap();
+                let d1 = t0.elapsed();
+                let t1 = Instant::now();
+                let f2 = future(Expr::Sleep { millis: 60 }, &env).unwrap();
+                let d2 = t1.elapsed();
+                free_samples.push(d1);
+                free_samples.push(d2);
+
+                let t2 = Instant::now();
+                let f3 = future(Expr::lit(0i64), &env).unwrap();
+                busy_samples.push(t2.elapsed());
+                let _ = (f1.value(), f2.value(), f3.value());
+            }
+        });
+        let free = Stats::from(free_samples);
+        let busy = Stats::from(busy_samples);
+        row(&[
+            format!("{:<12}", spec.name()),
+            format!("{:<8}", "1st/2nd"),
+            format!("{:<11}", "worker free"),
+            format!("{:>10}", fmt_dur(free.p50)),
+        ]);
+        row(&[
+            format!("{:<12}", spec.name()),
+            format!("{:<8}", "3rd"),
+            format!("{:<11}", "all busy"),
+            format!("{:>10}", fmt_dur(busy.p50)),
+        ]);
+    }
+    println!("\nshape check: 3rd create blocks ≈ the remaining payload time; 1st/2nd are ~instant");
+}

@@ -1,0 +1,62 @@
+//! E3 — load balancing: one future per element vs chunked futures.
+//!
+//! Paper (footnote 6 + Future work): per-element futures are "suboptimal
+//! if the overhead of creating a future is relatively large compared to the
+//! evaluation time", mitigated by processing elements in chunks — one
+//! future per worker.  This bench regenerates that table: N cheap elements
+//! under each chunking policy, per backend.
+
+mod common;
+
+use common::{fmt_dur, header, row, time_once};
+use rustures::api::plan::{with_plan, PlanSpec};
+use rustures::prelude::*;
+
+fn run(n: usize, chunking: Chunking, spec: PlanSpec) -> std::time::Duration {
+    with_plan(spec, || {
+        let env = Env::new();
+        let xs: Vec<Value> = (0..n as i64).map(Value::I64).collect();
+        let body = Expr::mul(Expr::var("x"), Expr::var("x"));
+        // Warm the backend (worker spawn is one-time setup, not per-map).
+        let _ = future(Expr::lit(0i64), &env).unwrap().value();
+        time_once(|| {
+            let out = future_lapply(
+                &xs,
+                "x",
+                &body,
+                &env,
+                &LapplyOpts::new().no_capture().chunking(chunking),
+            )
+            .unwrap();
+            assert_eq!(out.len(), n);
+        })
+    })
+}
+
+fn main() {
+    header(
+        "E3: chunking ablation (N cheap elements, 2 workers)",
+        &["backend     ", "N    ", "policy          ", "wall      ", "per-elem  "],
+    );
+
+    for spec in [PlanSpec::multicore(2), PlanSpec::multiprocess(2)] {
+        for n in [64usize, 256, 1024] {
+            for (label, chunking) in [
+                ("per-element", Chunking::PerElement),
+                ("per-worker", Chunking::PerWorker),
+                ("scheduling=4", Chunking::Scheduling(4.0)),
+                ("chunk=32", Chunking::ChunkSize(32)),
+            ] {
+                let wall = run(n, chunking, spec.clone());
+                row(&[
+                    format!("{:<12}", spec.name()),
+                    format!("{n:<5}"),
+                    format!("{label:<16}"),
+                    format!("{:>10}", fmt_dur(wall)),
+                    format!("{:>10}", fmt_dur(wall / n as u32)),
+                ]);
+            }
+        }
+    }
+    println!("\nshape check: per-worker chunking beats per-element by ~N/workers on overhead-dominated maps");
+}

@@ -1,0 +1,71 @@
+//! Shared bench harness: criterion is unavailable offline, so each bench is
+//! a `harness = false` binary using this minimal measured-loop helper.
+//! Output is a fixed-width table (one row per configuration) — the format
+//! EXPERIMENTS.md records.
+
+use std::time::{Duration, Instant};
+
+/// Run `f` `iters` times after `warmup` unmeasured runs; returns per-iter
+/// stats (mean, p50, p95) over individually timed iterations.
+pub fn measure(warmup: usize, iters: usize, mut f: impl FnMut()) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    Stats::from(samples)
+}
+
+/// Time a single run of `f`.
+pub fn time_once(f: impl FnOnce()) -> Duration {
+    let t0 = Instant::now();
+    f();
+    t0.elapsed()
+}
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub n: usize,
+}
+
+impl Stats {
+    pub fn from(mut samples: Vec<Duration>) -> Self {
+        assert!(!samples.is_empty());
+        samples.sort();
+        let n = samples.len();
+        let total: Duration = samples.iter().sum();
+        Stats {
+            mean: total / n as u32,
+            p50: samples[n / 2],
+            p95: samples[(n as f64 * 0.95) as usize - if n >= 20 { 0 } else { usize::from(n > 1) }],
+            n,
+        }
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    if d.as_secs_f64() >= 1.0 {
+        format!("{:.2}s", d.as_secs_f64())
+    } else if d.as_millis() >= 1 {
+        format!("{:.2}ms", d.as_secs_f64() * 1e3)
+    } else {
+        format!("{:.1}µs", d.as_secs_f64() * 1e6)
+    }
+}
+
+pub fn header(title: &str, cols: &[&str]) {
+    println!("\n== {title} ==");
+    println!("{}", cols.join(" | "));
+    println!("{}", "-".repeat(cols.iter().map(|c| c.len() + 3).sum::<usize>()));
+}
+
+pub fn row(cells: &[String]) {
+    println!("{}", cells.join(" | "));
+}

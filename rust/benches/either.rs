@@ -1,0 +1,51 @@
+//! E7 — `future_either`: first-resolved-wins latency.
+//!
+//! Paper ("Other uses of futures"): EITHER "evaluates the expressions in
+//! parallel and returns the value of the first one that finishes" — e.g.
+//! racing sort algorithms.  The win: latency equals the *fastest* racer
+//! (plus overhead), not the chosen-wrong-algorithm worst case.
+
+mod common;
+
+use common::{fmt_dur, header, measure, row};
+use rustures::api::plan::{with_plan, PlanSpec};
+use rustures::prelude::*;
+
+fn main() {
+    header(
+        "E7: future_either latency vs racer spread",
+        &["backend     ", "racers (ms)     ", "either    ", "worst-case"],
+    );
+
+    let configs: Vec<(&str, Vec<u64>)> = vec![
+        ("5/50/100", vec![5, 50, 100]),
+        ("20/20/20", vec![20, 20, 20]),
+        ("1/200", vec![1, 200]),
+    ];
+
+    for spec in [PlanSpec::multicore(3), PlanSpec::multiprocess(3)] {
+        for (label, delays) in &configs {
+            let exprs = |ds: &[u64]| {
+                ds.iter()
+                    .map(|ms| {
+                        Expr::seq(vec![Expr::Sleep { millis: *ms }, Expr::lit(*ms as i64)])
+                    })
+                    .collect::<Vec<_>>()
+            };
+            let stats = with_plan(spec.clone(), || {
+                measure(1, 10, || {
+                    let v = future_either(exprs(delays), &Env::new()).unwrap();
+                    std::hint::black_box(v);
+                })
+            });
+            let worst = *delays.iter().max().unwrap();
+            row(&[
+                format!("{:<12}", spec.name()),
+                format!("{label:<16}"),
+                format!("{:>10}", fmt_dur(stats.p50)),
+                format!("{:>9}ms", worst),
+            ]);
+        }
+    }
+    println!("\nshape check: either latency tracks the fastest racer, not the slowest");
+}

@@ -1,0 +1,75 @@
+//! E6 — nested parallelism: protection (N, not N²) and configured
+//! topologies (A×B workers).
+//!
+//! Paper: "if PkgA and PkgB parallelize using the future framework, the
+//! nested parallelism will run with a total of N cores, not N²", and
+//! `plan(list(tweak(multisession, 2), tweak(multisession, 3)))` runs "at
+//! most 2 × 3 = 6 tasks in parallel".
+
+mod common;
+
+use common::{fmt_dur, header, row, time_once};
+use rustures::api::plan::{at_depth, backend_for_current_depth, with_plan_topology, PlanSpec};
+use rustures::prelude::*;
+
+fn main() {
+    // (a) effective worker counts by depth under various topologies.
+    header(
+        "E6a: backend selected per nesting depth",
+        &["topology                    ", "depth", "backend     ", "workers"],
+    );
+    let topologies: Vec<(&str, Vec<PlanSpec>)> = vec![
+        ("multicore(4)", vec![PlanSpec::multicore(4)]),
+        (
+            "multicore(2), multicore(3)",
+            vec![PlanSpec::multicore(2), PlanSpec::multicore(3)],
+        ),
+        (
+            "batch(2), multicore(2)",
+            vec![PlanSpec::batch(2), PlanSpec::multicore(2)],
+        ),
+    ];
+    for (label, topo) in &topologies {
+        with_plan_topology(topo.clone(), || {
+            for depth in 0..3u32 {
+                at_depth(depth, || {
+                    let (b, _) = backend_for_current_depth().unwrap();
+                    row(&[
+                        format!("{label:<28}"),
+                        format!("{depth:>5}"),
+                        format!("{:<12}", b.name()),
+                        format!("{:>7}", b.workers()),
+                    ]);
+                });
+            }
+        });
+    }
+    println!("protection: depths beyond the topology run sequential (workers=1) — N, not N²");
+
+    // (b) wall time of an outer map under flat vs nested topology: the
+    // protected nested level must not oversubscribe (latency-bound load).
+    header(
+        "E6b: outer map of 4 × Sleep(40ms), nested level protected",
+        &["topology                    ", "wall      "],
+    );
+    for (label, topo) in [
+        ("multicore(4)", vec![PlanSpec::multicore(4)]),
+        ("multicore(4), sequential", vec![PlanSpec::multicore(4), PlanSpec::Sequential]),
+    ] {
+        let wall = with_plan_topology(topo, || {
+            let xs: Vec<Value> = (0..4i64).map(Value::I64).collect();
+            time_once(|| {
+                let _ = future_lapply(
+                    &xs,
+                    "x",
+                    &Expr::Sleep { millis: 40 },
+                    &Env::new(),
+                    &LapplyOpts::new().no_capture(),
+                )
+                .unwrap();
+            })
+        });
+        row(&[format!("{label:<28}"), format!("{:>10}", fmt_dur(wall))]);
+    }
+    println!("\nshape check: explicit and implicit sequential inner layers perform identically");
+}

@@ -1,0 +1,65 @@
+//! E1 — per-future overhead by backend and payload size.
+//!
+//! Paper: "overhead differs between parallel backends.  Certain parallel
+//! backends, such as forked processing ('multicore'), are better suited for
+//! low-latency requirements, whereas others, such as distributed processing
+//! ('cluster' and 'batchtools'), are better suited for large-throughput
+//! requirements."  The expected *shape*: sequential < multicore <
+//! multisession ≈ cluster < batchtools, growing with payload size on the
+//! serializing backends.
+
+mod common;
+
+use common::{fmt_dur, header, measure, row};
+use rustures::api::plan::{with_plan, PlanSpec};
+use rustures::prelude::*;
+
+fn payload_env(bytes: usize) -> (Env, Expr) {
+    let mut env = Env::new();
+    if bytes == 0 {
+        (env, Expr::lit(1i64))
+    } else {
+        let n = bytes / 4;
+        env.insert("t", Tensor::new(vec![n], vec![1.0f32; n]).unwrap());
+        // Touch the payload so transfer is not dead code.
+        (env, Expr::prim(PrimOp::Sum, vec![Expr::var("t")]))
+    }
+}
+
+fn main() {
+    let backends = vec![
+        (PlanSpec::sequential(), 200usize),
+        (PlanSpec::multicore(2), 200),
+        (PlanSpec::multiprocess(2), 100),
+        (PlanSpec::cluster(&["n1.local", "n2.local"]), 100),
+        (PlanSpec::batch(2), 20),
+    ];
+    let payloads = [0usize, 1 << 10, 64 << 10, 1 << 20];
+
+    header(
+        "E1: per-future round-trip overhead (create → value)",
+        &["backend     ", "payload ", "mean      ", "p50       ", "p95       "],
+    );
+
+    for (spec, iters) in backends {
+        for bytes in payloads {
+            let (env, expr) = payload_env(bytes);
+            let name = spec.name();
+            let stats = with_plan(spec.clone(), || {
+                measure(3, iters, || {
+                    let f = future_with(expr.clone(), &env, FutureOpts::new().no_capture())
+                        .unwrap();
+                    let _ = f.value().unwrap();
+                })
+            });
+            row(&[
+                format!("{name:<12}"),
+                format!("{:>7}B", bytes),
+                format!("{:>10}", fmt_dur(stats.mean)),
+                format!("{:>10}", fmt_dur(stats.p50)),
+                format!("{:>10}", fmt_dur(stats.p95)),
+            ]);
+        }
+    }
+    println!("\nshape check: multicore ≪ multisession/cluster ≪ batchtools; cost grows with payload on serializing backends");
+}

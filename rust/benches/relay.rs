@@ -1,0 +1,67 @@
+//! E4 — output/condition capture & relay overhead.
+//!
+//! Paper: "there is a small overhead ... from capturing and relaying
+//! standard output and conditions.  Except for the error-handling overhead,
+//! these can all be avoided via certain future() arguments."  This bench
+//! measures futures that emit output/conditions with capture on vs off.
+
+mod common;
+
+use common::{fmt_dur, header, measure, row};
+use rustures::api::conditions::set_sink;
+use rustures::api::plan::{with_plan, PlanSpec};
+use rustures::prelude::*;
+
+struct NullSink;
+impl rustures::api::conditions::ConditionSink for NullSink {
+    fn stdout(&mut self, _: &str) {}
+    fn condition(&mut self, _: &rustures::api::conditions::Condition) {}
+}
+
+fn chatty_expr(lines: usize) -> Expr {
+    let mut items = Vec::new();
+    for i in 0..lines {
+        items.push(Expr::cat(Expr::lit(format!("line {i}\n").as_str())));
+        items.push(Expr::message(Expr::lit("msg")));
+        items.push(Expr::warning(Expr::lit("warn")));
+    }
+    items.push(Expr::lit(0i64));
+    Expr::seq(items)
+}
+
+fn main() {
+    set_sink(Some(Box::new(NullSink))); // don't spam the terminal
+
+    header(
+        "E4: stdout/condition capture + relay overhead",
+        &["backend     ", "emits", "capture", "mean      ", "p50       "],
+    );
+
+    for (spec, iters) in
+        [(PlanSpec::multicore(2), 150usize), (PlanSpec::multiprocess(2), 80)]
+    {
+        for lines in [0usize, 10, 100] {
+            for capture in [true, false] {
+                let expr = chatty_expr(lines);
+                let stats = with_plan(spec.clone(), || {
+                    measure(3, iters, || {
+                        let mut opts = FutureOpts::new();
+                        opts.stdout = capture;
+                        opts.conditions = capture;
+                        let f = future_with(expr.clone(), &Env::new(), opts).unwrap();
+                        let _ = f.value().unwrap();
+                    })
+                });
+                row(&[
+                    format!("{:<12}", spec.name()),
+                    format!("{lines:>5}"),
+                    format!("{:>7}", capture),
+                    format!("{:>10}", fmt_dur(stats.mean)),
+                    format!("{:>10}", fmt_dur(stats.p50)),
+                ]);
+            }
+        }
+    }
+    set_sink(None);
+    println!("\nshape check: capture=false flattens the cost of emit-heavy futures");
+}

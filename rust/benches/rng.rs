@@ -1,0 +1,82 @@
+//! E5 — parallel RNG: the cost of `seed = TRUE` and stream machinery.
+//!
+//! Paper: "because seed = TRUE can introduce significant overhead, the
+//! default is seed = FALSE."  Measures: (a) per-future cost with/without a
+//! seed, (b) the raw 2^127 stream-jump cost vs stream index, (c) draw
+//! throughput, and asserts reproducibility across two runs as a guard.
+
+mod common;
+
+use common::{fmt_dur, header, measure, row, time_once};
+use rustures::api::future::reset_session_counter;
+use rustures::api::plan::{with_plan, PlanSpec};
+use rustures::prelude::*;
+
+fn main() {
+    // (a) per-future overhead with and without parallel RNG streams.
+    header(
+        "E5a: future overhead, seed = TRUE vs FALSE (rnorm(100) payload)",
+        &["backend     ", "seed ", "mean      ", "p50       "],
+    );
+    for (spec, iters) in
+        [(PlanSpec::multicore(2), 200usize), (PlanSpec::multiprocess(2), 80)]
+    {
+        for seed in [false, true] {
+            let stats = with_plan(spec.clone(), || {
+                measure(3, iters, || {
+                    let mut opts = FutureOpts::new().no_capture();
+                    if seed {
+                        opts = opts.seed(42);
+                    }
+                    let f = future_with(Expr::rnorm(100), &Env::new(), opts).unwrap();
+                    let _ = f.value().unwrap();
+                })
+            });
+            row(&[
+                format!("{:<12}", spec.name()),
+                format!("{seed:<5}"),
+                format!("{:>10}", fmt_dur(stats.mean)),
+                format!("{:>10}", fmt_dur(stats.p50)),
+            ]);
+        }
+    }
+
+    // (b) stream-jump cost: nth_stream(seed, k) is O(log k) matrix work.
+    header("E5b: RNG stream-jump cost (nth_stream)", &["stream index", "time      "]);
+    for k in [0u64, 1, 100, 10_000, 1_000_000, u64::MAX / 2] {
+        let stats = measure(2, 50, || {
+            let _ = RngStream::nth_stream(12345, k);
+        });
+        row(&[format!("{k:>12}"), format!("{:>10}", fmt_dur(stats.mean))]);
+    }
+
+    // (c) draw throughput.
+    header("E5c: draw throughput", &["dist", "draws/s       "]);
+    for (label, norm) in [("unif", false), ("norm", true)] {
+        let n = 2_000_000usize;
+        let mut stream = RngStream::from_seed(9);
+        let wall = time_once(|| {
+            let mut acc = 0.0;
+            for _ in 0..n {
+                acc += if norm { stream.next_norm() } else { stream.next_unif() };
+            }
+            std::hint::black_box(acc);
+        });
+        row(&[
+            format!("{label:<4}"),
+            format!("{:>14.1}M", n as f64 / wall.as_secs_f64() / 1e6),
+        ]);
+    }
+
+    // (d) reproducibility guard across a full parallel map.
+    let run = || {
+        with_plan(PlanSpec::multicore(2), || {
+            reset_session_counter();
+            let xs: Vec<Value> = (0..8i64).map(Value::I64).collect();
+            future_lapply(&xs, "x", &Expr::rnorm(4), &Env::new(), &LapplyOpts::new().seed(7))
+                .unwrap()
+        })
+    };
+    assert_eq!(run(), run());
+    println!("\nreproducibility guard: two seeded parallel maps identical ✓");
+}

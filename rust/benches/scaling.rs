@@ -1,0 +1,80 @@
+//! E8 — wall-clock scaling of a parallel map with worker count.
+//!
+//! The framework's raison d'être: `future_lapply` over latency-bound
+//! payloads (Sleep models I/O / remote-service waits, the honest choice on
+//! this 1-core container — see DESIGN.md §3 caveat) should scale ~linearly
+//! with workers; CPU-bound payloads (Spin) cannot on one core, and the
+//! bench shows both so the distinction is explicit.
+
+mod common;
+
+use common::{fmt_dur, header, row, time_once};
+use rustures::api::plan::{with_plan, PlanSpec};
+use rustures::prelude::*;
+
+const ELEMENTS: usize = 16;
+const MS: u64 = 30;
+
+fn run_map(payload: &Expr, spec: PlanSpec) -> std::time::Duration {
+    with_plan(spec, || {
+        let env = Env::new();
+        let xs: Vec<Value> = (0..ELEMENTS as i64).map(Value::I64).collect();
+        // Warm the backend (worker spawn is one-time setup, not per-map).
+        let _ = future(Expr::lit(0i64), &env).unwrap().value();
+        time_once(|| {
+            let _ = future_lapply(&xs, "x", payload, &env, &LapplyOpts::new().no_capture())
+                .unwrap();
+        })
+    })
+}
+
+/// Calibrate Expr::Work iterations to ≈ MS milliseconds of CPU on this box.
+fn calibrated_work() -> Expr {
+    let probe = 2_000_000u64;
+    let t0 = std::time::Instant::now();
+    let mut acc = 0u64;
+    for i in 0..probe {
+        acc = acc.wrapping_add(rustures::util::uuid::splitmix64(i ^ acc));
+    }
+    std::hint::black_box(acc);
+    let per_iter = t0.elapsed().as_secs_f64() / probe as f64;
+    let iters = ((MS as f64 / 1e3) / per_iter) as u64;
+    Expr::Work { iters }
+}
+
+fn main() {
+    let sleep = Expr::Sleep { millis: MS };
+    let work = calibrated_work();
+
+    header(
+        &format!("E8: future_lapply scaling ({ELEMENTS} × {MS}ms payload)"),
+        &["payload", "backend     ", "workers", "wall      ", "speedup"],
+    );
+
+    for (label, payload) in [("sleep", &sleep), ("cpu", &work)] {
+        let base = run_map(payload, PlanSpec::sequential());
+        row(&[
+            format!("{label:<7}"),
+            format!("{:<12}", "sequential"),
+            format!("{:>7}", 1),
+            format!("{:>10}", fmt_dur(base)),
+            format!("{:>7.2}x", 1.0),
+        ]);
+        for workers in [1usize, 2, 4, 8] {
+            for spec in
+                [PlanSpec::multicore(workers), PlanSpec::multiprocess(workers)]
+            {
+                let name = spec.name();
+                let wall = run_map(payload, spec);
+                row(&[
+                    format!("{label:<7}"),
+                    format!("{name:<12}"),
+                    format!("{workers:>7}"),
+                    format!("{:>10}", fmt_dur(wall)),
+                    format!("{:>7.2}x", base.as_secs_f64() / wall.as_secs_f64()),
+                ]);
+            }
+        }
+    }
+    println!("\nshape check: sleep payloads scale ≈ linearly in workers; cpu payloads cannot exceed the core count (1 here)");
+}

@@ -1,0 +1,263 @@
+//! Capture and relay of standard output and conditions.
+//!
+//! Futures capture stdout and all conditions (messages, warnings) on the
+//! worker and relay them in the main process when `value()` is called,
+//! preserving the paper's ordering contract:
+//!
+//! 1. all captured **stdout** is relayed first, then
+//! 2. conditions are relayed **in the order they were signaled**;
+//! 3. `immediateCondition`s (progress updates) are exempt — they may be
+//!    relayed as soon as the backend can transport them, out of order with
+//!    everything else.
+
+use std::fmt;
+use std::sync::Mutex;
+
+/// Kinds of captured conditions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConditionKind {
+    /// `message()` — diagnostic message (R sends to stderr; the condition
+    /// object is captured, not the stream).
+    Message,
+    /// `warning()`.
+    Warning,
+    /// An `immediateCondition` — relayed ASAP when the backend supports it.
+    Immediate,
+}
+
+/// A captured condition, tagged with its signal order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Condition {
+    pub kind: ConditionKind,
+    pub message: String,
+    /// Monotone per-future sequence number assigned at capture.
+    pub seq: u64,
+}
+
+impl fmt::Display for Condition {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.kind {
+            ConditionKind::Message => write!(f, "{}", self.message),
+            ConditionKind::Warning => write!(f, "Warning message:\n{}", self.message),
+            ConditionKind::Immediate => write!(f, "[progress] {}", self.message),
+        }
+    }
+}
+
+/// Worker-side capture buffer: accumulates stdout and conditions during
+/// evaluation of one future.
+#[derive(Debug, Default)]
+pub struct CaptureBuffer {
+    stdout: String,
+    conditions: Vec<Condition>,
+    seq: u64,
+    /// Immediate conditions ready to be drained out-of-band by backends
+    /// that support live relay.
+    immediate_pending: Vec<Condition>,
+    /// Whether the expression drew from the RNG (for the misuse warning).
+    pub rng_used: bool,
+}
+
+impl CaptureBuffer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn capture_stdout(&mut self, text: &str) {
+        self.stdout.push_str(text);
+    }
+
+    pub fn signal(&mut self, kind: ConditionKind, message: impl Into<String>) {
+        let c = Condition { kind, message: message.into(), seq: self.seq };
+        self.seq += 1;
+        if kind == ConditionKind::Immediate {
+            self.immediate_pending.push(c.clone());
+        }
+        self.conditions.push(c);
+    }
+
+    /// Drain immediates signaled since the last drain (for live relay).
+    pub fn drain_immediate(&mut self) -> Vec<Condition> {
+        std::mem::take(&mut self.immediate_pending)
+    }
+
+    /// Finish capture, producing the relay payload.
+    pub fn finish(self) -> Captured {
+        Captured { stdout: self.stdout, conditions: self.conditions, rng_used: self.rng_used }
+    }
+}
+
+/// Everything captured while resolving one future.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Captured {
+    pub stdout: String,
+    pub conditions: Vec<Condition>,
+    pub rng_used: bool,
+}
+
+impl Captured {
+    /// Relay order per the paper: stdout first, then conditions by `seq`.
+    /// Immediates already relayed live are excluded when
+    /// `skip_immediate` is set (supporting backends).
+    pub fn relay_order(&self, skip_immediate: bool) -> Vec<&Condition> {
+        let mut out: Vec<&Condition> = self
+            .conditions
+            .iter()
+            .filter(|c| !(skip_immediate && c.kind == ConditionKind::Immediate))
+            .collect();
+        out.sort_by_key(|c| c.seq);
+        out
+    }
+}
+
+/// Where relayed output/conditions go in the main process.  The default
+/// sink prints like R does; tests install a recording sink.
+pub trait ConditionSink: Send {
+    fn stdout(&mut self, text: &str);
+    fn condition(&mut self, c: &Condition);
+}
+
+/// Prints stdout to stdout and conditions to stderr (R-like).
+pub struct StdSink;
+
+impl ConditionSink for StdSink {
+    fn stdout(&mut self, text: &str) {
+        print!("{text}");
+    }
+
+    fn condition(&mut self, c: &Condition) {
+        eprintln!("{c}");
+    }
+}
+
+/// Records everything (used by tests and by `capture.output()`-style APIs).
+/// Clone it before installing to keep a handle on the shared buffers.
+#[derive(Default, Clone)]
+pub struct RecordingSink {
+    inner: std::sync::Arc<Mutex<RecordingInner>>,
+}
+
+#[derive(Default)]
+struct RecordingInner {
+    stdout: String,
+    conditions: Vec<Condition>,
+}
+
+impl RecordingSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn stdout_text(&self) -> String {
+        self.inner.lock().unwrap().stdout.clone()
+    }
+
+    pub fn conditions(&self) -> Vec<Condition> {
+        self.inner.lock().unwrap().conditions.clone()
+    }
+}
+
+impl ConditionSink for RecordingSink {
+    fn stdout(&mut self, text: &str) {
+        self.inner.lock().unwrap().stdout.push_str(text);
+    }
+
+    fn condition(&mut self, c: &Condition) {
+        self.inner.lock().unwrap().conditions.push(c.clone());
+    }
+}
+
+/// Process-global relay sink (what `value()` writes to).
+static SINK: Mutex<Option<Box<dyn ConditionSink>>> = Mutex::new(None);
+
+/// Install a custom sink; returns the previous one.  Passing `None`
+/// restores the default [`StdSink`].
+pub fn set_sink(sink: Option<Box<dyn ConditionSink>>) -> Option<Box<dyn ConditionSink>> {
+    let mut guard = SINK.lock().unwrap();
+    std::mem::replace(&mut *guard, sink)
+}
+
+/// Relay one captured payload through the installed sink (or StdSink),
+/// honoring the ordering contract.
+pub fn relay(captured: &Captured, skip_immediate: bool) {
+    let mut guard = SINK.lock().unwrap();
+    match guard.as_mut() {
+        Some(sink) => do_relay(sink.as_mut(), captured, skip_immediate),
+        None => do_relay(&mut StdSink, captured, skip_immediate),
+    }
+}
+
+/// Relay a single immediate condition (live path).
+pub fn relay_immediate(c: &Condition) {
+    let mut guard = SINK.lock().unwrap();
+    match guard.as_mut() {
+        Some(sink) => sink.condition(c),
+        None => StdSink.condition(c),
+    }
+}
+
+fn do_relay(sink: &mut dyn ConditionSink, captured: &Captured, skip_immediate: bool) {
+    if !captured.stdout.is_empty() {
+        sink.stdout(&captured.stdout);
+    }
+    for c in captured.relay_order(skip_immediate) {
+        sink.condition(c);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capture_preserves_signal_order() {
+        let mut buf = CaptureBuffer::new();
+        buf.capture_stdout("Hello world\n");
+        buf.signal(ConditionKind::Message, "The sum of 'x' is 55");
+        buf.signal(ConditionKind::Warning, "Missing values were omitted");
+        buf.capture_stdout("Bye bye\n");
+        let captured = buf.finish();
+
+        // stdout is concatenated regardless of interleaving...
+        assert_eq!(captured.stdout, "Hello world\nBye bye\n");
+        // ...and conditions keep signal order.
+        let order = captured.relay_order(false);
+        assert_eq!(order.len(), 2);
+        assert_eq!(order[0].kind, ConditionKind::Message);
+        assert_eq!(order[1].kind, ConditionKind::Warning);
+    }
+
+    #[test]
+    fn immediates_drain_out_of_band() {
+        let mut buf = CaptureBuffer::new();
+        buf.signal(ConditionKind::Immediate, "10%");
+        buf.signal(ConditionKind::Message, "working");
+        buf.signal(ConditionKind::Immediate, "20%");
+        let drained = buf.drain_immediate();
+        assert_eq!(drained.len(), 2);
+        assert_eq!(drained[0].message, "10%");
+        // Draining again yields nothing new.
+        assert!(buf.drain_immediate().is_empty());
+        // With skip_immediate, the final relay excludes them.
+        let captured = buf.finish();
+        assert_eq!(captured.relay_order(true).len(), 1);
+        // Non-supporting backends relay them at the end, in order.
+        assert_eq!(captured.relay_order(false).len(), 3);
+    }
+
+    #[test]
+    fn relay_goes_through_installed_sink() {
+        let mut buf = CaptureBuffer::new();
+        buf.capture_stdout("out");
+        buf.signal(ConditionKind::Warning, "w1");
+        let captured = buf.finish();
+
+        let rec = RecordingSink::new();
+        set_sink(Some(Box::new(rec.clone())));
+        relay(&captured, false);
+        set_sink(None);
+        assert_eq!(rec.stdout_text(), "out");
+        assert_eq!(rec.conditions().len(), 1);
+        assert_eq!(rec.conditions()[0].message, "w1");
+    }
+}

@@ -1,0 +1,97 @@
+//! `future_either(...)` — Hewitt & Baker's `(EITHER ...)` construct.
+//!
+//! "Evaluates the expressions in parallel and returns the value of the first
+//! one that finishes", ignoring (and best-effort cancelling) the others.
+//! The paper sketches `future_either(sort shell, sort quick, sort radix)`;
+//! here any set of expressions races on the current plan.
+
+use std::time::Duration;
+
+use crate::api::env::Env;
+use crate::api::error::FutureError;
+use crate::api::expr::Expr;
+use crate::api::future::{future_with, Future, FutureOpts};
+use crate::api::value::Value;
+
+/// Race `exprs`; return the value of the first to resolve.
+///
+/// Losers are cancelled best-effort (the paper's "suspend" future-work item;
+/// supported natively by the process backends, a no-op on thread backends).
+pub fn future_either(exprs: Vec<Expr>, env: &Env) -> Result<Value, FutureError> {
+    future_either_with(exprs, env, FutureOpts::new())
+}
+
+/// [`future_either`] with shared options (e.g. a seed).
+pub fn future_either_with(
+    exprs: Vec<Expr>,
+    env: &Env,
+    opts: FutureOpts,
+) -> Result<Value, FutureError> {
+    if exprs.is_empty() {
+        return Err(FutureError::Launch("future_either: no expressions".into()));
+    }
+    let futures: Vec<Future> = exprs
+        .into_iter()
+        .map(|e| future_with(e, env, opts.clone()))
+        .collect::<Result<_, _>>()?;
+
+    // Poll for the first resolution (sequential plans resolve eagerly, so
+    // index 0 wins immediately there — same as R).
+    loop {
+        for (i, f) in futures.iter().enumerate() {
+            if f.resolved() {
+                // Cancel the rest before collecting.
+                for (j, g) in futures.iter().enumerate() {
+                    if j != i {
+                        g.cancel();
+                    }
+                }
+                return f.value();
+            }
+        }
+        std::thread::sleep(Duration::from_micros(200));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::plan::{with_plan, PlanSpec};
+
+    #[test]
+    fn returns_a_winner_sequential() {
+        with_plan(PlanSpec::sequential(), || {
+            let env = Env::new();
+            let v = future_either(
+                vec![Expr::lit(1i64), Expr::lit(2i64)],
+                &env,
+            )
+            .unwrap();
+            assert_eq!(v, Value::I64(1)); // sequential: first expression wins
+        });
+    }
+
+    #[test]
+    fn fast_racer_beats_slow_on_threads() {
+        with_plan(PlanSpec::multicore(2), || {
+            let env = Env::new();
+            let v = future_either(
+                vec![
+                    Expr::seq(vec![Expr::Spin { millis: 300 }, Expr::lit("slow")]),
+                    Expr::lit("fast"),
+                ],
+                &env,
+            )
+            .unwrap();
+            assert_eq!(v, Value::Str("fast".into()));
+        });
+    }
+
+    #[test]
+    fn empty_race_is_an_error() {
+        with_plan(PlanSpec::sequential(), || {
+            let env = Env::new();
+            assert!(future_either(vec![], &env).is_err());
+        });
+    }
+}

@@ -1,0 +1,137 @@
+//! [`Env`] — the caller's workspace, from which globals are captured.
+//!
+//! A future records its required globals *at creation time* (the paper's
+//! `x <- 1; f <- future(slow_fcn(x)); x <- 2` example: the future sees 1).
+//! `Env` models the R workspace: a mutable name→[`Value`] map the user
+//! assigns into, from which [`crate::api::globals::identify_globals`] snapshots
+//! exactly the bindings a future expression needs.
+
+use std::collections::BTreeMap;
+
+use crate::api::value::Value;
+
+/// A mutable variable workspace.  BTreeMap keeps iteration deterministic
+/// (serialization, digests, tests).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Env {
+    bindings: BTreeMap<String, Value>,
+}
+
+impl Env {
+    pub fn new() -> Self {
+        Env::default()
+    }
+
+    /// Assign a variable (R's `name <- value`).
+    pub fn insert(&mut self, name: &str, value: impl Into<Value>) {
+        self.bindings.insert(name.to_string(), value.into());
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Value> {
+        self.bindings.get(name)
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.bindings.contains_key(name)
+    }
+
+    pub fn remove(&mut self, name: &str) -> Option<Value> {
+        self.bindings.remove(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.bindings.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bindings.is_empty()
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.bindings.keys().map(String::as_str)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &Value)> {
+        self.bindings.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// Snapshot a subset of bindings (the captured globals of a future).
+    /// Names absent from the env are skipped — the globals analysis reports
+    /// them separately so the caller can decide (optimistic strategy).
+    pub fn subset(&self, names: &[String]) -> Env {
+        let mut out = Env::new();
+        for n in names {
+            if let Some(v) = self.bindings.get(n) {
+                out.bindings.insert(n.clone(), v.clone());
+            }
+        }
+        out
+    }
+
+    /// Merge `other` into `self`, `other` winning on conflicts.
+    pub fn extend(&mut self, other: &Env) {
+        for (k, v) in other.iter() {
+            self.bindings.insert(k.to_string(), v.clone());
+        }
+    }
+
+    /// Total payload size of all bindings (transfer accounting).
+    pub fn byte_size(&self) -> usize {
+        self.bindings.iter().map(|(k, v)| k.len() + v.byte_size()).sum()
+    }
+}
+
+impl FromIterator<(String, Value)> for Env {
+    fn from_iter<T: IntoIterator<Item = (String, Value)>>(iter: T) -> Self {
+        Env { bindings: iter.into_iter().collect() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_roundtrip() {
+        let mut env = Env::new();
+        env.insert("x", 1.5);
+        env.insert("s", "hello");
+        assert_eq!(env.get("x"), Some(&Value::F64(1.5)));
+        assert_eq!(env.get("s").and_then(Value::as_str), Some("hello"));
+        assert!(env.get("missing").is_none());
+        assert_eq!(env.len(), 2);
+    }
+
+    #[test]
+    fn subset_skips_missing_names() {
+        let mut env = Env::new();
+        env.insert("a", 1i64);
+        env.insert("b", 2i64);
+        let sub = env.subset(&["a".to_string(), "zzz".to_string()]);
+        assert_eq!(sub.len(), 1);
+        assert!(sub.contains("a"));
+    }
+
+    #[test]
+    fn snapshot_is_independent_of_later_mutation() {
+        // The core creation-time capture invariant from the paper.
+        let mut env = Env::new();
+        env.insert("x", 1i64);
+        let snap = env.subset(&["x".to_string()]);
+        env.insert("x", 2i64);
+        assert_eq!(snap.get("x"), Some(&Value::I64(1)));
+        assert_eq!(env.get("x"), Some(&Value::I64(2)));
+    }
+
+    #[test]
+    fn extend_overwrites() {
+        let mut a = Env::new();
+        a.insert("x", 1i64);
+        let mut b = Env::new();
+        b.insert("x", 9i64);
+        b.insert("y", 2i64);
+        a.extend(&b);
+        assert_eq!(a.get("x"), Some(&Value::I64(9)));
+        assert_eq!(a.len(), 2);
+    }
+}

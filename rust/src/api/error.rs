@@ -1,0 +1,139 @@
+//! The exception taxonomy.
+//!
+//! The paper distinguishes two kinds of failures:
+//!
+//! * **Evaluation errors** ([`EvalError`]) — produced by the future's own
+//!   expression (R's `stop()`, type errors...).  They are captured on the
+//!   worker and *relayed as-is* in the main process when `value()` is
+//!   called, so `tryCatch`-style handling works unchanged.
+//! * **[`FutureError`]s** — "errors due to extraordinary circumstances,
+//!   such as terminated R workers and failed communication", plus
+//!   creation-time failures (missing globals).  These are signaled as a
+//!   distinct class so callers can restart workers or relaunch futures.
+
+use thiserror::Error;
+
+/// An error produced while *evaluating* a future's expression — relayed
+/// verbatim to the caller of `value()`, mimicking non-future behaviour.
+#[derive(Debug, Clone, PartialEq, Error)]
+#[error("{message}")]
+pub struct EvalError {
+    /// The error message, exactly as signaled on the worker.
+    pub message: String,
+    /// Rendered call/expression context, when available.
+    pub call: Option<String>,
+}
+
+impl EvalError {
+    pub fn new(message: impl Into<String>) -> Self {
+        EvalError { message: message.into(), call: None }
+    }
+
+    pub fn with_call(message: impl Into<String>, call: impl Into<String>) -> Self {
+        EvalError { message: message.into(), call: Some(call.into()) }
+    }
+}
+
+/// Infrastructure-level failures of the future framework itself —
+/// the paper's *FutureError* class.
+#[derive(Debug, Error)]
+pub enum FutureError {
+    /// Static analysis (or explicit spec) referenced a variable absent from
+    /// the calling environment at creation time.
+    #[error("object '{name}' not found (missing global at future creation)")]
+    MissingGlobal { name: String },
+
+    /// The worker process/thread died before resolving the future.
+    #[error("FutureError: worker terminated unexpectedly{}", detail_fmt(.detail))]
+    WorkerDied { detail: String },
+
+    /// Communication with a worker failed (broken pipe/socket, bad frame).
+    #[error("FutureError: communication with worker failed: {0}")]
+    Channel(String),
+
+    /// Backend could not launch the future (pool shut down, scheduler
+    /// rejected the job, ...).
+    #[error("FutureError: could not launch future: {0}")]
+    Launch(String),
+
+    /// The requested plan/backend is invalid or unavailable.
+    #[error("FutureError: invalid plan: {0}")]
+    InvalidPlan(String),
+
+    /// PJRT runtime failure (artifact missing, compile error, bad shapes).
+    #[error("FutureError: runtime: {0}")]
+    Runtime(String),
+
+    /// The future was cancelled before it resolved (extension feature;
+    /// `suspend()`/cancellation is "Future work" in the paper).
+    #[error("FutureError: future was cancelled")]
+    Cancelled,
+
+    /// An evaluation error relayed through `value()`.  Kept in this enum so
+    /// `value()` has a single error type; pattern-match to distinguish —
+    /// everything else is an infrastructure failure.
+    #[error("{0}")]
+    Eval(#[from] EvalError),
+}
+
+fn detail_fmt(detail: &str) -> String {
+    if detail.is_empty() {
+        String::new()
+    } else {
+        format!(": {detail}")
+    }
+}
+
+impl FutureError {
+    /// True when this is a relayed *evaluation* error (the user's code
+    /// failed), false for framework/infrastructure failures.
+    pub fn is_eval(&self) -> bool {
+        matches!(self, FutureError::Eval(_))
+    }
+
+    /// True for failures where relaunching the future elsewhere could
+    /// succeed (the paper's motivation for the distinct FutureError class).
+    pub fn is_recoverable(&self) -> bool {
+        matches!(
+            self,
+            FutureError::WorkerDied { .. }
+                | FutureError::Channel(_)
+                | FutureError::Launch(_)
+                | FutureError::Cancelled
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_error_displays_message_as_is() {
+        let e = EvalError::new("non-numeric argument to mathematical function");
+        assert_eq!(e.to_string(), "non-numeric argument to mathematical function");
+    }
+
+    #[test]
+    fn taxonomy_separates_eval_from_infrastructure() {
+        let eval: FutureError = EvalError::new("boom").into();
+        assert!(eval.is_eval());
+        assert!(!eval.is_recoverable());
+
+        let died = FutureError::WorkerDied { detail: "signal 9".into() };
+        assert!(!died.is_eval());
+        assert!(died.is_recoverable());
+
+        let plan = FutureError::InvalidPlan("no such backend".into());
+        assert!(!plan.is_eval());
+        assert!(!plan.is_recoverable());
+    }
+
+    #[test]
+    fn worker_died_formats_detail() {
+        let e = FutureError::WorkerDied { detail: String::new() };
+        assert_eq!(e.to_string(), "FutureError: worker terminated unexpectedly");
+        let e = FutureError::WorkerDied { detail: "exit 137".into() };
+        assert!(e.to_string().ends_with(": exit 137"));
+    }
+}

@@ -1,0 +1,314 @@
+//! [`Expr`] — the serializable task-expression DSL.
+//!
+//! The R framework ships *quoted R expressions* to workers and walks their
+//! AST to identify globals.  Rust has no runtime-inspectable closures, so the
+//! same contract is reproduced with an explicit expression tree: futures
+//! evaluate `Expr`s, [`crate::api::globals`] walks them to auto-identify free
+//! variables, and [`crate::ipc::wire`] serializes them to any backend.
+//!
+//! The DSL is intentionally small but covers everything the paper's examples
+//! need: variables and literals, `let` bindings, sequencing, lists and
+//! indexing, arithmetic/comparison glue, branches, compiled-kernel calls
+//! (`slow_fcn(x)` et al. via PJRT), RNG draws, output/condition emission —
+//! and [`Expr::DynLookup`], the analog of R's `get("k")` that defeats static
+//! globals analysis (a behaviour the paper documents explicitly).
+
+use crate::api::value::Value;
+
+/// Scalar/element-wise primitive operations (the "glue" between kernels).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrimOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    /// Numeric negation (1 arg).
+    Neg,
+    /// `<`, `<=`, `==` on numbers; Eq also on strings.
+    Lt,
+    Le,
+    Eq,
+    /// Logical not (1 arg).
+    Not,
+    /// Length of a list, string, or tensor (1 arg).
+    Len,
+    /// Sum of a list of numbers or a tensor (1 arg).
+    Sum,
+    /// Mean of a list of numbers or a tensor (1 arg).
+    Mean,
+    /// Square root (1 arg).
+    Sqrt,
+    /// String concatenation of all args (rendered via Display).
+    Concat,
+}
+
+/// Condition-emission kinds usable inside a future expression.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EmitKind {
+    /// `cat(...)` — captured standard output.
+    Stdout,
+    /// `message(...)` — a message condition.
+    Message,
+    /// `warning(...)` — a warning condition.
+    Warning,
+    /// An `immediateCondition`: relayed as soon as the backend can
+    /// (progress updates in the paper).
+    Progress,
+}
+
+/// Distributions for [`Expr::Rng`] draws.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RngDist {
+    /// Uniform on [0, 1).
+    Unif,
+    /// Standard normal (inversion method).
+    Norm,
+}
+
+/// A future's task expression.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    /// A literal value.
+    Lit(Value),
+    /// A variable reference — a *global* unless locally bound by `Let`.
+    Var(String),
+    /// `let name = value in body` — introduces a local (non-global) binding.
+    Let { name: String, value: Box<Expr>, body: Box<Expr> },
+    /// Evaluate in order; the value is the last expression's
+    /// (R's `{ ...; ... }` braces).
+    Seq(Vec<Expr>),
+    /// Construct a list from element expressions.
+    List(Vec<Expr>),
+    /// Zero-based list/tensor-row indexing: `xs[[i]]`.
+    Index { list: Box<Expr>, index: Box<Expr> },
+    /// Call an AOT-compiled kernel (PJRT executable) by manifest name.
+    Call { kernel: String, args: Vec<Expr> },
+    /// Primitive glue op.
+    Prim { op: PrimOp, args: Vec<Expr> },
+    /// Conditional.
+    If { cond: Box<Expr>, then: Box<Expr>, otherwise: Box<Expr> },
+    /// Runtime environment lookup by *computed* name — R's `get("k")`.
+    /// Static analysis cannot see through this; the paper's documented fix
+    /// (mention the variable, or pass `globals=`) applies here identically.
+    DynLookup(Box<Expr>),
+    /// Emit output or a condition, then continue with `Value::Unit`.
+    Emit { kind: EmitKind, message: Box<Expr> },
+    /// Signal an evaluation error (R's `stop(...)`).
+    Stop(Box<Expr>),
+    /// Draw a tensor of the given shape from the future's RNG stream
+    /// (row-major fill).  Using this without `seed = TRUE` triggers the
+    /// paper's "unexpected RNG use" warning.
+    Rng { dist: RngDist, shape: Vec<usize> },
+    /// Run `body` under the per-element RNG substream `index` — the
+    /// map-reduce layer wraps chunk elements in this so results are
+    /// invariant to chunking (future.apply's per-element streams).
+    WithRngStream { index: u64, body: Box<Expr> },
+    /// Busy-wait for approximately this many milliseconds (deterministic
+    /// CPU-bound load generator for scheduling benches — not a real
+    /// workload).
+    Spin { millis: u64 },
+    /// Sleep for this many milliseconds (latency-bound load: models I/O or
+    /// remote-service waits, where parallelism helps even on one core).
+    Sleep { millis: u64 },
+    /// A fixed amount of CPU work (`iters` rounds of a mixing function).
+    /// Unlike `Spin` (wall-deadline), total CPU demand is constant, so
+    /// this is the honest CPU-bound payload for scaling studies.
+    Work { iters: u64 },
+}
+
+impl Expr {
+    // -- ergonomic constructors ------------------------------------------
+
+    pub fn lit(v: impl Into<Value>) -> Expr {
+        Expr::Lit(v.into())
+    }
+
+    pub fn var(name: &str) -> Expr {
+        Expr::Var(name.to_string())
+    }
+
+    pub fn let_in(name: &str, value: Expr, body: Expr) -> Expr {
+        Expr::Let { name: name.to_string(), value: Box::new(value), body: Box::new(body) }
+    }
+
+    pub fn seq(exprs: Vec<Expr>) -> Expr {
+        Expr::Seq(exprs)
+    }
+
+    pub fn list(items: Vec<Expr>) -> Expr {
+        Expr::List(items)
+    }
+
+    pub fn index(list: Expr, index: Expr) -> Expr {
+        Expr::Index { list: Box::new(list), index: Box::new(index) }
+    }
+
+    pub fn call(kernel: &str, args: Vec<Expr>) -> Expr {
+        Expr::Call { kernel: kernel.to_string(), args }
+    }
+
+    pub fn prim(op: PrimOp, args: Vec<Expr>) -> Expr {
+        Expr::Prim { op, args }
+    }
+
+    pub fn add(a: Expr, b: Expr) -> Expr {
+        Expr::prim(PrimOp::Add, vec![a, b])
+    }
+
+    pub fn sub(a: Expr, b: Expr) -> Expr {
+        Expr::prim(PrimOp::Sub, vec![a, b])
+    }
+
+    pub fn mul(a: Expr, b: Expr) -> Expr {
+        Expr::prim(PrimOp::Mul, vec![a, b])
+    }
+
+    pub fn div(a: Expr, b: Expr) -> Expr {
+        Expr::prim(PrimOp::Div, vec![a, b])
+    }
+
+    pub fn if_else(cond: Expr, then: Expr, otherwise: Expr) -> Expr {
+        Expr::If { cond: Box::new(cond), then: Box::new(then), otherwise: Box::new(otherwise) }
+    }
+
+    pub fn dyn_lookup(name: Expr) -> Expr {
+        Expr::DynLookup(Box::new(name))
+    }
+
+    pub fn cat(message: Expr) -> Expr {
+        Expr::Emit { kind: EmitKind::Stdout, message: Box::new(message) }
+    }
+
+    pub fn message(message: Expr) -> Expr {
+        Expr::Emit { kind: EmitKind::Message, message: Box::new(message) }
+    }
+
+    pub fn warning(message: Expr) -> Expr {
+        Expr::Emit { kind: EmitKind::Warning, message: Box::new(message) }
+    }
+
+    pub fn progress(message: Expr) -> Expr {
+        Expr::Emit { kind: EmitKind::Progress, message: Box::new(message) }
+    }
+
+    pub fn stop(message: Expr) -> Expr {
+        Expr::Stop(Box::new(message))
+    }
+
+    pub fn runif(n: usize) -> Expr {
+        Expr::Rng { dist: RngDist::Unif, shape: vec![n] }
+    }
+
+    pub fn rnorm(n: usize) -> Expr {
+        Expr::Rng { dist: RngDist::Norm, shape: vec![n] }
+    }
+
+    /// Uniform draws shaped as a matrix/tensor (kernel-input layouts).
+    pub fn runif_shaped(shape: Vec<usize>) -> Expr {
+        Expr::Rng { dist: RngDist::Unif, shape }
+    }
+
+    pub fn rnorm_shaped(shape: Vec<usize>) -> Expr {
+        Expr::Rng { dist: RngDist::Norm, shape }
+    }
+
+    pub fn with_rng_stream(index: u64, body: Expr) -> Expr {
+        Expr::WithRngStream { index, body: Box::new(body) }
+    }
+
+    /// Whether this expression (statically) may draw random numbers —
+    /// used for the `seed = FALSE` misuse warning.
+    pub fn uses_rng(&self) -> bool {
+        let mut found = false;
+        self.walk(&mut |e| {
+            if matches!(e, Expr::Rng { .. }) {
+                found = true;
+            }
+        });
+        found
+    }
+
+    /// Pre-order traversal over all sub-expressions (including `self`).
+    pub fn walk(&self, f: &mut dyn FnMut(&Expr)) {
+        f(self);
+        match self {
+            Expr::Lit(_)
+            | Expr::Var(_)
+            | Expr::Rng { .. }
+            | Expr::Spin { .. }
+            | Expr::Sleep { .. }
+            | Expr::Work { .. } => {}
+            Expr::Let { value, body, .. } => {
+                value.walk(f);
+                body.walk(f);
+            }
+            Expr::Seq(items) | Expr::List(items) => {
+                for e in items {
+                    e.walk(f);
+                }
+            }
+            Expr::Index { list, index } => {
+                list.walk(f);
+                index.walk(f);
+            }
+            Expr::Call { args, .. } | Expr::Prim { args, .. } => {
+                for e in args {
+                    e.walk(f);
+                }
+            }
+            Expr::If { cond, then, otherwise } => {
+                cond.walk(f);
+                then.walk(f);
+                otherwise.walk(f);
+            }
+            Expr::DynLookup(inner) | Expr::Stop(inner) => inner.walk(f),
+            Expr::Emit { message, .. } => message.walk(f),
+            Expr::WithRngStream { body, .. } => body.walk(f),
+        }
+    }
+
+    /// Number of nodes (diagnostics / metrics).
+    pub fn node_count(&self) -> usize {
+        let mut n = 0;
+        self.walk(&mut |_| n += 1);
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_build_expected_shapes() {
+        let e = Expr::add(Expr::var("x"), Expr::lit(1.0));
+        match &e {
+            Expr::Prim { op: PrimOp::Add, args } => {
+                assert_eq!(args.len(), 2);
+                assert_eq!(args[0], Expr::Var("x".into()));
+            }
+            _ => panic!("wrong shape"),
+        }
+    }
+
+    #[test]
+    fn walk_visits_every_node() {
+        let e = Expr::let_in(
+            "a",
+            Expr::add(Expr::var("x"), Expr::lit(1.0)),
+            Expr::seq(vec![Expr::cat(Expr::lit("hi")), Expr::var("a")]),
+        );
+        // Let, Prim, Var(x), Lit, Seq, Emit, Lit, Var(a) = 8 nodes
+        assert_eq!(e.node_count(), 8);
+    }
+
+    #[test]
+    fn uses_rng_detects_nested_draws() {
+        let plain = Expr::add(Expr::var("x"), Expr::lit(1.0));
+        assert!(!plain.uses_rng());
+        let rng = Expr::seq(vec![Expr::lit(0.0), Expr::rnorm(3)]);
+        assert!(rng.uses_rng());
+        let wrapped = Expr::with_rng_stream(7, Expr::runif(1));
+        assert!(wrapped.uses_rng());
+    }
+}

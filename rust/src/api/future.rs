@@ -1,0 +1,543 @@
+//! The three atomic constructs: `future()`, `value()`, `resolved()`.
+//!
+//! ```text
+//! f <- future(expr)   →  let f = future(expr, &env)?;
+//! v <- value(f)       →  let v = f.value()?;
+//! r <- resolved(f)    →  let r = f.resolved();
+//! ```
+//!
+//! `future()` captures globals at creation (static analysis over the
+//! expression), assigns an RNG stream index by creation order, picks the
+//! backend from the current `plan()` at the current nesting depth, and
+//! launches — blocking only if every worker is busy.  `value()` blocks until
+//! resolution, relays captured stdout + conditions in order, and re-raises
+//! evaluation errors as-is.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::api::conditions::{relay, Condition, ConditionKind};
+use crate::api::env::Env;
+use crate::api::error::{EvalError, FutureError};
+use crate::api::expr::Expr;
+use crate::api::globals::{identify_globals, GlobalsSpec};
+use crate::api::plan::{backend_for_current_depth, current_depth};
+use crate::api::value::Value;
+use crate::backend::TaskHandle;
+use crate::ipc::{TaskOpts, TaskOutcome, TaskResult, TaskSpec};
+use crate::metrics::{record_event, FutureTrace};
+use crate::util::uuid_v4;
+
+/// Session-global future-creation counter: the deterministic RNG stream
+/// index assignment ("fully reproducible regardless of backend and number
+/// of workers").
+static CREATION_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Restart the creation counter (new "session"; benches/tests).
+pub fn reset_session_counter() {
+    CREATION_COUNTER.store(0, Ordering::SeqCst);
+}
+
+fn now_ns() -> u64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default().as_nanos() as u64
+}
+
+/// Options for [`future_with`] — the `future(...)` arguments.
+#[derive(Debug, Clone, Default)]
+pub struct FutureOpts {
+    /// `seed = TRUE` analog: base seed for this future's RNG stream.
+    pub seed: Option<u64>,
+    /// Override the automatically assigned stream index (map-reduce layers
+    /// use this for per-element streams).
+    pub stream_index: Option<u64>,
+    /// Globals determination (`globals=` argument).
+    pub globals: GlobalsSpec,
+    /// Capture stdout on the worker (default true).
+    pub stdout: bool,
+    /// Capture conditions on the worker (default true).
+    pub conditions: bool,
+    /// `lazy = TRUE`: defer launch until `resolved()`/`value()`.
+    pub lazy: bool,
+    /// Keep the task spec so the future can be [`Future::restart`]ed after
+    /// an infrastructure failure (paper's `restart(f)` future-work item).
+    /// Off by default: it clones the captured globals.
+    pub restartable: bool,
+    /// Human-readable label.
+    pub label: Option<String>,
+}
+
+impl FutureOpts {
+    pub fn new() -> Self {
+        FutureOpts { stdout: true, conditions: true, ..Default::default() }
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+
+    pub fn globals(mut self, spec: GlobalsSpec) -> Self {
+        self.globals = spec;
+        self
+    }
+
+    pub fn lazy(mut self) -> Self {
+        self.lazy = true;
+        self
+    }
+
+    pub fn restartable(mut self) -> Self {
+        self.restartable = true;
+        self
+    }
+
+    pub fn label(mut self, label: &str) -> Self {
+        self.label = Some(label.to_string());
+        self
+    }
+
+    pub fn no_capture(mut self) -> Self {
+        self.stdout = false;
+        self.conditions = false;
+        self
+    }
+}
+
+enum State {
+    /// `lazy = TRUE` and not yet launched.
+    Lazy(Box<TaskSpec>),
+    /// Launched on a backend.
+    Running { handle: Box<dyn TaskHandle>, supports_immediate: bool },
+    /// Result collected from the handle (value() may be called repeatedly).
+    Done(Box<TaskResult>),
+    /// Infrastructure failure captured for replay on later calls.
+    Failed(String),
+}
+
+/// A future: a placeholder for the value of `expr` evaluated with the
+/// globals captured at creation.
+pub struct Future {
+    id: String,
+    label: Option<String>,
+    state: Mutex<State>,
+    /// Whether the expression may draw RNG without `seed` (misuse warning).
+    warn_unseeded_rng: bool,
+    relayed: Mutex<bool>,
+    /// Retained spec for [`Future::restart`] (opt-in via
+    /// [`FutureOpts::restartable`]).
+    restart_spec: Mutex<Option<TaskSpec>>,
+    pub trace: Arc<FutureTrace>,
+}
+
+/// Create a future with default options (eager, auto globals, no seed).
+pub fn future(expr: Expr, env: &Env) -> Result<Future, FutureError> {
+    future_with(expr, env, FutureOpts::new())
+}
+
+/// Create a future with explicit options.
+pub fn future_with(expr: Expr, env: &Env, opts: FutureOpts) -> Result<Future, FutureError> {
+    let id = uuid_v4();
+    let created_ns = now_ns();
+
+    // 1. Identify and snapshot globals (creation-time capture).
+    let globals = identify_globals(&expr, env, &opts.globals)?;
+
+    // 2. Deterministic RNG stream index by creation order.
+    let ordinal = CREATION_COUNTER.fetch_add(1, Ordering::SeqCst);
+    let stream_index = opts.stream_index.unwrap_or(ordinal);
+
+    // 3. Backend + nested topology for the current nesting depth.
+    let depth = current_depth();
+    let (backend, nested_plan) = backend_for_current_depth()?;
+
+    let warn_unseeded_rng = opts.seed.is_none() && expr.uses_rng();
+
+    let task = TaskSpec {
+        id: id.clone(),
+        expr,
+        globals,
+        opts: TaskOpts {
+            seed: opts.seed,
+            stream_index,
+            capture_stdout: opts.stdout,
+            capture_conditions: opts.conditions,
+            label: opts.label.clone(),
+            depth,
+            nested_plan,
+        },
+    };
+
+    let trace = Arc::new(FutureTrace::new(&id, opts.label.as_deref(), backend.name(), created_ns));
+
+    let restart_spec = if opts.restartable { Some(task.clone()) } else { None };
+    let state = if opts.lazy {
+        State::Lazy(Box::new(task))
+    } else {
+        let supports_immediate = backend.supports_immediate();
+        record_event(&trace, "launch");
+        let handle = backend.launch(task)?;
+        State::Running { handle, supports_immediate }
+    };
+
+    Ok(Future {
+        id,
+        label: opts.label,
+        state: Mutex::new(state),
+        warn_unseeded_rng,
+        relayed: Mutex::new(false),
+        restart_spec: Mutex::new(restart_spec),
+        trace,
+    })
+}
+
+impl std::fmt::Debug for Future {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let state = match &*self.state.lock().unwrap() {
+            State::Lazy(_) => "lazy",
+            State::Running { .. } => "running",
+            State::Done(_) => "done",
+            State::Failed(_) => "failed",
+        };
+        f.debug_struct("Future")
+            .field("id", &self.id)
+            .field("label", &self.label)
+            .field("state", &state)
+            .finish()
+    }
+}
+
+impl Future {
+    pub fn id(&self) -> &str {
+        &self.id
+    }
+
+    pub fn label(&self) -> Option<&str> {
+        self.label.as_deref()
+    }
+
+    /// Launch a lazy future now (no-op otherwise).
+    pub fn launch(&self) -> Result<(), FutureError> {
+        let mut state = self.state.lock().unwrap();
+        if let State::Lazy(_) = &*state {
+            let task = match std::mem::replace(&mut *state, State::Failed("launching".into())) {
+                State::Lazy(t) => t,
+                _ => unreachable!(),
+            };
+            let (backend, _) = backend_for_current_depth()?;
+            let supports_immediate = backend.supports_immediate();
+            record_event(&self.trace, "launch");
+            match backend.launch(*task) {
+                Ok(handle) => *state = State::Running { handle, supports_immediate },
+                Err(e) => {
+                    let msg = e.to_string();
+                    *state = State::Failed(msg);
+                    return Err(e);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Non-blocking resolution probe.  A lazy future is launched by the
+    /// first `resolved()` call ("a lazy future defers evaluation until we
+    /// use resolved() ... or value()").
+    pub fn resolved(&self) -> bool {
+        {
+            let state = self.state.lock().unwrap();
+            match &*state {
+                State::Done(_) | State::Failed(_) => return true,
+                State::Lazy(_) => {}
+                State::Running { .. } => {}
+            }
+        }
+        // Lazy: launch first (outside the match to avoid double-lock).
+        if matches!(&*self.state.lock().unwrap(), State::Lazy(_)) {
+            let _ = self.launch();
+        }
+        let mut state = self.state.lock().unwrap();
+        match &mut *state {
+            State::Running { handle, .. } => {
+                if handle.is_resolved() {
+                    // Promote to Done so value() won't block.
+                    match handle.wait() {
+                        Ok(result) => {
+                            record_event(&self.trace, "resolved");
+                            *state = State::Done(Box::new(result));
+                        }
+                        Err(e) => *state = State::Failed(e.to_string()),
+                    }
+                    true
+                } else {
+                    false
+                }
+            }
+            State::Done(_) | State::Failed(_) => true,
+            State::Lazy(_) => false, // launch failed; failure stored
+        }
+    }
+
+    /// Block until resolved; relay captured output/conditions; return the
+    /// value or re-raise the evaluation error as-is.
+    pub fn value(&self) -> Result<Value, FutureError> {
+        let result = self.result()?;
+        self.relay_once(&result);
+        match result.outcome {
+            TaskOutcome::Ok(v) => Ok(v),
+            TaskOutcome::Err(e) => Err(FutureError::Eval(e)),
+        }
+    }
+
+    /// Like [`Self::value`] but returns the full result (value + captured
+    /// output + metrics) without relaying — programmatic access.
+    pub fn result(&self) -> Result<TaskResult, FutureError> {
+        // Lazy futures launch on first value()/result().
+        if matches!(&*self.state.lock().unwrap(), State::Lazy(_)) {
+            self.launch()?;
+        }
+        let mut state = self.state.lock().unwrap();
+        match &mut *state {
+            State::Done(r) => Ok((**r).clone()),
+            State::Failed(msg) => Err(FutureError::Launch(msg.clone())),
+            State::Running { handle, .. } => {
+                record_event(&self.trace, "collect-wait");
+                match handle.wait() {
+                    Ok(result) => {
+                        record_event(&self.trace, "resolved");
+                        *state = State::Done(Box::new(result.clone()));
+                        Ok(result)
+                    }
+                    Err(e) => {
+                        *state = State::Failed(e.to_string());
+                        Err(e)
+                    }
+                }
+            }
+            State::Lazy(_) => Err(FutureError::Launch("lazy future failed to launch".into())),
+        }
+    }
+
+    /// Relay captured output + conditions exactly once across repeated
+    /// `value()` calls.
+    fn relay_once(&self, result: &TaskResult) {
+        let mut relayed = self.relayed.lock().unwrap();
+        if *relayed {
+            return;
+        }
+        *relayed = true;
+
+        let skip_immediate = {
+            let state = self.state.lock().unwrap();
+            match &*state {
+                State::Running { supports_immediate, .. } => *supports_immediate,
+                // Done: the handle is gone; infer from captured data — the
+                // live-relaying backends already emitted immediates.
+                _ => self.backend_relayed_immediates(),
+            }
+        };
+
+        let mut captured = result.captured.clone();
+        // The paper's RNG-misuse warning: "the future framework will
+        // generate an informative warning" when RNG is used without seed.
+        if (self.warn_unseeded_rng || captured.rng_used) && result.captured.rng_used {
+            captured.conditions.push(Condition {
+                kind: ConditionKind::Warning,
+                message: format!(
+                    "UnexpectedRandomNumbers: future ('{}') drew random numbers without seed = TRUE; \
+                     results may be statistically unsound",
+                    self.label.as_deref().unwrap_or(&self.id)
+                ),
+                seq: u64::MAX, // after all captured conditions
+            });
+        }
+        relay(&captured, skip_immediate);
+    }
+
+    fn backend_relayed_immediates(&self) -> bool {
+        // Conservative: only in-process backends relay live, and they mark
+        // supports_immediate at launch; after Done we keep relaying
+        // immediates unless we know better. False = relay them here too.
+        false
+    }
+
+    /// `restart(f)` — the paper's future-work item: relaunch this future
+    /// (e.g. after a crashed worker / cancelled job), reusing the captured
+    /// globals and options.  Requires [`FutureOpts::restartable`].
+    ///
+    /// Any previous run is cancelled; relay state resets so output relays
+    /// again from the fresh run.
+    pub fn restart(&self) -> Result<(), FutureError> {
+        let spec = self
+            .restart_spec
+            .lock()
+            .unwrap()
+            .clone()
+            .ok_or_else(|| FutureError::Launch(
+                "future was not created with restartable()".into(),
+            ))?;
+        // Stop whatever is in flight.
+        {
+            let mut state = self.state.lock().unwrap();
+            if let State::Running { handle, .. } = &mut *state {
+                handle.cancel();
+            }
+        }
+        let (backend, _) = backend_for_current_depth()?;
+        let supports_immediate = backend.supports_immediate();
+        record_event(&self.trace, "restart");
+        let handle = backend.launch(spec)?;
+        *self.state.lock().unwrap() = State::Running { handle, supports_immediate };
+        *self.relayed.lock().unwrap() = false;
+        Ok(())
+    }
+
+    /// Best-effort cancellation (extension feature).
+    pub fn cancel(&self) -> bool {
+        let mut state = self.state.lock().unwrap();
+        match &mut *state {
+            State::Running { handle, .. } => handle.cancel(),
+            State::Lazy(_) => {
+                *state = State::Failed(FutureError::Cancelled.to_string());
+                true
+            }
+            _ => false,
+        }
+    }
+}
+
+/// `value()` for a collection: resolve all, in order (S3 `value()` on
+/// lists in the paper's future-work section).
+pub fn values(futures: &[Future]) -> Result<Vec<Value>, FutureError> {
+    futures.iter().map(|f| f.value()).collect()
+}
+
+/// `resolved()` across a collection.
+pub fn all_resolved(futures: &[Future]) -> bool {
+    futures.iter().all(|f| f.resolved())
+}
+
+/// Helper: evaluate `expr` via a transient future and return its value
+/// (used by tests and the conformance suite).
+pub fn value_of(expr: Expr, env: &Env) -> Result<Value, FutureError> {
+    future(expr, env)?.value()
+}
+
+/// Re-raise helper mirroring R's `tryCatch(value(f), error = ...)`:
+/// maps a relayed evaluation error through `handler`, passes
+/// infrastructure errors through.
+pub fn try_value(
+    f: &Future,
+    handler: impl FnOnce(&EvalError) -> Value,
+) -> Result<Value, FutureError> {
+    match f.value() {
+        Ok(v) => Ok(v),
+        Err(FutureError::Eval(e)) => Ok(handler(&e)),
+        Err(other) => Err(other),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::plan::{with_plan, PlanSpec};
+
+    #[test]
+    fn future_value_resolved_roundtrip() {
+        with_plan(PlanSpec::sequential(), || {
+            let mut env = Env::new();
+            env.insert("x", 1i64);
+            let f = future(Expr::add(Expr::var("x"), Expr::lit(1i64)), &env).unwrap();
+            assert!(f.resolved());
+            assert_eq!(f.value().unwrap(), Value::I64(2));
+            // value() is repeatable.
+            assert_eq!(f.value().unwrap(), Value::I64(2));
+        });
+    }
+
+    #[test]
+    fn creation_time_capture_paper_example() {
+        // x <- 1; f <- future(slow_fcn(x)); x <- 2; value(f) uses x == 1.
+        with_plan(PlanSpec::sequential(), || {
+            let mut env = Env::new();
+            env.insert("x", 1i64);
+            let f = future(Expr::mul(Expr::var("x"), Expr::lit(100i64)), &env).unwrap();
+            env.insert("x", 2i64);
+            assert_eq!(f.value().unwrap(), Value::I64(100));
+        });
+    }
+
+    #[test]
+    fn missing_global_fails_at_creation() {
+        with_plan(PlanSpec::sequential(), || {
+            let env = Env::new();
+            let err = future(Expr::var("nope"), &env).unwrap_err();
+            assert!(matches!(err, FutureError::MissingGlobal { .. }));
+        });
+    }
+
+    #[test]
+    fn eval_error_relayed_as_is() {
+        with_plan(PlanSpec::sequential(), || {
+            let env = Env::new();
+            let f = future(Expr::stop(Expr::lit("boom")), &env).unwrap();
+            match f.value() {
+                Err(FutureError::Eval(e)) => assert_eq!(e.message, "boom"),
+                other => panic!("expected eval error, got {other:?}"),
+            }
+        });
+    }
+
+    #[test]
+    fn try_value_maps_eval_errors_like_trycatch() {
+        with_plan(PlanSpec::sequential(), || {
+            let env = Env::new();
+            let f = future(Expr::stop(Expr::lit("x")), &env).unwrap();
+            let v = try_value(&f, |_| Value::F64(f64::NAN)).unwrap();
+            assert!(v.as_f64().unwrap().is_nan());
+        });
+    }
+
+    #[test]
+    fn lazy_future_defers_launch() {
+        with_plan(PlanSpec::sequential(), || {
+            let env = Env::new();
+            let f = future_with(Expr::lit(9i64), &env, FutureOpts::new().lazy()).unwrap();
+            // Not resolved until poked...
+            assert!(f.resolved()); // resolved() launches it (sequential: instant)
+            assert_eq!(f.value().unwrap(), Value::I64(9));
+        });
+    }
+
+    #[test]
+    fn values_collects_in_order() {
+        with_plan(PlanSpec::multicore(2), || {
+            let env = Env::new();
+            let fs: Vec<Future> = (0..5)
+                .map(|i| future(Expr::lit(i as i64), &env).unwrap())
+                .collect();
+            let vs = values(&fs).unwrap();
+            assert_eq!(vs, (0..5).map(Value::I64).collect::<Vec<_>>());
+        });
+    }
+
+    #[test]
+    fn stream_indices_assigned_by_creation_order() {
+        with_plan(PlanSpec::sequential(), || {
+            reset_session_counter();
+            let env = Env::new();
+            let f1 = future_with(Expr::rnorm(2), &env, FutureOpts::new().seed(42)).unwrap();
+            let f2 = future_with(Expr::rnorm(2), &env, FutureOpts::new().seed(42)).unwrap();
+            let v1 = f1.value().unwrap();
+            let v2 = f2.value().unwrap();
+            // Different streams → different draws.
+            assert_ne!(v1, v2);
+
+            // Re-run the "session": identical results.
+            reset_session_counter();
+            let g1 = future_with(Expr::rnorm(2), &env, FutureOpts::new().seed(42)).unwrap();
+            let g2 = future_with(Expr::rnorm(2), &env, FutureOpts::new().seed(42)).unwrap();
+            assert_eq!(v1, g1.value().unwrap());
+            assert_eq!(v2, g2.value().unwrap());
+        });
+    }
+}

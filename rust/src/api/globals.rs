@@ -1,0 +1,222 @@
+//! Automatic identification of globals — the paper's `globals`/`codetools`
+//! machinery.
+//!
+//! "By default, `future()` will attempt to identify, locate, and record
+//! these globals internally via static code inspection."  Here the static
+//! inspection is a free-variable analysis over the [`Expr`] AST: walk the
+//! tree in order, track `Let`-bound locals, and record every `Var` not bound
+//! at its use site.  The strategy is *optimistic* (false positives allowed —
+//! an unused captured variable costs only transfer bytes; false negatives
+//! produce runtime errors, exactly as in the paper's `get("k")` example).
+
+use std::collections::BTreeSet;
+
+use crate::api::env::Env;
+use crate::api::error::FutureError;
+use crate::api::expr::Expr;
+
+/// How globals are determined for a future (the `globals=` argument).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum GlobalsSpec {
+    /// Automatic static identification (the default).
+    #[default]
+    Auto,
+    /// Automatic + these extra names (the paper's fix for `get("k")`).
+    AutoPlus(Vec<String>),
+    /// Exactly these names; static analysis skipped
+    /// (the "manually specifying globals" overhead opt-out).
+    Explicit(Vec<String>),
+    /// Capture nothing (expression must be closed).
+    None,
+}
+
+/// Free variables of `expr`, in first-use order, deduplicated.
+pub fn free_variables(expr: &Expr) -> Vec<String> {
+    let mut bound: Vec<String> = Vec::new();
+    let mut seen: BTreeSet<String> = BTreeSet::new();
+    let mut out: Vec<String> = Vec::new();
+    collect(expr, &mut bound, &mut seen, &mut out);
+    out
+}
+
+fn collect(
+    expr: &Expr,
+    bound: &mut Vec<String>,
+    seen: &mut BTreeSet<String>,
+    out: &mut Vec<String>,
+) {
+    match expr {
+        Expr::Var(name) => {
+            if !bound.iter().any(|b| b == name) && seen.insert(name.clone()) {
+                out.push(name.clone());
+            }
+        }
+        Expr::Let { name, value, body } => {
+            // `value` is evaluated before the binding is in scope.
+            collect(value, bound, seen, out);
+            bound.push(name.clone());
+            collect(body, bound, seen, out);
+            bound.pop();
+        }
+        Expr::Seq(items) | Expr::List(items) => {
+            for e in items {
+                collect(e, bound, seen, out);
+            }
+        }
+        Expr::Index { list, index } => {
+            collect(list, bound, seen, out);
+            collect(index, bound, seen, out);
+        }
+        Expr::Call { args, .. } | Expr::Prim { args, .. } => {
+            for e in args {
+                collect(e, bound, seen, out);
+            }
+        }
+        Expr::If { cond, then, otherwise } => {
+            collect(cond, bound, seen, out);
+            collect(then, bound, seen, out);
+            collect(otherwise, bound, seen, out);
+        }
+        // The point of DynLookup: its *name expression* is analyzed (it may
+        // reference variables) but the looked-up name itself is invisible
+        // to static analysis — the paper's get("k") trap.
+        Expr::DynLookup(inner) => collect(inner, bound, seen, out),
+        Expr::Emit { message, .. } => collect(message, bound, seen, out),
+        Expr::Stop(inner) => collect(inner, bound, seen, out),
+        Expr::WithRngStream { body, .. } => collect(body, bound, seen, out),
+        Expr::Lit(_)
+        | Expr::Rng { .. }
+        | Expr::Spin { .. }
+        | Expr::Sleep { .. }
+        | Expr::Work { .. } => {}
+    }
+}
+
+/// Resolve the globals of `expr` against `env` per `spec`.
+///
+/// Returns the captured snapshot.  Unresolvable names found by static
+/// analysis produce [`FutureError::MissingGlobal`] at *creation* time —
+/// mirroring the framework's early failure — while names hidden behind
+/// `DynLookup` surface only at evaluation time (as in R).
+pub fn identify_globals(
+    expr: &Expr,
+    env: &Env,
+    spec: &GlobalsSpec,
+) -> Result<Env, FutureError> {
+    let names: Vec<String> = match spec {
+        GlobalsSpec::Auto => free_variables(expr),
+        GlobalsSpec::AutoPlus(extra) => {
+            let mut names = free_variables(expr);
+            for e in extra {
+                if !names.contains(e) {
+                    names.push(e.clone());
+                }
+            }
+            names
+        }
+        GlobalsSpec::Explicit(names) => names.clone(),
+        GlobalsSpec::None => Vec::new(),
+    };
+
+    let mut captured = Env::new();
+    for name in &names {
+        match env.get(name) {
+            Some(v) => captured.insert(name, v.clone()),
+            None => {
+                return Err(FutureError::MissingGlobal { name: name.clone() });
+            }
+        }
+    }
+    Ok(captured)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::value::Value;
+
+    #[test]
+    fn finds_simple_free_vars_in_order() {
+        let e = Expr::add(Expr::var("b"), Expr::mul(Expr::var("a"), Expr::var("b")));
+        assert_eq!(free_variables(&e), vec!["b", "a"]);
+    }
+
+    #[test]
+    fn let_binds_locally() {
+        // let a = x in a + y  →  free: x, y (not a)
+        let e = Expr::let_in("a", Expr::var("x"), Expr::add(Expr::var("a"), Expr::var("y")));
+        assert_eq!(free_variables(&e), vec!["x", "y"]);
+    }
+
+    #[test]
+    fn let_value_evaluated_outside_binding_scope() {
+        // let a = a in a  →  the RHS `a` is free (R: value looked up in the
+        // enclosing env), the body `a` is bound.
+        let e = Expr::let_in("a", Expr::var("a"), Expr::var("a"));
+        assert_eq!(free_variables(&e), vec!["a"]);
+    }
+
+    #[test]
+    fn shadowing_pops_correctly() {
+        // (let x = 1 in x) + x  →  the second x is free.
+        let e = Expr::add(
+            Expr::let_in("x", Expr::lit(1.0), Expr::var("x")),
+            Expr::var("x"),
+        );
+        assert_eq!(free_variables(&e), vec!["x"]);
+    }
+
+    #[test]
+    fn dyn_lookup_is_invisible() {
+        // get("k") — static analysis sees nothing.
+        let e = Expr::dyn_lookup(Expr::lit("k"));
+        assert!(free_variables(&e).is_empty());
+    }
+
+    #[test]
+    fn paper_fix_mention_variable_at_top() {
+        // { k; get("k") } — mentioning k makes it a detected global.
+        let e = Expr::seq(vec![Expr::var("k"), Expr::dyn_lookup(Expr::lit("k"))]);
+        assert_eq!(free_variables(&e), vec!["k"]);
+    }
+
+    #[test]
+    fn identify_auto_captures_values() {
+        let mut env = Env::new();
+        env.insert("x", 5i64);
+        let e = Expr::add(Expr::var("x"), Expr::lit(1i64));
+        let captured = identify_globals(&e, &env, &GlobalsSpec::Auto).unwrap();
+        assert_eq!(captured.get("x"), Some(&Value::I64(5)));
+        assert_eq!(captured.len(), 1);
+    }
+
+    #[test]
+    fn identify_missing_global_fails_at_creation() {
+        let env = Env::new();
+        let e = Expr::var("ghost");
+        let err = identify_globals(&e, &env, &GlobalsSpec::Auto).unwrap_err();
+        assert!(matches!(err, FutureError::MissingGlobal { ref name } if name == "ghost"));
+    }
+
+    #[test]
+    fn identify_explicit_skips_analysis() {
+        let mut env = Env::new();
+        env.insert("k", 42i64);
+        // get("k") with globals = "k" — the paper's second fix.
+        let e = Expr::dyn_lookup(Expr::lit("k"));
+        let captured =
+            identify_globals(&e, &env, &GlobalsSpec::Explicit(vec!["k".into()])).unwrap();
+        assert_eq!(captured.get("k"), Some(&Value::I64(42)));
+    }
+
+    #[test]
+    fn identify_auto_plus_adds_extras() {
+        let mut env = Env::new();
+        env.insert("k", 1i64);
+        env.insert("x", 2i64);
+        let e = Expr::seq(vec![Expr::var("x"), Expr::dyn_lookup(Expr::lit("k"))]);
+        let captured =
+            identify_globals(&e, &env, &GlobalsSpec::AutoPlus(vec!["k".into()])).unwrap();
+        assert_eq!(captured.len(), 2);
+    }
+}

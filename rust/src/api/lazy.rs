@@ -1,0 +1,120 @@
+//! Lazy futures and `merge()` — the paper's Future-work sketch, implemented.
+//!
+//! "Imagine that we have a function merge() to merge futures.  This would
+//! allow us to partition ten futures into only two futures, one per worker":
+//! [`merge_futures`] combines the task specs of unlaunched lazy futures into
+//! one chunk future whose value is the list of the originals' values —
+//! exactly the load-balancing trick the high-level map-reduce APIs perform,
+//! available at the core level.
+
+use crate::api::env::Env;
+use crate::api::error::FutureError;
+use crate::api::expr::Expr;
+use crate::api::future::{future_with, Future, FutureOpts};
+
+/// A not-yet-launched future description (expression + creation env).
+/// Building blocks for [`merge_futures`]; cheaper than full lazy [`Future`]s
+/// because no backend interaction happens until the merged chunk launches.
+#[derive(Debug, Clone)]
+pub struct LazySpec {
+    pub expr: Expr,
+    pub stream_index: Option<u64>,
+}
+
+impl LazySpec {
+    pub fn new(expr: Expr) -> Self {
+        LazySpec { expr, stream_index: None }
+    }
+
+    /// Pin this element to an RNG substream (chunk-invariant randomness).
+    pub fn with_stream(expr: Expr, index: u64) -> Self {
+        LazySpec { expr, stream_index: Some(index) }
+    }
+}
+
+/// Merge lazy specs into one future whose value is the list of their
+/// values, evaluated left to right on a single worker.
+pub fn merge_futures(
+    specs: &[LazySpec],
+    env: &Env,
+    opts: FutureOpts,
+) -> Result<Future, FutureError> {
+    let elements: Vec<Expr> = specs
+        .iter()
+        .map(|s| match s.stream_index {
+            Some(idx) => Expr::with_rng_stream(idx, s.expr.clone()),
+            None => s.expr.clone(),
+        })
+        .collect();
+    future_with(Expr::list(elements), env, opts)
+}
+
+/// Partition `specs` into `chunks` merged futures of near-equal size
+/// (the "one future per worker" pattern).
+pub fn merge_into_chunks(
+    specs: &[LazySpec],
+    chunks: usize,
+    env: &Env,
+    opts: FutureOpts,
+) -> Result<Vec<Future>, FutureError> {
+    let chunks = chunks.max(1).min(specs.len().max(1));
+    let mut out = Vec::with_capacity(chunks);
+    for range in crate::mapreduce::partition(specs.len(), chunks) {
+        out.push(merge_futures(&specs[range], env, opts.clone())?);
+    }
+    Ok(out)
+}
+
+/// Flatten the values of merged chunk futures back into element order.
+pub fn collect_merged(futures: &[Future]) -> Result<Vec<crate::api::value::Value>, FutureError> {
+    let mut out = Vec::new();
+    for f in futures {
+        match f.value()? {
+            crate::api::value::Value::List(items) => out.extend(items),
+            other => out.push(other),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::plan::{with_plan, PlanSpec};
+    use crate::api::value::Value;
+
+    #[test]
+    fn merge_preserves_element_order_and_values() {
+        with_plan(PlanSpec::sequential(), || {
+            let env = Env::new();
+            let specs: Vec<LazySpec> =
+                (0..10).map(|i| LazySpec::new(Expr::lit(i as i64))).collect();
+            let futures = merge_into_chunks(&specs, 2, &env, FutureOpts::new()).unwrap();
+            assert_eq!(futures.len(), 2);
+            let vs = collect_merged(&futures).unwrap();
+            assert_eq!(vs, (0..10).map(Value::I64).collect::<Vec<_>>());
+        });
+    }
+
+    #[test]
+    fn merged_chunk_count_never_exceeds_elements() {
+        with_plan(PlanSpec::sequential(), || {
+            let env = Env::new();
+            let specs = vec![LazySpec::new(Expr::lit(1i64))];
+            let futures = merge_into_chunks(&specs, 8, &env, FutureOpts::new()).unwrap();
+            assert_eq!(futures.len(), 1);
+        });
+    }
+
+    #[test]
+    fn per_element_streams_survive_merging() {
+        with_plan(PlanSpec::sequential(), || {
+            let env = Env::new();
+            let specs: Vec<LazySpec> =
+                (0..4).map(|i| LazySpec::with_stream(Expr::runif(1), i as u64)).collect();
+            let one = merge_into_chunks(&specs, 1, &env, FutureOpts::new().seed(11)).unwrap();
+            let four = merge_into_chunks(&specs, 4, &env, FutureOpts::new().seed(11)).unwrap();
+            assert_eq!(collect_merged(&one).unwrap(), collect_merged(&four).unwrap());
+        });
+    }
+}

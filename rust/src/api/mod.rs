@@ -1,0 +1,19 @@
+//! The *Future API* and its cross-cutting services.
+//!
+//! Layout mirrors the paper's structure: the three atomic constructs live in
+//! [`future`], backend selection in [`plan`], and the services every backend
+//! inherits — globals identification, parallel RNG, condition relaying,
+//! exception taxonomy — in their own modules.
+
+pub mod conditions;
+pub mod either;
+pub mod env;
+pub mod error;
+pub mod expr;
+pub mod future;
+pub mod globals;
+pub mod lazy;
+pub mod plan;
+pub mod promise;
+pub mod rng;
+pub mod value;

@@ -1,0 +1,289 @@
+//! `plan()` — how and where futures are resolved.
+//!
+//! The defining design of the framework: *the end-user decides the backend*
+//! via `plan()`, the developer never hard-codes one.  Supports single
+//! backends (`plan(multisession)`) and nested topologies
+//! (`plan(list(batchtools_sge, multisession))`), with the paper's built-in
+//! protection against nested parallelism: any nesting level not explicitly
+//! configured runs **sequentially**, so two future-using layers use N cores,
+//! not N².
+
+use std::cell::Cell;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, RwLock};
+
+use crate::api::error::FutureError;
+use crate::backend::{make_backend, Backend};
+use crate::util::available_cores;
+
+/// A declarative backend specification — serializable, so nested topologies
+/// travel to worker processes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PlanSpec {
+    /// Resolve futures sequentially in the calling process (the default).
+    Sequential,
+    /// Shared-memory worker threads — the `multicore` (forked processing)
+    /// analog: globals are inherited by reference, lowest latency.
+    ThreadPool { workers: usize },
+    /// Background worker OS processes over pipes — the `multisession`
+    /// (SOCK cluster on localhost) analog.
+    Multiprocess { workers: usize },
+    /// TCP-socket workers, one per host — the `cluster`/PSOCK analog.
+    /// Hosts are simulated locally (see DESIGN.md §Substitutions).
+    Cluster { hosts: Vec<String> },
+    /// Futures submitted as jobs to the (simulated) HPC scheduler — the
+    /// `future.batchtools` analog: high latency, high throughput.
+    Batch { workers: usize, submit_latency_ms: u64, poll_interval_ms: u64 },
+    /// A third-party backend registered via [`register_backend`].
+    Custom { name: String, workers: usize },
+}
+
+impl PlanSpec {
+    /// `plan(sequential)`.
+    pub fn sequential() -> Self {
+        PlanSpec::Sequential
+    }
+
+    /// `plan(multicore, workers = n)`; `0` ⇒ `availableCores()`.
+    pub fn multicore(workers: usize) -> Self {
+        PlanSpec::ThreadPool { workers }
+    }
+
+    /// `plan(multisession, workers = n)`; `0` ⇒ `availableCores()`.
+    pub fn multiprocess(workers: usize) -> Self {
+        PlanSpec::Multiprocess { workers }
+    }
+
+    /// `plan(cluster, workers = c("n1", "n2", ...))`.
+    pub fn cluster(hosts: &[&str]) -> Self {
+        PlanSpec::Cluster { hosts: hosts.iter().map(|s| s.to_string()).collect() }
+    }
+
+    /// `plan(future.batchtools::batchtools_slurm)` with defaults.
+    pub fn batch(workers: usize) -> Self {
+        PlanSpec::Batch { workers, submit_latency_ms: 5, poll_interval_ms: 2 }
+    }
+
+    /// `tweak(spec, workers = n)` — adjust the worker count.
+    pub fn tweak_workers(mut self, n: usize) -> Self {
+        match &mut self {
+            PlanSpec::Sequential => {}
+            PlanSpec::ThreadPool { workers }
+            | PlanSpec::Multiprocess { workers }
+            | PlanSpec::Batch { workers, .. }
+            | PlanSpec::Custom { workers, .. } => *workers = n,
+            PlanSpec::Cluster { hosts } => {
+                hosts.truncate(n);
+            }
+        }
+        self
+    }
+
+    /// Effective worker count (`0` placeholders resolved via
+    /// `availableCores()`).
+    pub fn effective_workers(&self) -> usize {
+        match self {
+            PlanSpec::Sequential => 1,
+            PlanSpec::ThreadPool { workers }
+            | PlanSpec::Multiprocess { workers }
+            | PlanSpec::Batch { workers, .. }
+            | PlanSpec::Custom { workers, .. } => {
+                if *workers == 0 {
+                    available_cores()
+                } else {
+                    *workers
+                }
+            }
+            PlanSpec::Cluster { hosts } => hosts.len().max(1),
+        }
+    }
+
+    /// Backend display name (paper naming).
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlanSpec::Sequential => "sequential",
+            PlanSpec::ThreadPool { .. } => "multicore",
+            PlanSpec::Multiprocess { .. } => "multisession",
+            PlanSpec::Cluster { .. } => "cluster",
+            PlanSpec::Batch { .. } => "batchtools",
+            PlanSpec::Custom { .. } => "custom",
+        }
+    }
+}
+
+/// Third-party backend factory (the paper's "third-party future backends"
+/// contract — anything conforming to the Backend trait plugs in).
+pub type BackendFactory = Arc<dyn Fn(usize) -> Arc<dyn Backend> + Send + Sync>;
+
+struct PlanState {
+    topology: Vec<PlanSpec>,
+    /// Lazily-instantiated backend per nesting depth.
+    backends: Mutex<HashMap<u32, Arc<dyn Backend>>>,
+}
+
+static PLAN: RwLock<Option<Arc<PlanState>>> = RwLock::new(None);
+static REGISTRY: Mutex<Option<HashMap<String, BackendFactory>>> = Mutex::new(None);
+/// Serializes `with_plan` sections (tests run concurrently but the plan is
+/// process-global, exactly like R's `plan()`).
+static PLAN_USER_LOCK: Mutex<()> = Mutex::new(());
+
+thread_local! {
+    /// Nesting depth of futures created on this thread.
+    static DEPTH: Cell<u32> = const { Cell::new(0) };
+}
+
+/// Register a custom backend under `name` for `PlanSpec::Custom`.
+pub fn register_backend(name: &str, factory: BackendFactory) {
+    let mut guard = REGISTRY.lock().unwrap();
+    guard.get_or_insert_with(HashMap::new).insert(name.to_string(), factory);
+}
+
+pub(crate) fn lookup_backend_factory(name: &str) -> Option<BackendFactory> {
+    REGISTRY.lock().unwrap().as_ref().and_then(|m| m.get(name).cloned())
+}
+
+/// Set the plan: a single backend for all futures (`plan(multisession)`).
+pub fn plan(spec: PlanSpec) {
+    plan_topology(vec![spec]);
+}
+
+/// Set a nested topology (`plan(list(tweak(multisession, 2), ...))`).
+/// Shuts down the previous plan's backends.
+pub fn plan_topology(topology: Vec<PlanSpec>) {
+    let new_state = Arc::new(PlanState { topology, backends: Mutex::new(HashMap::new()) });
+    let old = {
+        let mut guard = PLAN.write().unwrap();
+        std::mem::replace(&mut *guard, Some(new_state))
+    };
+    if let Some(old) = old {
+        shutdown_state(&old);
+    }
+}
+
+/// The current topology (defaults to `[sequential]`).
+pub fn current_topology() -> Vec<PlanSpec> {
+    PLAN.read()
+        .unwrap()
+        .as_ref()
+        .map(|s| s.topology.clone())
+        .unwrap_or_else(|| vec![PlanSpec::Sequential])
+}
+
+fn shutdown_state(state: &PlanState) {
+    let backends = std::mem::take(&mut *state.backends.lock().unwrap());
+    for (_, b) in backends {
+        b.shutdown();
+    }
+}
+
+/// Run `f` under `spec`, restoring `plan(sequential)` afterwards.  Takes a
+/// process-wide user lock so concurrent tests don't fight over the plan.
+pub fn with_plan<R>(spec: PlanSpec, f: impl FnOnce() -> R) -> R {
+    with_plan_topology(vec![spec], f)
+}
+
+/// [`with_plan`] for nested topologies.
+pub fn with_plan_topology<R>(topology: Vec<PlanSpec>, f: impl FnOnce() -> R) -> R {
+    let _guard = PLAN_USER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    plan_topology(topology);
+    let out = f();
+    plan_topology(vec![PlanSpec::Sequential]);
+    out
+}
+
+/// Depth of future nesting on the current thread (0 = top level).
+pub fn current_depth() -> u32 {
+    DEPTH.with(|d| d.get())
+}
+
+/// Run `f` at nesting depth `d` (in-process backends evaluate nested
+/// expressions under this so `plan()` protection applies).
+pub fn at_depth<R>(d: u32, f: impl FnOnce() -> R) -> R {
+    DEPTH.with(|cell| {
+        let old = cell.get();
+        cell.set(d);
+        let out = f();
+        cell.set(old);
+        out
+    })
+}
+
+/// Resolve the backend for the current nesting depth, plus the remaining
+/// topology to ship to that backend's workers for *their* nested futures.
+///
+/// Depths beyond the configured topology get the implicit
+/// `plan(sequential)` — the nested-parallelism protection.
+pub fn backend_for_current_depth() -> Result<(Arc<dyn Backend>, Vec<PlanSpec>), FutureError> {
+    let depth = current_depth();
+    let state = {
+        let guard = PLAN.read().unwrap();
+        match guard.as_ref() {
+            Some(s) => Arc::clone(s),
+            None => {
+                drop(guard);
+                plan(PlanSpec::Sequential);
+                PLAN.read().unwrap().as_ref().map(Arc::clone).unwrap()
+            }
+        }
+    };
+    let spec = state.topology.get(depth as usize).cloned().unwrap_or(PlanSpec::Sequential);
+    let nested: Vec<PlanSpec> =
+        state.topology.get(depth as usize + 1..).map(|s| s.to_vec()).unwrap_or_default();
+
+    let mut backends = state.backends.lock().unwrap();
+    let backend = match backends.get(&depth) {
+        Some(b) => Arc::clone(b),
+        None => {
+            let b = make_backend(&spec)?;
+            backends.insert(depth, Arc::clone(&b));
+            b
+        }
+    };
+    Ok((backend, nested))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_plan_is_sequential() {
+        let _guard = PLAN_USER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        plan_topology(vec![PlanSpec::Sequential]);
+        assert_eq!(current_topology(), vec![PlanSpec::Sequential]);
+    }
+
+    #[test]
+    fn tweak_adjusts_workers() {
+        let spec = PlanSpec::multicore(8).tweak_workers(2);
+        assert_eq!(spec.effective_workers(), 2);
+        let c = PlanSpec::cluster(&["a", "b", "c"]).tweak_workers(2);
+        assert_eq!(c.effective_workers(), 2);
+    }
+
+    #[test]
+    fn effective_workers_zero_uses_available_cores() {
+        let spec = PlanSpec::multicore(0);
+        assert!(spec.effective_workers() >= 1);
+    }
+
+    #[test]
+    fn depth_tracking_is_scoped() {
+        assert_eq!(current_depth(), 0);
+        at_depth(2, || {
+            assert_eq!(current_depth(), 2);
+            at_depth(3, || assert_eq!(current_depth(), 3));
+            assert_eq!(current_depth(), 2);
+        });
+        assert_eq!(current_depth(), 0);
+    }
+
+    #[test]
+    fn names_follow_paper() {
+        assert_eq!(PlanSpec::sequential().name(), "sequential");
+        assert_eq!(PlanSpec::multicore(2).name(), "multicore");
+        assert_eq!(PlanSpec::multiprocess(2).name(), "multisession");
+        assert_eq!(PlanSpec::cluster(&["h"]).name(), "cluster");
+        assert_eq!(PlanSpec::batch(2).name(), "batchtools");
+    }
+}

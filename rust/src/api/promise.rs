@@ -1,0 +1,161 @@
+//! Future assignments (`%<-%`) and list environments (`listenv`).
+//!
+//! R's `v %<-% expr` binds a *promise* that forces the future on first use.
+//! Rust has no implicit promises, so [`FuturePromise`] makes the force
+//! explicit (`.get()`), and [`ListEnv`] reproduces the `listenv` package:
+//! an indexable container of future assignments, collected with
+//! `as_list()` — the paper's workaround for "promises can only be assigned
+//! to environments, not lists".
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::api::env::Env;
+use crate::api::error::FutureError;
+use crate::api::expr::Expr;
+use crate::api::future::{future_with, Future, FutureOpts};
+use crate::api::value::Value;
+
+/// `v %<-% expr`: a deferred assignment backed by a future.
+/// The first `get()` forces (blocks on) the future and caches the value.
+pub struct FuturePromise {
+    future: Future,
+    cached: Mutex<Option<Result<Value, String>>>,
+}
+
+impl FuturePromise {
+    /// Create the promise (launches the future per the current plan —
+    /// same as `%<-%`).
+    pub fn assign(expr: Expr, env: &Env) -> Result<Self, FutureError> {
+        Self::assign_with(expr, env, FutureOpts::new())
+    }
+
+    /// `%<-% ... %seed% TRUE` and friends: assignment with options.
+    pub fn assign_with(expr: Expr, env: &Env, opts: FutureOpts) -> Result<Self, FutureError> {
+        Ok(FuturePromise { future: future_with(expr, env, opts)?, cached: Mutex::new(None) })
+    }
+
+    /// Force the promise: blocks until resolved, relays output/conditions,
+    /// then behaves like a plain value on every later call.
+    pub fn get(&self) -> Result<Value, FutureError> {
+        let mut cached = self.cached.lock().unwrap();
+        if let Some(prev) = &*cached {
+            return prev.clone().map_err(FutureError::Launch);
+        }
+        match self.future.value() {
+            Ok(v) => {
+                *cached = Some(Ok(v.clone()));
+                Ok(v)
+            }
+            Err(e) => {
+                // Cache infrastructure failures; eval errors re-raise as-is
+                // each time (matching R, where the error re-signals).
+                if !e.is_eval() {
+                    *cached = Some(Err(e.to_string()));
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Non-blocking: has the underlying future resolved?
+    pub fn resolved(&self) -> bool {
+        self.cached.lock().unwrap().is_some() || self.future.resolved()
+    }
+}
+
+/// The `listenv` analog: an integer-indexed container of future promises,
+/// usable where plain lists can't hold promises.
+#[derive(Default)]
+pub struct ListEnv {
+    slots: BTreeMap<usize, FuturePromise>,
+}
+
+impl ListEnv {
+    pub fn new() -> Self {
+        ListEnv::default()
+    }
+
+    /// `vs[[i]] %<-% expr`.
+    pub fn assign(&mut self, index: usize, expr: Expr, env: &Env) -> Result<(), FutureError> {
+        self.assign_with(index, expr, env, FutureOpts::new())
+    }
+
+    pub fn assign_with(
+        &mut self,
+        index: usize,
+        expr: Expr,
+        env: &Env,
+        opts: FutureOpts,
+    ) -> Result<(), FutureError> {
+        self.slots.insert(index, FuturePromise::assign_with(expr, env, opts)?);
+        Ok(())
+    }
+
+    /// Force one slot.
+    pub fn get(&self, index: usize) -> Result<Value, FutureError> {
+        self.slots
+            .get(&index)
+            .ok_or_else(|| FutureError::Launch(format!("listenv: no element {index}")))?
+            .get()
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// `as.list(vs)`: force everything, in index order.
+    pub fn as_list(&self) -> Result<Vec<Value>, FutureError> {
+        self.slots.values().map(FuturePromise::get).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::plan::{with_plan, PlanSpec};
+
+    #[test]
+    fn promise_forces_once_and_caches() {
+        with_plan(PlanSpec::sequential(), || {
+            let mut env = Env::new();
+            env.insert("x", 4i64);
+            let p = FuturePromise::assign(Expr::mul(Expr::var("x"), Expr::lit(10i64)), &env)
+                .unwrap();
+            // Reassigning x after the promise does not affect it.
+            env.insert("x", 9i64);
+            assert_eq!(p.get().unwrap(), Value::I64(40));
+            assert_eq!(p.get().unwrap(), Value::I64(40));
+            assert!(p.resolved());
+        });
+    }
+
+    #[test]
+    fn eval_errors_re_raise_on_each_get() {
+        with_plan(PlanSpec::sequential(), || {
+            let env = Env::new();
+            let p = FuturePromise::assign(Expr::stop(Expr::lit("bad")), &env).unwrap();
+            assert!(p.get().is_err());
+            assert!(p.get().is_err());
+        });
+    }
+
+    #[test]
+    fn listenv_collects_in_index_order() {
+        with_plan(PlanSpec::multicore(2), || {
+            let env = Env::new();
+            let mut vs = ListEnv::new();
+            for i in 0..6usize {
+                vs.assign(i, Expr::lit((i * i) as i64), &env).unwrap();
+            }
+            let list = vs.as_list().unwrap();
+            assert_eq!(list, (0..6).map(|i| Value::I64((i * i) as i64)).collect::<Vec<_>>());
+            assert_eq!(vs.get(3).unwrap(), Value::I64(9));
+            assert!(vs.get(99).is_err());
+        });
+    }
+}

@@ -1,0 +1,280 @@
+//! Parallel random number generation — L'Ecuyer-CMRG (MRG32k3a).
+//!
+//! "The ability to produce high-quality random numbers is essential for the
+//! validity of many statistical analyses" — and the default Mersenne-Twister
+//! is not designed for concurrent use.  The future framework builds
+//! L'Ecuyer's (1999) combined multiple-recursive generator in at its core:
+//! with `seed = TRUE`, every future gets its **own RNG stream**, assigned
+//! deterministically by future-creation order, so results are *fully
+//! reproducible regardless of backend and number of workers*.
+//!
+//! This is a from-scratch MRG32k3a: two order-3 recurrences modulo
+//! m1 = 2^32 − 209 and m2 = 2^32 − 22853, combined.  Streams are spaced
+//! 2^127 states apart; the jump matrices are **computed** (not pasted) by
+//! 127 modular squarings of the one-step transition matrices, then cached.
+//!
+//! Divergence from R noted for reviewers: `next_norm` uses Box–Muller over
+//! stream draws rather than R's inversion method — deterministic and
+//! stream-stable, but numerically different normals than R would produce.
+
+use once_cell::sync::Lazy;
+
+const M1: u64 = 4294967087; // 2^32 - 209
+const M2: u64 = 4294944443; // 2^32 - 22853
+const A12: u64 = 1403580;
+const A13N: u64 = 810728;
+const A21: u64 = 527612;
+const A23N: u64 = 1370589;
+/// 1 / (m1 + 1): maps the combined state into (0, 1).
+const NORM: f64 = 2.328306549295727688e-10;
+
+type Mat = [[u64; 3]; 3];
+
+/// One-step transition matrix of the first component, acting on the state
+/// column vector (x_{n-3}, x_{n-2}, x_{n-1}).
+const A1_STEP: Mat = [[0, 1, 0], [0, 0, 1], [M1 - A13N, A12, 0]];
+/// One-step transition matrix of the second component.
+const A2_STEP: Mat = [[0, 1, 0], [0, 0, 1], [M2 - A23N, 0, A21]];
+
+fn mat_mul(a: &Mat, b: &Mat, m: u64) -> Mat {
+    let mut out = [[0u64; 3]; 3];
+    for i in 0..3 {
+        for j in 0..3 {
+            let mut acc: u128 = 0;
+            for (k, bk) in b.iter().enumerate() {
+                acc += a[i][k] as u128 * bk[j] as u128;
+            }
+            out[i][j] = (acc % m as u128) as u64;
+        }
+    }
+    out
+}
+
+fn mat_vec(a: &Mat, v: &[u64; 3], m: u64) -> [u64; 3] {
+    let mut out = [0u64; 3];
+    for i in 0..3 {
+        let mut acc: u128 = 0;
+        for k in 0..3 {
+            acc += a[i][k] as u128 * v[k] as u128;
+        }
+        out[i] = (acc % m as u128) as u64;
+    }
+    out
+}
+
+fn mat_pow2k(a: &Mat, k: u32, m: u64) -> Mat {
+    // a^(2^k) by k modular squarings.
+    let mut acc = *a;
+    for _ in 0..k {
+        acc = mat_mul(&acc, &acc, m);
+    }
+    acc
+}
+
+/// The 2^127 jump matrices (stream spacing), computed once.
+static JUMP: Lazy<(Mat, Mat)> =
+    Lazy::new(|| (mat_pow2k(&A1_STEP, 127, M1), mat_pow2k(&A2_STEP, 127, M2)));
+
+fn mat_pow(a: &Mat, mut e: u64, m: u64) -> Mat {
+    // a^e by square-and-multiply.
+    let mut result: Mat = [[1, 0, 0], [0, 1, 0], [0, 0, 1]];
+    let mut base = *a;
+    while e > 0 {
+        if e & 1 == 1 {
+            result = mat_mul(&result, &base, m);
+        }
+        base = mat_mul(&base, &base, m);
+        e >>= 1;
+    }
+    result
+}
+
+/// An MRG32k3a stream.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RngStream {
+    s1: [u64; 3],
+    s2: [u64; 3],
+}
+
+impl RngStream {
+    /// Base stream from a user seed, expanded via splitmix64 into six
+    /// in-range, not-all-zero state words (R's `set.seed()` analog).
+    pub fn from_seed(seed: u64) -> Self {
+        let mut x = seed;
+        let mut next = |m: u64| {
+            x = crate::util::uuid::splitmix64(x);
+            // Map into [1, m-1]: nonzero guarantees a valid state vector.
+            1 + x % (m - 1)
+        };
+        RngStream {
+            s1: [next(M1), next(M1), next(M1)],
+            s2: [next(M2), next(M2), next(M2)],
+        }
+    }
+
+    /// Stream `index` for this seed: the base state advanced `index` jumps
+    /// of 2^127 states (R's `nextRNGStream()` applied `index` times, in
+    /// O(log index) matrix work).
+    pub fn nth_stream(seed: u64, index: u64) -> Self {
+        let base = Self::from_seed(seed);
+        if index == 0 {
+            return base;
+        }
+        let (j1, j2) = &*JUMP;
+        let p1 = mat_pow(j1, index, M1);
+        let p2 = mat_pow(j2, index, M2);
+        RngStream { s1: mat_vec(&p1, &base.s1, M1), s2: mat_vec(&p2, &base.s2, M2) }
+    }
+
+    /// Advance this stream to the next one (exactly R's `nextRNGStream`).
+    pub fn next_stream(&self) -> Self {
+        let (j1, j2) = &*JUMP;
+        RngStream { s1: mat_vec(j1, &self.s1, M1), s2: mat_vec(j2, &self.s2, M2) }
+    }
+
+    /// One uniform draw on (0, 1).
+    pub fn next_unif(&mut self) -> f64 {
+        // Component 1: x_n = (a12*x_{n-2} - a13n*x_{n-3}) mod m1
+        let p1 = ((A12 as u128 * self.s1[1] as u128 + (M1 - A13N) as u128 * self.s1[0] as u128)
+            % M1 as u128) as u64;
+        self.s1 = [self.s1[1], self.s1[2], p1];
+        // Component 2: x_n = (a21*x_{n-1} - a23n*x_{n-3}) mod m2
+        let p2 = ((A21 as u128 * self.s2[2] as u128 + (M2 - A23N) as u128 * self.s2[0] as u128)
+            % M2 as u128) as u64;
+        self.s2 = [self.s2[1], self.s2[2], p2];
+
+        let d = (p1 + M1 - p2) % M1;
+        if d == 0 {
+            M1 as f64 * NORM // boundary case: map to just under 1
+        } else {
+            d as f64 * NORM
+        }
+    }
+
+    /// One standard-normal draw (Box–Muller; consumes two uniforms).
+    pub fn next_norm(&mut self) -> f64 {
+        let u1 = self.next_unif();
+        let u2 = self.next_unif();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// `n` uniforms as f32 (tensor fill).
+    pub fn unif_f32(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.next_unif() as f32).collect()
+    }
+
+    /// `n` normals as f32 (tensor fill).
+    pub fn norm_f32(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.next_norm() as f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn draws_are_in_unit_interval() {
+        let mut s = RngStream::from_seed(42);
+        for _ in 0..10_000 {
+            let u = s.next_unif();
+            assert!(u > 0.0 && u < 1.0, "u = {u}");
+        }
+    }
+
+    #[test]
+    fn same_seed_same_sequence() {
+        let mut a = RngStream::from_seed(7);
+        let mut b = RngStream::from_seed(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_unif().to_bits(), b.next_unif().to_bits());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = RngStream::from_seed(1);
+        let mut b = RngStream::from_seed(2);
+        let same = (0..100).filter(|_| a.next_unif() == b.next_unif()).count();
+        assert!(same < 3);
+    }
+
+    #[test]
+    fn nth_stream_matches_repeated_next_stream() {
+        // Jump composition: nth_stream(seed, k) == next_stream^k(base).
+        let mut iter = RngStream::from_seed(123);
+        for k in 0..5u64 {
+            let direct = RngStream::nth_stream(123, k);
+            assert_eq!(direct, iter, "stream index {k}");
+            iter = iter.next_stream();
+        }
+    }
+
+    #[test]
+    fn streams_produce_disjoint_output_prefixes() {
+        // 2^127 spacing: the first draws of neighboring streams must differ
+        // (probability of collision is negligible unless the jump is wrong).
+        let mut firsts = Vec::new();
+        for k in 0..50 {
+            let mut s = RngStream::nth_stream(42, k);
+            firsts.push(s.next_unif().to_bits());
+        }
+        let unique: std::collections::HashSet<_> = firsts.iter().collect();
+        assert_eq!(unique.len(), firsts.len());
+    }
+
+    #[test]
+    fn jump_commutes_with_stepping() {
+        // A^(2^127) ∘ step == step ∘ A^(2^127): both orders land on the same
+        // state, a strong algebraic check that the jump matrix is a true
+        // power of the one-step transition.
+        let base = RngStream::from_seed(9);
+
+        // Path A: step once, then jump.
+        let mut stepped = base.clone();
+        stepped.next_unif();
+        let a = stepped.next_stream();
+
+        // Path B: jump, then step once.
+        let mut b = base.next_stream();
+        b.next_unif();
+
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn mean_and_variance_are_sane() {
+        let mut s = RngStream::from_seed(2024);
+        let n = 50_000;
+        let draws: Vec<f64> = (0..n).map(|_| s.next_unif()).collect();
+        let mean = draws.iter().sum::<f64>() / n as f64;
+        let var = draws.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0 / 12.0).abs() < 0.01, "var {var}");
+    }
+
+    #[test]
+    fn normals_are_standard() {
+        let mut s = RngStream::from_seed(7);
+        let n = 50_000;
+        let draws: Vec<f64> = (0..n).map(|_| s.next_norm()).collect();
+        let mean = draws.iter().sum::<f64>() / n as f64;
+        let var = draws.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn serial_correlation_is_low() {
+        let mut s = RngStream::from_seed(3);
+        let n = 20_000;
+        let draws: Vec<f64> = (0..n).map(|_| s.next_unif()).collect();
+        let mean = 0.5;
+        let mut cov = 0.0;
+        for i in 1..n {
+            cov += (draws[i] - mean) * (draws[i - 1] - mean);
+        }
+        cov /= (n - 1) as f64;
+        assert!(cov.abs() < 0.005, "lag-1 covariance {cov}");
+    }
+}

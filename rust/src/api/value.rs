@@ -1,0 +1,245 @@
+//! [`Value`] — the data model that crosses process boundaries.
+//!
+//! Everything a future consumes (globals) or produces (its value) is a
+//! `Value`.  The set is deliberately small — scalars, strings, f32 tensors
+//! (the PJRT interchange type), and lists — and every variant serializes
+//! through [`crate::ipc::wire`] so any backend (in-process, pipe, TCP,
+//! batch-file) transports the same representation.
+
+use std::fmt;
+
+/// A dense row-major f32 tensor — the PJRT buffer interchange type.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Build a tensor, validating that `data` fills `shape` exactly.
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self, String> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(format!(
+                "tensor shape {:?} wants {} elements, got {}",
+                shape,
+                n,
+                data.len()
+            ));
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    /// A scalar (rank-0) tensor.
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// The value domain of the future framework.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// R's `NULL` / invisible result.
+    Unit,
+    Bool(bool),
+    I64(i64),
+    F64(f64),
+    Str(String),
+    Tensor(Tensor),
+    List(Vec<Value>),
+}
+
+impl Value {
+    /// Human-readable type name for error messages.
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Value::Unit => "unit",
+            Value::Bool(_) => "bool",
+            Value::I64(_) => "i64",
+            Value::F64(_) => "f64",
+            Value::Str(_) => "str",
+            Value::Tensor(_) => "tensor",
+            Value::List(_) => "list",
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::F64(v) => Some(*v),
+            Value::I64(v) => Some(*v as f64),
+            Value::Tensor(t) if t.rank() == 0 => Some(t.data[0] as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::I64(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_tensor(&self) -> Option<&Tensor> {
+        match self {
+            Value::Tensor(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    pub fn as_list(&self) -> Option<&[Value]> {
+        match self {
+            Value::List(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Approximate in-memory payload size in bytes (used by metrics and the
+    /// cluster backend's transfer accounting).
+    pub fn byte_size(&self) -> usize {
+        match self {
+            Value::Unit => 1,
+            Value::Bool(_) => 1,
+            Value::I64(_) | Value::F64(_) => 8,
+            Value::Str(s) => s.len(),
+            Value::Tensor(t) => t.data.len() * 4 + t.shape.len() * 8,
+            Value::List(v) => v.iter().map(Value::byte_size).sum::<usize>() + 8,
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Unit => write!(f, "()"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::I64(v) => write!(f, "{v}"),
+            Value::F64(v) => write!(f, "{v}"),
+            Value::Str(s) => write!(f, "{s:?}"),
+            Value::Tensor(t) => {
+                write!(f, "tensor{:?}", t.shape)?;
+                if t.len() <= 4 {
+                    write!(f, "{:?}", t.data)?;
+                }
+                Ok(())
+            }
+            Value::List(v) => {
+                write!(f, "[")?;
+                for (i, item) in v.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{item}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+impl From<f64> for Value {
+    fn from(v: f64) -> Self {
+        Value::F64(v)
+    }
+}
+
+impl From<i64> for Value {
+    fn from(v: i64) -> Self {
+        Value::I64(v)
+    }
+}
+
+impl From<bool> for Value {
+    fn from(v: bool) -> Self {
+        Value::Bool(v)
+    }
+}
+
+impl From<&str> for Value {
+    fn from(v: &str) -> Self {
+        Value::Str(v.to_string())
+    }
+}
+
+impl From<String> for Value {
+    fn from(v: String) -> Self {
+        Value::Str(v)
+    }
+}
+
+impl From<Tensor> for Value {
+    fn from(t: Tensor) -> Self {
+        Value::Tensor(t)
+    }
+}
+
+impl From<Vec<Value>> for Value {
+    fn from(v: Vec<Value>) -> Self {
+        Value::List(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_validation() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+        assert_eq!(Tensor::scalar(2.5).rank(), 0);
+        assert_eq!(Tensor::zeros(&[4, 4]).len(), 16);
+    }
+
+    #[test]
+    fn value_coercions() {
+        assert_eq!(Value::from(2.0).as_f64(), Some(2.0));
+        assert_eq!(Value::from(2i64).as_f64(), Some(2.0));
+        assert_eq!(Value::Tensor(Tensor::scalar(1.5)).as_f64(), Some(1.5));
+        assert_eq!(Value::from("x").as_str(), Some("x"));
+        assert_eq!(Value::from(true).as_bool(), Some(true));
+        assert_eq!(Value::Unit.as_f64(), None);
+    }
+
+    #[test]
+    fn byte_size_accounts_tensor_payload() {
+        let t = Value::Tensor(Tensor::zeros(&[10, 10]));
+        assert!(t.byte_size() >= 400);
+    }
+
+    #[test]
+    fn display_is_stable() {
+        let v = Value::List(vec![Value::from(1i64), Value::from("a")]);
+        assert_eq!(format!("{v}"), "[1, \"a\"]");
+    }
+}

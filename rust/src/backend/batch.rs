@@ -1,0 +1,178 @@
+//! `plan(future.batchtools::batchtools_slurm)` analog — futures as
+//! scheduler jobs.
+//!
+//! Each future is spooled to a task file and submitted to the simulated
+//! [`crate::scheduler`]; the handle polls job state and reads the result
+//! file on completion.  High per-future latency (submission + polling), but
+//! capacity scales with the scheduler's nodes — the paper's
+//! "better suited for large-throughput requirements" backend.  No live
+//! channel exists, so `immediateCondition`s arrive only with the result
+//! (exactly the non-supporting-backend behaviour the paper describes).
+//!
+//! Blocking semantic: `launch()` blocks while `workers` jobs are pending or
+//! running — capacity frees when a job *completes*, not when its result is
+//! collected (matching the other backends).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::api::error::FutureError;
+use crate::backend::{Backend, TaskHandle};
+use crate::ipc::wire::{decode_message, encode_message};
+use crate::ipc::{Message, TaskResult, TaskSpec};
+use crate::scheduler::{JobId, JobState, SchedConfig, Scheduler};
+
+pub struct BatchBackend {
+    scheduler: Arc<Scheduler>,
+    poll_interval: Duration,
+    workers: usize,
+}
+
+impl BatchBackend {
+    pub fn new(
+        workers: usize,
+        submit_latency_ms: u64,
+        poll_interval_ms: u64,
+    ) -> Result<Self, FutureError> {
+        let workers = workers.max(1);
+        let scheduler = Scheduler::start(SchedConfig {
+            submit_latency: Duration::from_millis(submit_latency_ms),
+            tick: Duration::from_millis(poll_interval_ms.clamp(1, 50)),
+            ..SchedConfig::local(workers)
+        })?;
+        Ok(BatchBackend {
+            scheduler,
+            poll_interval: Duration::from_millis(poll_interval_ms.max(1)),
+            workers,
+        })
+    }
+}
+
+impl Backend for BatchBackend {
+    fn name(&self) -> &'static str {
+        "batchtools"
+    }
+
+    fn workers(&self) -> usize {
+        self.workers
+    }
+
+    fn supports_immediate(&self) -> bool {
+        false // file-staged: no live channel
+    }
+
+    fn launch(&self, task: TaskSpec) -> Result<Box<dyn TaskHandle>, FutureError> {
+        // Block while the scheduler is saturated (capacity frees on job
+        // completion, matching the paper's blocking semantic).
+        loop {
+            let (pending, running, _) = self.scheduler.load();
+            if pending + running < self.workers {
+                break;
+            }
+            std::thread::sleep(self.poll_interval);
+        }
+
+        // Spool the task file and submit (fire-and-forget, like sbatch).
+        let task_file = self.scheduler.spool().join(format!("task-{}.task", task.id));
+        let bytes = encode_message(&Message::Task(task));
+        std::fs::write(&task_file, &bytes)
+            .map_err(|e| FutureError::Launch(format!("spool task: {e}")))?;
+        let job = self.scheduler.submit(task_file);
+
+        Ok(Box::new(BatchHandle {
+            scheduler: Arc::clone(&self.scheduler),
+            job,
+            poll_interval: self.poll_interval,
+            done: None,
+        }))
+    }
+
+    fn shutdown(&self) {
+        self.scheduler.shutdown();
+    }
+}
+
+impl Drop for BatchBackend {
+    fn drop(&mut self) {
+        self.scheduler.shutdown();
+    }
+}
+
+pub struct BatchHandle {
+    scheduler: Arc<Scheduler>,
+    job: JobId,
+    poll_interval: Duration,
+    done: Option<TaskResult>,
+}
+
+impl BatchHandle {
+    fn try_harvest(&mut self) -> Result<Option<TaskResult>, FutureError> {
+        if let Some(r) = &self.done {
+            return Ok(Some(r.clone()));
+        }
+        match self.scheduler.poll(self.job) {
+            Some(JobState::Completed) => {
+                let path = self
+                    .scheduler
+                    .result_file(self.job)
+                    .ok_or_else(|| FutureError::Channel("result path lost".into()))?;
+                let bytes = std::fs::read(&path)
+                    .map_err(|e| FutureError::Channel(format!("read result: {e}")))?;
+                match decode_message(&bytes)
+                    .map_err(|e| FutureError::Channel(format!("bad result file: {e}")))?
+                {
+                    Message::Result(r) => {
+                        self.done = Some(r.clone());
+                        Ok(Some(r))
+                    }
+                    other => Err(FutureError::Channel(format!("result file held {other:?}"))),
+                }
+            }
+            Some(JobState::Failed(detail)) => {
+                Err(FutureError::WorkerDied { detail: format!("batch job failed: {detail}") })
+            }
+            Some(JobState::Cancelled) => Err(FutureError::Cancelled),
+            Some(JobState::Pending) | Some(JobState::Running { .. }) => Ok(None),
+            None => Err(FutureError::Channel("job vanished from scheduler".into())),
+        }
+    }
+}
+
+impl TaskHandle for BatchHandle {
+    fn is_resolved(&mut self) -> bool {
+        if self.done.is_some() {
+            return true;
+        }
+        match self.scheduler.poll(self.job) {
+            Some(JobState::Pending) | Some(JobState::Running { .. }) => false,
+            _ => true,
+        }
+    }
+
+    fn wait(&mut self) -> Result<TaskResult, FutureError> {
+        loop {
+            match self.try_harvest()? {
+                Some(r) => return Ok(r),
+                None => std::thread::sleep(self.poll_interval),
+            }
+        }
+    }
+
+    fn cancel(&mut self) -> bool {
+        self.scheduler.cancel(self.job)
+    }
+}
+
+impl Drop for BatchHandle {
+    fn drop(&mut self) {
+        if self.done.is_none() {
+            // Abandoned before completion: cancel so the slot frees.
+            match self.scheduler.poll(self.job) {
+                Some(JobState::Pending) | Some(JobState::Running { .. }) => {
+                    self.scheduler.cancel(self.job);
+                }
+                _ => {}
+            }
+        }
+    }
+}

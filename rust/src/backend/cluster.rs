@@ -1,0 +1,112 @@
+//! `plan(cluster, workers = c("n1.remote.org", ...))` analog — TCP workers.
+//!
+//! The paper's cluster backend talks to R workers on remote machines over
+//! sockets (`makeClusterPSOCK` with reverse SSH tunneling).  This image has
+//! no remote hosts, so each named host is **simulated** by launching the
+//! worker process locally and having it *connect back* to the coordinator's
+//! listener — the same reverse-connection topology
+//! `parallelly::makeClusterPSOCK` uses, over a real TCP socket, exercising
+//! the identical code path a remote worker would (serialize → socket →
+//! execute → socket → deserialize).
+
+use std::net::{TcpListener, TcpStream};
+use std::process::{Child, Command, Stdio};
+use std::sync::{Arc, Mutex};
+
+use crate::api::error::FutureError;
+use crate::backend::procpool::{Connection, ProcPool, Spawner};
+use crate::backend::{Backend, TaskHandle};
+use crate::ipc::TaskSpec;
+use crate::util::exe::worker_exe;
+
+pub struct ClusterBackend {
+    pool: Arc<ProcPool>,
+    hosts: Vec<String>,
+}
+
+fn launch_host_worker(listener: &TcpListener, host: &str) -> Result<Connection, FutureError> {
+    let addr = listener
+        .local_addr()
+        .map_err(|e| FutureError::Launch(format!("listener addr: {e}")))?;
+    let exe = worker_exe()?;
+    // "ssh $host rustures worker --connect <coordinator>" — simulated by a
+    // local process tagged with the host label.
+    let child: Child = Command::new(&exe)
+        .args(["worker", "--connect", &addr.to_string()])
+        .env("TF_CPP_MIN_LOG_LEVEL", "1")
+        .env("RUSTURES_HOST_LABEL", host)
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .map_err(|e| FutureError::Launch(format!("spawn cluster worker for {host}: {e}")))?;
+
+    let (stream, _peer) = listener
+        .accept()
+        .map_err(|e| FutureError::Launch(format!("accept from {host}: {e}")))?;
+    stream.set_nodelay(true).ok();
+    let reader: TcpStream = stream
+        .try_clone()
+        .map_err(|e| FutureError::Launch(format!("clone socket: {e}")))?;
+    Ok(Connection { reader: Box::new(reader), writer: Box::new(stream), child: Some(child) })
+}
+
+impl ClusterBackend {
+    pub fn new(hosts: &[String]) -> Result<Self, FutureError> {
+        if hosts.is_empty() {
+            return Err(FutureError::InvalidPlan("cluster: no hosts given".into()));
+        }
+        let listener = TcpListener::bind("127.0.0.1:0")
+            .map_err(|e| FutureError::Launch(format!("bind coordinator listener: {e}")))?;
+        listener
+            .set_nonblocking(false)
+            .map_err(|e| FutureError::Launch(format!("listener mode: {e}")))?;
+
+        // Respawns round-robin over the host list.
+        let hosts_owned: Vec<String> = hosts.to_vec();
+        let next = Mutex::new(0usize);
+        let listener = Arc::new(listener);
+        let spawner_hosts = hosts_owned.clone();
+        let spawner_listener = Arc::clone(&listener);
+        let spawner: Spawner = Box::new(move || {
+            let mut idx = next.lock().unwrap();
+            let host = &spawner_hosts[*idx % spawner_hosts.len()];
+            *idx += 1;
+            launch_host_worker(&spawner_listener, host)
+        });
+        let pool = ProcPool::new(hosts_owned.len(), spawner)?;
+        Ok(ClusterBackend { pool, hosts: hosts_owned })
+    }
+
+    pub fn hosts(&self) -> &[String] {
+        &self.hosts
+    }
+}
+
+impl Backend for ClusterBackend {
+    fn name(&self) -> &'static str {
+        "cluster"
+    }
+
+    fn workers(&self) -> usize {
+        self.pool.workers()
+    }
+
+    fn supports_immediate(&self) -> bool {
+        true // live socket back to the coordinator
+    }
+
+    fn launch(&self, task: TaskSpec) -> Result<Box<dyn TaskHandle>, FutureError> {
+        self.pool.launch(task)
+    }
+
+    fn shutdown(&self) {
+        self.pool.shutdown();
+    }
+}
+
+impl Drop for ClusterBackend {
+    fn drop(&mut self) {
+        self.pool.shutdown();
+    }
+}

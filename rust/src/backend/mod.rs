@@ -1,0 +1,104 @@
+//! Future backends — the pluggable "how/where" of the framework.
+//!
+//! [`Backend`] is the *Future API backend specification* the paper describes:
+//! any implementation that passes the [`crate::conformance`] suite can be
+//! selected by the end-user via `plan()` without changing a line of user
+//! code.  Built-ins mirror the paper's set:
+//!
+//! | paper            | here                                   |
+//! |------------------|----------------------------------------|
+//! | `sequential`     | [`sequential::SequentialBackend`]      |
+//! | `multicore`      | [`threadpool::ThreadPoolBackend`]      |
+//! | `multisession`   | [`multiprocess::MultiprocessBackend`]  |
+//! | `cluster`        | [`cluster::ClusterBackend`]            |
+//! | `batchtools_*`   | [`batch::BatchBackend`]                |
+//!
+//! Third-party backends register a factory via
+//! [`crate::api::plan::register_backend`] and are selected with
+//! `PlanSpec::Custom` — the paper's "third-party contributions meeting the
+//! specifications are automatically supported".
+
+pub mod batch;
+pub mod cluster;
+pub mod multiprocess;
+pub mod procpool;
+pub mod sequential;
+pub mod threadpool;
+
+use std::sync::Arc;
+
+use crate::api::error::FutureError;
+use crate::api::plan::{lookup_backend_factory, PlanSpec};
+use crate::ipc::{TaskResult, TaskSpec};
+
+/// Handle to one launched (possibly still running) task.
+pub trait TaskHandle: Send {
+    /// Non-blocking: has the task finished (successfully or not)?
+    fn is_resolved(&mut self) -> bool;
+
+    /// Block until the task finishes and take its result.  At-most-once;
+    /// infrastructure failures surface as [`FutureError`]s.
+    fn wait(&mut self) -> Result<TaskResult, FutureError>;
+
+    /// Best-effort cancellation (extension; `suspend()` is "Future work" in
+    /// the paper).  Returns true if the task was prevented from completing.
+    fn cancel(&mut self) -> bool {
+        false
+    }
+}
+
+/// The backend specification: launch tasks, report capacity.
+///
+/// **Launch blocks when all workers are busy** — the paper's core blocking
+/// semantic ("this causes `future()` to block until one of the workers is
+/// available").
+pub trait Backend: Send + Sync {
+    /// Paper-style name ("sequential", "multicore", ...).
+    fn name(&self) -> &'static str;
+
+    /// Number of parallel workers.
+    fn workers(&self) -> usize;
+
+    /// Whether `immediateCondition`s relay live (before `value()`).
+    /// Backends with a live channel relay them through
+    /// [`crate::api::conditions::relay_immediate`] as they arrive; the rest
+    /// deliver them with the result.
+    fn supports_immediate(&self) -> bool {
+        false
+    }
+
+    /// Launch a task, blocking while no worker is free.
+    fn launch(&self, task: TaskSpec) -> Result<Box<dyn TaskHandle>, FutureError>;
+
+    /// Tear down workers (called on `plan()` change and process exit).
+    fn shutdown(&self) {}
+}
+
+/// Instantiate the backend for a plan spec.
+pub fn make_backend(spec: &PlanSpec) -> Result<Arc<dyn Backend>, FutureError> {
+    Ok(match spec {
+        PlanSpec::Sequential => Arc::new(sequential::SequentialBackend::new()),
+        PlanSpec::ThreadPool { .. } => {
+            Arc::new(threadpool::ThreadPoolBackend::new(spec.effective_workers()))
+        }
+        PlanSpec::Multiprocess { .. } => {
+            Arc::new(multiprocess::MultiprocessBackend::new(spec.effective_workers())?)
+        }
+        PlanSpec::Cluster { hosts } => Arc::new(cluster::ClusterBackend::new(hosts)?),
+        PlanSpec::Batch { submit_latency_ms, poll_interval_ms, .. } => {
+            Arc::new(batch::BatchBackend::new(
+                spec.effective_workers(),
+                *submit_latency_ms,
+                *poll_interval_ms,
+            )?)
+        }
+        PlanSpec::Custom { name, workers } => match lookup_backend_factory(name) {
+            Some(factory) => factory(*workers),
+            None => {
+                return Err(FutureError::InvalidPlan(format!(
+                    "no registered backend named '{name}'"
+                )))
+            }
+        },
+    })
+}

@@ -1,0 +1,73 @@
+//! `plan(multisession)` analog — background worker OS processes.
+//!
+//! The paper's multisession backend runs a SOCK cluster of R processes on
+//! the local machine; tasks and globals are *serialized* to the workers and
+//! results travel back over the channel.  Here each worker is a re-exec of
+//! the `rustures` binary (`rustures worker --stdio`) speaking the framed
+//! wire protocol over its stdin/stdout pipes.  Everything a task needs
+//! crosses the process boundary explicitly — exactly the property that makes
+//! the conformance suite's globals tests meaningful.
+
+use std::process::{Command, Stdio};
+use std::sync::Arc;
+
+use crate::api::error::FutureError;
+use crate::backend::procpool::{Connection, ProcPool, Spawner};
+use crate::backend::{Backend, TaskHandle};
+use crate::ipc::TaskSpec;
+use crate::util::exe::worker_exe;
+
+pub struct MultiprocessBackend {
+    pool: Arc<ProcPool>,
+}
+
+fn spawn_stdio_worker() -> Result<Connection, FutureError> {
+    let exe = worker_exe()?;
+    let mut child = Command::new(&exe)
+        .args(["worker", "--stdio"])
+        .env("TF_CPP_MIN_LOG_LEVEL", "1")
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .map_err(|e| FutureError::Launch(format!("spawn {}: {e}", exe.display())))?;
+    let stdin = child.stdin.take().expect("piped stdin");
+    let stdout = child.stdout.take().expect("piped stdout");
+    Ok(Connection { reader: Box::new(stdout), writer: Box::new(stdin), child: Some(child) })
+}
+
+impl MultiprocessBackend {
+    pub fn new(workers: usize) -> Result<Self, FutureError> {
+        let spawner: Spawner = Box::new(spawn_stdio_worker);
+        Ok(MultiprocessBackend { pool: ProcPool::new(workers, spawner)? })
+    }
+}
+
+impl Backend for MultiprocessBackend {
+    fn name(&self) -> &'static str {
+        "multisession"
+    }
+
+    fn workers(&self) -> usize {
+        self.pool.workers()
+    }
+
+    fn supports_immediate(&self) -> bool {
+        // Live pipe back to the coordinator: immediates relay as they occur.
+        true
+    }
+
+    fn launch(&self, task: TaskSpec) -> Result<Box<dyn TaskHandle>, FutureError> {
+        self.pool.launch(task)
+    }
+
+    fn shutdown(&self) {
+        self.pool.shutdown();
+    }
+}
+
+impl Drop for MultiprocessBackend {
+    fn drop(&mut self) {
+        self.pool.shutdown();
+    }
+}

@@ -1,0 +1,453 @@
+//! Shared machinery for backends whose workers live behind a byte channel:
+//! multiprocess (child pipes) and cluster (TCP sockets).
+//!
+//! Central semantic (paper, "blocking" example): a worker becomes free the
+//! moment it **resolves** its future — not when the result is collected.
+//! Creating three futures on two workers must unblock as soon as either of
+//! the first two finishes, even if no one has called `value()` yet.  The
+//! per-worker reader thread therefore returns the worker to the idle set as
+//! soon as the `Result` frame arrives, parking the result in a shared map
+//! until the handle asks for it.
+//!
+//! `immediateCondition`s are relayed **live** from the reader threads — the
+//! paper's "relayed as soon as possible ... depending on the backend used".
+
+use std::collections::{HashMap, HashSet};
+use std::io::{Read, Write};
+use std::process::Child;
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::api::conditions::relay_immediate;
+use crate::api::error::FutureError;
+use crate::backend::TaskHandle;
+use crate::ipc::frame::{read_message, write_message};
+use crate::ipc::{Message, TaskResult, TaskSpec};
+
+/// A connected worker's coordinator-side seat: the write half + lifecycle.
+pub struct Seat {
+    pub id: u64,
+    writer: Box<dyn Write + Send>,
+    child: Option<Child>,
+}
+
+impl Seat {
+    fn send_task(&mut self, task: &TaskSpec) -> Result<(), FutureError> {
+        // Encode from the reference — no clone of (possibly large) globals.
+        let payload = crate::ipc::wire::encode_task_message(task);
+        let len = payload.len() as u32;
+        self.writer
+            .write_all(&len.to_le_bytes())
+            .and_then(|_| self.writer.write_all(&payload))
+            .and_then(|_| self.writer.flush())
+            .map_err(|e| FutureError::Channel(format!("write failed: {e}")))
+    }
+
+    fn kill(&mut self) {
+        if let Some(child) = &mut self.child {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+
+    fn graceful_shutdown(mut self) {
+        let _ = write_message(&mut self.writer, &Message::Shutdown);
+        if let Some(child) = &mut self.child {
+            let deadline = std::time::Instant::now() + std::time::Duration::from_millis(500);
+            loop {
+                match child.try_wait() {
+                    Ok(Some(_)) => break,
+                    Ok(None) if std::time::Instant::now() < deadline => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    _ => {
+                        let _ = child.kill();
+                        let _ = child.wait();
+                        break;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// What a finished task leaves in the results map.
+type Parked = Result<TaskResult, String>;
+
+struct Inner {
+    /// Workers ready for a task.
+    idle: Vec<Seat>,
+    /// worker id → (seat, task id) while a task is in flight.
+    busy: HashMap<u64, (Seat, String)>,
+    /// worker id → task id reserved *before* the task frame is written.
+    /// Fast tasks can complete before `launch` re-acquires the lock; the
+    /// reader parks such results against this reservation instead of
+    /// dropping them (the send/insert race).
+    pending: HashMap<u64, String>,
+    /// task id → parked outcome, until the handle collects it.
+    results: HashMap<String, Parked>,
+    /// Task ids whose handles were dropped: discard their results.
+    abandoned: HashSet<String>,
+    /// Live workers (idle + busy + being spawned).
+    alive: usize,
+    shutting_down: bool,
+    next_worker_id: u64,
+}
+
+struct Shared {
+    inner: Mutex<Inner>,
+    /// A worker became idle (or capacity changed).
+    slot_cv: Condvar,
+    /// A result was parked.
+    result_cv: Condvar,
+}
+
+/// Transport halves for one fresh worker connection.
+pub struct Connection {
+    pub reader: Box<dyn Read + Send>,
+    pub writer: Box<dyn Write + Send>,
+    pub child: Option<Child>,
+}
+
+/// Spawner contract: produce a fresh connected worker transport.
+pub type Spawner = Box<dyn Fn() -> Result<Connection, FutureError> + Send + Sync>;
+
+/// A pool of remote workers with resolution-frees-the-worker semantics.
+pub struct ProcPool {
+    shared: Arc<Shared>,
+    spawner: Spawner,
+    workers: usize,
+}
+
+impl ProcPool {
+    /// Spawn all `workers` eagerly (PSOCK-style: cluster set up once).
+    pub fn new(workers: usize, spawner: Spawner) -> Result<Arc<Self>, FutureError> {
+        let workers = workers.max(1);
+        let shared = Arc::new(Shared {
+            inner: Mutex::new(Inner {
+                idle: Vec::with_capacity(workers),
+                busy: HashMap::new(),
+                pending: HashMap::new(),
+                results: HashMap::new(),
+                abandoned: HashSet::new(),
+                alive: 0,
+                shutting_down: false,
+                next_worker_id: 0,
+            }),
+            slot_cv: Condvar::new(),
+            result_cv: Condvar::new(),
+        });
+        let pool = Arc::new(ProcPool { shared, spawner, workers });
+        for _ in 0..workers {
+            let seat = pool.spawn_seat()?;
+            let mut inner = pool.shared.inner.lock().unwrap();
+            inner.alive += 1;
+            inner.idle.push(seat);
+        }
+        Ok(pool)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Create a seat + its reader thread.
+    fn spawn_seat(&self) -> Result<Seat, FutureError> {
+        let conn = (self.spawner)()?;
+        let id = {
+            let mut inner = self.shared.inner.lock().unwrap();
+            inner.next_worker_id += 1;
+            inner.next_worker_id
+        };
+        let shared = Arc::clone(&self.shared);
+        std::thread::Builder::new()
+            .name(format!("rustures-reader-{id}"))
+            .spawn(move || reader_loop(id, conn.reader, shared))
+            .map_err(|e| FutureError::Launch(format!("spawn reader: {e}")))?;
+        Ok(Seat { id, writer: conn.writer, child: conn.child })
+    }
+
+    /// Launch a task, blocking while every worker is busy (a worker frees
+    /// on *resolution* of its task).
+    pub fn launch(self: &Arc<Self>, task: TaskSpec) -> Result<Box<dyn TaskHandle>, FutureError> {
+        let task_id = task.id.clone();
+        let mut seat = {
+            let mut inner = self.shared.inner.lock().unwrap();
+            loop {
+                if inner.shutting_down {
+                    return Err(FutureError::Launch("pool is shutting down".into()));
+                }
+                if let Some(seat) = inner.idle.pop() {
+                    // Reserve before sending: a fast worker may finish the
+                    // task before we re-acquire the lock below.
+                    inner.pending.insert(seat.id, task_id.clone());
+                    break seat;
+                }
+                if inner.alive < self.workers {
+                    // A worker died earlier: restore capacity.
+                    inner.alive += 1;
+                    drop(inner);
+                    match self.spawn_seat() {
+                        Ok(seat) => {
+                            let mut inner = self.shared.inner.lock().unwrap();
+                            inner.pending.insert(seat.id, task_id.clone());
+                            break seat;
+                        }
+                        Err(e) => {
+                            self.shared.inner.lock().unwrap().alive -= 1;
+                            return Err(e);
+                        }
+                    }
+                }
+                inner = self.shared.slot_cv.wait(inner).unwrap();
+            }
+        };
+
+        // Send outside the lock: serializing large globals must not stall
+        // other launches or reader threads.
+        if let Err(first_err) = seat.send_task(&task) {
+            seat.kill();
+            {
+                // Dead worker's slot is immediately re-reserved for the
+                // retry spawn, so `alive` is unchanged net.
+                let mut inner = self.shared.inner.lock().unwrap();
+                inner.pending.remove(&seat.id);
+            }
+            // One retry on a fresh worker.
+            seat = match self.spawn_seat() {
+                Ok(s) => s,
+                Err(e) => {
+                    self.shared.inner.lock().unwrap().alive -= 1;
+                    return Err(e);
+                }
+            };
+            {
+                let mut inner = self.shared.inner.lock().unwrap();
+                inner.pending.insert(seat.id, task_id.clone());
+            }
+            if let Err(e2) = seat.send_task(&task) {
+                let mut inner = self.shared.inner.lock().unwrap();
+                inner.pending.remove(&seat.id);
+                inner.alive -= 1;
+                drop(inner);
+                seat.kill();
+                return Err(FutureError::Channel(format!(
+                    "send to fresh worker failed after '{first_err}': {e2}"
+                )));
+            }
+        }
+
+        {
+            let mut inner = self.shared.inner.lock().unwrap();
+            inner.pending.remove(&seat.id);
+            match inner.results.get(&task_id) {
+                // Fast path raced us: the result is already parked.
+                Some(Ok(_)) => {
+                    inner.idle.push(seat);
+                    drop(inner);
+                    self.shared.slot_cv.notify_one();
+                }
+                // Worker died right after (or while) resolving.
+                Some(Err(_)) => {
+                    inner.alive = inner.alive.saturating_sub(1);
+                    drop(inner);
+                    seat.kill();
+                }
+                None => {
+                    inner.busy.insert(seat.id, (seat, task_id.clone()));
+                }
+            }
+        }
+
+        Ok(Box::new(ProcHandle { pool: Arc::clone(self), task_id, collected: false }))
+    }
+
+    pub fn shutdown(&self) {
+        let (idle, busy) = {
+            let mut inner = self.shared.inner.lock().unwrap();
+            inner.shutting_down = true;
+            (std::mem::take(&mut inner.idle), std::mem::take(&mut inner.busy))
+        };
+        self.shared.slot_cv.notify_all();
+        self.shared.result_cv.notify_all();
+        for seat in idle {
+            seat.graceful_shutdown();
+        }
+        for (_, (mut seat, _)) in busy {
+            seat.kill();
+        }
+    }
+}
+
+fn reader_loop(worker_id: u64, mut reader: Box<dyn Read + Send>, shared: Arc<Shared>) {
+    loop {
+        let msg = read_message(&mut reader);
+        match msg {
+            Ok(Some(Message::Hello { .. })) | Ok(Some(Message::Pong)) => continue,
+            Ok(Some(Message::Immediate { condition, .. })) => {
+                relay_immediate(&condition);
+            }
+            Ok(Some(Message::Result(result))) => {
+                let mut inner = shared.inner.lock().unwrap();
+                // The worker is free *now* — before anyone collects.
+                if let Some((seat, task_id)) = inner.busy.remove(&worker_id) {
+                    debug_assert_eq!(task_id, result.id);
+                    if inner.abandoned.remove(&result.id) {
+                        // Nobody wants this result.
+                    } else {
+                        inner.results.insert(result.id.clone(), Ok(result));
+                    }
+                    if inner.shutting_down {
+                        drop(inner);
+                        seat.graceful_shutdown();
+                    } else {
+                        inner.idle.push(seat);
+                        drop(inner);
+                        shared.slot_cv.notify_one();
+                    }
+                    shared.result_cv.notify_all();
+                } else if inner.pending.get(&worker_id) == Some(&result.id) {
+                    // Fast completion before launch() re-registered the
+                    // seat: park the result; launch() returns the seat.
+                    if !inner.abandoned.remove(&result.id) {
+                        inner.results.insert(result.id.clone(), Ok(result));
+                    }
+                    drop(inner);
+                    shared.result_cv.notify_all();
+                } else {
+                    // cancel() raced us; drop the result.
+                }
+            }
+            Ok(Some(other)) => {
+                close_worker(worker_id, &shared, format!("unexpected message {other:?}"));
+                return;
+            }
+            Ok(None) => {
+                close_worker(worker_id, &shared, "worker closed the channel".into());
+                return;
+            }
+            Err(e) => {
+                close_worker(worker_id, &shared, e.to_string());
+                return;
+            }
+        }
+    }
+}
+
+fn close_worker(worker_id: u64, shared: &Shared, detail: String) {
+    let mut inner = shared.inner.lock().unwrap();
+    if let Some((mut seat, task_id)) = inner.busy.remove(&worker_id) {
+        seat.kill();
+        inner.alive = inner.alive.saturating_sub(1);
+        if !inner.abandoned.remove(&task_id) {
+            inner.results.insert(task_id, Err(detail));
+        }
+    } else if let Some(task_id) = inner.pending.remove(&worker_id) {
+        // Died while launch() still owns the seat: park the failure;
+        // launch()'s post-send bookkeeping reclaims the seat.
+        if !inner.abandoned.remove(&task_id) {
+            inner.results.insert(task_id, Err(detail));
+        }
+    } else {
+        // Idle worker died (e.g. graceful shutdown EOF): if still seated,
+        // remove it so launch() respawns capacity on demand.
+        if let Some(pos) = inner.idle.iter().position(|s| s.id == worker_id) {
+            let mut seat = inner.idle.remove(pos);
+            seat.kill();
+            inner.alive = inner.alive.saturating_sub(1);
+        }
+    }
+    drop(inner);
+    shared.slot_cv.notify_all();
+    shared.result_cv.notify_all();
+}
+
+/// Handle to a task launched on the pool.
+pub struct ProcHandle {
+    pool: Arc<ProcPool>,
+    task_id: String,
+    collected: bool,
+}
+
+impl ProcHandle {
+    /// Is the task still in flight (unresolved, un-parked)?
+    fn in_flight(inner: &Inner, task_id: &str) -> bool {
+        inner.busy.values().any(|(_, t)| t == task_id)
+            || inner.pending.values().any(|t| t == task_id)
+    }
+}
+
+impl TaskHandle for ProcHandle {
+    fn is_resolved(&mut self) -> bool {
+        if self.collected {
+            return true;
+        }
+        let inner = self.pool.shared.inner.lock().unwrap();
+        inner.results.contains_key(&self.task_id) || !Self::in_flight(&inner, &self.task_id)
+    }
+
+    fn wait(&mut self) -> Result<TaskResult, FutureError> {
+        if self.collected {
+            return Err(FutureError::Launch("result already taken".into()));
+        }
+        let shared = Arc::clone(&self.pool.shared);
+        let mut inner = shared.inner.lock().unwrap();
+        loop {
+            if let Some(parked) = inner.results.remove(&self.task_id) {
+                self.collected = true;
+                return parked.map_err(|detail| FutureError::WorkerDied { detail });
+            }
+            if !Self::in_flight(&inner, &self.task_id) {
+                self.collected = true;
+                return Err(FutureError::WorkerDied {
+                    detail: format!("task {} lost (worker gone)", self.task_id),
+                });
+            }
+            inner = shared.result_cv.wait(inner).unwrap();
+        }
+    }
+
+    fn cancel(&mut self) -> bool {
+        if self.collected {
+            return false;
+        }
+        let mut inner = self.pool.shared.inner.lock().unwrap();
+        if inner.results.remove(&self.task_id).is_some() {
+            // Already resolved: nothing to cancel, result discarded.
+            self.collected = true;
+            return false;
+        }
+        let worker_id = inner
+            .busy
+            .iter()
+            .find(|(_, (_, t))| *t == self.task_id)
+            .map(|(w, _)| *w);
+        match worker_id {
+            Some(w) => {
+                let (mut seat, _) = inner.busy.remove(&w).unwrap();
+                seat.kill();
+                inner.alive = inner.alive.saturating_sub(1);
+                self.collected = true;
+                drop(inner);
+                // launch() respawns capacity on demand.
+                self.pool.shared.slot_cv.notify_all();
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+impl Drop for ProcHandle {
+    fn drop(&mut self) {
+        if self.collected {
+            return;
+        }
+        let mut inner = self.pool.shared.inner.lock().unwrap();
+        if inner.results.remove(&self.task_id).is_none() && Self::in_flight(&inner, &self.task_id)
+        {
+            // Still running: mark abandoned so the reader discards the
+            // result but the worker itself returns to the pool.
+            inner.abandoned.insert(self.task_id.clone());
+        }
+    }
+}

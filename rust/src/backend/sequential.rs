@@ -1,0 +1,123 @@
+//! `plan(sequential)` — the default backend.
+//!
+//! Futures are resolved synchronously *at creation*: "each `future()` blocks
+//! until the previously created future has been resolved" — trivially true
+//! when creation itself evaluates.  Globals are still captured and the
+//! expression still evaluates against them (not the live environment), so
+//! results are identical to every parallel backend.
+
+use crate::api::conditions::relay_immediate;
+use crate::api::error::FutureError;
+use crate::api::plan::at_depth;
+use crate::backend::{Backend, TaskHandle};
+use crate::ipc::{TaskResult, TaskSpec};
+
+#[derive(Default)]
+pub struct SequentialBackend;
+
+impl SequentialBackend {
+    pub fn new() -> Self {
+        SequentialBackend
+    }
+}
+
+/// A handle that is born resolved.
+pub struct ResolvedHandle {
+    result: Option<TaskResult>,
+}
+
+impl ResolvedHandle {
+    pub fn new(result: TaskResult) -> Self {
+        ResolvedHandle { result: Some(result) }
+    }
+}
+
+impl TaskHandle for ResolvedHandle {
+    fn is_resolved(&mut self) -> bool {
+        true
+    }
+
+    fn wait(&mut self) -> Result<TaskResult, FutureError> {
+        self.result
+            .take()
+            .ok_or_else(|| FutureError::Launch("result already taken".into()))
+    }
+}
+
+impl Backend for SequentialBackend {
+    fn name(&self) -> &'static str {
+        "sequential"
+    }
+
+    fn workers(&self) -> usize {
+        1
+    }
+
+    fn supports_immediate(&self) -> bool {
+        // Same process: progress conditions surface as they are signaled.
+        true
+    }
+
+    fn launch(&self, task: TaskSpec) -> Result<Box<dyn TaskHandle>, FutureError> {
+        // Kernel runtime resolves lazily inside the evaluator on first Call.
+        let kernels = None;
+        let depth = task.opts.depth;
+        // Nested futures created during evaluation see depth + 1, so the
+        // implicit-sequential protection applies beneath us too.
+        let result = at_depth(depth + 1, || {
+            let mut hook = |c: &crate::api::conditions::Condition| relay_immediate(c);
+            crate::worker::execute_task(&task, kernels, Some(&mut hook))
+        });
+        Ok(Box::new(ResolvedHandle::new(result)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::env::Env;
+    use crate::api::expr::Expr;
+    use crate::ipc::{TaskOpts, TaskOutcome};
+    use crate::api::value::Value;
+
+    fn task(expr: Expr) -> TaskSpec {
+        TaskSpec {
+            id: crate::util::uuid_v4(),
+            expr,
+            globals: Env::new(),
+            opts: TaskOpts::default(),
+        }
+    }
+
+    #[test]
+    fn launch_resolves_immediately() {
+        let b = SequentialBackend::new();
+        let mut h = b.launch(task(Expr::add(Expr::lit(1i64), Expr::lit(1i64)))).unwrap();
+        assert!(h.is_resolved());
+        let r = h.wait().unwrap();
+        assert_eq!(r.outcome, TaskOutcome::Ok(Value::I64(2)));
+    }
+
+    #[test]
+    fn wait_is_at_most_once() {
+        let b = SequentialBackend::new();
+        let mut h = b.launch(task(Expr::lit(1i64))).unwrap();
+        h.wait().unwrap();
+        assert!(h.wait().is_err());
+    }
+
+    #[test]
+    fn globals_travel_with_task() {
+        let b = SequentialBackend::new();
+        let mut globals = Env::new();
+        globals.insert("x", 20i64);
+        let t = TaskSpec {
+            id: "g".into(),
+            expr: Expr::add(Expr::var("x"), Expr::lit(2i64)),
+            globals,
+            opts: TaskOpts::default(),
+        };
+        let r = b.launch(t).unwrap().wait().unwrap();
+        assert_eq!(r.outcome, TaskOutcome::Ok(Value::I64(22)));
+    }
+}

@@ -1,0 +1,83 @@
+//! Length-prefixed message framing over any byte transport.
+//!
+//! Frame = `u32 LE length` + payload ([`wire`]-encoded [`Message`]).
+//! Used identically over child-process pipes (multisession), TCP sockets
+//! (cluster), and in tests over in-memory buffers.
+
+use std::io::{Read, Write};
+
+use crate::api::error::FutureError;
+use crate::ipc::wire::{decode_message, encode_message};
+use crate::ipc::Message;
+
+/// Maximum accepted frame (guards against corrupt length prefixes).
+pub const MAX_FRAME: u32 = 1 << 30; // 1 GiB
+
+/// Write one message as a frame and flush.
+pub fn write_message<W: Write>(w: &mut W, msg: &Message) -> Result<(), FutureError> {
+    let payload = encode_message(msg);
+    let len = payload.len() as u32;
+    w.write_all(&len.to_le_bytes())
+        .and_then(|_| w.write_all(&payload))
+        .and_then(|_| w.flush())
+        .map_err(|e| FutureError::Channel(format!("write failed: {e}")))
+}
+
+/// Read one frame, blocking.  `Ok(None)` = clean EOF at a frame boundary.
+pub fn read_message<R: Read>(r: &mut R) -> Result<Option<Message>, FutureError> {
+    let mut len_buf = [0u8; 4];
+    // EOF before any length byte is a clean close; mid-prefix EOF is not.
+    match r.read(&mut len_buf) {
+        Ok(0) => return Ok(None),
+        Ok(n) if n < 4 => {
+            r.read_exact(&mut len_buf[n..])
+                .map_err(|e| FutureError::Channel(format!("truncated frame length: {e}")))?;
+        }
+        Ok(_) => {}
+        Err(e) => return Err(FutureError::Channel(format!("read failed: {e}"))),
+    }
+    let len = u32::from_le_bytes(len_buf);
+    if len > MAX_FRAME {
+        return Err(FutureError::Channel(format!("frame too large: {len} bytes")));
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)
+        .map_err(|e| FutureError::Channel(format!("truncated frame body: {e}")))?;
+    let msg = decode_message(&payload)
+        .map_err(|e| FutureError::Channel(format!("bad frame: {e}")))?;
+    Ok(Some(msg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn roundtrip_over_buffer() {
+        let mut buf = Vec::new();
+        write_message(&mut buf, &Message::Ping).unwrap();
+        write_message(&mut buf, &Message::Shutdown).unwrap();
+        let mut cur = Cursor::new(buf);
+        assert_eq!(read_message(&mut cur).unwrap(), Some(Message::Ping));
+        assert_eq!(read_message(&mut cur).unwrap(), Some(Message::Shutdown));
+        assert_eq!(read_message(&mut cur).unwrap(), None); // clean EOF
+    }
+
+    #[test]
+    fn truncated_body_is_channel_error() {
+        let mut buf = Vec::new();
+        write_message(&mut buf, &Message::Hello { worker_id: "w".into(), version: 1 }).unwrap();
+        buf.truncate(buf.len() - 2);
+        let mut cur = Cursor::new(buf);
+        assert!(matches!(read_message(&mut cur), Err(FutureError::Channel(_))));
+    }
+
+    #[test]
+    fn oversized_length_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(MAX_FRAME + 1).to_le_bytes());
+        let mut cur = Cursor::new(buf);
+        assert!(matches!(read_message(&mut cur), Err(FutureError::Channel(_))));
+    }
+}

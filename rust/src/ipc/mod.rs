@@ -1,0 +1,117 @@
+//! Inter-process plumbing: the task/result message model, a from-scratch
+//! binary wire format ([`wire`] — serde is unavailable offline), and
+//! length-prefixed framing over any `Read`/`Write` transport ([`frame`]).
+//!
+//! Every backend speaks the same protocol: the in-process backends shortcut
+//! the bytes but share the *types*; the multiprocess, cluster, and batch
+//! backends move [`Message`]s over pipes, TCP sockets, and spool files
+//! respectively.
+
+pub mod frame;
+pub mod wire;
+
+use crate::api::conditions::{Captured, Condition};
+use crate::api::env::Env;
+use crate::api::error::EvalError;
+use crate::api::expr::Expr;
+use crate::api::plan::PlanSpec;
+use crate::api::value::Value;
+
+/// Per-task options shipped with the expression (the `future(...)` args).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskOpts {
+    /// `seed = TRUE` analog: base seed for parallel RNG streams.
+    /// `None` = seed not set; RNG use then triggers the misuse warning.
+    pub seed: Option<u64>,
+    /// Which RNG stream this future uses (assigned by creation order, so
+    /// results are reproducible regardless of backend and worker count).
+    pub stream_index: u64,
+    /// Capture standard output on the worker (`stdout = TRUE`).
+    pub capture_stdout: bool,
+    /// Capture conditions on the worker (`conditions = "all"` vs none).
+    pub capture_conditions: bool,
+    /// Human label for traces and error messages.
+    pub label: Option<String>,
+    /// Nesting depth of this future (0 = created in the top-level session).
+    pub depth: u32,
+    /// Remaining plan topology for *nested* futures resolved on the worker
+    /// — the paper's nested-parallelism protection: empty means implicit
+    /// `plan(sequential)`.
+    pub nested_plan: Vec<PlanSpec>,
+}
+
+impl Default for TaskOpts {
+    fn default() -> Self {
+        TaskOpts {
+            seed: None,
+            stream_index: 0,
+            capture_stdout: true,
+            capture_conditions: true,
+            label: None,
+            depth: 0,
+            nested_plan: Vec::new(),
+        }
+    }
+}
+
+/// A fully self-contained unit of work: expression + captured globals +
+/// options.  This is what "a future" is on the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskSpec {
+    pub id: String,
+    pub expr: Expr,
+    pub globals: Env,
+    pub opts: TaskOpts,
+}
+
+/// Worker-side evaluation outcome (wire-encodable `Result`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TaskOutcome {
+    Ok(Value),
+    Err(EvalError),
+}
+
+/// Worker-side timing of one task (drives metrics and Figure-1 traces).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct TaskMetrics {
+    /// Worker wall-clock when evaluation started (ns since UNIX epoch).
+    pub started_ns: u64,
+    /// Worker wall-clock when evaluation finished.
+    pub finished_ns: u64,
+}
+
+impl TaskMetrics {
+    pub fn eval_nanos(&self) -> u64 {
+        self.finished_ns.saturating_sub(self.started_ns)
+    }
+}
+
+/// Everything a resolved future sends home.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskResult {
+    pub id: String,
+    pub outcome: TaskOutcome,
+    pub captured: Captured,
+    pub metrics: TaskMetrics,
+}
+
+/// The worker protocol.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    /// Worker → coordinator on connect: identity + protocol version.
+    Hello { worker_id: String, version: u32 },
+    /// Coordinator → worker: run this task.
+    Task(TaskSpec),
+    /// Worker → coordinator: a live `immediateCondition` (progress).
+    Immediate { task_id: String, condition: Condition },
+    /// Worker → coordinator: task finished.
+    Result(TaskResult),
+    /// Coordinator → worker: exit the event loop.
+    Shutdown,
+    /// Liveness probe (either direction).
+    Ping,
+    Pong,
+}
+
+/// Protocol version — bump on any wire-format change.
+pub const PROTOCOL_VERSION: u32 = 1;

@@ -1,0 +1,949 @@
+//! Binary wire format — the serialization substrate (R's `serialize()`
+//! analog; serde is unavailable in this offline image, so this is a
+//! from-scratch, versioned, tagged little-endian encoding).
+//!
+//! Every type that crosses a process boundary round-trips through
+//! [`Encoder`]/[`Decoder`]: values, expressions, captured globals,
+//! conditions, task specs and results, plan topologies, and the
+//! [`Message`] envelope.  Tags are one byte; lengths are u32 LE; integers
+//! u64/i64 LE; floats IEEE-754 bits.
+
+use crate::api::conditions::{Captured, Condition, ConditionKind};
+use crate::api::env::Env;
+use crate::api::error::EvalError;
+use crate::api::expr::{EmitKind, Expr, PrimOp, RngDist};
+use crate::api::plan::PlanSpec;
+use crate::api::value::{Tensor, Value};
+use crate::ipc::{Message, TaskMetrics, TaskOpts, TaskOutcome, TaskResult, TaskSpec};
+
+/// Decode failure: offset + description (possibly a truncated/corrupt frame).
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[error("wire decode error at byte {offset}: {message}")]
+pub struct WireError {
+    pub offset: usize,
+    pub message: String,
+}
+
+pub struct Encoder {
+    buf: Vec<u8>,
+}
+
+impl Default for Encoder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Encoder {
+    pub fn new() -> Self {
+        Encoder { buf: Vec::with_capacity(256) }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    #[inline]
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    #[inline]
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn i64(&mut self, v: i64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+
+    #[inline]
+    pub fn bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+
+    pub fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn f32_slice(&mut self, data: &[f32]) {
+        self.u32(data.len() as u32);
+        #[cfg(target_endian = "little")]
+        {
+            // §Perf: on LE targets the in-memory f32 layout *is* the wire
+            // layout — one memcpy instead of per-element conversion.
+            let bytes = unsafe {
+                std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+            };
+            self.buf.extend_from_slice(bytes);
+        }
+        #[cfg(not(target_endian = "little"))]
+        {
+            self.buf.reserve(data.len() * 4);
+            for v in data {
+                self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+            }
+        }
+    }
+
+    fn opt_str(&mut self, s: &Option<String>) {
+        match s {
+            Some(s) => {
+                self.bool(true);
+                self.str(s);
+            }
+            None => self.bool(false),
+        }
+    }
+
+    fn opt_u64(&mut self, v: &Option<u64>) {
+        match v {
+            Some(v) => {
+                self.bool(true);
+                self.u64(*v);
+            }
+            None => self.bool(false),
+        }
+    }
+}
+
+pub struct Decoder<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Decoder<'a> {
+    pub fn new(bytes: &'a [u8]) -> Self {
+        Decoder { bytes, pos: 0 }
+    }
+
+    pub fn finished(&self) -> bool {
+        self.pos == self.bytes.len()
+    }
+
+    fn err(&self, msg: &str) -> WireError {
+        WireError { offset: self.pos, message: msg.to_string() }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.pos + n > self.bytes.len() {
+            return Err(self.err(&format!("truncated: need {n} bytes")));
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn i64(&mut self) -> Result<i64, WireError> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn bool(&mut self) -> Result<bool, WireError> {
+        Ok(self.u8()? != 0)
+    }
+
+    pub fn str(&mut self) -> Result<String, WireError> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| self.err("invalid UTF-8"))
+    }
+
+    pub fn f32_slice(&mut self) -> Result<Vec<f32>, WireError> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n * 4)?;
+        #[cfg(target_endian = "little")]
+        {
+            // §Perf: bulk copy + reinterpret (LE wire format == LE memory).
+            let mut out = vec![0f32; n];
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    raw.as_ptr(),
+                    out.as_mut_ptr() as *mut u8,
+                    n * 4,
+                );
+            }
+            Ok(out)
+        }
+        #[cfg(not(target_endian = "little"))]
+        {
+            let mut out = Vec::with_capacity(n);
+            for chunk in raw.chunks_exact(4) {
+                out.push(f32::from_bits(u32::from_le_bytes(chunk.try_into().unwrap())));
+            }
+            Ok(out)
+        }
+    }
+
+    fn opt_str(&mut self) -> Result<Option<String>, WireError> {
+        Ok(if self.bool()? { Some(self.str()?) } else { None })
+    }
+
+    fn opt_u64(&mut self) -> Result<Option<u64>, WireError> {
+        Ok(if self.bool()? { Some(self.u64()?) } else { None })
+    }
+}
+
+// ---------------------------------------------------------------- Value --
+
+pub fn enc_value(e: &mut Encoder, v: &Value) {
+    match v {
+        Value::Unit => e.u8(0),
+        Value::Bool(b) => {
+            e.u8(1);
+            e.bool(*b);
+        }
+        Value::I64(v) => {
+            e.u8(2);
+            e.i64(*v);
+        }
+        Value::F64(v) => {
+            e.u8(3);
+            e.f64(*v);
+        }
+        Value::Str(s) => {
+            e.u8(4);
+            e.str(s);
+        }
+        Value::Tensor(t) => {
+            e.u8(5);
+            e.u32(t.shape.len() as u32);
+            for d in &t.shape {
+                e.u64(*d as u64);
+            }
+            e.f32_slice(&t.data);
+        }
+        Value::List(items) => {
+            e.u8(6);
+            e.u32(items.len() as u32);
+            for item in items {
+                enc_value(e, item);
+            }
+        }
+    }
+}
+
+pub fn dec_value(d: &mut Decoder) -> Result<Value, WireError> {
+    Ok(match d.u8()? {
+        0 => Value::Unit,
+        1 => Value::Bool(d.bool()?),
+        2 => Value::I64(d.i64()?),
+        3 => Value::F64(d.f64()?),
+        4 => Value::Str(d.str()?),
+        5 => {
+            let rank = d.u32()? as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(d.u64()? as usize);
+            }
+            let data = d.f32_slice()?;
+            Value::Tensor(Tensor::new(shape, data).map_err(|m| d.err(&m))?)
+        }
+        6 => {
+            let n = d.u32()? as usize;
+            let mut items = Vec::with_capacity(n);
+            for _ in 0..n {
+                items.push(dec_value(d)?);
+            }
+            Value::List(items)
+        }
+        t => return Err(d.err(&format!("bad Value tag {t}"))),
+    })
+}
+
+// ----------------------------------------------------------------- Expr --
+
+fn prim_tag(op: PrimOp) -> u8 {
+    match op {
+        PrimOp::Add => 0,
+        PrimOp::Sub => 1,
+        PrimOp::Mul => 2,
+        PrimOp::Div => 3,
+        PrimOp::Neg => 4,
+        PrimOp::Lt => 5,
+        PrimOp::Le => 6,
+        PrimOp::Eq => 7,
+        PrimOp::Not => 8,
+        PrimOp::Len => 9,
+        PrimOp::Sum => 10,
+        PrimOp::Mean => 11,
+        PrimOp::Sqrt => 12,
+        PrimOp::Concat => 13,
+    }
+}
+
+fn prim_from(tag: u8, d: &Decoder) -> Result<PrimOp, WireError> {
+    Ok(match tag {
+        0 => PrimOp::Add,
+        1 => PrimOp::Sub,
+        2 => PrimOp::Mul,
+        3 => PrimOp::Div,
+        4 => PrimOp::Neg,
+        5 => PrimOp::Lt,
+        6 => PrimOp::Le,
+        7 => PrimOp::Eq,
+        8 => PrimOp::Not,
+        9 => PrimOp::Len,
+        10 => PrimOp::Sum,
+        11 => PrimOp::Mean,
+        12 => PrimOp::Sqrt,
+        13 => PrimOp::Concat,
+        t => return Err(d.err(&format!("bad PrimOp tag {t}"))),
+    })
+}
+
+fn emit_tag(k: EmitKind) -> u8 {
+    match k {
+        EmitKind::Stdout => 0,
+        EmitKind::Message => 1,
+        EmitKind::Warning => 2,
+        EmitKind::Progress => 3,
+    }
+}
+
+fn emit_from(tag: u8, d: &Decoder) -> Result<EmitKind, WireError> {
+    Ok(match tag {
+        0 => EmitKind::Stdout,
+        1 => EmitKind::Message,
+        2 => EmitKind::Warning,
+        3 => EmitKind::Progress,
+        t => return Err(d.err(&format!("bad EmitKind tag {t}"))),
+    })
+}
+
+fn enc_exprs(e: &mut Encoder, items: &[Expr]) {
+    e.u32(items.len() as u32);
+    for item in items {
+        enc_expr(e, item);
+    }
+}
+
+fn dec_exprs(d: &mut Decoder) -> Result<Vec<Expr>, WireError> {
+    let n = d.u32()? as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(dec_expr(d)?);
+    }
+    Ok(out)
+}
+
+pub fn enc_expr(e: &mut Encoder, expr: &Expr) {
+    match expr {
+        Expr::Lit(v) => {
+            e.u8(0);
+            enc_value(e, v);
+        }
+        Expr::Var(name) => {
+            e.u8(1);
+            e.str(name);
+        }
+        Expr::Let { name, value, body } => {
+            e.u8(2);
+            e.str(name);
+            enc_expr(e, value);
+            enc_expr(e, body);
+        }
+        Expr::Seq(items) => {
+            e.u8(3);
+            enc_exprs(e, items);
+        }
+        Expr::List(items) => {
+            e.u8(4);
+            enc_exprs(e, items);
+        }
+        Expr::Index { list, index } => {
+            e.u8(5);
+            enc_expr(e, list);
+            enc_expr(e, index);
+        }
+        Expr::Call { kernel, args } => {
+            e.u8(6);
+            e.str(kernel);
+            enc_exprs(e, args);
+        }
+        Expr::Prim { op, args } => {
+            e.u8(7);
+            e.u8(prim_tag(*op));
+            enc_exprs(e, args);
+        }
+        Expr::If { cond, then, otherwise } => {
+            e.u8(8);
+            enc_expr(e, cond);
+            enc_expr(e, then);
+            enc_expr(e, otherwise);
+        }
+        Expr::DynLookup(inner) => {
+            e.u8(9);
+            enc_expr(e, inner);
+        }
+        Expr::Emit { kind, message } => {
+            e.u8(10);
+            e.u8(emit_tag(*kind));
+            enc_expr(e, message);
+        }
+        Expr::Stop(inner) => {
+            e.u8(11);
+            enc_expr(e, inner);
+        }
+        Expr::Rng { dist, shape } => {
+            e.u8(12);
+            e.u8(match dist {
+                RngDist::Unif => 0,
+                RngDist::Norm => 1,
+            });
+            e.u32(shape.len() as u32);
+            for d in shape {
+                e.u64(*d as u64);
+            }
+        }
+        Expr::WithRngStream { index, body } => {
+            e.u8(13);
+            e.u64(*index);
+            enc_expr(e, body);
+        }
+        Expr::Spin { millis } => {
+            e.u8(14);
+            e.u64(*millis);
+        }
+        Expr::Sleep { millis } => {
+            e.u8(15);
+            e.u64(*millis);
+        }
+        Expr::Work { iters } => {
+            e.u8(16);
+            e.u64(*iters);
+        }
+    }
+}
+
+pub fn dec_expr(d: &mut Decoder) -> Result<Expr, WireError> {
+    Ok(match d.u8()? {
+        0 => Expr::Lit(dec_value(d)?),
+        1 => Expr::Var(d.str()?),
+        2 => {
+            let name = d.str()?;
+            let value = Box::new(dec_expr(d)?);
+            let body = Box::new(dec_expr(d)?);
+            Expr::Let { name, value, body }
+        }
+        3 => Expr::Seq(dec_exprs(d)?),
+        4 => Expr::List(dec_exprs(d)?),
+        5 => {
+            let list = Box::new(dec_expr(d)?);
+            let index = Box::new(dec_expr(d)?);
+            Expr::Index { list, index }
+        }
+        6 => {
+            let kernel = d.str()?;
+            let args = dec_exprs(d)?;
+            Expr::Call { kernel, args }
+        }
+        7 => {
+            let tag = d.u8()?;
+            let op = prim_from(tag, d)?;
+            let args = dec_exprs(d)?;
+            Expr::Prim { op, args }
+        }
+        8 => {
+            let cond = Box::new(dec_expr(d)?);
+            let then = Box::new(dec_expr(d)?);
+            let otherwise = Box::new(dec_expr(d)?);
+            Expr::If { cond, then, otherwise }
+        }
+        9 => Expr::DynLookup(Box::new(dec_expr(d)?)),
+        10 => {
+            let tag = d.u8()?;
+            let kind = emit_from(tag, d)?;
+            Expr::Emit { kind, message: Box::new(dec_expr(d)?) }
+        }
+        11 => Expr::Stop(Box::new(dec_expr(d)?)),
+        12 => {
+            let dist = match d.u8()? {
+                0 => RngDist::Unif,
+                1 => RngDist::Norm,
+                t => return Err(d.err(&format!("bad RngDist tag {t}"))),
+            };
+            let rank = d.u32()? as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(d.u64()? as usize);
+            }
+            Expr::Rng { dist, shape }
+        }
+        13 => {
+            let index = d.u64()?;
+            Expr::WithRngStream { index, body: Box::new(dec_expr(d)?) }
+        }
+        14 => Expr::Spin { millis: d.u64()? },
+        15 => Expr::Sleep { millis: d.u64()? },
+        16 => Expr::Work { iters: d.u64()? },
+        t => return Err(d.err(&format!("bad Expr tag {t}"))),
+    })
+}
+
+// ------------------------------------------------------------------ Env --
+
+pub fn enc_env(e: &mut Encoder, env: &Env) {
+    let n = env.len();
+    e.u32(n as u32);
+    for (k, v) in env.iter() {
+        e.str(k);
+        enc_value(e, v);
+    }
+}
+
+pub fn dec_env(d: &mut Decoder) -> Result<Env, WireError> {
+    let n = d.u32()? as usize;
+    let mut env = Env::new();
+    for _ in 0..n {
+        let k = d.str()?;
+        let v = dec_value(d)?;
+        env.insert(&k, v);
+    }
+    Ok(env)
+}
+
+// ----------------------------------------------------------- Conditions --
+
+fn cond_kind_tag(k: ConditionKind) -> u8 {
+    match k {
+        ConditionKind::Message => 0,
+        ConditionKind::Warning => 1,
+        ConditionKind::Immediate => 2,
+    }
+}
+
+fn cond_kind_from(tag: u8, d: &Decoder) -> Result<ConditionKind, WireError> {
+    Ok(match tag {
+        0 => ConditionKind::Message,
+        1 => ConditionKind::Warning,
+        2 => ConditionKind::Immediate,
+        t => return Err(d.err(&format!("bad ConditionKind tag {t}"))),
+    })
+}
+
+pub fn enc_condition(e: &mut Encoder, c: &Condition) {
+    e.u8(cond_kind_tag(c.kind));
+    e.str(&c.message);
+    e.u64(c.seq);
+}
+
+pub fn dec_condition(d: &mut Decoder) -> Result<Condition, WireError> {
+    let tag = d.u8()?;
+    let kind = cond_kind_from(tag, d)?;
+    Ok(Condition { kind, message: d.str()?, seq: d.u64()? })
+}
+
+pub fn enc_captured(e: &mut Encoder, c: &Captured) {
+    e.str(&c.stdout);
+    e.u32(c.conditions.len() as u32);
+    for cond in &c.conditions {
+        enc_condition(e, cond);
+    }
+    e.bool(c.rng_used);
+}
+
+pub fn dec_captured(d: &mut Decoder) -> Result<Captured, WireError> {
+    let stdout = d.str()?;
+    let n = d.u32()? as usize;
+    let mut conditions = Vec::with_capacity(n);
+    for _ in 0..n {
+        conditions.push(dec_condition(d)?);
+    }
+    Ok(Captured { stdout, conditions, rng_used: d.bool()? })
+}
+
+// ----------------------------------------------------------- PlanSpec ----
+
+pub fn enc_plan(e: &mut Encoder, p: &PlanSpec) {
+    match p {
+        PlanSpec::Sequential => e.u8(0),
+        PlanSpec::ThreadPool { workers } => {
+            e.u8(1);
+            e.u64(*workers as u64);
+        }
+        PlanSpec::Multiprocess { workers } => {
+            e.u8(2);
+            e.u64(*workers as u64);
+        }
+        PlanSpec::Cluster { hosts } => {
+            e.u8(3);
+            e.u32(hosts.len() as u32);
+            for h in hosts {
+                e.str(h);
+            }
+        }
+        PlanSpec::Batch { workers, submit_latency_ms, poll_interval_ms } => {
+            e.u8(4);
+            e.u64(*workers as u64);
+            e.u64(*submit_latency_ms);
+            e.u64(*poll_interval_ms);
+        }
+        PlanSpec::Custom { name, workers } => {
+            e.u8(5);
+            e.str(name);
+            e.u64(*workers as u64);
+        }
+    }
+}
+
+pub fn dec_plan(d: &mut Decoder) -> Result<PlanSpec, WireError> {
+    Ok(match d.u8()? {
+        0 => PlanSpec::Sequential,
+        1 => PlanSpec::ThreadPool { workers: d.u64()? as usize },
+        2 => PlanSpec::Multiprocess { workers: d.u64()? as usize },
+        3 => {
+            let n = d.u32()? as usize;
+            let mut hosts = Vec::with_capacity(n);
+            for _ in 0..n {
+                hosts.push(d.str()?);
+            }
+            PlanSpec::Cluster { hosts }
+        }
+        4 => PlanSpec::Batch {
+            workers: d.u64()? as usize,
+            submit_latency_ms: d.u64()?,
+            poll_interval_ms: d.u64()?,
+        },
+        5 => PlanSpec::Custom { name: d.str()?, workers: d.u64()? as usize },
+        t => return Err(d.err(&format!("bad PlanSpec tag {t}"))),
+    })
+}
+
+// ----------------------------------------------------------- Task types --
+
+pub fn enc_task_opts(e: &mut Encoder, o: &TaskOpts) {
+    e.opt_u64(&o.seed);
+    e.u64(o.stream_index);
+    e.bool(o.capture_stdout);
+    e.bool(o.capture_conditions);
+    e.opt_str(&o.label);
+    e.u32(o.depth);
+    e.u32(o.nested_plan.len() as u32);
+    for p in &o.nested_plan {
+        enc_plan(e, p);
+    }
+}
+
+pub fn dec_task_opts(d: &mut Decoder) -> Result<TaskOpts, WireError> {
+    let seed = d.opt_u64()?;
+    let stream_index = d.u64()?;
+    let capture_stdout = d.bool()?;
+    let capture_conditions = d.bool()?;
+    let label = d.opt_str()?;
+    let depth = d.u32()?;
+    let n = d.u32()? as usize;
+    let mut nested_plan = Vec::with_capacity(n);
+    for _ in 0..n {
+        nested_plan.push(dec_plan(d)?);
+    }
+    Ok(TaskOpts { seed, stream_index, capture_stdout, capture_conditions, label, depth, nested_plan })
+}
+
+pub fn enc_task(e: &mut Encoder, t: &TaskSpec) {
+    e.str(&t.id);
+    enc_expr(e, &t.expr);
+    enc_env(e, &t.globals);
+    enc_task_opts(e, &t.opts);
+}
+
+pub fn dec_task(d: &mut Decoder) -> Result<TaskSpec, WireError> {
+    Ok(TaskSpec {
+        id: d.str()?,
+        expr: dec_expr(d)?,
+        globals: dec_env(d)?,
+        opts: dec_task_opts(d)?,
+    })
+}
+
+pub fn enc_result(e: &mut Encoder, r: &TaskResult) {
+    e.str(&r.id);
+    match &r.outcome {
+        TaskOutcome::Ok(v) => {
+            e.u8(0);
+            enc_value(e, v);
+        }
+        TaskOutcome::Err(err) => {
+            e.u8(1);
+            e.str(&err.message);
+            e.opt_str(&err.call);
+        }
+    }
+    enc_captured(e, &r.captured);
+    e.u64(r.metrics.started_ns);
+    e.u64(r.metrics.finished_ns);
+}
+
+pub fn dec_result(d: &mut Decoder) -> Result<TaskResult, WireError> {
+    let id = d.str()?;
+    let outcome = match d.u8()? {
+        0 => TaskOutcome::Ok(dec_value(d)?),
+        1 => {
+            let message = d.str()?;
+            let call = d.opt_str()?;
+            TaskOutcome::Err(EvalError { message, call })
+        }
+        t => return Err(d.err(&format!("bad TaskOutcome tag {t}"))),
+    };
+    let captured = dec_captured(d)?;
+    let metrics = TaskMetrics { started_ns: d.u64()?, finished_ns: d.u64()? };
+    Ok(TaskResult { id, outcome, captured, metrics })
+}
+
+// ------------------------------------------------------------- Message --
+
+pub fn encode_message(m: &Message) -> Vec<u8> {
+    let mut e = Encoder::new();
+    match m {
+        Message::Hello { worker_id, version } => {
+            e.u8(0);
+            e.str(worker_id);
+            e.u32(*version);
+        }
+        Message::Task(t) => {
+            e.u8(1);
+            enc_task(&mut e, t);
+        }
+        Message::Immediate { task_id, condition } => {
+            e.u8(2);
+            e.str(task_id);
+            enc_condition(&mut e, condition);
+        }
+        Message::Result(r) => {
+            e.u8(3);
+            enc_result(&mut e, r);
+        }
+        Message::Shutdown => e.u8(4),
+        Message::Ping => e.u8(5),
+        Message::Pong => e.u8(6),
+    }
+    e.into_bytes()
+}
+
+/// Encode a `Message::Task` directly from a reference (§Perf: avoids
+/// cloning large captured globals just to wrap them in the enum).
+pub fn encode_task_message(t: &TaskSpec) -> Vec<u8> {
+    let mut e = Encoder::new();
+    e.u8(1); // Message::Task tag — keep in sync with encode_message
+    enc_task(&mut e, t);
+    e.into_bytes()
+}
+
+pub fn decode_message(bytes: &[u8]) -> Result<Message, WireError> {
+    let mut d = Decoder::new(bytes);
+    let m = match d.u8()? {
+        0 => Message::Hello { worker_id: d.str()?, version: d.u32()? },
+        1 => Message::Task(dec_task(&mut d)?),
+        2 => Message::Immediate { task_id: d.str()?, condition: dec_condition(&mut d)? },
+        3 => Message::Result(dec_result(&mut d)?),
+        4 => Message::Shutdown,
+        5 => Message::Ping,
+        6 => Message::Pong,
+        t => return Err(d.err(&format!("bad Message tag {t}"))),
+    };
+    if !d.finished() {
+        return Err(d.err("trailing bytes in message"));
+    }
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::expr::Expr;
+
+    fn roundtrip_value(v: Value) {
+        let mut e = Encoder::new();
+        enc_value(&mut e, &v);
+        let bytes = e.into_bytes();
+        let mut d = Decoder::new(&bytes);
+        assert_eq!(dec_value(&mut d).unwrap(), v);
+        assert!(d.finished());
+    }
+
+    #[test]
+    fn value_roundtrips() {
+        roundtrip_value(Value::Unit);
+        roundtrip_value(Value::Bool(true));
+        roundtrip_value(Value::I64(-42));
+        roundtrip_value(Value::F64(std::f64::consts::PI));
+        roundtrip_value(Value::Str("héllo\nworld".into()));
+        roundtrip_value(Value::Tensor(Tensor::new(vec![2, 3], vec![1.0; 6]).unwrap()));
+        roundtrip_value(Value::Tensor(Tensor::scalar(7.5)));
+        roundtrip_value(Value::List(vec![
+            Value::I64(1),
+            Value::List(vec![Value::Str("nested".into())]),
+            Value::Unit,
+        ]));
+    }
+
+    #[test]
+    fn expr_roundtrips_every_variant() {
+        let expr = Expr::seq(vec![
+            Expr::let_in(
+                "a",
+                Expr::add(Expr::var("x"), Expr::lit(1.0)),
+                Expr::if_else(
+                    Expr::prim(PrimOp::Lt, vec![Expr::var("a"), Expr::lit(10.0)]),
+                    Expr::call("slow_fcn", vec![Expr::var("a")]),
+                    Expr::stop(Expr::lit("too big")),
+                ),
+            ),
+            Expr::index(Expr::list(vec![Expr::lit(1i64)]), Expr::lit(0i64)),
+            Expr::dyn_lookup(Expr::lit("k")),
+            Expr::cat(Expr::lit("out")),
+            Expr::message(Expr::lit("msg")),
+            Expr::warning(Expr::lit("warn")),
+            Expr::progress(Expr::lit("50%")),
+            Expr::runif(3),
+            Expr::rnorm(2),
+            Expr::with_rng_stream(9, Expr::runif(1)),
+            Expr::Spin { millis: 5 },
+        ]);
+        let mut e = Encoder::new();
+        enc_expr(&mut e, &expr);
+        let bytes = e.into_bytes();
+        let mut d = Decoder::new(&bytes);
+        assert_eq!(dec_expr(&mut d).unwrap(), expr);
+        assert!(d.finished());
+    }
+
+    #[test]
+    fn task_roundtrips() {
+        let mut globals = Env::new();
+        globals.insert("x", Value::Tensor(Tensor::zeros(&[4])));
+        let task = TaskSpec {
+            id: "t-1".into(),
+            expr: Expr::call("slow_fcn", vec![Expr::var("x")]),
+            globals,
+            opts: TaskOpts {
+                seed: Some(42),
+                stream_index: 7,
+                capture_stdout: false,
+                capture_conditions: true,
+                label: Some("my future".into()),
+                depth: 1,
+                nested_plan: vec![PlanSpec::ThreadPool { workers: 3 }, PlanSpec::Sequential],
+            },
+        };
+        let msg = Message::Task(task.clone());
+        let decoded = decode_message(&encode_message(&msg)).unwrap();
+        assert_eq!(decoded, msg);
+    }
+
+    #[test]
+    fn result_roundtrips_both_outcomes() {
+        let ok = TaskResult {
+            id: "a".into(),
+            outcome: TaskOutcome::Ok(Value::F64(1.5)),
+            captured: Captured {
+                stdout: "hello\n".into(),
+                conditions: vec![Condition {
+                    kind: ConditionKind::Warning,
+                    message: "careful".into(),
+                    seq: 0,
+                }],
+                rng_used: true,
+            },
+            metrics: TaskMetrics { started_ns: 10, finished_ns: 30 },
+        };
+        assert_eq!(
+            decode_message(&encode_message(&Message::Result(ok.clone()))).unwrap(),
+            Message::Result(ok)
+        );
+
+        let err = TaskResult {
+            id: "b".into(),
+            outcome: TaskOutcome::Err(EvalError::with_call("boom", "log(x)")),
+            captured: Captured::default(),
+            metrics: TaskMetrics::default(),
+        };
+        assert_eq!(
+            decode_message(&encode_message(&Message::Result(err.clone()))).unwrap(),
+            Message::Result(err)
+        );
+    }
+
+    #[test]
+    fn plan_specs_roundtrip() {
+        for p in [
+            PlanSpec::Sequential,
+            PlanSpec::ThreadPool { workers: 2 },
+            PlanSpec::Multiprocess { workers: 8 },
+            PlanSpec::Cluster { hosts: vec!["n1".into(), "n2".into()] },
+            PlanSpec::Batch { workers: 4, submit_latency_ms: 50, poll_interval_ms: 10 },
+            PlanSpec::Custom { name: "redis".into(), workers: 3 },
+        ] {
+            let mut e = Encoder::new();
+            enc_plan(&mut e, &p);
+            let bytes = e.into_bytes();
+            assert_eq!(dec_plan(&mut Decoder::new(&bytes)).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn control_messages_roundtrip() {
+        for m in [
+            Message::Hello { worker_id: "w1".into(), version: 1 },
+            Message::Shutdown,
+            Message::Ping,
+            Message::Pong,
+            Message::Immediate {
+                task_id: "t".into(),
+                condition: Condition {
+                    kind: ConditionKind::Immediate,
+                    message: "10%".into(),
+                    seq: 3,
+                },
+            },
+        ] {
+            assert_eq!(decode_message(&encode_message(&m)).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn corrupt_bytes_fail_cleanly() {
+        assert!(decode_message(&[]).is_err());
+        assert!(decode_message(&[99]).is_err());
+        // Truncated task message.
+        let msg = Message::Task(TaskSpec {
+            id: "x".into(),
+            expr: Expr::lit(1.0),
+            globals: Env::new(),
+            opts: TaskOpts::default(),
+        });
+        let bytes = encode_message(&msg);
+        assert!(decode_message(&bytes[..bytes.len() - 3]).is_err());
+        // Trailing garbage.
+        let mut extended = bytes.clone();
+        extended.push(0);
+        assert!(decode_message(&extended).is_err());
+    }
+}

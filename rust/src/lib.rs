@@ -1,0 +1,70 @@
+//! # rustures — a unifying framework for parallel and distributed processing using futures
+//!
+//! A production-grade Rust reproduction of Bengtsson's *future* framework
+//! (["A Unifying Framework for Parallel and Distributed Processing in R using
+//! Futures"](https://doi.org/10.32614/RJ-2021-048)).  The paper's *Future API*
+//! is three atomic constructs:
+//!
+//! * [`api::future::future`] — evaluate an expression via a future
+//!   (non-blocking, if a worker is available),
+//! * [`api::future::Future::value`] — the value of the future expression
+//!   (blocking until resolved),
+//! * [`api::future::Future::resolved`] — non-blocking resolution probe,
+//!
+//! bridged to pluggable *backends* chosen by the **end-user** via
+//! [`api::plan::plan`], while the developer only decides **what** to
+//! parallelize.  Cross-cutting services every backend inherits:
+//!
+//! * automatic identification of globals ([`api::globals`]),
+//! * parallel RNG streams — L'Ecuyer-CMRG / MRG32k3a ([`api::rng`]),
+//! * capture + ordered relay of stdout and conditions ([`api::conditions`]),
+//! * an exception taxonomy separating evaluation errors from
+//!   infrastructure [`api::error::FutureError`]s,
+//! * nested-parallelism protection via plan topologies ([`api::plan`]).
+//!
+//! Compute payloads (the paper's `slow_fcn`) are JAX/Pallas programs
+//! AOT-lowered to HLO text and executed through PJRT by [`runtime`] — Python
+//! never runs on the request path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use rustures::prelude::*;
+//!
+//! // End-user decides *how* to parallelize:
+//! plan(PlanSpec::multiprocess(4));
+//!
+//! // Developer decides *what*:
+//! let mut env = Env::new();
+//! env.insert("x", Value::from(21.0));
+//! let f = future(Expr::mul(Expr::var("x"), Expr::lit(2.0)), &env).unwrap();
+//! assert_eq!(f.value().unwrap(), Value::from(42.0));
+//! ```
+
+pub mod api;
+pub mod backend;
+pub mod conformance;
+pub mod ipc;
+pub mod mapreduce;
+pub mod metrics;
+pub mod proptest_lite;
+pub mod runtime;
+pub mod scheduler;
+pub mod util;
+pub mod worker;
+
+/// One-stop imports for examples and downstream users.
+pub mod prelude {
+    pub use crate::api::conditions::{Condition, ConditionKind};
+    pub use crate::api::either::future_either;
+    pub use crate::api::env::Env;
+    pub use crate::api::error::{EvalError, FutureError};
+    pub use crate::api::expr::{Expr, PrimOp};
+    pub use crate::api::future::{future, future_with, Future, FutureOpts};
+    pub use crate::api::lazy::merge_futures;
+    pub use crate::api::plan::{plan, plan_topology, with_plan, PlanSpec};
+    pub use crate::api::promise::ListEnv;
+    pub use crate::api::rng::RngStream;
+    pub use crate::api::value::{Tensor, Value};
+    pub use crate::mapreduce::{future_lapply, future_map, Chunking, LapplyOpts};
+}

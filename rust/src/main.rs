@@ -1,0 +1,153 @@
+//! `rustures` — CLI entrypoint.
+//!
+//! Subcommands:
+//!
+//! * `worker --stdio` — multisession worker: framed protocol on stdin/stdout.
+//! * `worker --connect ADDR` — cluster worker: connect back to the
+//!   coordinator (the simulated-ssh reverse connection).
+//! * `worker --batch-job TASK --out RESULT` — batchtools job: read a task
+//!   file, write a result file, exit.
+//! * `conformance [--backend NAME] [--workers N]` — run the Future API
+//!   conformance suite (future.tests analog) against one or all backends.
+//! * `kernels` — list AOT artifacts loaded by the PJRT runtime.
+//! * `demo` — a tiny end-to-end sanity run on the multisession backend.
+
+use std::io::{stdin, stdout};
+use std::net::TcpStream;
+use std::process::ExitCode;
+
+use rustures::api::plan::PlanSpec;
+use rustures::conformance::run_conformance;
+use rustures::prelude::*;
+use rustures::worker::{run_batch_job, run_worker};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let result = match args.first().map(String::as_str) {
+        Some("worker") => cmd_worker(&args[1..]),
+        Some("conformance") => cmd_conformance(&args[1..]),
+        Some("kernels") => cmd_kernels(),
+        Some("demo") => cmd_demo(),
+        Some("--version") | Some("-V") => {
+            println!("rustures {}", env!("CARGO_PKG_VERSION"));
+            Ok(())
+        }
+        _ => {
+            eprintln!(
+                "usage: rustures <worker|conformance|kernels|demo> [options]\n\
+                 \n\
+                 worker --stdio                        multisession worker over pipes\n\
+                 worker --connect HOST:PORT            cluster worker (reverse connect)\n\
+                 worker --batch-job TASK --out RESULT  batch job execution\n\
+                 conformance [--backend NAME] [--workers N]\n\
+                 kernels                               list loaded PJRT artifacts\n\
+                 demo                                  quick multisession sanity run"
+            );
+            return ExitCode::from(2);
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("rustures: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn flag_value<'a>(args: &'a [String], flag: &str) -> Option<&'a str> {
+    args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1)).map(String::as_str)
+}
+
+fn cmd_worker(args: &[String]) -> Result<(), String> {
+    // Runtime loads lazily inside the evaluator on first kernel call.
+    let kernels = None;
+    if args.iter().any(|a| a == "--stdio") {
+        run_worker(stdin().lock(), stdout().lock(), kernels).map_err(|e| e.to_string())
+    } else if let Some(addr) = flag_value(args, "--connect") {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| format!("connect {addr}: {e}"))?;
+        stream.set_nodelay(true).ok();
+        let reader = stream.try_clone().map_err(|e| e.to_string())?;
+        run_worker(reader, stream, kernels).map_err(|e| e.to_string())
+    } else if let Some(task) = flag_value(args, "--batch-job") {
+        let out = flag_value(args, "--out").ok_or("worker --batch-job requires --out")?;
+        run_batch_job(task.as_ref(), out.as_ref(), kernels).map_err(|e| e.to_string())
+    } else {
+        Err("worker requires --stdio, --connect, or --batch-job".into())
+    }
+}
+
+fn backend_specs(name: Option<&str>, workers: usize) -> Result<Vec<PlanSpec>, String> {
+    let all = vec![
+        PlanSpec::sequential(),
+        PlanSpec::multicore(workers),
+        PlanSpec::multiprocess(workers),
+        PlanSpec::Cluster {
+            hosts: (1..=workers.max(1)).map(|i| format!("n{i}.local")).collect(),
+        },
+        PlanSpec::batch(workers),
+    ];
+    match name {
+        None => Ok(all),
+        Some(n) => {
+            let found: Vec<PlanSpec> =
+                all.into_iter().filter(|s| s.name() == n).collect();
+            if found.is_empty() {
+                Err(format!("unknown backend '{n}' (sequential, multicore, multisession, cluster, batchtools)"))
+            } else {
+                Ok(found)
+            }
+        }
+    }
+}
+
+fn cmd_conformance(args: &[String]) -> Result<(), String> {
+    let workers: usize =
+        flag_value(args, "--workers").map(|w| w.parse().unwrap_or(2)).unwrap_or(2);
+    let specs = backend_specs(flag_value(args, "--backend"), workers)?;
+    let mut all_passed = true;
+    for spec in specs {
+        let report = run_conformance(spec);
+        println!("== {}", report.summary());
+        for r in &report.results {
+            println!(
+                "   [{}] {:<22} {:>8.1?}  {}",
+                if r.passed { "ok" } else { "FAIL" },
+                r.name,
+                r.elapsed,
+                r.detail
+            );
+        }
+        all_passed &= report.passed();
+    }
+    if all_passed {
+        Ok(())
+    } else {
+        Err("conformance failures".into())
+    }
+}
+
+fn cmd_kernels() -> Result<(), String> {
+    match rustures::runtime::global() {
+        Some(rt) => {
+            for name in rt.handle().kernel_names() {
+                println!("{name}");
+            }
+            Ok(())
+        }
+        None => Err("no PJRT runtime (run `make artifacts` or set RUSTURES_ARTIFACTS)".into()),
+    }
+}
+
+fn cmd_demo() -> Result<(), String> {
+    plan(PlanSpec::multiprocess(2));
+    let mut env = Env::new();
+    env.insert("x", 21i64);
+    let f = future(Expr::mul(Expr::var("x"), Expr::lit(2i64)), &env)
+        .map_err(|e| e.to_string())?;
+    let v = f.value().map_err(|e| e.to_string())?;
+    println!("future(x * 2) on multisession → {v}");
+    plan(PlanSpec::sequential());
+    Ok(())
+}

@@ -1,0 +1,146 @@
+//! A `foreach(...) %dopar% { ... }` adaptor — the `doFuture` analog.
+//!
+//! `foreach` separates the loop construct from the backend; `doFuture`
+//! bridges it onto futures so *any* future backend works.  This builder
+//! reproduces that surface: iterate a variable over values, evaluate a body
+//! per element on the current plan, and `.combine` the results.
+
+use crate::api::env::Env;
+use crate::api::error::FutureError;
+use crate::api::expr::Expr;
+use crate::api::value::Value;
+use crate::mapreduce::{future_lapply, LapplyOpts};
+
+/// `.combine=` reduction modes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Combine {
+    /// Collect into a list (foreach's default).
+    #[default]
+    List,
+    /// `.combine = c` over numbers: flatten to a numeric vector (list).
+    Concat,
+    /// `.combine = "+"`.
+    Sum,
+    /// `.combine = max`.
+    Max,
+}
+
+/// The `foreach(x = xs)` builder.
+pub struct Foreach<'e> {
+    env: &'e Env,
+    param: String,
+    values: Vec<Value>,
+    combine: Combine,
+    opts: LapplyOpts,
+}
+
+/// Entry point: `foreach("x", xs, &env)`.
+pub fn foreach<'e>(param: &str, values: Vec<Value>, env: &'e Env) -> Foreach<'e> {
+    Foreach { env, param: param.to_string(), values, combine: Combine::List, opts: LapplyOpts::new() }
+}
+
+impl<'e> Foreach<'e> {
+    /// `.combine=` argument.
+    pub fn combine(mut self, combine: Combine) -> Self {
+        self.combine = combine;
+        self
+    }
+
+    /// `%seed%` / `.options.future(seed=)`.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.opts = self.opts.seed(seed);
+        self
+    }
+
+    /// `%dopar% { body }` — run on the current plan and combine.
+    pub fn dopar(self, body: Expr) -> Result<Value, FutureError> {
+        let items = future_lapply(&self.values, &self.param, &body, self.env, &self.opts)?;
+        Ok(match self.combine {
+            Combine::List | Combine::Concat => Value::List(items),
+            Combine::Sum => {
+                let mut total = 0.0;
+                for v in &items {
+                    total += v.as_f64().ok_or_else(|| {
+                        FutureError::Eval(crate::api::error::EvalError::new(
+                            "combine '+': non-numeric result",
+                        ))
+                    })?;
+                }
+                Value::F64(total)
+            }
+            Combine::Max => {
+                let mut best = f64::NEG_INFINITY;
+                for v in &items {
+                    best = best.max(v.as_f64().ok_or_else(|| {
+                        FutureError::Eval(crate::api::error::EvalError::new(
+                            "combine max: non-numeric result",
+                        ))
+                    })?);
+                }
+                Value::F64(best)
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::plan::{with_plan, PlanSpec};
+
+    fn nums(n: i64) -> Vec<Value> {
+        (0..n).map(Value::I64).collect()
+    }
+
+    #[test]
+    fn dopar_list_combine() {
+        with_plan(PlanSpec::multicore(2), || {
+            let env = Env::new();
+            let out = foreach("x", nums(5), &env)
+                .dopar(Expr::mul(Expr::var("x"), Expr::lit(2i64)))
+                .unwrap();
+            assert_eq!(
+                out,
+                Value::List((0..5).map(|i| Value::I64(i * 2)).collect())
+            );
+        });
+    }
+
+    #[test]
+    fn dopar_sum_combine() {
+        with_plan(PlanSpec::sequential(), || {
+            let env = Env::new();
+            let out = foreach("x", nums(5), &env)
+                .combine(Combine::Sum)
+                .dopar(Expr::var("x"))
+                .unwrap();
+            assert_eq!(out, Value::F64(10.0));
+        });
+    }
+
+    #[test]
+    fn dopar_max_combine() {
+        with_plan(PlanSpec::sequential(), || {
+            let env = Env::new();
+            let out = foreach("x", nums(7), &env)
+                .combine(Combine::Max)
+                .dopar(Expr::var("x"))
+                .unwrap();
+            assert_eq!(out, Value::F64(6.0));
+        });
+    }
+
+    #[test]
+    fn seeded_foreach_is_reproducible() {
+        with_plan(PlanSpec::multicore(2), || {
+            let env = Env::new();
+            let run = || {
+                foreach("x", nums(4), &env)
+                    .seed(99)
+                    .dopar(Expr::runif(1))
+                    .unwrap()
+            };
+            assert_eq!(run(), run());
+        });
+    }
+}

@@ -1,0 +1,323 @@
+//! Higher-level map-reduce frontends built on the three atomic constructs —
+//! the `future.apply` / `furrr` / `doFuture` layer.
+//!
+//! "This minimal API provides sufficient constructs for implementing
+//! parallel versions of well-established, high-level map-reduce APIs."
+//! The key service here is **load balancing**: elements are partitioned into
+//! chunks (typically one per worker) so per-future overhead is amortized,
+//! while per-element RNG substreams keep results *invariant to chunking*.
+
+pub mod foreach;
+
+use std::ops::Range;
+
+use crate::api::env::Env;
+use crate::api::error::FutureError;
+use crate::api::expr::Expr;
+use crate::api::future::{future_with, Future, FutureOpts};
+use crate::api::plan::backend_for_current_depth;
+use crate::api::value::Value;
+
+/// Chunking policy (future.apply's `scheduling`/`chunk.size` arguments).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Chunking {
+    /// One future per element (no load balancing — the naive pattern the
+    /// paper's footnote 6 calls suboptimal for cheap elements).
+    PerElement,
+    /// One chunk per worker (the default; `scheduling = 1.0`).
+    PerWorker,
+    /// `scheduling = f`: about `f` chunks per worker (f ≥ 1 trades
+    /// balance against overhead).
+    Scheduling(f64),
+    /// Fixed elements per chunk (`chunk.size`).
+    ChunkSize(usize),
+}
+
+impl Default for Chunking {
+    fn default() -> Self {
+        Chunking::PerWorker
+    }
+}
+
+/// Options for [`future_lapply`]/[`future_map`].
+#[derive(Debug, Clone, Default)]
+pub struct LapplyOpts {
+    /// Parallel-RNG base seed (`future.seed = TRUE` analog).  Per-element
+    /// substreams make results identical for every chunking and backend.
+    pub seed: Option<u64>,
+    pub chunking: Chunking,
+    /// Capture stdout/conditions on workers (off for throughput benches).
+    pub capture: bool,
+    pub label: Option<String>,
+}
+
+impl LapplyOpts {
+    pub fn new() -> Self {
+        LapplyOpts { capture: true, ..Default::default() }
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+
+    pub fn chunking(mut self, chunking: Chunking) -> Self {
+        self.chunking = chunking;
+        self
+    }
+
+    pub fn no_capture(mut self) -> Self {
+        self.capture = false;
+        self
+    }
+}
+
+/// Partition `n` elements into `chunks` contiguous ranges whose sizes
+/// differ by at most one (cover, disjoint, balanced — property-tested).
+pub fn partition(n: usize, chunks: usize) -> Vec<Range<usize>> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let chunks = chunks.clamp(1, n);
+    let base = n / chunks;
+    let extra = n % chunks;
+    let mut out = Vec::with_capacity(chunks);
+    let mut start = 0;
+    for i in 0..chunks {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Number of chunks for a policy given `n` elements and `workers`.
+pub fn chunk_count(n: usize, workers: usize, chunking: Chunking) -> usize {
+    if n == 0 {
+        return 0;
+    }
+    match chunking {
+        Chunking::PerElement => n,
+        Chunking::PerWorker => workers.max(1),
+        Chunking::Scheduling(f) => ((workers.max(1) as f64 * f.max(0.0)).round() as usize).max(1),
+        Chunking::ChunkSize(sz) => n.div_ceil(sz.max(1)),
+    }
+    .min(n)
+}
+
+/// Parallel `lapply()`: evaluate `body` once per element of `xs`, with the
+/// element bound to `param`, returning values in input order.
+///
+/// This is `future.apply::future_lapply()`: chunks are built per the policy,
+/// each chunk becomes one future, and with `seed` set each *element* gets
+/// RNG substream `i` so the result is identical under any chunking, backend,
+/// or worker count.
+pub fn future_lapply(
+    xs: &[Value],
+    param: &str,
+    body: &Expr,
+    env: &Env,
+    opts: &LapplyOpts,
+) -> Result<Vec<Value>, FutureError> {
+    let futures = lapply_futures(xs, param, body, env, opts)?;
+    let mut out = Vec::with_capacity(xs.len());
+    for f in &futures {
+        match f.value()? {
+            Value::List(items) => out.extend(items),
+            other => out.push(other),
+        }
+    }
+    Ok(out)
+}
+
+/// The launch half of [`future_lapply`] — returns the chunk futures without
+/// collecting (lets callers interleave work or poll with `resolved()`).
+pub fn lapply_futures(
+    xs: &[Value],
+    param: &str,
+    body: &Expr,
+    env: &Env,
+    opts: &LapplyOpts,
+) -> Result<Vec<Future>, FutureError> {
+    if xs.is_empty() {
+        return Ok(Vec::new());
+    }
+    let (backend, _) = backend_for_current_depth()?;
+    let workers = backend.workers();
+    let n_chunks = chunk_count(xs.len(), workers, opts.chunking);
+
+    let mut futures = Vec::with_capacity(n_chunks);
+    for (ci, range) in partition(xs.len(), n_chunks).into_iter().enumerate() {
+        let elements: Vec<Expr> = range
+            .clone()
+            .map(|i| {
+                let bound = Expr::let_in(param, Expr::Lit(xs[i].clone()), body.clone());
+                if opts.seed.is_some() {
+                    // Per-element substream: chunking-invariant RNG.
+                    Expr::with_rng_stream(i as u64, bound)
+                } else {
+                    bound
+                }
+            })
+            .collect();
+        let chunk_expr = Expr::list(elements);
+        let mut fopts = FutureOpts::new();
+        fopts.seed = opts.seed;
+        fopts.stdout = opts.capture;
+        fopts.conditions = opts.capture;
+        fopts.label = Some(match &opts.label {
+            Some(l) => format!("{l}[chunk {ci}]"),
+            None => format!("lapply[chunk {ci}]"),
+        });
+        futures.push(future_with(chunk_expr, env, fopts)?);
+    }
+    Ok(futures)
+}
+
+/// `furrr::future_map()`: build each element's expression with a closure
+/// over the element literal.
+pub fn future_map(
+    xs: &[Value],
+    f: impl Fn(Expr) -> Expr,
+    env: &Env,
+    opts: &LapplyOpts,
+) -> Result<Vec<Value>, FutureError> {
+    // Desugar to lapply with a reserved parameter name.
+    const PARAM: &str = ".x";
+    let body = f(Expr::var(PARAM));
+    future_lapply(xs, PARAM, &body, env, opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::plan::{with_plan, PlanSpec};
+
+    fn xs(n: usize) -> Vec<Value> {
+        (0..n).map(|i| Value::I64(i as i64)).collect()
+    }
+
+    #[test]
+    fn partition_covers_disjoint_balanced() {
+        for n in [1usize, 2, 7, 10, 100] {
+            for c in [1usize, 2, 3, 7, 100] {
+                let parts = partition(n, c);
+                // cover + disjoint
+                let mut all = Vec::new();
+                for r in &parts {
+                    all.extend(r.clone());
+                }
+                assert_eq!(all, (0..n).collect::<Vec<_>>(), "n={n} c={c}");
+                // balanced
+                let sizes: Vec<usize> = parts.iter().map(|r| r.len()).collect();
+                let (min, max) =
+                    (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                assert!(max - min <= 1, "n={n} c={c} sizes={sizes:?}");
+            }
+        }
+        assert!(partition(0, 4).is_empty());
+    }
+
+    #[test]
+    fn chunk_count_policies() {
+        assert_eq!(chunk_count(10, 4, Chunking::PerElement), 10);
+        assert_eq!(chunk_count(10, 4, Chunking::PerWorker), 4);
+        assert_eq!(chunk_count(10, 4, Chunking::Scheduling(2.0)), 8);
+        assert_eq!(chunk_count(10, 4, Chunking::ChunkSize(3)), 4);
+        assert_eq!(chunk_count(3, 8, Chunking::PerWorker), 3); // never > n
+        assert_eq!(chunk_count(0, 4, Chunking::PerWorker), 0);
+    }
+
+    #[test]
+    fn lapply_matches_sequential_map() {
+        with_plan(PlanSpec::multicore(2), || {
+            let env = Env::new();
+            let body = Expr::mul(Expr::var("x"), Expr::var("x"));
+            let got = future_lapply(&xs(10), "x", &body, &env, &LapplyOpts::new()).unwrap();
+            let want: Vec<Value> = (0..10).map(|i| Value::I64(i * i)).collect();
+            assert_eq!(got, want);
+        });
+    }
+
+    #[test]
+    fn lapply_uses_outer_globals() {
+        with_plan(PlanSpec::sequential(), || {
+            let mut env = Env::new();
+            env.insert("offset", 100i64);
+            let body = Expr::add(Expr::var("x"), Expr::var("offset"));
+            let got = future_lapply(&xs(3), "x", &body, &env, &LapplyOpts::new()).unwrap();
+            assert_eq!(got, vec![Value::I64(100), Value::I64(101), Value::I64(102)]);
+        });
+    }
+
+    #[test]
+    fn chunking_does_not_change_results_with_seed() {
+        with_plan(PlanSpec::multicore(2), || {
+            let env = Env::new();
+            let body = Expr::runif(2);
+            let a = future_lapply(
+                &xs(8),
+                "x",
+                &body,
+                &env,
+                &LapplyOpts::new().seed(42).chunking(Chunking::PerElement),
+            )
+            .unwrap();
+            let b = future_lapply(
+                &xs(8),
+                "x",
+                &body,
+                &env,
+                &LapplyOpts::new().seed(42).chunking(Chunking::ChunkSize(4)),
+            )
+            .unwrap();
+            let c = future_lapply(
+                &xs(8),
+                "x",
+                &body,
+                &env,
+                &LapplyOpts::new().seed(42).chunking(Chunking::PerWorker),
+            )
+            .unwrap();
+            assert_eq!(a, b);
+            assert_eq!(b, c);
+        });
+    }
+
+    #[test]
+    fn future_map_is_lapply_sugar() {
+        with_plan(PlanSpec::sequential(), || {
+            let env = Env::new();
+            let got =
+                future_map(&xs(4), |x| Expr::add(x, Expr::lit(1i64)), &env, &LapplyOpts::new())
+                    .unwrap();
+            assert_eq!(got, vec![Value::I64(1), Value::I64(2), Value::I64(3), Value::I64(4)]);
+        });
+    }
+
+    #[test]
+    fn empty_input_yields_empty_output() {
+        with_plan(PlanSpec::sequential(), || {
+            let env = Env::new();
+            let got =
+                future_lapply(&[], "x", &Expr::var("x"), &env, &LapplyOpts::new()).unwrap();
+            assert!(got.is_empty());
+        });
+    }
+
+    #[test]
+    fn eval_error_in_element_propagates() {
+        with_plan(PlanSpec::sequential(), || {
+            let env = Env::new();
+            let body = Expr::if_else(
+                Expr::prim(crate::api::expr::PrimOp::Eq, vec![Expr::var("x"), Expr::lit(2i64)]),
+                Expr::stop(Expr::lit("element 2 failed")),
+                Expr::var("x"),
+            );
+            let err =
+                future_lapply(&xs(4), "x", &body, &env, &LapplyOpts::new()).unwrap_err();
+            assert!(err.is_eval());
+            assert!(err.to_string().contains("element 2 failed"));
+        });
+    }
+}

@@ -1,0 +1,117 @@
+//! Per-future lifecycle instrumentation.
+//!
+//! Drives the Figure-1 schedule trace (`examples/figure1_trace.rs`) and the
+//! overhead benchmarks: each future records timestamped lifecycle events
+//! (create → launch → resolved → collect), and a process-global trace log
+//! collects them for later rendering.
+
+use std::sync::{Arc, Mutex};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+fn now_ns() -> u64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default().as_nanos() as u64
+}
+
+/// Timestamped lifecycle events of one future.
+#[derive(Debug)]
+pub struct FutureTrace {
+    pub id: String,
+    pub label: Option<String>,
+    pub backend: &'static str,
+    pub created_ns: u64,
+    events: Mutex<Vec<(String, u64)>>,
+}
+
+impl FutureTrace {
+    pub fn new(id: &str, label: Option<&str>, backend: &'static str, created_ns: u64) -> Self {
+        FutureTrace {
+            id: id.to_string(),
+            label: label.map(str::to_string),
+            backend,
+            created_ns,
+            events: Mutex::new(vec![("create".to_string(), created_ns)]),
+        }
+    }
+
+    pub fn events(&self) -> Vec<(String, u64)> {
+        self.events.lock().unwrap().clone()
+    }
+
+    /// Timestamp of the first event with this name, if recorded.
+    pub fn event_ns(&self, name: &str) -> Option<u64> {
+        self.events.lock().unwrap().iter().find(|(n, _)| n == name).map(|(_, t)| *t)
+    }
+}
+
+/// Append a lifecycle event and mirror it into the session log (if enabled).
+pub fn record_event(trace: &Arc<FutureTrace>, name: &str) {
+    let t = now_ns();
+    trace.events.lock().unwrap().push((name.to_string(), t));
+    let log = SESSION_LOG.lock().unwrap();
+    if let Some(log) = &*log {
+        log.lock().unwrap().push(TraceEvent {
+            future_id: trace.id.clone(),
+            label: trace.label.clone(),
+            event: name.to_string(),
+            at_ns: t,
+        });
+    }
+}
+
+/// One row of the session trace log.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub future_id: String,
+    pub label: Option<String>,
+    pub event: String,
+    pub at_ns: u64,
+}
+
+type Log = Arc<Mutex<Vec<TraceEvent>>>;
+static SESSION_LOG: Mutex<Option<Log>> = Mutex::new(None);
+
+/// Start collecting a session trace; returns the live log handle.
+pub fn start_session_trace() -> Log {
+    let log: Log = Arc::new(Mutex::new(Vec::new()));
+    *SESSION_LOG.lock().unwrap() = Some(Arc::clone(&log));
+    log
+}
+
+/// Stop collecting and detach.
+pub fn stop_session_trace() {
+    *SESSION_LOG.lock().unwrap() = None;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_records_events_in_order() {
+        let t = Arc::new(FutureTrace::new("f1", Some("lbl"), "sequential", now_ns()));
+        record_event(&t, "launch");
+        record_event(&t, "resolved");
+        let events = t.events();
+        assert_eq!(events.len(), 3);
+        assert_eq!(events[0].0, "create");
+        assert_eq!(events[1].0, "launch");
+        assert_eq!(events[2].0, "resolved");
+        assert!(events[2].1 >= events[1].1);
+        assert!(t.event_ns("launch").is_some());
+        assert!(t.event_ns("nope").is_none());
+    }
+
+    #[test]
+    fn session_log_collects_across_futures() {
+        let log = start_session_trace();
+        let t1 = Arc::new(FutureTrace::new("a", None, "sequential", now_ns()));
+        let t2 = Arc::new(FutureTrace::new("b", None, "sequential", now_ns()));
+        record_event(&t1, "launch");
+        record_event(&t2, "launch");
+        stop_session_trace();
+        record_event(&t1, "after-stop");
+        let rows = log.lock().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert!(rows.iter().all(|r| r.event == "launch"));
+    }
+}

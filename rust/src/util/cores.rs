@@ -1,0 +1,97 @@
+//! `availableCores()` — the paper's well-behaved alternative to
+//! `parallel::detectCores()`.
+//!
+//! The paper (section "Results") stresses that defaulting to *all* detected
+//! cores "wreaks havoc on multi-tenant compute systems"; `availableCores()`
+//! instead respects every known option/environment variable that limits
+//! parallelism (job-scheduler allocations, container quotas, explicit user
+//! settings) and only then falls back to the detected count.
+
+use std::env;
+
+/// Environment variables consulted, most specific first.  Mirrors
+/// `parallelly::availableCores()`'s documented lookup order, adapted to this
+/// runtime's names plus the standard scheduler variables.
+const ENV_VARS: &[&str] = &[
+    "RUSTURES_NUM_WORKERS",   // this framework's own override
+    "R_FUTURE_AVAILABLECORES_FALLBACK_OVERRIDE", // test hook
+    "SLURM_CPUS_PER_TASK",    // Slurm allocation
+    "NSLOTS",                 // SGE
+    "PBS_NUM_PPN",            // Torque/PBS
+    "OMP_NUM_THREADS",        // OpenMP convention
+    "MC_CORES",               // R's mc.cores convention
+];
+
+/// Number of parallel workers this process should use.
+///
+/// Returns the first parseable positive value among [`ENV_VARS`], otherwise
+/// the detected hardware parallelism, and never less than 1.
+pub fn available_cores() -> usize {
+    for var in ENV_VARS {
+        if let Ok(v) = env::var(var) {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                if n >= 1 {
+                    return n;
+                }
+            }
+        }
+    }
+    detect_cores()
+}
+
+/// Raw detected hardware parallelism (the `detectCores()` analog — use
+/// [`available_cores`] instead in defaults).
+pub fn detect_cores() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    // Env mutation is process-global; serialize these tests.
+    static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+    fn clear_all() {
+        for v in ENV_VARS {
+            env::remove_var(v);
+        }
+    }
+
+    #[test]
+    fn returns_at_least_one() {
+        let _g = ENV_LOCK.lock().unwrap();
+        clear_all();
+        assert!(available_cores() >= 1);
+    }
+
+    #[test]
+    fn respects_own_override_first() {
+        let _g = ENV_LOCK.lock().unwrap();
+        clear_all();
+        env::set_var("SLURM_CPUS_PER_TASK", "8");
+        env::set_var("RUSTURES_NUM_WORKERS", "3");
+        assert_eq!(available_cores(), 3);
+        clear_all();
+    }
+
+    #[test]
+    fn respects_scheduler_allocation() {
+        let _g = ENV_LOCK.lock().unwrap();
+        clear_all();
+        env::set_var("SLURM_CPUS_PER_TASK", "5");
+        assert_eq!(available_cores(), 5);
+        clear_all();
+    }
+
+    #[test]
+    fn ignores_unparseable_and_zero() {
+        let _g = ENV_LOCK.lock().unwrap();
+        clear_all();
+        env::set_var("RUSTURES_NUM_WORKERS", "zero");
+        env::set_var("MC_CORES", "0");
+        assert!(available_cores() >= 1);
+        clear_all();
+    }
+}

@@ -1,0 +1,62 @@
+//! Locate the `rustures` binary for spawning worker processes.
+//!
+//! Test/bench/example binaries live under `target/<profile>/{deps,examples}`
+//! while the coordinator binary is `target/<profile>/rustures`; workers are
+//! re-executions of that binary with the `worker` subcommand (the analog of
+//! `Rscript -e 'parallel:::.workRSOCK()'` in the paper's PSOCK setup).
+
+use std::path::PathBuf;
+
+use crate::api::error::FutureError;
+
+/// Path to the worker executable: `$RUSTURES_WORKER_EXE`, the current
+/// executable if it *is* `rustures`, or `rustures` next to / above the
+/// current executable (deps/examples directories).
+pub fn worker_exe() -> Result<PathBuf, FutureError> {
+    if let Ok(p) = std::env::var("RUSTURES_WORKER_EXE") {
+        let p = PathBuf::from(p);
+        if p.exists() {
+            return Ok(p);
+        }
+        return Err(FutureError::Launch(format!(
+            "RUSTURES_WORKER_EXE={} does not exist",
+            p.display()
+        )));
+    }
+    let exe = std::env::current_exe()
+        .map_err(|e| FutureError::Launch(format!("current_exe: {e}")))?;
+    let name = |p: &PathBuf| {
+        p.file_stem().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default()
+    };
+    if name(&exe) == "rustures" {
+        return Ok(exe);
+    }
+    let mut dir = exe.parent().map(PathBuf::from);
+    for _ in 0..3 {
+        let Some(d) = dir else { break };
+        let candidate = d.join("rustures");
+        if candidate.exists() {
+            return Ok(candidate);
+        }
+        dir = d.parent().map(PathBuf::from);
+    }
+    Err(FutureError::Launch(
+        "cannot locate the 'rustures' worker binary; build it (cargo build) or set \
+         RUSTURES_WORKER_EXE"
+            .into(),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn explicit_env_missing_path_errors() {
+        // Use a scoped fake; other tests don't set this var.
+        std::env::set_var("RUSTURES_WORKER_EXE", "/definitely/not/here");
+        let err = worker_exe().unwrap_err();
+        assert!(err.to_string().contains("does not exist"));
+        std::env::remove_var("RUSTURES_WORKER_EXE");
+    }
+}

@@ -1,0 +1,10 @@
+//! Support substrates: a minimal JSON parser (no serde on this image), UUIDs,
+//! and the `availableCores()` environment-variable discipline from the paper.
+
+pub mod cores;
+pub mod exe;
+pub mod json;
+pub mod uuid;
+
+pub use cores::available_cores;
+pub use uuid::uuid_v4;

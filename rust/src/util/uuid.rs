@@ -1,0 +1,60 @@
+//! UUIDs for futures and jobs (the paper's framework uses `digest`-derived
+//! UUIDs; we derive v4-format ids from OS entropy + a counter).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+static COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// A v4-format UUID string, unique within and across processes
+/// (time + pid + counter mixed through splitmix64).
+pub fn uuid_v4() -> String {
+    let c = COUNTER.fetch_add(1, Ordering::Relaxed);
+    let t = SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default();
+    let seed = t.as_nanos() as u64 ^ (std::process::id() as u64) << 32 ^ c;
+    let a = splitmix64(seed);
+    let b = splitmix64(a);
+    let bytes = [a.to_le_bytes(), b.to_le_bytes()].concat();
+    format!(
+        "{:02x}{:02x}{:02x}{:02x}-{:02x}{:02x}-4{:01x}{:02x}-{:02x}{:02x}-{:02x}{:02x}{:02x}{:02x}{:02x}{:02x}",
+        bytes[0], bytes[1], bytes[2], bytes[3],
+        bytes[4], bytes[5],
+        bytes[6] & 0x0f, bytes[7],
+        (bytes[8] & 0x3f) | 0x80, bytes[9],
+        bytes[10], bytes[11], bytes[12], bytes[13], bytes[14], bytes[15],
+    )
+}
+
+/// splitmix64 — also used to expand user seeds into RNG state.
+pub fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e3779b97f4a7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d049bb133111eb);
+    x ^ (x >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn uuids_are_unique() {
+        let set: HashSet<String> = (0..1000).map(|_| uuid_v4()).collect();
+        assert_eq!(set.len(), 1000);
+    }
+
+    #[test]
+    fn uuid_format() {
+        let u = uuid_v4();
+        assert_eq!(u.len(), 36);
+        assert_eq!(u.matches('-').count(), 4);
+        assert_eq!(&u[14..15], "4"); // version nibble
+    }
+
+    #[test]
+    fn splitmix_is_deterministic() {
+        assert_eq!(splitmix64(42), splitmix64(42));
+        assert_ne!(splitmix64(42), splitmix64(43));
+    }
+}

@@ -1,0 +1,670 @@
+//! The expression evaluator — what a worker does to resolve a future.
+//!
+//! Evaluates an [`Expr`] against the captured globals, with local `Let`
+//! scopes, R-flavored error messages, RNG-stream semantics, condition
+//! capture, and compiled-kernel dispatch through the PJRT runtime handle.
+
+use crate::api::conditions::{CaptureBuffer, Condition, ConditionKind};
+use crate::api::env::Env;
+use crate::api::error::EvalError;
+use crate::api::expr::{EmitKind, Expr, PrimOp, RngDist};
+use crate::api::rng::RngStream;
+use crate::api::value::{Tensor, Value};
+use crate::runtime::RuntimeHandle;
+
+/// RNG context for one task.
+pub struct RngCtx {
+    /// `seed = TRUE` base seed; `None` means seed not set.
+    seed: Option<u64>,
+    /// Stream currently installed (lazily created on first draw).
+    current: Option<RngStream>,
+    /// Stream index for lazy creation.
+    stream_index: u64,
+}
+
+impl RngCtx {
+    pub fn new(seed: Option<u64>, stream_index: u64) -> Self {
+        RngCtx { seed, current: None, stream_index }
+    }
+
+    fn stream(&mut self) -> &mut RngStream {
+        if self.current.is_none() {
+            let s = match self.seed {
+                Some(seed) => RngStream::nth_stream(seed, self.stream_index),
+                // Unseeded: nondeterministic fallback (and the caller flags
+                // the paper's "UnexpectedRandomNumbers" warning).
+                None => {
+                    let t = std::time::SystemTime::now()
+                        .duration_since(std::time::UNIX_EPOCH)
+                        .unwrap_or_default()
+                        .as_nanos() as u64;
+                    RngStream::from_seed(t ^ (std::process::id() as u64) << 32)
+                }
+            };
+            self.current = Some(s);
+        }
+        self.current.as_mut().unwrap()
+    }
+}
+
+/// Evaluation context threading capture, RNG, and the kernel runtime.
+pub struct EvalCtx<'a, 'b> {
+    pub buffer: &'a mut CaptureBuffer,
+    pub rng: RngCtx,
+    pub kernels: Option<RuntimeHandle>,
+    /// Live relay hook for `immediateCondition`s (backends that support it).
+    pub on_immediate: Option<&'b mut dyn FnMut(&Condition)>,
+}
+
+/// Local scope stack: innermost binding wins; globals behind it.
+struct Scope<'a> {
+    globals: &'a Env,
+    locals: Vec<(String, Value)>,
+}
+
+impl<'a> Scope<'a> {
+    fn lookup(&self, name: &str) -> Option<&Value> {
+        self.locals
+            .iter()
+            .rev()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v)
+            .or_else(|| self.globals.get(name))
+    }
+}
+
+/// Evaluate `expr` under `globals`.
+pub fn evaluate(
+    expr: &Expr,
+    globals: &Env,
+    ctx: &mut EvalCtx<'_, '_>,
+) -> Result<Value, EvalError> {
+    let mut scope = Scope { globals, locals: Vec::new() };
+    eval(expr, &mut scope, ctx)
+}
+
+fn eval(expr: &Expr, scope: &mut Scope, ctx: &mut EvalCtx<'_, '_>) -> Result<Value, EvalError> {
+    match expr {
+        Expr::Lit(v) => Ok(v.clone()),
+        Expr::Var(name) => scope
+            .lookup(name)
+            .cloned()
+            .ok_or_else(|| EvalError::new(format!("object '{name}' not found"))),
+        Expr::Let { name, value, body } => {
+            let v = eval(value, scope, ctx)?;
+            scope.locals.push((name.clone(), v));
+            let out = eval(body, scope, ctx);
+            scope.locals.pop();
+            out
+        }
+        Expr::Seq(items) => {
+            let mut last = Value::Unit;
+            for item in items {
+                last = eval(item, scope, ctx)?;
+            }
+            Ok(last)
+        }
+        Expr::List(items) => {
+            let mut out = Vec::with_capacity(items.len());
+            for item in items {
+                out.push(eval(item, scope, ctx)?);
+            }
+            Ok(Value::List(out))
+        }
+        Expr::Index { list, index } => {
+            let lv = eval(list, scope, ctx)?;
+            let iv = eval(index, scope, ctx)?;
+            let i = iv
+                .as_i64()
+                .ok_or_else(|| EvalError::new("invalid subscript: expected an integer"))?;
+            match &lv {
+                Value::List(items) => items.get(i as usize).cloned().ok_or_else(|| {
+                    EvalError::new(format!("subscript out of bounds: {i} of {}", items.len()))
+                }),
+                Value::Tensor(t) if t.rank() >= 1 => {
+                    // Row indexing: returns the i-th slice along axis 0.
+                    let rows = t.shape[0];
+                    if i < 0 || i as usize >= rows {
+                        return Err(EvalError::new(format!(
+                            "subscript out of bounds: {i} of {rows}"
+                        )));
+                    }
+                    let stride: usize = t.shape[1..].iter().product();
+                    let start = i as usize * stride;
+                    let data = t.data[start..start + stride].to_vec();
+                    Ok(Value::Tensor(
+                        Tensor::new(t.shape[1..].to_vec(), data)
+                            .map_err(EvalError::new)?,
+                    ))
+                }
+                other => Err(EvalError::new(format!(
+                    "object of type '{}' is not subsettable",
+                    other.type_name()
+                ))),
+            }
+        }
+        Expr::Call { kernel, args } => {
+            let mut argv = Vec::with_capacity(args.len());
+            for a in args {
+                argv.push(eval(a, scope, ctx)?);
+            }
+            // Lazy runtime resolution: workers only pay the PJRT load +
+            // artifact compile cost when a task actually calls a kernel.
+            let rt = ctx
+                .kernels
+                .clone()
+                .or_else(|| crate::runtime::global().map(|rt| rt.handle()));
+            match rt {
+                Some(rt) => rt.execute(kernel, argv),
+                None => Err(EvalError::new(format!(
+                    "could not find function \"{kernel}\" (no PJRT runtime loaded; run `make artifacts`)"
+                ))),
+            }
+        }
+        Expr::Prim { op, args } => {
+            let mut argv = Vec::with_capacity(args.len());
+            for a in args {
+                argv.push(eval(a, scope, ctx)?);
+            }
+            apply_prim(*op, &argv)
+        }
+        Expr::If { cond, then, otherwise } => {
+            let c = eval(cond, scope, ctx)?;
+            match c.as_bool() {
+                Some(true) => eval(then, scope, ctx),
+                Some(false) => eval(otherwise, scope, ctx),
+                None => Err(EvalError::new("argument is not interpretable as logical")),
+            }
+        }
+        Expr::DynLookup(inner) => {
+            let nv = eval(inner, scope, ctx)?;
+            let name = nv
+                .as_str()
+                .ok_or_else(|| EvalError::new("invalid first argument to get()"))?;
+            scope
+                .lookup(name)
+                .cloned()
+                .ok_or_else(|| EvalError::new(format!("object '{name}' not found")))
+        }
+        Expr::Emit { kind, message } => {
+            let mv = eval(message, scope, ctx)?;
+            let text = render(&mv);
+            match kind {
+                EmitKind::Stdout => ctx.buffer.capture_stdout(&text),
+                EmitKind::Message => ctx.buffer.signal(ConditionKind::Message, text),
+                EmitKind::Warning => ctx.buffer.signal(ConditionKind::Warning, text),
+                EmitKind::Progress => {
+                    ctx.buffer.signal(ConditionKind::Immediate, text);
+                    // Live-relay hook: drain what we just signaled.
+                    if ctx.on_immediate.is_some() {
+                        let drained = ctx.buffer.drain_immediate();
+                        if let Some(f) = ctx.on_immediate.as_mut() {
+                            for c in &drained {
+                                f(c);
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(Value::Unit)
+        }
+        Expr::Stop(inner) => {
+            let mv = eval(inner, scope, ctx)?;
+            Err(EvalError::new(render(&mv)))
+        }
+        Expr::Rng { dist, shape } => {
+            if ctx.rng.seed.is_none() {
+                ctx.buffer.rng_used = true;
+            }
+            let n: usize = shape.iter().product();
+            let stream = ctx.rng.stream();
+            let data = match dist {
+                RngDist::Unif => stream.unif_f32(n),
+                RngDist::Norm => stream.norm_f32(n),
+            };
+            Ok(Value::Tensor(Tensor { shape: shape.clone(), data }))
+        }
+        Expr::WithRngStream { index, body } => {
+            // Per-element substream: install stream `index`, restore after.
+            let saved = ctx.rng.current.take();
+            let saved_index = ctx.rng.stream_index;
+            ctx.rng.stream_index = *index;
+            let out = eval(body, scope, ctx);
+            ctx.rng.current = saved;
+            ctx.rng.stream_index = saved_index;
+            out
+        }
+        Expr::Spin { millis } => {
+            let until = std::time::Instant::now() + std::time::Duration::from_millis(*millis);
+            while std::time::Instant::now() < until {
+                std::hint::spin_loop();
+            }
+            Ok(Value::Unit)
+        }
+        Expr::Sleep { millis } => {
+            std::thread::sleep(std::time::Duration::from_millis(*millis));
+            Ok(Value::Unit)
+        }
+        Expr::Work { iters } => {
+            // Fixed CPU demand: splitmix rounds the optimizer cannot elide.
+            let mut acc = 0u64;
+            for i in 0..*iters {
+                acc = acc.wrapping_add(crate::util::uuid::splitmix64(i ^ acc));
+            }
+            std::hint::black_box(acc);
+            Ok(Value::Unit)
+        }
+    }
+}
+
+/// Render a value for `cat()`/`message()`/`stop()`.
+fn render(v: &Value) -> String {
+    match v {
+        Value::Str(s) => s.clone(),
+        other => format!("{other}"),
+    }
+}
+
+fn num2(op: &str, a: &Value, b: &Value) -> Result<(f64, f64), EvalError> {
+    match (a.as_f64(), b.as_f64()) {
+        (Some(x), Some(y)) => Ok((x, y)),
+        _ => Err(EvalError::new(format!(
+            "non-numeric argument to binary operator '{op}' ({} vs {})",
+            a.type_name(),
+            b.type_name()
+        ))),
+    }
+}
+
+fn arity(op: PrimOp, want: usize, got: usize) -> Result<(), EvalError> {
+    if want == got {
+        Ok(())
+    } else {
+        Err(EvalError::new(format!("{op:?} expects {want} argument(s), got {got}")))
+    }
+}
+
+/// Element-wise tensor/scalar arithmetic dispatch.
+fn tensor_binop(
+    op: PrimOp,
+    f: impl Fn(f32, f32) -> f32,
+    a: &Value,
+    b: &Value,
+) -> Option<Result<Value, EvalError>> {
+    match (a, b) {
+        (Value::Tensor(x), Value::Tensor(y)) => {
+            if x.shape != y.shape {
+                return Some(Err(EvalError::new(format!(
+                    "non-conformable arrays: {:?} vs {:?}",
+                    x.shape, y.shape
+                ))));
+            }
+            let data = x.data.iter().zip(&y.data).map(|(p, q)| f(*p, *q)).collect();
+            Some(Ok(Value::Tensor(Tensor { shape: x.shape.clone(), data })))
+        }
+        (Value::Tensor(x), other) | (other, Value::Tensor(x)) => {
+            let s = match other.as_f64() {
+                Some(s) => s as f32,
+                None => {
+                    return Some(Err(EvalError::new(format!(
+                        "non-numeric argument to binary operator '{op:?}'"
+                    ))))
+                }
+            };
+            // Preserve operand order for non-commutative ops.
+            let left_is_tensor = matches!(a, Value::Tensor(_));
+            let data = x
+                .data
+                .iter()
+                .map(|p| if left_is_tensor { f(*p, s) } else { f(s, *p) })
+                .collect();
+            Some(Ok(Value::Tensor(Tensor { shape: x.shape.clone(), data })))
+        }
+        _ => None,
+    }
+}
+
+fn apply_prim(op: PrimOp, args: &[Value]) -> Result<Value, EvalError> {
+    use PrimOp::*;
+    match op {
+        Add | Sub | Mul | Div => {
+            arity(op, 2, args.len())?;
+            let (a, b) = (&args[0], &args[1]);
+            let f = match op {
+                Add => |x: f32, y: f32| x + y,
+                Sub => |x: f32, y: f32| x - y,
+                Mul => |x: f32, y: f32| x * y,
+                _ => |x: f32, y: f32| x / y,
+            };
+            if let Some(r) = tensor_binop(op, f, a, b) {
+                return r;
+            }
+            // Integer arithmetic stays integral except division.
+            if let (Value::I64(x), Value::I64(y)) = (a, b) {
+                return Ok(match op {
+                    Add => Value::I64(x + y),
+                    Sub => Value::I64(x - y),
+                    Mul => Value::I64(x * y),
+                    _ => Value::F64(*x as f64 / *y as f64),
+                });
+            }
+            let name = match op {
+                Add => "+",
+                Sub => "-",
+                Mul => "*",
+                _ => "/",
+            };
+            let (x, y) = num2(name, a, b)?;
+            Ok(Value::F64(match op {
+                Add => x + y,
+                Sub => x - y,
+                Mul => x * y,
+                _ => x / y,
+            }))
+        }
+        Neg => {
+            arity(op, 1, args.len())?;
+            match &args[0] {
+                Value::I64(x) => Ok(Value::I64(-x)),
+                Value::F64(x) => Ok(Value::F64(-x)),
+                Value::Tensor(t) => Ok(Value::Tensor(Tensor {
+                    shape: t.shape.clone(),
+                    data: t.data.iter().map(|x| -x).collect(),
+                })),
+                other => Err(EvalError::new(format!(
+                    "invalid argument to unary operator '-' ({})",
+                    other.type_name()
+                ))),
+            }
+        }
+        Lt | Le => {
+            arity(op, 2, args.len())?;
+            let (x, y) = num2(if op == Lt { "<" } else { "<=" }, &args[0], &args[1])?;
+            Ok(Value::Bool(if op == Lt { x < y } else { x <= y }))
+        }
+        Eq => {
+            arity(op, 2, args.len())?;
+            Ok(Value::Bool(match (&args[0], &args[1]) {
+                (Value::Str(a), Value::Str(b)) => a == b,
+                (Value::Bool(a), Value::Bool(b)) => a == b,
+                (a, b) => match (a.as_f64(), b.as_f64()) {
+                    (Some(x), Some(y)) => x == y,
+                    _ => a == b,
+                },
+            }))
+        }
+        Not => {
+            arity(op, 1, args.len())?;
+            args[0]
+                .as_bool()
+                .map(|b| Value::Bool(!b))
+                .ok_or_else(|| EvalError::new("invalid argument type to '!'"))
+        }
+        Len => {
+            arity(op, 1, args.len())?;
+            Ok(Value::I64(match &args[0] {
+                Value::List(v) => v.len() as i64,
+                Value::Str(s) => s.chars().count() as i64,
+                Value::Tensor(t) => t.len() as i64,
+                _ => 1,
+            }))
+        }
+        Sum | Mean => {
+            arity(op, 1, args.len())?;
+            let (total, n) = match &args[0] {
+                Value::Tensor(t) => (t.data.iter().map(|x| *x as f64).sum::<f64>(), t.len()),
+                Value::List(items) => {
+                    let mut total = 0.0;
+                    for item in items {
+                        total += item.as_f64().ok_or_else(|| {
+                            EvalError::new("invalid 'type' (non-numeric) of argument")
+                        })?;
+                    }
+                    (total, items.len())
+                }
+                other => (
+                    other.as_f64().ok_or_else(|| {
+                        EvalError::new("invalid 'type' (non-numeric) of argument")
+                    })?,
+                    1,
+                ),
+            };
+            Ok(Value::F64(if op == Sum { total } else { total / n.max(1) as f64 }))
+        }
+        Sqrt => {
+            arity(op, 1, args.len())?;
+            match &args[0] {
+                Value::Tensor(t) => Ok(Value::Tensor(Tensor {
+                    shape: t.shape.clone(),
+                    data: t.data.iter().map(|x| x.sqrt()).collect(),
+                })),
+                other => {
+                    let x = other.as_f64().ok_or_else(|| {
+                        EvalError::new("non-numeric argument to mathematical function")
+                    })?;
+                    Ok(Value::F64(x.sqrt()))
+                }
+            }
+        }
+        Concat => {
+            let mut out = String::new();
+            for a in args {
+                out.push_str(&render(a));
+            }
+            Ok(Value::Str(out))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(expr: &Expr, env: &Env) -> Result<Value, EvalError> {
+        let mut buf = CaptureBuffer::new();
+        let mut ctx = EvalCtx {
+            buffer: &mut buf,
+            rng: RngCtx::new(Some(1), 0),
+            kernels: None,
+            on_immediate: None,
+        };
+        evaluate(expr, env, &mut ctx)
+    }
+
+    #[test]
+    fn arithmetic_and_scoping() {
+        let mut env = Env::new();
+        env.insert("x", 10.0);
+        // let a = x * 2 in a + 1  →  21
+        let e = Expr::let_in(
+            "a",
+            Expr::mul(Expr::var("x"), Expr::lit(2.0)),
+            Expr::add(Expr::var("a"), Expr::lit(1.0)),
+        );
+        assert_eq!(run(&e, &env).unwrap(), Value::F64(21.0));
+    }
+
+    #[test]
+    fn integer_arithmetic_stays_integral() {
+        let env = Env::new();
+        assert_eq!(run(&Expr::add(Expr::lit(2i64), Expr::lit(3i64)), &env).unwrap(), Value::I64(5));
+        assert_eq!(
+            run(&Expr::div(Expr::lit(1i64), Expr::lit(2i64)), &env).unwrap(),
+            Value::F64(0.5)
+        );
+    }
+
+    #[test]
+    fn tensor_elementwise_ops() {
+        let mut env = Env::new();
+        env.insert("t", Tensor::new(vec![3], vec![1.0, 2.0, 3.0]).unwrap());
+        let e = Expr::mul(Expr::var("t"), Expr::lit(2.0));
+        let v = run(&e, &env).unwrap();
+        assert_eq!(v.as_tensor().unwrap().data, vec![2.0, 4.0, 6.0]);
+        // scalar - tensor preserves order
+        let e2 = Expr::sub(Expr::lit(10.0), Expr::var("t"));
+        assert_eq!(run(&e2, &env).unwrap().as_tensor().unwrap().data, vec![9.0, 8.0, 7.0]);
+    }
+
+    #[test]
+    fn missing_variable_mimics_r_error() {
+        let env = Env::new();
+        let err = run(&Expr::var("k"), &env).unwrap_err();
+        assert_eq!(err.message, "object 'k' not found");
+        // The get("k") trap fails the same way at *runtime*.
+        let err = run(&Expr::dyn_lookup(Expr::lit("k")), &env).unwrap_err();
+        assert_eq!(err.message, "object 'k' not found");
+    }
+
+    #[test]
+    fn dyn_lookup_finds_captured_global() {
+        let mut env = Env::new();
+        env.insert("k", 42i64);
+        assert_eq!(run(&Expr::dyn_lookup(Expr::lit("k")), &env).unwrap(), Value::I64(42));
+    }
+
+    #[test]
+    fn non_numeric_math_matches_paper_example() {
+        // paper: log("24") → "non-numeric argument to mathematical function"
+        let mut env = Env::new();
+        env.insert("x", "24");
+        let err = run(&Expr::prim(PrimOp::Sqrt, vec![Expr::var("x")]), &env).unwrap_err();
+        assert_eq!(err.message, "non-numeric argument to mathematical function");
+    }
+
+    #[test]
+    fn stop_raises_eval_error() {
+        let env = Env::new();
+        let err = run(&Expr::stop(Expr::lit("boom")), &env).unwrap_err();
+        assert_eq!(err.message, "boom");
+    }
+
+    #[test]
+    fn emit_captures_in_order() {
+        let env = Env::new();
+        let e = Expr::seq(vec![
+            Expr::cat(Expr::lit("Hello world\n")),
+            Expr::message(Expr::lit("The sum of 'x' is 55")),
+            Expr::warning(Expr::lit("Missing values were omitted")),
+            Expr::cat(Expr::lit("Bye bye\n")),
+            Expr::lit(55i64),
+        ]);
+        let mut buf = CaptureBuffer::new();
+        let mut ctx = EvalCtx {
+            buffer: &mut buf,
+            rng: RngCtx::new(None, 0),
+            kernels: None,
+            on_immediate: None,
+        };
+        let v = evaluate(&e, &env, &mut ctx).unwrap();
+        assert_eq!(v, Value::I64(55));
+        let captured = buf.finish();
+        assert_eq!(captured.stdout, "Hello world\nBye bye\n");
+        assert_eq!(captured.conditions.len(), 2);
+        assert_eq!(captured.conditions[0].kind, ConditionKind::Message);
+        assert_eq!(captured.conditions[1].kind, ConditionKind::Warning);
+    }
+
+    #[test]
+    fn seeded_rng_is_deterministic_unseeded_flags_misuse() {
+        let env = Env::new();
+        let draw = Expr::rnorm(3);
+
+        let go = |seed: Option<u64>| {
+            let mut buf = CaptureBuffer::new();
+            let mut ctx = EvalCtx {
+                buffer: &mut buf,
+                rng: RngCtx::new(seed, 5),
+                kernels: None,
+                on_immediate: None,
+            };
+            let v = evaluate(&draw, &env, &mut ctx).unwrap();
+            (v, buf.finish().rng_used)
+        };
+
+        let (a, used_a) = go(Some(42));
+        let (b, used_b) = go(Some(42));
+        assert_eq!(a, b, "seeded draws must be reproducible");
+        assert!(!used_a && !used_b, "seeded use is not misuse");
+
+        let (_, used) = go(None);
+        assert!(used, "unseeded RNG draw must be flagged");
+    }
+
+    #[test]
+    fn with_rng_stream_is_chunking_invariant() {
+        let env = Env::new();
+        let body = |idx| Expr::with_rng_stream(idx, Expr::runif(2));
+        let go = |exprs: Vec<Expr>| {
+            let mut buf = CaptureBuffer::new();
+            let mut ctx = EvalCtx {
+                buffer: &mut buf,
+                rng: RngCtx::new(Some(7), 0),
+                kernels: None,
+                on_immediate: None,
+            };
+            evaluate(&Expr::list(exprs), &env, &mut ctx).unwrap()
+        };
+        // Elements 0..4 in one chunk...
+        let all = go((0..4).map(body).collect());
+        // ...must equal elements evaluated as two chunks.
+        let c1 = go((0..2).map(body).collect());
+        let c2 = go((2..4).map(body).collect());
+        let mut combined = c1.as_list().unwrap().to_vec();
+        combined.extend(c2.as_list().unwrap().to_vec());
+        assert_eq!(all, Value::List(combined));
+    }
+
+    #[test]
+    fn list_index_and_len() {
+        let env = Env::new();
+        let e = Expr::index(
+            Expr::list(vec![Expr::lit(10i64), Expr::lit(20i64)]),
+            Expr::lit(1i64),
+        );
+        assert_eq!(run(&e, &env).unwrap(), Value::I64(20));
+        let e = Expr::prim(PrimOp::Len, vec![Expr::list(vec![Expr::lit(1i64)])]);
+        assert_eq!(run(&e, &env).unwrap(), Value::I64(1));
+        let oob = Expr::index(Expr::list(vec![]), Expr::lit(0i64));
+        assert!(run(&oob, &env).is_err());
+    }
+
+    #[test]
+    fn tensor_row_indexing() {
+        let mut env = Env::new();
+        env.insert("m", Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap());
+        let row = run(&Expr::index(Expr::var("m"), Expr::lit(1i64)), &env).unwrap();
+        assert_eq!(row.as_tensor().unwrap().data, vec![4., 5., 6.]);
+        assert_eq!(row.as_tensor().unwrap().shape, vec![3]);
+    }
+
+    #[test]
+    fn if_else_branches() {
+        let env = Env::new();
+        let e = Expr::if_else(
+            Expr::prim(PrimOp::Lt, vec![Expr::lit(1.0), Expr::lit(2.0)]),
+            Expr::lit("yes"),
+            Expr::lit("no"),
+        );
+        assert_eq!(run(&e, &env).unwrap(), Value::Str("yes".into()));
+    }
+
+    #[test]
+    fn sum_mean_sqrt_concat() {
+        let env = Env::new();
+        let list = Expr::list(vec![Expr::lit(1.0), Expr::lit(2.0), Expr::lit(3.0)]);
+        assert_eq!(run(&Expr::prim(PrimOp::Sum, vec![list.clone()]), &env).unwrap(), Value::F64(6.0));
+        assert_eq!(run(&Expr::prim(PrimOp::Mean, vec![list]), &env).unwrap(), Value::F64(2.0));
+        assert_eq!(run(&Expr::prim(PrimOp::Sqrt, vec![Expr::lit(9.0)]), &env).unwrap(), Value::F64(3.0));
+        let c = Expr::prim(PrimOp::Concat, vec![Expr::lit("n="), Expr::lit(3i64)]);
+        assert_eq!(run(&c, &env).unwrap(), Value::Str("n=3".into()));
+    }
+
+    #[test]
+    fn kernel_call_without_runtime_errors_cleanly() {
+        let env = Env::new();
+        let e = Expr::call("slow_fcn", vec![Expr::lit(1.0)]);
+        let err = run(&e, &env).unwrap_err();
+        assert!(err.message.contains("slow_fcn"));
+    }
+}

@@ -1,0 +1,244 @@
+//! Worker runtime: execute one task ([`execute_task`]) and the remote-worker
+//! event loop ([`run_worker`]) used by the multiprocess, cluster, and batch
+//! backends.
+
+pub mod eval;
+
+use std::io::{Read, Write};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::api::conditions::{CaptureBuffer, Condition};
+use crate::api::error::FutureError;
+use crate::ipc::frame::{read_message, write_message};
+use crate::ipc::{Message, TaskMetrics, TaskOutcome, TaskResult, TaskSpec, PROTOCOL_VERSION};
+use crate::runtime::RuntimeHandle;
+use crate::util::uuid_v4;
+use crate::worker::eval::{evaluate, EvalCtx, RngCtx};
+
+fn now_ns() -> u64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default().as_nanos() as u64
+}
+
+/// Execute one task to completion, capturing output/conditions and timings.
+///
+/// `on_immediate` is the live-relay hook: called for each
+/// `immediateCondition` as it is signaled (backends without live transport
+/// pass `None` and the conditions ride home with the result).
+pub fn execute_task(
+    task: &TaskSpec,
+    kernels: Option<RuntimeHandle>,
+    mut on_immediate: Option<&mut dyn FnMut(&Condition)>,
+) -> TaskResult {
+    let mut buffer = CaptureBuffer::new();
+    let started_ns = now_ns();
+    let rng = RngCtx::new(task.opts.seed, task.opts.stream_index);
+    let outcome = {
+        let hook: Option<&mut dyn FnMut(&Condition)> = match &mut on_immediate {
+            Some(f) => Some(&mut **f),
+            None => None,
+        };
+        let mut ctx = EvalCtx { buffer: &mut buffer, rng, kernels, on_immediate: hook };
+        match evaluate(&task.expr, &task.globals, &mut ctx) {
+            Ok(v) => TaskOutcome::Ok(v),
+            Err(e) => TaskOutcome::Err(e),
+        }
+    };
+    let finished_ns = now_ns();
+    let mut captured = buffer.finish();
+    if !task.opts.capture_stdout {
+        captured.stdout.clear();
+    }
+    if !task.opts.capture_conditions {
+        captured.conditions.clear();
+    }
+    TaskResult {
+        id: task.id.clone(),
+        outcome,
+        captured,
+        metrics: TaskMetrics { started_ns, finished_ns },
+    }
+}
+
+/// The remote-worker event loop: read [`Message::Task`]s, execute, stream
+/// [`Message::Immediate`]s live, reply with [`Message::Result`]s, until
+/// `Shutdown` or EOF.
+///
+/// Generic over the transport: child-process stdio (multisession), TCP
+/// (cluster).  The batch backend uses [`run_batch_job`] instead.
+pub fn run_worker<R: Read, W: Write>(
+    mut reader: R,
+    mut writer: W,
+    kernels: Option<RuntimeHandle>,
+) -> Result<(), FutureError> {
+    let worker_id = uuid_v4();
+    write_message(&mut writer, &Message::Hello { worker_id, version: PROTOCOL_VERSION })?;
+    loop {
+        match read_message(&mut reader)? {
+            None | Some(Message::Shutdown) => return Ok(()),
+            Some(Message::Ping) => write_message(&mut writer, &Message::Pong)?,
+            Some(Message::Task(task)) => {
+                // Nested futures created while evaluating this task follow
+                // the topology the coordinator shipped (empty ⇒ sequential:
+                // the nested-parallelism protection).
+                crate::api::plan::plan_topology(task.opts.nested_plan.clone());
+
+                let mut send_err = None;
+                let result = {
+                    let mut on_imm = |c: &Condition| {
+                        let msg =
+                            Message::Immediate { task_id: task.id.clone(), condition: c.clone() };
+                        if let Err(e) = write_message(&mut writer, &msg) {
+                            send_err = Some(e);
+                        }
+                    };
+                    execute_task(&task, kernels.clone(), Some(&mut on_imm))
+                };
+                if let Some(e) = send_err {
+                    return Err(e);
+                }
+                write_message(&mut writer, &Message::Result(result))?;
+            }
+            Some(other) => {
+                return Err(FutureError::Channel(format!(
+                    "worker received unexpected message: {other:?}"
+                )));
+            }
+        }
+    }
+}
+
+/// Batch-mode execution: read a task file, write a result file (the
+/// `batchtools` job model — no live channel, so immediates ride with the
+/// result).
+pub fn run_batch_job(
+    task_path: &std::path::Path,
+    result_path: &std::path::Path,
+    kernels: Option<RuntimeHandle>,
+) -> Result<(), FutureError> {
+    let bytes = std::fs::read(task_path)
+        .map_err(|e| FutureError::Channel(format!("read {}: {e}", task_path.display())))?;
+    let msg = crate::ipc::wire::decode_message(&bytes)
+        .map_err(|e| FutureError::Channel(format!("bad task file: {e}")))?;
+    let task = match msg {
+        Message::Task(t) => t,
+        other => {
+            return Err(FutureError::Channel(format!("task file held {other:?}")));
+        }
+    };
+    crate::api::plan::plan_topology(task.opts.nested_plan.clone());
+    let result = execute_task(&task, kernels, None);
+    let encoded = crate::ipc::wire::encode_message(&Message::Result(result));
+    // Write-then-rename: the scheduler polls for the final name, so it never
+    // observes a partial file.
+    let tmp = result_path.with_extension("tmp");
+    std::fs::write(&tmp, &encoded)
+        .map_err(|e| FutureError::Channel(format!("write {}: {e}", tmp.display())))?;
+    std::fs::rename(&tmp, result_path)
+        .map_err(|e| FutureError::Channel(format!("rename result: {e}")))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::env::Env;
+    use crate::api::expr::Expr;
+    use crate::ipc::TaskOpts;
+
+    fn task(expr: Expr) -> TaskSpec {
+        TaskSpec { id: uuid_v4(), expr, globals: Env::new(), opts: TaskOpts::default() }
+    }
+
+    #[test]
+    fn execute_task_success_with_capture() {
+        let t = task(Expr::seq(vec![Expr::cat(Expr::lit("hi\n")), Expr::lit(5i64)]));
+        let r = execute_task(&t, None, None);
+        assert_eq!(r.outcome, TaskOutcome::Ok(crate::api::value::Value::I64(5)));
+        assert_eq!(r.captured.stdout, "hi\n");
+        assert!(r.metrics.finished_ns >= r.metrics.started_ns);
+    }
+
+    #[test]
+    fn execute_task_error_is_captured_not_propagated() {
+        let t = task(Expr::stop(Expr::lit("bad")));
+        let r = execute_task(&t, None, None);
+        match r.outcome {
+            TaskOutcome::Err(e) => assert_eq!(e.message, "bad"),
+            _ => panic!("expected error outcome"),
+        }
+    }
+
+    #[test]
+    fn capture_opt_outs_clear_payloads() {
+        let mut t = task(Expr::seq(vec![
+            Expr::cat(Expr::lit("noise")),
+            Expr::warning(Expr::lit("w")),
+            Expr::lit(1i64),
+        ]));
+        t.opts.capture_stdout = false;
+        t.opts.capture_conditions = false;
+        let r = execute_task(&t, None, None);
+        assert!(r.captured.stdout.is_empty());
+        assert!(r.captured.conditions.is_empty());
+    }
+
+    #[test]
+    fn immediate_hook_fires_during_eval() {
+        let t = task(Expr::seq(vec![
+            Expr::progress(Expr::lit("10%")),
+            Expr::progress(Expr::lit("90%")),
+            Expr::lit(0i64),
+        ]));
+        let mut seen = Vec::new();
+        let mut hook = |c: &Condition| seen.push(c.message.clone());
+        let _ = execute_task(&t, None, Some(&mut hook));
+        assert_eq!(seen, vec!["10%", "90%"]);
+    }
+
+    #[test]
+    fn worker_loop_over_in_memory_pipes() {
+        use std::io::Cursor;
+        // Coordinator side: one task, then shutdown.
+        let t = task(Expr::add(Expr::lit(1i64), Expr::lit(2i64)));
+        let mut input = Vec::new();
+        write_message(&mut input, &Message::Task(t.clone())).unwrap();
+        write_message(&mut input, &Message::Shutdown).unwrap();
+
+        let mut output = Vec::new();
+        run_worker(Cursor::new(input), &mut output, None).unwrap();
+
+        let mut cur = Cursor::new(output);
+        let hello = read_message(&mut cur).unwrap().unwrap();
+        assert!(matches!(hello, Message::Hello { .. }));
+        match read_message(&mut cur).unwrap().unwrap() {
+            Message::Result(r) => {
+                assert_eq!(r.id, t.id);
+                assert_eq!(r.outcome, TaskOutcome::Ok(crate::api::value::Value::I64(3)));
+            }
+            other => panic!("expected result, got {other:?}"),
+        }
+        assert_eq!(read_message(&mut cur).unwrap(), None);
+    }
+
+    #[test]
+    fn batch_job_roundtrip_via_files() {
+        let dir = std::env::temp_dir().join(format!("rustures-test-{}", uuid_v4()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let task_path = dir.join("job.task");
+        let result_path = dir.join("job.result");
+
+        let t = task(Expr::mul(Expr::lit(6i64), Expr::lit(7i64)));
+        std::fs::write(&task_path, crate::ipc::wire::encode_message(&Message::Task(t.clone())))
+            .unwrap();
+        run_batch_job(&task_path, &result_path, None).unwrap();
+
+        let bytes = std::fs::read(&result_path).unwrap();
+        match crate::ipc::wire::decode_message(&bytes).unwrap() {
+            Message::Result(r) => {
+                assert_eq!(r.outcome, TaskOutcome::Ok(crate::api::value::Value::I64(42)))
+            }
+            other => panic!("{other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,253 @@
+//! Cross-backend integration: the paper's core behavioural examples,
+//! exercised on every backend (E2, E10 in DESIGN.md).
+
+use std::time::{Duration, Instant};
+
+use rustures::api::future::values;
+use rustures::api::plan::{with_plan, PlanSpec};
+use rustures::prelude::*;
+
+fn all_specs() -> Vec<PlanSpec> {
+    vec![
+        PlanSpec::sequential(),
+        PlanSpec::multicore(2),
+        PlanSpec::multiprocess(2),
+        PlanSpec::cluster(&["n1.local", "n2.local"]),
+        PlanSpec::batch(2),
+    ]
+}
+
+#[test]
+fn same_program_same_result_on_every_backend() {
+    // The framework's headline promise: identical results everywhere.
+    let mut outcomes = Vec::new();
+    for spec in all_specs() {
+        let name = spec.name();
+        let out = with_plan(spec, || {
+            let mut env = Env::new();
+            env.insert("base", 7i64);
+            let xs: Vec<Value> = (0..10i64).map(Value::I64).collect();
+            future_lapply(
+                &xs,
+                "x",
+                &Expr::add(Expr::mul(Expr::var("x"), Expr::var("x")), Expr::var("base")),
+                &env,
+                &LapplyOpts::new(),
+            )
+            .unwrap()
+        });
+        outcomes.push((name, out));
+    }
+    let reference = outcomes[0].1.clone();
+    for (name, out) in &outcomes {
+        assert_eq!(*out, reference, "backend {name} diverged");
+    }
+}
+
+#[test]
+fn blocking_three_futures_two_workers() {
+    // Paper: "when we attempt to create a third future ... future() blocks
+    // until one of the workers is available".
+    for spec in [PlanSpec::multicore(2), PlanSpec::multiprocess(2)] {
+        let name = spec.name();
+        with_plan(spec, || {
+            let env = Env::new();
+            let t0 = Instant::now();
+            let _f1 = future(Expr::Spin { millis: 200 }, &env).unwrap();
+            let _f2 = future(Expr::Spin { millis: 200 }, &env).unwrap();
+            let create_two = t0.elapsed();
+            assert!(
+                create_two < Duration::from_millis(150),
+                "{name}: first two creates must not block, took {create_two:?}"
+            );
+            let t1 = Instant::now();
+            let f3 = future(Expr::lit(3i64), &env).unwrap();
+            let create_third = t1.elapsed();
+            assert!(
+                create_third >= Duration::from_millis(50),
+                "{name}: third create should block, took {create_third:?}"
+            );
+            assert_eq!(f3.value().unwrap(), Value::I64(3));
+        });
+    }
+}
+
+#[test]
+fn worker_frees_on_resolution_not_collection() {
+    // Regression for the launch deadlock: create 4 on 2 workers and only
+    // collect at the end — must complete.
+    for spec in [PlanSpec::multicore(2), PlanSpec::multiprocess(2), PlanSpec::batch(2)] {
+        let name = spec.name();
+        with_plan(spec, || {
+            let env = Env::new();
+            let fs: Vec<Future> = (0..4)
+                .map(|i| {
+                    future(
+                        Expr::seq(vec![Expr::Spin { millis: 20 }, Expr::lit(i as i64)]),
+                        &env,
+                    )
+                    .unwrap()
+                })
+                .collect();
+            let vs = values(&fs).unwrap();
+            assert_eq!(vs, (0..4).map(Value::I64).collect::<Vec<_>>(), "{name}");
+        });
+    }
+}
+
+#[test]
+fn eval_errors_relay_identically_everywhere() {
+    for spec in all_specs() {
+        let name = spec.name();
+        with_plan(spec, || {
+            let env = Env::new();
+            let f = future(Expr::stop(Expr::lit("deliberate failure")), &env).unwrap();
+            match f.value() {
+                Err(FutureError::Eval(e)) => {
+                    assert_eq!(e.message, "deliberate failure", "{name}")
+                }
+                other => panic!("{name}: expected eval error, got {other:?}"),
+            }
+        });
+    }
+}
+
+#[test]
+fn rng_identical_across_backends_and_worker_counts() {
+    // E5: "fully reproducible regardless of future backend specified and
+    // the number of workers available".
+    let draw = |spec: PlanSpec| {
+        with_plan(spec, || {
+            let env = Env::new();
+            let xs: Vec<Value> = (0..6i64).map(Value::I64).collect();
+            future_lapply(&xs, "x", &Expr::rnorm(2), &env, &LapplyOpts::new().seed(2024))
+                .unwrap()
+        })
+    };
+    let reference = draw(PlanSpec::sequential());
+    for spec in [
+        PlanSpec::multicore(1),
+        PlanSpec::multicore(3),
+        PlanSpec::multiprocess(2),
+        PlanSpec::cluster(&["n1.local", "n2.local", "n3.local"]),
+        PlanSpec::batch(2),
+    ] {
+        let name = spec.name();
+        let w = spec.effective_workers();
+        assert_eq!(draw(spec), reference, "backend {name} ({w} workers) diverged");
+    }
+}
+
+#[test]
+fn future_either_picks_fast_racer() {
+    for spec in [PlanSpec::multicore(3), PlanSpec::multiprocess(3)] {
+        let name = spec.name();
+        with_plan(spec, || {
+            let env = Env::new();
+            let v = future_either(
+                vec![
+                    Expr::seq(vec![Expr::Spin { millis: 400 }, Expr::lit("slow")]),
+                    Expr::seq(vec![Expr::Spin { millis: 5 }, Expr::lit("fast")]),
+                    Expr::seq(vec![Expr::Spin { millis: 400 }, Expr::lit("slow2")]),
+                ],
+                &env,
+            )
+            .unwrap();
+            assert_eq!(v, Value::Str("fast".into()), "{name}");
+        });
+    }
+}
+
+#[test]
+fn promises_and_listenv_work_on_parallel_backends() {
+    with_plan(PlanSpec::multiprocess(2), || {
+        let mut env = Env::new();
+        env.insert("xs", Value::List((1..=3i64).map(Value::I64).collect()));
+        let mut vs = ListEnv::new();
+        for i in 0..3usize {
+            vs.assign(
+                i,
+                Expr::mul(
+                    Expr::index(Expr::var("xs"), Expr::lit(i as i64)),
+                    Expr::lit(10i64),
+                ),
+                &env,
+            )
+            .unwrap();
+        }
+        assert_eq!(
+            vs.as_list().unwrap(),
+            vec![Value::I64(10), Value::I64(20), Value::I64(30)]
+        );
+    });
+}
+
+#[test]
+fn stdout_and_warnings_relay_from_remote_workers() {
+    use rustures::api::conditions::{set_sink, ConditionKind, RecordingSink};
+    with_plan(PlanSpec::multiprocess(1), || {
+        let env = Env::new();
+        let f = future(
+            Expr::seq(vec![
+                Expr::cat(Expr::lit("remote output\n")),
+                Expr::warning(Expr::lit("remote warning")),
+                Expr::lit(1i64),
+            ]),
+            &env,
+        )
+        .unwrap();
+        let rec = RecordingSink::new();
+        set_sink(Some(Box::new(rec.clone())));
+        let v = f.value();
+        set_sink(None);
+        assert_eq!(v.unwrap(), Value::I64(1));
+        assert_eq!(rec.stdout_text(), "remote output\n");
+        let conds = rec.conditions();
+        assert_eq!(conds.len(), 1);
+        assert_eq!(conds[0].kind, ConditionKind::Warning);
+        assert_eq!(conds[0].message, "remote warning");
+    });
+}
+
+#[test]
+fn progress_conditions_relay_before_value_on_live_backends() {
+    use rustures::api::conditions::{set_sink, ConditionKind, RecordingSink};
+    with_plan(PlanSpec::multiprocess(1), || {
+        let env = Env::new();
+        let f = future(
+            Expr::seq(vec![
+                Expr::progress(Expr::lit("50%")),
+                Expr::Spin { millis: 50 },
+                Expr::lit(0i64),
+            ]),
+            &env,
+        )
+        .unwrap();
+        let rec = RecordingSink::new();
+        set_sink(Some(Box::new(rec.clone())));
+        // Poll without collecting: the immediate should arrive live.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while rec.conditions().is_empty() && Instant::now() < deadline {
+            let _ = f.resolved();
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let got_live = !rec.conditions().is_empty();
+        let _ = f.value();
+        set_sink(None);
+        assert!(got_live, "immediateCondition did not relay before value()");
+        assert_eq!(rec.conditions()[0].kind, ConditionKind::Immediate);
+    });
+}
+
+#[test]
+fn foreach_adaptor_runs_on_parallel_backend() {
+    use rustures::mapreduce::foreach::{foreach, Combine};
+    with_plan(PlanSpec::multicore(2), || {
+        let env = Env::new();
+        let total = foreach("i", (1..=10i64).map(Value::I64).collect(), &env)
+            .combine(Combine::Sum)
+            .dopar(Expr::mul(Expr::var("i"), Expr::var("i")))
+            .unwrap();
+        assert_eq!(total, Value::F64(385.0)); // sum of squares 1..10
+    });
+}

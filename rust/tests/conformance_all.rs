@@ -1,0 +1,58 @@
+//! E9: the Future API conformance suite (future.tests analog) passes on
+//! every built-in backend — the paper's validation contract.
+
+use rustures::api::plan::PlanSpec;
+use rustures::conformance::run_conformance;
+
+fn assert_conforms(spec: PlanSpec) {
+    let report = run_conformance(spec);
+    let failures: Vec<String> = report
+        .results
+        .iter()
+        .filter(|r| !r.passed)
+        .map(|r| format!("{}: {}", r.name, r.detail))
+        .collect();
+    assert!(failures.is_empty(), "{} failed:\n{}", report.plan.name(), failures.join("\n"));
+}
+
+#[test]
+fn sequential_conforms() {
+    assert_conforms(PlanSpec::sequential());
+}
+
+#[test]
+fn multicore_conforms() {
+    assert_conforms(PlanSpec::multicore(2));
+}
+
+#[test]
+fn multisession_conforms() {
+    assert_conforms(PlanSpec::multiprocess(2));
+}
+
+#[test]
+fn cluster_conforms() {
+    assert_conforms(PlanSpec::cluster(&["n1.local", "n2.local"]));
+}
+
+#[test]
+fn batchtools_conforms() {
+    assert_conforms(PlanSpec::batch(2));
+}
+
+#[test]
+fn third_party_backend_conforms_via_registry() {
+    // The paper: "third-party contributions meeting the specifications ...
+    // are automatically supported."  Register a custom backend (a thin
+    // wrapper over the thread pool, as a stand-in for e.g. doRedis) and run
+    // the same suite.
+    use rustures::api::plan::register_backend;
+    use std::sync::Arc;
+    register_backend(
+        "thirdparty",
+        Arc::new(|workers| {
+            Arc::new(rustures::backend::threadpool::ThreadPoolBackend::new(workers))
+        }),
+    );
+    assert_conforms(PlanSpec::Custom { name: "thirdparty".into(), workers: 2 });
+}

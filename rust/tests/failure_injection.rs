@@ -1,0 +1,124 @@
+//! Failure injection: FutureError semantics under worker death, cancelled
+//! jobs, and recovery by relaunching (the paper's motivation for the
+//! distinct FutureError class and its restart() future-work item).
+
+use rustures::api::plan::{with_plan, PlanSpec};
+use rustures::prelude::*;
+
+#[test]
+fn cancelled_future_surfaces_as_recoverable_error() {
+    with_plan(PlanSpec::multiprocess(1), || {
+        let env = Env::new();
+        let f = future(Expr::Spin { millis: 5000 }, &env).unwrap();
+        assert!(f.cancel(), "cancel should succeed on a running future");
+        match f.value() {
+            Err(e) => {
+                assert!(!e.is_eval(), "cancellation is not an eval error");
+                assert!(e.is_recoverable(), "cancellation should be recoverable: {e}");
+            }
+            Ok(_) => panic!("cancelled future returned a value"),
+        }
+    });
+}
+
+#[test]
+fn pool_recovers_capacity_after_cancel() {
+    with_plan(PlanSpec::multiprocess(1), || {
+        let env = Env::new();
+        let f = future(Expr::Spin { millis: 5000 }, &env).unwrap();
+        assert!(f.cancel());
+        let _ = f.value();
+        // The single worker was killed; a new future must still run
+        // (capacity respawns on demand).
+        let g = future(Expr::lit(7i64), &env).unwrap();
+        assert_eq!(g.value().unwrap(), Value::I64(7));
+    });
+}
+
+#[test]
+fn retry_pattern_relaunches_after_failure() {
+    // The paper's retry({...}, times = 3, on = "FutureError") sketch.
+    with_plan(PlanSpec::multiprocess(1), || {
+        let env = Env::new();
+        let mut attempts = 0;
+        let v = loop {
+            attempts += 1;
+            let f = future(Expr::lit(42i64), &env).unwrap();
+            if attempts == 1 {
+                // Inject a failure on the first attempt.
+                f.cancel();
+            }
+            match f.value() {
+                Ok(v) => break v,
+                Err(e) if e.is_recoverable() && attempts < 3 => continue,
+                Err(e) => panic!("unrecoverable: {e}"),
+            }
+        };
+        assert_eq!(v, Value::I64(42));
+        assert_eq!(attempts, 2, "should have recovered on the second attempt");
+    });
+}
+
+#[test]
+fn batch_job_cancelled_before_start() {
+    with_plan(PlanSpec::Batch { workers: 1, submit_latency_ms: 200, poll_interval_ms: 2 }, || {
+        let env = Env::new();
+        let f = future(Expr::lit(1i64), &env).unwrap();
+        // Cancel while still pending (200ms submit latency guarantees it).
+        assert!(f.cancel());
+        match f.value() {
+            Err(e) => assert!(e.is_recoverable(), "{e}"),
+            Ok(_) => panic!("cancelled batch job returned a value"),
+        }
+    });
+}
+
+#[test]
+fn eval_error_is_not_recoverable_but_future_error_is() {
+    with_plan(PlanSpec::multicore(1), || {
+        let env = Env::new();
+        let f = future(Expr::stop(Expr::lit("user bug")), &env).unwrap();
+        let e = f.value().unwrap_err();
+        assert!(e.is_eval());
+        assert!(!e.is_recoverable());
+    });
+}
+
+#[test]
+fn missing_global_is_neither_eval_nor_recoverable() {
+    with_plan(PlanSpec::sequential(), || {
+        let env = Env::new();
+        let e = future(Expr::var("ghost"), &env).unwrap_err();
+        assert!(!e.is_eval());
+        assert!(!e.is_recoverable(), "missing global retries cannot succeed");
+    });
+}
+
+#[test]
+fn restart_relaunches_a_cancelled_future() {
+    // The paper's restart(f) future-work item, implemented.
+    with_plan(PlanSpec::multiprocess(1), || {
+        let mut env = Env::new();
+        env.insert("x", 21i64);
+        let f = future_with(
+            Expr::mul(Expr::var("x"), Expr::lit(2i64)),
+            &env,
+            FutureOpts::new().restartable(),
+        )
+        .unwrap();
+        f.cancel();
+        let first = f.value();
+        assert!(first.is_err(), "cancelled run should fail");
+        f.restart().unwrap();
+        assert_eq!(f.value().unwrap(), Value::I64(42));
+    });
+}
+
+#[test]
+fn restart_requires_opt_in() {
+    with_plan(PlanSpec::sequential(), || {
+        let env = Env::new();
+        let f = future(Expr::lit(1i64), &env).unwrap();
+        assert!(f.restart().is_err());
+    });
+}

@@ -1,0 +1,110 @@
+//! E6: nested parallelism and the built-in protection against it.
+//!
+//! The paper: without protection, PkgA×PkgB would run N² workers; with it,
+//! nested levels default to sequential unless the end-user configures
+//! `plan(list(...))` — then layer capacities multiply as configured.
+
+use rustures::api::plan::{current_topology, with_plan_topology, PlanSpec};
+use rustures::prelude::*;
+
+#[test]
+fn nested_futures_default_to_sequential_inside_workers() {
+    // A chunked lapply whose chunks each evaluate elements sequentially:
+    // depth-1 futures are created on the worker by the chunk's evaluation.
+    // With a single-level plan, the shipped nested topology must be empty
+    // (⇒ implicit sequential on workers), and the run must complete.
+    with_plan_topology(vec![PlanSpec::multiprocess(2)], || {
+        let env = Env::new();
+        let xs: Vec<Value> = (0..6i64).map(Value::I64).collect();
+        let out =
+            future_lapply(&xs, "x", &Expr::mul(Expr::var("x"), Expr::lit(2i64)), &env, &LapplyOpts::new())
+                .unwrap();
+        assert_eq!(out.len(), 6);
+    });
+}
+
+#[test]
+fn topology_defaults_and_tweaks() {
+    // plan(list(tweak(multisession, 2), tweak(multisession, 3))) → 2×3.
+    with_plan_topology(
+        vec![PlanSpec::multiprocess(2), PlanSpec::multiprocess(3)],
+        || {
+            let topo = current_topology();
+            assert_eq!(topo.len(), 2);
+            assert_eq!(topo[0].effective_workers(), 2);
+            assert_eq!(topo[1].effective_workers(), 3);
+        },
+    );
+}
+
+#[test]
+fn nested_plan_ships_remaining_topology_to_tasks() {
+    // The TaskSpec carries topology[d+1..]; verify through the public API by
+    // inspecting what the backend at depth 0 receives.
+    use rustures::api::plan::{at_depth, backend_for_current_depth};
+    with_plan_topology(
+        vec![PlanSpec::sequential(), PlanSpec::multicore(3), PlanSpec::sequential()],
+        || {
+            let (_b0, nested0) = backend_for_current_depth().unwrap();
+            assert_eq!(
+                nested0,
+                vec![PlanSpec::multicore(3), PlanSpec::sequential()],
+                "depth 0 ships the rest"
+            );
+            at_depth(1, || {
+                let (b1, nested1) = backend_for_current_depth().unwrap();
+                assert_eq!(b1.name(), "multicore");
+                assert_eq!(nested1, vec![PlanSpec::sequential()]);
+            });
+            at_depth(5, || {
+                // Beyond the topology: implicit sequential, nothing nested.
+                let (b5, nested5) = backend_for_current_depth().unwrap();
+                assert_eq!(b5.name(), "sequential");
+                assert!(nested5.is_empty());
+            });
+        },
+    );
+}
+
+#[test]
+fn two_layer_topology_runs_nested_lapply() {
+    // Outer layer: 2 thread workers; inner layer: sequential (protection).
+    // The inner "parallelism" is expressed via chunked evaluation inside
+    // each outer future.
+    with_plan_topology(vec![PlanSpec::multicore(2), PlanSpec::sequential()], || {
+        let env = Env::new();
+        let xs: Vec<Value> = (0..4i64).map(Value::I64).collect();
+        // Each outer element computes sum(x*1 .. x*3) through a list expr.
+        let body = Expr::prim(
+            rustures::api::expr::PrimOp::Sum,
+            vec![Expr::list(vec![
+                Expr::mul(Expr::var("x"), Expr::lit(1i64)),
+                Expr::mul(Expr::var("x"), Expr::lit(2i64)),
+                Expr::mul(Expr::var("x"), Expr::lit(3i64)),
+            ])],
+        );
+        let out = future_lapply(&xs, "x", &body, &env, &LapplyOpts::new()).unwrap();
+        assert_eq!(
+            out,
+            vec![Value::F64(0.0), Value::F64(6.0), Value::F64(12.0), Value::F64(18.0)]
+        );
+    });
+}
+
+#[test]
+fn implicit_sequential_beyond_topology_depth() {
+    // plan(list(multisession, multisession)) effectively equals
+    // plan(list(multisession, sequential)) when nested protection applies
+    // to deeper levels (paper: "plan(sequential) is implicit").
+    use rustures::api::plan::{at_depth, backend_for_current_depth};
+    with_plan_topology(vec![PlanSpec::multicore(2)], || {
+        at_depth(1, || {
+            let (b, _) = backend_for_current_depth().unwrap();
+            assert_eq!(b.name(), "sequential");
+        });
+        at_depth(2, || {
+            let (b, _) = backend_for_current_depth().unwrap();
+            assert_eq!(b.name(), "sequential");
+        });
+    });
+}

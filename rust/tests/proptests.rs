@@ -1,0 +1,285 @@
+//! Property-based tests on coordinator invariants (proptest_lite — the
+//! offline stand-in for proptest; see DESIGN.md §Substitutions).
+//!
+//! Invariants: wire-format roundtrips for arbitrary values/expressions,
+//! chunk partitions (cover/disjoint/balanced), globals analysis vs a naive
+//! reference, RNG stream algebra, and env capture snapshots.
+
+use rustures::api::env::Env;
+use rustures::api::expr::{Expr, PrimOp};
+use rustures::api::globals::free_variables;
+use rustures::api::rng::RngStream;
+use rustures::api::value::{Tensor, Value};
+use rustures::ipc::wire::{dec_expr, dec_value, enc_expr, enc_value, Decoder, Encoder};
+use rustures::mapreduce::{chunk_count, partition, Chunking};
+use rustures::proptest_lite::{check, Gen};
+
+// ------------------------------------------------------------ generators
+
+fn gen_value(g: &mut Gen, depth: usize) -> Value {
+    match g.usize_in(0, if depth == 0 { 5 } else { 6 }) {
+        0 => Value::Unit,
+        1 => Value::Bool(g.bool()),
+        2 => Value::I64(g.u64() as i64),
+        3 => Value::F64(g.f64_in(-1e6, 1e6)),
+        4 => Value::Str(g.ident()),
+        5 => {
+            let n = g.usize_in(0, 8);
+            let data: Vec<f32> = (0..n).map(|_| g.f64_in(-10.0, 10.0) as f32).collect();
+            Value::Tensor(Tensor::new(vec![n], data).unwrap())
+        }
+        _ => {
+            let n = g.usize_in(0, 3);
+            Value::List((0..n).map(|_| gen_value(g, depth - 1)).collect())
+        }
+    }
+}
+
+fn gen_expr(g: &mut Gen, depth: usize) -> Expr {
+    if depth == 0 {
+        return match g.usize_in(0, 1) {
+            0 => Expr::lit(gen_value(g, 1)),
+            _ => Expr::var(&g.ident()),
+        };
+    }
+    match g.usize_in(0, 9) {
+        0 => Expr::lit(gen_value(g, 1)),
+        1 => Expr::var(&g.ident()),
+        2 => Expr::let_in(&g.ident(), gen_expr(g, depth - 1), gen_expr(g, depth - 1)),
+        3 => Expr::seq((0..g.usize_in(1, 3)).map(|_| gen_expr(g, depth - 1)).collect()),
+        4 => Expr::list((0..g.usize_in(0, 3)).map(|_| gen_expr(g, depth - 1)).collect()),
+        5 => Expr::prim(
+            *g.choose(&[PrimOp::Add, PrimOp::Sub, PrimOp::Mul, PrimOp::Div, PrimOp::Sum]),
+            vec![gen_expr(g, depth - 1), gen_expr(g, depth - 1)],
+        ),
+        6 => Expr::if_else(
+            gen_expr(g, depth - 1),
+            gen_expr(g, depth - 1),
+            gen_expr(g, depth - 1),
+        ),
+        7 => Expr::dyn_lookup(gen_expr(g, depth - 1)),
+        8 => Expr::call(&g.ident(), vec![gen_expr(g, depth - 1)]),
+        _ => Expr::with_rng_stream(g.u64() % 1000, gen_expr(g, depth - 1)),
+    }
+}
+
+// ------------------------------------------------------------ properties
+
+#[test]
+fn prop_value_wire_roundtrip() {
+    check("value-wire-roundtrip", 200, |g| {
+        let v = gen_value(g, 3);
+        let mut e = Encoder::new();
+        enc_value(&mut e, &v);
+        let bytes = e.into_bytes();
+        let mut d = Decoder::new(&bytes);
+        let back = dec_value(&mut d).map_err(|e| e.to_string())?;
+        if back != v {
+            return Err(format!("roundtrip mismatch: {v:?} vs {back:?}"));
+        }
+        if !d.finished() {
+            return Err("trailing bytes".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_expr_wire_roundtrip() {
+    check("expr-wire-roundtrip", 200, |g| {
+        let expr = gen_expr(g, 4);
+        let mut e = Encoder::new();
+        enc_expr(&mut e, &expr);
+        let bytes = e.into_bytes();
+        let back = dec_expr(&mut Decoder::new(&bytes)).map_err(|e| e.to_string())?;
+        if back != expr {
+            return Err("expr roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_partition_covers_disjoint_balanced() {
+    check("partition-invariants", 300, |g| {
+        let n = g.usize_in(0, 500);
+        let chunks = g.usize_in(1, 64);
+        let parts = partition(n, chunks);
+        let mut covered = Vec::new();
+        for r in &parts {
+            covered.extend(r.clone());
+        }
+        if covered != (0..n).collect::<Vec<_>>() {
+            return Err(format!("not a cover: n={n} chunks={chunks}"));
+        }
+        if n > 0 {
+            let sizes: Vec<usize> = parts.iter().map(|r| r.len()).collect();
+            let min = sizes.iter().min().unwrap();
+            let max = sizes.iter().max().unwrap();
+            if max - min > 1 {
+                return Err(format!("unbalanced: {sizes:?}"));
+            }
+            if sizes.iter().any(|s| *s == 0) {
+                return Err("empty chunk".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_chunk_count_bounds() {
+    check("chunk-count-bounds", 300, |g| {
+        let n = g.usize_in(0, 1000);
+        let workers = g.usize_in(1, 32);
+        let policy = match g.usize_in(0, 3) {
+            0 => Chunking::PerElement,
+            1 => Chunking::PerWorker,
+            2 => Chunking::Scheduling(g.f64_in(0.1, 8.0)),
+            _ => Chunking::ChunkSize(g.usize_in(1, 50)),
+        };
+        let c = chunk_count(n, workers, policy);
+        if n == 0 && c != 0 {
+            return Err("n=0 must give 0 chunks".into());
+        }
+        if n > 0 && (c < 1 || c > n) {
+            return Err(format!("chunk count {c} out of [1, {n}]"));
+        }
+        Ok(())
+    });
+}
+
+/// Naive reference implementation of free-variable analysis using explicit
+/// substitution of bound names.
+fn naive_free_vars(expr: &Expr, bound: &mut Vec<String>, out: &mut Vec<String>) {
+    match expr {
+        Expr::Var(n) => {
+            if !bound.contains(n) && !out.contains(n) {
+                out.push(n.clone());
+            }
+        }
+        Expr::Let { name, value, body } => {
+            naive_free_vars(value, bound, out);
+            bound.push(name.clone());
+            naive_free_vars(body, bound, out);
+            bound.pop();
+        }
+        Expr::Seq(items) | Expr::List(items) => {
+            for i in items {
+                naive_free_vars(i, bound, out);
+            }
+        }
+        Expr::Index { list, index } => {
+            naive_free_vars(list, bound, out);
+            naive_free_vars(index, bound, out);
+        }
+        Expr::Call { args, .. } | Expr::Prim { args, .. } => {
+            for a in args {
+                naive_free_vars(a, bound, out);
+            }
+        }
+        Expr::If { cond, then, otherwise } => {
+            naive_free_vars(cond, bound, out);
+            naive_free_vars(then, bound, out);
+            naive_free_vars(otherwise, bound, out);
+        }
+        Expr::DynLookup(i) | Expr::Stop(i) => naive_free_vars(i, bound, out),
+        Expr::Emit { message, .. } => naive_free_vars(message, bound, out),
+        Expr::WithRngStream { body, .. } => naive_free_vars(body, bound, out),
+        Expr::Lit(_)
+        | Expr::Rng { .. }
+        | Expr::Spin { .. }
+        | Expr::Sleep { .. }
+        | Expr::Work { .. } => {}
+    }
+}
+
+#[test]
+fn prop_globals_analysis_matches_naive_reference() {
+    check("globals-vs-naive", 300, |g| {
+        let expr = gen_expr(g, 4);
+        let got = free_variables(&expr);
+        let mut want = Vec::new();
+        naive_free_vars(&expr, &mut Vec::new(), &mut want);
+        if got != want {
+            return Err(format!("free vars {got:?} != naive {want:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rng_jump_composition() {
+    // nth_stream(s, a+b) == next_stream applied b times to nth_stream(s, a)
+    check("rng-jump-composition", 30, |g| {
+        let seed = g.u64();
+        let a = g.usize_in(0, 20) as u64;
+        let b = g.usize_in(0, 5) as u64;
+        let direct = RngStream::nth_stream(seed, a + b);
+        let mut stepped = RngStream::nth_stream(seed, a);
+        for _ in 0..b {
+            stepped = stepped.next_stream();
+        }
+        if direct != stepped {
+            return Err(format!("jump composition broken at seed={seed} a={a} b={b}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_env_subset_snapshot_independence() {
+    check("env-snapshot", 200, |g| {
+        let mut env = Env::new();
+        let names: Vec<String> = (0..g.usize_in(1, 6)).map(|_| g.ident()).collect();
+        for n in &names {
+            env.insert(n, Value::I64(g.u64() as i64));
+        }
+        let snap = env.subset(&names);
+        // Mutate originals; snapshot unaffected.
+        let before: Vec<Option<Value>> = names.iter().map(|n| snap.get(n).cloned()).collect();
+        for n in &names {
+            env.insert(n, Value::Str("mutated".into()));
+        }
+        let after: Vec<Option<Value>> = names.iter().map(|n| snap.get(n).cloned()).collect();
+        if before != after {
+            return Err("snapshot changed after env mutation".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_relay_order_stdout_first_conditions_in_seq() {
+    use rustures::api::conditions::{CaptureBuffer, ConditionKind};
+    check("relay-order", 200, |g| {
+        let mut buf = CaptureBuffer::new();
+        let n = g.usize_in(0, 12);
+        let mut expected_kinds = Vec::new();
+        for _ in 0..n {
+            match g.usize_in(0, 2) {
+                0 => buf.capture_stdout("x"),
+                1 => {
+                    buf.signal(ConditionKind::Message, "m");
+                    expected_kinds.push(ConditionKind::Message);
+                }
+                _ => {
+                    buf.signal(ConditionKind::Warning, "w");
+                    expected_kinds.push(ConditionKind::Warning);
+                }
+            }
+        }
+        let captured = buf.finish();
+        let order = captured.relay_order(false);
+        // Conditions relayed in capture order.
+        let kinds: Vec<ConditionKind> = order.iter().map(|c| c.kind).collect();
+        if kinds != expected_kinds {
+            return Err(format!("order {kinds:?} != {expected_kinds:?}"));
+        }
+        let seqs: Vec<u64> = order.iter().map(|c| c.seq).collect();
+        if seqs.windows(2).any(|w| w[0] >= w[1]) {
+            return Err(format!("non-monotone seq {seqs:?}"));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,167 @@
+//! Integration: AOT artifacts execute correctly through PJRT, from the
+//! coordinator and from worker processes (the full L1→L2→L3 composition).
+//!
+//! Requires `make artifacts` (skipped gracefully otherwise).
+
+use rustures::api::plan::{with_plan, PlanSpec};
+use rustures::prelude::*;
+
+fn runtime() -> Option<rustures::runtime::RuntimeHandle> {
+    rustures::runtime::global().map(|rt| rt.handle())
+}
+
+fn uniform_tensor(shape: &[usize], seed: u64) -> Tensor {
+    let mut rng = RngStream::from_seed(seed);
+    let n: usize = shape.iter().product();
+    Tensor::new(shape.to_vec(), rng.unif_f32(n)).unwrap()
+}
+
+#[test]
+fn slow_fcn_direct_execution_is_deterministic() {
+    let Some(rt) = runtime() else { return };
+    let x = Value::Tensor(uniform_tensor(&[128, 128], 1));
+    let a = rt.execute("slow_fcn", vec![x.clone()]).unwrap();
+    let b = rt.execute("slow_fcn", vec![x]).unwrap();
+    assert_eq!(a, b);
+    let t = a.as_tensor().unwrap();
+    assert_eq!(t.shape, vec![128, 128]);
+    assert!(t.data.iter().all(|v| v.is_finite() && v.abs() <= 1.0)); // tanh-bounded
+}
+
+#[test]
+fn kernel_arg_validation_errors_cleanly() {
+    let Some(rt) = runtime() else { return };
+    // Wrong arity.
+    let err = rt.execute("slow_fcn", vec![]).unwrap_err();
+    assert!(err.message.contains("expected 1 arguments"));
+    // Wrong shape.
+    let bad = Value::Tensor(Tensor::zeros(&[2, 2]));
+    let err = rt.execute("slow_fcn", vec![bad]).unwrap_err();
+    assert!(err.message.contains("shape"));
+    // Unknown kernel.
+    let err = rt.execute("nope", vec![]).unwrap_err();
+    assert!(err.message.contains("could not find function"));
+    // Non-tensor argument.
+    let err = rt.execute("slow_fcn", vec![Value::I64(1)]).unwrap_err();
+    assert!(err.message.contains("must be a tensor"));
+}
+
+#[test]
+fn bootstrap_stat_recovers_known_line() {
+    let Some(rt) = runtime() else { return };
+    // y = 3x - 1 exactly: WLS must return slope 3, intercept -1.
+    let n = 4096;
+    let mut rng = RngStream::from_seed(7);
+    let mut data = Vec::with_capacity(n * 2);
+    for _ in 0..n {
+        let x = rng.next_unif() as f32 * 4.0 - 2.0;
+        data.push(x);
+        data.push(3.0 * x - 1.0);
+    }
+    let xy = Value::Tensor(Tensor::new(vec![n, 2], data).unwrap());
+    let w = Value::Tensor(Tensor::new(vec![n], vec![1.0; n]).unwrap());
+    let out = rt.execute("bootstrap_stat", vec![xy, w]).unwrap();
+    let parts = out.as_list().unwrap();
+    let slope = parts[0].as_f64().unwrap();
+    let intercept = parts[1].as_f64().unwrap();
+    assert!((slope - 3.0).abs() < 1e-2, "slope {slope}");
+    assert!((intercept + 1.0).abs() < 1e-2, "intercept {intercept}");
+}
+
+#[test]
+fn mc_pi_block_estimates_pi() {
+    let Some(rt) = runtime() else { return };
+    let u = Value::Tensor(uniform_tensor(&[8192, 2], 99));
+    let out = rt.execute("mc_pi_block", vec![u]).unwrap();
+    let pi = out.as_f64().unwrap();
+    assert!((pi - std::f64::consts::PI).abs() < 0.1, "pi estimate {pi}");
+}
+
+#[test]
+fn mlp_step_reduces_loss_over_iterations() {
+    let Some(rt) = runtime() else { return };
+    let d = 128;
+    let mut rng = RngStream::from_seed(3);
+    let scale = 0.1f32;
+    let mk = |rng: &mut RngStream, shape: &[usize], s: f32| {
+        let n: usize = shape.iter().product();
+        let data: Vec<f32> = rng.norm_f32(n).iter().map(|v| v * s).collect();
+        Value::Tensor(Tensor::new(shape.to_vec(), data).unwrap())
+    };
+    let mut w1 = mk(&mut rng, &[d, d], scale);
+    let mut b1 = Value::Tensor(Tensor::zeros(&[d]));
+    let mut w2 = mk(&mut rng, &[d, d], scale);
+    let mut b2 = Value::Tensor(Tensor::zeros(&[d]));
+    let x = mk(&mut rng, &[d, d], 1.0);
+    let y = mk(&mut rng, &[d, d], 0.5);
+
+    let mut losses = Vec::new();
+    for _ in 0..4 {
+        let out = rt
+            .execute("mlp_step", vec![w1, b1, w2, b2, x.clone(), y.clone()])
+            .unwrap();
+        let parts = out.as_list().unwrap().to_vec();
+        losses.push(parts[0].as_f64().unwrap());
+        w1 = parts[1].clone();
+        b1 = parts[2].clone();
+        w2 = parts[3].clone();
+        b2 = parts[4].clone();
+    }
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "loss did not decrease: {losses:?}"
+    );
+}
+
+#[test]
+fn kernel_call_through_future_on_worker_process() {
+    // The full stack: future → multisession worker process → PJRT → result.
+    with_plan(PlanSpec::multiprocess(1), || {
+        let mut env = Env::new();
+        env.insert("x", Value::Tensor(uniform_tensor(&[128, 128], 5)));
+        let f = future(Expr::call("slow_fcn", vec![Expr::var("x")]), &env).unwrap();
+        match f.value() {
+            Ok(v) => {
+                let t = v.as_tensor().unwrap();
+                assert_eq!(t.shape, vec![128, 128]);
+                // Must equal direct (coordinator-side) execution.
+                if let Some(rt) = runtime() {
+                    let direct = rt
+                        .execute(
+                            "slow_fcn",
+                            vec![Value::Tensor(uniform_tensor(&[128, 128], 5))],
+                        )
+                        .unwrap();
+                    assert_eq!(v, direct);
+                }
+            }
+            // Artifacts absent in the workers: the future must fail with a
+            // clean eval error, not hang.
+            Err(FutureError::Eval(e)) => {
+                assert!(e.message.contains("slow_fcn"));
+            }
+            Err(other) => panic!("unexpected failure: {other}"),
+        }
+    });
+}
+
+#[test]
+fn same_kernel_result_on_every_backend() {
+    let Some(_) = runtime() else { return };
+    let x = Value::Tensor(uniform_tensor(&[128, 128], 11));
+    let run = |spec: PlanSpec| {
+        with_plan(spec, || {
+            let mut env = Env::new();
+            env.insert("x", x.clone());
+            future(Expr::call("slow_fcn", vec![Expr::var("x")]), &env)
+                .unwrap()
+                .value()
+                .unwrap()
+        })
+    };
+    let seq = run(PlanSpec::sequential());
+    let thr = run(PlanSpec::multicore(2));
+    let proc = run(PlanSpec::multiprocess(1));
+    assert_eq!(seq, thr, "sequential vs multicore");
+    assert_eq!(seq, proc, "sequential vs multisession");
+}
