@@ -4,11 +4,16 @@
 //! if the overhead of creating a future is relatively large compared to the
 //! evaluation time", mitigated by processing elements in chunks — one
 //! future per worker.  This bench regenerates that table: N cheap elements
-//! under each chunking policy, per backend.
+//! under each chunking policy, per backend.  Since the `Expr::MapChunk`
+//! hot path, a chunk ships ONE body plus packed elements, so the per-chunk
+//! cost is O(elements), never O(elements·|body|).
+//!
+//! Emits `BENCH_chunking.json` (schema in BENCH.md); `scripts/bench.sh`
+//! runs this in smoke mode.
 
 mod common;
 
-use common::{fmt_dur, header, row, time_once};
+use common::{fmt_dur, header, json_row, row, smoke, time_once, write_bench_json, Json};
 use rustures::api::plan::{with_plan, PlanSpec};
 use rustures::prelude::*;
 
@@ -39,8 +44,10 @@ fn main() {
         &["backend     ", "N    ", "policy          ", "wall      ", "per-elem  "],
     );
 
+    let sizes: &[usize] = if smoke() { &[64, 256] } else { &[64, 256, 1024] };
+    let mut json_rows = Vec::new();
     for spec in [PlanSpec::multicore(2), PlanSpec::multiprocess(2)] {
-        for n in [64usize, 256, 1024] {
+        for &n in sizes {
             for (label, chunking) in [
                 ("per-element", Chunking::PerElement),
                 ("per-worker", Chunking::PerWorker),
@@ -55,8 +62,16 @@ fn main() {
                     format!("{:>10}", fmt_dur(wall)),
                     format!("{:>10}", fmt_dur(wall / n as u32)),
                 ]);
+                json_rows.push(json_row(&[
+                    ("backend", Json::Str(spec.name().to_string())),
+                    ("n", Json::Int(n as i64)),
+                    ("policy", Json::Str(label.to_string())),
+                    ("wall_ns", Json::Int(wall.as_nanos() as i64)),
+                    ("per_elem_ns", Json::Int((wall.as_nanos() / n as u128) as i64)),
+                ]));
             }
         }
     }
+    write_bench_json("chunking", json_rows);
     println!("\nshape check: per-worker chunking beats per-element by ~N/workers on overhead-dominated maps");
 }

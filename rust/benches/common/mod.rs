@@ -1,9 +1,60 @@
 //! Shared bench harness: criterion is unavailable offline, so each bench is
 //! a `harness = false` binary using this minimal measured-loop helper.
-//! Output is a fixed-width table (one row per configuration) — the format
-//! EXPERIMENTS.md records.
+//! Output is a fixed-width table (one row per configuration) — plus, for
+//! the benches that track the perf trajectory across PRs, a
+//! machine-readable `BENCH_<name>.json` (see BENCH.md at the repo root).
+//!
+//! Env knobs:
+//! * `BENCH_SMOKE=1` — reduced iteration counts (CI / scripts/bench.sh).
+//! * `BENCH_OUT=dir` — where `BENCH_*.json` files are written (default `.`).
+
+#![allow(dead_code)] // each bench binary uses a subset of these helpers
 
 use std::time::{Duration, Instant};
+
+pub use rustures::util::json::Json;
+use rustures::util::json;
+
+/// Smoke mode: fewer iterations, same schema.
+pub fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE").map(|v| v != "0").unwrap_or(false)
+}
+
+/// Scale an iteration count down in smoke mode (min 3 so stats exist).
+pub fn scale_iters(full: usize) -> usize {
+    if smoke() {
+        (full / 10).max(3)
+    } else {
+        full
+    }
+}
+
+/// One row of a `BENCH_*.json` file (serialized via the crate's own
+/// [`rustures::util::json`] — one escaping implementation, not two).
+pub fn json_row(fields: &[(&str, Json)]) -> Json {
+    Json::Obj(fields.iter().map(|(k, v)| (k.to_string(), v.clone())).collect())
+}
+
+/// Write `BENCH_<name>.json` into `$BENCH_OUT` (default `.`).  Schema is
+/// documented in BENCH.md; `rows` are [`json_row`] objects.
+pub fn write_bench_json(name: &str, rows: Vec<Json>) {
+    let dir = std::env::var("BENCH_OUT").unwrap_or_else(|_| ".".to_string());
+    let path = std::path::Path::new(&dir).join(format!("BENCH_{name}.json"));
+    let doc = Json::Obj(
+        [
+            ("bench".to_string(), Json::Str(name.to_string())),
+            ("schema".to_string(), Json::Int(1)),
+            ("smoke".to_string(), Json::Bool(smoke())),
+            ("rows".to_string(), Json::Arr(rows)),
+        ]
+        .into_iter()
+        .collect(),
+    );
+    match std::fs::write(&path, json::to_string(&doc) + "\n") {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("bench: could not write {}: {e}", path.display()),
+    }
+}
 
 /// Run `f` `iters` times after `warmup` unmeasured runs; returns per-iter
 /// stats (mean, p50, p95) over individually timed iterations.

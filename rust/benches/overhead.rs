@@ -6,11 +6,16 @@
 //! ('cluster' and 'batchtools'), are better suited for large-throughput
 //! requirements."  The expected *shape*: sequential < multicore <
 //! multisession ≈ cluster < batchtools, growing with payload size on the
-//! serializing backends.
+//! serializing backends — and, since the zero-copy hot path, multicore must
+//! be ~flat in payload size (globals capture and thread hand-off are Arc
+//! bumps, not buffer copies).
+//!
+//! Emits `BENCH_overhead.json` (schema in BENCH.md) so the perf trajectory
+//! is diffable across PRs; `scripts/bench.sh` runs this in smoke mode.
 
 mod common;
 
-use common::{fmt_dur, header, measure, row};
+use common::{fmt_dur, header, json_row, measure, row, scale_iters, write_bench_json, Json};
 use rustures::api::plan::{with_plan, PlanSpec};
 use rustures::prelude::*;
 
@@ -41,7 +46,9 @@ fn main() {
         &["backend     ", "payload ", "mean      ", "p50       ", "p95       "],
     );
 
+    let mut json_rows = Vec::new();
     for (spec, iters) in backends {
+        let iters = scale_iters(iters);
         for bytes in payloads {
             let (env, expr) = payload_env(bytes);
             let name = spec.name();
@@ -59,7 +66,16 @@ fn main() {
                 format!("{:>10}", fmt_dur(stats.p50)),
                 format!("{:>10}", fmt_dur(stats.p95)),
             ]);
+            json_rows.push(json_row(&[
+                ("backend", Json::Str(name.to_string())),
+                ("payload_bytes", Json::Int(bytes as i64)),
+                ("mean_ns", Json::Int(stats.mean.as_nanos() as i64)),
+                ("p50_ns", Json::Int(stats.p50.as_nanos() as i64)),
+                ("p95_ns", Json::Int(stats.p95.as_nanos() as i64)),
+                ("iters", Json::Int(stats.n as i64)),
+            ]));
         }
     }
-    println!("\nshape check: multicore ≪ multisession/cluster ≪ batchtools; cost grows with payload on serializing backends");
+    write_bench_json("overhead", json_rows);
+    println!("\nshape check: multicore ≪ multisession/cluster ≪ batchtools; cost grows with payload on serializing backends (multicore stays ~flat: zero-copy hand-off)");
 }

@@ -10,13 +10,15 @@
 //!   such as terminated R workers and failed communication", plus
 //!   creation-time failures (missing globals).  These are signaled as a
 //!   distinct class so callers can restart workers or relaunch futures.
+//!
+//! (`thiserror` is unavailable in this offline image, so the `Display` and
+//! `Error` impls are written by hand.)
 
-use thiserror::Error;
+use std::fmt;
 
 /// An error produced while *evaluating* a future's expression — relayed
 /// verbatim to the caller of `value()`, mimicking non-future behaviour.
-#[derive(Debug, Clone, PartialEq, Error)]
-#[error("{message}")]
+#[derive(Debug, Clone, PartialEq)]
 pub struct EvalError {
     /// The error message, exactly as signaled on the worker.
     pub message: String,
@@ -34,46 +36,86 @@ impl EvalError {
     }
 }
 
+impl fmt::Display for EvalError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.message)
+    }
+}
+
+impl std::error::Error for EvalError {}
+
 /// Infrastructure-level failures of the future framework itself —
 /// the paper's *FutureError* class.
-#[derive(Debug, Error)]
+///
+/// `Clone` so a [`crate::api::future::Future`] can store a terminal failure
+/// and replay the *same* error (kind included) on every later
+/// `resolved()`/`value()` call.
+#[derive(Debug, Clone)]
 pub enum FutureError {
     /// Static analysis (or explicit spec) referenced a variable absent from
     /// the calling environment at creation time.
-    #[error("object '{name}' not found (missing global at future creation)")]
     MissingGlobal { name: String },
 
     /// The worker process/thread died before resolving the future.
-    #[error("FutureError: worker terminated unexpectedly{}", detail_fmt(.detail))]
     WorkerDied { detail: String },
 
     /// Communication with a worker failed (broken pipe/socket, bad frame).
-    #[error("FutureError: communication with worker failed: {0}")]
     Channel(String),
 
     /// Backend could not launch the future (pool shut down, scheduler
     /// rejected the job, ...).
-    #[error("FutureError: could not launch future: {0}")]
     Launch(String),
 
     /// The requested plan/backend is invalid or unavailable.
-    #[error("FutureError: invalid plan: {0}")]
     InvalidPlan(String),
 
     /// PJRT runtime failure (artifact missing, compile error, bad shapes).
-    #[error("FutureError: runtime: {0}")]
     Runtime(String),
 
     /// The future was cancelled before it resolved (extension feature;
     /// `suspend()`/cancellation is "Future work" in the paper).
-    #[error("FutureError: future was cancelled")]
     Cancelled,
 
     /// An evaluation error relayed through `value()`.  Kept in this enum so
     /// `value()` has a single error type; pattern-match to distinguish —
     /// everything else is an infrastructure failure.
-    #[error("{0}")]
-    Eval(#[from] EvalError),
+    Eval(EvalError),
+}
+
+impl fmt::Display for FutureError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FutureError::MissingGlobal { name } => {
+                write!(f, "object '{name}' not found (missing global at future creation)")
+            }
+            FutureError::WorkerDied { detail } => {
+                write!(f, "FutureError: worker terminated unexpectedly{}", detail_fmt(detail))
+            }
+            FutureError::Channel(m) => {
+                write!(f, "FutureError: communication with worker failed: {m}")
+            }
+            FutureError::Launch(m) => write!(f, "FutureError: could not launch future: {m}"),
+            FutureError::InvalidPlan(m) => write!(f, "FutureError: invalid plan: {m}"),
+            FutureError::Runtime(m) => write!(f, "FutureError: runtime: {m}"),
+            FutureError::Cancelled => write!(f, "FutureError: future was cancelled"),
+            FutureError::Eval(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for FutureError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            FutureError::Eval(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<EvalError> for FutureError {
+    fn from(e: EvalError) -> Self {
+        FutureError::Eval(e)
+    }
 }
 
 fn detail_fmt(detail: &str) -> String {
@@ -135,5 +177,15 @@ mod tests {
         assert_eq!(e.to_string(), "FutureError: worker terminated unexpectedly");
         let e = FutureError::WorkerDied { detail: "exit 137".into() };
         assert!(e.to_string().ends_with(": exit 137"));
+    }
+
+    #[test]
+    fn clone_preserves_error_kind() {
+        // Future stores terminal failures and replays them; the clone must
+        // keep the taxonomy (WorkerDied stays recoverable, etc).
+        let e = FutureError::WorkerDied { detail: "gone".into() };
+        let c = e.clone();
+        assert!(c.is_recoverable());
+        assert_eq!(c.to_string(), e.to_string());
     }
 }

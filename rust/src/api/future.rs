@@ -61,7 +61,8 @@ pub struct FutureOpts {
     pub lazy: bool,
     /// Keep the task spec so the future can be [`Future::restart`]ed after
     /// an infrastructure failure (paper's `restart(f)` future-work item).
-    /// Off by default: it clones the captured globals.
+    /// Off by default.  (Retention is cheap since tensor payloads are
+    /// Arc-shared — the clone is O(1) in payload bytes.)
     pub restartable: bool,
     /// Human-readable label.
     pub label: Option<String>,
@@ -111,8 +112,11 @@ enum State {
     Running { handle: Box<dyn TaskHandle>, supports_immediate: bool },
     /// Result collected from the handle (value() may be called repeatedly).
     Done(Box<TaskResult>),
-    /// Infrastructure failure captured for replay on later calls.
-    Failed(String),
+    /// Infrastructure failure captured for replay on later calls — the
+    /// original [`FutureError`] is kept (not stringified) so its kind
+    /// survives: a `WorkerDied` future stays recoverable however often it
+    /// is probed or collected.
+    Failed(FutureError),
 }
 
 /// A future: a placeholder for the value of `expr` evaluated with the
@@ -220,18 +224,30 @@ impl Future {
     pub fn launch(&self) -> Result<(), FutureError> {
         let mut state = self.state.lock().unwrap();
         if let State::Lazy(_) = &*state {
-            let task = match std::mem::replace(&mut *state, State::Failed("launching".into())) {
+            // A failed launch attempt is TERMINAL for this future: the real
+            // error (kind intact) is latched into State::Failed, so
+            // resolved(), value(), and result() all replay the same failure
+            // no matter which is called first — mirroring eager futures,
+            // which error at creation.  Retry is the restart() /
+            // FutureOpts::restartable path, not silent relaunching.
+            let (backend, _) = match backend_for_current_depth() {
+                Ok(b) => b,
+                Err(e) => {
+                    *state = State::Failed(e.clone());
+                    return Err(e);
+                }
+            };
+            let placeholder = State::Failed(FutureError::Launch("launch in progress".into()));
+            let task = match std::mem::replace(&mut *state, placeholder) {
                 State::Lazy(t) => t,
                 _ => unreachable!(),
             };
-            let (backend, _) = backend_for_current_depth()?;
             let supports_immediate = backend.supports_immediate();
             record_event(&self.trace, "launch");
             match backend.launch(*task) {
                 Ok(handle) => *state = State::Running { handle, supports_immediate },
                 Err(e) => {
-                    let msg = e.to_string();
-                    *state = State::Failed(msg);
+                    *state = State::Failed(e.clone());
                     return Err(e);
                 }
             }
@@ -252,6 +268,8 @@ impl Future {
             }
         }
         // Lazy: launch first (outside the match to avoid double-lock).
+        // A launch error latches State::Failed inside launch(), so the
+        // match below reports it as resolved — pollers never spin forever.
         if matches!(&*self.state.lock().unwrap(), State::Lazy(_)) {
             let _ = self.launch();
         }
@@ -265,7 +283,7 @@ impl Future {
                             record_event(&self.trace, "resolved");
                             *state = State::Done(Box::new(result));
                         }
-                        Err(e) => *state = State::Failed(e.to_string()),
+                        Err(e) => *state = State::Failed(e),
                     }
                     true
                 } else {
@@ -273,7 +291,9 @@ impl Future {
                 }
             }
             State::Done(_) | State::Failed(_) => true,
-            State::Lazy(_) => false, // launch failed; failure stored
+            // Not reachable in practice: launch() above either converted the
+            // state or latched its error.  Defensive false, not a panic.
+            State::Lazy(_) => false,
         }
     }
 
@@ -298,7 +318,7 @@ impl Future {
         let mut state = self.state.lock().unwrap();
         match &mut *state {
             State::Done(r) => Ok((**r).clone()),
-            State::Failed(msg) => Err(FutureError::Launch(msg.clone())),
+            State::Failed(e) => Err(e.clone()),
             State::Running { handle, .. } => {
                 record_event(&self.trace, "collect-wait");
                 match handle.wait() {
@@ -308,7 +328,7 @@ impl Future {
                         Ok(result)
                     }
                     Err(e) => {
-                        *state = State::Failed(e.to_string());
+                        *state = State::Failed(e.clone());
                         Err(e)
                     }
                 }
@@ -397,7 +417,7 @@ impl Future {
         match &mut *state {
             State::Running { handle, .. } => handle.cancel(),
             State::Lazy(_) => {
-                *state = State::Failed(FutureError::Cancelled.to_string());
+                *state = State::Failed(FutureError::Cancelled);
                 true
             }
             _ => false,

@@ -84,6 +84,13 @@ fn collect(
         Expr::Emit { message, .. } => collect(message, bound, seen, out),
         Expr::Stop(inner) => collect(inner, bound, seen, out),
         Expr::WithRngStream { body, .. } => collect(body, bound, seen, out),
+        // The chunk parameter is locally bound inside the shared body;
+        // elements are literal values and contribute no names.
+        Expr::MapChunk { param, body, .. } => {
+            bound.push(param.clone());
+            collect(body, bound, seen, out);
+            bound.pop();
+        }
         Expr::Lit(_)
         | Expr::Rng { .. }
         | Expr::Spin { .. }
@@ -178,6 +185,17 @@ mod tests {
         // { k; get("k") } — mentioning k makes it a detected global.
         let e = Expr::seq(vec![Expr::var("k"), Expr::dyn_lookup(Expr::lit("k"))]);
         assert_eq!(free_variables(&e), vec!["k"]);
+    }
+
+    #[test]
+    fn map_chunk_binds_param_like_let() {
+        use crate::api::value::Value;
+        use std::sync::Arc;
+        // MapChunk{param: x, body: x + offset} → only `offset` is free,
+        // matching the per-element `let x = <el> in body` desugaring.
+        let body = Arc::new(Expr::add(Expr::var("x"), Expr::var("offset")));
+        let chunk = Expr::map_chunk("x", body, vec![Value::I64(1)], 0);
+        assert_eq!(free_variables(&chunk), vec!["offset"]);
     }
 
     #[test]

@@ -17,7 +17,7 @@
 //! stream draws rather than R's inversion method — deterministic and
 //! stream-stable, but numerically different normals than R would produce.
 
-use once_cell::sync::Lazy;
+use std::sync::OnceLock;
 
 const M1: u64 = 4294967087; // 2^32 - 209
 const M2: u64 = 4294944443; // 2^32 - 22853
@@ -72,8 +72,11 @@ fn mat_pow2k(a: &Mat, k: u32, m: u64) -> Mat {
 }
 
 /// The 2^127 jump matrices (stream spacing), computed once.
-static JUMP: Lazy<(Mat, Mat)> =
-    Lazy::new(|| (mat_pow2k(&A1_STEP, 127, M1), mat_pow2k(&A2_STEP, 127, M2)));
+static JUMP: OnceLock<(Mat, Mat)> = OnceLock::new();
+
+fn jump() -> &'static (Mat, Mat) {
+    JUMP.get_or_init(|| (mat_pow2k(&A1_STEP, 127, M1), mat_pow2k(&A2_STEP, 127, M2)))
+}
 
 fn mat_pow(a: &Mat, mut e: u64, m: u64) -> Mat {
     // a^e by square-and-multiply.
@@ -120,7 +123,7 @@ impl RngStream {
         if index == 0 {
             return base;
         }
-        let (j1, j2) = &*JUMP;
+        let (j1, j2) = jump();
         let p1 = mat_pow(j1, index, M1);
         let p2 = mat_pow(j2, index, M2);
         RngStream { s1: mat_vec(&p1, &base.s1, M1), s2: mat_vec(&p2, &base.s2, M2) }
@@ -128,7 +131,7 @@ impl RngStream {
 
     /// Advance this stream to the next one (exactly R's `nextRNGStream`).
     pub fn next_stream(&self) -> Self {
-        let (j1, j2) = &*JUMP;
+        let (j1, j2) = jump();
         RngStream { s1: mat_vec(j1, &self.s1, M1), s2: mat_vec(j2, &self.s2, M2) }
     }
 

@@ -5,19 +5,39 @@
 //! (the PJRT interchange type), and lists — and every variant serializes
 //! through [`crate::ipc::wire`] so any backend (in-process, pipe, TCP,
 //! batch-file) transports the same representation.
+//!
+//! §Perf — zero-copy clones: [`Tensor`] payloads live in an `Arc<[f32]>`,
+//! so every clone on the future hot path — globals capture at creation,
+//! element literals in map-reduce chunks, the in-process hand-off to
+//! threadpool workers, `restart()` spec retention — is a reference-count
+//! bump, O(1) in payload bytes.  Mutation goes through the copy-on-write
+//! [`Tensor::data_mut`], which detaches a private buffer only when the
+//! payload is actually shared.
 
 use std::fmt;
+use std::sync::Arc;
 
 /// A dense row-major f32 tensor — the PJRT buffer interchange type.
+///
+/// Cloning shares the payload buffer (see module docs); `==` compares
+/// contents, not identity.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
     pub shape: Vec<usize>,
-    pub data: Vec<f32>,
+    /// Shared payload.  Reads deref straight to `[f32]`; writers use
+    /// [`Tensor::data_mut`] for copy-on-write semantics.
+    pub data: Arc<[f32]>,
 }
 
 impl Tensor {
     /// Build a tensor, validating that `data` fills `shape` exactly.
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self, String> {
+        Self::from_shared(shape, data.into())
+    }
+
+    /// Build from an already-shared buffer (wire decode, slicing) without
+    /// copying; validates the element count like [`Tensor::new`].
+    pub fn from_shared(shape: Vec<usize>, data: Arc<[f32]>) -> Result<Self, String> {
         let n: usize = shape.iter().product();
         if n != data.len() {
             return Err(format!(
@@ -30,14 +50,22 @@ impl Tensor {
         Ok(Tensor { shape, data })
     }
 
+    /// Internal constructor for freshly computed buffers whose length is
+    /// correct by construction (evaluator arithmetic, RNG fills — these
+    /// collect straight into the shared allocation, no intermediate Vec).
+    pub(crate) fn from_parts(shape: Vec<usize>, data: Arc<[f32]>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data }
+    }
+
     /// A scalar (rank-0) tensor.
     pub fn scalar(v: f32) -> Self {
-        Tensor { shape: vec![], data: vec![v] }
+        Tensor { shape: vec![], data: std::iter::once(v).collect() }
     }
 
     pub fn zeros(shape: &[usize]) -> Self {
         let n = shape.iter().product();
-        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+        Tensor { shape: shape.to_vec(), data: std::iter::repeat(0.0).take(n).collect() }
     }
 
     pub fn rank(&self) -> usize {
@@ -50,6 +78,22 @@ impl Tensor {
 
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
+    }
+
+    /// Copy-on-write mutable access: detaches a private copy of the buffer
+    /// iff it is currently shared, then hands out `&mut [f32]`.
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        if Arc::get_mut(&mut self.data).is_none() {
+            let copied: Arc<[f32]> = Arc::from(&self.data[..]);
+            self.data = copied;
+        }
+        Arc::get_mut(&mut self.data).expect("uniquely owned after copy-on-write detach")
+    }
+
+    /// Do two tensors share one payload allocation?  (Diagnostics/tests for
+    /// the zero-copy invariant; not part of value equality.)
+    pub fn shares_data(&self, other: &Tensor) -> bool {
+        Arc::ptr_eq(&self.data, &other.data)
     }
 }
 
@@ -124,8 +168,9 @@ impl Value {
         }
     }
 
-    /// Approximate in-memory payload size in bytes (used by metrics and the
-    /// cluster backend's transfer accounting).
+    /// Approximate in-memory payload size in bytes (used by metrics, the
+    /// cluster backend's transfer accounting, and the wire encoder's
+    /// buffer-size hints).
     pub fn byte_size(&self) -> usize {
         match self {
             Value::Unit => 1,
@@ -149,7 +194,7 @@ impl fmt::Display for Value {
             Value::Tensor(t) => {
                 write!(f, "tensor{:?}", t.shape)?;
                 if t.len() <= 4 {
-                    write!(f, "{:?}", t.data)?;
+                    write!(f, "{:?}", &t.data[..])?;
                 }
                 Ok(())
             }
@@ -217,6 +262,7 @@ mod tests {
     fn tensor_shape_validation() {
         assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
         assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+        assert!(Tensor::from_shared(vec![2], vec![0.0; 3].into()).is_err());
         assert_eq!(Tensor::scalar(2.5).rank(), 0);
         assert_eq!(Tensor::zeros(&[4, 4]).len(), 16);
     }
@@ -241,5 +287,39 @@ mod tests {
     fn display_is_stable() {
         let v = Value::List(vec![Value::from(1i64), Value::from("a")]);
         assert_eq!(format!("{v}"), "[1, \"a\"]");
+    }
+
+    #[test]
+    fn clone_shares_payload_buffer() {
+        // The zero-copy invariant: cloning a tensor (directly or inside a
+        // Value/List) must not copy the f32 buffer.
+        let t = Tensor::zeros(&[256]);
+        let c = t.clone();
+        assert!(t.shares_data(&c));
+
+        let v = Value::List(vec![Value::Tensor(t.clone()), Value::I64(1)]);
+        let v2 = v.clone();
+        match (&v, &v2) {
+            (Value::List(a), Value::List(b)) => {
+                let (ta, tb) = (a[0].as_tensor().unwrap(), b[0].as_tensor().unwrap());
+                assert!(ta.shares_data(tb));
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn data_mut_is_copy_on_write() {
+        let base = Tensor::zeros(&[4]);
+        let mut shared = base.clone();
+        shared.data_mut()[0] = 5.0;
+        // The write detached shared's buffer; base is untouched.
+        assert_eq!(base.data[0], 0.0);
+        assert_eq!(shared.data[0], 5.0);
+        assert!(!base.shares_data(&shared));
+        // Uniquely owned: further writes do NOT re-copy.
+        let before = Arc::as_ptr(&shared.data);
+        shared.data_mut()[1] = 6.0;
+        assert_eq!(Arc::as_ptr(&shared.data), before);
     }
 }

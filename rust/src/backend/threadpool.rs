@@ -2,13 +2,26 @@
 //!
 //! The paper's `multicore` backend forks the R process: workers inherit the
 //! session state for free and latency is the lowest of all backends.  The
-//! Rust equivalent with the same observable properties is a thread pool:
-//! globals move by cheap in-process clone (no serialization), and
-//! `immediateCondition`s relay live.
+//! Rust equivalent with the same observable properties is a thread pool,
+//! and the hand-off really is **zero-copy in payload bytes**: the
+//! [`TaskSpec`] (expression + captured globals) is *moved* into the job
+//! queue, and every tensor inside it shares its `Arc<[f32]>` buffer with
+//! the caller's environment — capturing a 1 MiB global and shipping it to a
+//! worker thread bumps a reference count, it never copies the megabyte
+//! (`api::value` §Perf).  Map-reduce chunks arrive as first-class
+//! [`crate::api::expr::Expr::MapChunk`] tasks: one `Arc`-shared body plus
+//! packed element values, so a 1000-element chunk costs the same expression
+//! handling as a 1-element one.  No serialization happens anywhere on this
+//! path; `immediateCondition`s relay live.
 //!
 //! `launch()` **blocks while all workers are busy** — the semaphore below is
 //! exactly the paper's "future() blocks until one of the workers is
 //! available".
+//!
+//! Failure contract (shared by all backends): a handle whose worker died is
+//! *resolved* — `is_resolved()` reports `true` and every `wait()` returns
+//! the same [`FutureError::WorkerDied`], so probing and collecting can
+//! never disagree about the future's fate.
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -119,12 +132,24 @@ fn worker_loop(shared: Arc<Shared>) {
 pub struct PoolHandle {
     rx: Receiver<TaskResult>,
     done: Option<TaskResult>,
+    /// Latched on reply-channel disconnect so `is_resolved()` and `wait()`
+    /// agree forever after: resolved-to-an-error, reported as `WorkerDied`
+    /// by every call (the resolved-but-errored consistency contract).
+    died: bool,
     label: String,
+}
+
+impl PoolHandle {
+    fn died_err(&self) -> FutureError {
+        FutureError::WorkerDied {
+            detail: format!("pool worker dropped reply for {}", self.label),
+        }
+    }
 }
 
 impl TaskHandle for PoolHandle {
     fn is_resolved(&mut self) -> bool {
-        if self.done.is_some() {
+        if self.done.is_some() || self.died {
             return true;
         }
         match self.rx.try_recv() {
@@ -134,7 +159,10 @@ impl TaskHandle for PoolHandle {
             }
             Err(TryRecvError::Empty) => false,
             // Worker died without replying: resolved (to an error).
-            Err(TryRecvError::Disconnected) => true,
+            Err(TryRecvError::Disconnected) => {
+                self.died = true;
+                true
+            }
         }
     }
 
@@ -142,9 +170,16 @@ impl TaskHandle for PoolHandle {
         if let Some(r) = self.done.take() {
             return Ok(r);
         }
-        self.rx.recv().map_err(|_| FutureError::WorkerDied {
-            detail: format!("pool worker dropped reply for {}", self.label),
-        })
+        if self.died {
+            return Err(self.died_err());
+        }
+        match self.rx.recv() {
+            Ok(r) => Ok(r),
+            Err(_) => {
+                self.died = true;
+                Err(self.died_err())
+            }
+        }
     }
 }
 
@@ -178,7 +213,7 @@ impl Backend for ThreadPoolBackend {
         drop(q);
         self.shared.job_cv.notify_one();
 
-        Ok(Box::new(PoolHandle { rx, done: None, label }))
+        Ok(Box::new(PoolHandle { rx, done: None, died: false, label }))
     }
 
     fn shutdown(&self) {
@@ -269,6 +304,59 @@ mod tests {
         // Pool still functional.
         let mut h2 = pool.launch(task(Expr::lit(1i64))).unwrap();
         assert_eq!(h2.wait().unwrap().outcome, TaskOutcome::Ok(Value::I64(1)));
+        pool.shutdown();
+    }
+
+    #[test]
+    fn disconnected_reply_is_resolved_and_wait_errors_consistently() {
+        // Regression: a dropped reply channel (dead worker) must look the
+        // same from both probes — is_resolved() says resolved, and EVERY
+        // wait() returns WorkerDied (never a success, never a hang, never a
+        // different error kind on repeat calls).
+        let (tx, rx) = mpsc::channel::<TaskResult>();
+        drop(tx);
+        let mut h = PoolHandle { rx, done: None, died: false, label: "t-dead".into() };
+        assert!(h.is_resolved(), "disconnected handle must report resolved");
+        for _ in 0..2 {
+            match h.wait() {
+                Err(FutureError::WorkerDied { detail }) => {
+                    assert!(detail.contains("t-dead"));
+                }
+                other => panic!("expected WorkerDied, got {other:?}"),
+            }
+            assert!(h.is_resolved(), "still resolved after the error");
+        }
+    }
+
+    #[test]
+    fn task_hand_off_shares_tensor_buffers() {
+        // The multicore zero-copy promise, observed END TO END: the task
+        // returns its tensor global, and the tensor that comes back from
+        // the worker thread must still share the caller's allocation —
+        // proving the queue hand-off, the worker's scope lookup, and the
+        // result path never deep-copied the payload.
+        use crate::api::value::Tensor;
+        let pool = ThreadPoolBackend::new(1);
+        let t = Tensor::zeros(&[1024]);
+        let mut globals = Env::new();
+        globals.insert("t", Value::Tensor(t.clone()));
+        let spec = TaskSpec {
+            id: crate::util::uuid_v4(),
+            expr: Expr::var("t"),
+            globals,
+            opts: crate::ipc::TaskOpts::default(),
+        };
+        let mut h = pool.launch(spec).unwrap();
+        let r = h.wait().unwrap();
+        match r.outcome {
+            TaskOutcome::Ok(Value::Tensor(got)) => {
+                assert!(
+                    got.shares_data(&t),
+                    "tensor returned through the pool must share the caller's buffer"
+                );
+            }
+            other => panic!("expected the tensor back, got {other:?}"),
+        }
         pool.shutdown();
     }
 

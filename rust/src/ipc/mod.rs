@@ -114,4 +114,5 @@ pub enum Message {
 }
 
 /// Protocol version — bump on any wire-format change.
-pub const PROTOCOL_VERSION: u32 = 1;
+/// v2: `Expr::MapChunk` (tag 17) — body-once + packed-elements chunk tasks.
+pub const PROTOCOL_VERSION: u32 = 2;

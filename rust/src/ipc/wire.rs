@@ -17,12 +17,19 @@ use crate::api::value::{Tensor, Value};
 use crate::ipc::{Message, TaskMetrics, TaskOpts, TaskOutcome, TaskResult, TaskSpec};
 
 /// Decode failure: offset + description (possibly a truncated/corrupt frame).
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
-#[error("wire decode error at byte {offset}: {message}")]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct WireError {
     pub offset: usize,
     pub message: String,
 }
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "wire decode error at byte {}: {}", self.offset, self.message)
+    }
+}
+
+impl std::error::Error for WireError {}
 
 pub struct Encoder {
     buf: Vec<u8>,
@@ -37,6 +44,13 @@ impl Default for Encoder {
 impl Encoder {
     pub fn new() -> Self {
         Encoder { buf: Vec::with_capacity(256) }
+    }
+
+    /// §Perf: size-hinted construction — callers that know the payload size
+    /// (task encoders sum their tensor buffers) allocate once instead of
+    /// doubling through megabytes.
+    pub fn with_capacity(bytes: usize) -> Self {
+        Encoder { buf: Vec::with_capacity(bytes.max(64)) }
     }
 
     pub fn into_bytes(self) -> Vec<u8> {
@@ -176,30 +190,19 @@ impl<'a> Decoder<'a> {
         String::from_utf8(bytes.to_vec()).map_err(|_| self.err("invalid UTF-8"))
     }
 
-    pub fn f32_slice(&mut self) -> Result<Vec<f32>, WireError> {
+    /// Decode a length-prefixed f32 buffer into the **shared** allocation
+    /// [`Tensor`] stores.  §Perf: `from_le_bytes` is a no-op on LE targets,
+    /// so the loop compiles to a bulk copy; collecting from a `chunks_exact`
+    /// iterator lets the standard library write the `Arc` allocation
+    /// directly when it can (and costs at most one intermediate buffer
+    /// otherwise — safely, with no unsafe reinterpret).
+    pub fn f32_arc(&mut self) -> Result<std::sync::Arc<[f32]>, WireError> {
         let n = self.u32()? as usize;
         let raw = self.take(n * 4)?;
-        #[cfg(target_endian = "little")]
-        {
-            // §Perf: bulk copy + reinterpret (LE wire format == LE memory).
-            let mut out = vec![0f32; n];
-            unsafe {
-                std::ptr::copy_nonoverlapping(
-                    raw.as_ptr(),
-                    out.as_mut_ptr() as *mut u8,
-                    n * 4,
-                );
-            }
-            Ok(out)
-        }
-        #[cfg(not(target_endian = "little"))]
-        {
-            let mut out = Vec::with_capacity(n);
-            for chunk in raw.chunks_exact(4) {
-                out.push(f32::from_bits(u32::from_le_bytes(chunk.try_into().unwrap())));
-            }
-            Ok(out)
-        }
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
     }
 
     fn opt_str(&mut self) -> Result<Option<String>, WireError> {
@@ -263,8 +266,8 @@ pub fn dec_value(d: &mut Decoder) -> Result<Value, WireError> {
             for _ in 0..rank {
                 shape.push(d.u64()? as usize);
             }
-            let data = d.f32_slice()?;
-            Value::Tensor(Tensor::new(shape, data).map_err(|m| d.err(&m))?)
+            let data = d.f32_arc()?;
+            Value::Tensor(Tensor::from_shared(shape, data).map_err(|m| d.err(&m))?)
         }
         6 => {
             let n = d.u32()? as usize;
@@ -440,6 +443,19 @@ pub fn enc_expr(e: &mut Encoder, expr: &Expr) {
             e.u8(16);
             e.u64(*iters);
         }
+        Expr::MapChunk { param, body, elements, base_index } => {
+            // §Perf: the body is encoded ONCE per chunk, followed by the
+            // packed element values — serializing backends pay O(|body| +
+            // Σ|elements|) instead of O(n·|body|).
+            e.u8(17);
+            e.str(param);
+            e.u64(*base_index);
+            enc_expr(e, body);
+            e.u32(elements.len() as u32);
+            for v in elements {
+                enc_value(e, v);
+            }
+        }
     }
 }
 
@@ -504,6 +520,17 @@ pub fn dec_expr(d: &mut Decoder) -> Result<Expr, WireError> {
         14 => Expr::Spin { millis: d.u64()? },
         15 => Expr::Sleep { millis: d.u64()? },
         16 => Expr::Work { iters: d.u64()? },
+        17 => {
+            let param = d.str()?;
+            let base_index = d.u64()?;
+            let body = std::sync::Arc::new(dec_expr(d)?);
+            let n = d.u32()? as usize;
+            let mut elements = Vec::with_capacity(n);
+            for _ in 0..n {
+                elements.push(dec_value(d)?);
+            }
+            Expr::MapChunk { param, body, elements, base_index }
+        }
         t => return Err(d.err(&format!("bad Expr tag {t}"))),
     })
 }
@@ -674,6 +701,24 @@ pub fn enc_task(e: &mut Encoder, t: &TaskSpec) {
     enc_task_opts(e, &t.opts);
 }
 
+/// Approximate encoded size of a task (§Perf: drives
+/// [`Encoder::with_capacity`] so tensor-heavy tasks — large captured
+/// globals, packed `MapChunk` elements — serialize into one allocation).
+pub fn task_size_hint(t: &TaskSpec) -> usize {
+    let mut hint = 128 + t.id.len() + t.globals.byte_size();
+    t.expr.walk(&mut |e| {
+        hint += 8;
+        match e {
+            Expr::Lit(v) => hint += v.byte_size(),
+            Expr::MapChunk { elements, .. } => {
+                hint += elements.iter().map(crate::api::value::Value::byte_size).sum::<usize>()
+            }
+            _ => {}
+        }
+    });
+    hint
+}
+
 pub fn dec_task(d: &mut Decoder) -> Result<TaskSpec, WireError> {
     Ok(TaskSpec {
         id: d.str()?,
@@ -720,7 +765,12 @@ pub fn dec_result(d: &mut Decoder) -> Result<TaskResult, WireError> {
 // ------------------------------------------------------------- Message --
 
 pub fn encode_message(m: &Message) -> Vec<u8> {
-    let mut e = Encoder::new();
+    let mut e = match m {
+        // §Perf: size-hinted buffer for the payload-bearing messages.
+        Message::Task(t) => Encoder::with_capacity(task_size_hint(t)),
+        Message::Result(r) => Encoder::with_capacity(64 + result_size_hint(r)),
+        _ => Encoder::new(),
+    };
     match m {
         Message::Hello { worker_id, version } => {
             e.u8(0);
@@ -748,12 +798,21 @@ pub fn encode_message(m: &Message) -> Vec<u8> {
 }
 
 /// Encode a `Message::Task` directly from a reference (§Perf: avoids
-/// cloning large captured globals just to wrap them in the enum).
+/// cloning large captured globals just to wrap them in the enum, and
+/// pre-sizes the buffer from the task's payload bytes).
 pub fn encode_task_message(t: &TaskSpec) -> Vec<u8> {
-    let mut e = Encoder::new();
+    let mut e = Encoder::with_capacity(1 + task_size_hint(t));
     e.u8(1); // Message::Task tag — keep in sync with encode_message
     enc_task(&mut e, t);
     e.into_bytes()
+}
+
+fn result_size_hint(r: &TaskResult) -> usize {
+    let payload = match &r.outcome {
+        TaskOutcome::Ok(v) => v.byte_size(),
+        TaskOutcome::Err(e) => e.message.len() + 16,
+    };
+    payload + r.id.len() + r.captured.stdout.len()
 }
 
 pub fn decode_message(bytes: &[u8]) -> Result<Message, WireError> {
@@ -833,6 +892,65 @@ mod tests {
         let mut d = Decoder::new(&bytes);
         assert_eq!(dec_expr(&mut d).unwrap(), expr);
         assert!(d.finished());
+    }
+
+    #[test]
+    fn map_chunk_roundtrips_with_tensor_elements() {
+        let body = std::sync::Arc::new(Expr::add(Expr::var("x"), Expr::runif(1)));
+        let chunk = Expr::map_chunk(
+            "x",
+            body,
+            vec![Value::Tensor(Tensor::zeros(&[8])), Value::I64(3), Value::Unit],
+            42,
+        );
+        let mut e = Encoder::new();
+        enc_expr(&mut e, &chunk);
+        let bytes = e.into_bytes();
+        let mut d = Decoder::new(&bytes);
+        assert_eq!(dec_expr(&mut d).unwrap(), chunk);
+        assert!(d.finished());
+    }
+
+    #[test]
+    fn map_chunk_encodes_body_once() {
+        // The whole point of the first-class chunk: n elements, one body.
+        let body = std::sync::Arc::new(Expr::call(
+            "a_rather_long_kernel_name_to_make_body_bytes_visible",
+            vec![Expr::var("x")],
+        ));
+        let encoded_len = |n: usize| {
+            let chunk = Expr::map_chunk(
+                "x",
+                std::sync::Arc::clone(&body),
+                (0..n as i64).map(Value::I64).collect(),
+                0,
+            );
+            let mut e = Encoder::new();
+            enc_expr(&mut e, &chunk);
+            e.into_bytes().len()
+        };
+        let one = encoded_len(1);
+        let hundred = encoded_len(100);
+        // Growth is per-element value bytes (9 each for I64), not per-body.
+        assert_eq!(hundred - one, 99 * 9, "chunk must grow by elements only");
+    }
+
+    #[test]
+    fn task_size_hint_covers_tensor_payload() {
+        let mut globals = Env::new();
+        globals.insert("t", Value::Tensor(Tensor::zeros(&[1 << 14])));
+        let task = TaskSpec {
+            id: "t-1".into(),
+            expr: Expr::prim(PrimOp::Sum, vec![Expr::var("t")]),
+            globals,
+            opts: TaskOpts::default(),
+        };
+        let hint = task_size_hint(&task);
+        let actual = encode_task_message(&task).len();
+        // The hint must cover at least the dominant payload bytes so the
+        // encoder allocates once, and stay within 2x of the actual size.
+        assert!(hint >= (1 << 14) * 4, "hint {hint} misses the payload");
+        assert!(hint <= actual * 2, "hint {hint} vs actual {actual}");
     }
 
     #[test]

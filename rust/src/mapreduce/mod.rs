@@ -6,10 +6,29 @@
 //! The key service here is **load balancing**: elements are partitioned into
 //! chunks (typically one per worker) so per-future overhead is amortized,
 //! while per-element RNG substreams keep results *invariant to chunking*.
+//!
+//! ## The zero-copy chunk hot path
+//!
+//! A chunk is shipped as one first-class [`Expr::MapChunk`] task: the map
+//! body is cloned **once** per map call and `Arc`-shared into every chunk,
+//! and each chunk carries its elements as packed [`Value`]s whose tensor
+//! payloads are themselves `Arc`-shared.  Launching a map therefore costs
+//! O(chunks) expression handling — not the O(n·|body|) of the historical
+//! per-element `let`-desugaring — and O(1) payload bytes per element on
+//! shared-memory backends.  On serializing backends the wire format mirrors
+//! this: one body encode plus packed elements per chunk
+//! ([`crate::ipc::wire`], tag 17).
+//!
+//! Chunking-invariant RNG is preserved by construction: a chunk records the
+//! global index of its first element (`base_index`) and the evaluator runs
+//! element `i` under substream `base_index + i` whenever the map is seeded,
+//! so every chunking policy, backend, and worker count draws identical
+//! numbers (future.apply's per-element streams).
 
 pub mod foreach;
 
 use std::ops::Range;
+use std::sync::Arc;
 
 use crate::api::env::Env;
 use crate::api::error::FutureError;
@@ -146,21 +165,20 @@ pub fn lapply_futures(
     let workers = backend.workers();
     let n_chunks = chunk_count(xs.len(), workers, opts.chunking);
 
+    // One body clone for the whole map; every chunk shares it by Arc.
+    let shared_body = Arc::new(body.clone());
+
     let mut futures = Vec::with_capacity(n_chunks);
     for (ci, range) in partition(xs.len(), n_chunks).into_iter().enumerate() {
-        let elements: Vec<Expr> = range
-            .clone()
-            .map(|i| {
-                let bound = Expr::let_in(param, Expr::Lit(xs[i].clone()), body.clone());
-                if opts.seed.is_some() {
-                    // Per-element substream: chunking-invariant RNG.
-                    Expr::with_rng_stream(i as u64, bound)
-                } else {
-                    bound
-                }
-            })
-            .collect();
-        let chunk_expr = Expr::list(elements);
+        // Element values are Arc-cheap clones (tensor payloads shared);
+        // base_index pins the chunk's global element offset so seeded runs
+        // are chunking-invariant (see module docs).
+        let chunk_expr = Expr::map_chunk(
+            param,
+            Arc::clone(&shared_body),
+            xs[range.clone()].to_vec(),
+            range.start as u64,
+        );
         let mut fopts = FutureOpts::new();
         fopts.seed = opts.seed;
         fopts.stdout = opts.capture;
@@ -281,6 +299,33 @@ mod tests {
             .unwrap();
             assert_eq!(a, b);
             assert_eq!(b, c);
+        });
+    }
+
+    #[test]
+    fn lapply_launches_one_future_per_chunk() {
+        // O(chunks) task structure: 10 elements at chunk size 3 → 4 chunk
+        // futures, each resolving to the list of its elements' results.
+        with_plan(PlanSpec::multicore(2), || {
+            let env = Env::new();
+            let body = Expr::mul(Expr::var("x"), Expr::lit(10i64));
+            let fs = lapply_futures(
+                &xs(10),
+                "x",
+                &body,
+                &env,
+                &LapplyOpts::new().chunking(Chunking::ChunkSize(3)),
+            )
+            .unwrap();
+            assert_eq!(fs.len(), 4);
+            let mut flat = Vec::new();
+            for f in &fs {
+                match f.value().unwrap() {
+                    Value::List(items) => flat.extend(items),
+                    other => flat.push(other),
+                }
+            }
+            assert_eq!(flat, (0..10).map(|i| Value::I64(i * 10)).collect::<Vec<_>>());
         });
     }
 

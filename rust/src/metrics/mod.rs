@@ -5,6 +5,7 @@
 //! (create → launch → resolved → collect), and a process-global trace log
 //! collects them for later rendering.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{SystemTime, UNIX_EPOCH};
 
@@ -44,9 +45,18 @@ impl FutureTrace {
 }
 
 /// Append a lifecycle event and mirror it into the session log (if enabled).
+///
+/// §Perf: this runs on every future's create/launch/resolve/collect, so the
+/// session-log mirror — two *global* lock acquisitions — is gated behind one
+/// relaxed atomic load and costs nothing while tracing is off.  The
+/// per-future `events` mutex remains (it is uncontended and per-trace, and
+/// examples/tests read lifecycle timestamps without a session trace).
 pub fn record_event(trace: &Arc<FutureTrace>, name: &str) {
     let t = now_ns();
     trace.events.lock().unwrap().push((name.to_string(), t));
+    if !SESSION_ACTIVE.load(Ordering::Relaxed) {
+        return;
+    }
     let log = SESSION_LOG.lock().unwrap();
     if let Some(log) = &*log {
         log.lock().unwrap().push(TraceEvent {
@@ -69,16 +79,20 @@ pub struct TraceEvent {
 
 type Log = Arc<Mutex<Vec<TraceEvent>>>;
 static SESSION_LOG: Mutex<Option<Log>> = Mutex::new(None);
+/// Fast-path gate for [`record_event`]: true iff a session trace is live.
+static SESSION_ACTIVE: AtomicBool = AtomicBool::new(false);
 
 /// Start collecting a session trace; returns the live log handle.
 pub fn start_session_trace() -> Log {
     let log: Log = Arc::new(Mutex::new(Vec::new()));
     *SESSION_LOG.lock().unwrap() = Some(Arc::clone(&log));
+    SESSION_ACTIVE.store(true, Ordering::Relaxed);
     log
 }
 
 /// Stop collecting and detach.
 pub fn stop_session_trace() {
+    SESSION_ACTIVE.store(false, Ordering::Relaxed);
     *SESSION_LOG.lock().unwrap() = None;
 }
 

@@ -4,6 +4,8 @@
 //! scopes, R-flavored error messages, RNG-stream semantics, condition
 //! capture, and compiled-kernel dispatch through the PJRT runtime handle.
 
+use std::sync::Arc;
+
 use crate::api::conditions::{CaptureBuffer, Condition, ConditionKind};
 use crate::api::env::Env;
 use crate::api::error::EvalError;
@@ -73,6 +75,24 @@ impl<'a> Scope<'a> {
     }
 }
 
+/// Run `f` with RNG substream `index` installed, restoring the previous
+/// stream after — the one save/install/restore sequence shared by
+/// `WithRngStream` and per-element `MapChunk` evaluation, so the two can
+/// never drift.
+fn with_stream_index<T>(
+    ctx: &mut EvalCtx<'_, '_>,
+    index: u64,
+    f: impl FnOnce(&mut EvalCtx<'_, '_>) -> T,
+) -> T {
+    let saved = ctx.rng.current.take();
+    let saved_index = ctx.rng.stream_index;
+    ctx.rng.stream_index = index;
+    let out = f(&mut *ctx);
+    ctx.rng.current = saved;
+    ctx.rng.stream_index = saved_index;
+    out
+}
+
 /// Evaluate `expr` under `globals`.
 pub fn evaluate(
     expr: &Expr,
@@ -131,9 +151,10 @@ fn eval(expr: &Expr, scope: &mut Scope, ctx: &mut EvalCtx<'_, '_>) -> Result<Val
                     }
                     let stride: usize = t.shape[1..].iter().product();
                     let start = i as usize * stride;
-                    let data = t.data[start..start + stride].to_vec();
+                    // Single copy straight into the shared allocation.
+                    let data: Arc<[f32]> = Arc::from(&t.data[start..start + stride]);
                     Ok(Value::Tensor(
-                        Tensor::new(t.shape[1..].to_vec(), data)
+                        Tensor::from_shared(t.shape[1..].to_vec(), data)
                             .map_err(EvalError::new)?,
                     ))
                 }
@@ -218,21 +239,54 @@ fn eval(expr: &Expr, scope: &mut Scope, ctx: &mut EvalCtx<'_, '_>) -> Result<Val
             }
             let n: usize = shape.iter().product();
             let stream = ctx.rng.stream();
-            let data = match dist {
-                RngDist::Unif => stream.unif_f32(n),
-                RngDist::Norm => stream.norm_f32(n),
+            // Collect straight into the shared allocation (single alloc,
+            // no Vec→Arc copy).
+            let data: Arc<[f32]> = match dist {
+                RngDist::Unif => (0..n).map(|_| stream.next_unif() as f32).collect(),
+                RngDist::Norm => (0..n).map(|_| stream.next_norm() as f32).collect(),
             };
-            Ok(Value::Tensor(Tensor { shape: shape.clone(), data }))
+            Ok(Value::Tensor(Tensor::from_parts(shape.clone(), data)))
         }
         Expr::WithRngStream { index, body } => {
             // Per-element substream: install stream `index`, restore after.
-            let saved = ctx.rng.current.take();
-            let saved_index = ctx.rng.stream_index;
-            ctx.rng.stream_index = *index;
-            let out = eval(body, scope, ctx);
-            ctx.rng.current = saved;
-            ctx.rng.stream_index = saved_index;
-            out
+            with_stream_index(ctx, *index, |ctx| eval(body, scope, ctx))
+        }
+        Expr::MapChunk { param, body, elements, base_index } => {
+            // Bind each element (an Arc-cheap Value clone) to `param`,
+            // evaluate the shared body, and — when this task is seeded —
+            // do it under the element's global RNG substream
+            // `base_index + i`, so results are chunking-invariant
+            // (identical to the per-element
+            // `WithRngStream(let param = el in body)` desugaring).
+            let seeded = ctx.rng.seed.is_some();
+            let mut out = Vec::with_capacity(elements.len());
+            // One scope slot (one String allocation) serves the whole
+            // chunk, rebound per element; the single pop below is the only
+            // cleanup point, even on an element error.
+            scope.locals.push((param.clone(), Value::Unit));
+            let mut failed = None;
+            for (i, el) in elements.iter().enumerate() {
+                scope.locals.last_mut().expect("chunk param slot").1 = el.clone();
+                let r = if seeded {
+                    with_stream_index(ctx, *base_index + i as u64, |ctx| {
+                        eval(body, scope, ctx)
+                    })
+                } else {
+                    eval(body, scope, ctx)
+                };
+                match r {
+                    Ok(v) => out.push(v),
+                    Err(e) => {
+                        failed = Some(e);
+                        break;
+                    }
+                }
+            }
+            scope.locals.pop();
+            match failed {
+                Some(e) => Err(e),
+                None => Ok(Value::List(out)),
+            }
         }
         Expr::Spin { millis } => {
             let until = std::time::Instant::now() + std::time::Duration::from_millis(*millis);
@@ -299,8 +353,8 @@ fn tensor_binop(
                     x.shape, y.shape
                 ))));
             }
-            let data = x.data.iter().zip(&y.data).map(|(p, q)| f(*p, *q)).collect();
-            Some(Ok(Value::Tensor(Tensor { shape: x.shape.clone(), data })))
+            let data = x.data.iter().zip(&y.data[..]).map(|(p, q)| f(*p, *q)).collect();
+            Some(Ok(Value::Tensor(Tensor::from_parts(x.shape.clone(), data))))
         }
         (Value::Tensor(x), other) | (other, Value::Tensor(x)) => {
             let s = match other.as_f64() {
@@ -318,7 +372,7 @@ fn tensor_binop(
                 .iter()
                 .map(|p| if left_is_tensor { f(*p, s) } else { f(s, *p) })
                 .collect();
-            Some(Ok(Value::Tensor(Tensor { shape: x.shape.clone(), data })))
+            Some(Ok(Value::Tensor(Tensor::from_parts(x.shape.clone(), data))))
         }
         _ => None,
     }
@@ -367,10 +421,10 @@ fn apply_prim(op: PrimOp, args: &[Value]) -> Result<Value, EvalError> {
             match &args[0] {
                 Value::I64(x) => Ok(Value::I64(-x)),
                 Value::F64(x) => Ok(Value::F64(-x)),
-                Value::Tensor(t) => Ok(Value::Tensor(Tensor {
-                    shape: t.shape.clone(),
-                    data: t.data.iter().map(|x| -x).collect(),
-                })),
+                Value::Tensor(t) => Ok(Value::Tensor(Tensor::from_parts(
+                    t.shape.clone(),
+                    t.data.iter().map(|x| -x).collect(),
+                ))),
                 other => Err(EvalError::new(format!(
                     "invalid argument to unary operator '-' ({})",
                     other.type_name()
@@ -434,10 +488,10 @@ fn apply_prim(op: PrimOp, args: &[Value]) -> Result<Value, EvalError> {
         Sqrt => {
             arity(op, 1, args.len())?;
             match &args[0] {
-                Value::Tensor(t) => Ok(Value::Tensor(Tensor {
-                    shape: t.shape.clone(),
-                    data: t.data.iter().map(|x| x.sqrt()).collect(),
-                })),
+                Value::Tensor(t) => Ok(Value::Tensor(Tensor::from_parts(
+                    t.shape.clone(),
+                    t.data.iter().map(|x| x.sqrt()).collect(),
+                ))),
                 other => {
                     let x = other.as_f64().ok_or_else(|| {
                         EvalError::new("non-numeric argument to mathematical function")
@@ -500,10 +554,13 @@ mod tests {
         env.insert("t", Tensor::new(vec![3], vec![1.0, 2.0, 3.0]).unwrap());
         let e = Expr::mul(Expr::var("t"), Expr::lit(2.0));
         let v = run(&e, &env).unwrap();
-        assert_eq!(v.as_tensor().unwrap().data, vec![2.0, 4.0, 6.0]);
+        assert_eq!(v.as_tensor().unwrap().data.to_vec(), vec![2.0, 4.0, 6.0]);
         // scalar - tensor preserves order
         let e2 = Expr::sub(Expr::lit(10.0), Expr::var("t"));
-        assert_eq!(run(&e2, &env).unwrap().as_tensor().unwrap().data, vec![9.0, 8.0, 7.0]);
+        assert_eq!(
+            run(&e2, &env).unwrap().as_tensor().unwrap().data.to_vec(),
+            vec![9.0, 8.0, 7.0]
+        );
     }
 
     #[test]
@@ -616,6 +673,63 @@ mod tests {
     }
 
     #[test]
+    fn map_chunk_matches_per_element_desugaring() {
+        use std::sync::Arc;
+        // The first-class chunk must evaluate exactly like the old
+        // per-element `WithRngStream(i, let x = el in body)` encoding.
+        let env = Env::new();
+        let body = Expr::add(Expr::var("x"), Expr::runif(2));
+        let elements: Vec<Value> = (0..4i64).map(Value::I64).collect();
+
+        let go = |expr: &Expr| {
+            let mut buf = CaptureBuffer::new();
+            let mut ctx = EvalCtx {
+                buffer: &mut buf,
+                rng: RngCtx::new(Some(11), 0),
+                kernels: None,
+                on_immediate: None,
+            };
+            evaluate(expr, &env, &mut ctx).unwrap()
+        };
+
+        // New: one chunk covering elements 2..6 of a virtual map.
+        let chunk = Expr::map_chunk("x", Arc::new(body.clone()), elements.clone(), 2);
+        // Old: explicit per-element desugaring with the same global indices.
+        let desugared = Expr::list(
+            elements
+                .iter()
+                .enumerate()
+                .map(|(i, el)| {
+                    Expr::with_rng_stream(
+                        2 + i as u64,
+                        Expr::let_in("x", Expr::Lit(el.clone()), body.clone()),
+                    )
+                })
+                .collect(),
+        );
+        assert_eq!(go(&chunk), go(&desugared));
+    }
+
+    #[test]
+    fn map_chunk_element_error_propagates() {
+        use std::sync::Arc;
+        let env = Env::new();
+        let body = Expr::if_else(
+            Expr::prim(PrimOp::Eq, vec![Expr::var("x"), Expr::lit(1i64)]),
+            Expr::stop(Expr::lit("element 1 failed")),
+            Expr::var("x"),
+        );
+        let chunk = Expr::map_chunk(
+            "x",
+            Arc::new(body),
+            (0..3i64).map(Value::I64).collect(),
+            0,
+        );
+        let err = run(&chunk, &env).unwrap_err();
+        assert_eq!(err.message, "element 1 failed");
+    }
+
+    #[test]
     fn list_index_and_len() {
         let env = Env::new();
         let e = Expr::index(
@@ -634,7 +748,7 @@ mod tests {
         let mut env = Env::new();
         env.insert("m", Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap());
         let row = run(&Expr::index(Expr::var("m"), Expr::lit(1i64)), &env).unwrap();
-        assert_eq!(row.as_tensor().unwrap().data, vec![4., 5., 6.]);
+        assert_eq!(row.as_tensor().unwrap().data.to_vec(), vec![4., 5., 6.]);
         assert_eq!(row.as_tensor().unwrap().shape, vec![3]);
     }
 

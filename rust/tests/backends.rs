@@ -139,6 +139,42 @@ fn rng_identical_across_backends_and_worker_counts() {
 }
 
 #[test]
+fn seeded_lapply_bit_identical_across_chunkings_and_backends() {
+    // The MapChunk RNG contract end to end: a seeded future_lapply must be
+    // BIT-identical for every chunking policy on every backend — including
+    // the serializing multiprocess path, which exercises the chunk wire
+    // encoding (body once + packed elements).
+    let xs: Vec<Value> = (0..9i64).map(Value::I64).collect();
+    let body = Expr::add(Expr::var("x"), Expr::runif(2));
+    let policies = [
+        ("per-element", Chunking::PerElement),
+        ("chunk=4", Chunking::ChunkSize(4)),
+        ("per-worker", Chunking::PerWorker),
+    ];
+    let mut outcomes: Vec<(String, Vec<Value>)> = Vec::new();
+    for spec in [PlanSpec::sequential(), PlanSpec::multicore(2), PlanSpec::multiprocess(2)] {
+        for (label, chunking) in policies {
+            let out = with_plan(spec.clone(), || {
+                future_lapply(
+                    &xs,
+                    "x",
+                    &body,
+                    &Env::new(),
+                    &LapplyOpts::new().seed(1234).chunking(chunking),
+                )
+                .unwrap()
+            });
+            outcomes.push((format!("{}/{}", spec.name(), label), out));
+        }
+    }
+    let (ref_name, reference) = outcomes[0].clone();
+    assert_eq!(reference.len(), xs.len());
+    for (name, out) in &outcomes {
+        assert_eq!(out, &reference, "{name} diverged from {ref_name}");
+    }
+}
+
+#[test]
 fn future_either_picks_fast_racer() {
     for spec in [PlanSpec::multicore(3), PlanSpec::multiprocess(3)] {
         let name = spec.name();
@@ -156,6 +192,34 @@ fn future_either_picks_fast_racer() {
             assert_eq!(v, Value::Str("fast".into()), "{name}");
         });
     }
+}
+
+#[test]
+fn future_creation_is_zero_copy_in_payload_bytes() {
+    // Tensor payloads are Arc-shared: capturing a 1 MiB global into a
+    // future bumps a refcount instead of copying the buffer.  A third
+    // allocation appearing here means the zero-copy hot path regressed.
+    use std::sync::Arc;
+    with_plan(PlanSpec::multicore(2), || {
+        let t = Tensor::zeros(&[1 << 18]); // 1 MiB of f32s
+        let base = Arc::strong_count(&t.data);
+        let mut env = Env::new();
+        env.insert("t", t.clone());
+        let f = future_with(
+            Expr::prim(PrimOp::Sum, vec![Expr::var("t")]),
+            &env,
+            FutureOpts::new().lazy(),
+        )
+        .unwrap();
+        // One share in the env binding + one in the lazy task's captured
+        // globals — and nothing else.
+        assert_eq!(
+            Arc::strong_count(&t.data),
+            base + 2,
+            "payload buffer was deep-copied on the creation path"
+        );
+        assert_eq!(f.value().unwrap(), Value::F64(0.0));
+    });
 }
 
 #[test]

@@ -5,6 +5,8 @@
 //! chunk partitions (cover/disjoint/balanced), globals analysis vs a naive
 //! reference, RNG stream algebra, and env capture snapshots.
 
+use std::sync::Arc;
+
 use rustures::api::env::Env;
 use rustures::api::expr::{Expr, PrimOp};
 use rustures::api::globals::free_variables;
@@ -42,7 +44,7 @@ fn gen_expr(g: &mut Gen, depth: usize) -> Expr {
             _ => Expr::var(&g.ident()),
         };
     }
-    match g.usize_in(0, 9) {
+    match g.usize_in(0, 10) {
         0 => Expr::lit(gen_value(g, 1)),
         1 => Expr::var(&g.ident()),
         2 => Expr::let_in(&g.ident(), gen_expr(g, depth - 1), gen_expr(g, depth - 1)),
@@ -59,6 +61,15 @@ fn gen_expr(g: &mut Gen, depth: usize) -> Expr {
         ),
         7 => Expr::dyn_lookup(gen_expr(g, depth - 1)),
         8 => Expr::call(&g.ident(), vec![gen_expr(g, depth - 1)]),
+        9 => {
+            let n = g.usize_in(0, 4);
+            Expr::map_chunk(
+                &g.ident(),
+                Arc::new(gen_expr(g, depth - 1)),
+                (0..n).map(|_| gen_value(g, 1)).collect(),
+                g.u64() % 10_000,
+            )
+        }
         _ => Expr::with_rng_stream(g.u64() % 1000, gen_expr(g, depth - 1)),
     }
 }
@@ -94,6 +105,59 @@ fn prop_expr_wire_roundtrip() {
         let back = dec_expr(&mut Decoder::new(&bytes)).map_err(|e| e.to_string())?;
         if back != expr {
             return Err("expr roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_large_tensor_wire_roundtrip() {
+    // The bulk (single-memcpy) tensor encode/decode path at realistic
+    // payload sizes: 16 KiB – 1 MiB buffers, exact f32 bit preservation.
+    check("large-tensor-wire-roundtrip", 10, |g| {
+        let n = g.usize_in(1 << 12, 1 << 18);
+        let seed = g.u64();
+        let data: Vec<f32> = (0..n)
+            .map(|i| {
+                let bits = rustures::util::uuid::splitmix64(seed ^ i as u64);
+                // Bounded, always-finite values (NaN would break `==`).
+                ((bits % 200_001) as f32 - 100_000.0) * 0.25
+            })
+            .collect();
+        let v = Value::Tensor(Tensor::new(vec![n], data).unwrap());
+        let mut e = Encoder::new();
+        enc_value(&mut e, &v);
+        let bytes = e.into_bytes();
+        let mut d = Decoder::new(&bytes);
+        let back = dec_value(&mut d).map_err(|e| e.to_string())?;
+        if back != v {
+            return Err(format!("large tensor roundtrip mismatch at n={n}"));
+        }
+        if !d.finished() {
+            return Err("trailing bytes".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_map_chunk_wire_roundtrip() {
+    // The new chunk encoding: body once + packed elements (incl. tensors).
+    check("map-chunk-wire-roundtrip", 100, |g| {
+        let body = Arc::new(gen_expr(g, 3));
+        let n = g.usize_in(0, 12);
+        let elements: Vec<Value> = (0..n).map(|_| gen_value(g, 2)).collect();
+        let chunk = Expr::map_chunk(&g.ident(), body, elements, g.u64() % 1_000_000);
+        let mut e = Encoder::new();
+        enc_expr(&mut e, &chunk);
+        let bytes = e.into_bytes();
+        let mut d = Decoder::new(&bytes);
+        let back = dec_expr(&mut d).map_err(|e| e.to_string())?;
+        if back != chunk {
+            return Err("map-chunk roundtrip mismatch".into());
+        }
+        if !d.finished() {
+            return Err("trailing bytes".into());
         }
         Ok(())
     });
@@ -186,6 +250,11 @@ fn naive_free_vars(expr: &Expr, bound: &mut Vec<String>, out: &mut Vec<String>) 
         Expr::DynLookup(i) | Expr::Stop(i) => naive_free_vars(i, bound, out),
         Expr::Emit { message, .. } => naive_free_vars(message, bound, out),
         Expr::WithRngStream { body, .. } => naive_free_vars(body, bound, out),
+        Expr::MapChunk { param, body, .. } => {
+            bound.push(param.clone());
+            naive_free_vars(body, bound, out);
+            bound.pop();
+        }
         Expr::Lit(_)
         | Expr::Rng { .. }
         | Expr::Spin { .. }

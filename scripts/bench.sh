@@ -1,0 +1,31 @@
+#!/usr/bin/env bash
+# Run the perf-trajectory benches (E1 overhead, E3 chunking) and write
+# machine-readable BENCH_overhead.json / BENCH_chunking.json at the repo
+# root, so every PR can diff perf against the previous one.
+#
+# Usage:
+#   scripts/bench.sh           # smoke mode (reduced iterations; CI default)
+#   scripts/bench.sh full      # full iteration counts
+#
+# Schema of the emitted files: see BENCH.md.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+mode="${1:-smoke}"
+export BENCH_OUT="$PWD"
+if [ "$mode" = "smoke" ]; then
+    export BENCH_SMOKE=1
+else
+    unset BENCH_SMOKE || true
+fi
+
+# The worker binary must exist for the multiprocess/cluster/batch backends.
+cargo build --release --manifest-path rust/Cargo.toml
+
+cargo bench --manifest-path rust/Cargo.toml --bench overhead
+cargo bench --manifest-path rust/Cargo.toml --bench chunking
+
+echo
+echo "== bench artifacts =="
+ls -l BENCH_overhead.json BENCH_chunking.json
