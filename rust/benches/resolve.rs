@@ -1,0 +1,149 @@
+//! E11 — as-completed resolution: the dispatcher/resolve() path.
+//!
+//! Three measurements on a **skewed-chunk** workload (element 0 spins,
+//! every other element is cheap, so one chunk dominates the wall clock):
+//!
+//! * `in-order`      — `future_lapply` with the historical strictly-ordered
+//!                     harvest (`LapplyOpts::in_order`),
+//! * `as-completed`  — the default streaming harvest (must be **no slower**:
+//!                     the acceptance gate for the dispatcher subsystem),
+//! * `map-reduce`    — `future_map_reduce` folding in completion order,
+//!
+//! plus `resolve-any`: latency of `resolve_any([slow, fast])`, which must
+//! track the FAST future (shared completion channel), not the slow one.
+//!
+//! Emits `BENCH_resolve.json` (schema in BENCH.md); `scripts/bench.sh`
+//! runs this in smoke mode.
+
+mod common;
+
+use common::{fmt_dur, header, json_row, row, smoke, time_once, write_bench_json, Json};
+use rustures::api::plan::{with_plan, PlanSpec};
+use rustures::prelude::*;
+
+/// Skewed body: element 0 spins `skew_ms`, the rest just square.
+fn skewed_body(skew_ms: u64) -> Expr {
+    let square = Expr::mul(Expr::var("x"), Expr::var("x"));
+    Expr::if_else(
+        Expr::prim(PrimOp::Eq, vec![Expr::var("x"), Expr::lit(0i64)]),
+        Expr::seq(vec![Expr::Spin { millis: skew_ms }, square.clone()]),
+        square,
+    )
+}
+
+fn run_lapply(
+    spec: PlanSpec,
+    n: usize,
+    skew_ms: u64,
+    in_order: bool,
+) -> std::time::Duration {
+    with_plan(spec, || {
+        let env = Env::new();
+        let xs: Vec<Value> = (0..n as i64).map(Value::I64).collect();
+        let body = skewed_body(skew_ms);
+        let mut opts = LapplyOpts::new().no_capture().chunking(Chunking::ChunkSize(4));
+        if in_order {
+            opts = opts.in_order();
+        }
+        // Warm the backend (worker spawn is one-time setup, not per-map).
+        let _ = future(Expr::lit(0i64), &env).unwrap().value();
+        time_once(|| {
+            let out = future_lapply(&xs, "x", &body, &env, &opts).unwrap();
+            assert_eq!(out.len(), n);
+        })
+    })
+}
+
+fn run_map_reduce(spec: PlanSpec, n: usize, skew_ms: u64) -> std::time::Duration {
+    with_plan(spec, || {
+        let env = Env::new();
+        let xs: Vec<Value> = (0..n as i64).map(Value::I64).collect();
+        let body = skewed_body(skew_ms);
+        let opts = LapplyOpts::new().no_capture().chunking(Chunking::ChunkSize(4));
+        let _ = future(Expr::lit(0i64), &env).unwrap().value();
+        let want: i64 = (0..n as i64).map(|i| i * i).sum();
+        time_once(|| {
+            let total = future_map_reduce(
+                &xs,
+                "x",
+                &body,
+                &env,
+                &opts,
+                Value::I64(0),
+                |acc, v| match (acc, v) {
+                    (Value::I64(a), Value::I64(b)) => Ok(Value::I64(a + b)),
+                    _ => unreachable!("integer fold"),
+                },
+            )
+            .unwrap();
+            assert_eq!(total, Value::I64(want));
+        })
+    })
+}
+
+fn run_resolve_any(spec: PlanSpec, slow_ms: u64) -> std::time::Duration {
+    with_plan(spec, || {
+        let env = Env::new();
+        let _ = future(Expr::lit(0i64), &env).unwrap().value();
+        let fs = vec![
+            future(Expr::seq(vec![Expr::Spin { millis: slow_ms }, Expr::lit(0i64)]), &env)
+                .unwrap(),
+            future(Expr::seq(vec![Expr::Spin { millis: 1 }, Expr::lit(1i64)]), &env).unwrap(),
+        ];
+        let wall = time_once(|| {
+            let i = resolve_any(&fs).unwrap();
+            assert_eq!(i, 1, "fast future must win the race");
+        });
+        // Drain the slow future so the plan tears down cleanly.
+        let _ = fs[0].value();
+        wall
+    })
+}
+
+fn main() {
+    header(
+        "E11: as-completed resolution (skewed chunk workload, 2 workers)",
+        &["backend     ", "N    ", "mode          ", "wall      "],
+    );
+
+    let (n, skew_ms, slow_ms) = if smoke() { (32, 40, 60) } else { (128, 100, 150) };
+    let mut json_rows = Vec::new();
+    for spec in [PlanSpec::multicore(2), PlanSpec::multiprocess(2)] {
+        let modes: [(&str, Box<dyn Fn() -> std::time::Duration>); 4] = [
+            ("in-order", {
+                let s = spec.clone();
+                Box::new(move || run_lapply(s.clone(), n, skew_ms, true))
+            }),
+            ("as-completed", {
+                let s = spec.clone();
+                Box::new(move || run_lapply(s.clone(), n, skew_ms, false))
+            }),
+            ("map-reduce", {
+                let s = spec.clone();
+                Box::new(move || run_map_reduce(s.clone(), n, skew_ms))
+            }),
+            ("resolve-any", {
+                let s = spec.clone();
+                Box::new(move || run_resolve_any(s.clone(), slow_ms))
+            }),
+        ];
+        for (label, run) in modes {
+            let wall = run();
+            row(&[
+                format!("{:<12}", spec.name()),
+                format!("{n:<5}"),
+                format!("{label:<14}"),
+                format!("{:>10}", fmt_dur(wall)),
+            ]);
+            json_rows.push(json_row(&[
+                ("backend", Json::Str(spec.name().to_string())),
+                ("n", Json::Int(n as i64)),
+                ("mode", Json::Str(label.to_string())),
+                ("skew_ms", Json::Int(skew_ms as i64)),
+                ("wall_ns", Json::Int(wall.as_nanos() as i64)),
+            ]));
+        }
+    }
+    write_bench_json("resolve", json_rows);
+    println!("\nshape check: as-completed ≤ in-order; resolve-any tracks the FAST racer (≪ slow_ms)");
+}

@@ -5,12 +5,10 @@
 //! The paper sketches `future_either(sort shell, sort quick, sort radix)`;
 //! here any set of expressions races on the current plan.
 
-use std::time::Duration;
-
 use crate::api::env::Env;
 use crate::api::error::FutureError;
 use crate::api::expr::Expr;
-use crate::api::future::{future_with, Future, FutureOpts};
+use crate::api::future::{future_with, Future, FutureOpts, FutureSet};
 use crate::api::value::Value;
 
 /// Race `exprs`; return the value of the first to resolve.
@@ -35,22 +33,18 @@ pub fn future_either_with(
         .map(|e| future_with(e, env, opts.clone()))
         .collect::<Result<_, _>>()?;
 
-    // Poll for the first resolution (sequential plans resolve eagerly, so
-    // index 0 wins immediately there — same as R).
-    loop {
-        for (i, f) in futures.iter().enumerate() {
-            if f.resolved() {
-                // Cancel the rest before collecting.
-                for (j, g) in futures.iter().enumerate() {
-                    if j != i {
-                        g.cancel();
-                    }
-                }
-                return f.value();
-            }
+    // Wait for the first resolution on the shared completion channel — no
+    // polling.  Sequential plans resolve eagerly, so index 0 wins
+    // immediately there (same as R: already-resolved futures report first,
+    // in input order).
+    let winner = FutureSet::new(&futures).wait_any().expect("non-empty race");
+    // Cancel the rest before collecting.
+    for (j, g) in futures.iter().enumerate() {
+        if j != winner {
+            g.cancel();
         }
-        std::thread::sleep(Duration::from_micros(200));
     }
+    futures[winner].value()
 }
 
 #[cfg(test)]

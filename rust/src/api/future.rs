@@ -12,10 +12,20 @@
 //! launches — blocking only if every worker is busy.  `value()` blocks until
 //! resolution, relays captured stdout + conditions in order, and re-raises
 //! evaluation errors as-is.
+//!
+//! Beyond the three constructs, this module hosts the paper's
+//! `resolve()` — "wait until one or more futures are resolved":
+//! [`FutureSet`] watches N futures through ONE shared completion channel
+//! ([`crate::backend::dispatch::CompletionWaker`]) that every backend
+//! notifies on resolution, so [`resolve_any`]/[`resolve_all`] block on a
+//! single condvar instead of polling N handles.  [`FutureOpts::queued`]
+//! additionally decouples creation from seat acquisition (the dispatcher
+//! subsystem): `future()` then enqueues and returns immediately, and the
+//! paper's block-on-create behaviour remains the default.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::{SystemTime, UNIX_EPOCH};
+use std::time::{Duration, SystemTime, UNIX_EPOCH};
 
 use crate::api::conditions::{relay, Condition, ConditionKind};
 use crate::api::env::Env;
@@ -24,6 +34,7 @@ use crate::api::expr::Expr;
 use crate::api::globals::{identify_globals, GlobalsSpec};
 use crate::api::plan::{backend_for_current_depth, current_depth};
 use crate::api::value::Value;
+use crate::backend::dispatch::CompletionWaker;
 use crate::backend::TaskHandle;
 use crate::ipc::{TaskOpts, TaskOutcome, TaskResult, TaskSpec};
 use crate::metrics::{record_event, FutureTrace};
@@ -59,6 +70,12 @@ pub struct FutureOpts {
     pub conditions: bool,
     /// `lazy = TRUE`: defer launch until `resolved()`/`value()`.
     pub lazy: bool,
+    /// Queued dispatch: enqueue on the backend's bounded backlog instead of
+    /// blocking until a worker seat frees (the paper's block-on-create
+    /// default).  Launch failures then surface at `resolved()`/`value()`
+    /// rather than at creation.  Ignored when `lazy` is set (a lazy future
+    /// already defers its launch).
+    pub queued: bool,
     /// Keep the task spec so the future can be [`Future::restart`]ed after
     /// an infrastructure failure (paper's `restart(f)` future-work item).
     /// Off by default.  (Retention is cheap since tensor payloads are
@@ -85,6 +102,11 @@ impl FutureOpts {
 
     pub fn lazy(mut self) -> Self {
         self.lazy = true;
+        self
+    }
+
+    pub fn queued(mut self) -> Self {
+        self.queued = true;
         self
     }
 
@@ -180,7 +202,8 @@ pub fn future_with(expr: Expr, env: &Env, opts: FutureOpts) -> Result<Future, Fu
     } else {
         let supports_immediate = backend.supports_immediate();
         record_event(&trace, "launch");
-        let handle = backend.launch(task)?;
+        let handle =
+            if opts.queued { backend.launch_queued(task)? } else { backend.launch(task)? };
         State::Running { handle, supports_immediate }
     };
 
@@ -423,6 +446,216 @@ impl Future {
             _ => false,
         }
     }
+
+    /// Register a resolution subscription with the backend.  Lazy futures
+    /// launch first (`resolve()` semantics: "a lazy future defers
+    /// evaluation until we use resolved() ... or value()").
+    fn subscribe_completion(&self, waker: &Arc<CompletionWaker>, token: u64) -> Subscribed {
+        if matches!(&*self.state.lock().unwrap(), State::Lazy(_)) {
+            // A launch failure latches State::Failed — reported as already
+            // resolved below, exactly like resolved().
+            let _ = self.launch();
+        }
+        let mut state = self.state.lock().unwrap();
+        match &mut *state {
+            State::Done(_) | State::Failed(_) => Subscribed::AlreadyResolved,
+            State::Running { handle, .. } => {
+                if handle.subscribe(waker, token) {
+                    Subscribed::Push
+                } else {
+                    Subscribed::Poll
+                }
+            }
+            // Unreachable in practice (launch() above either converted the
+            // state or latched its failure); poll is the safe fallback.
+            State::Lazy(_) => Subscribed::Poll,
+        }
+    }
+}
+
+/// How a future's resolution will reach a [`FutureSet`].
+enum Subscribed {
+    /// Already resolved at subscription time.
+    AlreadyResolved,
+    /// The backend push-notifies the shared waker (every built-in backend).
+    Push,
+    /// No push support (third-party handle): the set polls this future on a
+    /// short timeout.
+    Poll,
+}
+
+/// The paper's `resolve()` machinery: wait on *any* or *all* of N futures
+/// through one shared completion channel — a single mutex + condvar that
+/// every watched backend notifies — instead of polling each handle.
+///
+/// Each future's index is reported by [`FutureSet::wait_any`] exactly once,
+/// in completion order; already-resolved futures (and sequential plans,
+/// which resolve at creation) report immediately in input order.
+///
+/// ```no_run
+/// use rustures::prelude::*;
+/// use rustures::api::future::FutureSet;
+/// # let futures: Vec<Future> = vec![];
+/// let mut set = FutureSet::new(&futures);
+/// while let Some(i) = set.wait_any() {
+///     println!("future {i} resolved: {:?}", futures[i].value());
+/// }
+/// ```
+pub struct FutureSet<'a> {
+    futures: Vec<&'a Future>,
+    waker: Arc<CompletionWaker>,
+    /// Index already returned by `wait_any`.
+    reported: Vec<bool>,
+    /// Index downgraded to the timed-poll fallback (no push support).
+    needs_poll: Vec<bool>,
+    /// Indices known resolved but not yet reported.
+    ready: std::collections::VecDeque<usize>,
+    remaining: usize,
+}
+
+impl<'a> FutureSet<'a> {
+    /// Watch `futures` (any iterable of `&Future`; a `&[Future]` slice
+    /// works directly).  Lazy futures are launched.
+    pub fn new<I>(futures: I) -> Self
+    where
+        I: IntoIterator<Item = &'a Future>,
+    {
+        let futures: Vec<&Future> = futures.into_iter().collect();
+        let n = futures.len();
+        let waker = CompletionWaker::new();
+        let mut set = FutureSet {
+            futures,
+            waker,
+            reported: vec![false; n],
+            needs_poll: vec![false; n],
+            ready: std::collections::VecDeque::new(),
+            remaining: n,
+        };
+        for i in 0..n {
+            match set.futures[i].subscribe_completion(&set.waker, i as u64) {
+                Subscribed::AlreadyResolved => set.ready.push_back(i),
+                Subscribed::Push => {}
+                Subscribed::Poll => set.needs_poll[i] = true,
+            }
+        }
+        set
+    }
+
+    /// Futures not yet reported by [`FutureSet::wait_any`].
+    pub fn pending(&self) -> usize {
+        self.remaining
+    }
+
+    /// Has future `i` already been reported resolved by this set?
+    pub fn is_reported(&self, i: usize) -> bool {
+        self.reported.get(i).copied().unwrap_or(false)
+    }
+
+    /// Record a waker token: verify the future really resolved (promoting
+    /// it to Done so a later `value()` cannot block) or downgrade it to the
+    /// poll fallback on a spurious wake.
+    fn admit_token(&mut self, token: u64) {
+        let i = token as usize;
+        if i >= self.futures.len() || self.reported[i] {
+            return;
+        }
+        if self.futures[i].resolved() {
+            if !self.ready.contains(&i) {
+                self.ready.push_back(i);
+            }
+        } else {
+            self.needs_poll[i] = true;
+        }
+    }
+
+    /// Block until one more future resolves and return its index
+    /// (completion order); `None` once every future has been reported.
+    pub fn wait_any(&mut self) -> Option<usize> {
+        loop {
+            if self.remaining == 0 {
+                return None;
+            }
+            if let Some(i) = self.ready.pop_front() {
+                if self.reported[i] {
+                    continue;
+                }
+                self.reported[i] = true;
+                self.remaining -= 1;
+                return Some(i);
+            }
+            // Drain whatever notifications already arrived.
+            while let Some(token) = self.waker.try_next() {
+                self.admit_token(token);
+            }
+            if !self.ready.is_empty() {
+                continue;
+            }
+            // Poll-fallback futures (handles without push notification).
+            let mut any_poll = false;
+            for i in 0..self.futures.len() {
+                if self.needs_poll[i] && !self.reported[i] {
+                    any_poll = true;
+                    if self.futures[i].resolved() {
+                        self.needs_poll[i] = false;
+                        self.ready.push_back(i);
+                    }
+                }
+            }
+            if !self.ready.is_empty() {
+                continue;
+            }
+            // Nothing resolved yet: sleep on the shared channel.  The short
+            // timeout re-polls non-push handles; the long one is a safety
+            // net — backends keep ONE subscription per handle (last wins),
+            // so overlapping FutureSets (or a future listed twice) can have
+            // a wakeup displaced.  The sweep below recovers it; the push
+            // path never waits for it.
+            let timeout = if any_poll {
+                Duration::from_millis(1)
+            } else {
+                Duration::from_millis(100)
+            };
+            match self.waker.wait_next(Some(timeout)) {
+                Some(token) => self.admit_token(token),
+                None => {
+                    // Timed out without a token: sweep every unreported
+                    // future so a displaced subscription cannot hang us.
+                    for i in 0..self.futures.len() {
+                        if !self.reported[i]
+                            && !self.ready.contains(&i)
+                            && self.futures[i].resolved()
+                        {
+                            self.ready.push_back(i);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Block until every watched future is resolved.
+    pub fn wait_all(&mut self) {
+        while self.wait_any().is_some() {}
+    }
+}
+
+/// The paper's `resolve(F)`: block until **all** futures are resolved,
+/// without collecting values (collection stays `value()`/[`values`]).
+/// After this returns, `value()` on any of them cannot block.
+pub fn resolve(futures: &[Future]) {
+    FutureSet::new(futures).wait_all();
+}
+
+/// Alias for [`resolve`] mirroring the `resolve(..., idxs)` family.
+pub fn resolve_all(futures: &[Future]) {
+    resolve(futures);
+}
+
+/// Block until **any** future resolves; returns its index (`None` for an
+/// empty slice).  Wakes via the shared completion channel — no per-future
+/// polling.
+pub fn resolve_any(futures: &[Future]) -> Option<usize> {
+    FutureSet::new(futures).wait_any()
 }
 
 /// `value()` for a collection: resolve all, in order (S3 `value()` on
@@ -537,6 +770,120 @@ mod tests {
                 .collect();
             let vs = values(&fs).unwrap();
             assert_eq!(vs, (0..5).map(Value::I64).collect::<Vec<_>>());
+        });
+    }
+
+    #[test]
+    fn resolve_all_makes_every_value_nonblocking() {
+        with_plan(PlanSpec::multicore(2), || {
+            let env = Env::new();
+            let fs: Vec<Future> = (0..5)
+                .map(|i| {
+                    future(
+                        Expr::seq(vec![Expr::Spin { millis: 5 }, Expr::lit(i as i64)]),
+                        &env,
+                    )
+                    .unwrap()
+                })
+                .collect();
+            resolve(&fs);
+            for (i, f) in fs.iter().enumerate() {
+                assert!(f.resolved(), "future {i} unresolved after resolve()");
+                assert_eq!(f.value().unwrap(), Value::I64(i as i64));
+            }
+        });
+    }
+
+    #[test]
+    fn resolve_any_returns_a_resolved_index() {
+        with_plan(PlanSpec::multicore(2), || {
+            let env = Env::new();
+            let fs: Vec<Future> = (0..3)
+                .map(|i| future(Expr::lit(i as i64), &env).unwrap())
+                .collect();
+            let i = resolve_any(&fs).expect("non-empty set");
+            assert!(fs[i].resolved());
+            assert_eq!(fs[i].value().unwrap(), Value::I64(i as i64));
+        });
+        assert_eq!(resolve_any(&[]), None);
+    }
+
+    #[test]
+    fn future_set_reports_each_index_exactly_once() {
+        with_plan(PlanSpec::multicore(2), || {
+            let env = Env::new();
+            let fs: Vec<Future> = (0..6)
+                .map(|i| future(Expr::lit(i as i64), &env).unwrap())
+                .collect();
+            let mut set = FutureSet::new(&fs);
+            let mut seen = Vec::new();
+            while let Some(i) = set.wait_any() {
+                seen.push(i);
+            }
+            seen.sort_unstable();
+            assert_eq!(seen, (0..6).collect::<Vec<_>>());
+            assert_eq!(set.pending(), 0);
+            assert_eq!(set.wait_any(), None, "exhausted set stays exhausted");
+        });
+    }
+
+    #[test]
+    fn future_set_launches_lazy_futures() {
+        with_plan(PlanSpec::sequential(), || {
+            let env = Env::new();
+            let f = future_with(Expr::lit(3i64), &env, FutureOpts::new().lazy()).unwrap();
+            let mut set = FutureSet::new(std::iter::once(&f));
+            assert_eq!(set.wait_any(), Some(0));
+            assert_eq!(f.value().unwrap(), Value::I64(3));
+        });
+    }
+
+    #[test]
+    fn duplicated_future_in_a_set_does_not_hang() {
+        // Backends keep one subscription per handle (last wins), so the
+        // first token for a duplicated future is displaced — the sweep
+        // fallback must still report both indices.
+        with_plan(PlanSpec::multicore(1), || {
+            let env = Env::new();
+            let f = future(Expr::Spin { millis: 30 }, &env).unwrap();
+            let mut set = FutureSet::new([&f, &f]);
+            let a = set.wait_any().expect("first index");
+            let b = set.wait_any().expect("second index");
+            let mut got = vec![a, b];
+            got.sort_unstable();
+            assert_eq!(got, vec![0, 1]);
+            assert_eq!(set.wait_any(), None);
+        });
+    }
+
+    #[test]
+    fn failed_futures_count_as_resolved_in_sets() {
+        with_plan(PlanSpec::multicore(1), || {
+            let env = Env::new();
+            let fs = vec![
+                future(Expr::stop(Expr::lit("boom")), &env).unwrap(),
+                future(Expr::lit(1i64), &env).unwrap(),
+            ];
+            resolve(&fs); // must terminate despite the eval error
+            assert!(fs[0].value().is_err());
+            assert_eq!(fs[1].value().unwrap(), Value::I64(1));
+        });
+    }
+
+    #[test]
+    fn queued_future_resolves_with_correct_value() {
+        with_plan(PlanSpec::multicore(1), || {
+            let env = Env::new();
+            // Occupy the single worker, then enqueue without blocking.
+            let slow = future(Expr::Spin { millis: 60 }, &env).unwrap();
+            let f = future_with(
+                Expr::add(Expr::lit(20i64), Expr::lit(22i64)),
+                &env,
+                FutureOpts::new().queued(),
+            )
+            .unwrap();
+            assert_eq!(f.value().unwrap(), Value::I64(42));
+            slow.value().unwrap();
         });
     }
 

@@ -73,7 +73,19 @@ impl PlanSpec {
             | PlanSpec::Batch { workers, .. }
             | PlanSpec::Custom { workers, .. } => *workers = n,
             PlanSpec::Cluster { hosts } => {
-                hosts.truncate(n);
+                // Clamp to ≥ 1: an empty host list is rejected by
+                // ClusterBackend::new even though effective_workers()
+                // reports 1.  Growing past the current list appends
+                // generated simulated-host labels (truncate alone silently
+                // no-ops when n > len).
+                let n = n.max(1);
+                if n <= hosts.len() {
+                    hosts.truncate(n);
+                } else {
+                    for i in hosts.len()..n {
+                        hosts.push(format!("sim{}.local", i + 1));
+                    }
+                }
             }
         }
         self
@@ -259,6 +271,36 @@ mod tests {
         assert_eq!(spec.effective_workers(), 2);
         let c = PlanSpec::cluster(&["a", "b", "c"]).tweak_workers(2);
         assert_eq!(c.effective_workers(), 2);
+    }
+
+    #[test]
+    fn tweak_cluster_grows_with_generated_hosts() {
+        // Regression: truncate(n) silently no-oped when n > len.
+        let c = PlanSpec::cluster(&["a", "b"]).tweak_workers(4);
+        assert_eq!(c.effective_workers(), 4);
+        match &c {
+            PlanSpec::Cluster { hosts } => {
+                assert_eq!(hosts.len(), 4);
+                assert_eq!(hosts[0], "a");
+                assert_eq!(hosts[1], "b");
+                // Generated labels are distinct and non-empty.
+                assert_ne!(hosts[2], hosts[3]);
+                assert!(!hosts[2].is_empty());
+            }
+            other => panic!("tweak changed the variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tweak_cluster_to_zero_keeps_one_host() {
+        // Regression: n = 0 used to yield an empty host list, which
+        // ClusterBackend::new rejects while effective_workers() said 1.
+        let c = PlanSpec::cluster(&["a", "b"]).tweak_workers(0);
+        match &c {
+            PlanSpec::Cluster { hosts } => assert_eq!(hosts, &vec!["a".to_string()]),
+            other => panic!("tweak changed the variant: {other:?}"),
+        }
+        assert_eq!(c.effective_workers(), 1);
     }
 
     #[test]

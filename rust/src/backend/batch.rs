@@ -17,6 +17,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::api::error::FutureError;
+use crate::backend::dispatch::CompletionWaker;
 use crate::backend::{Backend, TaskHandle};
 use crate::ipc::wire::{decode_message, encode_message};
 use crate::ipc::{Message, TaskResult, TaskSpec};
@@ -29,6 +30,21 @@ pub struct BatchBackend {
 }
 
 impl BatchBackend {
+    /// Spool the task file and submit (fire-and-forget, like sbatch).
+    fn submit(&self, task: TaskSpec) -> Result<Box<dyn TaskHandle>, FutureError> {
+        let task_file = self.scheduler.spool().join(format!("task-{}.task", task.id));
+        let bytes = encode_message(&Message::Task(task));
+        std::fs::write(&task_file, &bytes)
+            .map_err(|e| FutureError::Launch(format!("spool task: {e}")))?;
+        let job = self.scheduler.submit(task_file);
+        Ok(Box::new(BatchHandle {
+            scheduler: Arc::clone(&self.scheduler),
+            job,
+            poll_interval: self.poll_interval,
+            done: None,
+        }))
+    }
+
     pub fn new(
         workers: usize,
         submit_latency_ms: u64,
@@ -71,20 +87,14 @@ impl Backend for BatchBackend {
             }
             std::thread::sleep(self.poll_interval);
         }
+        self.submit(task)
+    }
 
-        // Spool the task file and submit (fire-and-forget, like sbatch).
-        let task_file = self.scheduler.spool().join(format!("task-{}.task", task.id));
-        let bytes = encode_message(&Message::Task(task));
-        std::fs::write(&task_file, &bytes)
-            .map_err(|e| FutureError::Launch(format!("spool task: {e}")))?;
-        let job = self.scheduler.submit(task_file);
-
-        Ok(Box::new(BatchHandle {
-            scheduler: Arc::clone(&self.scheduler),
-            job,
-            poll_interval: self.poll_interval,
-            done: None,
-        }))
+    fn launch_queued(&self, task: TaskSpec) -> Result<Box<dyn TaskHandle>, FutureError> {
+        // `sbatch` is already fire-and-forget and the scheduler's FIFO
+        // queue already IS a backlog — queued dispatch simply skips the
+        // client-side saturation throttle above.
+        self.submit(task)
     }
 
     fn shutdown(&self) {
@@ -160,6 +170,17 @@ impl TaskHandle for BatchHandle {
 
     fn cancel(&mut self) -> bool {
         self.scheduler.cancel(self.job)
+    }
+
+    fn subscribe(&mut self, waker: &Arc<CompletionWaker>, token: u64) -> bool {
+        if self.done.is_some() {
+            waker.notify(token);
+        } else {
+            // The scheduler daemon notifies on the job's terminal
+            // transition — resolve() over batch futures stops polling.
+            self.scheduler.subscribe(self.job, waker, token);
+        }
+        true
     }
 }
 

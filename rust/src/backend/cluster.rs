@@ -100,6 +100,10 @@ impl Backend for ClusterBackend {
         self.pool.launch(task)
     }
 
+    fn launch_queued(&self, task: TaskSpec) -> Result<Box<dyn TaskHandle>, FutureError> {
+        self.pool.launch_queued(task)
+    }
+
     fn shutdown(&self) {
         self.pool.shutdown();
     }

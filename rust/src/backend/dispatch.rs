@@ -1,0 +1,665 @@
+//! The dispatcher subsystem — queued (non-blocking) dispatch and
+//! as-completed resolution plumbing.
+//!
+//! Two cooperating pieces live here:
+//!
+//! * **[`CompletionWaker`]** — the shared completion channel behind
+//!   `resolve()`/`resolve_any()`: one mutex + condvar that *every* watched
+//!   future notifies with its token when it resolves, so waiting on N
+//!   futures costs one blocked thread and zero polling.  Backends deliver
+//!   notifications through [`crate::backend::TaskHandle::subscribe`].
+//! * **[`Dispatcher`]** — a bounded backlog + one dispatcher thread in
+//!   front of a backend's *blocking* `launch`.  `Future::new` with
+//!   [`crate::api::future::FutureOpts::queued`] enqueues here and returns
+//!   immediately (a [`QueuedHandle`]); the dispatcher thread acquires the
+//!   seat on the caller's behalf.  The backlog is bounded: when it is full,
+//!   enqueueing blocks — backpressure, not an unbounded queue.  The paper's
+//!   block-on-create default is untouched; queued dispatch is opt-in.
+//!
+//! [`CompletionSignal`] is a per-task helper for backends whose completion
+//! event happens on a worker thread (the threadpool): the worker calls
+//! `complete()`, the handle calls `subscribe()`, and the signal resolves
+//! the inherent race between the two under one lock.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::api::error::FutureError;
+use crate::backend::TaskHandle;
+use crate::ipc::{TaskResult, TaskSpec};
+
+/// Default backlog bound for a pool's dispatcher: enough to keep every
+/// worker fed plus a small constant, never unbounded.
+pub fn default_backlog(workers: usize) -> usize {
+    workers.saturating_mul(4).max(16)
+}
+
+// ---------------------------------------------------------------- waker ----
+
+/// A shared completion channel: futures push their token when they resolve,
+/// waiters pop.  One condvar wakes however many futures are being watched —
+/// `resolve_any` over N futures never polls N handles.
+pub struct CompletionWaker {
+    ready: Mutex<VecDeque<u64>>,
+    cv: Condvar,
+}
+
+impl CompletionWaker {
+    pub fn new() -> Arc<Self> {
+        Arc::new(CompletionWaker { ready: Mutex::new(VecDeque::new()), cv: Condvar::new() })
+    }
+
+    /// Deliver a completion token (called by backends; never blocks on
+    /// anything but this waker's own short-lived lock).
+    pub fn notify(&self, token: u64) {
+        let mut q = self.ready.lock().unwrap();
+        q.push_back(token);
+        drop(q);
+        self.cv.notify_all();
+    }
+
+    /// Non-blocking pop of the next delivered token.
+    pub fn try_next(&self) -> Option<u64> {
+        self.ready.lock().unwrap().pop_front()
+    }
+
+    /// Block until a token arrives; `None` only on timeout (when one is
+    /// given).
+    pub fn wait_next(&self, timeout: Option<Duration>) -> Option<u64> {
+        let mut q = self.ready.lock().unwrap();
+        loop {
+            if let Some(t) = q.pop_front() {
+                return Some(t);
+            }
+            match timeout {
+                None => q = self.cv.wait(q).unwrap(),
+                Some(d) => {
+                    let (guard, res) = self.cv.wait_timeout(q, d).unwrap();
+                    q = guard;
+                    if res.timed_out() {
+                        return q.pop_front();
+                    }
+                }
+            }
+        }
+    }
+}
+
+// --------------------------------------------------------------- signal ----
+
+/// Per-task completion latch: `complete()` (worker side) and `subscribe()`
+/// (waiter side) may race in either order; exactly one notification is
+/// delivered either way.
+#[derive(Default)]
+pub struct CompletionSignal {
+    state: Mutex<SignalState>,
+}
+
+#[derive(Default)]
+struct SignalState {
+    done: bool,
+    waiter: Option<(Arc<CompletionWaker>, u64)>,
+}
+
+impl CompletionSignal {
+    pub fn new() -> Arc<Self> {
+        Arc::new(CompletionSignal::default())
+    }
+
+    /// Mark the task complete and notify a registered waiter, if any.
+    pub fn complete(&self) {
+        let waiter = {
+            let mut s = self.state.lock().unwrap();
+            s.done = true;
+            s.waiter.take()
+        };
+        if let Some((w, t)) = waiter {
+            w.notify(t);
+        }
+    }
+
+    /// Register a waiter; notifies immediately if already complete.
+    pub fn subscribe(&self, waker: &Arc<CompletionWaker>, token: u64) {
+        let notify_now = {
+            let mut s = self.state.lock().unwrap();
+            if s.done {
+                true
+            } else {
+                s.waiter = Some((Arc::clone(waker), token));
+                false
+            }
+        };
+        if notify_now {
+            waker.notify(token);
+        }
+    }
+}
+
+// ----------------------------------------------------------- dispatcher ----
+
+/// The blocking-launch half the dispatcher drives (a pool's `launch`).
+pub type LaunchFn =
+    Box<dyn Fn(TaskSpec) -> Result<Box<dyn TaskHandle>, FutureError> + Send + Sync>;
+
+enum CellState {
+    /// In the backlog, seat not yet acquired.
+    Queued { waiter: Option<(Arc<CompletionWaker>, u64)>, cancelled: bool },
+    /// Seat acquired; the live handle parks here until its [`QueuedHandle`]
+    /// claims it (Option so it can be moved out exactly once).
+    Launched(Option<Box<dyn TaskHandle>>),
+    /// Launch failed (or was cancelled/shut down while queued).  Queued
+    /// futures surface launch errors at collection time, not creation —
+    /// the price of not blocking on create.
+    Failed(FutureError),
+}
+
+/// Shared slot a queued task's handle and the dispatcher thread meet at.
+pub struct DispatchCell {
+    state: Mutex<CellState>,
+    cv: Condvar,
+}
+
+impl DispatchCell {
+    fn new() -> Self {
+        DispatchCell {
+            state: Mutex::new(CellState::Queued { waiter: None, cancelled: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn cancelled(&self) -> bool {
+        matches!(&*self.state.lock().unwrap(), CellState::Queued { cancelled: true, .. })
+    }
+
+    /// Dispatcher side: record the launch outcome, forward any resolution
+    /// subscription into the live handle, wake blocked waiters.
+    fn fulfill(&self, outcome: Result<Box<dyn TaskHandle>, FutureError>) {
+        let mut notify_waiter = None;
+        {
+            let mut state = self.state.lock().unwrap();
+            let (waiter, was_cancelled) = match &mut *state {
+                CellState::Queued { waiter, cancelled } => (waiter.take(), *cancelled),
+                // Already fulfilled (double shutdown): keep the first outcome.
+                _ => return,
+            };
+            match outcome {
+                // cancel() raced the dispatcher: it flagged the cell AFTER
+                // the pre-launch cancelled() check but the launch went
+                // through anyway.  Honor the cancel — best-effort stop the
+                // live task and latch Cancelled, so cancel()'s `true` and a
+                // later wait() agree.
+                Ok(mut handle) if was_cancelled => {
+                    handle.cancel();
+                    notify_waiter = waiter;
+                    *state = CellState::Failed(FutureError::Cancelled);
+                }
+                Ok(mut handle) => {
+                    if let Some((w, t)) = waiter {
+                        // Forward the pending subscription into the live
+                        // handle.  A backend without push notification gets
+                        // an immediate (spurious) wake instead, which
+                        // downgrades that future to the poll fallback in
+                        // FutureSet — never a lost wakeup.
+                        if !handle.subscribe(&w, t) {
+                            notify_waiter = Some((w, t));
+                        }
+                    }
+                    *state = CellState::Launched(Some(handle));
+                }
+                Err(e) => {
+                    notify_waiter = waiter;
+                    *state = CellState::Failed(e);
+                }
+            }
+        }
+        self.cv.notify_all();
+        if let Some((w, t)) = notify_waiter {
+            w.notify(t);
+        }
+    }
+}
+
+struct Backlog {
+    tasks: VecDeque<(TaskSpec, Arc<DispatchCell>)>,
+    shutting_down: bool,
+}
+
+struct DispatchShared {
+    queue: Mutex<Backlog>,
+    /// Dispatcher thread waits here for work.
+    work_cv: Condvar,
+    /// Producers wait here when the bounded backlog is full.
+    space_cv: Condvar,
+    capacity: usize,
+}
+
+/// A bounded backlog + one thread that performs blocking seat acquisition
+/// on behalf of non-blocking `launch_queued` callers.
+pub struct Dispatcher {
+    shared: Arc<DispatchShared>,
+    thread: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl Dispatcher {
+    /// Start a dispatcher over `launch` with a backlog bound of `capacity`
+    /// tasks (clamped to ≥ 1).
+    pub fn new(capacity: usize, launch: LaunchFn) -> Self {
+        let shared = Arc::new(DispatchShared {
+            queue: Mutex::new(Backlog { tasks: VecDeque::new(), shutting_down: false }),
+            work_cv: Condvar::new(),
+            space_cv: Condvar::new(),
+            capacity: capacity.max(1),
+        });
+        let thread_shared = Arc::clone(&shared);
+        let thread = std::thread::Builder::new()
+            .name("rustures-dispatch".into())
+            .spawn(move || dispatcher_loop(thread_shared, launch))
+            .expect("spawn dispatcher thread");
+        Dispatcher { shared, thread: Mutex::new(Some(thread)) }
+    }
+
+    /// Enqueue without waiting for a seat.  Blocks only when the bounded
+    /// backlog is full (backpressure) or errors when shutting down.
+    pub fn launch(&self, task: TaskSpec) -> Result<Box<dyn TaskHandle>, FutureError> {
+        let cell = Arc::new(DispatchCell::new());
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            loop {
+                if q.shutting_down {
+                    return Err(FutureError::Launch("dispatcher is shutting down".into()));
+                }
+                if q.tasks.len() < self.shared.capacity {
+                    break;
+                }
+                q = self.shared.space_cv.wait(q).unwrap();
+            }
+            q.tasks.push_back((task, Arc::clone(&cell)));
+        }
+        self.shared.work_cv.notify_one();
+        Ok(Box::new(QueuedHandle { cell, inner: None, failed: None }))
+    }
+
+    /// Stop the dispatcher: fail every task still in the backlog (their
+    /// handles resolve to a launch error) and join the thread.  Idempotent.
+    ///
+    /// The owning pool must unblock any in-flight blocking `launch` (set its
+    /// own shutting-down flag and notify its seat condvar) *before* calling
+    /// this, or the join would deadlock.
+    pub fn shutdown(&self) {
+        let drained = {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutting_down = true;
+            std::mem::take(&mut q.tasks)
+        };
+        self.shared.work_cv.notify_all();
+        self.shared.space_cv.notify_all();
+        for (_, cell) in drained {
+            cell.fulfill(Err(FutureError::Launch("pool shut down before launch".into())));
+        }
+        if let Some(t) = self.thread.lock().unwrap().take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn dispatcher_loop(shared: Arc<DispatchShared>, launch: LaunchFn) {
+    loop {
+        let (task, cell) = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(item) = q.tasks.pop_front() {
+                    break item;
+                }
+                if q.shutting_down {
+                    return;
+                }
+                q = shared.work_cv.wait(q).unwrap();
+            }
+        };
+        shared.space_cv.notify_one();
+        if cell.cancelled() {
+            cell.fulfill(Err(FutureError::Cancelled));
+            continue;
+        }
+        cell.fulfill(launch(task));
+    }
+}
+
+// --------------------------------------------------------- queued handle ----
+
+/// Handle to a task sitting in (or launched from) a dispatcher backlog.
+/// Transparent once launched: every call delegates to the inner handle.
+pub struct QueuedHandle {
+    cell: Arc<DispatchCell>,
+    inner: Option<Box<dyn TaskHandle>>,
+    failed: Option<FutureError>,
+}
+
+impl QueuedHandle {
+    /// Non-blocking: claim the inner handle / terminal failure if the
+    /// dispatcher has fulfilled the cell.
+    fn poll_cell(&mut self) {
+        if self.inner.is_some() || self.failed.is_some() {
+            return;
+        }
+        let mut state = self.cell.state.lock().unwrap();
+        match &mut *state {
+            CellState::Launched(h) => self.inner = h.take(),
+            CellState::Failed(e) => self.failed = Some(e.clone()),
+            CellState::Queued { .. } => {}
+        }
+    }
+
+    /// Blocking: wait for the dispatcher to fulfill the cell.
+    fn wait_cell(&mut self) {
+        if self.inner.is_some() || self.failed.is_some() {
+            return;
+        }
+        let mut state = self.cell.state.lock().unwrap();
+        loop {
+            match &mut *state {
+                CellState::Launched(h) => {
+                    self.inner = h.take();
+                    return;
+                }
+                CellState::Failed(e) => {
+                    self.failed = Some(e.clone());
+                    return;
+                }
+                CellState::Queued { .. } => state = self.cell.cv.wait(state).unwrap(),
+            }
+        }
+    }
+}
+
+impl TaskHandle for QueuedHandle {
+    fn is_resolved(&mut self) -> bool {
+        self.poll_cell();
+        if self.failed.is_some() {
+            return true;
+        }
+        match &mut self.inner {
+            Some(h) => h.is_resolved(),
+            None => false, // still waiting for a seat
+        }
+    }
+
+    fn wait(&mut self) -> Result<TaskResult, FutureError> {
+        self.wait_cell();
+        if let Some(e) = &self.failed {
+            return Err(e.clone());
+        }
+        self.inner.as_mut().expect("launched handle").wait()
+    }
+
+    fn cancel(&mut self) -> bool {
+        self.poll_cell();
+        if let Some(h) = &mut self.inner {
+            return h.cancel();
+        }
+        if self.failed.is_some() {
+            return false;
+        }
+        let mut state = self.cell.state.lock().unwrap();
+        match &mut *state {
+            CellState::Queued { cancelled, .. } => {
+                // The dispatcher skips the launch and fails the cell.
+                *cancelled = true;
+                true
+            }
+            CellState::Launched(h) => match h.as_mut() {
+                Some(handle) => handle.cancel(),
+                None => false,
+            },
+            CellState::Failed(_) => false,
+        }
+    }
+
+    fn subscribe(&mut self, waker: &Arc<CompletionWaker>, token: u64) -> bool {
+        self.poll_cell();
+        if let Some(h) = &mut self.inner {
+            return h.subscribe(waker, token);
+        }
+        if self.failed.is_some() {
+            waker.notify(token);
+            return true;
+        }
+        let mut state = self.cell.state.lock().unwrap();
+        match &mut *state {
+            CellState::Queued { waiter, .. } => {
+                *waiter = Some((Arc::clone(waker), token));
+                true
+            }
+            // Raced with the dispatcher's fulfill: act on the live state.
+            CellState::Launched(h) => match h.as_mut() {
+                Some(handle) => handle.subscribe(waker, token),
+                None => {
+                    waker.notify(token);
+                    true
+                }
+            },
+            CellState::Failed(_) => {
+                waker.notify(token);
+                true
+            }
+        }
+    }
+}
+
+impl Drop for QueuedHandle {
+    fn drop(&mut self) {
+        // Abandoned before launch: cancel the queued task so the dispatcher
+        // never spends a seat on work nobody can collect.
+        if self.inner.is_none() && self.failed.is_none() {
+            let mut state = self.cell.state.lock().unwrap();
+            if let CellState::Queued { cancelled, .. } = &mut *state {
+                *cancelled = true;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::env::Env;
+    use crate::api::expr::Expr;
+    use crate::ipc::TaskOpts;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Instant;
+
+    fn task(expr: Expr) -> TaskSpec {
+        TaskSpec { id: crate::util::uuid_v4(), expr, globals: Env::new(), opts: TaskOpts::default() }
+    }
+
+    /// Launch function that resolves instantly via the sequential backend.
+    fn instant_launch() -> LaunchFn {
+        use crate::backend::{sequential::SequentialBackend, Backend};
+        let b = SequentialBackend::new();
+        Box::new(move |t| b.launch(t))
+    }
+
+    #[test]
+    fn waker_delivers_tokens_in_order() {
+        let w = CompletionWaker::new();
+        w.notify(3);
+        w.notify(7);
+        assert_eq!(w.try_next(), Some(3));
+        assert_eq!(w.wait_next(Some(Duration::from_millis(10))), Some(7));
+        assert_eq!(w.wait_next(Some(Duration::from_millis(10))), None);
+    }
+
+    #[test]
+    fn signal_resolves_subscribe_complete_race_both_orders() {
+        // subscribe then complete
+        let s = CompletionSignal::new();
+        let w = CompletionWaker::new();
+        s.subscribe(&w, 1);
+        assert_eq!(w.try_next(), None);
+        s.complete();
+        assert_eq!(w.try_next(), Some(1));
+        // complete then subscribe
+        let s = CompletionSignal::new();
+        s.complete();
+        s.subscribe(&w, 2);
+        assert_eq!(w.try_next(), Some(2));
+    }
+
+    #[test]
+    fn queued_launch_resolves_through_dispatcher() {
+        let d = Dispatcher::new(4, instant_launch());
+        let mut h = d.launch(task(Expr::add(Expr::lit(1i64), Expr::lit(2i64)))).unwrap();
+        let r = h.wait().unwrap();
+        assert_eq!(r.outcome, crate::ipc::TaskOutcome::Ok(crate::api::value::Value::I64(3)));
+        d.shutdown();
+    }
+
+    #[test]
+    fn enqueue_does_not_block_while_launch_is_slow() {
+        // A launch function that stalls: enqueueing N ≤ capacity tasks must
+        // return immediately anyway.
+        let slow: LaunchFn = Box::new(|t| {
+            std::thread::sleep(Duration::from_millis(80));
+            use crate::backend::{sequential::SequentialBackend, Backend};
+            SequentialBackend::new().launch(t)
+        });
+        let d = Dispatcher::new(8, slow);
+        let t0 = Instant::now();
+        let mut handles: Vec<_> =
+            (0..4).map(|i| d.launch(task(Expr::lit(i as i64))).unwrap()).collect();
+        assert!(
+            t0.elapsed() < Duration::from_millis(60),
+            "enqueue blocked: {:?}",
+            t0.elapsed()
+        );
+        for (i, h) in handles.iter_mut().enumerate() {
+            let r = h.wait().unwrap();
+            assert_eq!(
+                r.outcome,
+                crate::ipc::TaskOutcome::Ok(crate::api::value::Value::I64(i as i64))
+            );
+        }
+        d.shutdown();
+    }
+
+    #[test]
+    fn backlog_is_bounded() {
+        // Capacity 2 with a launch that blocks until released: the third
+        // enqueue must block until the dispatcher drains one.
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let g = Arc::clone(&gate);
+        let gated: LaunchFn = Box::new(move |t| {
+            let (lock, cv) = &*g;
+            let mut open = lock.lock().unwrap();
+            while !*open {
+                open = cv.wait(open).unwrap();
+            }
+            use crate::backend::{sequential::SequentialBackend, Backend};
+            SequentialBackend::new().launch(t)
+        });
+        let d = Arc::new(Dispatcher::new(2, gated));
+        // One task occupies the dispatcher thread, two fill the backlog.
+        let _h0 = d.launch(task(Expr::lit(0i64))).unwrap();
+        let _h1 = d.launch(task(Expr::lit(1i64))).unwrap();
+        let _h2 = d.launch(task(Expr::lit(2i64))).unwrap();
+        let d2 = Arc::clone(&d);
+        let (tx, rx) = std::sync::mpsc::channel();
+        std::thread::spawn(move || {
+            let h = d2.launch(task(Expr::lit(3i64)));
+            let _ = tx.send(h.is_ok());
+        });
+        assert!(
+            rx.recv_timeout(Duration::from_millis(60)).is_err(),
+            "enqueue past the bound should have blocked"
+        );
+        // Open the gate: the dispatcher drains, space frees, enqueue lands.
+        {
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        assert_eq!(rx.recv_timeout(Duration::from_secs(5)), Ok(true));
+        d.shutdown();
+    }
+
+    #[test]
+    fn shutdown_fails_queued_tasks_instead_of_hanging() {
+        let stalls = Arc::new(AtomicUsize::new(0));
+        let s = Arc::clone(&stalls);
+        let never: LaunchFn = Box::new(move |t| {
+            // First launch sleeps long enough for shutdown to arrive.
+            s.fetch_add(1, Ordering::SeqCst);
+            std::thread::sleep(Duration::from_millis(50));
+            use crate::backend::{sequential::SequentialBackend, Backend};
+            SequentialBackend::new().launch(t)
+        });
+        let d = Dispatcher::new(4, never);
+        let _in_flight = d.launch(task(Expr::lit(0i64))).unwrap();
+        let mut queued = d.launch(task(Expr::lit(1i64))).unwrap();
+        std::thread::sleep(Duration::from_millis(10));
+        d.shutdown();
+        match queued.wait() {
+            Err(FutureError::Launch(_)) => {}
+            other => panic!("queued task should fail on shutdown, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cancel_after_dispatcher_claims_task_still_cancels() {
+        // The race the pre-launch cancelled() check cannot catch: the
+        // dispatcher has already POPPED the task and is inside launch()
+        // when cancel() flags the cell.  fulfill() must honor the flag —
+        // cancel the live handle and latch Cancelled — so cancel()'s
+        // `true` and a later wait() agree.
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let g = Arc::clone(&gate);
+        let gated: LaunchFn = Box::new(move |t| {
+            let (lock, cv) = &*g;
+            let mut open = lock.lock().unwrap();
+            while !*open {
+                open = cv.wait(open).unwrap();
+            }
+            use crate::backend::{sequential::SequentialBackend, Backend};
+            SequentialBackend::new().launch(t)
+        });
+        let d = Dispatcher::new(4, gated);
+        let mut h = d.launch(task(Expr::lit(1i64))).unwrap();
+        // Give the dispatcher time to pop the task and block in launch().
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(h.cancel(), "cancel of a claimed-but-unlaunched task should succeed");
+        {
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        match h.wait() {
+            Err(FutureError::Cancelled) => {}
+            other => panic!("expected Cancelled, got {other:?}"),
+        }
+        d.shutdown();
+    }
+
+    #[test]
+    fn cancel_while_queued_prevents_launch() {
+        let launches = Arc::new(AtomicUsize::new(0));
+        let l = Arc::clone(&launches);
+        let counting: LaunchFn = Box::new(move |t| {
+            l.fetch_add(1, Ordering::SeqCst);
+            std::thread::sleep(Duration::from_millis(40));
+            use crate::backend::{sequential::SequentialBackend, Backend};
+            SequentialBackend::new().launch(t)
+        });
+        let d = Dispatcher::new(4, counting);
+        let _busy = d.launch(task(Expr::lit(0i64))).unwrap();
+        let mut h = d.launch(task(Expr::lit(1i64))).unwrap();
+        assert!(h.cancel(), "cancel of a queued task should succeed");
+        match h.wait() {
+            Err(FutureError::Cancelled) => {}
+            other => panic!("expected Cancelled, got {other:?}"),
+        }
+        d.shutdown();
+        assert_eq!(launches.load(Ordering::SeqCst), 1, "cancelled task must not launch");
+    }
+}

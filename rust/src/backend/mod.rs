@@ -20,6 +20,7 @@
 
 pub mod batch;
 pub mod cluster;
+pub mod dispatch;
 pub mod multiprocess;
 pub mod procpool;
 pub mod sequential;
@@ -29,6 +30,7 @@ use std::sync::Arc;
 
 use crate::api::error::FutureError;
 use crate::api::plan::{lookup_backend_factory, PlanSpec};
+use crate::backend::dispatch::CompletionWaker;
 use crate::ipc::{TaskResult, TaskSpec};
 
 /// Handle to one launched (possibly still running) task.
@@ -43,6 +45,19 @@ pub trait TaskHandle: Send {
     /// Best-effort cancellation (extension; `suspend()` is "Future work" in
     /// the paper).  Returns true if the task was prevented from completing.
     fn cancel(&mut self) -> bool {
+        false
+    }
+
+    /// Register a completion subscription: when this task resolves, the
+    /// backend calls `waker.notify(token)` exactly once.  Returns `true`
+    /// when the backend delivers push notifications (every built-in does);
+    /// `false` means unsupported and the caller must poll this handle —
+    /// [`crate::api::future::FutureSet`] downgrades such futures to a
+    /// timed poll fallback.  Subscribing to an already-resolved task
+    /// notifies immediately.  At most one subscription per handle is kept
+    /// (last one wins).
+    fn subscribe(&mut self, waker: &Arc<CompletionWaker>, token: u64) -> bool {
+        let _ = (waker, token);
         false
     }
 }
@@ -69,6 +84,18 @@ pub trait Backend: Send + Sync {
 
     /// Launch a task, blocking while no worker is free.
     fn launch(&self, task: TaskSpec) -> Result<Box<dyn TaskHandle>, FutureError>;
+
+    /// Enqueue a task *without* blocking on seat availability — the queued
+    /// dispatch path behind [`crate::api::future::FutureOpts::queued`].
+    /// Backends with a [`dispatch::Dispatcher`] return immediately with a
+    /// backlog-backed handle (bounded: a full backlog blocks — that is the
+    /// backpressure, not failure); launch errors then surface at
+    /// `value()`/`wait()` instead of creation.  The default falls back to
+    /// the blocking [`Backend::launch`], preserving the paper's
+    /// block-on-create semantics for backends without a dispatcher.
+    fn launch_queued(&self, task: TaskSpec) -> Result<Box<dyn TaskHandle>, FutureError> {
+        self.launch(task)
+    }
 
     /// Tear down workers (called on `plan()` change and process exit).
     fn shutdown(&self) {}

@@ -61,6 +61,10 @@ impl Backend for MultiprocessBackend {
         self.pool.launch(task)
     }
 
+    fn launch_queued(&self, task: TaskSpec) -> Result<Box<dyn TaskHandle>, FutureError> {
+        self.pool.launch_queued(task)
+    }
+
     fn shutdown(&self) {
         self.pool.shutdown();
     }

@@ -15,10 +15,11 @@
 use std::collections::{HashMap, HashSet};
 use std::io::{Read, Write};
 use std::process::Child;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, Weak};
 
 use crate::api::conditions::relay_immediate;
 use crate::api::error::FutureError;
+use crate::backend::dispatch::{default_backlog, CompletionWaker, Dispatcher};
 use crate::backend::TaskHandle;
 use crate::ipc::frame::{read_message, write_message};
 use crate::ipc::{Message, TaskResult, TaskSpec};
@@ -85,6 +86,10 @@ struct Inner {
     pending: HashMap<u64, String>,
     /// task id → parked outcome, until the handle collects it.
     results: HashMap<String, Parked>,
+    /// task id → resolution subscription: notified (once) the moment the
+    /// task's result parks or the task is lost — the push half of
+    /// `resolve()`/`resolve_any()` (no per-handle polling).
+    waiters: HashMap<String, (Arc<CompletionWaker>, u64)>,
     /// Task ids whose handles were dropped: discard their results.
     abandoned: HashSet<String>,
     /// Live workers (idle + busy + being spawned).
@@ -116,6 +121,17 @@ pub struct ProcPool {
     shared: Arc<Shared>,
     spawner: Spawner,
     workers: usize,
+    /// Lazily-started queued-dispatch front (see [`crate::backend::dispatch`]).
+    dispatcher: OnceLock<Dispatcher>,
+}
+
+/// Notify (and clear) the resolution subscription for `task_id`, if any.
+/// Called with the pool lock held; the waker's own lock nests strictly
+/// inside it, never the other way around.
+fn notify_task_waiter(inner: &mut Inner, task_id: &str) {
+    if let Some((waker, token)) = inner.waiters.remove(task_id) {
+        waker.notify(token);
+    }
 }
 
 impl ProcPool {
@@ -128,6 +144,7 @@ impl ProcPool {
                 busy: HashMap::new(),
                 pending: HashMap::new(),
                 results: HashMap::new(),
+                waiters: HashMap::new(),
                 abandoned: HashSet::new(),
                 alive: 0,
                 shutting_down: false,
@@ -136,7 +153,7 @@ impl ProcPool {
             slot_cv: Condvar::new(),
             result_cv: Condvar::new(),
         });
-        let pool = Arc::new(ProcPool { shared, spawner, workers });
+        let pool = Arc::new(ProcPool { shared, spawner, workers, dispatcher: OnceLock::new() });
         for _ in 0..workers {
             let seat = pool.spawn_seat()?;
             let mut inner = pool.shared.inner.lock().unwrap();
@@ -194,6 +211,12 @@ impl ProcPool {
                         }
                         Err(e) => {
                             self.shared.inner.lock().unwrap().alive -= 1;
+                            // The reservation is released: wake launchers
+                            // parked in this same wait loop so they observe
+                            // alive < workers and retry the spawn themselves
+                            // (without this they could sleep forever after a
+                            // failed respawn).
+                            self.shared.slot_cv.notify_all();
                             return Err(e);
                         }
                     }
@@ -217,6 +240,9 @@ impl ProcPool {
                 Ok(s) => s,
                 Err(e) => {
                     self.shared.inner.lock().unwrap().alive -= 1;
+                    // Capacity freed: wake parked launchers (same hang as
+                    // the spawn-retry path above).
+                    self.shared.slot_cv.notify_all();
                     return Err(e);
                 }
             };
@@ -230,6 +256,7 @@ impl ProcPool {
                 inner.alive -= 1;
                 drop(inner);
                 seat.kill();
+                self.shared.slot_cv.notify_all();
                 return Err(FutureError::Channel(format!(
                     "send to fresh worker failed after '{first_err}': {e2}"
                 )));
@@ -261,14 +288,50 @@ impl ProcPool {
         Ok(Box::new(ProcHandle { pool: Arc::clone(self), task_id, collected: false }))
     }
 
+    /// Enqueue a task without blocking on a free seat: the pool's
+    /// dispatcher thread performs the blocking [`ProcPool::launch`] when
+    /// the bounded backlog's turn comes (see [`crate::backend::dispatch`]).
+    pub fn launch_queued(
+        self: &Arc<Self>,
+        task: TaskSpec,
+    ) -> Result<Box<dyn TaskHandle>, FutureError> {
+        let dispatcher = self.dispatcher.get_or_init(|| {
+            // Weak: the dispatcher is owned by the pool — a strong Arc here
+            // would keep the pool alive forever (reference cycle).
+            let pool: Weak<ProcPool> = Arc::downgrade(self);
+            Dispatcher::new(
+                default_backlog(self.workers),
+                Box::new(move |t| match pool.upgrade() {
+                    Some(pool) => pool.launch(t),
+                    None => Err(FutureError::Launch("pool was dropped".into())),
+                }),
+            )
+        });
+        dispatcher.launch(task)
+    }
+
     pub fn shutdown(&self) {
-        let (idle, busy) = {
+        let (idle, busy, waiters) = {
             let mut inner = self.shared.inner.lock().unwrap();
             inner.shutting_down = true;
-            (std::mem::take(&mut inner.idle), std::mem::take(&mut inner.busy))
+            (
+                std::mem::take(&mut inner.idle),
+                std::mem::take(&mut inner.busy),
+                std::mem::take(&mut inner.waiters),
+            )
         };
         self.shared.slot_cv.notify_all();
         self.shared.result_cv.notify_all();
+        // Unblock the dispatcher thread (its in-flight blocking launch now
+        // errors), then drain + join it.
+        if let Some(d) = self.dispatcher.get() {
+            d.shutdown();
+        }
+        // Tasks die with their seats below: wake their subscribers so a
+        // FutureSet never waits on a torn-down pool.
+        for (_, (waker, token)) in waiters {
+            waker.notify(token);
+        }
         for seat in idle {
             seat.graceful_shutdown();
         }
@@ -287,15 +350,17 @@ fn reader_loop(worker_id: u64, mut reader: Box<dyn Read + Send>, shared: Arc<Sha
                 relay_immediate(&condition);
             }
             Ok(Some(Message::Result(result))) => {
+                let result_id = result.id.clone();
                 let mut inner = shared.inner.lock().unwrap();
                 // The worker is free *now* — before anyone collects.
                 if let Some((seat, task_id)) = inner.busy.remove(&worker_id) {
-                    debug_assert_eq!(task_id, result.id);
-                    if inner.abandoned.remove(&result.id) {
+                    debug_assert_eq!(task_id, result_id);
+                    if inner.abandoned.remove(&result_id) {
                         // Nobody wants this result.
                     } else {
-                        inner.results.insert(result.id.clone(), Ok(result));
+                        inner.results.insert(result_id.clone(), Ok(result));
                     }
+                    notify_task_waiter(&mut inner, &result_id);
                     if inner.shutting_down {
                         drop(inner);
                         seat.graceful_shutdown();
@@ -305,12 +370,13 @@ fn reader_loop(worker_id: u64, mut reader: Box<dyn Read + Send>, shared: Arc<Sha
                         shared.slot_cv.notify_one();
                     }
                     shared.result_cv.notify_all();
-                } else if inner.pending.get(&worker_id) == Some(&result.id) {
+                } else if inner.pending.get(&worker_id) == Some(&result_id) {
                     // Fast completion before launch() re-registered the
                     // seat: park the result; launch() returns the seat.
-                    if !inner.abandoned.remove(&result.id) {
-                        inner.results.insert(result.id.clone(), Ok(result));
+                    if !inner.abandoned.remove(&result_id) {
+                        inner.results.insert(result_id.clone(), Ok(result));
                     }
+                    notify_task_waiter(&mut inner, &result_id);
                     drop(inner);
                     shared.result_cv.notify_all();
                 } else {
@@ -339,14 +405,16 @@ fn close_worker(worker_id: u64, shared: &Shared, detail: String) {
         seat.kill();
         inner.alive = inner.alive.saturating_sub(1);
         if !inner.abandoned.remove(&task_id) {
-            inner.results.insert(task_id, Err(detail));
+            inner.results.insert(task_id.clone(), Err(detail));
         }
+        notify_task_waiter(&mut inner, &task_id);
     } else if let Some(task_id) = inner.pending.remove(&worker_id) {
         // Died while launch() still owns the seat: park the failure;
         // launch()'s post-send bookkeeping reclaims the seat.
         if !inner.abandoned.remove(&task_id) {
-            inner.results.insert(task_id, Err(detail));
+            inner.results.insert(task_id.clone(), Err(detail));
         }
+        notify_task_waiter(&mut inner, &task_id);
     } else {
         // Idle worker died (e.g. graceful shutdown EOF): if still seated,
         // remove it so launch() respawns capacity on demand.
@@ -427,6 +495,9 @@ impl TaskHandle for ProcHandle {
                 seat.kill();
                 inner.alive = inner.alive.saturating_sub(1);
                 self.collected = true;
+                // Cancellation resolves the future (to an error): wake any
+                // resolve()-subscriber.
+                notify_task_waiter(&mut inner, &self.task_id);
                 drop(inner);
                 // launch() respawns capacity on demand.
                 self.pool.shared.slot_cv.notify_all();
@@ -434,6 +505,94 @@ impl TaskHandle for ProcHandle {
             }
             None => false,
         }
+    }
+
+    fn subscribe(&mut self, waker: &Arc<CompletionWaker>, token: u64) -> bool {
+        if self.collected {
+            waker.notify(token);
+            return true;
+        }
+        let mut inner = self.pool.shared.inner.lock().unwrap();
+        if inner.results.contains_key(&self.task_id)
+            || !Self::in_flight(&inner, &self.task_id)
+        {
+            // Already parked (or lost): resolved either way.
+            drop(inner);
+            waker.notify(token);
+        } else {
+            inner.waiters.insert(self.task_id.clone(), (Arc::clone(waker), token));
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::env::Env;
+    use crate::api::expr::Expr;
+    use crate::ipc::TaskOpts;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    fn task(expr: Expr) -> TaskSpec {
+        TaskSpec { id: crate::util::uuid_v4(), expr, globals: Env::new(), opts: TaskOpts::default() }
+    }
+
+    /// A reader that stays silent for a beat, then signals clean EOF — a
+    /// worker that connects successfully and dies shortly after, once the
+    /// pool has registered its seat.
+    struct DelayedEof(Duration);
+
+    impl std::io::Read for DelayedEof {
+        fn read(&mut self, _buf: &mut [u8]) -> std::io::Result<usize> {
+            std::thread::sleep(self.0);
+            Ok(0)
+        }
+    }
+
+    #[test]
+    fn failed_respawn_wakes_parked_launchers() {
+        // Spawner: the first call hands out a worker that dies shortly
+        // after connecting; every later call stalls briefly and fails.
+        // One launcher's failed respawn must wake a second launcher parked
+        // on the slot_cv (regression: the launch error paths returned
+        // without notify_all, leaving concurrent launchers asleep forever).
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let spawner: Spawner = Box::new(move || {
+            if c.fetch_add(1, Ordering::SeqCst) == 0 {
+                Ok(Connection {
+                    reader: Box::new(DelayedEof(Duration::from_millis(40))),
+                    writer: Box::new(std::io::sink()),
+                    child: None,
+                })
+            } else {
+                std::thread::sleep(Duration::from_millis(120));
+                Err(FutureError::Launch("no spare workers".into()))
+            }
+        });
+        let pool = ProcPool::new(1, spawner).unwrap();
+        // Let the delayed EOF retire the idle seat: alive drops to 0.
+        std::thread::sleep(Duration::from_millis(120));
+
+        let (tx, rx) = std::sync::mpsc::channel();
+        for _ in 0..2 {
+            let pool = Arc::clone(&pool);
+            let tx = tx.clone();
+            std::thread::spawn(move || {
+                let outcome = pool.launch(task(Expr::lit(1i64))).map(|_| ());
+                let _ = tx.send(outcome);
+            });
+        }
+        // Both launchers must COMPLETE (with errors) — neither may hang.
+        for _ in 0..2 {
+            let outcome = rx
+                .recv_timeout(Duration::from_secs(5))
+                .expect("a launcher hung after a failed respawn");
+            assert!(outcome.is_err(), "launch cannot succeed with a dead spawner");
+        }
+        pool.shutdown();
     }
 }
 
@@ -443,6 +602,9 @@ impl Drop for ProcHandle {
             return;
         }
         let mut inner = self.pool.shared.inner.lock().unwrap();
+        // A dropped handle's subscription is dead weight: remove it so the
+        // reader never notifies a token nobody is waiting on.
+        inner.waiters.remove(&self.task_id);
         if inner.results.remove(&self.task_id).is_none() && Self::in_flight(&inner, &self.task_id)
         {
             // Still running: mark abandoned so the reader discards the

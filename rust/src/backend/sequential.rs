@@ -42,6 +42,16 @@ impl TaskHandle for ResolvedHandle {
             .take()
             .ok_or_else(|| FutureError::Launch("result already taken".into()))
     }
+
+    fn subscribe(
+        &mut self,
+        waker: &std::sync::Arc<crate::backend::dispatch::CompletionWaker>,
+        token: u64,
+    ) -> bool {
+        // Born resolved: notify immediately.
+        waker.notify(token);
+        true
+    }
 }
 
 impl Backend for SequentialBackend {

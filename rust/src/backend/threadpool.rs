@@ -27,18 +27,22 @@ use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, Sender, TryRecvError};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 use crate::api::conditions::relay_immediate;
 use crate::api::error::{EvalError, FutureError};
 use crate::api::plan::at_depth;
+use crate::backend::dispatch::{default_backlog, CompletionSignal, CompletionWaker, Dispatcher};
 use crate::backend::{Backend, TaskHandle};
 use crate::ipc::{TaskOutcome, TaskResult, TaskSpec};
 
 struct Job {
     task: TaskSpec,
     reply: Sender<TaskResult>,
+    /// Completion latch for `resolve()`-style subscribers: the worker
+    /// completes it right after sending the result.
+    signal: Arc<CompletionSignal>,
 }
 
 struct Shared {
@@ -61,6 +65,8 @@ pub struct ThreadPoolBackend {
     shared: Arc<Shared>,
     threads: Mutex<Vec<JoinHandle<()>>>,
     workers: usize,
+    /// Lazily-started queued-dispatch front (see [`crate::backend::dispatch`]).
+    dispatcher: OnceLock<Dispatcher>,
 }
 
 impl ThreadPoolBackend {
@@ -81,8 +87,42 @@ impl ThreadPoolBackend {
                 .expect("spawn pool worker");
             threads.push(handle);
         }
-        ThreadPoolBackend { shared, threads: Mutex::new(threads), workers }
+        ThreadPoolBackend {
+            shared,
+            threads: Mutex::new(threads),
+            workers,
+            dispatcher: OnceLock::new(),
+        }
     }
+}
+
+/// The blocking launch, as a free function so the dispatcher thread can
+/// drive it through a captured `Arc<Shared>` (no backend self-reference).
+fn blocking_launch(
+    shared: &Arc<Shared>,
+    task: TaskSpec,
+) -> Result<Box<dyn TaskHandle>, FutureError> {
+    let label = task.id.clone();
+    let (tx, rx) = mpsc::channel();
+    let signal = CompletionSignal::new();
+
+    let mut q = shared.queue.lock().unwrap();
+    // The paper's blocking semantic: wait for a free worker slot.
+    loop {
+        if shared.shutting_down.load(Ordering::SeqCst) {
+            return Err(FutureError::Launch("pool is shutting down".into()));
+        }
+        if q.free_slots > 0 {
+            break;
+        }
+        q = shared.slot_cv.wait(q).unwrap();
+    }
+    q.free_slots -= 1;
+    q.jobs.push_back(Job { task, reply: tx, signal: Arc::clone(&signal) });
+    drop(q);
+    shared.job_cv.notify_one();
+
+    Ok(Box::new(PoolHandle { rx, done: None, died: false, label, signal }))
 }
 
 fn worker_loop(shared: Arc<Shared>) {
@@ -119,6 +159,8 @@ fn worker_loop(shared: Arc<Shared>) {
         });
         // Receiver may be gone (abandoned future) — that's fine.
         let _ = job.reply.send(result);
+        // Wake resolve()-style subscribers AFTER the result is available.
+        job.signal.complete();
 
         // Return the slot and wake one blocked launcher.
         let mut q = shared.queue.lock().unwrap();
@@ -137,6 +179,7 @@ pub struct PoolHandle {
     /// by every call (the resolved-but-errored consistency contract).
     died: bool,
     label: String,
+    signal: Arc<CompletionSignal>,
 }
 
 impl PoolHandle {
@@ -181,6 +224,15 @@ impl TaskHandle for PoolHandle {
             }
         }
     }
+
+    fn subscribe(&mut self, waker: &Arc<CompletionWaker>, token: u64) -> bool {
+        if self.done.is_some() || self.died {
+            waker.notify(token);
+        } else {
+            self.signal.subscribe(waker, token);
+        }
+        true
+    }
 }
 
 impl Backend for ThreadPoolBackend {
@@ -197,32 +249,39 @@ impl Backend for ThreadPoolBackend {
     }
 
     fn launch(&self, task: TaskSpec) -> Result<Box<dyn TaskHandle>, FutureError> {
-        let label = task.id.clone();
-        let (tx, rx) = mpsc::channel();
+        blocking_launch(&self.shared, task)
+    }
 
-        let mut q = self.shared.queue.lock().unwrap();
-        // The paper's blocking semantic: wait for a free worker slot.
-        while q.free_slots == 0 {
-            if self.shared.shutting_down.load(Ordering::SeqCst) {
-                return Err(FutureError::Launch("pool is shutting down".into()));
-            }
-            q = self.shared.slot_cv.wait(q).unwrap();
-        }
-        q.free_slots -= 1;
-        q.jobs.push_back(Job { task, reply: tx });
-        drop(q);
-        self.shared.job_cv.notify_one();
-
-        Ok(Box::new(PoolHandle { rx, done: None, died: false, label }))
+    fn launch_queued(&self, task: TaskSpec) -> Result<Box<dyn TaskHandle>, FutureError> {
+        let dispatcher = self.dispatcher.get_or_init(|| {
+            let shared = Arc::clone(&self.shared);
+            Dispatcher::new(
+                default_backlog(self.workers),
+                Box::new(move |t| blocking_launch(&shared, t)),
+            )
+        });
+        dispatcher.launch(task)
     }
 
     fn shutdown(&self) {
+        // Order matters: raise the flag and wake everyone FIRST so a
+        // dispatcher thread parked inside blocking_launch errors out, then
+        // the dispatcher can drain + join, then the workers.
         self.shared.shutting_down.store(true, Ordering::SeqCst);
         self.shared.job_cv.notify_all();
         self.shared.slot_cv.notify_all();
+        if let Some(d) = self.dispatcher.get() {
+            d.shutdown();
+        }
         let mut threads = self.threads.lock().unwrap();
         for t in threads.drain(..) {
             let _ = t.join();
+        }
+        // Jobs the workers never picked up: complete their signals so
+        // subscribed FutureSets wake (their handles then report WorkerDied).
+        let mut q = self.shared.queue.lock().unwrap();
+        for job in q.jobs.drain(..) {
+            job.signal.complete();
         }
     }
 }
@@ -315,7 +374,13 @@ mod tests {
         // different error kind on repeat calls).
         let (tx, rx) = mpsc::channel::<TaskResult>();
         drop(tx);
-        let mut h = PoolHandle { rx, done: None, died: false, label: "t-dead".into() };
+        let mut h = PoolHandle {
+            rx,
+            done: None,
+            died: false,
+            label: "t-dead".into(),
+            signal: CompletionSignal::new(),
+        };
         assert!(h.is_resolved(), "disconnected handle must report resolved");
         for _ in 0..2 {
             match h.wait() {
@@ -357,6 +422,50 @@ mod tests {
             }
             other => panic!("expected the tensor back, got {other:?}"),
         }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn launch_queued_returns_while_all_workers_busy() {
+        let pool = ThreadPoolBackend::new(1);
+        let _busy = pool.launch(task(Expr::Spin { millis: 150 })).unwrap();
+        let t0 = Instant::now();
+        let mut h = pool.launch_queued(task(Expr::lit(9i64))).unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_millis(100),
+            "queued launch blocked for {:?}",
+            t0.elapsed()
+        );
+        assert!(!h.is_resolved(), "still waiting for the busy worker");
+        let r = h.wait().unwrap();
+        assert_eq!(r.outcome, TaskOutcome::Ok(Value::I64(9)));
+        pool.shutdown();
+    }
+
+    #[test]
+    fn subscribe_notifies_on_resolution_without_polling() {
+        use crate::backend::dispatch::CompletionWaker;
+        let pool = ThreadPoolBackend::new(1);
+        let mut h = pool.launch(task(Expr::Spin { millis: 30 })).unwrap();
+        let waker = CompletionWaker::new();
+        assert!(h.subscribe(&waker, 42));
+        let tok = waker.wait_next(Some(Duration::from_secs(5)));
+        assert_eq!(tok, Some(42));
+        assert!(h.is_resolved(), "notified handle must be resolved");
+        h.wait().unwrap();
+        pool.shutdown();
+    }
+
+    #[test]
+    fn subscribe_after_resolution_notifies_immediately() {
+        use crate::backend::dispatch::CompletionWaker;
+        let pool = ThreadPoolBackend::new(1);
+        let mut h = pool.launch(task(Expr::lit(1i64))).unwrap();
+        let r = h.wait().unwrap();
+        assert_eq!(r.outcome, TaskOutcome::Ok(Value::I64(1)));
+        let waker = CompletionWaker::new();
+        assert!(h.subscribe(&waker, 7));
+        assert_eq!(waker.try_next(), Some(7));
         pool.shutdown();
     }
 

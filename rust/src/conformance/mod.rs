@@ -13,7 +13,9 @@ use crate::api::conditions::{set_sink, ConditionKind, RecordingSink};
 use crate::api::env::Env;
 use crate::api::error::FutureError;
 use crate::api::expr::{Expr, PrimOp};
-use crate::api::future::{future, future_with, reset_session_counter, FutureOpts};
+use crate::api::future::{
+    future, future_with, reset_session_counter, resolve, resolve_any, FutureOpts, FutureSet,
+};
 use crate::api::globals::GlobalsSpec;
 use crate::api::plan::{with_plan_topology, PlanSpec};
 use crate::api::value::{Tensor, Value};
@@ -268,6 +270,114 @@ fn check_lapply_chunking_invariance() -> Result<(), String> {
     expect_eq(a, b, "chunking invariance")
 }
 
+fn check_resolve_all_without_collection() -> Result<(), String> {
+    // The paper's resolve(): wait until all are resolved, collect later.
+    let env = Env::new();
+    let fs: Vec<_> = (0..4)
+        .map(|i| {
+            future(Expr::seq(vec![Expr::Spin { millis: 5 }, Expr::lit(i as i64)]), &env)
+        })
+        .collect::<Result<_, _>>()
+        .map_err(|e| e.to_string())?;
+    resolve(&fs);
+    for (i, f) in fs.iter().enumerate() {
+        if !f.resolved() {
+            return err(format!("future {i} unresolved after resolve()"));
+        }
+    }
+    // Collection still works, in any order, after resolution.
+    for (i, f) in fs.iter().enumerate().rev() {
+        expect_eq(f.value().map_err(|e| e.to_string())?, Value::I64(i as i64), "post-resolve")?;
+    }
+    Ok(())
+}
+
+fn check_resolve_any_returns_a_resolved_future() -> Result<(), String> {
+    let env = Env::new();
+    let fs: Vec<_> = (0..3)
+        .map(|i| future(Expr::lit(i as i64), &env))
+        .collect::<Result<_, _>>()
+        .map_err(|e| e.to_string())?;
+    match resolve_any(&fs) {
+        Some(i) if i < fs.len() => {
+            if !fs[i].resolved() {
+                return err(format!("resolve_any returned unresolved index {i}"));
+            }
+            expect_eq(
+                fs[i].value().map_err(|e| e.to_string())?,
+                Value::I64(i as i64),
+                "resolve_any winner",
+            )
+        }
+        Some(i) => err(format!("resolve_any index {i} out of range")),
+        None => err("resolve_any returned None for a non-empty set"),
+    }
+}
+
+fn check_future_set_reports_every_index_once() -> Result<(), String> {
+    let env = Env::new();
+    let fs: Vec<_> = (0..5)
+        .map(|i| future(Expr::lit(i as i64), &env))
+        .collect::<Result<_, _>>()
+        .map_err(|e| e.to_string())?;
+    let mut set = FutureSet::new(&fs);
+    let mut seen = Vec::new();
+    while let Some(i) = set.wait_any() {
+        seen.push(i);
+    }
+    seen.sort_unstable();
+    expect_eq(seen, (0..5).collect::<Vec<_>>(), "reported indices")
+}
+
+fn check_streaming_collect_matches_in_order() -> Result<(), String> {
+    // As-completed harvesting must be bit-identical (values + seeded RNG)
+    // to the strictly-in-order reference under this backend.
+    let env = Env::new();
+    let xs: Vec<Value> = (0..6i64).map(Value::I64).collect();
+    let body = Expr::add(Expr::var("x"), Expr::runif(1));
+    let streamed = future_lapply(
+        &xs,
+        "x",
+        &body,
+        &env,
+        &LapplyOpts::new().seed(31).chunking(Chunking::ChunkSize(2)),
+    )
+    .map_err(|e| e.to_string())?;
+    let ordered = future_lapply(
+        &xs,
+        "x",
+        &body,
+        &env,
+        &LapplyOpts::new().seed(31).chunking(Chunking::ChunkSize(2)).in_order(),
+    )
+    .map_err(|e| e.to_string())?;
+    expect_eq(streamed, ordered, "streaming vs in-order")
+}
+
+fn check_queued_dispatch_resolves_correctly() -> Result<(), String> {
+    // Semantics only (timing is backend-specific): a queued future must
+    // deliver the same value/ordering guarantees as a blocking-create one.
+    let env = Env::new();
+    let fs: Vec<_> = (0..3)
+        .map(|i| {
+            future_with(
+                Expr::mul(Expr::lit(i as i64), Expr::lit(10i64)),
+                &env,
+                FutureOpts::new().queued(),
+            )
+        })
+        .collect::<Result<_, _>>()
+        .map_err(|e| e.to_string())?;
+    for (i, f) in fs.iter().enumerate() {
+        expect_eq(
+            f.value().map_err(|e| e.to_string())?,
+            Value::I64(i as i64 * 10),
+            "queued value",
+        )?;
+    }
+    Ok(())
+}
+
 fn check_nested_protection() -> Result<(), String> {
     // A future that itself creates a future: the inner one must resolve
     // (implicit sequential), not deadlock or error.
@@ -342,6 +452,31 @@ pub fn checks() -> Vec<Check> {
             name: "lapply-chunking",
             what: "map-reduce results invariant to chunking",
             run: check_lapply_chunking_invariance,
+        },
+        Check {
+            name: "resolve-all",
+            what: "resolve() waits for all without collecting",
+            run: check_resolve_all_without_collection,
+        },
+        Check {
+            name: "resolve-any",
+            what: "resolve_any() returns a resolved index",
+            run: check_resolve_any_returns_a_resolved_future,
+        },
+        Check {
+            name: "future-set-once",
+            what: "FutureSet reports every index exactly once",
+            run: check_future_set_reports_every_index_once,
+        },
+        Check {
+            name: "streaming-lapply",
+            what: "as-completed collect bit-identical to in-order",
+            run: check_streaming_collect_matches_in_order,
+        },
+        Check {
+            name: "queued-dispatch",
+            what: "queued futures resolve with identical semantics",
+            run: check_queued_dispatch_resolves_correctly,
         },
         Check {
             name: "nested-protection",

@@ -60,11 +60,15 @@ pub mod prelude {
     pub use crate::api::env::Env;
     pub use crate::api::error::{EvalError, FutureError};
     pub use crate::api::expr::{Expr, PrimOp};
-    pub use crate::api::future::{future, future_with, Future, FutureOpts};
+    pub use crate::api::future::{
+        future, future_with, resolve, resolve_all, resolve_any, Future, FutureOpts, FutureSet,
+    };
     pub use crate::api::lazy::merge_futures;
     pub use crate::api::plan::{plan, plan_topology, with_plan, PlanSpec};
     pub use crate::api::promise::ListEnv;
     pub use crate::api::rng::RngStream;
     pub use crate::api::value::{Tensor, Value};
-    pub use crate::mapreduce::{future_lapply, future_map, Chunking, LapplyOpts};
+    pub use crate::mapreduce::{
+        future_lapply, future_map, future_map_reduce, Chunking, LapplyOpts,
+    };
 }

@@ -24,6 +24,23 @@
 //! element `i` under substream `base_index + i` whenever the map is seeded,
 //! so every chunking policy, backend, and worker count draws identical
 //! numbers (future.apply's per-element streams).
+//!
+//! ## As-completed collection
+//!
+//! Harvesting is **streaming**: a [`crate::api::future::FutureSet`] watches
+//! every chunk future through the shared completion channel and each chunk
+//! is promoted to its terminal state *the moment it resolves* — a slow
+//! chunk can no longer head-of-line-block finished results behind it in
+//! the backend's parked-result map.  The output is bit-identical to the
+//! historical strictly-in-order collect (values, seeded RNG draws, and the
+//! relay order of captured output) because values are extracted into their
+//! input-order slots after the drain; only the *waiting* is
+//! completion-ordered.  [`future_map_reduce`] goes further and folds
+//! results in completion order — for commutative reductions only.
+//!
+//! With [`LapplyOpts::queued`], chunk futures enqueue on the backend's
+//! bounded dispatcher backlog instead of blocking creation on seat
+//! availability; the backlog bound is the in-flight window.
 
 pub mod foreach;
 
@@ -33,7 +50,7 @@ use std::sync::Arc;
 use crate::api::env::Env;
 use crate::api::error::FutureError;
 use crate::api::expr::Expr;
-use crate::api::future::{future_with, Future, FutureOpts};
+use crate::api::future::{future_with, Future, FutureOpts, FutureSet};
 use crate::api::plan::backend_for_current_depth;
 use crate::api::value::Value;
 
@@ -68,6 +85,14 @@ pub struct LapplyOpts {
     /// Capture stdout/conditions on workers (off for throughput benches).
     pub capture: bool,
     pub label: Option<String>,
+    /// Enqueue chunk futures on the backend's bounded dispatcher backlog
+    /// instead of blocking creation while all seats are busy
+    /// ([`crate::api::future::FutureOpts::queued`]).
+    pub queued: bool,
+    /// Collect strictly in submission order instead of as-completed — the
+    /// pre-streaming reference path, kept for A/B tests and benches.  The
+    /// output is identical either way; only the waiting differs.
+    pub in_order: bool,
 }
 
 impl LapplyOpts {
@@ -87,6 +112,16 @@ impl LapplyOpts {
 
     pub fn no_capture(mut self) -> Self {
         self.capture = false;
+        self
+    }
+
+    pub fn queued(mut self) -> Self {
+        self.queued = true;
+        self
+    }
+
+    pub fn in_order(mut self) -> Self {
+        self.in_order = true;
         self
     }
 }
@@ -118,7 +153,15 @@ pub fn chunk_count(n: usize, workers: usize, chunking: Chunking) -> usize {
     match chunking {
         Chunking::PerElement => n,
         Chunking::PerWorker => workers.max(1),
-        Chunking::Scheduling(f) => ((workers.max(1) as f64 * f.max(0.0)).round() as usize).max(1),
+        Chunking::Scheduling(f) => {
+            // NaN and negative factors fall back to the per-worker default
+            // (1.0) rather than silently collapsing to one chunk; zero
+            // keeps future.apply's `scheduling = 0` meaning (everything in
+            // a single chunk); sub-1.0 gives that fraction of the workers;
+            // +inf saturates and is clamped to n below (per-element).
+            let f = if f.is_nan() || f < 0.0 { 1.0 } else { f };
+            ((workers.max(1) as f64 * f).round() as usize).max(1)
+        }
         Chunking::ChunkSize(sz) => n.div_ceil(sz.max(1)),
     }
     .min(n)
@@ -130,7 +173,9 @@ pub fn chunk_count(n: usize, workers: usize, chunking: Chunking) -> usize {
 /// This is `future.apply::future_lapply()`: chunks are built per the policy,
 /// each chunk becomes one future, and with `seed` set each *element* gets
 /// RNG substream `i` so the result is identical under any chunking, backend,
-/// or worker count.
+/// or worker count.  Chunk results are harvested **as they complete** (see
+/// the module docs) unless [`LapplyOpts::in_order`] asks for the historical
+/// strictly-ordered collect; the output is bit-identical either way.
 pub fn future_lapply(
     xs: &[Value],
     param: &str,
@@ -139,14 +184,37 @@ pub fn future_lapply(
     opts: &LapplyOpts,
 ) -> Result<Vec<Value>, FutureError> {
     let futures = lapply_futures(xs, param, body, env, opts)?;
-    let mut out = Vec::with_capacity(xs.len());
-    for f in &futures {
+    if opts.in_order {
+        collect_in_order(&futures, xs.len())
+    } else {
+        collect_streaming(&futures, xs.len())
+    }
+}
+
+/// The pre-streaming reference collect: `value()` per chunk, strictly in
+/// submission order — a slow first chunk blocks the harvest of every
+/// finished chunk behind it.
+fn collect_in_order(futures: &[Future], n_hint: usize) -> Result<Vec<Value>, FutureError> {
+    let mut out = Vec::with_capacity(n_hint);
+    for f in futures {
         match f.value()? {
             Value::List(items) => out.extend(items),
             other => out.push(other),
         }
     }
     Ok(out)
+}
+
+/// As-completed collect: drain resolutions through the shared completion
+/// channel (each chunk is promoted to Done — its result leaves the
+/// backend's parked map — the moment it finishes), then extract values into
+/// their input-order slots.  Extraction after the drain never blocks, and
+/// doing the `value()` pass in input order keeps the relay order of
+/// captured stdout/conditions identical to [`collect_in_order`].
+fn collect_streaming(futures: &[Future], n_hint: usize) -> Result<Vec<Value>, FutureError> {
+    let mut set = FutureSet::new(futures);
+    while set.wait_any().is_some() {}
+    collect_in_order(futures, n_hint)
 }
 
 /// The launch half of [`future_lapply`] — returns the chunk futures without
@@ -183,6 +251,7 @@ pub fn lapply_futures(
         fopts.seed = opts.seed;
         fopts.stdout = opts.capture;
         fopts.conditions = opts.capture;
+        fopts.queued = opts.queued;
         fopts.label = Some(match &opts.label {
             Some(l) => format!("{l}[chunk {ci}]"),
             None => format!("lapply[chunk {ci}]"),
@@ -190,6 +259,46 @@ pub fn lapply_futures(
         futures.push(future_with(chunk_expr, env, fopts)?);
     }
     Ok(futures)
+}
+
+/// Streaming map-reduce: map `body` over `xs` in chunks and fold every
+/// element result into `init` with `combine` **in completion order** —
+/// finished chunks feed the fold while slower chunks are still running,
+/// turning the reduction's wall clock from O(slowest prefix) into
+/// O(slowest chunk).
+///
+/// Because completion order varies run to run, `combine` must be
+/// commutative and associative for a deterministic result (sums, products,
+/// min/max, set union...).  For order-sensitive reductions, reduce over
+/// [`future_lapply`]'s input-ordered output instead.
+///
+/// Within one chunk, element results fold left-to-right (input order).
+pub fn future_map_reduce(
+    xs: &[Value],
+    param: &str,
+    body: &Expr,
+    env: &Env,
+    opts: &LapplyOpts,
+    init: Value,
+    mut combine: impl FnMut(Value, Value) -> Result<Value, FutureError>,
+) -> Result<Value, FutureError> {
+    if xs.is_empty() {
+        return Ok(init);
+    }
+    let futures = lapply_futures(xs, param, body, env, opts)?;
+    let mut set = FutureSet::new(&futures);
+    let mut acc = init;
+    while let Some(i) = set.wait_any() {
+        match futures[i].value()? {
+            Value::List(items) => {
+                for v in items {
+                    acc = combine(acc, v)?;
+                }
+            }
+            other => acc = combine(acc, other)?,
+        }
+    }
+    Ok(acc)
 }
 
 /// `furrr::future_map()`: build each element's expression with a closure
@@ -244,6 +353,170 @@ mod tests {
         assert_eq!(chunk_count(10, 4, Chunking::ChunkSize(3)), 4);
         assert_eq!(chunk_count(3, 8, Chunking::PerWorker), 3); // never > n
         assert_eq!(chunk_count(0, 4, Chunking::PerWorker), 0);
+    }
+
+    #[test]
+    fn chunk_count_scheduling_edge_cases() {
+        // NaN / negative factors: per-worker fallback, not a silent 1.
+        assert_eq!(chunk_count(10, 4, Chunking::Scheduling(f64::NAN)), 4);
+        assert_eq!(chunk_count(10, 4, Chunking::Scheduling(-1.0)), 4);
+        // Zero: future.apply's scheduling = 0 — one chunk total.
+        assert_eq!(chunk_count(10, 4, Chunking::Scheduling(0.0)), 1);
+        // Sub-1.0: that fraction of the workers (≥ 1).
+        assert_eq!(chunk_count(10, 4, Chunking::Scheduling(0.5)), 2);
+        assert_eq!(chunk_count(10, 4, Chunking::Scheduling(0.1)), 1);
+        // +inf saturates and clamps to n (per-element).
+        assert_eq!(chunk_count(10, 4, Chunking::Scheduling(f64::INFINITY)), 10);
+        // Edge policies never exceed [1, n] for n > 0 and stay 0 at n = 0.
+        for f in [f64::NAN, -3.0, 0.0, 0.3, f64::INFINITY] {
+            assert_eq!(chunk_count(0, 4, Chunking::Scheduling(f)), 0);
+            let c = chunk_count(7, 4, Chunking::Scheduling(f));
+            assert!((1..=7).contains(&c), "f={f}: {c}");
+        }
+    }
+
+    #[test]
+    fn chunk_size_zero_clamps_to_one_element_chunks() {
+        assert_eq!(chunk_count(10, 4, Chunking::ChunkSize(0)), 10);
+        assert_eq!(chunk_count(0, 4, Chunking::ChunkSize(0)), 0);
+        // And the full map still works.
+        with_plan(PlanSpec::sequential(), || {
+            let env = Env::new();
+            let body = Expr::mul(Expr::var("x"), Expr::lit(2i64));
+            let got = future_lapply(
+                &xs(4),
+                "x",
+                &body,
+                &env,
+                &LapplyOpts::new().chunking(Chunking::ChunkSize(0)),
+            )
+            .unwrap();
+            assert_eq!(got, vec![Value::I64(0), Value::I64(2), Value::I64(4), Value::I64(6)]);
+        });
+    }
+
+    #[test]
+    fn streaming_collect_matches_in_order_collect_bit_identically() {
+        // The as-completed path must reproduce the in-order reference
+        // exactly, including seeded RNG draws, under every chunking policy.
+        with_plan(PlanSpec::multicore(2), || {
+            let env = Env::new();
+            let body = Expr::add(Expr::var("x"), Expr::runif(2));
+            for chunking in [
+                Chunking::PerElement,
+                Chunking::PerWorker,
+                Chunking::Scheduling(2.0),
+                Chunking::ChunkSize(3),
+            ] {
+                let streamed = future_lapply(
+                    &xs(8),
+                    "x",
+                    &body,
+                    &env,
+                    &LapplyOpts::new().seed(99).chunking(chunking),
+                )
+                .unwrap();
+                let ordered = future_lapply(
+                    &xs(8),
+                    "x",
+                    &body,
+                    &env,
+                    &LapplyOpts::new().seed(99).chunking(chunking).in_order(),
+                )
+                .unwrap();
+                assert_eq!(streamed, ordered, "{chunking:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn queued_lapply_matches_blocking_lapply() {
+        with_plan(PlanSpec::multicore(2), || {
+            let env = Env::new();
+            let body = Expr::mul(Expr::var("x"), Expr::var("x"));
+            let queued = future_lapply(
+                &xs(10),
+                "x",
+                &body,
+                &env,
+                &LapplyOpts::new().queued().chunking(Chunking::ChunkSize(2)),
+            )
+            .unwrap();
+            let blocking = future_lapply(
+                &xs(10),
+                "x",
+                &body,
+                &env,
+                &LapplyOpts::new().chunking(Chunking::ChunkSize(2)),
+            )
+            .unwrap();
+            assert_eq!(queued, blocking);
+        });
+    }
+
+    #[test]
+    fn map_reduce_folds_to_the_same_total_as_map_then_reduce() {
+        with_plan(PlanSpec::multicore(2), || {
+            let env = Env::new();
+            let body = Expr::mul(Expr::var("x"), Expr::var("x"));
+            let opts = LapplyOpts::new().chunking(Chunking::ChunkSize(3));
+            let total = future_map_reduce(
+                &xs(10),
+                "x",
+                &body,
+                &env,
+                &opts,
+                Value::I64(0),
+                |acc, v| match (acc, v) {
+                    (Value::I64(a), Value::I64(b)) => Ok(Value::I64(a + b)),
+                    other => panic!("unexpected fold inputs: {other:?}"),
+                },
+            )
+            .unwrap();
+            let want: i64 = (0..10).map(|i| i * i).sum();
+            assert_eq!(total, Value::I64(want));
+        });
+    }
+
+    #[test]
+    fn map_reduce_empty_input_returns_init() {
+        with_plan(PlanSpec::sequential(), || {
+            let env = Env::new();
+            let got = future_map_reduce(
+                &[],
+                "x",
+                &Expr::var("x"),
+                &env,
+                &LapplyOpts::new(),
+                Value::I64(7),
+                |acc, _| Ok(acc),
+            )
+            .unwrap();
+            assert_eq!(got, Value::I64(7));
+        });
+    }
+
+    #[test]
+    fn map_reduce_propagates_element_errors() {
+        with_plan(PlanSpec::sequential(), || {
+            let env = Env::new();
+            let body = Expr::if_else(
+                Expr::prim(crate::api::expr::PrimOp::Eq, vec![Expr::var("x"), Expr::lit(1i64)]),
+                Expr::stop(Expr::lit("bad element")),
+                Expr::var("x"),
+            );
+            let err = future_map_reduce(
+                &xs(3),
+                "x",
+                &body,
+                &env,
+                &LapplyOpts::new(),
+                Value::I64(0),
+                |acc, _| Ok(acc),
+            )
+            .unwrap_err();
+            assert!(err.is_eval());
+        });
     }
 
     #[test]

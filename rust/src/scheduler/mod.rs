@@ -24,6 +24,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::api::error::FutureError;
+use crate::backend::dispatch::CompletionWaker;
 use crate::util::exe::worker_exe;
 use crate::util::uuid_v4;
 
@@ -90,6 +91,20 @@ struct SchedState {
     queue: VecDeque<JobId>,
     jobs: HashMap<JobId, Job>,
     free_slots: Vec<usize>, // node indices with capacity
+    /// job id → completion subscription, notified once by the daemon when
+    /// the job reaches a terminal state.  This is the ONE exception to the
+    /// "clients learn by polling" rule above: in-process clients (the batch
+    /// backend's handles) may register a waker so `resolve()` does not have
+    /// to poll N jobs — the file-staged protocol itself is unchanged.
+    waiters: HashMap<JobId, (Arc<CompletionWaker>, u64)>,
+}
+
+impl SchedState {
+    fn notify_job_waiter(&mut self, id: JobId) {
+        if let Some((waker, token)) = self.waiters.remove(&id) {
+            waker.notify(token);
+        }
+    }
 }
 
 /// The scheduler daemon + client API.
@@ -117,6 +132,7 @@ impl Scheduler {
             queue: VecDeque::new(),
             jobs: HashMap::new(),
             free_slots,
+            waiters: HashMap::new(),
         }));
         let stop = Arc::new(AtomicBool::new(false));
         let sched = Arc::new(Scheduler {
@@ -172,7 +188,7 @@ impl Scheduler {
     pub fn cancel(&self, id: JobId) -> bool {
         let mut state = self.state.lock().unwrap();
         let Some(job) = state.jobs.get_mut(&id) else { return false };
-        match job.state {
+        let cancelled = match job.state {
             JobState::Pending => {
                 job.state = JobState::Cancelled;
                 true
@@ -189,6 +205,31 @@ impl Scheduler {
                 true
             }
             _ => false,
+        };
+        if cancelled {
+            // Cancellation is terminal: wake resolve()-subscribers.
+            state.notify_job_waiter(id);
+        }
+        cancelled
+    }
+
+    /// Register a completion waker for `id`: `waker.notify(token)` fires
+    /// once when the job reaches a terminal state (already-terminal jobs —
+    /// and unknown ids — notify immediately).
+    pub fn subscribe(&self, id: JobId, waker: &Arc<CompletionWaker>, token: u64) {
+        let notify_now = {
+            let mut state = self.state.lock().unwrap();
+            let live = matches!(
+                state.jobs.get(&id).map(|j| &j.state),
+                Some(JobState::Pending) | Some(JobState::Running { .. })
+            );
+            if live {
+                state.waiters.insert(id, (Arc::clone(waker), token));
+            }
+            !live
+        };
+        if notify_now {
+            waker.notify(token);
         }
     }
 
@@ -219,6 +260,11 @@ impl Scheduler {
                 let _ = child.kill();
                 let _ = child.wait();
             }
+        }
+        // Jobs die with the daemon: wake every remaining subscriber.
+        let waiters = std::mem::take(&mut state.waiters);
+        for (_, (waker, token)) in waiters {
+            waker.notify(token);
         }
         drop(state);
         let _ = std::fs::remove_dir_all(&self.config.spool);
@@ -257,6 +303,9 @@ fn daemon_loop(config: SchedConfig, state: Arc<Mutex<SchedState>>, stop: Arc<Ato
                     if let Some(node) = job.node.take() {
                         st.free_slots.push(node);
                     }
+                    // Terminal transition: push-notify instead of making
+                    // every handle poll for it.
+                    st.notify_job_waiter(id);
                 }
             }
 
@@ -292,6 +341,7 @@ fn daemon_loop(config: SchedConfig, state: Arc<Mutex<SchedState>>, stop: Arc<Ato
                     Err(e) => {
                         job.state = JobState::Failed(e.to_string());
                         st.free_slots.push(node);
+                        st.notify_job_waiter(front);
                     }
                 }
             }

@@ -1,0 +1,303 @@
+//! As-completed resolution end to end: queued (non-blocking) dispatch,
+//! `resolve()`/`FutureSet` wake-ups over the shared completion channel, and
+//! the streaming map-reduce equivalence guarantees — the acceptance gates
+//! for the dispatcher subsystem.
+
+use std::time::{Duration, Instant};
+
+use rustures::api::plan::{with_plan, PlanSpec};
+use rustures::prelude::*;
+use rustures::proptest_lite::check;
+
+fn xs(n: usize) -> Vec<Value> {
+    (0..n as i64).map(Value::I64).collect()
+}
+
+#[test]
+fn queued_creation_does_not_block_when_all_workers_busy() {
+    // The tentpole behaviour: with FutureOpts::queued, future() enqueues on
+    // the dispatcher backlog and returns immediately even though every
+    // worker seat is taken — where the paper's default would block.
+    for spec in [PlanSpec::multicore(1), PlanSpec::multiprocess(1)] {
+        let name = spec.name();
+        with_plan(spec, || {
+            let env = Env::new();
+            let slow = future(Expr::Spin { millis: 300 }, &env).unwrap();
+            let t0 = Instant::now();
+            let f = future_with(Expr::lit(5i64), &env, FutureOpts::new().queued()).unwrap();
+            let create = t0.elapsed();
+            assert!(
+                create < Duration::from_millis(150),
+                "{name}: queued create blocked for {create:?}"
+            );
+            assert!(!f.resolved(), "{name}: queued future cannot be resolved yet");
+            assert_eq!(f.value().unwrap(), Value::I64(5), "{name}");
+            slow.value().unwrap();
+        });
+    }
+}
+
+#[test]
+fn blocking_create_default_is_preserved() {
+    // The paper's semantic must survive the dispatcher: WITHOUT queued,
+    // the third create on two busy workers still blocks.
+    with_plan(PlanSpec::multicore(2), || {
+        let env = Env::new();
+        let _f1 = future(Expr::Spin { millis: 200 }, &env).unwrap();
+        let _f2 = future(Expr::Spin { millis: 200 }, &env).unwrap();
+        let t0 = Instant::now();
+        let f3 = future(Expr::lit(3i64), &env).unwrap();
+        assert!(
+            t0.elapsed() >= Duration::from_millis(50),
+            "default create should have blocked, took {:?}",
+            t0.elapsed()
+        );
+        assert_eq!(f3.value().unwrap(), Value::I64(3));
+    });
+}
+
+#[test]
+fn resolve_any_wakes_on_the_fast_future() {
+    // resolve_any must return as soon as the FAST racer resolves — long
+    // before the slow one — woken by the shared completion channel.
+    for spec in [PlanSpec::multicore(2), PlanSpec::multiprocess(2)] {
+        let name = spec.name();
+        with_plan(spec, || {
+            let env = Env::new();
+            let fs = vec![
+                future(
+                    Expr::seq(vec![Expr::Spin { millis: 600 }, Expr::lit("slow")]),
+                    &env,
+                )
+                .unwrap(),
+                future(
+                    Expr::seq(vec![Expr::Spin { millis: 5 }, Expr::lit("fast")]),
+                    &env,
+                )
+                .unwrap(),
+            ];
+            let t0 = Instant::now();
+            let i = resolve_any(&fs).expect("non-empty");
+            let waited = t0.elapsed();
+            assert_eq!(i, 1, "{name}: fast future should win");
+            assert!(
+                waited < Duration::from_millis(450),
+                "{name}: resolve_any waited {waited:?} — did it block on the slow future?"
+            );
+            assert_eq!(fs[1].value().unwrap(), Value::Str("fast".into()), "{name}");
+            // The slow one still completes normally afterwards.
+            assert_eq!(fs[0].value().unwrap(), Value::Str("slow".into()), "{name}");
+        });
+    }
+}
+
+#[test]
+fn future_set_streams_completions_in_completion_order() {
+    with_plan(PlanSpec::multicore(3), || {
+        let env = Env::new();
+        // One slow future (index 0) and two fast ones; three workers, so
+        // all three run concurrently from creation.
+        let delays = [300u64, 5, 10];
+        let fs: Vec<Future> = delays
+            .iter()
+            .enumerate()
+            .map(|(i, d)| {
+                future(
+                    Expr::seq(vec![Expr::Spin { millis: *d }, Expr::lit(i as i64)]),
+                    &env,
+                )
+                .unwrap()
+            })
+            .collect();
+        let mut set = FutureSet::new(&fs);
+        let mut order = Vec::new();
+        while let Some(i) = set.wait_any() {
+            order.push(i);
+        }
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2], "every index exactly once: {order:?}");
+        // The slow future must be reported LAST — the as-completed property
+        // (an in-order harvest would report 0 first after blocking on it).
+        let pos = |x: usize| order.iter().position(|&i| i == x).unwrap();
+        assert!(pos(1) < pos(0), "fast future reported after slow one: {order:?}");
+        assert!(pos(2) < pos(0), "fast future reported after slow one: {order:?}");
+    });
+}
+
+#[test]
+fn streaming_lapply_bit_identical_across_backends_and_chunkings() {
+    // The acceptance gate: seeded future_lapply output is bit-identical to
+    // the pre-change (strictly in-order) collection under EVERY chunking
+    // policy on sequential, multicore, multisession, and cluster.
+    let xs = xs(9);
+    let body = Expr::add(Expr::var("x"), Expr::runif(2));
+    let reference = with_plan(PlanSpec::sequential(), || {
+        future_lapply(
+            &xs,
+            "x",
+            &body,
+            &Env::new(),
+            &LapplyOpts::new().seed(1234).in_order(),
+        )
+        .unwrap()
+    });
+    assert_eq!(reference.len(), xs.len());
+    let policies = [
+        ("per-element", Chunking::PerElement),
+        ("chunk=4", Chunking::ChunkSize(4)),
+        ("per-worker", Chunking::PerWorker),
+        ("scheduling=2", Chunking::Scheduling(2.0)),
+    ];
+    for spec in [
+        PlanSpec::sequential(),
+        PlanSpec::multicore(2),
+        PlanSpec::multiprocess(2),
+        PlanSpec::cluster(&["n1.local", "n2.local"]),
+    ] {
+        for (label, chunking) in policies {
+            let got = with_plan(spec.clone(), || {
+                future_lapply(
+                    &xs,
+                    "x",
+                    &body,
+                    &Env::new(),
+                    &LapplyOpts::new().seed(1234).chunking(chunking),
+                )
+                .unwrap()
+            });
+            assert_eq!(got, reference, "{}/{} diverged", spec.name(), label);
+        }
+    }
+}
+
+#[test]
+fn prop_streaming_equals_in_order_collection() {
+    // Property: for random n, seed, chunking (including the pathological
+    // Scheduling factors and ChunkSize(0)) and worker count, as-completed
+    // collection is bit-identical to the in-order reference.
+    check("streaming-vs-in-order", 20, |g| {
+        let n = g.usize_in(1, 12);
+        let elems = xs(n);
+        let seed = g.u64();
+        let chunking = match g.usize_in(0, 4) {
+            0 => Chunking::PerElement,
+            1 => Chunking::PerWorker,
+            2 => Chunking::Scheduling(g.f64_in(-1.0, 4.0)),
+            3 => Chunking::ChunkSize(g.usize_in(0, 5)),
+            _ => Chunking::Scheduling(f64::NAN),
+        };
+        let workers = g.usize_in(1, 3);
+        let body = Expr::add(Expr::var("x"), Expr::runif(1));
+        let (streamed, ordered) = with_plan(PlanSpec::multicore(workers), || {
+            let env = Env::new();
+            let opts = LapplyOpts::new().seed(seed).chunking(chunking);
+            let streamed = future_lapply(&elems, "x", &body, &env, &opts)
+                .map_err(|e| e.to_string());
+            let ordered = future_lapply(&elems, "x", &body, &env, &opts.clone().in_order())
+                .map_err(|e| e.to_string());
+            (streamed, ordered)
+        });
+        let (streamed, ordered) = (streamed?, ordered?);
+        if streamed != ordered {
+            return Err(format!(
+                "mismatch: n={n} workers={workers} chunking={chunking:?}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn map_reduce_folds_skewed_chunks_as_they_complete() {
+    // Skewed workload: element 0 spins, so its chunk resolves LAST; the
+    // completion-order fold must still produce the exact commutative total.
+    let n = 8usize;
+    let body = Expr::if_else(
+        Expr::prim(PrimOp::Eq, vec![Expr::var("x"), Expr::lit(0i64)]),
+        Expr::seq(vec![
+            Expr::Spin { millis: 80 },
+            Expr::mul(Expr::var("x"), Expr::var("x")),
+        ]),
+        Expr::mul(Expr::var("x"), Expr::var("x")),
+    );
+    let want: i64 = (0..n as i64).map(|i| i * i).sum();
+    for spec in [PlanSpec::sequential(), PlanSpec::multicore(2), PlanSpec::multiprocess(2)] {
+        let name = spec.name();
+        let total = with_plan(spec, || {
+            future_map_reduce(
+                &xs(n),
+                "x",
+                &body,
+                &Env::new(),
+                &LapplyOpts::new().chunking(Chunking::ChunkSize(2)),
+                Value::I64(0),
+                |acc, v| match (acc, v) {
+                    (Value::I64(a), Value::I64(b)) => Ok(Value::I64(a + b)),
+                    other => panic!("unexpected fold inputs: {other:?}"),
+                },
+            )
+            .unwrap()
+        });
+        assert_eq!(total, Value::I64(want), "{name}");
+    }
+}
+
+#[test]
+fn queued_lapply_is_bit_identical_on_parallel_backends() {
+    let elems = xs(8);
+    let body = Expr::add(Expr::var("x"), Expr::runif(1));
+    let reference = with_plan(PlanSpec::sequential(), || {
+        future_lapply(&elems, "x", &body, &Env::new(), &LapplyOpts::new().seed(77)).unwrap()
+    });
+    for spec in [PlanSpec::multicore(2), PlanSpec::multiprocess(2)] {
+        let got = with_plan(spec.clone(), || {
+            future_lapply(
+                &elems,
+                "x",
+                &body,
+                &Env::new(),
+                &LapplyOpts::new().seed(77).queued().chunking(Chunking::ChunkSize(3)),
+            )
+            .unwrap()
+        });
+        assert_eq!(got, reference, "{} queued diverged", spec.name());
+    }
+}
+
+#[test]
+fn tweaked_grown_cluster_actually_runs() {
+    // tweak_workers growth used to silently no-op for Cluster; the grown
+    // plan must really spawn the extra simulated host.
+    let spec = PlanSpec::cluster(&["n1.local"]).tweak_workers(2);
+    assert_eq!(spec.effective_workers(), 2);
+    with_plan(spec, || {
+        let env = Env::new();
+        let out = future_lapply(
+            &xs(6),
+            "x",
+            &Expr::mul(Expr::var("x"), Expr::lit(3i64)),
+            &env,
+            &LapplyOpts::new(),
+        )
+        .unwrap();
+        assert_eq!(out, (0..6i64).map(|i| Value::I64(i * 3)).collect::<Vec<_>>());
+    });
+}
+
+#[test]
+fn resolve_works_on_batch_futures_without_polling_handles() {
+    // The scheduler's daemon push-notifies terminal transitions; resolve()
+    // over batch futures must terminate and leave every value collectable.
+    with_plan(PlanSpec::batch(2), || {
+        let env = Env::new();
+        let fs: Vec<Future> = (0..3)
+            .map(|i| future(Expr::lit(i as i64), &env).unwrap())
+            .collect();
+        resolve(&fs);
+        for (i, f) in fs.iter().enumerate() {
+            assert!(f.resolved());
+            assert_eq!(f.value().unwrap(), Value::I64(i as i64));
+        }
+    });
+}

@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
-# Run the perf-trajectory benches (E1 overhead, E3 chunking) and write
-# machine-readable BENCH_overhead.json / BENCH_chunking.json at the repo
-# root, so every PR can diff perf against the previous one.
+# Run the perf-trajectory benches (E1 overhead, E3 chunking, E11 resolve)
+# and write machine-readable BENCH_overhead.json / BENCH_chunking.json /
+# BENCH_resolve.json at the repo root, so every PR can diff perf against
+# the previous one.
 #
 # Usage:
 #   scripts/bench.sh           # smoke mode (reduced iterations; CI default)
@@ -25,7 +26,8 @@ cargo build --release --manifest-path rust/Cargo.toml
 
 cargo bench --manifest-path rust/Cargo.toml --bench overhead
 cargo bench --manifest-path rust/Cargo.toml --bench chunking
+cargo bench --manifest-path rust/Cargo.toml --bench resolve
 
 echo
 echo "== bench artifacts =="
-ls -l BENCH_overhead.json BENCH_chunking.json
+ls -l BENCH_overhead.json BENCH_chunking.json BENCH_resolve.json
