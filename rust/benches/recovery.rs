@@ -1,0 +1,100 @@
+//! E12 — fault-tolerant elastic execution: `future_lapply` throughput with
+//! 0 / 1 / 2 injected worker kills under supervised retry.
+//!
+//! Each killed worker takes one in-flight chunk down with it; the
+//! supervisor respawns the seat and the retry policy resubmits the chunk.
+//! `kills = 0` is the baseline; the deltas are the price of recovery
+//! (respawn latency + one chunk re-executed).  Values are asserted equal
+//! to the clean run every time — a recovery that corrupts results would
+//! fail the bench, not just skew it.
+//!
+//! Emits `BENCH_recovery.json` (schema in BENCH.md); `scripts/bench.sh`
+//! runs this in smoke mode.
+
+mod common;
+
+use common::{fmt_dur, header, json_row, row, smoke, time_once, write_bench_json, Json};
+use rustures::api::plan::{with_plan, PlanSpec};
+use rustures::prelude::*;
+use std::time::Duration;
+
+fn marker(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("rustures-bench-rec-{tag}-{}", rustures::util::uuid_v4()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+/// Body: elements in `kills` murder their worker once (marker-gated), then
+/// every element does a fixed slab of CPU work and squares itself.
+fn body_with_kills(kill_markers: &[(i64, String)], work_iters: u64) -> Expr {
+    let mut probe = Expr::lit(0i64);
+    for (k, m) in kill_markers {
+        probe = Expr::if_else(
+            Expr::prim(PrimOp::Eq, vec![Expr::var("x"), Expr::lit(*k)]),
+            Expr::chaos_kill_once(m),
+            probe,
+        );
+    }
+    Expr::seq(vec![
+        probe,
+        Expr::Work { iters: work_iters },
+        Expr::mul(Expr::var("x"), Expr::var("x")),
+    ])
+}
+
+fn run_one(spec: PlanSpec, n: usize, kills: usize, work_iters: u64) -> Duration {
+    let kill_elems: Vec<i64> = (0..kills as i64).map(|i| (i + 1) * n as i64 / 4).collect();
+    let kill_markers: Vec<(i64, String)> =
+        kill_elems.iter().map(|k| (*k, marker(&format!("k{k}")))).collect();
+    let wall = with_plan(spec, || {
+        let env = Env::new();
+        let xs: Vec<Value> = (0..n as i64).map(Value::I64).collect();
+        let body = body_with_kills(&kill_markers, work_iters);
+        let opts = LapplyOpts::new()
+            .no_capture()
+            .chunking(Chunking::ChunkSize(4))
+            .retry(RetryPolicy::idempotent(4).with_backoff(Duration::from_millis(1), 2.0));
+        // Warm the backend (worker spawn is one-time setup, not per-map).
+        let _ = future(Expr::lit(0i64), &env).unwrap().value();
+        let want: Vec<Value> = (0..n as i64).map(|i| Value::I64(i * i)).collect();
+        time_once(|| {
+            let out = future_lapply(&xs, "x", &body, &env, &opts).unwrap();
+            assert_eq!(out, want, "recovery must not change values");
+        })
+    });
+    for (_, m) in &kill_markers {
+        let _ = std::fs::remove_file(m);
+    }
+    wall
+}
+
+fn main() {
+    header(
+        "E12: lapply throughput under injected worker kills (supervised retry, 2 workers)",
+        &["backend     ", "N    ", "kills ", "wall      "],
+    );
+
+    let (n, work_iters) = if smoke() { (32, 20_000) } else { (128, 200_000) };
+    let mut json_rows = Vec::new();
+    for spec in [PlanSpec::multicore(2), PlanSpec::multiprocess(2)] {
+        for kills in [0usize, 1, 2] {
+            let wall = run_one(spec.clone(), n, kills, work_iters);
+            row(&[
+                format!("{:<12}", spec.name()),
+                format!("{n:<5}"),
+                format!("{kills:<6}"),
+                format!("{:>10}", fmt_dur(wall)),
+            ]);
+            json_rows.push(json_row(&[
+                ("backend", Json::Str(spec.name().to_string())),
+                ("n", Json::Int(n as i64)),
+                ("kills", Json::Int(kills as i64)),
+                ("work_iters", Json::Int(work_iters as i64)),
+                ("wall_ns", Json::Int(wall.as_nanos() as i64)),
+            ]));
+        }
+    }
+    write_bench_json("recovery", json_rows);
+    println!("\nshape check: wall grows modestly per kill (respawn + one re-run chunk)");
+}

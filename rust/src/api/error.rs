@@ -76,6 +76,15 @@ pub enum FutureError {
     /// `suspend()`/cancellation is "Future work" in the paper).
     Cancelled,
 
+    /// A supervised future was resubmitted after infrastructure loss and
+    /// still failed: `attempts` total attempts were made (including the
+    /// original submission); `last` is the final attempt's failure.
+    /// Produced by [`crate::backend::supervisor::SupervisedHandle`] when a
+    /// [`crate::backend::supervisor::RetryPolicy`] budget is exhausted —
+    /// structured provenance, so callers can tell "failed once" from
+    /// "failed N times on N different workers".
+    Retried { attempts: u32, last: Box<FutureError> },
+
     /// An evaluation error relayed through `value()`.  Kept in this enum so
     /// `value()` has a single error type; pattern-match to distinguish —
     /// everything else is an infrastructure failure.
@@ -98,6 +107,9 @@ impl fmt::Display for FutureError {
             FutureError::InvalidPlan(m) => write!(f, "FutureError: invalid plan: {m}"),
             FutureError::Runtime(m) => write!(f, "FutureError: runtime: {m}"),
             FutureError::Cancelled => write!(f, "FutureError: future was cancelled"),
+            FutureError::Retried { attempts, last } => {
+                write!(f, "FutureError: failed after {attempts} attempts (retry exhausted): {last}")
+            }
             FutureError::Eval(e) => write!(f, "{e}"),
         }
     }
@@ -107,6 +119,7 @@ impl std::error::Error for FutureError {
     fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
         match self {
             FutureError::Eval(e) => Some(e),
+            FutureError::Retried { last, .. } => Some(&**last),
             _ => None,
         }
     }
@@ -136,13 +149,16 @@ impl FutureError {
     /// True for failures where relaunching the future elsewhere could
     /// succeed (the paper's motivation for the distinct FutureError class).
     pub fn is_recoverable(&self) -> bool {
-        matches!(
-            self,
+        match self {
             FutureError::WorkerDied { .. }
-                | FutureError::Channel(_)
-                | FutureError::Launch(_)
-                | FutureError::Cancelled
-        )
+            | FutureError::Channel(_)
+            | FutureError::Launch(_)
+            | FutureError::Cancelled => true,
+            // Exhausted-retry provenance: recoverability follows the final
+            // attempt's failure (another relaunch *could* still work).
+            FutureError::Retried { last, .. } => last.is_recoverable(),
+            _ => false,
+        }
     }
 }
 
@@ -177,6 +193,28 @@ mod tests {
         assert_eq!(e.to_string(), "FutureError: worker terminated unexpectedly");
         let e = FutureError::WorkerDied { detail: "exit 137".into() };
         assert!(e.to_string().ends_with(": exit 137"));
+    }
+
+    #[test]
+    fn retried_carries_provenance_and_inherits_recoverability() {
+        let e = FutureError::Retried {
+            attempts: 3,
+            last: Box::new(FutureError::WorkerDied { detail: "kill -9".into() }),
+        };
+        assert!(!e.is_eval());
+        assert!(e.is_recoverable(), "last attempt was recoverable");
+        let msg = e.to_string();
+        assert!(msg.contains("3 attempts"), "{msg}");
+        assert!(msg.contains("kill -9"), "{msg}");
+        // source() chains to the final failure.
+        let src = std::error::Error::source(&e).expect("source");
+        assert!(src.to_string().contains("kill -9"));
+
+        let dead_end = FutureError::Retried {
+            attempts: 2,
+            last: Box::new(FutureError::InvalidPlan("gone".into())),
+        };
+        assert!(!dead_end.is_recoverable());
     }
 
     #[test]

@@ -136,6 +136,18 @@ pub enum Expr {
     /// Unlike `Spin` (wall-deadline), total CPU demand is constant, so
     /// this is the honest CPU-bound payload for scaling studies.
     Work { iters: u64 },
+    /// Chaos probe: kill the executing *worker* mid-task — a real crash,
+    /// not an eval error.  In a disposable worker process (multisession /
+    /// cluster / batch job) this exits the process; on the thread pool the
+    /// worker thread dies without replying; under `plan(sequential)`
+    /// (nothing disposable to kill) it degrades to an evaluation error.
+    ///
+    /// With `marker: Some(path)` the kill fires only while `path` does not
+    /// exist, and the marker file is created *before* dying — so a retried
+    /// run of the same task survives: deterministic fail-exactly-once
+    /// injection for the supervisor/retry tests.  `marker: None` kills on
+    /// every execution (retry-exhaustion tests).
+    ChaosKill { marker: Option<String> },
 }
 
 impl Expr {
@@ -249,6 +261,19 @@ impl Expr {
         Expr::MapChunk { param: param.to_string(), body, elements, base_index }
     }
 
+    /// Kill the executing worker every time this evaluates (chaos probe;
+    /// see [`Expr::ChaosKill`]).
+    pub fn chaos_kill() -> Expr {
+        Expr::ChaosKill { marker: None }
+    }
+
+    /// Kill the executing worker exactly once: the first evaluation
+    /// creates `marker` and dies; later evaluations (e.g. a supervised
+    /// retry) see the marker and survive, evaluating to `0`.
+    pub fn chaos_kill_once(marker: &str) -> Expr {
+        Expr::ChaosKill { marker: Some(marker.to_string()) }
+    }
+
     /// Whether this expression (statically) may draw random numbers —
     /// used for the `seed = FALSE` misuse warning.
     pub fn uses_rng(&self) -> bool {
@@ -270,7 +295,8 @@ impl Expr {
             | Expr::Rng { .. }
             | Expr::Spin { .. }
             | Expr::Sleep { .. }
-            | Expr::Work { .. } => {}
+            | Expr::Work { .. }
+            | Expr::ChaosKill { .. } => {}
             Expr::Let { value, body, .. } => {
                 value.walk(f);
                 body.walk(f);

@@ -32,10 +32,11 @@ use crate::api::env::Env;
 use crate::api::error::{EvalError, FutureError};
 use crate::api::expr::Expr;
 use crate::api::globals::{identify_globals, GlobalsSpec};
-use crate::api::plan::{backend_for_current_depth, current_depth};
+use crate::api::plan::{backend_for_current_depth, current_depth, current_plan_retry};
 use crate::api::value::Value;
 use crate::backend::dispatch::CompletionWaker;
-use crate::backend::TaskHandle;
+use crate::backend::supervisor::{supervise, RetryPolicy};
+use crate::backend::{Backend, TaskHandle};
 use crate::ipc::{TaskOpts, TaskOutcome, TaskResult, TaskSpec};
 use crate::metrics::{record_event, FutureTrace};
 use crate::util::uuid_v4;
@@ -81,6 +82,14 @@ pub struct FutureOpts {
     /// Off by default.  (Retention is cheap since tensor payloads are
     /// Arc-shared — the clone is O(1) in payload bytes.)
     pub restartable: bool,
+    /// Supervised retry: transparently resubmit this future to a healthy
+    /// worker when the infrastructure fails (worker death, broken channel,
+    /// lost launch), per the policy's budget/backoff.  Requires the
+    /// policy's `idempotent` gate; eval errors and cancellations are never
+    /// retried.  `None` falls back to the plan-wide default
+    /// ([`crate::api::plan::plan_with_retry`]); both absent keeps the
+    /// paper's at-most-once submission.
+    pub retry: Option<RetryPolicy>,
     /// Human-readable label.
     pub label: Option<String>,
 }
@@ -112,6 +121,11 @@ impl FutureOpts {
 
     pub fn restartable(mut self) -> Self {
         self.restartable = true;
+        self
+    }
+
+    pub fn retry(mut self, policy: RetryPolicy) -> Self {
+        self.retry = Some(policy);
         self
     }
 
@@ -153,7 +167,27 @@ pub struct Future {
     /// Retained spec for [`Future::restart`] (opt-in via
     /// [`FutureOpts::restartable`]).
     restart_spec: Mutex<Option<TaskSpec>>,
+    /// Effective retry policy (opts override, else the plan default at
+    /// creation) — applied on every launch path, including lazy launch
+    /// and [`Future::restart`].
+    retry: Option<RetryPolicy>,
     pub trace: Arc<FutureTrace>,
+}
+
+/// Launch `task` on `backend`, supervised when an armed retry policy is in
+/// effect — THE single launch choke point shared by eager creation, lazy
+/// launch, and restart, so no path can silently lose supervision.
+fn launch_on(
+    backend: &Arc<dyn Backend>,
+    task: TaskSpec,
+    retry: Option<&RetryPolicy>,
+    queued: bool,
+) -> Result<Box<dyn TaskHandle>, FutureError> {
+    match retry {
+        Some(p) if p.armed() => supervise(backend, task, p.clone(), queued),
+        _ if queued => backend.launch_queued(task),
+        _ => backend.launch(task),
+    }
 }
 
 /// Create a future with default options (eager, auto globals, no seed).
@@ -196,14 +230,16 @@ pub fn future_with(expr: Expr, env: &Env, opts: FutureOpts) -> Result<Future, Fu
 
     let trace = Arc::new(FutureTrace::new(&id, opts.label.as_deref(), backend.name(), created_ns));
 
+    // Per-future retry wins; otherwise inherit the plan-wide default.
+    let retry = opts.retry.clone().or_else(current_plan_retry);
+
     let restart_spec = if opts.restartable { Some(task.clone()) } else { None };
     let state = if opts.lazy {
         State::Lazy(Box::new(task))
     } else {
         let supports_immediate = backend.supports_immediate();
         record_event(&trace, "launch");
-        let handle =
-            if opts.queued { backend.launch_queued(task)? } else { backend.launch(task)? };
+        let handle = launch_on(&backend, task, retry.as_ref(), opts.queued)?;
         State::Running { handle, supports_immediate }
     };
 
@@ -214,6 +250,7 @@ pub fn future_with(expr: Expr, env: &Env, opts: FutureOpts) -> Result<Future, Fu
         warn_unseeded_rng,
         relayed: Mutex::new(false),
         restart_spec: Mutex::new(restart_spec),
+        retry,
         trace,
     })
 }
@@ -267,7 +304,7 @@ impl Future {
             };
             let supports_immediate = backend.supports_immediate();
             record_event(&self.trace, "launch");
-            match backend.launch(*task) {
+            match launch_on(&backend, *task, self.retry.as_ref(), false) {
                 Ok(handle) => *state = State::Running { handle, supports_immediate },
                 Err(e) => {
                     *state = State::Failed(e.clone());
@@ -428,7 +465,7 @@ impl Future {
         let (backend, _) = backend_for_current_depth()?;
         let supports_immediate = backend.supports_immediate();
         record_event(&self.trace, "restart");
-        let handle = backend.launch(spec)?;
+        let handle = launch_on(&backend, spec, self.retry.as_ref(), false)?;
         *self.state.lock().unwrap() = State::Running { handle, supports_immediate };
         *self.relayed.lock().unwrap() = false;
         Ok(())

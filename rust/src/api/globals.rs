@@ -95,7 +95,8 @@ fn collect(
         | Expr::Rng { .. }
         | Expr::Spin { .. }
         | Expr::Sleep { .. }
-        | Expr::Work { .. } => {}
+        | Expr::Work { .. }
+        | Expr::ChaosKill { .. } => {}
     }
 }
 

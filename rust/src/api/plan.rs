@@ -13,6 +13,7 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex, RwLock};
 
 use crate::api::error::FutureError;
+use crate::backend::supervisor::RetryPolicy;
 use crate::backend::{make_backend, Backend};
 use crate::util::available_cores;
 
@@ -129,6 +130,12 @@ pub type BackendFactory = Arc<dyn Fn(usize) -> Arc<dyn Backend> + Send + Sync>;
 
 struct PlanState {
     topology: Vec<PlanSpec>,
+    /// Plan-wide retry default: every future created under this plan is
+    /// supervised with this policy unless its own
+    /// [`crate::api::future::FutureOpts::retry`] overrides it.  Session
+    /// local — not shipped to nested workers (a worker's own plan decides
+    /// its retry posture).
+    retry: Option<RetryPolicy>,
     /// Lazily-instantiated backend per nesting depth.
     backends: Mutex<HashMap<u32, Arc<dyn Backend>>>,
 }
@@ -159,10 +166,23 @@ pub fn plan(spec: PlanSpec) {
     plan_topology(vec![spec]);
 }
 
+/// `plan(spec)` with a plan-wide [`RetryPolicy`]: every future created
+/// under this plan is supervised (resubmitted to a healthy worker on
+/// infrastructure loss) unless its own `FutureOpts::retry` overrides it.
+pub fn plan_with_retry(spec: PlanSpec, retry: RetryPolicy) {
+    plan_topology_with_retry(vec![spec], Some(retry));
+}
+
 /// Set a nested topology (`plan(list(tweak(multisession, 2), ...))`).
 /// Shuts down the previous plan's backends.
 pub fn plan_topology(topology: Vec<PlanSpec>) {
-    let new_state = Arc::new(PlanState { topology, backends: Mutex::new(HashMap::new()) });
+    plan_topology_with_retry(topology, None);
+}
+
+/// [`plan_topology`] with an optional plan-wide retry default.
+pub fn plan_topology_with_retry(topology: Vec<PlanSpec>, retry: Option<RetryPolicy>) {
+    let new_state =
+        Arc::new(PlanState { topology, retry, backends: Mutex::new(HashMap::new()) });
     let old = {
         let mut guard = PLAN.write().unwrap();
         std::mem::replace(&mut *guard, Some(new_state))
@@ -170,6 +190,11 @@ pub fn plan_topology(topology: Vec<PlanSpec>) {
     if let Some(old) = old {
         shutdown_state(&old);
     }
+}
+
+/// The current plan-wide retry default, if any.
+pub fn current_plan_retry() -> Option<RetryPolicy> {
+    PLAN.read().unwrap().as_ref().and_then(|s| s.retry.clone())
 }
 
 /// The current topology (defaults to `[sequential]`).
@@ -198,6 +223,15 @@ pub fn with_plan<R>(spec: PlanSpec, f: impl FnOnce() -> R) -> R {
 pub fn with_plan_topology<R>(topology: Vec<PlanSpec>, f: impl FnOnce() -> R) -> R {
     let _guard = PLAN_USER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
     plan_topology(topology);
+    let out = f();
+    plan_topology(vec![PlanSpec::Sequential]);
+    out
+}
+
+/// [`with_plan`] with a plan-wide retry default (tests/benches).
+pub fn with_plan_retry<R>(spec: PlanSpec, retry: RetryPolicy, f: impl FnOnce() -> R) -> R {
+    let _guard = PLAN_USER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    plan_topology_with_retry(vec![spec], Some(retry));
     let out = f();
     plan_topology(vec![PlanSpec::Sequential]);
     out
@@ -301,6 +335,16 @@ mod tests {
             other => panic!("tweak changed the variant: {other:?}"),
         }
         assert_eq!(c.effective_workers(), 1);
+    }
+
+    #[test]
+    fn plan_retry_default_is_scoped_to_the_plan() {
+        with_plan_retry(PlanSpec::sequential(), RetryPolicy::idempotent(3), || {
+            assert_eq!(current_plan_retry(), Some(RetryPolicy::idempotent(3)));
+        });
+        with_plan(PlanSpec::sequential(), || {
+            assert_eq!(current_plan_retry(), None, "retry must not leak across plans");
+        });
     }
 
     #[test]

@@ -12,6 +12,7 @@
 use std::net::{TcpListener, TcpStream};
 use std::process::{Child, Command, Stdio};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::api::error::FutureError;
 use crate::backend::procpool::{Connection, ProcPool, Spawner};
@@ -24,26 +25,85 @@ pub struct ClusterBackend {
     hosts: Vec<String>,
 }
 
-fn launch_host_worker(listener: &TcpListener, host: &str) -> Result<Connection, FutureError> {
+/// How long a spawned worker gets to connect back before plan creation
+/// gives up on it.  Overridable via `RUSTURES_CLUSTER_ACCEPT_TIMEOUT_MS`.
+fn accept_timeout_from_env() -> Duration {
+    std::env::var("RUSTURES_CLUSTER_ACCEPT_TIMEOUT_MS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .map(Duration::from_millis)
+        .unwrap_or(Duration::from_secs(10))
+}
+
+fn launch_host_worker(
+    listener: &TcpListener,
+    host: &str,
+    accept_timeout: Duration,
+) -> Result<Connection, FutureError> {
     let addr = listener
         .local_addr()
         .map_err(|e| FutureError::Launch(format!("listener addr: {e}")))?;
     let exe = worker_exe()?;
     // "ssh $host rustures worker --connect <coordinator>" — simulated by a
-    // local process tagged with the host label.
-    let child: Child = Command::new(&exe)
-        .args(["worker", "--connect", &addr.to_string()])
+    // local process tagged with the host label.  Host labels suffixed
+    // "!noconnect" spawn a worker that never phones home (chaos hook for
+    // the accept-timeout tests).
+    let (host_label, no_connect) = match host.strip_suffix("!noconnect") {
+        Some(h) => (h, true),
+        None => (host, false),
+    };
+    let mut cmd = Command::new(&exe);
+    cmd.args(["worker", "--connect", &addr.to_string()])
         .env("TF_CPP_MIN_LOG_LEVEL", "1")
-        .env("RUSTURES_HOST_LABEL", host)
+        .env("RUSTURES_HOST_LABEL", host_label)
         .stdin(Stdio::null())
         .stdout(Stdio::null())
-        .stderr(Stdio::inherit())
+        .stderr(Stdio::inherit());
+    if no_connect {
+        cmd.env("RUSTURES_CHAOS_NO_CONNECT", "1");
+    }
+    let mut child: Child = cmd
         .spawn()
         .map_err(|e| FutureError::Launch(format!("spawn cluster worker for {host}: {e}")))?;
 
-    let (stream, _peer) = listener
-        .accept()
-        .map_err(|e| FutureError::Launch(format!("accept from {host}: {e}")))?;
+    // Accept with a deadline — a worker that spawns but never connects
+    // back must not hang plan creation forever.  The listener is
+    // nonblocking (set once at backend creation); poll it until the child
+    // connects, exits, or the deadline passes (then kill the child).
+    let deadline = Instant::now() + accept_timeout;
+    let stream = loop {
+        match listener.accept() {
+            Ok((s, _peer)) => break s,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::Interrupted =>
+            {
+                if let Ok(Some(status)) = child.try_wait() {
+                    return Err(FutureError::Launch(format!(
+                        "cluster worker for {host} exited ({status}) before connecting back"
+                    )));
+                }
+                if Instant::now() >= deadline {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    return Err(FutureError::Launch(format!(
+                        "cluster worker for {host} did not connect back within {accept_timeout:?}"
+                    )));
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => {
+                let _ = child.kill();
+                let _ = child.wait();
+                return Err(FutureError::Launch(format!("accept from {host}: {e}")));
+            }
+        }
+    };
+    // The accepted socket must be blocking regardless of what it inherited
+    // from the nonblocking listener.
+    stream
+        .set_nonblocking(false)
+        .map_err(|e| FutureError::Launch(format!("socket mode: {e}")))?;
     stream.set_nodelay(true).ok();
     let reader: TcpStream = stream
         .try_clone()
@@ -53,13 +113,23 @@ fn launch_host_worker(listener: &TcpListener, host: &str) -> Result<Connection, 
 
 impl ClusterBackend {
     pub fn new(hosts: &[String]) -> Result<Self, FutureError> {
+        Self::new_with_accept_timeout(hosts, accept_timeout_from_env())
+    }
+
+    /// [`ClusterBackend::new`] with an explicit connect-back deadline per
+    /// spawned worker (tests inject short deadlines here).
+    pub fn new_with_accept_timeout(
+        hosts: &[String],
+        accept_timeout: Duration,
+    ) -> Result<Self, FutureError> {
         if hosts.is_empty() {
             return Err(FutureError::InvalidPlan("cluster: no hosts given".into()));
         }
         let listener = TcpListener::bind("127.0.0.1:0")
             .map_err(|e| FutureError::Launch(format!("bind coordinator listener: {e}")))?;
+        // Nonblocking so launch_host_worker can poll accept with a deadline.
         listener
-            .set_nonblocking(false)
+            .set_nonblocking(true)
             .map_err(|e| FutureError::Launch(format!("listener mode: {e}")))?;
 
         // Respawns round-robin over the host list.
@@ -70,9 +140,12 @@ impl ClusterBackend {
         let spawner_listener = Arc::clone(&listener);
         let spawner: Spawner = Box::new(move || {
             let mut idx = next.lock().unwrap();
-            let host = &spawner_hosts[*idx % spawner_hosts.len()];
+            let host = spawner_hosts[*idx % spawner_hosts.len()].clone();
             *idx += 1;
-            launch_host_worker(&spawner_listener, host)
+            // Release the index lock before the (possibly slow) spawn so
+            // concurrent respawns don't serialize on it.
+            drop(idx);
+            launch_host_worker(&spawner_listener, &host, accept_timeout)
         });
         let pool = ProcPool::new(hosts_owned.len(), spawner)?;
         Ok(ClusterBackend { pool, hosts: hosts_owned })

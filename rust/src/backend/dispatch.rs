@@ -471,7 +471,12 @@ mod tests {
     use std::time::Instant;
 
     fn task(expr: Expr) -> TaskSpec {
-        TaskSpec { id: crate::util::uuid_v4(), expr, globals: Env::new(), opts: TaskOpts::default() }
+        TaskSpec {
+            id: crate::util::uuid_v4(),
+            expr,
+            globals: Env::new(),
+            opts: TaskOpts::default(),
+        }
     }
 
     /// Launch function that resolves instantly via the sequential backend.

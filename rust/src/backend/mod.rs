@@ -24,6 +24,7 @@ pub mod dispatch;
 pub mod multiprocess;
 pub mod procpool;
 pub mod sequential;
+pub mod supervisor;
 pub mod threadpool;
 
 use std::sync::Arc;

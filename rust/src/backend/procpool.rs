@@ -20,6 +20,7 @@ use std::sync::{Arc, Condvar, Mutex, OnceLock, Weak};
 use crate::api::conditions::relay_immediate;
 use crate::api::error::FutureError;
 use crate::backend::dispatch::{default_backlog, CompletionWaker, Dispatcher};
+use crate::backend::supervisor::{supervisor_config, RespawnBudget, SupervisorConfig};
 use crate::backend::TaskHandle;
 use crate::ipc::frame::{read_message, write_message};
 use crate::ipc::{Message, TaskResult, TaskSpec};
@@ -104,6 +105,10 @@ struct Shared {
     slot_cv: Condvar,
     /// A result was parked.
     result_cv: Condvar,
+    /// A worker died (or the pool is shutting down) — wakes the health
+    /// monitor.  Deliberately separate from `slot_cv`: the monitor must
+    /// never consume a `notify_one` meant for a parked launcher.
+    death_cv: Condvar,
 }
 
 /// Transport halves for one fresh worker connection.
@@ -121,6 +126,11 @@ pub struct ProcPool {
     shared: Arc<Shared>,
     spawner: Spawner,
     workers: usize,
+    /// Lifetime respawn allowance shared by the health monitor and the
+    /// launch path's on-demand respawn — ONE cap on replacement workers,
+    /// however they come up (`None` = supervision disabled: the historical
+    /// unbudgeted on-demand respawn).
+    budget: Option<Arc<RespawnBudget>>,
     /// Lazily-started queued-dispatch front (see [`crate::backend::dispatch`]).
     dispatcher: OnceLock<Dispatcher>,
 }
@@ -135,8 +145,19 @@ fn notify_task_waiter(inner: &mut Inner, task_id: &str) {
 }
 
 impl ProcPool {
-    /// Spawn all `workers` eagerly (PSOCK-style: cluster set up once).
+    /// Spawn all `workers` eagerly (PSOCK-style: cluster set up once),
+    /// supervised per the process-wide [`supervisor_config`].
     pub fn new(workers: usize, spawner: Spawner) -> Result<Arc<Self>, FutureError> {
+        Self::new_configured(workers, spawner, &supervisor_config())
+    }
+
+    /// [`ProcPool::new`] with an explicit supervision config (tests inject
+    /// disabled respawn / tiny budgets here without touching the global).
+    pub fn new_configured(
+        workers: usize,
+        spawner: Spawner,
+        cfg: &SupervisorConfig,
+    ) -> Result<Arc<Self>, FutureError> {
         let workers = workers.max(1);
         let shared = Arc::new(Shared {
             inner: Mutex::new(Inner {
@@ -152,13 +173,32 @@ impl ProcPool {
             }),
             slot_cv: Condvar::new(),
             result_cv: Condvar::new(),
+            death_cv: Condvar::new(),
         });
-        let pool = Arc::new(ProcPool { shared, spawner, workers, dispatcher: OnceLock::new() });
+        let budget = if cfg.respawn { Some(RespawnBudget::new(cfg.max_respawns)) } else { None };
+        let pool = Arc::new(ProcPool {
+            shared,
+            spawner,
+            workers,
+            budget: budget.clone(),
+            dispatcher: OnceLock::new(),
+        });
         for _ in 0..workers {
             let seat = pool.spawn_seat()?;
             let mut inner = pool.shared.inner.lock().unwrap();
             inner.alive += 1;
             inner.idle.push(seat);
+        }
+        if let Some(budget) = budget {
+            let weak = Arc::downgrade(&pool);
+            let poll = cfg.poll;
+            // Detached on purpose: the monitor holds only a Weak and exits
+            // on shutdown (death_cv wake) or when the pool is dropped.
+            // A failed monitor spawn is tolerable here: the launch path's
+            // on-demand respawn still revives capacity (same budget).
+            let _ = std::thread::Builder::new()
+                .name("rustures-procpool-monitor".into())
+                .spawn(move || monitor_loop(weak, budget, poll));
         }
         Ok(pool)
     }
@@ -200,24 +240,42 @@ impl ProcPool {
                     break seat;
                 }
                 if inner.alive < self.workers {
-                    // A worker died earlier: restore capacity.
-                    inner.alive += 1;
-                    drop(inner);
-                    match self.spawn_seat() {
-                        Ok(seat) => {
-                            let mut inner = self.shared.inner.lock().unwrap();
-                            inner.pending.insert(seat.id, task_id.clone());
-                            break seat;
+                    // A worker died earlier: restore capacity — charged to
+                    // the SAME respawn budget the monitor uses, so a
+                    // crash-looping workload cannot fork-bomb the host
+                    // through the launch path either.  (`budget: None` =
+                    // supervision disabled: historical unbudgeted respawn.)
+                    let allowed = self.budget.as_ref().map(|b| b.try_take()).unwrap_or(true);
+                    if !allowed {
+                        if inner.alive == 0 {
+                            // Nothing alive and nothing may be revived:
+                            // error out instead of parking forever.
+                            return Err(FutureError::Launch(
+                                "all pool workers died and the respawn budget is exhausted"
+                                    .into(),
+                            ));
                         }
-                        Err(e) => {
-                            self.shared.inner.lock().unwrap().alive -= 1;
-                            // The reservation is released: wake launchers
-                            // parked in this same wait loop so they observe
-                            // alive < workers and retry the spawn themselves
-                            // (without this they could sleep forever after a
-                            // failed respawn).
-                            self.shared.slot_cv.notify_all();
-                            return Err(e);
+                        // Live workers remain: wait for one to free.
+                    } else {
+                        inner.alive += 1;
+                        drop(inner);
+                        match self.spawn_seat() {
+                            Ok(seat) => {
+                                crate::metrics::record_respawn();
+                                let mut inner = self.shared.inner.lock().unwrap();
+                                inner.pending.insert(seat.id, task_id.clone());
+                                break seat;
+                            }
+                            Err(e) => {
+                                self.shared.inner.lock().unwrap().alive -= 1;
+                                // The reservation is released: wake launchers
+                                // parked in this same wait loop so they observe
+                                // alive < workers and retry the spawn themselves
+                                // (without this they could sleep forever after a
+                                // failed respawn).
+                                self.shared.slot_cv.notify_all();
+                                return Err(e);
+                            }
                         }
                     }
                 }
@@ -322,6 +380,8 @@ impl ProcPool {
         };
         self.shared.slot_cv.notify_all();
         self.shared.result_cv.notify_all();
+        // The health monitor exits on the shutting_down flag.
+        self.shared.death_cv.notify_all();
         // Unblock the dispatcher thread (its in-flight blocking launch now
         // errors), then drain + join it.
         if let Some(d) = self.dispatcher.get() {
@@ -399,8 +459,83 @@ fn reader_loop(worker_id: u64, mut reader: Box<dyn Read + Send>, shared: Arc<Sha
     }
 }
 
+/// Health monitor: proactively respawn dead workers (the elastic half of
+/// the supervision subsystem).  Launch-path on-demand respawn still exists;
+/// the monitor restores capacity *before* the next launch needs it, so
+/// queued dispatch and parked launchers — including the PR 2 dispatcher
+/// thread blocked inside `launch` — wake into a healthy seat.  Budgeted:
+/// a crash-looping workload stops being revived once `budget` is spent.
+fn monitor_loop(pool: Weak<ProcPool>, budget: Arc<RespawnBudget>, poll: std::time::Duration) {
+    loop {
+        let Some(pool) = pool.upgrade() else { return };
+        // Reserve capacity under the lock (same protocol as launch()'s
+        // on-demand respawn), spawn outside it.
+        let deficit = {
+            let inner = pool.shared.inner.lock().unwrap();
+            if inner.shutting_down {
+                return;
+            }
+            pool.workers.saturating_sub(inner.alive)
+        };
+        if deficit > 0 && budget.try_take() {
+            {
+                let mut inner = pool.shared.inner.lock().unwrap();
+                if inner.shutting_down {
+                    return;
+                }
+                if inner.alive >= pool.workers {
+                    // A launcher respawned on demand first.
+                    budget.refund();
+                    continue;
+                }
+                inner.alive += 1;
+            }
+            match pool.spawn_seat() {
+                Ok(seat) => {
+                    let mut inner = pool.shared.inner.lock().unwrap();
+                    if inner.shutting_down {
+                        inner.alive -= 1;
+                        drop(inner);
+                        seat.graceful_shutdown();
+                        return;
+                    }
+                    inner.idle.push(seat);
+                    drop(inner);
+                    crate::metrics::record_respawn();
+                    pool.shared.slot_cv.notify_all();
+                    continue; // more deficit?  re-check immediately
+                }
+                Err(_) => {
+                    pool.shared.inner.lock().unwrap().alive -= 1;
+                    // Wake parked launchers so they can try (and surface
+                    // the spawn error to a caller instead of hanging).
+                    pool.shared.slot_cv.notify_all();
+                    // Spawner is failing: the budget charge stands (no
+                    // refund — a broken spawner must not spin forever) and
+                    // we back off one poll interval.
+                    drop(pool);
+                    std::thread::sleep(poll);
+                    continue;
+                }
+            }
+        }
+        // Nothing to do: sleep until a death (death_cv) or the poll tick.
+        let shared = Arc::clone(&pool.shared);
+        drop(pool);
+        let guard = shared.inner.lock().unwrap();
+        if guard.shutting_down {
+            return;
+        }
+        let _ = shared.death_cv.wait_timeout(guard, poll);
+    }
+}
+
 fn close_worker(worker_id: u64, shared: &Shared, detail: String) {
     let mut inner = shared.inner.lock().unwrap();
+    if !inner.shutting_down {
+        // An orderly shutdown EOF is not a death worth counting.
+        crate::metrics::record_worker_death();
+    }
     if let Some((mut seat, task_id)) = inner.busy.remove(&worker_id) {
         seat.kill();
         inner.alive = inner.alive.saturating_sub(1);
@@ -427,6 +562,8 @@ fn close_worker(worker_id: u64, shared: &Shared, detail: String) {
     drop(inner);
     shared.slot_cv.notify_all();
     shared.result_cv.notify_all();
+    // Wake the health monitor: capacity just dropped.
+    shared.death_cv.notify_all();
 }
 
 /// Handle to a task launched on the pool.
@@ -536,7 +673,12 @@ mod tests {
     use std::time::Duration;
 
     fn task(expr: Expr) -> TaskSpec {
-        TaskSpec { id: crate::util::uuid_v4(), expr, globals: Env::new(), opts: TaskOpts::default() }
+        TaskSpec {
+            id: crate::util::uuid_v4(),
+            expr,
+            globals: Env::new(),
+            opts: TaskOpts::default(),
+        }
     }
 
     /// A reader that stays silent for a beat, then signals clean EOF — a
@@ -572,7 +714,10 @@ mod tests {
                 Err(FutureError::Launch("no spare workers".into()))
             }
         });
-        let pool = ProcPool::new(1, spawner).unwrap();
+        // Respawn monitor off: this regression test is about the *launch
+        // path's* wakeup discipline, so the monitor must not race it.
+        let cfg = SupervisorConfig { respawn: false, ..Default::default() };
+        let pool = ProcPool::new_configured(1, spawner, &cfg).unwrap();
         // Let the delayed EOF retire the idle seat: alive drops to 0.
         std::thread::sleep(Duration::from_millis(120));
 
@@ -592,6 +737,60 @@ mod tests {
                 .expect("a launcher hung after a failed respawn");
             assert!(outcome.is_err(), "launch cannot succeed with a dead spawner");
         }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn exhausted_budget_dead_pool_launch_errors_not_hangs() {
+        // Supervision on but zero budget: once the only worker dies,
+        // launch must surface a structured error — the historical
+        // unbudgeted on-demand respawn is reserved for supervision OFF.
+        let spawner: Spawner = Box::new(|| {
+            Ok(Connection {
+                reader: Box::new(DelayedEof(Duration::from_millis(5))),
+                writer: Box::new(std::io::sink()),
+                child: None,
+            })
+        });
+        let cfg = SupervisorConfig {
+            respawn: true,
+            max_respawns: 0,
+            poll: Duration::from_millis(5),
+        };
+        let pool = ProcPool::new_configured(1, spawner, &cfg).unwrap();
+        std::thread::sleep(Duration::from_millis(60)); // the worker dies
+        match pool.launch(task(Expr::lit(1i64))) {
+            Err(FutureError::Launch(msg)) => assert!(msg.contains("respawn budget"), "{msg}"),
+            Err(other) => panic!("expected the budget error, got {other}"),
+            Ok(_) => panic!("launch on a dead, unbudgeted pool must fail"),
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn monitor_respawns_dead_workers_up_to_budget() {
+        // Every spawned worker "dies" ~10ms after connecting; the health
+        // monitor must revive exactly `max_respawns` replacements and then
+        // stop (the crash-loop backstop).
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&calls);
+        let spawner: Spawner = Box::new(move || {
+            c.fetch_add(1, Ordering::SeqCst);
+            Ok(Connection {
+                reader: Box::new(DelayedEof(Duration::from_millis(10))),
+                writer: Box::new(std::io::sink()),
+                child: None,
+            })
+        });
+        let cfg = SupervisorConfig {
+            respawn: true,
+            max_respawns: 3,
+            poll: Duration::from_millis(5),
+        };
+        let pool = ProcPool::new_configured(1, spawner, &cfg).unwrap();
+        std::thread::sleep(Duration::from_millis(500));
+        let n = calls.load(Ordering::SeqCst);
+        assert_eq!(n, 4, "1 initial spawn + 3 budgeted respawns, got {n}");
         pool.shutdown();
     }
 }

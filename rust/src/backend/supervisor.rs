@@ -1,0 +1,593 @@
+//! The supervision subsystem — worker respawn and transparent task retry.
+//!
+//! PR 1 made worker death *visible* (a dead worker latches
+//! [`FutureError::WorkerDied`] and `is_resolved()`/`wait()` agree forever
+//! after); this module makes the framework *survive* it, in two
+//! cooperating layers:
+//!
+//! * **Respawn** — every multi-worker backend runs a health monitor that
+//!   detects dead workers (ProcPool reader EOF, thread-pool worker death,
+//!   cluster socket drop) and respawns replacements up to a configurable
+//!   budget ([`SupervisorConfig::max_respawns`]).  A fresh seat re-enters
+//!   the pool's idle set and wakes `slot_cv`, so blocked launchers — and
+//!   the PR 2 dispatcher thread parked inside the pool's blocking
+//!   `launch` — acquire it with no extra re-registration step.
+//! * **Retry** — [`RetryPolicy`] (per-future via
+//!   [`crate::api::future::FutureOpts::retry`], or plan-wide via
+//!   [`crate::api::plan::plan_with_retry`]) resubmits a task whose
+//!   *infrastructure* failed (worker died, channel broke, launch lost) to
+//!   a healthy seat, transparently, behind [`SupervisedHandle`].
+//!
+//! ## Determinism
+//!
+//! A resubmitted task re-runs the *same* [`TaskSpec`]: same RNG stream
+//! index, and for map chunks the same `base_index` — so element `i` of a
+//! retried chunk draws from substream `base_index + i` exactly like the
+//! first attempt did.  A seeded `future_lapply` that loses a worker
+//! mid-map therefore returns **bit-identical** values to a no-failure run
+//! (the conformance suite's `kill-respawn` check).  The cost is that
+//! elements evaluated before the crash run twice — hence the
+//! **`idempotent` opt-in gate**: retry is armed only when the caller
+//! asserts re-running side effects is safe ([`RetryPolicy::idempotent`]).
+//! Without the gate the framework keeps the paper's at-most-once
+//! submission and surfaces the structured `WorkerDied` error.
+//!
+//! Evaluation errors (the user's own `stop()`) are **never** retried —
+//! they are deterministic and would fail again; the paper's taxonomy
+//! split (eval vs infrastructure) is exactly what makes this safe.
+//! Cancellation is user intent and is likewise never retried.
+//!
+//! ## Chaos probes
+//!
+//! [`crate::api::expr::Expr::ChaosKill`] kills the executing worker
+//! mid-task (process exit in worker processes, worker-thread death on the
+//! thread pool, degrade-to-eval-error under `plan(sequential)`); the
+//! marker-file form fires exactly once, so kill-then-recover paths are
+//! testable deterministically.  See the `chaos` CI job.
+
+use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+use std::time::Duration;
+
+use crate::api::error::FutureError;
+use crate::backend::dispatch::CompletionWaker;
+use crate::backend::{Backend, TaskHandle};
+use crate::ipc::{TaskResult, TaskSpec};
+use crate::metrics;
+
+// ------------------------------------------------------------ chaos kill ----
+
+/// Sentinel evaluation-error message produced by `Expr::ChaosKill` when the
+/// evaluation happens in-process.  The thread pool's worker loop recognizes
+/// it and dies *without replying* — indistinguishable from a crashed
+/// worker thread; everywhere else it surfaces as a plain eval error.
+pub const WORKER_KILL_ERROR: &str = "__rustures_chaos_worker_kill__";
+
+/// True in disposable worker *processes* (`rustures worker ...`): there,
+/// `Expr::ChaosKill` exits the process (like a real crash) instead of
+/// returning the sentinel error.
+static KILL_EXITS_PROCESS: AtomicBool = AtomicBool::new(false);
+
+/// Mark this process as a disposable worker (set by the `worker` CLI
+/// entrypoints before serving tasks).
+pub fn set_kill_exits_process(on: bool) {
+    KILL_EXITS_PROCESS.store(on, Ordering::SeqCst);
+}
+
+pub fn kill_exits_process() -> bool {
+    KILL_EXITS_PROCESS.load(Ordering::SeqCst)
+}
+
+// ---------------------------------------------------------- retry policy ----
+
+/// When and how a supervised future is resubmitted after an
+/// *infrastructure* failure.  See the module docs for the determinism and
+/// idempotence contract.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RetryPolicy {
+    /// Total attempts including the first; `1` means no resubmission.
+    pub max_attempts: u32,
+    /// Delay before the first resubmission.
+    pub backoff: Duration,
+    /// Multiplier applied to the delay for each further resubmission.
+    pub factor: f64,
+    /// The opt-in gate: resubmission re-runs the task's side effects, so
+    /// the caller must assert the task is idempotent.  `false` keeps the
+    /// paper's at-most-once submission (no retries ever fire).
+    pub idempotent: bool,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 1,
+            backoff: Duration::from_millis(5),
+            factor: 2.0,
+            idempotent: false,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The usual way to build a policy: assert idempotence and allow up to
+    /// `max_attempts` total attempts.
+    pub fn idempotent(max_attempts: u32) -> Self {
+        RetryPolicy {
+            max_attempts: max_attempts.max(1),
+            idempotent: true,
+            ..RetryPolicy::default()
+        }
+    }
+
+    pub fn with_backoff(mut self, backoff: Duration, factor: f64) -> Self {
+        self.backoff = backoff;
+        self.factor = if factor.is_finite() && factor >= 1.0 { factor } else { 1.0 };
+        self
+    }
+
+    /// Will this policy ever resubmit?
+    pub fn armed(&self) -> bool {
+        self.idempotent && self.max_attempts > 1
+    }
+
+    /// Failures a resubmission could plausibly outrun: infrastructure loss
+    /// only.  Eval errors are deterministic; cancellation is user intent;
+    /// invalid plans / missing globals cannot improve on a fresh seat.
+    pub fn retryable(e: &FutureError) -> bool {
+        matches!(
+            e,
+            FutureError::WorkerDied { .. } | FutureError::Channel(_) | FutureError::Launch(_)
+        )
+    }
+
+    /// Backoff before resubmission number `retry_no` (1-based), capped at
+    /// 2 s so an exhausted budget is reached in bounded time.
+    pub fn backoff_before(&self, retry_no: u32) -> Duration {
+        let mult = self.factor.powi(retry_no.saturating_sub(1).min(16) as i32);
+        let ns = (self.backoff.as_nanos() as f64 * mult).min(2e9);
+        Duration::from_nanos(ns as u64)
+    }
+}
+
+// ----------------------------------------------------- supervisor config ----
+
+/// Process-wide respawn configuration, read by pools at construction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SupervisorConfig {
+    /// Run a health monitor that proactively respawns dead workers.
+    pub respawn: bool,
+    /// Lifetime respawn budget per pool — a crash-looping workload cannot
+    /// fork-bomb the host.
+    pub max_respawns: u32,
+    /// Monitor poll fallback (deaths also wake it via condvar).
+    pub poll: Duration,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> Self {
+        SupervisorConfig { respawn: true, max_respawns: 1024, poll: Duration::from_millis(25) }
+    }
+}
+
+static CONFIG: Mutex<Option<SupervisorConfig>> = Mutex::new(None);
+
+/// The config new pools will be built with.
+pub fn supervisor_config() -> SupervisorConfig {
+    CONFIG.lock().unwrap().clone().unwrap_or_default()
+}
+
+/// Override the process-wide default (affects pools built afterwards).
+pub fn set_supervisor_config(cfg: SupervisorConfig) {
+    *CONFIG.lock().unwrap() = Some(cfg);
+}
+
+/// Back to the built-in default.
+pub fn reset_supervisor_config() {
+    *CONFIG.lock().unwrap() = None;
+}
+
+/// A pool's lifetime respawn allowance (shared by its monitor and any
+/// launch-path respawn guard).
+pub struct RespawnBudget {
+    remaining: AtomicI64,
+}
+
+impl RespawnBudget {
+    pub fn new(max: u32) -> Arc<Self> {
+        Arc::new(RespawnBudget { remaining: AtomicI64::new(max as i64) })
+    }
+
+    /// Charge one respawn; `false` when the budget is spent.
+    pub fn try_take(&self) -> bool {
+        if self.remaining.fetch_sub(1, Ordering::SeqCst) > 0 {
+            true
+        } else {
+            // Went negative: undo so `remaining()` stays meaningful.
+            self.remaining.fetch_add(1, Ordering::SeqCst);
+            false
+        }
+    }
+
+    /// Return a charge (the respawn itself failed before using a slot).
+    pub fn refund(&self) {
+        self.remaining.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Zero the budget: no further respawns will ever be granted.  Used
+    /// when the monitor that would perform them could not be started, so
+    /// dead-pool guards stop promising a rescue that cannot come.
+    pub fn drain(&self) {
+        self.remaining.store(0, Ordering::SeqCst);
+    }
+
+    pub fn remaining(&self) -> u32 {
+        self.remaining.load(Ordering::SeqCst).max(0) as u32
+    }
+}
+
+// ------------------------------------------------------ supervised handle ----
+
+/// Launch `task` under `policy`: the returned handle transparently
+/// resubmits the retained spec to the backend on retryable infrastructure
+/// failures, up to the policy's budget.  The spec is retained by clone —
+/// O(1) in payload bytes since tensors/bodies are `Arc`-shared.
+pub fn supervise(
+    backend: &Arc<dyn Backend>,
+    task: TaskSpec,
+    policy: RetryPolicy,
+    queued: bool,
+) -> Result<Box<dyn TaskHandle>, FutureError> {
+    let spec = task.clone();
+    let inner = if queued { backend.launch_queued(task)? } else { backend.launch(task)? };
+    Ok(Box::new(SupervisedHandle {
+        backend: Arc::downgrade(backend),
+        spec,
+        policy,
+        inner,
+        attempts: 1,
+        buffered: None,
+        pending_retry: None,
+        waiter: None,
+        cancelled: false,
+    }))
+}
+
+/// A [`TaskHandle`] that owns the retry loop.  Delegates to the live
+/// attempt's handle; on a retryable failure it resubmits and re-forwards
+/// any `resolve()` subscription to the fresh handle.
+pub struct SupervisedHandle {
+    /// Weak: a handle must not keep a torn-down backend alive.
+    backend: Weak<dyn Backend>,
+    spec: TaskSpec,
+    policy: RetryPolicy,
+    inner: Box<dyn TaskHandle>,
+    /// Attempts made so far (1 = the original submission).
+    attempts: u32,
+    /// Terminal outcome captured by `is_resolved()` for `wait()` to take.
+    buffered: Option<Result<TaskResult, FutureError>>,
+    /// A retryable failure waiting out its backoff window: the next
+    /// resubmission fires no earlier than the instant.  `wait()` sleeps
+    /// the window out; `is_resolved()` reports "not resolved yet" until it
+    /// passes — so the policy's backoff holds on BOTH paths without the
+    /// non-blocking probe ever sleeping.
+    pending_retry: Option<(FutureError, std::time::Instant)>,
+    /// Last subscription, re-forwarded into each fresh attempt.
+    waiter: Option<(Arc<CompletionWaker>, u64)>,
+    cancelled: bool,
+}
+
+impl SupervisedHandle {
+    /// Total attempts made (diagnostics/tests).
+    pub fn attempts(&self) -> u32 {
+        self.attempts
+    }
+
+    /// Wrap the final failure with retry provenance when resubmissions
+    /// actually happened.
+    fn finalize(&self, last: FutureError) -> FutureError {
+        if self.attempts > 1 {
+            FutureError::Retried { attempts: self.attempts, last: Box::new(last) }
+        } else {
+            last
+        }
+    }
+
+    /// Classify an attempt failure: schedule a backoff-gated resubmission
+    /// (`pending_retry`) or latch the final (possibly wrapped) error.
+    fn fail(&mut self, err: FutureError) {
+        if self.cancelled
+            || !self.policy.armed()
+            || !RetryPolicy::retryable(&err)
+            || self.attempts >= self.policy.max_attempts
+        {
+            self.buffered = Some(Err(self.finalize(err)));
+        } else {
+            // attempts == resubmissions made + 1, so this is the (1-based)
+            // number of the resubmission about to happen.
+            let due = std::time::Instant::now() + self.policy.backoff_before(self.attempts);
+            self.pending_retry = Some((err, due));
+        }
+    }
+
+    /// Perform the resubmission whose backoff window has passed.  A fresh
+    /// attempt lands in `self.inner`; failures re-enter [`Self::fail`].
+    fn relaunch(&mut self, err: FutureError) {
+        if self.cancelled {
+            self.buffered = Some(Err(self.finalize(err)));
+            return;
+        }
+        let backend = match self.backend.upgrade() {
+            Some(b) => b,
+            None => {
+                self.buffered = Some(Err(self.finalize(err)));
+                return;
+            }
+        };
+        self.attempts += 1;
+        metrics::record_retry();
+        // Resubmissions always go through queued dispatch: the backlog
+        // hands back a handle immediately, so a retry fired from the
+        // non-blocking `is_resolved()` probe never parks on seat
+        // acquisition (launch failures surface at wait()).
+        match backend.launch_queued(self.spec.clone()) {
+            Ok(mut handle) => {
+                if let Some((w, t)) = &self.waiter {
+                    // Re-forward the resolve() subscription; a handle
+                    // without push support gets a spurious wake, which
+                    // FutureSet downgrades to its poll fallback.
+                    if !handle.subscribe(w, *t) {
+                        w.notify(*t);
+                    }
+                }
+                self.inner = handle;
+            }
+            // The relaunch itself failed: charge it as this attempt's
+            // failure and decide again against the remaining budget.
+            Err(e2) => self.fail(e2),
+        }
+    }
+}
+
+impl TaskHandle for SupervisedHandle {
+    fn is_resolved(&mut self) -> bool {
+        loop {
+            if self.buffered.is_some() {
+                return true;
+            }
+            if let Some((_, due)) = &self.pending_retry {
+                // A resubmission is waiting out its backoff window: not
+                // resolved, and the probe must not sleep.
+                if std::time::Instant::now() < *due {
+                    return false;
+                }
+                let (err, _) = self.pending_retry.take().expect("checked above");
+                self.relaunch(err);
+                continue;
+            }
+            if !self.inner.is_resolved() {
+                return false;
+            }
+            // Resolved: peek the outcome so a failure can trigger a retry
+            // *now* instead of reporting a resolution wait() would undo.
+            match self.inner.wait() {
+                Ok(r) => {
+                    self.buffered = Some(Ok(r));
+                    return true;
+                }
+                Err(e) => {
+                    self.fail(e);
+                    continue;
+                }
+            }
+        }
+    }
+
+    fn wait(&mut self) -> Result<TaskResult, FutureError> {
+        loop {
+            if let Some(out) = self.buffered.take() {
+                return out;
+            }
+            if let Some((err, due)) = self.pending_retry.take() {
+                let now = std::time::Instant::now();
+                if due > now {
+                    std::thread::sleep(due - now);
+                }
+                self.relaunch(err);
+                continue;
+            }
+            match self.inner.wait() {
+                Ok(r) => return Ok(r),
+                Err(e) => {
+                    self.fail(e);
+                    continue;
+                }
+            }
+        }
+    }
+
+    fn cancel(&mut self) -> bool {
+        // Cancellation is user intent: disarm the retry loop so the
+        // resulting worker loss is not "recovered" behind the user's back.
+        self.cancelled = true;
+        self.inner.cancel()
+    }
+
+    fn subscribe(&mut self, waker: &Arc<CompletionWaker>, token: u64) -> bool {
+        if self.buffered.is_some() {
+            waker.notify(token);
+            return true;
+        }
+        self.waiter = Some((Arc::clone(waker), token));
+        if !self.inner.subscribe(waker, token) {
+            waker.notify(token);
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::env::Env;
+    use crate::api::expr::Expr;
+    use crate::ipc::{TaskOpts, TaskOutcome};
+    use std::sync::atomic::AtomicUsize;
+
+    fn task(expr: Expr) -> TaskSpec {
+        TaskSpec {
+            id: crate::util::uuid_v4(),
+            expr,
+            globals: Env::new(),
+            opts: TaskOpts::default(),
+        }
+    }
+
+    /// A backend whose first `fail_times` launches return handles that die.
+    struct FlakyBackend {
+        fail_times: usize,
+        launches: AtomicUsize,
+    }
+
+    struct DeadHandle;
+
+    impl TaskHandle for DeadHandle {
+        fn is_resolved(&mut self) -> bool {
+            true
+        }
+        fn wait(&mut self) -> Result<TaskResult, FutureError> {
+            Err(FutureError::WorkerDied { detail: "injected".into() })
+        }
+    }
+
+    impl Backend for FlakyBackend {
+        fn name(&self) -> &'static str {
+            "flaky"
+        }
+        fn workers(&self) -> usize {
+            1
+        }
+        fn launch(&self, t: TaskSpec) -> Result<Box<dyn TaskHandle>, FutureError> {
+            let n = self.launches.fetch_add(1, Ordering::SeqCst);
+            if n < self.fail_times {
+                Ok(Box::new(DeadHandle))
+            } else {
+                crate::backend::sequential::SequentialBackend::new().launch(t)
+            }
+        }
+    }
+
+    #[test]
+    fn retry_recovers_from_worker_death() {
+        let b: Arc<dyn Backend> =
+            Arc::new(FlakyBackend { fail_times: 2, launches: AtomicUsize::new(0) });
+        let policy = RetryPolicy::idempotent(3).with_backoff(Duration::from_millis(1), 1.0);
+        let mut h = supervise(&b, task(Expr::lit(42i64)), policy, false).unwrap();
+        let r = h.wait().unwrap();
+        assert_eq!(r.outcome, TaskOutcome::Ok(crate::api::value::Value::I64(42)));
+    }
+
+    #[test]
+    fn retry_exhaustion_wraps_with_provenance() {
+        let b: Arc<dyn Backend> =
+            Arc::new(FlakyBackend { fail_times: usize::MAX, launches: AtomicUsize::new(0) });
+        let policy = RetryPolicy::idempotent(3).with_backoff(Duration::from_millis(1), 1.0);
+        let mut h = supervise(&b, task(Expr::lit(1i64)), policy, false).unwrap();
+        match h.wait() {
+            Err(FutureError::Retried { attempts, last }) => {
+                assert_eq!(attempts, 3);
+                assert!(matches!(*last, FutureError::WorkerDied { .. }));
+            }
+            other => panic!("expected Retried, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unarmed_policy_never_resubmits() {
+        let b: Arc<dyn Backend> =
+            Arc::new(FlakyBackend { fail_times: usize::MAX, launches: AtomicUsize::new(0) });
+        // Attempts allowed but idempotence NOT asserted: the gate holds.
+        let policy = RetryPolicy { max_attempts: 5, idempotent: false, ..Default::default() };
+        let mut h = supervise(&b, task(Expr::lit(1i64)), policy, false).unwrap();
+        match h.wait() {
+            Err(FutureError::WorkerDied { .. }) => {}
+            other => panic!("expected bare WorkerDied, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn is_resolved_retries_without_blocking_collect() {
+        let b: Arc<dyn Backend> =
+            Arc::new(FlakyBackend { fail_times: 1, launches: AtomicUsize::new(0) });
+        let policy = RetryPolicy::idempotent(2).with_backoff(Duration::from_millis(1), 1.0);
+        let mut h = supervise(&b, task(Expr::lit(7i64)), policy, false).unwrap();
+        // The probe discovers the dead attempt, defers through the backoff
+        // window (reporting unresolved — never sleeping), then relaunches
+        // onto the sequential fallback; poll like a FutureSet would.
+        let t0 = std::time::Instant::now();
+        while !h.is_resolved() {
+            assert!(t0.elapsed() < Duration::from_secs(5), "retry never resolved");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let r = h.wait().unwrap();
+        assert_eq!(r.outcome, TaskOutcome::Ok(crate::api::value::Value::I64(7)));
+    }
+
+    #[test]
+    fn backoff_window_gates_the_probe_path() {
+        let b: Arc<dyn Backend> =
+            Arc::new(FlakyBackend { fail_times: 1, launches: AtomicUsize::new(0) });
+        let policy = RetryPolicy::idempotent(2).with_backoff(Duration::from_millis(60), 1.0);
+        let mut h = supervise(&b, task(Expr::lit(7i64)), policy, false).unwrap();
+        // Within the 60ms window the probe must report "not resolved"
+        // without relaunching (and must return quickly — no sleeping).
+        let t0 = std::time::Instant::now();
+        assert!(!h.is_resolved(), "probe inside the backoff window");
+        assert!(t0.elapsed() < Duration::from_millis(40), "probe must not sleep");
+        // wait() honors the same window, then recovers.
+        let r = h.wait().unwrap();
+        assert_eq!(r.outcome, TaskOutcome::Ok(crate::api::value::Value::I64(7)));
+    }
+
+    #[test]
+    fn eval_errors_are_not_retried() {
+        let seq: Arc<dyn Backend> = Arc::new(crate::backend::sequential::SequentialBackend::new());
+        let policy = RetryPolicy::idempotent(5);
+        let mut h = supervise(&seq, task(Expr::stop(Expr::lit("boom"))), policy, false).unwrap();
+        // Eval errors ride inside a successful TaskResult — no retry path
+        // even fires; the outcome carries the error.
+        let r = h.wait().unwrap();
+        assert!(matches!(r.outcome, TaskOutcome::Err(_)));
+    }
+
+    #[test]
+    fn respawn_budget_charges_and_refunds() {
+        let b = RespawnBudget::new(2);
+        assert!(b.try_take());
+        assert!(b.try_take());
+        assert!(!b.try_take(), "budget of 2 allows exactly 2 takes");
+        assert_eq!(b.remaining(), 0);
+        b.refund();
+        assert_eq!(b.remaining(), 1);
+        assert!(b.try_take());
+    }
+
+    #[test]
+    fn backoff_grows_and_caps() {
+        let p = RetryPolicy::idempotent(10).with_backoff(Duration::from_millis(10), 2.0);
+        assert_eq!(p.backoff_before(1), Duration::from_millis(10));
+        assert_eq!(p.backoff_before(2), Duration::from_millis(20));
+        assert!(p.backoff_before(30) <= Duration::from_secs(2));
+    }
+
+    #[test]
+    fn retryable_excludes_eval_and_cancel() {
+        assert!(RetryPolicy::retryable(&FutureError::WorkerDied { detail: String::new() }));
+        assert!(RetryPolicy::retryable(&FutureError::Channel("x".into())));
+        assert!(RetryPolicy::retryable(&FutureError::Launch("x".into())));
+        assert!(!RetryPolicy::retryable(&FutureError::Cancelled));
+        assert!(!RetryPolicy::retryable(&FutureError::Eval(
+            crate::api::error::EvalError::new("boom")
+        )));
+        assert!(!RetryPolicy::retryable(&FutureError::InvalidPlan("x".into())));
+    }
+}

@@ -34,6 +34,9 @@ use crate::api::conditions::relay_immediate;
 use crate::api::error::{EvalError, FutureError};
 use crate::api::plan::at_depth;
 use crate::backend::dispatch::{default_backlog, CompletionSignal, CompletionWaker, Dispatcher};
+use crate::backend::supervisor::{
+    supervisor_config, RespawnBudget, SupervisorConfig, WORKER_KILL_ERROR,
+};
 use crate::backend::{Backend, TaskHandle};
 use crate::ipc::{TaskOutcome, TaskResult, TaskSpec};
 
@@ -51,6 +54,12 @@ struct Shared {
     /// Signals: job available (workers) and slot free (launchers).
     job_cv: Condvar,
     slot_cv: Condvar,
+    /// A worker thread died — wakes the health monitor.  Separate from
+    /// `slot_cv` so the monitor never consumes a launcher's wakeup.
+    death_cv: Condvar,
+    /// Respawn allowance; `None` when supervision is disabled.  Consulted
+    /// by the launch path's dead-pool guard.
+    budget: Option<Arc<RespawnBudget>>,
     shutting_down: AtomicBool,
 }
 
@@ -59,40 +68,142 @@ struct QueueState {
     /// Free-worker count: launch() takes a slot before enqueueing, workers
     /// return it after finishing — this is what makes launch() block.
     free_slots: usize,
+    /// Live worker threads.  A chaos-killed worker takes its slot down
+    /// with it (`free_slots + busy == alive`); the monitor restores both.
+    alive: usize,
 }
 
 pub struct ThreadPoolBackend {
     shared: Arc<Shared>,
-    threads: Mutex<Vec<JoinHandle<()>>>,
+    threads: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    monitor: Mutex<Option<JoinHandle<()>>>,
     workers: usize,
     /// Lazily-started queued-dispatch front (see [`crate::backend::dispatch`]).
     dispatcher: OnceLock<Dispatcher>,
 }
 
 impl ThreadPoolBackend {
+    /// A pool supervised per the process-wide [`supervisor_config`].
     pub fn new(workers: usize) -> Self {
+        Self::new_configured(workers, &supervisor_config())
+    }
+
+    /// [`ThreadPoolBackend::new`] with an explicit supervision config
+    /// (tests inject disabled respawn / tiny budgets here).
+    pub fn new_configured(workers: usize, cfg: &SupervisorConfig) -> Self {
         let workers = workers.max(1);
+        let budget = if cfg.respawn { Some(RespawnBudget::new(cfg.max_respawns)) } else { None };
         let shared = Arc::new(Shared {
-            queue: Mutex::new(QueueState { jobs: VecDeque::new(), free_slots: workers }),
+            queue: Mutex::new(QueueState {
+                jobs: VecDeque::new(),
+                free_slots: workers,
+                alive: workers,
+            }),
             job_cv: Condvar::new(),
             slot_cv: Condvar::new(),
+            death_cv: Condvar::new(),
+            budget,
             shutting_down: AtomicBool::new(false),
         });
-        let mut threads = Vec::with_capacity(workers);
+        let threads = Arc::new(Mutex::new(Vec::with_capacity(workers)));
         for i in 0..workers {
             let shared = Arc::clone(&shared);
             let handle = std::thread::Builder::new()
                 .name(format!("rustures-pool-{i}"))
                 .spawn(move || worker_loop(shared))
                 .expect("spawn pool worker");
-            threads.push(handle);
+            threads.lock().unwrap().push(handle);
         }
+        let monitor = if cfg.respawn {
+            let m_shared = Arc::clone(&shared);
+            let m_threads = Arc::clone(&threads);
+            let poll = cfg.poll;
+            match std::thread::Builder::new()
+                .name("rustures-pool-monitor".into())
+                .spawn(move || monitor_loop(m_shared, m_threads, workers, poll))
+            {
+                Ok(handle) => Some(handle),
+                Err(_) => {
+                    // No monitor will ever respawn anything: zero the
+                    // budget so the dead-pool guard stops promising a
+                    // rescue that cannot come (it would park forever).
+                    if let Some(b) = &shared.budget {
+                        b.drain();
+                    }
+                    None
+                }
+            }
+        } else {
+            None
+        };
         ThreadPoolBackend {
             shared,
-            threads: Mutex::new(threads),
+            threads,
+            monitor: Mutex::new(monitor),
             workers,
             dispatcher: OnceLock::new(),
         }
+    }
+}
+
+/// Health monitor: revive chaos-killed worker threads up to the pool's
+/// respawn budget, restoring both `alive` and the slot the dead worker
+/// took down with it.  Parked launchers (including the dispatcher thread)
+/// wake via `slot_cv` and find the fresh seat — no re-registration step.
+fn monitor_loop(
+    shared: Arc<Shared>,
+    threads: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    workers: usize,
+    poll: std::time::Duration,
+) {
+    loop {
+        let mut q = shared.queue.lock().unwrap();
+        if shared.shutting_down.load(Ordering::SeqCst) {
+            return;
+        }
+        let deficit = workers.saturating_sub(q.alive);
+        let budget = shared.budget.as_ref().expect("monitor only runs with a budget");
+        if deficit > 0 && budget.try_take() {
+            q.alive += 1;
+            q.free_slots += 1;
+            drop(q);
+            let w_shared = Arc::clone(&shared);
+            match std::thread::Builder::new()
+                .name("rustures-pool-respawn".into())
+                .spawn(move || worker_loop(w_shared))
+            {
+                Ok(handle) => {
+                    threads.lock().unwrap().push(handle);
+                    crate::metrics::record_respawn();
+                    shared.slot_cv.notify_all();
+                }
+                Err(_) => {
+                    let mut q = shared.queue.lock().unwrap();
+                    q.alive = q.alive.saturating_sub(1);
+                    // A woken launcher may have taken the slot we
+                    // provisionally added; never underflow.
+                    q.free_slots = q.free_slots.saturating_sub(1);
+                    // If that launcher enqueued a job and no worker is
+                    // left to run it, fail it now (dropping the Job drops
+                    // its reply sender → the handle reports WorkerDied)
+                    // instead of stranding its handle forever.
+                    let stranded =
+                        if q.alive == 0 { std::mem::take(&mut q.jobs) } else { VecDeque::new() };
+                    drop(q);
+                    for job in stranded {
+                        job.signal.complete();
+                    }
+                    shared.slot_cv.notify_all();
+                    // Spawning is failing: keep the budget charge (a
+                    // broken host must not spin the monitor forever) and
+                    // back off one poll interval.
+                    std::thread::sleep(poll);
+                }
+            }
+            continue;
+        }
+        let (guard, _) = shared.death_cv.wait_timeout(q, poll).unwrap();
+        drop(guard);
     }
 }
 
@@ -114,6 +225,13 @@ fn blocking_launch(
         }
         if q.free_slots > 0 {
             break;
+        }
+        // Dead-pool guard: every worker is gone and no monitor/budget can
+        // revive one — error out instead of parking forever.
+        if q.alive == 0 && !shared.budget.as_ref().is_some_and(|b| b.remaining() > 0) {
+            return Err(FutureError::Launch(
+                "all pool workers died and the respawn budget is exhausted".into(),
+            ));
         }
         q = shared.slot_cv.wait(q).unwrap();
     }
@@ -157,6 +275,25 @@ fn worker_loop(shared: Arc<Shared>) {
             captured: Default::default(),
             metrics: Default::default(),
         });
+
+        // Chaos kill: die like a crashed worker thread — no reply (the
+        // handle sees a disconnected channel → WorkerDied), slot NOT
+        // returned (it dies with us), capacity drop visible to the monitor.
+        if matches!(&result.outcome, TaskOutcome::Err(e) if e.message == WORKER_KILL_ERROR) {
+            drop(job.reply);
+            // Wake resolve()-subscribers; their handles report WorkerDied.
+            job.signal.complete();
+            {
+                let mut q = shared.queue.lock().unwrap();
+                q.alive = q.alive.saturating_sub(1);
+            }
+            crate::metrics::record_worker_death();
+            shared.death_cv.notify_all();
+            // Parked launchers must re-evaluate the dead-pool guard.
+            shared.slot_cv.notify_all();
+            return;
+        }
+
         // Receiver may be gone (abandoned future) — that's fine.
         let _ = job.reply.send(result);
         // Wake resolve()-style subscribers AFTER the result is available.
@@ -266,12 +403,17 @@ impl Backend for ThreadPoolBackend {
     fn shutdown(&self) {
         // Order matters: raise the flag and wake everyone FIRST so a
         // dispatcher thread parked inside blocking_launch errors out, then
-        // the dispatcher can drain + join, then the workers.
+        // the dispatcher can drain + join, then the monitor (so no new
+        // workers appear), then the workers.
         self.shared.shutting_down.store(true, Ordering::SeqCst);
         self.shared.job_cv.notify_all();
         self.shared.slot_cv.notify_all();
+        self.shared.death_cv.notify_all();
         if let Some(d) = self.dispatcher.get() {
             d.shutdown();
+        }
+        if let Some(m) = self.monitor.lock().unwrap().take() {
+            let _ = m.join();
         }
         let mut threads = self.threads.lock().unwrap();
         for t in threads.drain(..) {
@@ -466,6 +608,63 @@ mod tests {
         let waker = CompletionWaker::new();
         assert!(h.subscribe(&waker, 7));
         assert_eq!(waker.try_next(), Some(7));
+        pool.shutdown();
+    }
+
+    #[test]
+    fn chaos_kill_reports_worker_died_and_monitor_respawns() {
+        // Default supervision: the kill surfaces as WorkerDied (a real
+        // crash, not an eval error) and the monitor revives the capacity.
+        let pool = ThreadPoolBackend::new(1);
+        let mut h = pool.launch(task(Expr::chaos_kill())).unwrap();
+        match h.wait() {
+            Err(FutureError::WorkerDied { .. }) => {}
+            other => panic!("expected WorkerDied, got {other:?}"),
+        }
+        let mut h2 = pool.launch(task(Expr::lit(5i64))).unwrap();
+        assert_eq!(h2.wait().unwrap().outcome, TaskOutcome::Ok(Value::I64(5)));
+        pool.shutdown();
+    }
+
+    #[test]
+    fn dead_pool_without_budget_errors_instead_of_hanging() {
+        let cfg = SupervisorConfig { respawn: false, ..Default::default() };
+        let pool = ThreadPoolBackend::new_configured(1, &cfg);
+        let mut h = pool.launch(task(Expr::chaos_kill())).unwrap();
+        assert!(matches!(h.wait(), Err(FutureError::WorkerDied { .. })));
+        // Every worker is dead and nothing can revive one: launch must
+        // surface a structured error, never park forever.
+        match pool.launch(task(Expr::lit(1i64))) {
+            Err(FutureError::Launch(msg)) => {
+                assert!(msg.contains("respawn budget"), "{msg}");
+            }
+            other => panic!("expected Launch error, got {other:?}"),
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn respawn_budget_bounds_thread_revivals() {
+        let cfg = SupervisorConfig {
+            respawn: true,
+            max_respawns: 2,
+            poll: Duration::from_millis(5),
+        };
+        let pool = ThreadPoolBackend::new_configured(1, &cfg);
+        // Two kills are revived...
+        for _ in 0..2 {
+            let mut h = pool.launch(task(Expr::chaos_kill())).unwrap();
+            assert!(matches!(h.wait(), Err(FutureError::WorkerDied { .. })));
+            let mut ok = pool.launch(task(Expr::lit(1i64))).unwrap();
+            assert!(matches!(ok.wait().unwrap().outcome, TaskOutcome::Ok(_)));
+        }
+        // ...the third kill exhausts the budget: the pool is dead and says so.
+        let mut h = pool.launch(task(Expr::chaos_kill())).unwrap();
+        assert!(matches!(h.wait(), Err(FutureError::WorkerDied { .. })));
+        assert!(matches!(
+            pool.launch(task(Expr::lit(1i64))),
+            Err(FutureError::Launch(_))
+        ));
         pool.shutdown();
     }
 

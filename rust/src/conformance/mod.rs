@@ -17,8 +17,9 @@ use crate::api::future::{
     future, future_with, reset_session_counter, resolve, resolve_any, FutureOpts, FutureSet,
 };
 use crate::api::globals::GlobalsSpec;
-use crate::api::plan::{with_plan_topology, PlanSpec};
+use crate::api::plan::{current_topology, with_plan_topology, PlanSpec};
 use crate::api::value::{Tensor, Value};
+use crate::backend::supervisor::RetryPolicy;
 use crate::mapreduce::{future_lapply, Chunking, LapplyOpts};
 
 /// One conformance check.
@@ -378,6 +379,138 @@ fn check_queued_dispatch_resolves_correctly() -> Result<(), String> {
     Ok(())
 }
 
+// ------------------------------------------------- supervision checks ----
+
+/// The plan these checks run under (set by [`run_conformance`]).
+fn ambient_plan() -> PlanSpec {
+    current_topology().first().cloned().unwrap_or(PlanSpec::Sequential)
+}
+
+/// Does this plan have workers a chaos kill can actually take down?
+/// Everything except `sequential` does: thread-pool threads, multisession
+/// pipes, cluster sockets, batch job processes, and custom backends (the
+/// registered ones wrap the thread pool).  Under `sequential` the probe
+/// degrades to an evaluation error.
+fn disposable_workers(spec: &PlanSpec) -> bool {
+    !matches!(spec, PlanSpec::Sequential)
+}
+
+/// Fresh, unique marker path for a fail-exactly-once chaos probe.
+fn chaos_marker(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("rustures-chaos-{tag}-{}", crate::util::uuid_v4()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+/// Map body: element `kill_at` kills its worker once (marker-gated), then
+/// every element computes `x + runif(1)` — one seeded draw per element, so
+/// bit-identity against a clean run is meaningful.
+fn kill_body(kill_at: i64, marker: &str) -> Expr {
+    Expr::seq(vec![
+        Expr::if_else(
+            Expr::prim(PrimOp::Eq, vec![Expr::var("x"), Expr::lit(kill_at)]),
+            Expr::chaos_kill_once(marker),
+            Expr::lit(0i64),
+        ),
+        Expr::add(Expr::var("x"), Expr::runif(1)),
+    ])
+}
+
+fn check_kill_respawn_bit_identical() -> Result<(), String> {
+    let spec = ambient_plan();
+    let env = Env::new();
+    let xs: Vec<Value> = (0..6i64).map(Value::I64).collect();
+    // Reference: the same seeded map, no chaos.
+    let clean_body = Expr::seq(vec![Expr::lit(0i64), Expr::add(Expr::var("x"), Expr::runif(1))]);
+    let want = future_lapply(
+        &xs,
+        "x",
+        &clean_body,
+        &env,
+        &LapplyOpts::new().seed(13).chunking(Chunking::ChunkSize(2)),
+    )
+    .map_err(|e| e.to_string())?;
+
+    let marker = chaos_marker("respawn");
+    let body = kill_body(2, &marker);
+    let opts = LapplyOpts::new()
+        .seed(13)
+        .chunking(Chunking::ChunkSize(2))
+        .retry(RetryPolicy::idempotent(4).with_backoff(Duration::from_millis(1), 2.0));
+    let got = future_lapply(&xs, "x", &body, &env, &opts);
+    let _ = std::fs::remove_file(&marker);
+
+    if disposable_workers(&spec) {
+        // The kill took a worker down mid-map; the supervisor respawned
+        // capacity and the retry resubmitted the lost chunk — values must
+        // be bit-identical to the no-failure run.
+        expect_eq(got.map_err(|e| e.to_string())?, want, "kill+retry vs clean run")
+    } else {
+        // No disposable worker: the probe degrades to an eval error, and
+        // retry must NOT mask it (eval errors are never resubmitted).
+        match got {
+            Err(e) if e.is_eval() => Ok(()),
+            other => err(format!("sequential: expected un-retried eval error, got {other:?}")),
+        }
+    }
+}
+
+fn check_retry_exhausted_surfaces_structured_error() -> Result<(), String> {
+    let spec = ambient_plan();
+    let env = Env::new();
+    let opts = FutureOpts::new()
+        .retry(RetryPolicy::idempotent(2).with_backoff(Duration::from_millis(1), 1.0));
+    // Unconditional kill: every attempt murders its worker.
+    let f = future_with(Expr::chaos_kill(), &env, opts).map_err(|e| e.to_string())?;
+    match f.value() {
+        Err(FutureError::Retried { attempts, last }) if disposable_workers(&spec) => {
+            if attempts != 2 {
+                return err(format!("expected 2 attempts, got {attempts}"));
+            }
+            if (*last).is_eval() {
+                return err(format!("last failure must be infrastructure, got {last}"));
+            }
+            Ok(())
+        }
+        Err(e) if !disposable_workers(&spec) && e.is_eval() => Ok(()),
+        other => err(format!("expected Retried provenance, got {other:?}")),
+    }
+}
+
+fn check_kill_without_retry_is_structured_not_hang() -> Result<(), String> {
+    let spec = ambient_plan();
+    let env = Env::new();
+    let xs: Vec<Value> = (0..6i64).map(Value::I64).collect();
+    let marker = chaos_marker("noretry");
+    let body = kill_body(2, &marker);
+    // No retry policy: the map must COMPLETE with a structured error for
+    // the killed chunk (never a hang), and the pool must still serve.
+    let got = future_lapply(
+        &xs,
+        "x",
+        &body,
+        &env,
+        &LapplyOpts::new().seed(13).chunking(Chunking::ChunkSize(2)),
+    );
+    let _ = std::fs::remove_file(&marker);
+    match got {
+        Err(e) if disposable_workers(&spec) => {
+            if e.is_eval() {
+                return err(format!("worker loss must not masquerade as eval error: {e}"));
+            }
+            if !e.is_recoverable() {
+                return err(format!("worker loss must be recoverable: {e}"));
+            }
+        }
+        Err(e) if e.is_eval() => {} // sequential: degraded probe
+        other => return err(format!("expected a structured failure, got {other:?}")),
+    }
+    // Capacity recovered (respawn): a follow-up future still works.
+    let f = future(Expr::lit(7i64), &env).map_err(|e| e.to_string())?;
+    expect_eq(f.value().map_err(|e| e.to_string())?, Value::I64(7), "post-kill future")
+}
+
 fn check_nested_protection() -> Result<(), String> {
     // A future that itself creates a future: the inner one must resolve
     // (implicit sequential), not deadlock or error.
@@ -432,7 +565,11 @@ pub fn checks() -> Vec<Check> {
             what: "unseeded RNG use warns",
             run: check_unseeded_rng_warns,
         },
-        Check { name: "lazy", what: "lazy futures defer but capture eagerly", run: check_lazy_semantics },
+        Check {
+            name: "lazy",
+            what: "lazy futures defer but capture eagerly",
+            run: check_lazy_semantics,
+        },
         Check {
             name: "resolved-nonblocking",
             what: "resolved() does not block",
@@ -477,6 +614,21 @@ pub fn checks() -> Vec<Check> {
             name: "queued-dispatch",
             what: "queued futures resolve with identical semantics",
             run: check_queued_dispatch_resolves_correctly,
+        },
+        Check {
+            name: "kill-respawn",
+            what: "worker killed mid-lapply: retry+respawn match the clean run bit-identically",
+            run: check_kill_respawn_bit_identical,
+        },
+        Check {
+            name: "retry-exhausted",
+            what: "exhausted retry budget surfaces structured Retried provenance",
+            run: check_retry_exhausted_surfaces_structured_error,
+        },
+        Check {
+            name: "kill-no-retry",
+            what: "worker kill without retry is a structured error, not a hang; capacity respawns",
+            run: check_kill_without_retry_is_structured_not_hang,
         },
         Check {
             name: "nested-protection",

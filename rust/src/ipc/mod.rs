@@ -115,4 +115,5 @@ pub enum Message {
 
 /// Protocol version — bump on any wire-format change.
 /// v2: `Expr::MapChunk` (tag 17) — body-once + packed-elements chunk tasks.
-pub const PROTOCOL_VERSION: u32 = 2;
+/// v3: `Expr::ChaosKill` (tag 18) — supervised-recovery chaos probe.
+pub const PROTOCOL_VERSION: u32 = 3;

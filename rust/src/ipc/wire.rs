@@ -456,6 +456,16 @@ pub fn enc_expr(e: &mut Encoder, expr: &Expr) {
                 enc_value(e, v);
             }
         }
+        Expr::ChaosKill { marker } => {
+            e.u8(18);
+            match marker {
+                Some(m) => {
+                    e.u8(1);
+                    e.str(m);
+                }
+                None => e.u8(0),
+            }
+        }
     }
 }
 
@@ -530,6 +540,14 @@ pub fn dec_expr(d: &mut Decoder) -> Result<Expr, WireError> {
                 elements.push(dec_value(d)?);
             }
             Expr::MapChunk { param, body, elements, base_index }
+        }
+        18 => {
+            let marker = match d.u8()? {
+                0 => None,
+                1 => Some(d.str()?),
+                t => return Err(d.err(&format!("bad ChaosKill marker flag {t}"))),
+            };
+            Expr::ChaosKill { marker }
         }
         t => return Err(d.err(&format!("bad Expr tag {t}"))),
     })
@@ -691,7 +709,15 @@ pub fn dec_task_opts(d: &mut Decoder) -> Result<TaskOpts, WireError> {
     for _ in 0..n {
         nested_plan.push(dec_plan(d)?);
     }
-    Ok(TaskOpts { seed, stream_index, capture_stdout, capture_conditions, label, depth, nested_plan })
+    Ok(TaskOpts {
+        seed,
+        stream_index,
+        capture_stdout,
+        capture_conditions,
+        label,
+        depth,
+        nested_plan,
+    })
 }
 
 pub fn enc_task(e: &mut Encoder, t: &TaskSpec) {
@@ -885,6 +911,8 @@ mod tests {
             Expr::rnorm(2),
             Expr::with_rng_stream(9, Expr::runif(1)),
             Expr::Spin { millis: 5 },
+            Expr::chaos_kill(),
+            Expr::chaos_kill_once("/tmp/rustures-marker"),
         ]);
         let mut e = Encoder::new();
         enc_expr(&mut e, &expr);

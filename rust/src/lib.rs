@@ -20,7 +20,9 @@
 //! * capture + ordered relay of stdout and conditions ([`api::conditions`]),
 //! * an exception taxonomy separating evaluation errors from
 //!   infrastructure [`api::error::FutureError`]s,
-//! * nested-parallelism protection via plan topologies ([`api::plan`]).
+//! * nested-parallelism protection via plan topologies ([`api::plan`]),
+//! * supervised fault tolerance — worker respawn + transparent,
+//!   determinism-preserving retry ([`backend::supervisor`]).
 //!
 //! Compute payloads (the paper's `slow_fcn`) are JAX/Pallas programs
 //! AOT-lowered to HLO text and executed through PJRT by [`runtime`] — Python
@@ -66,8 +68,10 @@ pub mod prelude {
     pub use crate::api::lazy::merge_futures;
     pub use crate::api::plan::{plan, plan_topology, with_plan, PlanSpec};
     pub use crate::api::promise::ListEnv;
+    pub use crate::api::plan::plan_with_retry;
     pub use crate::api::rng::RngStream;
     pub use crate::api::value::{Tensor, Value};
+    pub use crate::backend::supervisor::{RetryPolicy, SupervisorConfig};
     pub use crate::mapreduce::{
         future_lapply, future_map, future_map_reduce, Chunking, LapplyOpts,
     };

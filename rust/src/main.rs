@@ -60,11 +60,20 @@ fn flag_value<'a>(args: &'a [String], flag: &str) -> Option<&'a str> {
 }
 
 fn cmd_worker(args: &[String]) -> Result<(), String> {
+    // This process exists to serve tasks and can be killed/respawned at
+    // will: chaos probes (Expr::ChaosKill) exit it like a real crash.
+    rustures::backend::supervisor::set_kill_exits_process(true);
     // Runtime loads lazily inside the evaluator on first kernel call.
     let kernels = None;
     if args.iter().any(|a| a == "--stdio") {
         run_worker(stdin().lock(), stdout().lock(), kernels).map_err(|e| e.to_string())
     } else if let Some(addr) = flag_value(args, "--connect") {
+        if std::env::var("RUSTURES_CHAOS_NO_CONNECT").is_ok_and(|v| v == "1") {
+            // Chaos hook for the cluster accept-timeout tests: a worker
+            // that launches successfully but never phones home.
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+            return Ok(());
+        }
         let stream = TcpStream::connect(addr)
             .map_err(|e| format!("connect {addr}: {e}"))?;
         stream.set_nodelay(true).ok();

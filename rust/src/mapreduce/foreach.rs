@@ -36,7 +36,13 @@ pub struct Foreach<'e> {
 
 /// Entry point: `foreach("x", xs, &env)`.
 pub fn foreach<'e>(param: &str, values: Vec<Value>, env: &'e Env) -> Foreach<'e> {
-    Foreach { env, param: param.to_string(), values, combine: Combine::List, opts: LapplyOpts::new() }
+    Foreach {
+        env,
+        param: param.to_string(),
+        values,
+        combine: Combine::List,
+        opts: LapplyOpts::new(),
+    }
 }
 
 impl<'e> Foreach<'e> {

@@ -53,6 +53,7 @@ use crate::api::expr::Expr;
 use crate::api::future::{future_with, Future, FutureOpts, FutureSet};
 use crate::api::plan::backend_for_current_depth;
 use crate::api::value::Value;
+use crate::backend::supervisor::RetryPolicy;
 
 /// Chunking policy (future.apply's `scheduling`/`chunk.size` arguments).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -93,6 +94,13 @@ pub struct LapplyOpts {
     /// pre-streaming reference path, kept for A/B tests and benches.  The
     /// output is identical either way; only the waiting differs.
     pub in_order: bool,
+    /// Supervised retry for every chunk future: a chunk lost to a worker
+    /// crash is transparently resubmitted, so a single dead worker no
+    /// longer poisons the whole map.  Retried chunks re-run under the same
+    /// `base_index` RNG substreams — seeded results stay **bit-identical**
+    /// to a no-failure run.  Requires the policy's `idempotent` gate
+    /// (elements finished before the crash run twice).
+    pub retry: Option<RetryPolicy>,
 }
 
 impl LapplyOpts {
@@ -122,6 +130,11 @@ impl LapplyOpts {
 
     pub fn in_order(mut self) -> Self {
         self.in_order = true;
+        self
+    }
+
+    pub fn retry(mut self, policy: RetryPolicy) -> Self {
+        self.retry = Some(policy);
         self
     }
 }
@@ -252,6 +265,7 @@ pub fn lapply_futures(
         fopts.stdout = opts.capture;
         fopts.conditions = opts.capture;
         fopts.queued = opts.queued;
+        fopts.retry = opts.retry.clone();
         fopts.label = Some(match &opts.label {
             Some(l) => format!("{l}[chunk {ci}]"),
             None => format!("lapply[chunk {ci}]"),

@@ -5,9 +5,53 @@
 //! (create → launch → resolved → collect), and a process-global trace log
 //! collects them for later rendering.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{SystemTime, UNIX_EPOCH};
+
+// ------------------------------------------------- supervision counters ----
+
+/// Process-wide fault-tolerance counters (monotonic; relaxed atomics — one
+/// uncontended add per event, nothing on the task hot path).
+static WORKER_DEATHS: AtomicU64 = AtomicU64::new(0);
+static RESPAWNS: AtomicU64 = AtomicU64::new(0);
+static RETRIES: AtomicU64 = AtomicU64::new(0);
+
+/// Snapshot of the supervision counters.  Monotonic — tests compare
+/// before/after deltas instead of resetting (safe under parallel tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SupervisionCounters {
+    /// Workers observed dead (reader EOF, thread death, job crash).
+    pub worker_deaths: u64,
+    /// Replacement workers brought up (health monitor or the launch
+    /// path's on-demand respawn — one shared budget either way).
+    pub respawns: u64,
+    /// Task resubmissions performed by supervised handles.
+    pub retries: u64,
+}
+
+/// A backend observed a worker die outside an orderly shutdown.
+pub fn record_worker_death() {
+    WORKER_DEATHS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// A replacement worker was brought up (monitor or on-demand).
+pub fn record_respawn() {
+    RESPAWNS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// A supervised handle resubmitted a task after infrastructure loss.
+pub fn record_retry() {
+    RETRIES.fetch_add(1, Ordering::Relaxed);
+}
+
+pub fn supervision_counters() -> SupervisionCounters {
+    SupervisionCounters {
+        worker_deaths: WORKER_DEATHS.load(Ordering::Relaxed),
+        respawns: RESPAWNS.load(Ordering::Relaxed),
+        retries: RETRIES.load(Ordering::Relaxed),
+    }
+}
 
 fn now_ns() -> u64 {
     SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default().as_nanos() as u64
@@ -113,6 +157,19 @@ mod tests {
         assert!(events[2].1 >= events[1].1);
         assert!(t.event_ns("launch").is_some());
         assert!(t.event_ns("nope").is_none());
+    }
+
+    #[test]
+    fn supervision_counters_are_monotonic() {
+        let before = supervision_counters();
+        record_worker_death();
+        record_respawn();
+        record_retry();
+        record_retry();
+        let after = supervision_counters();
+        assert!(after.worker_deaths >= before.worker_deaths + 1);
+        assert!(after.respawns >= before.respawns + 1);
+        assert!(after.retries >= before.retries + 2);
     }
 
     #[test]

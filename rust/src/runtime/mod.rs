@@ -77,7 +77,9 @@ pub fn parse_manifest(text: &str) -> Result<Vec<KernelSpec>, FutureError> {
                 .map(|a| {
                     a.get("shape")
                         .and_then(Json::as_arr)
-                        .map(|dims| dims.iter().filter_map(Json::as_i64).map(|d| d as usize).collect())
+                        .map(|dims| {
+                            dims.iter().filter_map(Json::as_i64).map(|d| d as usize).collect()
+                        })
                         .ok_or_else(|| FutureError::Runtime("manifest arg: missing 'shape'".into()))
                 })
                 .collect()

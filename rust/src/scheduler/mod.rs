@@ -298,6 +298,12 @@ fn daemon_loop(config: SchedConfig, state: Arc<Mutex<SchedState>>, stop: Arc<Ato
                     None => Some(JobState::Failed("no child".into())),
                 };
                 if let Some(new_state) = done {
+                    if matches!(new_state, JobState::Failed(_)) {
+                        // A crashed/killed job process is a worker death
+                        // (supervision metrics; batch jobs are inherently
+                        // disposable so there is nothing to respawn).
+                        crate::metrics::record_worker_death();
+                    }
                     job.state = new_state;
                     job.child = None;
                     if let Some(node) = job.node.take() {

@@ -308,6 +308,28 @@ fn eval(expr: &Expr, scope: &mut Scope, ctx: &mut EvalCtx<'_, '_>) -> Result<Val
             std::hint::black_box(acc);
             Ok(Value::Unit)
         }
+        Expr::ChaosKill { marker } => {
+            if let Some(m) = marker {
+                if std::path::Path::new(m).exists() {
+                    // The kill already fired on an earlier attempt: survive
+                    // (a supervised retry takes this branch).
+                    return Ok(Value::I64(0));
+                }
+                // Create the marker BEFORE dying so the retried run sees it.
+                let _ = std::fs::write(m, b"killed");
+            }
+            if crate::backend::supervisor::kill_exits_process() {
+                // Disposable worker process: die like a real crash — the
+                // coordinator's reader sees EOF / the scheduler harvests a
+                // nonzero exit.
+                std::process::exit(137);
+            }
+            // In-process evaluation: surface the sentinel.  The thread
+            // pool's worker loop turns it into a genuine worker-thread
+            // death; under plan(sequential) it is just an eval error (there
+            // is no disposable worker to kill).
+            Err(EvalError::new(crate::backend::supervisor::WORKER_KILL_ERROR))
+        }
     }
 }
 
@@ -767,9 +789,15 @@ mod tests {
     fn sum_mean_sqrt_concat() {
         let env = Env::new();
         let list = Expr::list(vec![Expr::lit(1.0), Expr::lit(2.0), Expr::lit(3.0)]);
-        assert_eq!(run(&Expr::prim(PrimOp::Sum, vec![list.clone()]), &env).unwrap(), Value::F64(6.0));
+        assert_eq!(
+            run(&Expr::prim(PrimOp::Sum, vec![list.clone()]), &env).unwrap(),
+            Value::F64(6.0)
+        );
         assert_eq!(run(&Expr::prim(PrimOp::Mean, vec![list]), &env).unwrap(), Value::F64(2.0));
-        assert_eq!(run(&Expr::prim(PrimOp::Sqrt, vec![Expr::lit(9.0)]), &env).unwrap(), Value::F64(3.0));
+        assert_eq!(
+            run(&Expr::prim(PrimOp::Sqrt, vec![Expr::lit(9.0)]), &env).unwrap(),
+            Value::F64(3.0)
+        );
         let c = Expr::prim(PrimOp::Concat, vec![Expr::lit("n="), Expr::lit(3i64)]);
         assert_eq!(run(&c, &env).unwrap(), Value::Str("n=3".into()));
     }

@@ -1,9 +1,183 @@
 //! Failure injection: FutureError semantics under worker death, cancelled
 //! jobs, and recovery by relaunching (the paper's motivation for the
-//! distinct FutureError class and its restart() future-work item).
+//! distinct FutureError class and its restart() future-work item) — plus
+//! the mid-map kill harness for the supervision subsystem: workers are
+//! chaos-killed in the middle of a `future_lapply` and the supervised
+//! retry must reproduce the no-failure run bit-identically.
+
+use std::time::Duration;
 
 use rustures::api::plan::{with_plan, PlanSpec};
 use rustures::prelude::*;
+
+// ---------------------------------------------------- mid-map kill harness --
+
+/// Unique marker path for a fail-exactly-once chaos probe.
+fn marker(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("rustures-fi-{tag}-{}", rustures::util::uuid_v4()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+/// Seeded map over `n` elements where each element in `kills` murders its
+/// worker exactly once (marker-gated).  Every element draws one seeded
+/// uniform, so bit-identity against a clean run is a real check.
+fn killed_lapply(
+    spec: PlanSpec,
+    n: i64,
+    kills: &[i64],
+    retry: Option<RetryPolicy>,
+) -> (Result<Vec<Value>, FutureError>, Vec<String>) {
+    let markers: Vec<String> = kills.iter().map(|k| marker(&format!("k{k}"))).collect();
+    let out = with_plan(spec, || {
+        let env = Env::new();
+        let xs: Vec<Value> = (0..n).map(Value::I64).collect();
+        // Chain: if x == k_i (and marker_i absent) die; else fall through.
+        let mut probe = Expr::lit(0i64);
+        for (k, m) in kills.iter().zip(&markers) {
+            probe = Expr::if_else(
+                Expr::prim(PrimOp::Eq, vec![Expr::var("x"), Expr::lit(*k)]),
+                Expr::chaos_kill_once(m),
+                probe,
+            );
+        }
+        let body = Expr::seq(vec![probe, Expr::add(Expr::var("x"), Expr::runif(1))]);
+        let mut opts = LapplyOpts::new().seed(99).chunking(Chunking::ChunkSize(3));
+        if let Some(p) = retry {
+            opts = opts.retry(p);
+        }
+        future_lapply(&xs, "x", &body, &env, &opts)
+    });
+    (out, markers)
+}
+
+fn cleanup(markers: &[String]) {
+    for m in markers {
+        let _ = std::fs::remove_file(m);
+    }
+}
+
+fn retry_policy() -> RetryPolicy {
+    RetryPolicy::idempotent(4).with_backoff(Duration::from_millis(1), 2.0)
+}
+
+/// The acceptance-criteria chaos matrix: on procpool (multisession),
+/// cluster, and threadpool (multicore) backends, a worker killed
+/// mid-`future_lapply` yields values bit-identical to the no-failure run
+/// when retry is enabled, and a structured recoverable error when not.
+fn assert_midmap_kill_contract(spec: PlanSpec) {
+    // Clean reference run (no kills, same seed).
+    let (want, _) = killed_lapply(spec.clone(), 12, &[], None);
+    let want = want.expect("clean run");
+
+    // One kill, retry on: bit-identical recovery.
+    let (got, markers) = killed_lapply(spec.clone(), 12, &[4], Some(retry_policy()));
+    cleanup(&markers);
+    assert_eq!(got.expect("supervised run"), want, "{}: kill+retry != clean", spec.name());
+
+    // Two kills (two workers lost), retry on: still bit-identical.
+    let (got, markers) = killed_lapply(spec.clone(), 12, &[2, 8], Some(retry_policy()));
+    cleanup(&markers);
+    assert_eq!(got.expect("two-kill run"), want, "{}: 2 kills + retry != clean", spec.name());
+
+    // Kill with retry DISABLED: a structured, recoverable infrastructure
+    // error — not a hang, not an eval error, not silent recovery.
+    let (got, markers) = killed_lapply(spec.clone(), 12, &[4], None);
+    cleanup(&markers);
+    match got {
+        Err(e) => {
+            assert!(!e.is_eval(), "{}: worker loss reported as eval error: {e}", spec.name());
+            assert!(e.is_recoverable(), "{}: worker loss not recoverable: {e}", spec.name());
+        }
+        Ok(_) => panic!("{}: kill without retry must fail the map", spec.name()),
+    }
+}
+
+#[test]
+fn midmap_kill_contract_multicore() {
+    assert_midmap_kill_contract(PlanSpec::multicore(2));
+}
+
+#[test]
+fn midmap_kill_contract_multisession() {
+    assert_midmap_kill_contract(PlanSpec::multiprocess(2));
+}
+
+#[test]
+fn midmap_kill_contract_cluster() {
+    assert_midmap_kill_contract(PlanSpec::cluster(&["n1.local", "n2.local"]));
+}
+
+#[test]
+fn retry_counters_tick_on_supervised_recovery() {
+    let before = rustures::metrics::supervision_counters();
+    let (got, markers) = killed_lapply(PlanSpec::multiprocess(2), 12, &[4], Some(retry_policy()));
+    cleanup(&markers);
+    assert!(got.is_ok());
+    let after = rustures::metrics::supervision_counters();
+    assert!(after.retries > before.retries, "retry counter must tick");
+    assert!(after.worker_deaths > before.worker_deaths, "death counter must tick");
+}
+
+#[test]
+fn supervised_cancel_is_not_retried() {
+    // Cancellation is user intent: the retry loop must stay disarmed even
+    // though the worker loss it causes would otherwise be retryable.
+    with_plan(PlanSpec::multiprocess(1), || {
+        let env = Env::new();
+        let f = future_with(
+            Expr::Spin { millis: 5000 },
+            &env,
+            FutureOpts::new().retry(RetryPolicy::idempotent(5)),
+        )
+        .unwrap();
+        assert!(f.cancel());
+        match f.value() {
+            Err(e) => assert!(e.is_recoverable(), "{e}"),
+            Ok(_) => panic!("cancelled supervised future returned a value"),
+        }
+    });
+}
+
+#[test]
+fn plan_wide_retry_supervises_unannotated_futures() {
+    use rustures::api::plan::with_plan_retry;
+    let m = marker("planwide");
+    let out = with_plan_retry(PlanSpec::multiprocess(1), retry_policy(), || {
+        let env = Env::new();
+        // No per-future retry: the plan default arms supervision.
+        let f = future(
+            Expr::seq(vec![Expr::chaos_kill_once(&m), Expr::lit(21i64)]),
+            &env,
+        )
+        .unwrap();
+        f.value()
+    });
+    let _ = std::fs::remove_file(&m);
+    assert_eq!(out.unwrap(), Value::I64(21));
+}
+
+#[test]
+fn retry_exhaustion_has_structured_provenance() {
+    with_plan(PlanSpec::multiprocess(1), || {
+        let env = Env::new();
+        let f = future_with(
+            Expr::chaos_kill(),
+            &env,
+            FutureOpts::new()
+                .retry(RetryPolicy::idempotent(3).with_backoff(Duration::from_millis(1), 1.0)),
+        )
+        .unwrap();
+        match f.value() {
+            Err(FutureError::Retried { attempts, last }) => {
+                assert_eq!(attempts, 3);
+                assert!(last.is_recoverable());
+            }
+            other => panic!("expected Retried, got {other:?}"),
+        }
+    });
+}
 
 #[test]
 fn cancelled_future_surfaces_as_recoverable_error() {

@@ -16,9 +16,14 @@ fn nested_futures_default_to_sequential_inside_workers() {
     with_plan_topology(vec![PlanSpec::multiprocess(2)], || {
         let env = Env::new();
         let xs: Vec<Value> = (0..6i64).map(Value::I64).collect();
-        let out =
-            future_lapply(&xs, "x", &Expr::mul(Expr::var("x"), Expr::lit(2i64)), &env, &LapplyOpts::new())
-                .unwrap();
+        let out = future_lapply(
+            &xs,
+            "x",
+            &Expr::mul(Expr::var("x"), Expr::lit(2i64)),
+            &env,
+            &LapplyOpts::new(),
+        )
+        .unwrap();
         assert_eq!(out.len(), 6);
     });
 }

@@ -259,7 +259,8 @@ fn naive_free_vars(expr: &Expr, bound: &mut Vec<String>, out: &mut Vec<String>) 
         | Expr::Rng { .. }
         | Expr::Spin { .. }
         | Expr::Sleep { .. }
-        | Expr::Work { .. } => {}
+        | Expr::Work { .. }
+        | Expr::ChaosKill { .. } => {}
     }
 }
 

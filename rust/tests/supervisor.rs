@@ -1,0 +1,252 @@
+//! Supervisor kill-tests: worker respawn across backends, the cluster
+//! accept-timeout bugfix, respawn budgets, and supervision metrics — the
+//! elastic-execution half of the fault-tolerance subsystem (the retry half
+//! lives in tests/failure_injection.rs).
+
+use std::time::{Duration, Instant};
+
+use rustures::api::plan::{with_plan, PlanSpec};
+use rustures::backend::cluster::ClusterBackend;
+use rustures::backend::{Backend, TaskHandle};
+use rustures::prelude::*;
+
+fn marker(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("rustures-sup-{tag}-{}", rustures::util::uuid_v4()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+/// Kill a worker (no retry → the future fails), then verify the backend
+/// still serves: the health monitor / on-demand respawn restored capacity.
+fn assert_kill_then_respawn(spec: PlanSpec) {
+    with_plan(spec.clone(), || {
+        let env = Env::new();
+        let f = future(Expr::chaos_kill(), &env).unwrap();
+        match f.value() {
+            Err(e) => {
+                assert!(!e.is_eval(), "{}: kill must not be an eval error: {e}", spec.name());
+                assert!(e.is_recoverable(), "{}: {e}", spec.name());
+            }
+            Ok(v) => panic!("{}: killed future returned {v:?}", spec.name()),
+        }
+        // Fresh capacity: a whole map still runs to completion.
+        let xs: Vec<Value> = (0..8i64).map(Value::I64).collect();
+        let out = future_lapply(
+            &xs,
+            "x",
+            &Expr::mul(Expr::var("x"), Expr::var("x")),
+            &env,
+            &LapplyOpts::new(),
+        )
+        .unwrap();
+        let want: Vec<Value> = (0..8i64).map(|i| Value::I64(i * i)).collect();
+        assert_eq!(out, want, "{}: pool did not recover", spec.name());
+    });
+}
+
+#[test]
+fn threadpool_respawns_after_kill() {
+    assert_kill_then_respawn(PlanSpec::multicore(2));
+}
+
+#[test]
+fn multisession_respawns_after_kill() {
+    assert_kill_then_respawn(PlanSpec::multiprocess(2));
+}
+
+#[test]
+fn cluster_respawns_after_kill() {
+    assert_kill_then_respawn(PlanSpec::cluster(&["n1.local", "n2.local"]));
+}
+
+#[test]
+fn batch_jobs_are_inherently_disposable() {
+    // Each batch job is its own process: a killed job fails structurally
+    // and the next job simply runs on a fresh process.
+    assert_kill_then_respawn(PlanSpec::batch(2));
+}
+
+#[test]
+fn killing_every_worker_still_recovers() {
+    // Lose ALL workers at once; the monitor must rebuild the whole pool.
+    with_plan(PlanSpec::multicore(2), || {
+        let env = Env::new();
+        let fs: Vec<Future> =
+            (0..2).map(|_| future(Expr::chaos_kill(), &env).unwrap()).collect();
+        for f in &fs {
+            assert!(f.value().is_err());
+        }
+        let f = future(Expr::lit(42i64), &env).unwrap();
+        assert_eq!(f.value().unwrap(), Value::I64(42));
+    });
+}
+
+#[test]
+fn respawn_counters_tick() {
+    let before = rustures::metrics::supervision_counters();
+    with_plan(PlanSpec::multicore(1), || {
+        let env = Env::new();
+        let f = future(Expr::chaos_kill(), &env).unwrap();
+        assert!(f.value().is_err());
+        // Force the respawned worker into service so the monitor must have
+        // acted before this returns.
+        let f = future(Expr::lit(1i64), &env).unwrap();
+        assert_eq!(f.value().unwrap(), Value::I64(1));
+    });
+    let after = rustures::metrics::supervision_counters();
+    assert!(after.worker_deaths > before.worker_deaths, "death not counted");
+    assert!(after.respawns > before.respawns, "respawn not counted");
+}
+
+// ------------------------------------------------ cluster accept timeout ----
+
+#[test]
+fn cluster_accept_timeout_fails_fast_instead_of_hanging() {
+    // Regression: launch_host_worker used to call accept() with no
+    // deadline — a worker that spawns but never connects back hung plan
+    // creation forever.  The "!noconnect" host label spawns exactly such a
+    // worker; creation must give up within the deadline and kill the child.
+    let t0 = Instant::now();
+    let got = ClusterBackend::new_with_accept_timeout(
+        &["sim1.local!noconnect".to_string()],
+        Duration::from_millis(300),
+    );
+    let elapsed = t0.elapsed();
+    match got {
+        Err(FutureError::Launch(msg)) => {
+            assert!(msg.contains("did not connect back"), "{msg}");
+        }
+        Err(other) => panic!("expected Launch error, got {other}"),
+        Ok(_) => panic!("backend creation must fail when the worker never connects"),
+    }
+    assert!(
+        elapsed < Duration::from_secs(5),
+        "accept timeout did not bound plan creation: {elapsed:?}"
+    );
+}
+
+#[test]
+fn cluster_accept_timeout_does_not_affect_healthy_workers() {
+    let backend = ClusterBackend::new_with_accept_timeout(
+        &["n1.local".to_string()],
+        Duration::from_secs(10),
+    )
+    .expect("healthy cluster");
+    let mut h = backend
+        .launch(rustures::ipc::TaskSpec {
+            id: rustures::util::uuid_v4(),
+            expr: Expr::add(Expr::lit(20i64), Expr::lit(22i64)),
+            globals: Env::new(),
+            opts: rustures::ipc::TaskOpts::default(),
+        })
+        .unwrap();
+    let r = h.wait().unwrap();
+    assert_eq!(r.outcome, rustures::ipc::TaskOutcome::Ok(Value::I64(42)));
+    backend.shutdown();
+}
+
+// ---------------------------------------------------- retry determinism ----
+
+#[test]
+fn queued_dispatch_composes_with_retry() {
+    // Queued (non-blocking-create) chunk futures still get supervision:
+    // the dispatcher acquires the seat, the kill fires, the retry re-enters
+    // the dispatcher, and the map completes bit-identically.
+    let clean = with_plan(PlanSpec::multicore(2), || {
+        let env = Env::new();
+        let xs: Vec<Value> = (0..10i64).map(Value::I64).collect();
+        let body = Expr::add(Expr::var("x"), Expr::runif(1));
+        future_lapply(
+            &xs,
+            "x",
+            &body,
+            &env,
+            &LapplyOpts::new().seed(7).chunking(Chunking::ChunkSize(2)).queued(),
+        )
+        .unwrap()
+    });
+    let m = marker("queued");
+    let killed = with_plan(PlanSpec::multicore(2), || {
+        let env = Env::new();
+        let xs: Vec<Value> = (0..10i64).map(Value::I64).collect();
+        let body = Expr::seq(vec![
+            Expr::if_else(
+                Expr::prim(PrimOp::Eq, vec![Expr::var("x"), Expr::lit(5i64)]),
+                Expr::chaos_kill_once(&m),
+                Expr::lit(0i64),
+            ),
+            Expr::add(Expr::var("x"), Expr::runif(1)),
+        ]);
+        future_lapply(
+            &xs,
+            "x",
+            &body,
+            &env,
+            &LapplyOpts::new()
+                .seed(7)
+                .chunking(Chunking::ChunkSize(2))
+                .queued()
+                .retry(RetryPolicy::idempotent(4).with_backoff(Duration::from_millis(1), 2.0)),
+        )
+        .unwrap()
+    });
+    let _ = std::fs::remove_file(&m);
+    // The clean body is `seq(lit, add)` vs `add` — same single draw per
+    // element, so the values must match exactly.
+    assert_eq!(killed, clean);
+}
+
+#[test]
+fn map_reduce_survives_a_kill_with_retry() {
+    let m = marker("mr");
+    let total = with_plan(PlanSpec::multicore(2), || {
+        let env = Env::new();
+        let xs: Vec<Value> = (0..10i64).map(Value::I64).collect();
+        let body = Expr::seq(vec![
+            Expr::if_else(
+                Expr::prim(PrimOp::Eq, vec![Expr::var("x"), Expr::lit(3i64)]),
+                Expr::chaos_kill_once(&m),
+                Expr::lit(0i64),
+            ),
+            Expr::mul(Expr::var("x"), Expr::var("x")),
+        ]);
+        future_map_reduce(
+            &xs,
+            "x",
+            &body,
+            &env,
+            &LapplyOpts::new()
+                .chunking(Chunking::ChunkSize(3))
+                .retry(RetryPolicy::idempotent(4).with_backoff(Duration::from_millis(1), 2.0)),
+            Value::I64(0),
+            |acc, v| match (acc, v) {
+                (Value::I64(a), Value::I64(b)) => Ok(Value::I64(a + b)),
+                other => panic!("unexpected fold inputs: {other:?}"),
+            },
+        )
+        .unwrap()
+    });
+    let _ = std::fs::remove_file(&m);
+    let want: i64 = (0..10).map(|i| i * i).sum();
+    assert_eq!(total, Value::I64(want));
+}
+
+#[test]
+fn restart_still_works_for_supervised_futures() {
+    // restart() (the manual recovery path) composes with supervision.
+    with_plan(PlanSpec::multiprocess(1), || {
+        let mut env = Env::new();
+        env.insert("x", 21i64);
+        let f = future_with(
+            Expr::mul(Expr::var("x"), Expr::lit(2i64)),
+            &env,
+            FutureOpts::new().restartable().retry(RetryPolicy::idempotent(2)),
+        )
+        .unwrap();
+        f.cancel();
+        assert!(f.value().is_err(), "cancelled run fails (cancel disarms retry)");
+        f.restart().unwrap();
+        assert_eq!(f.value().unwrap(), Value::I64(42));
+    });
+}

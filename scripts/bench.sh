@@ -1,8 +1,8 @@
 #!/usr/bin/env bash
-# Run the perf-trajectory benches (E1 overhead, E3 chunking, E11 resolve)
-# and write machine-readable BENCH_overhead.json / BENCH_chunking.json /
-# BENCH_resolve.json at the repo root, so every PR can diff perf against
-# the previous one.
+# Run the perf-trajectory benches (E1 overhead, E3 chunking, E11 resolve,
+# E12 recovery) and write machine-readable BENCH_overhead.json /
+# BENCH_chunking.json / BENCH_resolve.json / BENCH_recovery.json at the
+# repo root, so every PR can diff perf against the previous one.
 #
 # Usage:
 #   scripts/bench.sh           # smoke mode (reduced iterations; CI default)
@@ -27,7 +27,8 @@ cargo build --release --manifest-path rust/Cargo.toml
 cargo bench --manifest-path rust/Cargo.toml --bench overhead
 cargo bench --manifest-path rust/Cargo.toml --bench chunking
 cargo bench --manifest-path rust/Cargo.toml --bench resolve
+cargo bench --manifest-path rust/Cargo.toml --bench recovery
 
 echo
 echo "== bench artifacts =="
-ls -l BENCH_overhead.json BENCH_chunking.json BENCH_resolve.json
+ls -l BENCH_overhead.json BENCH_chunking.json BENCH_resolve.json BENCH_recovery.json
