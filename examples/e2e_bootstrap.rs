@@ -19,7 +19,6 @@
 
 use std::time::Instant;
 
-use rustures::api::future::reset_session_counter;
 use rustures::prelude::*;
 
 const N: usize = 4096;
@@ -46,8 +45,9 @@ fn percentile(sorted: &[f64], p: f64) -> f64 {
     sorted[idx]
 }
 
-fn run_bootstrap(seed: u64) -> (Vec<f64>, Vec<f64>) {
-    reset_session_counter();
+fn run_bootstrap(session: &Session, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    // Per-session counters: a fresh counter per run, no global reset.
+    session.reset_counter();
     let mut env = Env::new();
     env.insert("xy", synth_data(7));
 
@@ -69,14 +69,15 @@ fn run_bootstrap(seed: u64) -> (Vec<f64>, Vec<f64>) {
     ]);
 
     let is: Vec<Value> = (0..REPLICATES as i64).map(Value::I64).collect();
-    let fits = future_lapply(
-        &is,
-        "i",
-        &body,
-        &env,
-        &LapplyOpts::new().seed(seed).chunking(Chunking::PerWorker),
-    )
-    .unwrap();
+    let fits = session
+        .lapply(
+            &is,
+            "i",
+            &body,
+            &env,
+            &LapplyOpts::new().seed(seed).chunking(Chunking::PerWorker),
+        )
+        .unwrap();
 
     let mut slopes: Vec<f64> = Vec::with_capacity(REPLICATES);
     let mut intercepts: Vec<f64> = Vec::with_capacity(REPLICATES);
@@ -102,10 +103,10 @@ fn main() {
     );
     println!("replicates: {REPLICATES} on plan(multisession, workers = {WORKERS})\n");
 
-    plan(PlanSpec::multiprocess(WORKERS));
+    let session = Session::with_plan(PlanSpec::multiprocess(WORKERS));
 
     let t0 = Instant::now();
-    let (slopes, intercepts) = run_bootstrap(20240710);
+    let (slopes, intercepts) = run_bootstrap(&session, 20240710);
     let wall = t0.elapsed();
 
     let mid = |v: &[f64]| percentile(v, 0.5);
@@ -123,13 +124,13 @@ fn main() {
         "slope CI missed the truth"
     );
 
-    // Reproducibility: same seed, same backend or another worker count —
-    // identical bootstrap distribution.
-    plan(PlanSpec::multiprocess(2));
-    let (slopes2, _) = run_bootstrap(20240710);
+    // Reproducibility: same seed, another session with another worker
+    // count — identical bootstrap distribution.
+    session.plan(PlanSpec::multiprocess(2));
+    let (slopes2, _) = run_bootstrap(&session, 20240710);
     assert_eq!(slopes, slopes2, "bootstrap not reproducible across worker counts");
     println!("reproducibility: identical CI with 2 workers and seed fixed ✓");
 
-    plan(PlanSpec::sequential());
+    session.close();
     println!("\ne2e_bootstrap OK");
 }

@@ -12,15 +12,15 @@
 
 use std::fmt::Write as _;
 
-use rustures::api::future::reset_session_counter;
 use rustures::prelude::*;
 
 const WORKERS: usize = 4;
 const TASKS: usize = 10;
 
 fn main() {
-    plan(PlanSpec::multiprocess(WORKERS));
-    reset_session_counter();
+    // A dedicated session owns the plan; its counter starts at 0, so no
+    // global reset is needed.
+    let session = Session::with_plan(PlanSpec::multiprocess(WORKERS));
 
     let have_kernels = rustures::runtime::global().is_some();
     let mut env = Env::new();
@@ -45,11 +45,11 @@ fn main() {
     // PJRT runtime load + artifact compile; Figure 1 traces steady state.
     if have_kernels {
         let warm: Vec<Future> =
-            (0..WORKERS).map(|_| future(payload.clone(), &env).unwrap()).collect();
+            (0..WORKERS).map(|_| session.future(payload.clone(), &env).unwrap()).collect();
         for f in &warm {
             let _ = f.value();
         }
-        reset_session_counter();
+        session.reset_counter();
     }
 
     println!("Figure 1: {TASKS} slow_fcn futures on {WORKERS} multisession workers\n");
@@ -60,12 +60,13 @@ fn main() {
     // lapply(xs, function(x) future(slow_fcn(x))): create all futures...
     let futures: Vec<Future> = (0..TASKS)
         .map(|i| {
-            future_with(
-                payload.clone(),
-                &env,
-                FutureOpts::new().label(&format!("slow_fcn(xs[{i}])")),
-            )
-            .unwrap()
+            session
+                .future_with(
+                    payload.clone(),
+                    &env,
+                    FutureOpts::new().label(&format!("slow_fcn(xs[{i}])")),
+                )
+                .unwrap()
         })
         .collect();
     // ...then collect the values (relaying output) at the end.
@@ -126,7 +127,10 @@ fn main() {
     std::fs::write("figure1_trace.csv", csv).unwrap();
     println!("wrote figure1_trace.csv");
 
-    plan(PlanSpec::sequential());
+    // Supervision metrics, keyed per session (JSON schema v1).
+    println!("supervision: {}", rustures::metrics::supervision_json());
+
+    session.close();
 }
 
 fn now_ns() -> u64 {

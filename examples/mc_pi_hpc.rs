@@ -13,23 +13,27 @@
 
 use std::time::Instant;
 
-use rustures::api::future::reset_session_counter;
 use rustures::prelude::*;
 
 const BLOCK: usize = 8192; // samples per job (the AOT-compiled shape)
 const JOBS: usize = 24;
 
-fn estimate_pi() -> (f64, std::time::Duration) {
-    reset_session_counter();
+/// One estimation run inside its own `Session` — the plan is the only
+/// thing that changes between runs (the paper's headline property), and a
+/// fresh session means a fresh future-creation counter (no reset needed).
+fn estimate_pi(spec: PlanSpec) -> (f64, std::time::Duration) {
+    let session = Session::with_plan(spec);
     // One job: draw u ~ f32[8192, 2] from the job's own RNG stream and
     // count in-circle hits on the device.
     let body = Expr::call("mc_pi_block", vec![Expr::runif_shaped(vec![BLOCK, 2])]);
 
     let is: Vec<Value> = (0..JOBS as i64).map(Value::I64).collect();
     let t0 = Instant::now();
-    let estimates =
-        future_lapply(&is, "i", &body, &Env::new(), &LapplyOpts::new().seed(3141592)).unwrap();
+    let estimates = session
+        .lapply(&is, "i", &body, &Env::new(), &LapplyOpts::new().seed(3141592))
+        .unwrap();
     let wall = t0.elapsed();
+    session.close();
 
     let mean: f64 =
         estimates.iter().map(|v| v.as_f64().unwrap()).sum::<f64>() / estimates.len() as f64;
@@ -48,17 +52,19 @@ fn main() {
     );
 
     // 1. The HPC way: every future is a scheduler job.
-    plan(PlanSpec::Batch { workers: 4, submit_latency_ms: 10, poll_interval_ms: 2 });
-    let (pi_batch, wall_batch) = estimate_pi();
+    let (pi_batch, wall_batch) = estimate_pi(PlanSpec::Batch {
+        workers: 4,
+        submit_latency_ms: 10,
+        poll_interval_ms: 2,
+    });
     println!("batchtools (4 nodes, 10ms submit latency):");
     println!(
         "  π ≈ {pi_batch:.5}  (err {:+.5})  wall {wall_batch:?}",
         pi_batch - std::f64::consts::PI
     );
 
-    // 2. Same code, local multisession — only plan() changed.
-    plan(PlanSpec::multiprocess(4));
-    let (pi_ms, wall_ms) = estimate_pi();
+    // 2. Same code, local multisession — only the session's plan changed.
+    let (pi_ms, wall_ms) = estimate_pi(PlanSpec::multiprocess(4));
     println!("multisession (4 workers):");
     println!(
         "  π ≈ {pi_ms:.5}  (err {:+.5})  wall {wall_ms:?}",
@@ -77,6 +83,5 @@ fn main() {
 
     assert!((pi_batch - std::f64::consts::PI).abs() < 0.02, "π estimate off: {pi_batch}");
 
-    plan(PlanSpec::sequential());
     println!("\nmc_pi_hpc OK");
 }

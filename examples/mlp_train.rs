@@ -33,7 +33,7 @@ fn main() {
     }
 
     println!("== MLP training via futures: {STEPS} steps of mlp_step (d={DIM}) ==\n");
-    plan(PlanSpec::multiprocess(2));
+    let session = Session::with_plan(PlanSpec::multiprocess(2));
 
     // Synthetic regression task y = tanh(x W*) + noise.
     let rng = RngStream::from_seed(17);
@@ -67,7 +67,7 @@ fn main() {
     for step in 0..STEPS {
         // One SGD step as a future: state travels as captured globals
         // (serialized to the worker), updated params come back.
-        let f = future(step_expr.clone(), &env).unwrap();
+        let f = session.future(step_expr.clone(), &env).unwrap();
         let out = f.value().unwrap();
         let parts = out.as_list().unwrap();
         let loss = parts[0].as_f64().unwrap();
@@ -100,6 +100,6 @@ fn main() {
     std::fs::write("mlp_loss.csv", csv).unwrap();
     println!("wrote mlp_loss.csv");
 
-    plan(PlanSpec::sequential());
+    session.close();
     println!("\nmlp_train OK");
 }

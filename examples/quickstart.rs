@@ -3,8 +3,9 @@
 //! Run: `cargo run --release --example quickstart`
 //!
 //! Covers: the three atomic constructs, creation-time globals capture,
-//! plan() switching (the end-user's knob), future assignments + listenv,
-//! error relay, and a parallel map with load balancing.
+//! plan() switching (the end-user's knob) via first-class `Session`
+//! contexts, future assignments + listenv, error relay, a parallel map
+//! with load balancing, and two concurrent sessions in one process.
 
 use rustures::api::future::values;
 use rustures::api::promise::FuturePromise;
@@ -13,54 +14,61 @@ use rustures::prelude::*;
 fn main() {
     // ----------------------------------------------------------------
     // 1. The assignment decoupled:  f <- future(expr);  v <- value(f)
+    //    (a Session owns the plan; free functions target the current one)
     // ----------------------------------------------------------------
-    plan(PlanSpec::sequential());
+    let session = Session::with_plan(PlanSpec::sequential());
     let mut env = Env::new();
     env.insert("x", 1.0);
 
-    let f = future(Expr::mul(Expr::var("x"), Expr::lit(100.0)), &env).unwrap();
+    let f = session.future(Expr::mul(Expr::var("x"), Expr::lit(100.0)), &env).unwrap();
     env.insert("x", 2.0); // reassigned after creation...
     let v = f.value().unwrap();
     println!("1. future(x * 100) with x=1 at creation, x=2 at collect → {v}");
     assert_eq!(v, Value::F64(100.0)); // ...the future saw x = 1
 
     // ----------------------------------------------------------------
-    // 2. The end-user picks the backend: plan(multisession)
+    // 2. The end-user picks the backend: session.plan(multisession)
     // ----------------------------------------------------------------
-    plan(PlanSpec::multiprocess(2));
-    println!("2. plan(multisession, workers = 2)");
+    session.plan(PlanSpec::multiprocess(2));
+    println!("2. session.plan(multisession, workers = 2)");
 
     // Three futures, two workers: the third create blocks until a worker
-    // frees (the paper's blocking example).
+    // frees (the paper's blocking example).  session.scope(...) makes this
+    // session the target of the free functions inside.
     let env2 = Env::new();
-    let futures: Vec<Future> = (1..=3)
-        .map(|i| {
-            future(
-                Expr::seq(vec![Expr::Spin { millis: 50 }, Expr::lit(i as i64)]),
-                &env2,
-            )
-            .unwrap()
-        })
-        .collect();
-    let vs = values(&futures).unwrap();
+    let vs = session.scope(|_| {
+        let futures: Vec<Future> = (1..=3)
+            .map(|i| {
+                future(
+                    Expr::seq(vec![Expr::Spin { millis: 50 }, Expr::lit(i as i64)]),
+                    &env2,
+                )
+                .unwrap()
+            })
+            .collect();
+        values(&futures).unwrap()
+    });
     println!("   three futures on two workers → {vs:?}");
 
     // ----------------------------------------------------------------
     // 3. v %<-% expr  (future assignment) and listenv
     // ----------------------------------------------------------------
-    let p = FuturePromise::assign(Expr::add(Expr::lit(40.0), Expr::lit(2.0)), &env2).unwrap();
-    println!("3. v %<-% (40 + 2) → {}", p.get().unwrap());
+    session.scope(|_| {
+        let p =
+            FuturePromise::assign(Expr::add(Expr::lit(40.0), Expr::lit(2.0)), &env2).unwrap();
+        println!("3. v %<-% (40 + 2) → {}", p.get().unwrap());
 
-    let mut lv = ListEnv::new();
-    for i in 0..4usize {
-        lv.assign(i, Expr::mul(Expr::lit(i as i64), Expr::lit(i as i64)), &env2).unwrap();
-    }
-    println!("   listenv squares → {:?}", lv.as_list().unwrap());
+        let mut lv = ListEnv::new();
+        for i in 0..4usize {
+            lv.assign(i, Expr::mul(Expr::lit(i as i64), Expr::lit(i as i64)), &env2).unwrap();
+        }
+        println!("   listenv squares → {:?}", lv.as_list().unwrap());
+    });
 
     // ----------------------------------------------------------------
     // 4. Errors relay as-is; tryCatch-style handling
     // ----------------------------------------------------------------
-    let bad = future(Expr::stop(Expr::lit("non-numeric argument")), &env2).unwrap();
+    let bad = session.future(Expr::stop(Expr::lit("non-numeric argument")), &env2).unwrap();
     match bad.value() {
         Err(FutureError::Eval(e)) => println!("4. relayed error: \"{e}\""),
         other => panic!("unexpected: {other:?}"),
@@ -71,28 +79,42 @@ fn main() {
     // ----------------------------------------------------------------
     let xs: Vec<Value> = (0..10i64).map(Value::I64).collect();
     let body = Expr::add(Expr::var("x"), Expr::runif(1));
-    let out = future_lapply(&xs, "x", &body, &env2, &LapplyOpts::new().seed(42)).unwrap();
+    let out = session.lapply(&xs, "x", &body, &env2, &LapplyOpts::new().seed(42)).unwrap();
     println!("5. future_lapply(xs, x + runif(1)), seeded → {} results", out.len());
     // Rerun: identical (reproducible regardless of backend/workers).
-    let out2 = future_lapply(&xs, "x", &body, &env2, &LapplyOpts::new().seed(42)).unwrap();
+    let out2 = session.lapply(&xs, "x", &body, &env2, &LapplyOpts::new().seed(42)).unwrap();
     assert_eq!(out, out2);
     println!("   rerun is bit-identical ✓");
 
     // ----------------------------------------------------------------
     // 6. future_either — first resolved wins
     // ----------------------------------------------------------------
-    plan(PlanSpec::multicore(3));
-    let winner = future_either(
-        vec![
-            Expr::seq(vec![Expr::Spin { millis: 300 }, Expr::lit("shell sort")]),
-            Expr::seq(vec![Expr::Spin { millis: 10 }, Expr::lit("quick sort")]),
-            Expr::seq(vec![Expr::Spin { millis: 300 }, Expr::lit("radix sort")]),
-        ],
-        &env2,
-    )
-    .unwrap();
+    session.plan(PlanSpec::multicore(3));
+    let winner = session.scope(|_| {
+        future_either(
+            vec![
+                Expr::seq(vec![Expr::Spin { millis: 300 }, Expr::lit("shell sort")]),
+                Expr::seq(vec![Expr::Spin { millis: 10 }, Expr::lit("quick sort")]),
+                Expr::seq(vec![Expr::Spin { millis: 300 }, Expr::lit("radix sort")]),
+            ],
+            &env2,
+        )
+        .unwrap()
+    });
     println!("6. future_either(3 sorts) → winner: {winner}");
 
-    plan(PlanSpec::sequential());
+    // ----------------------------------------------------------------
+    // 7. Two tenants, one process: independent sessions, independent plans
+    // ----------------------------------------------------------------
+    let tenant_a = Session::with_plan(PlanSpec::multicore(2));
+    let tenant_b = Session::with_plan(PlanSpec::multiprocess(2));
+    let wa = tenant_a.lapply(&xs, "x", &body, &env2, &LapplyOpts::new().seed(42)).unwrap();
+    let wb = tenant_b.lapply(&xs, "x", &body, &env2, &LapplyOpts::new().seed(42)).unwrap();
+    assert_eq!(wa, wb, "same seed, different backends, bit-identical");
+    println!("7. two concurrent sessions (multicore vs multisession) agree bit-identically ✓");
+    tenant_a.close();
+    tenant_b.close();
+
+    session.close();
     println!("\nquickstart OK");
 }

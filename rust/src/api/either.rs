@@ -88,4 +88,24 @@ mod tests {
             assert!(future_either(vec![], &env).is_err());
         });
     }
+
+    #[test]
+    fn race_runs_on_the_scoped_session() {
+        // The session-first contract: inside session.scope, the race uses
+        // that session's plan — no global plan mutation required.
+        let s = crate::api::session::Session::with_plan(PlanSpec::multicore(2));
+        let env = Env::new();
+        let v = s.scope(|_| {
+            future_either(
+                vec![
+                    Expr::seq(vec![Expr::Spin { millis: 200 }, Expr::lit("slow")]),
+                    Expr::lit("fast"),
+                ],
+                &env,
+            )
+            .unwrap()
+        });
+        assert_eq!(v, Value::Str("fast".into()));
+        s.close();
+    }
 }

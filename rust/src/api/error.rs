@@ -76,6 +76,12 @@ pub enum FutureError {
     /// `suspend()`/cancellation is "Future work" in the paper).
     Cancelled,
 
+    /// The future's owning [`crate::api::session::Session`] was closed
+    /// before the future resolved.  Latched terminally: every later
+    /// `resolved()`/`value()` replays the same error — a closed session's
+    /// backends are gone, so the future can never complete.
+    SessionClosed { session: u64 },
+
     /// A supervised future was resubmitted after infrastructure loss and
     /// still failed: `attempts` total attempts were made (including the
     /// original submission); `last` is the final attempt's failure.
@@ -107,6 +113,12 @@ impl fmt::Display for FutureError {
             FutureError::InvalidPlan(m) => write!(f, "FutureError: invalid plan: {m}"),
             FutureError::Runtime(m) => write!(f, "FutureError: runtime: {m}"),
             FutureError::Cancelled => write!(f, "FutureError: future was cancelled"),
+            FutureError::SessionClosed { session } => {
+                write!(
+                    f,
+                    "FutureError: session {session} was closed before the future resolved"
+                )
+            }
             FutureError::Retried { attempts, last } => {
                 write!(f, "FutureError: failed after {attempts} attempts (retry exhausted): {last}")
             }
@@ -215,6 +227,14 @@ mod tests {
             last: Box::new(FutureError::InvalidPlan("gone".into())),
         };
         assert!(!dead_end.is_recoverable());
+    }
+
+    #[test]
+    fn session_closed_is_terminal_infrastructure() {
+        let e = FutureError::SessionClosed { session: 3 };
+        assert!(!e.is_eval());
+        assert!(!e.is_recoverable(), "a closed session cannot host a relaunch");
+        assert!(e.to_string().contains("session 3"));
     }
 
     #[test]

@@ -23,7 +23,6 @@
 //! subsystem): `future()` then enqueues and returns immediately, and the
 //! paper's block-on-create behaviour remains the default.
 
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, SystemTime, UNIX_EPOCH};
 
@@ -32,23 +31,22 @@ use crate::api::env::Env;
 use crate::api::error::{EvalError, FutureError};
 use crate::api::expr::Expr;
 use crate::api::globals::{identify_globals, GlobalsSpec};
-use crate::api::plan::{backend_for_current_depth, current_depth, current_plan_retry};
+use crate::api::plan::current_depth;
+use crate::api::session::{self, Session};
 use crate::api::value::Value;
 use crate::backend::dispatch::CompletionWaker;
 use crate::backend::supervisor::{supervise, RetryPolicy};
 use crate::backend::{Backend, TaskHandle};
 use crate::ipc::{TaskOpts, TaskOutcome, TaskResult, TaskSpec};
-use crate::metrics::{record_event, FutureTrace};
-use crate::util::uuid_v4;
+use crate::metrics::{record_event, CounterScope, FutureTrace};
 
-/// Session-global future-creation counter: the deterministic RNG stream
+/// Restart the *current session's* future-creation counter (new "session
+/// run"; benches/tests).  The counter drives deterministic RNG stream
 /// index assignment ("fully reproducible regardless of backend and number
-/// of workers").
-static CREATION_COUNTER: AtomicU64 = AtomicU64::new(0);
-
-/// Restart the creation counter (new "session"; benches/tests).
+/// of workers") and is per-[`Session`] — two concurrent sessions assign
+/// streams independently.
 pub fn reset_session_counter() {
-    CREATION_COUNTER.store(0, Ordering::SeqCst);
+    session::current().reset_counter();
 }
 
 fn now_ns() -> u64 {
@@ -171,20 +169,25 @@ pub struct Future {
     /// creation) — applied on every launch path, including lazy launch
     /// and [`Future::restart`].
     retry: Option<RetryPolicy>,
+    /// The owning session: lazy launches and restarts go back to it, and a
+    /// closed session latches unresolved futures into `SessionClosed`.
+    session: Session,
     pub trace: Arc<FutureTrace>,
 }
 
 /// Launch `task` on `backend`, supervised when an armed retry policy is in
 /// effect — THE single launch choke point shared by eager creation, lazy
 /// launch, and restart, so no path can silently lose supervision.
+/// Retries record against the owning session's counter `scope`.
 fn launch_on(
     backend: &Arc<dyn Backend>,
     task: TaskSpec,
     retry: Option<&RetryPolicy>,
     queued: bool,
+    scope: &CounterScope,
 ) -> Result<Box<dyn TaskHandle>, FutureError> {
     match retry {
-        Some(p) if p.armed() => supervise(backend, task, p.clone(), queued),
+        Some(p) if p.armed() => supervise(backend, task, p.clone(), queued, scope.clone()),
         _ if queued => backend.launch_queued(task),
         _ => backend.launch(task),
     }
@@ -195,23 +198,32 @@ pub fn future(expr: Expr, env: &Env) -> Result<Future, FutureError> {
     future_with(expr, env, FutureOpts::new())
 }
 
-/// Create a future with explicit options.
+/// Create a future with explicit options, under the current
+/// [`Session`] (the innermost [`Session::scope`], else the default).
 pub fn future_with(expr: Expr, env: &Env, opts: FutureOpts) -> Result<Future, FutureError> {
-    let id = uuid_v4();
+    let session = session::current();
+    session.ensure_open()?;
+    let id = session.next_future_id();
     let created_ns = now_ns();
 
     // 1. Identify and snapshot globals (creation-time capture).
     let globals = identify_globals(&expr, env, &opts.globals)?;
 
-    // 2. Deterministic RNG stream index by creation order.
-    let ordinal = CREATION_COUNTER.fetch_add(1, Ordering::SeqCst);
+    // 2. Deterministic RNG stream index by creation order — per session,
+    //    so concurrent sessions assign streams independently.
+    let ordinal = session.next_ordinal();
     let stream_index = opts.stream_index.unwrap_or(ordinal);
 
-    // 3. Backend + nested topology for the current nesting depth.
+    // 3. Backend + serialized session context for the current depth.
     let depth = current_depth();
-    let (backend, nested_plan) = backend_for_current_depth()?;
+    let backend = session.backend_for_depth(depth)?;
+    let context = session.context_for_depth(depth);
 
     let warn_unseeded_rng = opts.seed.is_none() && expr.uses_rng();
+
+    // Per-future retry wins; otherwise inherit the session's plan-wide
+    // default (the same default the context ships to nested workers).
+    let retry = opts.retry.clone().or_else(|| context.retry.clone());
 
     let task = TaskSpec {
         id: id.clone(),
@@ -224,14 +236,19 @@ pub fn future_with(expr: Expr, env: &Env, opts: FutureOpts) -> Result<Future, Fu
             capture_conditions: opts.conditions,
             label: opts.label.clone(),
             depth,
-            nested_plan,
+            context,
         },
     };
 
-    let trace = Arc::new(FutureTrace::new(&id, opts.label.as_deref(), backend.name(), created_ns));
-
-    // Per-future retry wins; otherwise inherit the plan-wide default.
-    let retry = opts.retry.clone().or_else(current_plan_retry);
+    let trace = Arc::new(FutureTrace::new(
+        &id,
+        opts.label.as_deref(),
+        backend.name(),
+        // Attribute to the origin session (== id except on worker-side
+        // derived sessions, where the originating session owns the rows).
+        session.origin_id(),
+        created_ns,
+    ));
 
     let restart_spec = if opts.restartable { Some(task.clone()) } else { None };
     let state = if opts.lazy {
@@ -239,7 +256,8 @@ pub fn future_with(expr: Expr, env: &Env, opts: FutureOpts) -> Result<Future, Fu
     } else {
         let supports_immediate = backend.supports_immediate();
         record_event(&trace, "launch");
-        let handle = launch_on(&backend, task, retry.as_ref(), opts.queued)?;
+        let handle =
+            launch_on(&backend, task, retry.as_ref(), opts.queued, &session.metrics_scope())?;
         State::Running { handle, supports_immediate }
     };
 
@@ -251,6 +269,7 @@ pub fn future_with(expr: Expr, env: &Env, opts: FutureOpts) -> Result<Future, Fu
         relayed: Mutex::new(false),
         restart_spec: Mutex::new(restart_spec),
         retry,
+        session,
         trace,
     })
 }
@@ -280,17 +299,79 @@ impl Future {
         self.label.as_deref()
     }
 
+    /// Id of the [`Session`] this future attributes to (the originating
+    /// session for futures created on worker-side derived sessions).
+    pub fn session_id(&self) -> u64 {
+        self.session.origin_id()
+    }
+
+    /// Latch `SessionClosed` into an unresolvable future of a closed
+    /// session.  Returns the error to surface, or `None` when the future
+    /// already reached — or can still reach — a terminal state: a result
+    /// the worker finished before the close is promoted and survives
+    /// (close() never discards computed values), only futures that can no
+    /// longer complete latch the error.
+    fn latch_if_session_closed(&self, state: &mut State) -> Option<FutureError> {
+        if !self.session.is_closed() {
+            return None;
+        }
+        let closed_err = || FutureError::SessionClosed { session: self.session.origin_id() };
+        match state {
+            State::Done(_) | State::Failed(_) => None,
+            State::Running { handle, .. } => {
+                if handle.is_resolved() {
+                    // An outcome the backend parked before teardown is
+                    // collected and survives — a VALUE as a value, a
+                    // parked infrastructure failure (worker crashed
+                    // pre-close, torn frame, or the seat close() itself
+                    // killed) with its real provenance intact.  Such an
+                    // error may read as recoverable (WorkerDied/Channel),
+                    // but any relaunch attempt in this session surfaces
+                    // SessionClosed at creation, so nothing misleads.
+                    match handle.wait() {
+                        Ok(r) => {
+                            record_event(&self.trace, "resolved");
+                            *state = State::Done(Box::new(r));
+                            None
+                        }
+                        Err(e) => {
+                            *state = State::Failed(e.clone());
+                            Some(e)
+                        }
+                    }
+                } else {
+                    let e = closed_err();
+                    *state = State::Failed(e.clone());
+                    Some(e)
+                }
+            }
+            State::Lazy(_) => {
+                let e = closed_err();
+                *state = State::Failed(e.clone());
+                Some(e)
+            }
+        }
+    }
+
     /// Launch a lazy future now (no-op otherwise).
     pub fn launch(&self) -> Result<(), FutureError> {
         let mut state = self.state.lock().unwrap();
-        if let State::Lazy(_) = &*state {
+        if let Some(e) = self.latch_if_session_closed(&mut state) {
+            return Err(e);
+        }
+        if let State::Lazy(task) = &*state {
             // A failed launch attempt is TERMINAL for this future: the real
             // error (kind intact) is latched into State::Failed, so
             // resolved(), value(), and result() all replay the same failure
             // no matter which is called first — mirroring eager futures,
             // which error at creation.  Retry is the restart() /
             // FutureOpts::restartable path, not silent relaunching.
-            let (backend, _) = match backend_for_current_depth() {
+            //
+            // The launch goes back to the OWNING session at the depth the
+            // spec recorded — a lazy future poked from another thread or
+            // scope still resolves on its own session's plan.
+            let depth = task.opts.depth;
+            let backend = match self.session.backend_for_depth(depth) {
                 Ok(b) => b,
                 Err(e) => {
                     *state = State::Failed(e.clone());
@@ -304,7 +385,13 @@ impl Future {
             };
             let supports_immediate = backend.supports_immediate();
             record_event(&self.trace, "launch");
-            match launch_on(&backend, *task, self.retry.as_ref(), false) {
+            match launch_on(
+                &backend,
+                *task,
+                self.retry.as_ref(),
+                false,
+                &self.session.metrics_scope(),
+            ) {
                 Ok(handle) => *state = State::Running { handle, supports_immediate },
                 Err(e) => {
                     *state = State::Failed(e.clone());
@@ -320,7 +407,10 @@ impl Future {
     /// use resolved() ... or value()").
     pub fn resolved(&self) -> bool {
         {
-            let state = self.state.lock().unwrap();
+            let mut state = self.state.lock().unwrap();
+            if self.latch_if_session_closed(&mut state).is_some() {
+                return true; // resolved, to a SessionClosed failure
+            }
             match &*state {
                 State::Done(_) | State::Failed(_) => return true,
                 State::Lazy(_) => {}
@@ -376,6 +466,9 @@ impl Future {
             self.launch()?;
         }
         let mut state = self.state.lock().unwrap();
+        if let Some(e) = self.latch_if_session_closed(&mut state) {
+            return Err(e);
+        }
         match &mut *state {
             State::Done(r) => Ok((**r).clone()),
             State::Failed(e) => Err(e.clone()),
@@ -462,10 +555,12 @@ impl Future {
                 handle.cancel();
             }
         }
-        let (backend, _) = backend_for_current_depth()?;
+        // Relaunch on the OWNING session at the recorded depth.
+        let backend = self.session.backend_for_depth(spec.opts.depth)?;
         let supports_immediate = backend.supports_immediate();
         record_event(&self.trace, "restart");
-        let handle = launch_on(&backend, spec, self.retry.as_ref(), false)?;
+        let handle =
+            launch_on(&backend, spec, self.retry.as_ref(), false, &self.session.metrics_scope())?;
         *self.state.lock().unwrap() = State::Running { handle, supports_immediate };
         *self.relayed.lock().unwrap() = false;
         Ok(())
@@ -494,6 +589,9 @@ impl Future {
             let _ = self.launch();
         }
         let mut state = self.state.lock().unwrap();
+        if self.latch_if_session_closed(&mut state).is_some() {
+            return Subscribed::AlreadyResolved;
+        }
         match &mut *state {
             State::Done(_) | State::Failed(_) => Subscribed::AlreadyResolved,
             State::Running { handle, .. } => {

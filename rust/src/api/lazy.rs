@@ -107,6 +107,26 @@ mod tests {
     }
 
     #[test]
+    fn merged_lazy_futures_launch_on_their_owning_session() {
+        // A lazy merged future created under session S must resolve on S's
+        // plan even when poked outside the scope (the Future carries its
+        // session handle).
+        let s = crate::api::session::Session::with_plan(PlanSpec::multicore(2));
+        let env = Env::new();
+        let specs: Vec<LazySpec> = (0..4).map(|i| LazySpec::new(Expr::lit(i as i64))).collect();
+        let merged = s
+            .scope(|_| merge_futures(&specs, &env, FutureOpts::new().lazy()))
+            .unwrap();
+        // Outside the scope now: launch + collect still target session S.
+        assert_eq!(
+            merged.value().unwrap(),
+            Value::List((0..4).map(Value::I64).collect())
+        );
+        assert_eq!(merged.session_id(), s.id());
+        s.close();
+    }
+
+    #[test]
     fn per_element_streams_survive_merging() {
         with_plan(PlanSpec::sequential(), || {
             let env = Env::new();

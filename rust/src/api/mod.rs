@@ -16,4 +16,5 @@ pub mod lazy;
 pub mod plan;
 pub mod promise;
 pub mod rng;
+pub mod session;
 pub mod value;

@@ -7,14 +7,22 @@
 //! protection against nested parallelism: any nesting level not explicitly
 //! configured runs **sequentially**, so two future-using layers use N cores,
 //! not N².
+//!
+//! Since the session-first redesign the plan state lives on a first-class
+//! [`crate::api::session::Session`]; every free function here is a thin
+//! wrapper over the *current* session (the innermost
+//! [`crate::api::session::Session::scope`] on this thread, else the process
+//! default) — existing call sites compile and behave unchanged, while
+//! multiple sessions with different plans can coexist in one process.
 
 use std::cell::Cell;
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, Mutex};
 
 use crate::api::error::FutureError;
+use crate::api::session;
 use crate::backend::supervisor::RetryPolicy;
-use crate::backend::{make_backend, Backend};
+use crate::backend::Backend;
 use crate::util::available_cores;
 
 /// A declarative backend specification — serializable, so nested topologies
@@ -128,22 +136,10 @@ impl PlanSpec {
 /// contract — anything conforming to the Backend trait plugs in).
 pub type BackendFactory = Arc<dyn Fn(usize) -> Arc<dyn Backend> + Send + Sync>;
 
-struct PlanState {
-    topology: Vec<PlanSpec>,
-    /// Plan-wide retry default: every future created under this plan is
-    /// supervised with this policy unless its own
-    /// [`crate::api::future::FutureOpts::retry`] overrides it.  Session
-    /// local — not shipped to nested workers (a worker's own plan decides
-    /// its retry posture).
-    retry: Option<RetryPolicy>,
-    /// Lazily-instantiated backend per nesting depth.
-    backends: Mutex<HashMap<u32, Arc<dyn Backend>>>,
-}
-
-static PLAN: RwLock<Option<Arc<PlanState>>> = RwLock::new(None);
 static REGISTRY: Mutex<Option<HashMap<String, BackendFactory>>> = Mutex::new(None);
-/// Serializes `with_plan` sections (tests run concurrently but the plan is
-/// process-global, exactly like R's `plan()`).
+/// Serializes `with_plan` sections (tests run concurrently but the
+/// *default* session is process-shared, exactly like R's `plan()`; explicit
+/// [`crate::api::session::Session`]s don't need this lock).
 static PLAN_USER_LOCK: Mutex<()> = Mutex::new(());
 
 thread_local! {
@@ -161,60 +157,44 @@ pub(crate) fn lookup_backend_factory(name: &str) -> Option<BackendFactory> {
     REGISTRY.lock().unwrap().as_ref().and_then(|m| m.get(name).cloned())
 }
 
-/// Set the plan: a single backend for all futures (`plan(multisession)`).
+/// Set the current session's plan: a single backend for all futures
+/// (`plan(multisession)`).
 pub fn plan(spec: PlanSpec) {
-    plan_topology(vec![spec]);
+    session::current().plan(spec);
 }
 
 /// `plan(spec)` with a plan-wide [`RetryPolicy`]: every future created
 /// under this plan is supervised (resubmitted to a healthy worker on
 /// infrastructure loss) unless its own `FutureOpts::retry` overrides it.
 pub fn plan_with_retry(spec: PlanSpec, retry: RetryPolicy) {
-    plan_topology_with_retry(vec![spec], Some(retry));
+    session::current().plan_with_retry(spec, retry);
 }
 
-/// Set a nested topology (`plan(list(tweak(multisession, 2), ...))`).
-/// Shuts down the previous plan's backends.
+/// Set a nested topology (`plan(list(tweak(multisession, 2), ...))`) on the
+/// current session.  Shuts down the previous plan's backends.
 pub fn plan_topology(topology: Vec<PlanSpec>) {
-    plan_topology_with_retry(topology, None);
+    session::current().plan_topology(topology);
 }
 
 /// [`plan_topology`] with an optional plan-wide retry default.
 pub fn plan_topology_with_retry(topology: Vec<PlanSpec>, retry: Option<RetryPolicy>) {
-    let new_state =
-        Arc::new(PlanState { topology, retry, backends: Mutex::new(HashMap::new()) });
-    let old = {
-        let mut guard = PLAN.write().unwrap();
-        std::mem::replace(&mut *guard, Some(new_state))
-    };
-    if let Some(old) = old {
-        shutdown_state(&old);
-    }
+    session::current().plan_topology_with_retry(topology, retry);
 }
 
-/// The current plan-wide retry default, if any.
+/// The current session's plan-wide retry default, if any.
 pub fn current_plan_retry() -> Option<RetryPolicy> {
-    PLAN.read().unwrap().as_ref().and_then(|s| s.retry.clone())
+    session::current().retry()
 }
 
-/// The current topology (defaults to `[sequential]`).
+/// The current session's topology (defaults to `[sequential]`).
 pub fn current_topology() -> Vec<PlanSpec> {
-    PLAN.read()
-        .unwrap()
-        .as_ref()
-        .map(|s| s.topology.clone())
-        .unwrap_or_else(|| vec![PlanSpec::Sequential])
-}
-
-fn shutdown_state(state: &PlanState) {
-    let backends = std::mem::take(&mut *state.backends.lock().unwrap());
-    for (_, b) in backends {
-        b.shutdown();
-    }
+    session::current().topology()
 }
 
 /// Run `f` under `spec`, restoring `plan(sequential)` afterwards.  Takes a
-/// process-wide user lock so concurrent tests don't fight over the plan.
+/// process-wide user lock so concurrent tests don't fight over the shared
+/// default session.  (Prefer an explicit [`crate::api::session::Session`]
+/// for new code — sessions don't need the lock.)
 pub fn with_plan<R>(spec: PlanSpec, f: impl FnOnce() -> R) -> R {
     with_plan_topology(vec![spec], f)
 }
@@ -260,32 +240,10 @@ pub fn at_depth<R>(d: u32, f: impl FnOnce() -> R) -> R {
 /// Depths beyond the configured topology get the implicit
 /// `plan(sequential)` — the nested-parallelism protection.
 pub fn backend_for_current_depth() -> Result<(Arc<dyn Backend>, Vec<PlanSpec>), FutureError> {
+    let s = session::current();
     let depth = current_depth();
-    let state = {
-        let guard = PLAN.read().unwrap();
-        match guard.as_ref() {
-            Some(s) => Arc::clone(s),
-            None => {
-                drop(guard);
-                plan(PlanSpec::Sequential);
-                PLAN.read().unwrap().as_ref().map(Arc::clone).unwrap()
-            }
-        }
-    };
-    let spec = state.topology.get(depth as usize).cloned().unwrap_or(PlanSpec::Sequential);
-    let nested: Vec<PlanSpec> =
-        state.topology.get(depth as usize + 1..).map(|s| s.to_vec()).unwrap_or_default();
-
-    let mut backends = state.backends.lock().unwrap();
-    let backend = match backends.get(&depth) {
-        Some(b) => Arc::clone(b),
-        None => {
-            let b = make_backend(&spec)?;
-            backends.insert(depth, Arc::clone(&b));
-            b
-        }
-    };
-    Ok((backend, nested))
+    let backend = s.backend_for_depth(depth)?;
+    Ok((backend, s.nested_plan_for_depth(depth)))
 }
 
 #[cfg(test)]
@@ -345,6 +303,19 @@ mod tests {
         with_plan(PlanSpec::sequential(), || {
             assert_eq!(current_plan_retry(), None, "retry must not leak across plans");
         });
+    }
+
+    #[test]
+    fn plan_free_functions_target_the_scoped_session() {
+        // The session-first contract: plan() inside a scope mutates that
+        // session, not the process default.
+        let s = crate::api::session::Session::new();
+        s.scope(|_| {
+            plan(PlanSpec::multicore(3));
+            assert_eq!(current_topology(), vec![PlanSpec::multicore(3)]);
+        });
+        assert_eq!(s.topology(), vec![PlanSpec::multicore(3)]);
+        s.close();
     }
 
     #[test]

@@ -145,6 +145,26 @@ mod tests {
     }
 
     #[test]
+    fn promise_from_closed_session_reports_session_closed() {
+        use crate::api::error::FutureError;
+        let s = crate::api::session::Session::with_plan(PlanSpec::multicore(1));
+        let env = Env::new();
+        // Lazy: never launched, so the close makes it unresolvable (an
+        // eagerly-launched promise whose worker finished would instead
+        // keep its computed value — close() never discards results).
+        let p = s
+            .scope(|_| {
+                FuturePromise::assign_with(Expr::lit(4i64), &env, FutureOpts::new().lazy())
+            })
+            .unwrap();
+        s.close();
+        match p.get() {
+            Err(FutureError::SessionClosed { .. }) => {}
+            other => panic!("expected SessionClosed, got {other:?}"),
+        }
+    }
+
+    #[test]
     fn listenv_collects_in_index_order() {
         with_plan(PlanSpec::multicore(2), || {
             let env = Env::new();

@@ -1,0 +1,907 @@
+//! First-class `Session` contexts — the session-first Future API.
+//!
+//! The paper's contract is "the end-user chooses the parallel backend while
+//! the developer focuses on what to parallelize".  Historically that choice
+//! lived in process-global state (`plan()`), which cannot express two
+//! tenants with different backends in one process and silently dropped
+//! plan-level retry defaults on nested workers.  A [`Session`] makes the
+//! execution context an explicit, cheaply-clonable value:
+//!
+//! * the **plan topology** and its lazily-instantiated backend cache,
+//! * the plan-wide [`RetryPolicy`] default,
+//! * the future-creation **counter** (deterministic RNG stream assignment —
+//!   now per session, so two concurrent sessions draw reproducible,
+//!   independent streams),
+//! * a per-session **supervision metrics scope**
+//!   ([`crate::metrics::CounterScope`]), and
+//! * a unique **session id** prefixed into every future id.
+//!
+//! The historical free functions (`plan`, `future`, `future_lapply`, ...)
+//! are thin wrappers over the *current* session — the innermost
+//! [`Session::scope`] on this thread, else the process-default session —
+//! so existing callers keep working unchanged:
+//!
+//! ```no_run
+//! use rustures::prelude::*;
+//!
+//! // Two tenants, one process, different backends:
+//! let a = Session::with_plan(PlanSpec::multicore(2));
+//! let b = Session::with_plan(PlanSpec::multiprocess(2));
+//! let env = Env::new();
+//! let fa = a.future(Expr::lit(1i64), &env).unwrap();
+//! let fb = b.future(Expr::lit(2i64), &env).unwrap();
+//! assert_eq!(fa.value().unwrap(), Value::I64(1));
+//! assert_eq!(fb.value().unwrap(), Value::I64(2));
+//! a.close();
+//! b.close();
+//! ```
+//!
+//! ## Context propagation to workers
+//!
+//! Every task ships a serialized [`SessionContext`] (wire protocol v4):
+//! the topology *tail* for nested futures, the session's retry default,
+//! and a counter base.  Workers — remote processes and in-process worker
+//! threads alike — evaluate under a **derived session** built from that
+//! context ([`scope_task_context`]), so a nested `plan()` on a worker
+//! inherits the parent session's retry posture and topology instead of
+//! falling back to process-local defaults (the PR 3 supervision gap).
+//! Derived sessions are cached per (origin session, context), so repeated
+//! tasks reuse nested backends instead of rebuilding them per task.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
+
+use crate::api::env::Env;
+use crate::api::error::FutureError;
+use crate::api::expr::Expr;
+use crate::api::plan::{at_depth, PlanSpec};
+use crate::api::value::Value;
+use crate::backend::supervisor::RetryPolicy;
+use crate::backend::{make_backend, Backend};
+use crate::ipc::SessionContext;
+use crate::metrics::{self, CounterScope, SupervisionCounters};
+use crate::util::uuid_v4;
+
+/// Session ids: 0 is the process-default session; explicit sessions and
+/// worker-derived sessions take fresh ids from here.
+static NEXT_SESSION_ID: AtomicU64 = AtomicU64::new(1);
+
+struct Core {
+    topology: Vec<PlanSpec>,
+    /// Plan-wide retry default: every future created under this session is
+    /// supervised with this policy unless its own
+    /// [`crate::api::future::FutureOpts::retry`] overrides it.  Shipped to
+    /// nested workers inside the [`SessionContext`].
+    retry: Option<RetryPolicy>,
+}
+
+struct Inner {
+    id: u64,
+    /// The session id used for *attribution*: equal to `id` for ordinary
+    /// sessions; for worker-side derived sessions it is the ORIGINATING
+    /// session's id, so nested contexts at any depth keep pointing at the
+    /// real owner (metrics, purge keying, shipped `SessionContext`).
+    origin: u64,
+    core: RwLock<Core>,
+    /// Lazily-instantiated backend per nesting depth.
+    backends: Mutex<HashMap<u32, Arc<dyn Backend>>>,
+    /// Future-creation counter (deterministic RNG stream index assignment).
+    counter: AtomicU64,
+    closed: AtomicBool,
+    /// Supervision metrics sink; pools built by this session capture it.
+    scope: CounterScope,
+}
+
+/// A first-class execution context for futures.  Cheap to clone (an `Arc`
+/// handle); safe to share across threads.  See the module docs.
+#[derive(Clone)]
+pub struct Session {
+    inner: Arc<Inner>,
+}
+
+impl std::fmt::Debug for Session {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Session")
+            .field("id", &self.inner.id)
+            .field("topology", &self.topology())
+            .field("closed", &self.is_closed())
+            .finish()
+    }
+}
+
+thread_local! {
+    /// Scope stack: [`Session::scope`] pushes; `current()` reads the top.
+    static STACK: RefCell<Vec<Session>> = const { RefCell::new(Vec::new()) };
+}
+
+struct ScopeGuard;
+
+impl Drop for ScopeGuard {
+    fn drop(&mut self) {
+        STACK.with(|s| {
+            s.borrow_mut().pop();
+        });
+    }
+}
+
+fn push_current(session: Session) -> ScopeGuard {
+    STACK.with(|s| s.borrow_mut().push(session));
+    ScopeGuard
+}
+
+static DEFAULT: OnceLock<Session> = OnceLock::new();
+
+/// Origin-session registry: id → weak handle, so worker-side context
+/// installs can tell a *retired* origin (closed, or every handle dropped)
+/// from one that merely lives in another process.  Entries are weak; dead
+/// ones are swept opportunistically on insert.
+static REGISTRY: Mutex<Option<HashMap<u64, std::sync::Weak<Inner>>>> = Mutex::new(None);
+
+fn register_origin(inner: &Arc<Inner>) {
+    let mut guard = REGISTRY.lock().unwrap();
+    let map = guard.get_or_insert_with(HashMap::new);
+    if map.len() > 32 {
+        map.retain(|_, w| w.strong_count() > 0);
+    }
+    map.insert(inner.id, Arc::downgrade(inner));
+}
+
+/// What this process knows about origin session `id`.
+enum Origin {
+    /// Never seen here: a context arriving in a worker process from a
+    /// remote coordinator.
+    Unknown,
+    /// Closed, or its last handle was dropped.
+    Retired,
+    /// Alive in this process.
+    Live(Session),
+}
+
+fn origin_lookup(id: u64) -> Origin {
+    let guard = REGISTRY.lock().unwrap();
+    match guard.as_ref().and_then(|m| m.get(&id)) {
+        Some(w) => match w.upgrade() {
+            Some(inner) if inner.closed.load(Ordering::SeqCst) => Origin::Retired,
+            Some(inner) => Origin::Live(Session { inner }),
+            None => Origin::Retired,
+        },
+        None => Origin::Unknown,
+    }
+}
+
+/// The process-default session (id 0) — what the historical free functions
+/// operate on outside any [`Session::scope`].
+pub fn default_session() -> &'static Session {
+    DEFAULT.get_or_init(|| Session::with_id(0, vec![PlanSpec::Sequential], None, 0))
+}
+
+/// The session governing future creation on this thread: the innermost
+/// [`Session::scope`], else the process default.
+pub fn current() -> Session {
+    STACK
+        .with(|s| s.borrow().last().cloned())
+        .unwrap_or_else(|| default_session().clone())
+}
+
+impl Session {
+    fn with_id(
+        id: u64,
+        topology: Vec<PlanSpec>,
+        retry: Option<RetryPolicy>,
+        counter_base: u64,
+    ) -> Session {
+        let session = Session {
+            inner: Arc::new(Inner {
+                id,
+                origin: id,
+                core: RwLock::new(Core { topology, retry }),
+                backends: Mutex::new(HashMap::new()),
+                counter: AtomicU64::new(counter_base),
+                closed: AtomicBool::new(false),
+                scope: metrics::scope_for_session(id),
+            }),
+        };
+        register_origin(&session.inner);
+        session
+    }
+
+    /// A fresh session with `plan(sequential)` and a unique id.
+    pub fn new() -> Session {
+        // Opportunistically retire derived state of RAII-dropped sessions
+        // (multi-tenant loops create sessions continually, so leaks from
+        // close()-less drops are reclaimed here and on context lookups).
+        drain_pending_retirements();
+        let id = NEXT_SESSION_ID.fetch_add(1, Ordering::SeqCst);
+        Session::with_id(id, vec![PlanSpec::Sequential], None, 0)
+    }
+
+    /// A fresh session under a single-backend plan.
+    pub fn with_plan(spec: PlanSpec) -> Session {
+        let s = Session::new();
+        s.plan(spec);
+        s
+    }
+
+    /// A fresh session under a nested topology.
+    pub fn with_topology(topology: Vec<PlanSpec>) -> Session {
+        let s = Session::new();
+        s.plan_topology(topology);
+        s
+    }
+
+    /// A fresh session with a plan-wide retry default.
+    pub fn with_plan_retry(spec: PlanSpec, retry: RetryPolicy) -> Session {
+        let s = Session::new();
+        s.plan_topology_with_retry(vec![spec], Some(retry));
+        s
+    }
+
+    /// Worker-side derived session for a shipped [`SessionContext`]: the
+    /// topology tail becomes this session's full topology (depth restarts
+    /// at 0 on the worker), the retry default carries over, the counter
+    /// starts at the shipped base, and supervision metrics attribute to
+    /// the *originating* session id.
+    fn for_context(ctx: &SessionContext, detached_metrics: bool) -> Session {
+        let id = NEXT_SESSION_ID.fetch_add(1, Ordering::SeqCst);
+        Session {
+            inner: Arc::new(Inner {
+                id,
+                // Attribution stays with the ORIGIN session: metrics,
+                // nested SessionContexts, and purge keying all use it, so
+                // a second nesting level still belongs to the real owner.
+                origin: ctx.session,
+                core: RwLock::new(Core {
+                    topology: ctx.nested_plan.clone(),
+                    retry: ctx.retry.clone(),
+                }),
+                backends: Mutex::new(HashMap::new()),
+                counter: AtomicU64::new(ctx.counter_base),
+                closed: AtomicBool::new(false),
+                // Detached: record without re-registering an origin whose
+                // metrics entry was already evicted (retired origins).
+                scope: if detached_metrics {
+                    metrics::detached_scope(ctx.session)
+                } else {
+                    metrics::scope_for_session(ctx.session)
+                },
+            }),
+        }
+    }
+
+    /// This session's unique id (0 = the process default).
+    pub fn id(&self) -> u64 {
+        self.inner.id
+    }
+
+    /// The id this session *attributes* to: its own id, except for
+    /// worker-side derived sessions, which attribute to the originating
+    /// session (metrics, shipped contexts, purge keying).
+    pub fn origin_id(&self) -> u64 {
+        self.inner.origin
+    }
+
+    /// Has [`Session::close`] been called?
+    pub fn is_closed(&self) -> bool {
+        self.inner.closed.load(Ordering::SeqCst)
+    }
+
+    pub(crate) fn ensure_open(&self) -> Result<(), FutureError> {
+        if self.is_closed() {
+            Err(FutureError::SessionClosed { session: self.inner.origin })
+        } else {
+            Ok(())
+        }
+    }
+
+    /// The supervision metrics sink futures/pools of this session record to.
+    pub(crate) fn metrics_scope(&self) -> CounterScope {
+        self.inner.scope.clone()
+    }
+
+    /// This session's supervision counters (worker deaths / respawns /
+    /// retries attributed to it).
+    pub fn supervision_counters(&self) -> SupervisionCounters {
+        self.inner.scope.counters()
+    }
+
+    // ------------------------------------------------------------ plan ----
+
+    /// `plan(spec)` for this session: a single backend for all its futures.
+    pub fn plan(&self, spec: PlanSpec) {
+        self.plan_topology(vec![spec]);
+    }
+
+    /// Set a nested topology; shuts down the previous plan's backends.
+    pub fn plan_topology(&self, topology: Vec<PlanSpec>) {
+        self.plan_topology_with_retry(topology, None);
+    }
+
+    /// `plan(spec)` plus a plan-wide [`RetryPolicy`] default.
+    pub fn plan_with_retry(&self, spec: PlanSpec, retry: RetryPolicy) {
+        self.plan_topology_with_retry(vec![spec], Some(retry));
+    }
+
+    /// [`Session::plan_topology`] with an optional plan-wide retry default.
+    pub fn plan_topology_with_retry(
+        &self,
+        topology: Vec<PlanSpec>,
+        retry: Option<RetryPolicy>,
+    ) {
+        {
+            let mut core = self.inner.core.write().unwrap();
+            core.topology = topology;
+            core.retry = retry;
+        }
+        self.shutdown_backends();
+        // Nested backends built for this session's previous plan live in
+        // derived context sessions — retire those too (keyed by origin, so
+        // deeper nesting levels are caught as well).  NOT marked closed:
+        // the origin is still open, so an in-flight task of the old plan
+        // must see recoverable launch errors (torn-down pool), never a
+        // misleading terminal SessionClosed.
+        purge_contexts_for(self.inner.origin, false);
+    }
+
+    /// The current topology (defaults to `[sequential]`).
+    pub fn topology(&self) -> Vec<PlanSpec> {
+        let core = self.inner.core.read().unwrap();
+        if core.topology.is_empty() {
+            vec![PlanSpec::Sequential]
+        } else {
+            core.topology.clone()
+        }
+    }
+
+    /// The plan-wide retry default, if any.
+    pub fn retry(&self) -> Option<RetryPolicy> {
+        self.inner.core.read().unwrap().retry.clone()
+    }
+
+    // --------------------------------------------------------- counters ----
+
+    /// Next future-creation ordinal (deterministic RNG stream assignment).
+    pub(crate) fn next_ordinal(&self) -> u64 {
+        self.inner.counter.fetch_add(1, Ordering::SeqCst)
+    }
+
+    /// Restart the creation counter (new "session run"; benches/tests).
+    pub fn reset_counter(&self) {
+        self.inner.counter.store(0, Ordering::SeqCst);
+    }
+
+    /// Session-prefixed future id: unique across sessions by construction.
+    pub(crate) fn next_future_id(&self) -> String {
+        format!("s{}-{}", self.inner.id, uuid_v4())
+    }
+
+    // ---------------------------------------------------------- backends ----
+
+    /// Resolve the backend for nesting depth `depth`, instantiating it
+    /// lazily under this session's metrics scope.  Depths beyond the
+    /// configured topology get the implicit `plan(sequential)` — the
+    /// nested-parallelism protection.
+    pub fn backend_for_depth(&self, depth: u32) -> Result<Arc<dyn Backend>, FutureError> {
+        // Hold the cache lock across the closed-check, spec read, build,
+        // and insert.  `plan_topology_with_retry` and `close()` drain this
+        // map only under the same lock (and only AFTER releasing the core
+        // write lock — no hold-and-wait cycle), so a backend built against
+        // a spec that was concurrently re-planned cannot outlive the
+        // re-plan: the drain that follows it shuts it down (its handles
+        // then error at launch), and a closed session cannot resurrect a
+        // pool (the flag is checked under the lock close() must take).
+        let mut backends = self.inner.backends.lock().unwrap();
+        self.ensure_open()?;
+        if let Some(b) = backends.get(&depth) {
+            return Ok(Arc::clone(b));
+        }
+        let spec = {
+            let core = self.inner.core.read().unwrap();
+            core.topology.get(depth as usize).cloned().unwrap_or(PlanSpec::Sequential)
+        };
+        // Pools constructed here capture this session's counter scope, so
+        // their monitor/reader threads attribute worker deaths and
+        // respawns to the right session.
+        let _ambient = metrics::push_ambient_scope(self.inner.scope.clone());
+        let b = make_backend(&spec)?;
+        backends.insert(depth, Arc::clone(&b));
+        Ok(b)
+    }
+
+    /// The topology tail nested futures of a depth-`depth` future consult
+    /// (cheaper than [`Session::context_for_depth`] when only the tail is
+    /// needed — no retry clone).
+    pub fn nested_plan_for_depth(&self, depth: u32) -> Vec<PlanSpec> {
+        let core = self.inner.core.read().unwrap();
+        core.topology.get(depth as usize + 1..).map(|s| s.to_vec()).unwrap_or_default()
+    }
+
+    /// The serialized context a task created at `depth` ships to its
+    /// worker: topology tail, retry default, counter base.
+    pub fn context_for_depth(&self, depth: u32) -> SessionContext {
+        let core = self.inner.core.read().unwrap();
+        SessionContext {
+            // The ORIGIN id, not the local one: a derived session's nested
+            // context must keep attributing (and purge-keying) to the real
+            // owning session at every nesting level.
+            session: self.inner.origin,
+            nested_plan: core
+                .topology
+                .get(depth as usize + 1..)
+                .map(|s| s.to_vec())
+                .unwrap_or_default(),
+            retry: core.retry.clone(),
+            // Reserved: always 0 in protocol v4.  The field pins the
+            // worker-side counter start so a future protocol revision can
+            // make nested *unseeded* stream assignment reproducible
+            // without another wire change; derived sessions already honor
+            // a non-zero base.
+            counter_base: 0,
+        }
+    }
+
+    fn shutdown_backends(&self) {
+        let backends = std::mem::take(&mut *self.inner.backends.lock().unwrap());
+        for (_, b) in backends {
+            b.shutdown();
+        }
+    }
+
+    /// Close the session: tear down its backends (and any worker-side
+    /// derived state) and latch every future of this session that can no
+    /// longer complete into a terminal [`FutureError::SessionClosed`] —
+    /// results a worker finished before the close are promoted and
+    /// survive collection.  Idempotent.
+    pub fn close(&self) {
+        self.inner.closed.store(true, Ordering::SeqCst);
+        self.shutdown_backends();
+        purge_contexts_for(self.inner.origin, true);
+        // Evict the metrics registry entry (never the shared default's):
+        // per-session counters of a closed session stop being enumerable,
+        // but the handle's own scope Arc — and the process-wide totals —
+        // remain readable.  Keeps long-lived multi-tenant processes from
+        // accumulating one registry entry per session ever created.
+        if self.inner.origin != 0 {
+            metrics::drop_session_scope(self.inner.origin);
+        }
+    }
+
+    // ------------------------------------------------------------ scope ----
+
+    /// Run `f` with this session as the *current* session on this thread:
+    /// every free-function call inside (`future`, `future_lapply`, `plan`,
+    /// ...) operates on it.  Nests; panic-safe.
+    pub fn scope<R>(&self, f: impl FnOnce(&Session) -> R) -> R {
+        let _guard = push_current(self.clone());
+        f(self)
+    }
+
+    // ----------------------------------------------------- conveniences ----
+
+    /// [`crate::api::future::future`] under this session.
+    pub fn future(
+        &self,
+        expr: Expr,
+        env: &Env,
+    ) -> Result<crate::api::future::Future, FutureError> {
+        self.scope(|_| crate::api::future::future(expr, env))
+    }
+
+    /// [`crate::api::future::future_with`] under this session.
+    pub fn future_with(
+        &self,
+        expr: Expr,
+        env: &Env,
+        opts: crate::api::future::FutureOpts,
+    ) -> Result<crate::api::future::Future, FutureError> {
+        self.scope(|_| crate::api::future::future_with(expr, env, opts))
+    }
+
+    /// [`crate::mapreduce::future_lapply`] under this session.
+    pub fn lapply(
+        &self,
+        xs: &[Value],
+        param: &str,
+        body: &Expr,
+        env: &Env,
+        opts: &crate::mapreduce::LapplyOpts,
+    ) -> Result<Vec<Value>, FutureError> {
+        self.scope(|_| crate::mapreduce::future_lapply(xs, param, body, env, opts))
+    }
+
+    /// Evaluate `expr` via a transient future under this session.
+    pub fn value_of(&self, expr: Expr, env: &Env) -> Result<Value, FutureError> {
+        self.scope(|_| crate::api::future::value_of(expr, env))
+    }
+}
+
+impl Default for Session {
+    fn default() -> Self {
+        Session::new()
+    }
+}
+
+impl Drop for Inner {
+    fn drop(&mut self) {
+        // An ordinary session dropped without close() (early return, RAII
+        // habits) must not leak its metrics-registry entry or its cached
+        // derived context sessions forever.  Derived sessions
+        // (origin != id) attribute to their origin and must not evict it;
+        // the default session (id 0) is never dropped.  Backends shut
+        // down via their own Drop impls as the map drops.
+        // NOTE: only the SCOPES and PENDING_RETIRE locks are taken here —
+        // never REGISTRY or CONTEXT_SESSIONS, either of which may be held
+        // by the caller releasing the last handle (see `origin_lookup`).
+        if self.origin == self.id && self.id != 0 {
+            crate::metrics::drop_session_scope(self.id);
+            PENDING_RETIRE.lock().unwrap().push(self.id);
+        }
+    }
+}
+
+// ------------------------------------------------- derived task sessions ----
+
+/// Cache of worker-side derived sessions, keyed by (origin session id,
+/// rendered context).  Reuse keeps nested backends alive across the tasks
+/// of one map instead of rebuilding pools per task; isolation holds because
+/// the origin session id is part of the key.
+static CONTEXT_SESSIONS: Mutex<Option<HashMap<(u64, String), Session>>> = Mutex::new(None);
+
+fn context_key(ctx: &SessionContext) -> (u64, String) {
+    // Fast path: the overwhelmingly common leaf context (no nested plan,
+    // no retry) renders to the empty string — no formatting cost.
+    let rendered = if ctx.nested_plan.is_empty() && ctx.retry.is_none() && ctx.counter_base == 0
+    {
+        String::new()
+    } else {
+        format!("{:?}|{:?}|{}", ctx.nested_plan, ctx.retry, ctx.counter_base)
+    };
+    (ctx.session, rendered)
+}
+
+/// Bumped by every [`purge_contexts_for`]: invalidates the per-thread
+/// context memos so a purged derived session is never served from one.
+static CONTEXT_GEN: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    /// §Perf: per-thread memo of the last (generation, context) → derived
+    /// session.  Worker threads overwhelmingly evaluate runs of tasks
+    /// with the same context, so the hot path is ONE atomic load + a
+    /// SessionContext equality — no global mutex, no allocation —
+    /// matching the one-atomic hot-path budget the metrics layer keeps.
+    static CONTEXT_MEMO: RefCell<Option<(u64, SessionContext, Session)>> =
+        const { RefCell::new(None) };
+}
+
+/// Origin sessions whose last handle was RAII-dropped without `close()`:
+/// `Inner::drop` cannot purge the context cache itself (the drop may run
+/// while the cache lock is held — see `origin_lookup`'s upgrade), so it
+/// queues the id here and the next slow-path lookup or `Session::new`
+/// retires the dropped origin's derived sessions.
+static PENDING_RETIRE: Mutex<Vec<u64>> = Mutex::new(Vec::new());
+
+fn drain_pending_retirements() {
+    let ids: Vec<u64> = std::mem::take(&mut *PENDING_RETIRE.lock().unwrap());
+    for id in ids {
+        purge_contexts_for(id, true);
+    }
+}
+
+fn context_session(ctx: &SessionContext) -> Session {
+    let generation = CONTEXT_GEN.load(Ordering::SeqCst);
+    let hit = CONTEXT_MEMO.with(|m| {
+        m.borrow().as_ref().and_then(|(g, c, s)| {
+            if *g == generation && c == ctx {
+                Some(s.clone())
+            } else {
+                None
+            }
+        })
+    });
+    if let Some(session) = hit {
+        return session;
+    }
+    // Slow path only: retire contexts of RAII-dropped origins, render the
+    // shared-map key (the memo compares the SessionContext itself, so the
+    // hot path never allocates).
+    drain_pending_retirements();
+    let key = context_key(ctx);
+    let (session, memoizable) = context_session_slow(ctx, &key);
+    if memoizable {
+        CONTEXT_MEMO.with(|m| {
+            *m.borrow_mut() = Some((generation, ctx.clone(), session.clone()));
+        });
+    }
+    session
+}
+
+/// The shared-cache path behind the per-thread memo.  Returns the session
+/// plus whether it came from (or went into) the cache — ephemeral sessions
+/// are never memoized, so they self-clean when their task finishes.
+fn context_session_slow(ctx: &SessionContext, key: &(u64, String)) -> (Session, bool) {
+    // A RETIRED origin (closed / dropped in this process) must not get a
+    // cached derived session: purge_contexts_for already ran for it, so an
+    // entry inserted now would never be retired again — leaking any nested
+    // backends it builds.  In-flight tasks racing a close() instead get an
+    // EPHEMERAL derived session that self-cleans when the task finishes
+    // (backend `Drop` impls shut their pools down), with a detached
+    // metrics scope so the evicted registry entry is not resurrected.
+    let mut guard = CONTEXT_SESSIONS.lock().unwrap();
+    // Checked UNDER the cache lock: close()/re-plan set their state before
+    // purging under this lock, so either we observe it here (and go
+    // ephemeral) or our cached insert happens first and the purge that is
+    // about to run drains it — no interleaving leaks an entry.
+    let cacheable = match origin_lookup(ctx.session) {
+        Origin::Retired => false,
+        Origin::Unknown => true,
+        // A live local origin: only cache contexts from its CURRENT plan.
+        // A task of the old plan still evaluating after a re-plan would
+        // otherwise re-insert a stale derived session (with stale nested
+        // pools) that the just-run purge can never have seen.
+        Origin::Live(origin) => {
+            ctx.nested_plan.is_empty() || {
+                let topo = origin.topology();
+                (1..=topo.len()).any(|d| topo.get(d..) == Some(&ctx.nested_plan[..]))
+            }
+        }
+    };
+    if !cacheable {
+        return (Session::for_context(ctx, true), false);
+    }
+    let session = guard
+        .get_or_insert_with(HashMap::new)
+        .entry(key.clone())
+        .or_insert_with(|| Session::for_context(ctx, false))
+        .clone();
+    (session, true)
+}
+
+/// Retire the derived sessions of origin session `id`: their nested
+/// backends shut down with the plan that spawned them.  `mark_closed` is
+/// true only for [`Session::close`] — a re-plan leaves the drained
+/// sessions open so in-flight tasks of the old plan see recoverable
+/// launch errors (torn-down pool) instead of a false terminal
+/// `SessionClosed`.
+fn purge_contexts_for(id: u64, mark_closed: bool) {
+    let drained: Vec<Session> = {
+        let mut guard = CONTEXT_SESSIONS.lock().unwrap();
+        match guard.as_mut() {
+            Some(map) => {
+                let keys: Vec<(u64, String)> =
+                    map.keys().filter(|(sid, _)| *sid == id).cloned().collect();
+                keys.into_iter().filter_map(|k| map.remove(&k)).collect()
+            }
+            None => Vec::new(),
+        }
+    };
+    // Invalidate every thread's memo before tearing anything down.
+    CONTEXT_GEN.fetch_add(1, Ordering::SeqCst);
+    for s in drained {
+        if mark_closed {
+            s.inner.closed.store(true, Ordering::SeqCst);
+        }
+        s.shutdown_backends();
+    }
+}
+
+/// Evaluate `f` under the derived session for a task's shipped
+/// [`SessionContext`] — THE worker-side context install, shared by remote
+/// worker processes ([`crate::worker::run_worker`]/`run_batch_job`) and the
+/// in-process backends (sequential, thread pool).  Inside, the context's
+/// topology tail is the full topology and nesting depth restarts at 0, so
+/// nested futures created during evaluation pick `tail[0]`, inherit the
+/// origin session's retry default, and ship `tail[1..]` onward.
+pub fn scope_task_context<R>(ctx: &SessionContext, f: impl FnOnce() -> R) -> R {
+    let session = context_session(ctx);
+    let _guard = push_current(session);
+    at_depth(0, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::future::FutureOpts;
+    use crate::api::plan::{current_plan_retry, current_topology};
+
+    #[test]
+    fn sessions_get_unique_ids_and_default_is_zero() {
+        let a = Session::new();
+        let b = Session::new();
+        assert_ne!(a.id(), b.id());
+        assert_ne!(a.id(), 0);
+        assert_eq!(default_session().id(), 0);
+    }
+
+    #[test]
+    fn scope_installs_and_restores_current() {
+        let s = Session::with_plan(PlanSpec::multicore(2));
+        let outer = current().id();
+        s.scope(|inner| {
+            assert_eq!(current().id(), inner.id());
+            assert_eq!(current_topology(), vec![PlanSpec::multicore(2)]);
+        });
+        assert_eq!(current().id(), outer, "scope must restore the previous session");
+        s.close();
+    }
+
+    #[test]
+    fn scopes_nest() {
+        let a = Session::with_plan(PlanSpec::multicore(1));
+        let b = Session::with_plan(PlanSpec::multicore(2));
+        a.scope(|_| {
+            b.scope(|_| assert_eq!(current().id(), b.id()));
+            assert_eq!(current().id(), a.id());
+        });
+        a.close();
+        b.close();
+    }
+
+    #[test]
+    fn session_future_roundtrip_and_id_prefix() {
+        let s = Session::with_plan(PlanSpec::sequential());
+        let env = Env::new();
+        let f = s.future(Expr::add(Expr::lit(40i64), Expr::lit(2i64)), &env).unwrap();
+        assert!(
+            f.id().starts_with(&format!("s{}-", s.id())),
+            "future id {} must carry the session prefix",
+            f.id()
+        );
+        assert_eq!(f.value().unwrap(), Value::I64(42));
+        s.close();
+    }
+
+    #[test]
+    fn closed_session_rejects_new_futures() {
+        let s = Session::with_plan(PlanSpec::sequential());
+        s.close();
+        let env = Env::new();
+        match s.future(Expr::lit(1i64), &env) {
+            Err(FutureError::SessionClosed { session }) => assert_eq!(session, s.id()),
+            other => panic!("expected SessionClosed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn context_carries_tail_retry_and_session() {
+        let s = Session::new();
+        let retry = RetryPolicy::idempotent(3);
+        s.plan_topology_with_retry(
+            vec![PlanSpec::multicore(2), PlanSpec::multicore(3), PlanSpec::Sequential],
+            Some(retry.clone()),
+        );
+        let ctx = s.context_for_depth(0);
+        assert_eq!(ctx.session, s.id());
+        assert_eq!(ctx.nested_plan, vec![PlanSpec::multicore(3), PlanSpec::Sequential]);
+        assert_eq!(ctx.retry, Some(retry.clone()));
+        let ctx1 = s.context_for_depth(1);
+        assert_eq!(ctx1.nested_plan, vec![PlanSpec::Sequential]);
+        let ctx9 = s.context_for_depth(9);
+        assert!(ctx9.nested_plan.is_empty());
+        assert_eq!(ctx9.retry, Some(retry));
+        s.close();
+    }
+
+    #[test]
+    fn scope_task_context_installs_topology_and_retry() {
+        let retry = RetryPolicy::idempotent(4);
+        let ctx = SessionContext {
+            session: 12345,
+            nested_plan: vec![PlanSpec::multicore(3), PlanSpec::Sequential],
+            retry: Some(retry.clone()),
+            counter_base: 0,
+        };
+        scope_task_context(&ctx, || {
+            // The worker-side view: the tail IS the topology, retry is the
+            // plan default — exactly what nested future creation consults.
+            assert_eq!(
+                current_topology(),
+                vec![PlanSpec::multicore(3), PlanSpec::Sequential]
+            );
+            assert_eq!(current_plan_retry(), Some(retry.clone()));
+        });
+    }
+
+    #[test]
+    fn nested_contexts_keep_the_origin_session_at_every_depth() {
+        // Two nesting levels: the derived session created for S's depth-0
+        // task must ship S's id (not its own worker-local id) in the next
+        // context, so purge/close and metrics still find the deepest
+        // backends (review regression: phantom-session leak at depth 2).
+        let s = Session::with_topology(vec![
+            PlanSpec::multicore(1),
+            PlanSpec::Sequential,
+            PlanSpec::Sequential,
+        ]);
+        let ctx0 = s.context_for_depth(0);
+        assert_eq!(ctx0.session, s.id());
+        let ctx1 = scope_task_context(&ctx0, || {
+            let inner = current();
+            assert_ne!(inner.id(), s.id(), "derived sessions get their own id");
+            assert_eq!(inner.origin_id(), s.id(), "…but attribute to the origin");
+            inner.context_for_depth(0)
+        });
+        assert_eq!(
+            ctx1.session,
+            s.id(),
+            "a depth-1 context must still name the originating session"
+        );
+        assert_eq!(ctx1.nested_plan, vec![PlanSpec::Sequential]);
+        s.close();
+    }
+
+    #[test]
+    fn derived_sessions_are_cached_per_context() {
+        let ctx = SessionContext {
+            session: 54321,
+            nested_plan: vec![PlanSpec::Sequential],
+            retry: None,
+            counter_base: 0,
+        };
+        let a = scope_task_context(&ctx, || current().id());
+        let b = scope_task_context(&ctx, || current().id());
+        assert_eq!(a, b, "same context must reuse the derived session");
+        let other = SessionContext { session: 54322, ..ctx.clone() };
+        let c = scope_task_context(&other, || current().id());
+        assert_ne!(a, c, "different origin sessions must stay isolated");
+    }
+
+    #[test]
+    fn per_session_counters_are_independent() {
+        let a = Session::with_plan(PlanSpec::sequential());
+        let b = Session::with_plan(PlanSpec::sequential());
+        let env = Env::new();
+        // Session A creates three futures; B's counter must be untouched,
+        // so B's first seeded future draws stream 0 regardless.
+        for _ in 0..3 {
+            a.future(Expr::lit(0i64), &env).unwrap().value().unwrap();
+        }
+        let vb = b
+            .future_with(Expr::rnorm(2), &env, FutureOpts::new().seed(42))
+            .unwrap()
+            .value()
+            .unwrap();
+        let fresh = Session::with_plan(PlanSpec::sequential());
+        let vf = fresh
+            .future_with(Expr::rnorm(2), &env, FutureOpts::new().seed(42))
+            .unwrap()
+            .value()
+            .unwrap();
+        assert_eq!(vb, vf, "stream assignment must be per-session deterministic");
+        a.close();
+        b.close();
+        fresh.close();
+    }
+
+    #[test]
+    fn raii_dropped_session_contexts_are_retired() {
+        // A session dropped WITHOUT close() must still have its cached
+        // derived sessions reclaimed (deferred via PENDING_RETIRE): later
+        // lookups for its contexts go ephemeral instead of re-caching.
+        let ctx = {
+            let s = Session::with_topology(vec![PlanSpec::multicore(1), PlanSpec::Sequential]);
+            let ctx = s.context_for_depth(0);
+            let first = scope_task_context(&ctx, || current().id());
+            let second = scope_task_context(&ctx, || current().id());
+            assert_eq!(first, second, "live origin: derived session is cached");
+            ctx
+        }; // s dropped here, close() never called
+        let _keep = Session::new(); // drains pending retirements
+        let a = scope_task_context(&ctx, || current().id());
+        let b = scope_task_context(&ctx, || current().id());
+        assert_ne!(a, b, "retired origin: derived sessions are ephemeral, never re-cached");
+    }
+
+    #[test]
+    fn plan_change_purges_derived_contexts() {
+        let s = Session::with_topology(vec![PlanSpec::multicore(1), PlanSpec::Sequential]);
+        let ctx = s.context_for_depth(0);
+        let first = scope_task_context(&ctx, || current().id());
+        s.plan(PlanSpec::sequential());
+        // The old derived session was retired with the plan change; the
+        // same context now yields a fresh one.
+        let second = scope_task_context(&ctx, || current().id());
+        assert_ne!(first, second);
+        s.close();
+    }
+}

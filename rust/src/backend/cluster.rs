@@ -62,6 +62,10 @@ fn launch_host_worker(
     if no_connect {
         cmd.env("RUSTURES_CHAOS_NO_CONNECT", "1");
     }
+    if let Some(marker) = crate::backend::supervisor::chaos_midwrite_marker() {
+        // Kill-during-serialization chaos (see supervisor::MIDWRITE_ENV).
+        cmd.env(crate::backend::supervisor::MIDWRITE_ENV, marker);
+    }
     let mut child: Child = cmd
         .spawn()
         .map_err(|e| FutureError::Launch(format!("spawn cluster worker for {host}: {e}")))?;

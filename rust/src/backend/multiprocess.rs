@@ -23,12 +23,18 @@ pub struct MultiprocessBackend {
 
 fn spawn_stdio_worker() -> Result<Connection, FutureError> {
     let exe = worker_exe()?;
-    let mut child = Command::new(&exe)
-        .args(["worker", "--stdio"])
+    let mut cmd = Command::new(&exe);
+    cmd.args(["worker", "--stdio"])
         .env("TF_CPP_MIN_LOG_LEVEL", "1")
         .stdin(Stdio::piped())
         .stdout(Stdio::piped())
-        .stderr(Stdio::inherit())
+        .stderr(Stdio::inherit());
+    if let Some(marker) = crate::backend::supervisor::chaos_midwrite_marker() {
+        // Kill-during-serialization chaos: the child dies halfway through
+        // writing its first result frame (marker file = exactly once).
+        cmd.env(crate::backend::supervisor::MIDWRITE_ENV, marker);
+    }
+    let mut child = cmd
         .spawn()
         .map_err(|e| FutureError::Launch(format!("spawn {}: {e}", exe.display())))?;
     let stdin = child.stdin.take().expect("piped stdin");

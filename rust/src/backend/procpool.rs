@@ -72,8 +72,12 @@ impl Seat {
     }
 }
 
-/// What a finished task leaves in the results map.
-type Parked = Result<TaskResult, String>;
+/// What a finished task leaves in the results map.  Failures park the
+/// *structured* error: a reader that died at a frame boundary parks
+/// `WorkerDied`, a reader that errored mid-frame (truncated/corrupt bytes —
+/// e.g. a worker killed during serialization) parks `Channel`, so callers
+/// can tell a clean crash from a torn write.
+type Parked = Result<TaskResult, FutureError>;
 
 struct Inner {
     /// Workers ready for a task.
@@ -101,6 +105,9 @@ struct Inner {
 
 struct Shared {
     inner: Mutex<Inner>,
+    /// Session-attributed supervision metrics sink, captured from the
+    /// constructing session (see `metrics::ambient_scope`).
+    scope: crate::metrics::CounterScope,
     /// A worker became idle (or capacity changed).
     slot_cv: Condvar,
     /// A result was parked.
@@ -160,6 +167,7 @@ impl ProcPool {
     ) -> Result<Arc<Self>, FutureError> {
         let workers = workers.max(1);
         let shared = Arc::new(Shared {
+            scope: crate::metrics::ambient_scope(),
             inner: Mutex::new(Inner {
                 idle: Vec::with_capacity(workers),
                 busy: HashMap::new(),
@@ -261,7 +269,7 @@ impl ProcPool {
                         drop(inner);
                         match self.spawn_seat() {
                             Ok(seat) => {
-                                crate::metrics::record_respawn();
+                                self.shared.scope.respawn();
                                 let mut inner = self.shared.inner.lock().unwrap();
                                 inner.pending.insert(seat.id, task_id.clone());
                                 break seat;
@@ -444,15 +452,28 @@ fn reader_loop(worker_id: u64, mut reader: Box<dyn Read + Send>, shared: Arc<Sha
                 }
             }
             Ok(Some(other)) => {
-                close_worker(worker_id, &shared, format!("unexpected message {other:?}"));
+                close_worker(
+                    worker_id,
+                    &shared,
+                    FutureError::Channel(format!("unexpected message {other:?}")),
+                );
                 return;
             }
             Ok(None) => {
-                close_worker(worker_id, &shared, "worker closed the channel".into());
+                // Clean EOF at a frame boundary: the worker died (or was
+                // killed) between frames.
+                close_worker(
+                    worker_id,
+                    &shared,
+                    FutureError::WorkerDied { detail: "worker closed the channel".into() },
+                );
                 return;
             }
             Err(e) => {
-                close_worker(worker_id, &shared, e.to_string());
+                // Frame-level failure — typically a worker killed MID-WRITE
+                // (truncated length prefix or body, corrupt bytes).  `e` is
+                // already a structured `Channel` error; park it as such.
+                close_worker(worker_id, &shared, e);
                 return;
             }
         }
@@ -501,7 +522,7 @@ fn monitor_loop(pool: Weak<ProcPool>, budget: Arc<RespawnBudget>, poll: std::tim
                     }
                     inner.idle.push(seat);
                     drop(inner);
-                    crate::metrics::record_respawn();
+                    pool.shared.scope.respawn();
                     pool.shared.slot_cv.notify_all();
                     continue; // more deficit?  re-check immediately
                 }
@@ -530,24 +551,24 @@ fn monitor_loop(pool: Weak<ProcPool>, budget: Arc<RespawnBudget>, poll: std::tim
     }
 }
 
-fn close_worker(worker_id: u64, shared: &Shared, detail: String) {
+fn close_worker(worker_id: u64, shared: &Shared, err: FutureError) {
     let mut inner = shared.inner.lock().unwrap();
     if !inner.shutting_down {
         // An orderly shutdown EOF is not a death worth counting.
-        crate::metrics::record_worker_death();
+        shared.scope.worker_death();
     }
     if let Some((mut seat, task_id)) = inner.busy.remove(&worker_id) {
         seat.kill();
         inner.alive = inner.alive.saturating_sub(1);
         if !inner.abandoned.remove(&task_id) {
-            inner.results.insert(task_id.clone(), Err(detail));
+            inner.results.insert(task_id.clone(), Err(err.clone()));
         }
         notify_task_waiter(&mut inner, &task_id);
     } else if let Some(task_id) = inner.pending.remove(&worker_id) {
         // Died while launch() still owns the seat: park the failure;
         // launch()'s post-send bookkeeping reclaims the seat.
         if !inner.abandoned.remove(&task_id) {
-            inner.results.insert(task_id.clone(), Err(detail));
+            inner.results.insert(task_id.clone(), Err(err.clone()));
         }
         notify_task_waiter(&mut inner, &task_id);
     } else {
@@ -599,7 +620,7 @@ impl TaskHandle for ProcHandle {
         loop {
             if let Some(parked) = inner.results.remove(&self.task_id) {
                 self.collected = true;
-                return parked.map_err(|detail| FutureError::WorkerDied { detail });
+                return parked;
             }
             if !Self::in_flight(&inner, &self.task_id) {
                 self.collected = true;

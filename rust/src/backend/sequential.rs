@@ -8,7 +8,6 @@
 
 use crate::api::conditions::relay_immediate;
 use crate::api::error::FutureError;
-use crate::api::plan::at_depth;
 use crate::backend::{Backend, TaskHandle};
 use crate::ipc::{TaskResult, TaskSpec};
 
@@ -71,10 +70,11 @@ impl Backend for SequentialBackend {
     fn launch(&self, task: TaskSpec) -> Result<Box<dyn TaskHandle>, FutureError> {
         // Kernel runtime resolves lazily inside the evaluator on first Call.
         let kernels = None;
-        let depth = task.opts.depth;
-        // Nested futures created during evaluation see depth + 1, so the
-        // implicit-sequential protection applies beneath us too.
-        let result = at_depth(depth + 1, || {
+        // Evaluation runs under the task's shipped session context: nested
+        // futures created during it see the topology *tail* at depth 0 —
+        // the implicit-sequential protection applies beneath us too, and
+        // the originating session's retry default carries over.
+        let result = crate::api::session::scope_task_context(&task.opts.context, || {
             let mut hook = |c: &crate::api::conditions::Condition| relay_immediate(c);
             crate::worker::execute_task(&task, kernels, Some(&mut hook))
         });

@@ -53,7 +53,7 @@ use crate::api::error::FutureError;
 use crate::backend::dispatch::CompletionWaker;
 use crate::backend::{Backend, TaskHandle};
 use crate::ipc::{TaskResult, TaskSpec};
-use crate::metrics;
+use crate::metrics::CounterScope;
 
 // ------------------------------------------------------------ chaos kill ----
 
@@ -76,6 +76,29 @@ pub fn set_kill_exits_process(on: bool) {
 
 pub fn kill_exits_process() -> bool {
     KILL_EXITS_PROCESS.load(Ordering::SeqCst)
+}
+
+/// Env var carrying the mid-write chaos marker path into worker processes.
+/// When set, the worker process kills itself **halfway through writing its
+/// first result frame** (marker file = fail-exactly-once, like
+/// `Expr::ChaosKill`'s marker) — the coordinator's reader then observes a
+/// truncated frame, the kill-during-serialization failure mode.
+pub const MIDWRITE_ENV: &str = "RUSTURES_CHAOS_MIDWRITE";
+
+/// Coordinator-side knob: when set, process-backend spawners pass the
+/// marker path to their children via [`MIDWRITE_ENV`].  Tests arm it
+/// before creating the plan; `None` disarms.
+static MIDWRITE_MARKER: Mutex<Option<String>> = Mutex::new(None);
+
+/// Arm (or disarm, with `None`) the kill-mid-serialization chaos probe for
+/// worker processes spawned afterwards.
+pub fn set_chaos_midwrite_marker(path: Option<&str>) {
+    *MIDWRITE_MARKER.lock().unwrap() = path.map(str::to_string);
+}
+
+/// The armed mid-write marker path, if any (read by process spawners).
+pub fn chaos_midwrite_marker() -> Option<String> {
+    MIDWRITE_MARKER.lock().unwrap().clone()
 }
 
 // ---------------------------------------------------------- retry policy ----
@@ -236,6 +259,7 @@ pub fn supervise(
     task: TaskSpec,
     policy: RetryPolicy,
     queued: bool,
+    scope: CounterScope,
 ) -> Result<Box<dyn TaskHandle>, FutureError> {
     let spec = task.clone();
     let inner = if queued { backend.launch_queued(task)? } else { backend.launch(task)? };
@@ -249,6 +273,7 @@ pub fn supervise(
         pending_retry: None,
         waiter: None,
         cancelled: false,
+        scope,
     }))
 }
 
@@ -274,6 +299,8 @@ pub struct SupervisedHandle {
     /// Last subscription, re-forwarded into each fresh attempt.
     waiter: Option<(Arc<CompletionWaker>, u64)>,
     cancelled: bool,
+    /// Session-attributed metrics sink for retry events.
+    scope: CounterScope,
 }
 
 impl SupervisedHandle {
@@ -324,7 +351,7 @@ impl SupervisedHandle {
             }
         };
         self.attempts += 1;
-        metrics::record_retry();
+        self.scope.retry();
         // Resubmissions always go through queued dispatch: the backlog
         // hands back a handle immediately, so a retry fired from the
         // non-blocking `is_resolved()` probe never parks on seat
@@ -481,7 +508,7 @@ mod tests {
         let b: Arc<dyn Backend> =
             Arc::new(FlakyBackend { fail_times: 2, launches: AtomicUsize::new(0) });
         let policy = RetryPolicy::idempotent(3).with_backoff(Duration::from_millis(1), 1.0);
-        let mut h = supervise(&b, task(Expr::lit(42i64)), policy, false).unwrap();
+        let mut h = supervise(&b, task(Expr::lit(42i64)), policy, false, crate::metrics::default_scope()).unwrap();
         let r = h.wait().unwrap();
         assert_eq!(r.outcome, TaskOutcome::Ok(crate::api::value::Value::I64(42)));
     }
@@ -491,7 +518,7 @@ mod tests {
         let b: Arc<dyn Backend> =
             Arc::new(FlakyBackend { fail_times: usize::MAX, launches: AtomicUsize::new(0) });
         let policy = RetryPolicy::idempotent(3).with_backoff(Duration::from_millis(1), 1.0);
-        let mut h = supervise(&b, task(Expr::lit(1i64)), policy, false).unwrap();
+        let mut h = supervise(&b, task(Expr::lit(1i64)), policy, false, crate::metrics::default_scope()).unwrap();
         match h.wait() {
             Err(FutureError::Retried { attempts, last }) => {
                 assert_eq!(attempts, 3);
@@ -507,7 +534,7 @@ mod tests {
             Arc::new(FlakyBackend { fail_times: usize::MAX, launches: AtomicUsize::new(0) });
         // Attempts allowed but idempotence NOT asserted: the gate holds.
         let policy = RetryPolicy { max_attempts: 5, idempotent: false, ..Default::default() };
-        let mut h = supervise(&b, task(Expr::lit(1i64)), policy, false).unwrap();
+        let mut h = supervise(&b, task(Expr::lit(1i64)), policy, false, crate::metrics::default_scope()).unwrap();
         match h.wait() {
             Err(FutureError::WorkerDied { .. }) => {}
             other => panic!("expected bare WorkerDied, got {other:?}"),
@@ -519,7 +546,7 @@ mod tests {
         let b: Arc<dyn Backend> =
             Arc::new(FlakyBackend { fail_times: 1, launches: AtomicUsize::new(0) });
         let policy = RetryPolicy::idempotent(2).with_backoff(Duration::from_millis(1), 1.0);
-        let mut h = supervise(&b, task(Expr::lit(7i64)), policy, false).unwrap();
+        let mut h = supervise(&b, task(Expr::lit(7i64)), policy, false, crate::metrics::default_scope()).unwrap();
         // The probe discovers the dead attempt, defers through the backoff
         // window (reporting unresolved — never sleeping), then relaunches
         // onto the sequential fallback; poll like a FutureSet would.
@@ -537,7 +564,7 @@ mod tests {
         let b: Arc<dyn Backend> =
             Arc::new(FlakyBackend { fail_times: 1, launches: AtomicUsize::new(0) });
         let policy = RetryPolicy::idempotent(2).with_backoff(Duration::from_millis(60), 1.0);
-        let mut h = supervise(&b, task(Expr::lit(7i64)), policy, false).unwrap();
+        let mut h = supervise(&b, task(Expr::lit(7i64)), policy, false, crate::metrics::default_scope()).unwrap();
         // Within the 60ms window the probe must report "not resolved"
         // without relaunching (and must return quickly — no sleeping).
         let t0 = std::time::Instant::now();
@@ -552,7 +579,7 @@ mod tests {
     fn eval_errors_are_not_retried() {
         let seq: Arc<dyn Backend> = Arc::new(crate::backend::sequential::SequentialBackend::new());
         let policy = RetryPolicy::idempotent(5);
-        let mut h = supervise(&seq, task(Expr::stop(Expr::lit("boom"))), policy, false).unwrap();
+        let mut h = supervise(&seq, task(Expr::stop(Expr::lit("boom"))), policy, false, crate::metrics::default_scope()).unwrap();
         // Eval errors ride inside a successful TaskResult — no retry path
         // even fires; the outcome carries the error.
         let r = h.wait().unwrap();

@@ -32,7 +32,6 @@ use std::thread::JoinHandle;
 
 use crate::api::conditions::relay_immediate;
 use crate::api::error::{EvalError, FutureError};
-use crate::api::plan::at_depth;
 use crate::backend::dispatch::{default_backlog, CompletionSignal, CompletionWaker, Dispatcher};
 use crate::backend::supervisor::{
     supervisor_config, RespawnBudget, SupervisorConfig, WORKER_KILL_ERROR,
@@ -60,6 +59,9 @@ struct Shared {
     /// Respawn allowance; `None` when supervision is disabled.  Consulted
     /// by the launch path's dead-pool guard.
     budget: Option<Arc<RespawnBudget>>,
+    /// Session-attributed supervision metrics sink, captured from the
+    /// constructing session (see `metrics::ambient_scope`).
+    scope: crate::metrics::CounterScope,
     shutting_down: AtomicBool,
 }
 
@@ -103,6 +105,7 @@ impl ThreadPoolBackend {
             slot_cv: Condvar::new(),
             death_cv: Condvar::new(),
             budget,
+            scope: crate::metrics::ambient_scope(),
             shutting_down: AtomicBool::new(false),
         });
         let threads = Arc::new(Mutex::new(Vec::with_capacity(workers)));
@@ -174,7 +177,7 @@ fn monitor_loop(
             {
                 Ok(handle) => {
                     threads.lock().unwrap().push(handle);
-                    crate::metrics::record_respawn();
+                    shared.scope.respawn();
                     shared.slot_cv.notify_all();
                 }
                 Err(_) => {
@@ -260,11 +263,14 @@ fn worker_loop(shared: Arc<Shared>) {
 
         // Kernel runtime resolves lazily inside the evaluator on first Call.
         let kernels = None;
-        let depth = job.task.opts.depth;
         let task = job.task;
         // Panic isolation: a panicking task must not take the worker down.
+        // Evaluation runs under the task's shipped session context, so
+        // nested futures created on this worker thread inherit the
+        // originating session's topology tail and retry default (depth
+        // restarts at 0 against the tail — see api::session).
         let result = catch_unwind(AssertUnwindSafe(|| {
-            at_depth(depth + 1, || {
+            crate::api::session::scope_task_context(&task.opts.context, || {
                 let mut hook = |c: &crate::api::conditions::Condition| relay_immediate(c);
                 crate::worker::execute_task(&task, kernels, Some(&mut hook))
             })
@@ -287,7 +293,7 @@ fn worker_loop(shared: Arc<Shared>) {
                 let mut q = shared.queue.lock().unwrap();
                 q.alive = q.alive.saturating_sub(1);
             }
-            crate::metrics::record_worker_death();
+            shared.scope.worker_death();
             shared.death_cv.notify_all();
             // Parked launchers must re-evaluate the dead-pool guard.
             shared.slot_cv.notify_all();

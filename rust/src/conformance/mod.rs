@@ -511,6 +511,141 @@ fn check_kill_without_retry_is_structured_not_hang() -> Result<(), String> {
     expect_eq(f.value().map_err(|e| e.to_string())?, Value::I64(7), "post-kill future")
 }
 
+// --------------------------------------------------- session checks ----
+
+/// Two concurrent first-class sessions on *different* backends in one
+/// process: seeded results bit-identical per session (independent stream
+/// counters), supervision counters isolated, future ids session-prefixed,
+/// and no cross-session dispatcher interference.  Runs regardless of the
+/// ambient plan — the sessions bring their own.
+fn check_two_sessions_isolated() -> Result<(), String> {
+    use crate::api::session::Session;
+
+    let env = Env::new();
+    let xs: Vec<Value> = (0..6i64).map(Value::I64).collect();
+    let body = Expr::add(Expr::var("x"), Expr::runif(1));
+    let opts = || LapplyOpts::new().seed(17).chunking(Chunking::ChunkSize(2));
+
+    // Reference: a fresh sequential session (bit-identical target — seeded
+    // lapply is backend-invariant by construction).
+    let reference = Session::with_plan(PlanSpec::sequential());
+    let want = reference
+        .lapply(&xs, "x", &body, &env, &opts())
+        .map_err(|e| e.to_string())?;
+    reference.close();
+
+    let a = Session::with_plan(PlanSpec::multicore(2));
+    let b = Session::with_plan(PlanSpec::multiprocess(2));
+
+    // Run both sessions concurrently from two threads.
+    let env_a = Env::new();
+    let env_b = Env::new();
+    let got = std::thread::scope(|s| {
+        let ta = s.spawn(|| a.lapply(&xs, "x", &body, &env_a, &opts()));
+        let tb = s.spawn(|| b.lapply(&xs, "x", &body, &env_b, &opts()));
+        (ta.join(), tb.join())
+    });
+    let (ra, rb) = match got {
+        (Ok(ra), Ok(rb)) => (ra.map_err(|e| e.to_string())?, rb.map_err(|e| e.to_string())?),
+        _ => return err("a session thread panicked"),
+    };
+    expect_eq(ra, want.clone(), "session A seeded lapply vs reference")?;
+    expect_eq(rb, want, "session B seeded lapply vs reference")?;
+
+    // Future ids carry their session prefix → unique across sessions.
+    let fa = a.future(Expr::lit(1i64), &env).map_err(|e| e.to_string())?;
+    let fb = b.future(Expr::lit(2i64), &env).map_err(|e| e.to_string())?;
+    if !fa.id().starts_with(&format!("s{}-", a.id())) {
+        return err(format!("id {} missing session prefix s{}-", fa.id(), a.id()));
+    }
+    if !fb.id().starts_with(&format!("s{}-", b.id())) {
+        return err(format!("id {} missing session prefix s{}-", fb.id(), b.id()));
+    }
+    fa.value().map_err(|e| e.to_string())?;
+    fb.value().map_err(|e| e.to_string())?;
+
+    // Supervision isolation: kill a worker in A; B's counters must not move.
+    let b_before = b.supervision_counters();
+    let a_before = a.supervision_counters();
+    let killer = a.future(Expr::chaos_kill(), &env).map_err(|e| e.to_string())?;
+    match killer.value() {
+        Err(e) if !e.is_eval() => {}
+        other => return err(format!("expected a worker-loss failure in A, got {other:?}")),
+    }
+    let a_after = a.supervision_counters();
+    if a_after.worker_deaths < a_before.worker_deaths + 1 {
+        return err(format!(
+            "session A death not recorded: {a_before:?} -> {a_after:?}"
+        ));
+    }
+    let b_after = b.supervision_counters();
+    expect_eq(b_after, b_before, "session B counters must be untouched by A's chaos")?;
+
+    // A still serves (respawn), B still serves, then both close; a closed
+    // session rejects new futures with the structured error.
+    let ok_a = a.future(Expr::lit(7i64), &env).map_err(|e| e.to_string())?;
+    expect_eq(ok_a.value().map_err(|e| e.to_string())?, Value::I64(7), "A after respawn")?;
+    a.close();
+    b.close();
+    match a.future(Expr::lit(1i64), &env) {
+        Err(FutureError::SessionClosed { .. }) => Ok(()),
+        other => err(format!("closed session must reject futures, got {other:?}")),
+    }
+}
+
+/// Nested plans on workers inherit the parent session's RetryPolicy — the
+/// PR 3 supervision gap, closed by the serialized [`crate::ipc::SessionContext`]
+/// (wire protocol v4).  Checked end to end through the wire: a task built
+/// under the ambient plan with a retry default is encoded, decoded, and its
+/// context installed exactly the way every worker does.
+fn check_nested_retry_context_propagates() -> Result<(), String> {
+    use crate::api::session::{scope_task_context, Session};
+    use crate::ipc::wire::{decode_message, encode_message};
+    use crate::ipc::{Message, TaskOpts, TaskSpec};
+
+    let ambient = ambient_plan();
+    let retry = RetryPolicy::idempotent(3);
+    let s = Session::new();
+    s.plan_topology_with_retry(
+        vec![ambient.clone(), PlanSpec::multicore(2)],
+        Some(retry.clone()),
+    );
+
+    // The context a depth-0 future of this session ships.
+    let ctx = s.context_for_depth(0);
+    if ctx.retry != Some(retry.clone()) {
+        return err(format!("context dropped the retry default: {ctx:?}"));
+    }
+    expect_eq(ctx.nested_plan.clone(), vec![PlanSpec::multicore(2)], "topology tail")?;
+
+    // Round-trip it through the wire like a real task would travel.
+    let task = TaskSpec {
+        id: "ctx-probe".into(),
+        expr: Expr::lit(1i64),
+        globals: Env::new(),
+        opts: TaskOpts { context: ctx, ..TaskOpts::default() },
+    };
+    let decoded = match decode_message(&encode_message(&Message::Task(task)))
+        .map_err(|e| e.to_string())?
+    {
+        Message::Task(t) => t,
+        other => return err(format!("expected the task back, got {other:?}")),
+    };
+
+    // Install it exactly like run_worker / the in-process backends do: the
+    // worker-side plan default must be the parent session's retry, and the
+    // tail must be the topology nested futures consult.
+    let out = scope_task_context(&decoded.opts.context, || {
+        (
+            crate::api::plan::current_plan_retry(),
+            crate::api::plan::current_topology(),
+        )
+    });
+    s.close();
+    expect_eq(out.0, Some(retry), "worker-side plan retry default")?;
+    expect_eq(out.1, vec![PlanSpec::multicore(2)], "worker-side topology")
+}
+
 fn check_nested_protection() -> Result<(), String> {
     // A future that itself creates a future: the inner one must resolve
     // (implicit sequential), not deadlock or error.
@@ -629,6 +764,16 @@ pub fn checks() -> Vec<Check> {
             name: "kill-no-retry",
             what: "worker kill without retry is a structured error, not a hang; capacity respawns",
             run: check_kill_without_retry_is_structured_not_hang,
+        },
+        Check {
+            name: "sessions-isolated",
+            what: "two concurrent Sessions: bit-identical seeded results, isolated counters/ids",
+            run: check_two_sessions_isolated,
+        },
+        Check {
+            name: "nested-retry-context",
+            what: "wire-roundtripped SessionContext gives workers the parent retry default",
+            run: check_nested_retry_context_propagates,
         },
         Check {
             name: "nested-protection",

@@ -16,6 +16,31 @@ use crate::api::error::EvalError;
 use crate::api::expr::Expr;
 use crate::api::plan::PlanSpec;
 use crate::api::value::Value;
+use crate::backend::supervisor::RetryPolicy;
+
+/// The serialized execution context a task carries to its worker — the
+/// session-first API's answer to "what should *nested* futures on the
+/// worker inherit?".  One compact wire record (protocol v4) instead of a
+/// bare topology tail, so plan-level retry defaults no longer silently
+/// drop on nested workers (the PR 3 gap).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SessionContext {
+    /// Originating [`crate::api::session::Session`] id (0 = the default
+    /// session).  Worker-side derived sessions attribute supervision
+    /// metrics to this id.
+    pub session: u64,
+    /// Remaining plan topology for *nested* futures resolved on the worker
+    /// — the paper's nested-parallelism protection: empty means implicit
+    /// `plan(sequential)`.
+    pub nested_plan: Vec<PlanSpec>,
+    /// The originating session's plan-wide retry default: nested futures
+    /// created on the worker are supervised with this policy unless their
+    /// own options override it.
+    pub retry: Option<RetryPolicy>,
+    /// Starting value for the worker-side session's future-creation
+    /// counter (RNG stream index assignment for nested futures).
+    pub counter_base: u64,
+}
 
 /// Per-task options shipped with the expression (the `future(...)` args).
 #[derive(Debug, Clone, PartialEq)]
@@ -34,10 +59,8 @@ pub struct TaskOpts {
     pub label: Option<String>,
     /// Nesting depth of this future (0 = created in the top-level session).
     pub depth: u32,
-    /// Remaining plan topology for *nested* futures resolved on the worker
-    /// — the paper's nested-parallelism protection: empty means implicit
-    /// `plan(sequential)`.
-    pub nested_plan: Vec<PlanSpec>,
+    /// Serialized session context for nested futures on the worker.
+    pub context: SessionContext,
 }
 
 impl Default for TaskOpts {
@@ -49,7 +72,7 @@ impl Default for TaskOpts {
             capture_conditions: true,
             label: None,
             depth: 0,
-            nested_plan: Vec::new(),
+            context: SessionContext::default(),
         }
     }
 }
@@ -116,4 +139,7 @@ pub enum Message {
 /// Protocol version — bump on any wire-format change.
 /// v2: `Expr::MapChunk` (tag 17) — body-once + packed-elements chunk tasks.
 /// v3: `Expr::ChaosKill` (tag 18) — supervised-recovery chaos probe.
-pub const PROTOCOL_VERSION: u32 = 3;
+/// v4: [`SessionContext`] record in `TaskOpts` — session id + topology tail
+///     + plan-wide retry default + counter base, so nested plans on workers
+///     inherit the originating session's execution context.
+pub const PROTOCOL_VERSION: u32 = 4;

@@ -14,7 +14,10 @@ use crate::api::error::EvalError;
 use crate::api::expr::{EmitKind, Expr, PrimOp, RngDist};
 use crate::api::plan::PlanSpec;
 use crate::api::value::{Tensor, Value};
-use crate::ipc::{Message, TaskMetrics, TaskOpts, TaskOutcome, TaskResult, TaskSpec};
+use crate::backend::supervisor::RetryPolicy;
+use crate::ipc::{
+    Message, SessionContext, TaskMetrics, TaskOpts, TaskOutcome, TaskResult, TaskSpec,
+};
 
 /// Decode failure: offset + description (possibly a truncated/corrupt frame).
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -684,6 +687,54 @@ pub fn dec_plan(d: &mut Decoder) -> Result<PlanSpec, WireError> {
 
 // ----------------------------------------------------------- Task types --
 
+fn enc_retry(e: &mut Encoder, r: &Option<RetryPolicy>) {
+    match r {
+        Some(p) => {
+            e.bool(true);
+            e.u32(p.max_attempts);
+            e.u64(p.backoff.as_nanos() as u64);
+            e.f64(p.factor);
+            e.bool(p.idempotent);
+        }
+        None => e.bool(false),
+    }
+}
+
+fn dec_retry(d: &mut Decoder) -> Result<Option<RetryPolicy>, WireError> {
+    if !d.bool()? {
+        return Ok(None);
+    }
+    let max_attempts = d.u32()?;
+    let backoff = std::time::Duration::from_nanos(d.u64()?);
+    let factor = d.f64()?;
+    let idempotent = d.bool()?;
+    Ok(Some(RetryPolicy { max_attempts, backoff, factor, idempotent }))
+}
+
+/// Protocol-v4 session context record: origin session id, topology tail,
+/// plan-wide retry default, and the nested counter base.
+pub fn enc_session_context(e: &mut Encoder, c: &SessionContext) {
+    e.u64(c.session);
+    e.u32(c.nested_plan.len() as u32);
+    for p in &c.nested_plan {
+        enc_plan(e, p);
+    }
+    enc_retry(e, &c.retry);
+    e.u64(c.counter_base);
+}
+
+pub fn dec_session_context(d: &mut Decoder) -> Result<SessionContext, WireError> {
+    let session = d.u64()?;
+    let n = d.u32()? as usize;
+    let mut nested_plan = Vec::with_capacity(n);
+    for _ in 0..n {
+        nested_plan.push(dec_plan(d)?);
+    }
+    let retry = dec_retry(d)?;
+    let counter_base = d.u64()?;
+    Ok(SessionContext { session, nested_plan, retry, counter_base })
+}
+
 pub fn enc_task_opts(e: &mut Encoder, o: &TaskOpts) {
     e.opt_u64(&o.seed);
     e.u64(o.stream_index);
@@ -691,10 +742,7 @@ pub fn enc_task_opts(e: &mut Encoder, o: &TaskOpts) {
     e.bool(o.capture_conditions);
     e.opt_str(&o.label);
     e.u32(o.depth);
-    e.u32(o.nested_plan.len() as u32);
-    for p in &o.nested_plan {
-        enc_plan(e, p);
-    }
+    enc_session_context(e, &o.context);
 }
 
 pub fn dec_task_opts(d: &mut Decoder) -> Result<TaskOpts, WireError> {
@@ -704,11 +752,7 @@ pub fn dec_task_opts(d: &mut Decoder) -> Result<TaskOpts, WireError> {
     let capture_conditions = d.bool()?;
     let label = d.opt_str()?;
     let depth = d.u32()?;
-    let n = d.u32()? as usize;
-    let mut nested_plan = Vec::with_capacity(n);
-    for _ in 0..n {
-        nested_plan.push(dec_plan(d)?);
-    }
+    let context = dec_session_context(d)?;
     Ok(TaskOpts {
         seed,
         stream_index,
@@ -716,7 +760,7 @@ pub fn dec_task_opts(d: &mut Decoder) -> Result<TaskOpts, WireError> {
         capture_conditions,
         label,
         depth,
-        nested_plan,
+        context,
     })
 }
 
@@ -996,12 +1040,49 @@ mod tests {
                 capture_conditions: true,
                 label: Some("my future".into()),
                 depth: 1,
-                nested_plan: vec![PlanSpec::ThreadPool { workers: 3 }, PlanSpec::Sequential],
+                context: SessionContext {
+                    session: 9,
+                    nested_plan: vec![
+                        PlanSpec::ThreadPool { workers: 3 },
+                        PlanSpec::Sequential,
+                    ],
+                    retry: Some(
+                        RetryPolicy::idempotent(3)
+                            .with_backoff(std::time::Duration::from_millis(7), 1.5),
+                    ),
+                    counter_base: 11,
+                },
             },
         };
         let msg = Message::Task(task.clone());
         let decoded = decode_message(&encode_message(&msg)).unwrap();
         assert_eq!(decoded, msg);
+    }
+
+    #[test]
+    fn session_context_roundtrips_all_fields() {
+        for ctx in [
+            SessionContext::default(),
+            SessionContext {
+                session: u64::MAX,
+                nested_plan: vec![PlanSpec::Multiprocess { workers: 2 }],
+                retry: None,
+                counter_base: 0,
+            },
+            SessionContext {
+                session: 3,
+                nested_plan: vec![],
+                retry: Some(RetryPolicy::idempotent(5)),
+                counter_base: 1 << 40,
+            },
+        ] {
+            let mut e = Encoder::new();
+            enc_session_context(&mut e, &ctx);
+            let bytes = e.into_bytes();
+            let mut d = Decoder::new(&bytes);
+            assert_eq!(dec_session_context(&mut d).unwrap(), ctx);
+            assert!(d.finished());
+        }
     }
 
     #[test]

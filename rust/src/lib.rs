@@ -70,6 +70,7 @@ pub mod prelude {
     pub use crate::api::promise::ListEnv;
     pub use crate::api::plan::plan_with_retry;
     pub use crate::api::rng::RngStream;
+    pub use crate::api::session::Session;
     pub use crate::api::value::{Tensor, Value};
     pub use crate::backend::supervisor::{RetryPolicy, SupervisorConfig};
     pub use crate::mapreduce::{

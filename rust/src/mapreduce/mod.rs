@@ -51,7 +51,8 @@ use crate::api::env::Env;
 use crate::api::error::FutureError;
 use crate::api::expr::Expr;
 use crate::api::future::{future_with, Future, FutureOpts, FutureSet};
-use crate::api::plan::backend_for_current_depth;
+use crate::api::plan::current_depth;
+use crate::api::session;
 use crate::api::value::Value;
 use crate::backend::supervisor::RetryPolicy;
 
@@ -242,8 +243,10 @@ pub fn lapply_futures(
     if xs.is_empty() {
         return Ok(Vec::new());
     }
-    let (backend, _) = backend_for_current_depth()?;
-    let workers = backend.workers();
+    // Only the worker count is needed here (future_with resolves its own
+    // backend + context); asking the session directly avoids building a
+    // throwaway SessionContext per map call.
+    let workers = session::current().backend_for_depth(current_depth())?.workers();
     let n_chunks = chunk_count(xs.len(), workers, opts.chunking);
 
     // One body clone for the whole map; every chunk shares it by Arc.

@@ -1,10 +1,20 @@
-//! Per-future lifecycle instrumentation.
+//! Per-future lifecycle instrumentation and supervision metrics.
 //!
 //! Drives the Figure-1 schedule trace (`examples/figure1_trace.rs`) and the
 //! overhead benchmarks: each future records timestamped lifecycle events
 //! (create → launch → resolved → collect), and a process-global trace log
 //! collects them for later rendering.
+//!
+//! Supervision counters are **keyed per session** (the first-class
+//! [`crate::api::session::Session`] contexts): every backend pool captures
+//! its owning session's [`CounterScope`] at construction, so two tenants
+//! running different plans in one process see independent
+//! worker-death/respawn/retry counts — while the process-wide totals stay
+//! monotonic for the historical [`supervision_counters`] API.
+//! [`supervision_json`] renders the whole picture in a stable JSON schema.
 
+use std::cell::RefCell;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{SystemTime, UNIX_EPOCH};
@@ -12,7 +22,8 @@ use std::time::{SystemTime, UNIX_EPOCH};
 // ------------------------------------------------- supervision counters ----
 
 /// Process-wide fault-tolerance counters (monotonic; relaxed atomics — one
-/// uncontended add per event, nothing on the task hot path).
+/// uncontended add per event, nothing on the task hot path).  Per-session
+/// scopes add to these totals as well, so the global view never regresses.
 static WORKER_DEATHS: AtomicU64 = AtomicU64::new(0);
 static RESPAWNS: AtomicU64 = AtomicU64::new(0);
 static RETRIES: AtomicU64 = AtomicU64::new(0);
@@ -30,27 +41,220 @@ pub struct SupervisionCounters {
     pub retries: u64,
 }
 
-/// A backend observed a worker die outside an orderly shutdown.
+struct ScopeInner {
+    session: u64,
+    deaths: AtomicU64,
+    respawns: AtomicU64,
+    retries: AtomicU64,
+}
+
+/// A session-attributed counter sink.  Backends capture the scope of the
+/// session that constructed them ([`ambient_scope`] at construction time)
+/// and record against it from monitor/reader threads; every record also
+/// bumps the process-wide totals.
+#[derive(Clone)]
+pub struct CounterScope {
+    inner: Arc<ScopeInner>,
+}
+
+impl CounterScope {
+    /// The session this scope attributes to (0 = the default session).
+    pub fn session(&self) -> u64 {
+        self.inner.session
+    }
+
+    /// A backend observed a worker die outside an orderly shutdown.
+    pub fn worker_death(&self) {
+        self.inner.deaths.fetch_add(1, Ordering::Relaxed);
+        WORKER_DEATHS.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A replacement worker was brought up (monitor or on-demand).
+    pub fn respawn(&self) {
+        self.inner.respawns.fetch_add(1, Ordering::Relaxed);
+        RESPAWNS.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A supervised handle resubmitted a task after infrastructure loss.
+    pub fn retry(&self) {
+        self.inner.retries.fetch_add(1, Ordering::Relaxed);
+        RETRIES.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot of this scope's (session-local) counters.
+    pub fn counters(&self) -> SupervisionCounters {
+        SupervisionCounters {
+            worker_deaths: self.inner.deaths.load(Ordering::Relaxed),
+            respawns: self.inner.respawns.load(Ordering::Relaxed),
+            retries: self.inner.retries.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// session id → scope, created on first use.
+static SCOPES: Mutex<Option<HashMap<u64, CounterScope>>> = Mutex::new(None);
+
+/// The counter scope attributed to `session` (created on demand; one per
+/// session id for the process lifetime — scopes are tiny).
+pub fn scope_for_session(session: u64) -> CounterScope {
+    let mut guard = SCOPES.lock().unwrap();
+    guard
+        .get_or_insert_with(HashMap::new)
+        .entry(session)
+        .or_insert_with(|| CounterScope {
+            inner: Arc::new(ScopeInner {
+                session,
+                deaths: AtomicU64::new(0),
+                respawns: AtomicU64::new(0),
+                retries: AtomicU64::new(0),
+            }),
+        })
+        .clone()
+}
+
+/// The default session's scope (session id 0) — where the legacy free
+/// functions and scope-less call sites record.
+pub fn default_scope() -> CounterScope {
+    scope_for_session(0)
+}
+
+/// A scope that attributes to `session` but is NOT entered into the
+/// registry — for work racing a closed session, so eviction is not
+/// undone.  Records still feed the process-wide totals.
+pub fn detached_scope(session: u64) -> CounterScope {
+    CounterScope {
+        inner: Arc::new(ScopeInner {
+            session,
+            deaths: AtomicU64::new(0),
+            respawns: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+        }),
+    }
+}
+
+/// Evict a session's registry entry (called by `Session::close`).  Live
+/// `CounterScope` clones held by pools/handles keep working — only the
+/// per-session enumeration ([`session_supervision_counters`],
+/// [`all_session_counters`], [`supervision_json`]) forgets the session;
+/// the process-wide totals are separate statics and never regress.
+pub fn drop_session_scope(session: u64) {
+    if let Some(map) = SCOPES.lock().unwrap().as_mut() {
+        map.remove(&session);
+    }
+}
+
+/// Per-session snapshot (all zeros for a session that never recorded).
+pub fn session_supervision_counters(session: u64) -> SupervisionCounters {
+    let guard = SCOPES.lock().unwrap();
+    guard
+        .as_ref()
+        .and_then(|m| m.get(&session))
+        .map(|s| s.counters())
+        .unwrap_or_default()
+}
+
+/// Every session that has a scope, with its counters, sorted by session id.
+pub fn all_session_counters() -> Vec<(u64, SupervisionCounters)> {
+    let guard = SCOPES.lock().unwrap();
+    let mut out: Vec<(u64, SupervisionCounters)> = guard
+        .as_ref()
+        .map(|m| m.iter().map(|(id, s)| (*id, s.counters())).collect())
+        .unwrap_or_default();
+    out.sort_by_key(|(id, _)| *id);
+    out
+}
+
+thread_local! {
+    /// Ambient scope stack: [`crate::api::session::Session`] pushes its
+    /// scope around backend construction so pools capture the right sink.
+    static AMBIENT: RefCell<Vec<CounterScope>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Guard returned by [`push_ambient_scope`]; pops on drop (panic-safe).
+pub struct AmbientScopeGuard {
+    _private: (),
+}
+
+impl Drop for AmbientScopeGuard {
+    fn drop(&mut self) {
+        AMBIENT.with(|s| {
+            s.borrow_mut().pop();
+        });
+    }
+}
+
+/// Install `scope` as the ambient counter sink for this thread until the
+/// guard drops.  Backend constructors read it via [`ambient_scope`].
+pub fn push_ambient_scope(scope: CounterScope) -> AmbientScopeGuard {
+    AMBIENT.with(|s| s.borrow_mut().push(scope));
+    AmbientScopeGuard { _private: () }
+}
+
+/// The scope a backend being constructed on this thread should record to:
+/// the innermost pushed scope, else the default session's.
+pub fn ambient_scope() -> CounterScope {
+    AMBIENT
+        .with(|s| s.borrow().last().cloned())
+        .unwrap_or_else(default_scope)
+}
+
+/// Legacy free function: record against the default session.
 pub fn record_worker_death() {
-    WORKER_DEATHS.fetch_add(1, Ordering::Relaxed);
+    default_scope().worker_death();
 }
 
-/// A replacement worker was brought up (monitor or on-demand).
+/// Legacy free function: record against the default session.
 pub fn record_respawn() {
-    RESPAWNS.fetch_add(1, Ordering::Relaxed);
+    default_scope().respawn();
 }
 
-/// A supervised handle resubmitted a task after infrastructure loss.
+/// Legacy free function: record against the default session.
 pub fn record_retry() {
-    RETRIES.fetch_add(1, Ordering::Relaxed);
+    default_scope().retry();
 }
 
+/// Process-wide totals across every session (monotonic).
 pub fn supervision_counters() -> SupervisionCounters {
     SupervisionCounters {
         worker_deaths: WORKER_DEATHS.load(Ordering::Relaxed),
         respawns: RESPAWNS.load(Ordering::Relaxed),
         retries: RETRIES.load(Ordering::Relaxed),
     }
+}
+
+fn counters_json(c: &SupervisionCounters, session: Option<u64>, out: &mut String) {
+    out.push('{');
+    if let Some(id) = session {
+        out.push_str(&format!("\"session\":{id},"));
+    }
+    out.push_str(&format!(
+        "\"worker_deaths\":{},\"respawns\":{},\"retries\":{}",
+        c.worker_deaths, c.respawns, c.retries
+    ));
+    out.push('}');
+}
+
+/// The supervision counters as JSON, keyed per session — the trace/metrics
+/// schema surface (`rustures.supervision.v1`):
+///
+/// ```json
+/// {"schema":"rustures.supervision.v1",
+///  "total":{"worker_deaths":2,"respawns":2,"retries":1},
+///  "sessions":[{"session":0,"worker_deaths":1,"respawns":1,"retries":0},
+///              {"session":3,"worker_deaths":1,"respawns":1,"retries":1}]}
+/// ```
+pub fn supervision_json() -> String {
+    let mut out = String::from("{\"schema\":\"rustures.supervision.v1\",\"total\":");
+    counters_json(&supervision_counters(), None, &mut out);
+    out.push_str(",\"sessions\":[");
+    for (i, (id, c)) in all_session_counters().iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        counters_json(c, Some(*id), &mut out);
+    }
+    out.push_str("]}");
+    out
 }
 
 fn now_ns() -> u64 {
@@ -63,16 +267,25 @@ pub struct FutureTrace {
     pub id: String,
     pub label: Option<String>,
     pub backend: &'static str,
+    /// Owning session id (0 = default session).
+    pub session: u64,
     pub created_ns: u64,
     events: Mutex<Vec<(String, u64)>>,
 }
 
 impl FutureTrace {
-    pub fn new(id: &str, label: Option<&str>, backend: &'static str, created_ns: u64) -> Self {
+    pub fn new(
+        id: &str,
+        label: Option<&str>,
+        backend: &'static str,
+        session: u64,
+        created_ns: u64,
+    ) -> Self {
         FutureTrace {
             id: id.to_string(),
             label: label.map(str::to_string),
             backend,
+            session,
             created_ns,
             events: Mutex::new(vec![("create".to_string(), created_ns)]),
         }
@@ -106,6 +319,7 @@ pub fn record_event(trace: &Arc<FutureTrace>, name: &str) {
         log.lock().unwrap().push(TraceEvent {
             future_id: trace.id.clone(),
             label: trace.label.clone(),
+            session: trace.session,
             event: name.to_string(),
             at_ns: t,
         });
@@ -117,6 +331,8 @@ pub fn record_event(trace: &Arc<FutureTrace>, name: &str) {
 pub struct TraceEvent {
     pub future_id: String,
     pub label: Option<String>,
+    /// Owning session of the traced future (trace schema key).
+    pub session: u64,
     pub event: String,
     pub at_ns: u64,
 }
@@ -146,7 +362,7 @@ mod tests {
 
     #[test]
     fn trace_records_events_in_order() {
-        let t = Arc::new(FutureTrace::new("f1", Some("lbl"), "sequential", now_ns()));
+        let t = Arc::new(FutureTrace::new("f1", Some("lbl"), "sequential", 0, now_ns()));
         record_event(&t, "launch");
         record_event(&t, "resolved");
         let events = t.events();
@@ -173,16 +389,65 @@ mod tests {
     }
 
     #[test]
+    fn scopes_attribute_per_session_and_feed_totals() {
+        // Use ids far from anything a real session would get in tests.
+        let a = scope_for_session(9_000_001);
+        let b = scope_for_session(9_000_002);
+        let global_before = supervision_counters();
+        a.worker_death();
+        a.retry();
+        let ac = session_supervision_counters(9_000_001);
+        let bc = session_supervision_counters(9_000_002);
+        assert_eq!(ac.worker_deaths, 1);
+        assert_eq!(ac.retries, 1);
+        assert_eq!(bc, SupervisionCounters::default(), "scopes must be isolated");
+        let _ = b; // keep the scope registered
+        let global_after = supervision_counters();
+        assert!(global_after.worker_deaths >= global_before.worker_deaths + 1);
+        assert!(global_after.retries >= global_before.retries + 1);
+    }
+
+    #[test]
+    fn ambient_scope_stacks_and_defaults() {
+        assert_eq!(ambient_scope().session(), 0, "default ambient is session 0");
+        let s = scope_for_session(9_000_003);
+        {
+            let _g = push_ambient_scope(s.clone());
+            assert_eq!(ambient_scope().session(), 9_000_003);
+        }
+        assert_eq!(ambient_scope().session(), 0, "guard must pop on drop");
+    }
+
+    #[test]
+    fn supervision_json_has_schema_total_and_sessions() {
+        let s = scope_for_session(9_000_004);
+        s.respawn();
+        let json = supervision_json();
+        let doc = crate::util::json::parse(&json).expect("valid JSON");
+        assert_eq!(
+            doc.get("schema").and_then(|s| s.as_str()),
+            Some("rustures.supervision.v1")
+        );
+        assert!(doc.get("total").and_then(|t| t.get("worker_deaths")).is_some());
+        let sessions = doc.get("sessions").unwrap().as_arr().unwrap();
+        let entry = sessions
+            .iter()
+            .find(|e| e.get("session").and_then(|v| v.as_i64()) == Some(9_000_004))
+            .expect("session entry present");
+        assert!(entry.get("respawns").unwrap().as_i64().unwrap() >= 1);
+    }
+
+    #[test]
     fn session_log_collects_across_futures() {
         let log = start_session_trace();
-        let t1 = Arc::new(FutureTrace::new("a", None, "sequential", now_ns()));
-        let t2 = Arc::new(FutureTrace::new("b", None, "sequential", now_ns()));
+        let t1 = Arc::new(FutureTrace::new("a", None, "sequential", 7, now_ns()));
+        let t2 = Arc::new(FutureTrace::new("b", None, "sequential", 7, now_ns()));
         record_event(&t1, "launch");
         record_event(&t2, "launch");
         stop_session_trace();
         record_event(&t1, "after-stop");
         let rows = log.lock().unwrap();
         assert_eq!(rows.len(), 2);
-        assert!(rows.iter().all(|r| r.event == "launch"));
+        assert!(rows.iter().all(|r| r.event == "launch" && r.session == 7));
     }
 }

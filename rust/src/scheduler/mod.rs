@@ -146,9 +146,12 @@ impl Scheduler {
         let daemon_state = Arc::clone(&state);
         let daemon_stop = Arc::clone(&stop);
         let daemon_cfg = config;
+        // Capture the constructing session's metrics sink: job crashes the
+        // daemon harvests attribute to the session that owns this backend.
+        let daemon_scope = crate::metrics::ambient_scope();
         let handle = std::thread::Builder::new()
             .name("rustures-sched".into())
-            .spawn(move || daemon_loop(daemon_cfg, daemon_state, daemon_stop))
+            .spawn(move || daemon_loop(daemon_cfg, daemon_state, daemon_stop, daemon_scope))
             .map_err(|e| FutureError::Launch(format!("spawn scheduler daemon: {e}")))?;
         *sched.daemon.lock().unwrap() = Some(handle);
         Ok(sched)
@@ -271,7 +274,12 @@ impl Scheduler {
     }
 }
 
-fn daemon_loop(config: SchedConfig, state: Arc<Mutex<SchedState>>, stop: Arc<AtomicBool>) {
+fn daemon_loop(
+    config: SchedConfig,
+    state: Arc<Mutex<SchedState>>,
+    stop: Arc<AtomicBool>,
+    scope: crate::metrics::CounterScope,
+) {
     while !stop.load(Ordering::SeqCst) {
         {
             let mut st = state.lock().unwrap();
@@ -300,9 +308,10 @@ fn daemon_loop(config: SchedConfig, state: Arc<Mutex<SchedState>>, stop: Arc<Ato
                 if let Some(new_state) = done {
                     if matches!(new_state, JobState::Failed(_)) {
                         // A crashed/killed job process is a worker death
-                        // (supervision metrics; batch jobs are inherently
-                        // disposable so there is nothing to respawn).
-                        crate::metrics::record_worker_death();
+                        // (supervision metrics, keyed to the owning
+                        // session; batch jobs are inherently disposable so
+                        // there is nothing to respawn).
+                        scope.worker_death();
                     }
                     job.state = new_state;
                     job.child = None;

@@ -65,12 +65,19 @@ pub fn execute_task(
 ///
 /// Generic over the transport: child-process stdio (multisession), TCP
 /// (cluster).  The batch backend uses [`run_batch_job`] instead.
+///
+/// Chaos: when [`crate::backend::supervisor::MIDWRITE_ENV`] points at a
+/// marker path *and* this process is a disposable worker, the first result
+/// frame is written only **halfway** before the process exits like a crash
+/// (marker file = exactly once) — the coordinator's reader observes a
+/// truncated frame, the kill-during-serialization failure mode.
 pub fn run_worker<R: Read, W: Write>(
     mut reader: R,
     mut writer: W,
     kernels: Option<RuntimeHandle>,
 ) -> Result<(), FutureError> {
     let worker_id = uuid_v4();
+    let midwrite = std::env::var(crate::backend::supervisor::MIDWRITE_ENV).ok();
     write_message(&mut writer, &Message::Hello { worker_id, version: PROTOCOL_VERSION })?;
     loop {
         match read_message(&mut reader)? {
@@ -78,12 +85,12 @@ pub fn run_worker<R: Read, W: Write>(
             Some(Message::Ping) => write_message(&mut writer, &Message::Pong)?,
             Some(Message::Task(task)) => {
                 // Nested futures created while evaluating this task follow
-                // the topology the coordinator shipped (empty ⇒ sequential:
-                // the nested-parallelism protection).
-                crate::api::plan::plan_topology(task.opts.nested_plan.clone());
-
+                // the serialized session context the coordinator shipped:
+                // topology tail (empty ⇒ sequential — the nested-parallelism
+                // protection) PLUS the originating session's plan-wide
+                // retry default and counter base.
                 let mut send_err = None;
-                let result = {
+                let result = crate::api::session::scope_task_context(&task.opts.context, || {
                     let mut on_imm = |c: &Condition| {
                         let msg =
                             Message::Immediate { task_id: task.id.clone(), condition: c.clone() };
@@ -92,9 +99,12 @@ pub fn run_worker<R: Read, W: Write>(
                         }
                     };
                     execute_task(&task, kernels.clone(), Some(&mut on_imm))
-                };
+                });
                 if let Some(e) = send_err {
                     return Err(e);
+                }
+                if let Some(marker) = &midwrite {
+                    maybe_die_mid_write(marker, &mut writer, &result);
                 }
                 write_message(&mut writer, &Message::Result(result))?;
             }
@@ -105,6 +115,36 @@ pub fn run_worker<R: Read, W: Write>(
             }
         }
     }
+}
+
+/// The kill-during-serialization chaos probe: write the length prefix and
+/// only HALF the result payload, flush, and exit like a crash.  Gated on
+/// [`crate::backend::supervisor::kill_exits_process`] so an in-process
+/// `run_worker` (tests over in-memory pipes) can never take the test
+/// runner down; the marker file makes it fire exactly once per path.
+fn maybe_die_mid_write<W: Write>(marker: &str, writer: &mut W, result: &TaskResult) {
+    if !crate::backend::supervisor::kill_exits_process() {
+        return;
+    }
+    // Atomic claim of the marker (create_new): exactly ONE worker process
+    // fires, even when several finish their first frames simultaneously —
+    // a bare exists-then-write check would let two workers race past it.
+    // Losing the race (file exists) means the kill already fired: write
+    // the result normally.  The marker lands BEFORE dying so the retried
+    // run survives.
+    match std::fs::OpenOptions::new().write(true).create_new(true).open(marker) {
+        Ok(mut f) => {
+            let _ = f.write_all(b"killed-mid-write");
+        }
+        Err(_) => return,
+    }
+    let payload = crate::ipc::wire::encode_message(&Message::Result(result.clone()));
+    let len = payload.len() as u32;
+    let half = payload.len() / 2;
+    let _ = writer.write_all(&len.to_le_bytes());
+    let _ = writer.write_all(&payload[..half]);
+    let _ = writer.flush();
+    std::process::exit(137);
 }
 
 /// Batch-mode execution: read a task file, write a result file (the
@@ -125,8 +165,12 @@ pub fn run_batch_job(
             return Err(FutureError::Channel(format!("task file held {other:?}")));
         }
     };
-    crate::api::plan::plan_topology(task.opts.nested_plan.clone());
-    let result = execute_task(&task, kernels, None);
+    // Same context install as run_worker: nested futures inherit the
+    // shipped topology tail + retry default.
+    let result =
+        crate::api::session::scope_task_context(&task.opts.context, || {
+            execute_task(&task, kernels, None)
+        });
     let encoded = crate::ipc::wire::encode_message(&Message::Result(result));
     // Write-then-rename: the scheduler polls for the final name, so it never
     // observes a partial file.

@@ -1,0 +1,151 @@
+//! Kill-during-serialization chaos: a worker process dies **halfway
+//! through writing a result frame** (truncated length-prefixed frame on
+//! the pipe/socket).  The coordinator's reader must surface a structured
+//! `Channel` error — distinguishable from a clean crash-at-boundary
+//! (`WorkerDied`) — and a supervised retry must re-run the lost chunk
+//! under the same RNG substreams, bit-identically to a no-failure run.
+//!
+//! The probe is armed via `supervisor::set_chaos_midwrite_marker`: process
+//! spawners pass the marker path to children in `RUSTURES_CHAOS_MIDWRITE`,
+//! and the child kills itself mid-write exactly once (marker file).  The
+//! knob is process-global, so tests in this binary serialize on a mutex.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use rustures::backend::supervisor::set_chaos_midwrite_marker;
+use rustures::mapreduce::Chunking;
+use rustures::prelude::*;
+use rustures::proptest_lite::Gen;
+
+static CHAOS_LOCK: Mutex<()> = Mutex::new(());
+
+fn marker_path(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("rustures-midwrite-{tag}-{}", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+/// Disarm + clean up even on panic.
+struct Disarm(String);
+
+impl Drop for Disarm {
+    fn drop(&mut self) {
+        set_chaos_midwrite_marker(None);
+        let _ = std::fs::remove_file(&self.0);
+    }
+}
+
+fn xs(n: i64) -> Vec<Value> {
+    (0..n).map(Value::I64).collect()
+}
+
+#[test]
+fn kill_mid_result_write_surfaces_structured_channel_error() {
+    let _guard = CHAOS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let marker = marker_path("structured");
+    let _disarm = Disarm(marker.clone());
+    set_chaos_midwrite_marker(Some(&marker));
+
+    let s = Session::with_plan(PlanSpec::multiprocess(2));
+    let env = Env::new();
+    let body = Expr::add(Expr::var("x"), Expr::runif(1));
+    // No retry: the torn frame must surface as a structured, recoverable,
+    // NON-eval failure — specifically the reader's Channel error (mid-frame
+    // truncation), not a masqueraded evaluation error, and never a hang.
+    let got = s.lapply(
+        &xs(6),
+        "x",
+        &body,
+        &env,
+        &LapplyOpts::new().seed(3).chunking(Chunking::ChunkSize(2)),
+    );
+    match got {
+        Err(e) => {
+            assert!(!e.is_eval(), "torn write must not masquerade as eval error: {e}");
+            assert!(e.is_recoverable(), "torn write must be recoverable: {e}");
+            assert!(
+                matches!(e, FutureError::Channel(_)),
+                "mid-frame truncation should surface as Channel, got {e:?}"
+            );
+        }
+        Ok(v) => panic!("expected the torn-frame failure, got values {v:?}"),
+    }
+
+    // Capacity recovered (respawn): the session still serves.
+    let f = s.future(Expr::lit(5i64), &env).unwrap();
+    assert_eq!(f.value().unwrap(), Value::I64(5));
+    s.close();
+}
+
+#[test]
+fn retry_after_mid_write_kill_is_bit_identical_property() {
+    // Property (proptest_lite cases over seed × chunking × size): a seeded
+    // map that loses a result to a mid-write kill, under an idempotent
+    // retry policy, returns BIT-IDENTICAL values to the clean run.
+    let _guard = CHAOS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    for case in 0..3u64 {
+        let mut g = Gen::new(0xC0FFEE ^ case, case);
+        let seed = g.u64();
+        let n = g.usize_in(4, 8) as i64;
+        let chunk = g.usize_in(1, 3);
+
+        let env = Env::new();
+        let body = Expr::add(Expr::var("x"), Expr::runif(2));
+        let opts = LapplyOpts::new()
+            .seed(seed)
+            .chunking(Chunking::ChunkSize(chunk))
+            .retry(RetryPolicy::idempotent(5).with_backoff(Duration::from_millis(1), 2.0));
+
+        // Clean reference run (chaos disarmed).
+        set_chaos_midwrite_marker(None);
+        let clean_session = Session::with_plan(PlanSpec::multiprocess(2));
+        let want = clean_session.lapply(&xs(n), "x", &body, &env, &opts).unwrap();
+        clean_session.close();
+
+        // Chaos run: first completed result frame is torn; retry re-runs
+        // the lost chunk under the same base_index substreams.
+        let marker = marker_path(&format!("prop-{case}"));
+        let _disarm = Disarm(marker.clone());
+        set_chaos_midwrite_marker(Some(&marker));
+        let s = Session::with_plan(PlanSpec::multiprocess(2));
+        let got = s.lapply(&xs(n), "x", &body, &env, &opts).unwrap();
+        s.close();
+
+        assert_eq!(
+            got, want,
+            "case {case}: seed={seed} n={n} chunk={chunk} — retried run must be bit-identical"
+        );
+        assert!(
+            std::path::Path::new(&marker).exists(),
+            "case {case}: the chaos probe never fired"
+        );
+    }
+}
+
+#[test]
+fn cluster_reader_also_surfaces_torn_frames() {
+    // Same failure mode over TCP (cluster backend): the socket reader sees
+    // the truncated frame and the supervised retry recovers bit-identically.
+    let _guard = CHAOS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let env = Env::new();
+    let body = Expr::add(Expr::var("x"), Expr::runif(1));
+    let opts = LapplyOpts::new()
+        .seed(11)
+        .chunking(Chunking::ChunkSize(2))
+        .retry(RetryPolicy::idempotent(4).with_backoff(Duration::from_millis(1), 2.0));
+
+    set_chaos_midwrite_marker(None);
+    let clean = Session::with_plan(PlanSpec::cluster(&["c1", "c2"]));
+    let want = clean.lapply(&xs(6), "x", &body, &env, &opts).unwrap();
+    clean.close();
+
+    let marker = marker_path("cluster");
+    let _disarm = Disarm(marker.clone());
+    set_chaos_midwrite_marker(Some(&marker));
+    let s = Session::with_plan(PlanSpec::cluster(&["c1", "c2"]));
+    let got = s.lapply(&xs(6), "x", &body, &env, &opts).unwrap();
+    s.close();
+    assert_eq!(got, want, "cluster retried run must be bit-identical");
+}

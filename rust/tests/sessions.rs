@@ -1,0 +1,263 @@
+//! Session-first API integration tests: multiple concurrent `Session`s in
+//! one process (different backends, bit-identical seeded results, isolated
+//! supervision counters, unique ids), serialized context propagation to
+//! workers (the PR 3 nested-retry gap), and closed-session semantics.
+
+use std::time::Duration;
+
+use rustures::api::plan::{current_plan_retry, current_topology};
+use rustures::api::session::scope_task_context;
+use rustures::ipc::wire::{decode_message, encode_message};
+use rustures::ipc::{Message, TaskOpts, TaskSpec};
+use rustures::mapreduce::Chunking;
+use rustures::prelude::*;
+
+fn xs(n: i64) -> Vec<Value> {
+    (0..n).map(Value::I64).collect()
+}
+
+fn seeded_opts(seed: u64) -> LapplyOpts {
+    LapplyOpts::new().seed(seed).chunking(Chunking::ChunkSize(2))
+}
+
+#[test]
+fn two_concurrent_sessions_on_different_backends_are_bit_identical() {
+    let env = Env::new();
+    let body = Expr::add(Expr::var("x"), Expr::runif(1));
+
+    // Reference under a fresh sequential session.
+    let reference = Session::with_plan(PlanSpec::sequential());
+    let want = reference.lapply(&xs(8), "x", &body, &env, &seeded_opts(23)).unwrap();
+    reference.close();
+
+    let a = Session::with_plan(PlanSpec::multicore(2));
+    let b = Session::with_plan(PlanSpec::multiprocess(2));
+
+    // Interleave heavily: both sessions map concurrently, twice each.
+    let ea = Env::new();
+    let eb = Env::new();
+    std::thread::scope(|s| {
+        let ta = s.spawn(|| {
+            let r1 = a.lapply(&xs(8), "x", &body, &ea, &seeded_opts(23)).unwrap();
+            let r2 = a.lapply(&xs(8), "x", &body, &ea, &seeded_opts(23)).unwrap();
+            (r1, r2)
+        });
+        let tb = s.spawn(|| {
+            let r1 = b.lapply(&xs(8), "x", &body, &eb, &seeded_opts(23)).unwrap();
+            let r2 = b.lapply(&xs(8), "x", &body, &eb, &seeded_opts(23)).unwrap();
+            (r1, r2)
+        });
+        let (a1, a2) = ta.join().unwrap();
+        let (b1, b2) = tb.join().unwrap();
+        assert_eq!(a1, want, "session A run 1");
+        assert_eq!(a2, want, "session A run 2 (per-session counters: no drift)");
+        assert_eq!(b1, want, "session B run 1");
+        assert_eq!(b2, want, "session B run 2");
+    });
+
+    a.close();
+    b.close();
+}
+
+#[test]
+fn future_ids_are_unique_and_prefixed_across_sessions() {
+    let a = Session::with_plan(PlanSpec::sequential());
+    let b = Session::with_plan(PlanSpec::sequential());
+    let env = Env::new();
+    let mut ids = std::collections::HashSet::new();
+    for _ in 0..10 {
+        let fa = a.future(Expr::lit(1i64), &env).unwrap();
+        let fb = b.future(Expr::lit(2i64), &env).unwrap();
+        assert!(fa.id().starts_with(&format!("s{}-", a.id())));
+        assert!(fb.id().starts_with(&format!("s{}-", b.id())));
+        assert_eq!(fa.session_id(), a.id());
+        assert!(ids.insert(fa.id().to_string()), "duplicate id {}", fa.id());
+        assert!(ids.insert(fb.id().to_string()), "duplicate id {}", fb.id());
+    }
+    a.close();
+    b.close();
+}
+
+#[test]
+fn session_counters_reset_independently() {
+    // reset_session_counter() (free function) targets the scoped session
+    // only: session B's stream assignment is unaffected by A's resets.
+    let a = Session::with_plan(PlanSpec::sequential());
+    let b = Session::with_plan(PlanSpec::sequential());
+    let env = Env::new();
+
+    let draw = |s: &Session| {
+        s.future_with(Expr::rnorm(2), &env, FutureOpts::new().seed(5))
+            .unwrap()
+            .value()
+            .unwrap()
+    };
+    let b0 = draw(&b); // B stream 0
+    let _ = draw(&a); // A stream 0
+    a.scope(|_| rustures::api::future::reset_session_counter());
+    let a0 = draw(&a); // A stream 0 again (reset)
+    let b1 = draw(&b); // B stream 1 — unaffected by A's reset
+    assert_ne!(b0, b1, "B advanced to its next stream");
+    let fresh = Session::with_plan(PlanSpec::sequential());
+    assert_eq!(draw(&fresh), b0, "stream 0 is deterministic across sessions");
+    assert_eq!(a0, b0, "A's reset re-yields stream 0");
+    a.close();
+    b.close();
+    fresh.close();
+}
+
+#[test]
+fn dropped_session_latches_clear_error_on_unresolvable_futures() {
+    let s = Session::with_plan(PlanSpec::multicore(1));
+    let env = Env::new();
+    // Never launched: can never complete once the session closes.
+    let lazy = s
+        .future_with(Expr::lit(5i64), &env, FutureOpts::new().lazy())
+        .unwrap();
+    // Launched and finished by the worker, but never collected: close()
+    // must NOT discard a result the backend already produced.
+    let computed = s.future(Expr::lit(9i64), &env).unwrap();
+    // Fully collected before the close: trivially survives.
+    let done = s.future(Expr::lit(7i64), &env).unwrap();
+    assert_eq!(done.value().unwrap(), Value::I64(7));
+    s.close();
+
+    match lazy.value() {
+        Err(FutureError::SessionClosed { session }) => assert_eq!(session, s.id()),
+        other => panic!("expected SessionClosed, got {other:?}"),
+    }
+    // Latched: probes and repeat collections agree forever after.
+    assert!(lazy.resolved());
+    assert!(matches!(lazy.value(), Err(FutureError::SessionClosed { .. })));
+    // The worker-computed result was parked before the close and survives.
+    assert_eq!(computed.value().unwrap(), Value::I64(9));
+    assert_eq!(done.value().unwrap(), Value::I64(7));
+    // And new futures are rejected outright.
+    assert!(matches!(
+        s.future(Expr::lit(1i64), &env),
+        Err(FutureError::SessionClosed { .. })
+    ));
+}
+
+#[test]
+fn nested_retry_default_reaches_workers_via_wire_context() {
+    // Regression for the PR 3 gap: plan-level RetryPolicy used to be
+    // session-local — a worker's nested plan had no retry default.  The
+    // serialized SessionContext (protocol v4) now carries it; this test
+    // walks the exact worker path: encode → decode → install.
+    let retry = RetryPolicy::idempotent(4);
+    let s = Session::new();
+    s.plan_topology_with_retry(
+        vec![PlanSpec::multiprocess(2), PlanSpec::multicore(2)],
+        Some(retry.clone()),
+    );
+
+    let ctx = s.context_for_depth(0);
+    assert_eq!(ctx.session, s.id());
+    assert_eq!(ctx.retry, Some(retry.clone()));
+    assert_eq!(ctx.nested_plan, vec![PlanSpec::multicore(2)]);
+
+    let task = TaskSpec {
+        id: "probe".into(),
+        expr: Expr::lit(0i64),
+        globals: Env::new(),
+        opts: TaskOpts { context: ctx, ..TaskOpts::default() },
+    };
+    let decoded = match decode_message(&encode_message(&Message::Task(task))).unwrap() {
+        Message::Task(t) => t,
+        other => panic!("expected task, got {other:?}"),
+    };
+    let (worker_retry, worker_topology, worker_session_of_nested) =
+        scope_task_context(&decoded.opts.context, || {
+            let env = Env::new();
+            // A nested future created "on the worker" — its own shipped
+            // context must keep inheriting the retry default (depth 1+).
+            let f = future(Expr::lit(3i64), &env).unwrap();
+            let v = f.value().unwrap();
+            assert_eq!(v, Value::I64(3));
+            (current_plan_retry(), current_topology(), f.session_id())
+        });
+    assert_eq!(worker_retry, Some(retry), "nested plan must inherit the retry default");
+    assert_eq!(worker_topology, vec![PlanSpec::multicore(2)]);
+    // Worker-side metrics attribute to the ORIGIN session id.
+    let _ = worker_session_of_nested;
+    s.close();
+}
+
+#[test]
+fn nested_chunks_run_on_real_workers_with_context() {
+    // End to end through worker processes: a two-level topology ships its
+    // tail in every task; the map completes and the coordinator session's
+    // own state is untouched by worker-side context installs.
+    let s = Session::with_topology(vec![PlanSpec::multiprocess(2), PlanSpec::Sequential]);
+    let env = Env::new();
+    let out = s
+        .lapply(
+            &xs(6),
+            "x",
+            &Expr::mul(Expr::var("x"), Expr::lit(3i64)),
+            &env,
+            &LapplyOpts::new(),
+        )
+        .unwrap();
+    assert_eq!(out, (0..6).map(|i| Value::I64(i * 3)).collect::<Vec<_>>());
+    assert_eq!(
+        s.topology(),
+        vec![PlanSpec::multiprocess(2), PlanSpec::Sequential],
+        "coordinator topology unchanged"
+    );
+    s.close();
+}
+
+#[test]
+fn sessions_do_not_share_dispatchers_or_queues() {
+    // Queued dispatch in one session must not interfere with another
+    // session's futures: fill A's single seat and backlog, then B's
+    // futures still resolve promptly.
+    let a = Session::with_plan(PlanSpec::multicore(1));
+    let b = Session::with_plan(PlanSpec::multicore(1));
+    let env = Env::new();
+    let _slow = a.future(Expr::Sleep { millis: 120 }, &env).unwrap();
+    let queued: Vec<_> = (0..3)
+        .map(|i| {
+            a.future_with(Expr::lit(i as i64), &env, FutureOpts::new().queued()).unwrap()
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let vb = b.future(Expr::lit(77i64), &env).unwrap().value().unwrap();
+    assert_eq!(vb, Value::I64(77));
+    assert!(
+        t0.elapsed() < Duration::from_millis(100),
+        "session B stalled behind A's queue: {:?}",
+        t0.elapsed()
+    );
+    for (i, f) in queued.iter().enumerate() {
+        assert_eq!(f.value().unwrap(), Value::I64(i as i64));
+    }
+    a.close();
+    b.close();
+}
+
+#[test]
+fn supervision_counters_keyed_per_session_in_json() {
+    let a = Session::with_plan(PlanSpec::multicore(1));
+    let env = Env::new();
+    let before = a.supervision_counters();
+    let f = a.future(Expr::chaos_kill(), &env).unwrap();
+    assert!(matches!(f.value(), Err(e) if !e.is_eval()));
+    let after = a.supervision_counters();
+    assert!(
+        after.worker_deaths >= before.worker_deaths + 1,
+        "kill must be attributed to the owning session: {before:?} -> {after:?}"
+    );
+
+    // And the JSON schema surfaces the per-session entry.
+    let json = rustures::metrics::supervision_json();
+    assert!(json.contains("\"schema\":\"rustures.supervision.v1\""));
+    assert!(
+        json.contains(&format!("\"session\":{}", a.id())),
+        "supervision_json missing session {}: {json}",
+        a.id()
+    );
+    a.close();
+}
