@@ -1,15 +1,26 @@
-//! E8 — wall-clock scaling of a parallel map with worker count.
+//! E8 — wall-clock scaling of a parallel map with worker count, plus E13:
+//! the capacity ledger's acquire/release overhead (`BENCH_capacity.json`).
 //!
 //! The framework's raison d'être: `future_lapply` over latency-bound
 //! payloads (Sleep models I/O / remote-service waits, the honest choice on
 //! this 1-core container — see DESIGN.md §3 caveat) should scale ~linearly
 //! with workers; CPU-bound payloads (Spin) cannot on one core, and the
 //! bench shows both so the distinction is explicit.
+//!
+//! E13 answers "what did centralizing seat admission cost?": one ledger
+//! acquire+release cycle is compared against the seed's per-pool
+//! mutex+condvar slot path (re-created here as a baseline), with quota'd
+//! and contended variants.  Schema in BENCH.md.
 
 mod common;
 
-use common::{fmt_dur, header, row, time_once};
+use common::{
+    fmt_dur, header, json_row, measure, row, scale_iters, time_once, write_bench_json, Json,
+};
 use rustures::api::plan::{with_plan, PlanSpec};
+use rustures::capacity::{
+    set_session_limits, BreakerConfig, PoolRegistration, RevivePolicy, SessionLimits,
+};
 use rustures::prelude::*;
 
 const ELEMENTS: usize = 16;
@@ -42,7 +53,84 @@ fn calibrated_work() -> Expr {
     Expr::Work { iters }
 }
 
+/// E13: ledger acquire/release overhead vs the seed slot path.
+fn bench_capacity() {
+    let iters = scale_iters(20_000);
+
+    // The seed's admission shape: one pool-private Mutex<usize> + Condvar
+    // (ProcPool `slot_cv`, ThreadPool `free_slots`) — re-created here as
+    // the baseline the ledger replaced.
+    let seed = {
+        use std::sync::{Condvar, Mutex};
+        let slots = Mutex::new(4usize);
+        let cv = Condvar::new();
+        measure(1_000, iters, || {
+            let mut free = slots.lock().unwrap();
+            while *free == 0 {
+                free = cv.wait(free).unwrap();
+            }
+            *free -= 1;
+            drop(free);
+            *slots.lock().unwrap() += 1;
+            cv.notify_one();
+        })
+    };
+
+    let reg = PoolRegistration::register(
+        "bench",
+        &[("local".to_string(), 4)],
+        RevivePolicy::Never,
+        BreakerConfig::default(),
+    );
+    for _ in 0..4 {
+        reg.activate("local");
+    }
+
+    // Uncontended acquire+release through the ledger's single waiter queue.
+    let ledger = measure(1_000, iters, || {
+        let lease = reg.acquire(0).unwrap();
+        drop(lease);
+    });
+
+    // The same cycle with a session quota consulted on every admission.
+    let quota_session = 9_900_001u64;
+    set_session_limits(quota_session, SessionLimits::new().max_workers(4));
+    let quota = measure(1_000, iters, || {
+        let lease = reg.acquire(quota_session).unwrap();
+        drop(lease);
+    });
+    set_session_limits(quota_session, SessionLimits::new());
+
+    header(
+        "E13: capacity ledger acquire/release overhead",
+        &["mode              ", "mean      ", "p50       ", "p95       "],
+    );
+    let mut rows = Vec::new();
+    for (mode, stats) in [
+        ("seed-mutex-condvar", &seed),
+        ("ledger", &ledger),
+        ("ledger-quota", &quota),
+    ] {
+        row(&[
+            format!("{mode:<18}"),
+            format!("{:>10}", fmt_dur(stats.mean)),
+            format!("{:>10}", fmt_dur(stats.p50)),
+            format!("{:>10}", fmt_dur(stats.p95)),
+        ]);
+        rows.push(json_row(&[
+            ("mode", Json::Str(mode.to_string())),
+            ("iters", Json::Int(stats.n as i64)),
+            ("mean_ns", Json::Int(stats.mean.as_nanos() as i64)),
+            ("p50_ns", Json::Int(stats.p50.as_nanos() as i64)),
+            ("p95_ns", Json::Int(stats.p95.as_nanos() as i64)),
+        ]));
+    }
+    write_bench_json("capacity", rows);
+}
+
 fn main() {
+    bench_capacity();
+
     let sleep = Expr::Sleep { millis: MS };
     let work = calibrated_work();
 
@@ -51,6 +139,9 @@ fn main() {
         &["payload", "backend     ", "workers", "wall      ", "speedup"],
     );
 
+    // Smoke mode (scripts/bench.sh default) keeps the wall-clock table
+    // short; the E13 JSON above is the per-PR perf-trajectory artifact.
+    let worker_counts: &[usize] = if common::smoke() { &[1, 2] } else { &[1, 2, 4, 8] };
     for (label, payload) in [("sleep", &sleep), ("cpu", &work)] {
         let base = run_map(payload, PlanSpec::sequential());
         row(&[
@@ -60,7 +151,7 @@ fn main() {
             format!("{:>10}", fmt_dur(base)),
             format!("{:>7.2}x", 1.0),
         ]);
-        for workers in [1usize, 2, 4, 8] {
+        for workers in worker_counts.iter().copied() {
             for spec in
                 [PlanSpec::multicore(workers), PlanSpec::multiprocess(workers)]
             {

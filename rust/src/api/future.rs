@@ -172,6 +172,10 @@ pub struct Future {
     /// The owning session: lazy launches and restarts go back to it, and a
     /// closed session latches unresolved futures into `SessionClosed`.
     session: Session,
+    /// `max_in_flight` quota charge, taken (blocking) at creation and
+    /// returned on the first terminal transition — or, as the backstop,
+    /// when the future is dropped.
+    permit: Mutex<Option<crate::capacity::InFlightPermit>>,
     pub trace: Arc<FutureTrace>,
 }
 
@@ -203,6 +207,11 @@ pub fn future(expr: Expr, env: &Env) -> Result<Future, FutureError> {
 pub fn future_with(expr: Expr, env: &Env, opts: FutureOpts) -> Result<Future, FutureError> {
     let session = session::current();
     session.ensure_open()?;
+    // Per-session in-flight quota (SessionLimits::max_in_flight): blocks —
+    // never drops — while the session has that many unresolved futures
+    // outstanding.  The permit frees on the future's first terminal
+    // transition, or when it is dropped.
+    let permit = crate::capacity::admit_in_flight(session.origin_id());
     let id = session.next_future_id();
     let created_ns = now_ns();
 
@@ -270,6 +279,7 @@ pub fn future_with(expr: Expr, env: &Env, opts: FutureOpts) -> Result<Future, Fu
         restart_spec: Mutex::new(restart_spec),
         retry,
         session,
+        permit: Mutex::new(Some(permit)),
         trace,
     })
 }
@@ -303,6 +313,14 @@ impl Future {
     /// session for futures created on worker-side derived sessions).
     pub fn session_id(&self) -> u64 {
         self.session.origin_id()
+    }
+
+    /// Return the `max_in_flight` quota charge: the future reached a
+    /// terminal state, so it no longer counts against the session's
+    /// in-flight window.  Idempotent; the `Drop` of the permit inside
+    /// `Future` is the backstop for futures abandoned mid-flight.
+    fn release_permit(&self) {
+        self.permit.lock().unwrap().take();
     }
 
     /// Latch `SessionClosed` into an unresolvable future of a closed
@@ -409,10 +427,14 @@ impl Future {
         {
             let mut state = self.state.lock().unwrap();
             if self.latch_if_session_closed(&mut state).is_some() {
+                self.release_permit();
                 return true; // resolved, to a SessionClosed failure
             }
             match &*state {
-                State::Done(_) | State::Failed(_) => return true,
+                State::Done(_) | State::Failed(_) => {
+                    self.release_permit();
+                    return true;
+                }
                 State::Lazy(_) => {}
                 State::Running { .. } => {}
             }
@@ -424,7 +446,7 @@ impl Future {
             let _ = self.launch();
         }
         let mut state = self.state.lock().unwrap();
-        match &mut *state {
+        let is_terminal = match &mut *state {
             State::Running { handle, .. } => {
                 if handle.is_resolved() {
                     // Promote to Done so value() won't block.
@@ -444,7 +466,11 @@ impl Future {
             // Not reachable in practice: launch() above either converted the
             // state or latched its error.  Defensive false, not a panic.
             State::Lazy(_) => false,
+        };
+        if is_terminal {
+            self.release_permit();
         }
+        is_terminal
     }
 
     /// Block until resolved; relay captured output/conditions; return the
@@ -467,9 +493,10 @@ impl Future {
         }
         let mut state = self.state.lock().unwrap();
         if let Some(e) = self.latch_if_session_closed(&mut state) {
+            self.release_permit();
             return Err(e);
         }
-        match &mut *state {
+        let out = match &mut *state {
             State::Done(r) => Ok((**r).clone()),
             State::Failed(e) => Err(e.clone()),
             State::Running { handle, .. } => {
@@ -487,7 +514,11 @@ impl Future {
                 }
             }
             State::Lazy(_) => Err(FutureError::Launch("lazy future failed to launch".into())),
-        }
+        };
+        // Every arm above is terminal (Done, Failed, or a latched launch
+        // failure): the in-flight charge returns now.
+        self.release_permit();
+        out
     }
 
     /// Relay captured output + conditions exactly once across repeated

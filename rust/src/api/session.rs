@@ -46,7 +46,10 @@
 //! inherits the parent session's retry posture and topology instead of
 //! falling back to process-local defaults (the PR 3 supervision gap).
 //! Derived sessions are cached per (origin session, context), so repeated
-//! tasks reuse nested backends instead of rebuilding them per task.
+//! tasks reuse nested backends instead of rebuilding them per task; the
+//! cache is LRU-bounded (default 64 entries, `RUSTURES_CONTEXT_CACHE_CAP`
+//! overrides), so a long-lived worker serving many tenants does not grow
+//! without bound.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -306,6 +309,30 @@ impl Session {
         self.inner.scope.counters()
     }
 
+    // ----------------------------------------------------------- limits ----
+
+    /// Install per-session admission limits, enforced by the capacity
+    /// ledger: `max_workers` caps this session's concurrent execution-slot
+    /// leases across every backend (blocking seat acquisition — quota'd
+    /// launches wait, they are never dropped); `max_in_flight` bounds
+    /// created-but-unresolved futures at creation time.  Derived
+    /// worker-side sessions share the originating session's limits.
+    pub fn set_limits(&self, limits: crate::capacity::SessionLimits) {
+        crate::capacity::set_session_limits(self.inner.origin, limits);
+    }
+
+    /// The admission limits currently installed for this session.
+    pub fn limits(&self) -> crate::capacity::SessionLimits {
+        crate::capacity::session_limits(self.inner.origin)
+    }
+
+    /// A fresh session under `spec` with admission limits installed.
+    pub fn with_limits(spec: PlanSpec, limits: crate::capacity::SessionLimits) -> Session {
+        let s = Session::with_plan(spec);
+        s.set_limits(limits);
+        s
+    }
+
     // ------------------------------------------------------------ plan ----
 
     /// `plan(spec)` for this session: a single backend for all its futures.
@@ -457,6 +484,10 @@ impl Session {
         self.inner.closed.store(true, Ordering::SeqCst);
         self.shutdown_backends();
         purge_contexts_for(self.inner.origin, true);
+        // Lift the session's admission limits: launchers blocked on its
+        // quotas wake (their pools are torn down, so they surface launch
+        // errors rather than waiting on a quota nobody will ever drain).
+        crate::capacity::clear_session_limits(self.inner.origin);
         // Evict the metrics registry entry (never the shared default's):
         // per-session counters of a closed session stop being enumerable,
         // but the handle's own scope Arc — and the process-wide totals —
@@ -530,11 +561,13 @@ impl Drop for Inner {
         // (origin != id) attribute to their origin and must not evict it;
         // the default session (id 0) is never dropped.  Backends shut
         // down via their own Drop impls as the map drops.
-        // NOTE: only the SCOPES and PENDING_RETIRE locks are taken here —
-        // never REGISTRY or CONTEXT_SESSIONS, either of which may be held
-        // by the caller releasing the last handle (see `origin_lookup`).
+        // NOTE: only the SCOPES, capacity-ledger, and PENDING_RETIRE locks
+        // are taken here — never REGISTRY or CONTEXT_SESSIONS, either of
+        // which may be held by the caller releasing the last handle (see
+        // `origin_lookup`).
         if self.origin == self.id && self.id != 0 {
             crate::metrics::drop_session_scope(self.id);
+            crate::capacity::clear_session_limits(self.id);
             PENDING_RETIRE.lock().unwrap().push(self.id);
         }
     }
@@ -543,10 +576,49 @@ impl Drop for Inner {
 // ------------------------------------------------- derived task sessions ----
 
 /// Cache of worker-side derived sessions, keyed by (origin session id,
-/// rendered context).  Reuse keeps nested backends alive across the tasks
-/// of one map instead of rebuilding pools per task; isolation holds because
-/// the origin session id is part of the key.
-static CONTEXT_SESSIONS: Mutex<Option<HashMap<(u64, String), Session>>> = Mutex::new(None);
+/// rendered context), valued with a last-use stamp for LRU eviction.
+/// Reuse keeps nested backends alive across the tasks of one map instead
+/// of rebuilding pools per task; isolation holds because the origin
+/// session id is part of the key.  **Bounded**: at most
+/// [`context_cache_cap`] entries (default 64, `RUSTURES_CONTEXT_CACHE_CAP`
+/// overrides) — a worker serving many origin-session × topology-tail
+/// pairs evicts the least-recently-used derived session (its nested
+/// backends shut down; the same context later re-derives a fresh one)
+/// instead of growing for the worker's lifetime.
+static CONTEXT_SESSIONS: Mutex<Option<HashMap<(u64, String), (Session, u64)>>> = Mutex::new(None);
+
+/// Monotonic use-stamp source for the cache's LRU order.
+static CONTEXT_CLOCK: AtomicU64 = AtomicU64::new(1);
+
+/// Cached cap (0 = not yet read from the environment).
+static CONTEXT_CACHE_CAP: AtomicU64 = AtomicU64::new(0);
+
+const DEFAULT_CONTEXT_CACHE_CAP: u64 = 64;
+
+fn context_cache_cap() -> usize {
+    let v = CONTEXT_CACHE_CAP.load(Ordering::Relaxed);
+    if v != 0 {
+        return v as usize;
+    }
+    let cap = std::env::var("RUSTURES_CONTEXT_CACHE_CAP")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .filter(|n| *n > 0)
+        .unwrap_or(DEFAULT_CONTEXT_CACHE_CAP);
+    CONTEXT_CACHE_CAP.store(cap, Ordering::Relaxed);
+    cap as usize
+}
+
+#[cfg(test)]
+pub(crate) fn set_context_cache_cap_for_tests(n: u64) {
+    CONTEXT_CACHE_CAP.store(n, Ordering::Relaxed);
+}
+
+/// Number of cached derived sessions (tests assert the LRU bound holds).
+#[cfg(test)]
+pub(crate) fn context_cache_len() -> usize {
+    CONTEXT_SESSIONS.lock().unwrap().as_ref().map(|m| m.len()).unwrap_or(0)
+}
 
 fn context_key(ctx: &SessionContext) -> (u64, String) {
     // Fast path: the overwhelmingly common leaf context (no nested plan,
@@ -649,11 +721,42 @@ fn context_session_slow(ctx: &SessionContext, key: &(u64, String)) -> (Session, 
     if !cacheable {
         return (Session::for_context(ctx, true), false);
     }
-    let session = guard
-        .get_or_insert_with(HashMap::new)
-        .entry(key.clone())
-        .or_insert_with(|| Session::for_context(ctx, false))
-        .clone();
+    let map = guard.get_or_insert_with(HashMap::new);
+    let stamp = CONTEXT_CLOCK.fetch_add(1, Ordering::SeqCst);
+    if let Some((session, last_use)) = map.get_mut(key) {
+        *last_use = stamp;
+        return (session.clone(), true);
+    }
+    // Miss: make room first (LRU — evict the least-recently-used derived
+    // sessions until the insert fits the cap), then insert.
+    let cap = context_cache_cap().max(1);
+    let mut evicted: Vec<Session> = Vec::new();
+    while map.len() >= cap {
+        let Some(oldest) = map.iter().min_by_key(|(_, v)| v.1).map(|(k, _)| k.clone())
+        else {
+            break;
+        };
+        if let Some((s, _)) = map.remove(&oldest) {
+            evicted.push(s);
+        }
+    }
+    let session = Session::for_context(ctx, false);
+    map.insert(key.clone(), (session.clone(), stamp));
+    drop(guard);
+    if !evicted.is_empty() {
+        // Invalidate every thread's memo BEFORE tearing the evicted
+        // sessions down (same discipline as purge_contexts_for): their
+        // nested backends shut down NOT marked closed, so an in-flight
+        // task of an evicted context sees recoverable launch errors and
+        // the same context later re-derives cleanly.  (Eviction under
+        // pressure CAN fail a still-running task's nested futures — the
+        // same trade a re-plan makes; size the cap above the number of
+        // concurrently live tenants to avoid it.)
+        CONTEXT_GEN.fetch_add(1, Ordering::SeqCst);
+        for s in evicted {
+            s.shutdown_backends();
+        }
+    }
     (session, true)
 }
 
@@ -670,7 +773,7 @@ fn purge_contexts_for(id: u64, mark_closed: bool) {
             Some(map) => {
                 let keys: Vec<(u64, String)> =
                     map.keys().filter(|(sid, _)| *sid == id).cloned().collect();
-                keys.into_iter().filter_map(|k| map.remove(&k)).collect()
+                keys.into_iter().filter_map(|k| map.remove(&k).map(|(s, _)| s)).collect()
             }
             None => Vec::new(),
         }
@@ -890,6 +993,59 @@ mod tests {
         let a = scope_task_context(&ctx, || current().id());
         let b = scope_task_context(&ctx, || current().id());
         assert_ne!(a, b, "retired origin: derived sessions are ephemeral, never re-cached");
+    }
+
+    #[test]
+    fn session_limits_install_and_clear_on_close() {
+        let s = Session::with_limits(
+            PlanSpec::sequential(),
+            crate::capacity::SessionLimits::new().max_workers(2).max_in_flight(8),
+        );
+        assert_eq!(s.limits().max_workers, Some(2));
+        assert_eq!(s.limits().max_in_flight, Some(8));
+        s.close();
+        assert_eq!(s.limits(), crate::capacity::SessionLimits::default());
+    }
+
+    /// Restores the context-cache cap even if the test body panics, so a
+    /// failing assertion cannot leave the global cache tiny for the rest
+    /// of the (parallel) test run.
+    struct CapGuard(u64);
+    impl Drop for CapGuard {
+        fn drop(&mut self) {
+            set_context_cache_cap_for_tests(self.0);
+        }
+    }
+
+    #[test]
+    fn context_cache_evicts_lru_and_rederives() {
+        // Only assertions robust to CONCURRENT cache users (other tests'
+        // worker evaluations insert leaf contexts too): the cap bound, the
+        // guaranteed eviction of the oldest un-touched entry, and that a
+        // re-derived context caches again.  (Survivors after any insert
+        // are exactly the cap newest stamps, so the oldest of 4 distinct
+        // inserts under cap 2 cannot remain.)
+        let _restore = CapGuard(context_cache_cap() as u64);
+        set_context_cache_cap_for_tests(2);
+        let mk = |sid: u64| SessionContext {
+            session: sid, // unknown (non-local) origins: cacheable
+            nested_plan: vec![PlanSpec::Sequential],
+            retry: None,
+            counter_base: 0,
+        };
+        let contexts: Vec<SessionContext> = (0..4).map(|i| mk(9_200_001 + i)).collect();
+        let first_id = scope_task_context(&contexts[0], || current().id());
+        for c in &contexts[1..] {
+            scope_task_context(c, || current().id());
+        }
+        assert!(context_cache_len() <= 2, "cache must stay within its cap");
+        let rederived = scope_task_context(&contexts[0], || current().id());
+        assert_ne!(
+            first_id, rederived,
+            "the oldest context must have been evicted and re-derive a fresh session"
+        );
+        let again = scope_task_context(&contexts[0], || current().id());
+        assert_eq!(rederived, again, "a re-derived context is cached again");
     }
 
     #[test]

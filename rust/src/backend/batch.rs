@@ -11,7 +11,10 @@
 //!
 //! Blocking semantic: `launch()` blocks while `workers` jobs are pending or
 //! running — capacity frees when a job *completes*, not when its result is
-//! collected (matching the other backends).
+//! collected (matching the other backends).  Node-slot **admission** is the
+//! scheduler daemon's per-job [`crate::capacity::CapacityLedger`] lease
+//! (per-session quotas apply there); a daemon that dies surfaces structured
+//! `FutureError`s to every waiting handle instead of a frozen `Pending`.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -32,11 +35,18 @@ pub struct BatchBackend {
 impl BatchBackend {
     /// Spool the task file and submit (fire-and-forget, like sbatch).
     fn submit(&self, task: TaskSpec) -> Result<Box<dyn TaskHandle>, FutureError> {
+        if !self.scheduler.daemon_alive() {
+            return Err(FutureError::Launch("batch scheduler daemon died".into()));
+        }
+        // The originating session rides along: the scheduler daemon's
+        // ledger admission charges the job's node-slot lease to it, so
+        // per-session quotas hold on the batch backend too.
+        let session = task.opts.context.session;
         let task_file = self.scheduler.spool().join(format!("task-{}.task", task.id));
         let bytes = encode_message(&Message::Task(task));
         std::fs::write(&task_file, &bytes)
             .map_err(|e| FutureError::Launch(format!("spool task: {e}")))?;
-        let job = self.scheduler.submit(task_file);
+        let job = self.scheduler.submit_for_session(task_file, session);
         Ok(Box::new(BatchHandle {
             scheduler: Arc::clone(&self.scheduler),
             job,
@@ -79,8 +89,13 @@ impl Backend for BatchBackend {
 
     fn launch(&self, task: TaskSpec) -> Result<Box<dyn TaskHandle>, FutureError> {
         // Block while the scheduler is saturated (capacity frees on job
-        // completion, matching the paper's blocking semantic).
+        // completion, matching the paper's blocking semantic).  This is
+        // client-side backpressure only — the authoritative seat admission
+        // is the daemon's per-job ledger lease.
         loop {
+            if !self.scheduler.daemon_alive() {
+                return Err(FutureError::Launch("batch scheduler daemon died".into()));
+            }
             let (pending, running, _) = self.scheduler.load();
             if pending + running < self.workers {
                 break;
@@ -142,7 +157,21 @@ impl BatchHandle {
                 Err(FutureError::WorkerDied { detail: format!("batch job failed: {detail}") })
             }
             Some(JobState::Cancelled) => Err(FutureError::Cancelled),
-            Some(JobState::Pending) | Some(JobState::Running { .. }) => Ok(None),
+            Some(JobState::Pending) | Some(JobState::Running { .. }) => {
+                if self.scheduler.daemon_alive() {
+                    Ok(None)
+                } else {
+                    // A dead daemon can never admit or harvest this job:
+                    // surface the structured failure instead of polling a
+                    // frozen state forever.
+                    Err(FutureError::WorkerDied {
+                        detail: format!(
+                            "batch scheduler daemon died; job {} cannot complete",
+                            self.job
+                        ),
+                    })
+                }
+            }
             None => Err(FutureError::Channel("job vanished from scheduler".into())),
         }
     }
@@ -154,7 +183,10 @@ impl TaskHandle for BatchHandle {
             return true;
         }
         match self.scheduler.poll(self.job) {
-            Some(JobState::Pending) | Some(JobState::Running { .. }) => false,
+            Some(JobState::Pending) | Some(JobState::Running { .. }) => {
+                // Resolved-to-an-error when the daemon died under the job.
+                !self.scheduler.daemon_alive()
+            }
             _ => true,
         }
     }

@@ -11,11 +11,12 @@
 
 use std::net::{TcpListener, TcpStream};
 use std::process::{Child, Command, Stdio};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::api::error::FutureError;
 use crate::backend::procpool::{Connection, ProcPool, Spawner};
+use crate::backend::supervisor::supervisor_config;
 use crate::backend::{Backend, TaskHandle};
 use crate::ipc::TaskSpec;
 use crate::util::exe::worker_exe;
@@ -136,22 +137,27 @@ impl ClusterBackend {
             .set_nonblocking(true)
             .map_err(|e| FutureError::Launch(format!("listener mode: {e}")))?;
 
-        // Respawns round-robin over the host list.
+        // Seats are keyed by host in the capacity ledger: the ledger picks
+        // the host for every launch and revive (per-host respawn budgets,
+        // per-host circuit breakers — a dying host stops receiving
+        // resubmissions while healthy hosts absorb the load), and the
+        // spawner brings a worker up on exactly the host it is asked for.
+        // A host named twice in the plan contributes two seats.
         let hosts_owned: Vec<String> = hosts.to_vec();
-        let next = Mutex::new(0usize);
+        let mut seats: Vec<(String, usize)> = Vec::new();
+        for host in &hosts_owned {
+            match seats.iter_mut().find(|(h, _)| h == host) {
+                Some((_, n)) => *n += 1,
+                None => seats.push((host.clone(), 1)),
+            }
+        }
         let listener = Arc::new(listener);
-        let spawner_hosts = hosts_owned.clone();
         let spawner_listener = Arc::clone(&listener);
-        let spawner: Spawner = Box::new(move || {
-            let mut idx = next.lock().unwrap();
-            let host = spawner_hosts[*idx % spawner_hosts.len()].clone();
-            *idx += 1;
-            // Release the index lock before the (possibly slow) spawn so
-            // concurrent respawns don't serialize on it.
-            drop(idx);
-            launch_host_worker(&spawner_listener, &host, accept_timeout)
+        let spawner: Spawner = Box::new(move |host| {
+            launch_host_worker(&spawner_listener, host, accept_timeout)
         });
-        let pool = ProcPool::new(hosts_owned.len(), spawner)?;
+        let pool =
+            ProcPool::new_with_hosts("cluster", &seats, spawner, &supervisor_config())?;
         Ok(ClusterBackend { pool, hosts: hosts_owned })
     }
 

@@ -44,7 +44,9 @@ fn spawn_stdio_worker() -> Result<Connection, FutureError> {
 
 impl MultiprocessBackend {
     pub fn new(workers: usize) -> Result<Self, FutureError> {
-        let spawner: Spawner = Box::new(spawn_stdio_worker);
+        // One simulated host ("local"): the ledger key every seat,
+        // budget, and breaker of this pool lives under.
+        let spawner: Spawner = Box::new(|_host| spawn_stdio_worker());
         Ok(MultiprocessBackend { pool: ProcPool::new(workers, spawner)? })
     }
 }

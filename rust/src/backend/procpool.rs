@@ -5,9 +5,17 @@
 //! moment it **resolves** its future — not when the result is collected.
 //! Creating three futures on two workers must unblock as soon as either of
 //! the first two finishes, even if no one has called `value()` yet.  The
-//! per-worker reader thread therefore returns the worker to the idle set as
-//! soon as the `Result` frame arrives, parking the result in a shared map
-//! until the handle asks for it.
+//! per-worker reader thread therefore returns the worker to the idle set
+//! (and releases its [`SlotLease`]) as soon as the `Result` frame arrives,
+//! parking the result in a shared map until the handle asks for it.
+//!
+//! Seat **admission** lives in the [`crate::capacity::CapacityLedger`]:
+//! every launch acquires a lease through the ledger's single waiter queue
+//! (per-session quotas and the dead-pool guard apply there), keyed by the
+//! worker's **host** — so a heterogeneous cluster gets per-host respawn
+//! budgets and per-host circuit breakers for free.  The pool keeps only
+//! the seat *objects* (writers, children, reader threads); it holds no
+//! private slot counters or admission condvars.
 //!
 //! `immediateCondition`s are relayed **live** from the reader threads — the
 //! paper's "relayed as soon as possible ... depending on the backend used".
@@ -20,14 +28,18 @@ use std::sync::{Arc, Condvar, Mutex, OnceLock, Weak};
 use crate::api::conditions::relay_immediate;
 use crate::api::error::FutureError;
 use crate::backend::dispatch::{default_backlog, CompletionWaker, Dispatcher};
-use crate::backend::supervisor::{supervisor_config, RespawnBudget, SupervisorConfig};
+use crate::backend::supervisor::{supervisor_config, SupervisorConfig};
 use crate::backend::TaskHandle;
+use crate::capacity::{Acquired, PoolRegistration, RevivePolicy, SlotLease};
 use crate::ipc::frame::{read_message, write_message};
 use crate::ipc::{Message, TaskResult, TaskSpec};
 
 /// A connected worker's coordinator-side seat: the write half + lifecycle.
 pub struct Seat {
     pub id: u64,
+    /// The (possibly simulated) host this worker runs on — the ledger key
+    /// for its seat, budget, and breaker.
+    host: String,
     writer: Box<dyn Write + Send>,
     child: Option<Child>,
 }
@@ -82,12 +94,15 @@ type Parked = Result<TaskResult, FutureError>;
 struct Inner {
     /// Workers ready for a task.
     idle: Vec<Seat>,
-    /// worker id → (seat, task id) while a task is in flight.
-    busy: HashMap<u64, (Seat, String)>,
+    /// worker id → (seat, task id, seat lease) while a task is in flight.
+    /// The lease releases (seat frees) when the reader parks the result,
+    /// or is forfeited (seat dies) when the worker goes down.
+    busy: HashMap<u64, (Seat, String, SlotLease)>,
     /// worker id → task id reserved *before* the task frame is written.
     /// Fast tasks can complete before `launch` re-acquires the lock; the
     /// reader parks such results against this reservation instead of
-    /// dropping them (the send/insert race).
+    /// dropping them (the send/insert race).  `launch` still owns the seat
+    /// and its lease for these workers.
     pending: HashMap<u64, String>,
     /// task id → parked outcome, until the handle collects it.
     results: HashMap<String, Parked>,
@@ -97,24 +112,21 @@ struct Inner {
     waiters: HashMap<String, (Arc<CompletionWaker>, u64)>,
     /// Task ids whose handles were dropped: discard their results.
     abandoned: HashSet<String>,
-    /// Live workers (idle + busy + being spawned).
-    alive: usize,
     shutting_down: bool,
     next_worker_id: u64,
 }
 
 struct Shared {
     inner: Mutex<Inner>,
+    /// This pool's seats in the capacity ledger — the ONLY admission path.
+    reg: Arc<PoolRegistration>,
     /// Session-attributed supervision metrics sink, captured from the
     /// constructing session (see `metrics::ambient_scope`).
     scope: crate::metrics::CounterScope,
-    /// A worker became idle (or capacity changed).
-    slot_cv: Condvar,
     /// A result was parked.
     result_cv: Condvar,
     /// A worker died (or the pool is shutting down) — wakes the health
-    /// monitor.  Deliberately separate from `slot_cv`: the monitor must
-    /// never consume a `notify_one` meant for a parked launcher.
+    /// monitor (seat admission itself is the ledger's waiter queue).
     death_cv: Condvar,
 }
 
@@ -125,19 +137,16 @@ pub struct Connection {
     pub child: Option<Child>,
 }
 
-/// Spawner contract: produce a fresh connected worker transport.
-pub type Spawner = Box<dyn Fn() -> Result<Connection, FutureError> + Send + Sync>;
+/// Spawner contract: produce a fresh connected worker transport **on the
+/// given host** (the ledger picks the host; multiprocess pools only ever
+/// see `"local"`).
+pub type Spawner = Box<dyn Fn(&str) -> Result<Connection, FutureError> + Send + Sync>;
 
 /// A pool of remote workers with resolution-frees-the-worker semantics.
 pub struct ProcPool {
     shared: Arc<Shared>,
     spawner: Spawner,
     workers: usize,
-    /// Lifetime respawn allowance shared by the health monitor and the
-    /// launch path's on-demand respawn — ONE cap on replacement workers,
-    /// however they come up (`None` = supervision disabled: the historical
-    /// unbudgeted on-demand respawn).
-    budget: Option<Arc<RespawnBudget>>,
     /// Lazily-started queued-dispatch front (see [`crate::backend::dispatch`]).
     dispatcher: OnceLock<Dispatcher>,
 }
@@ -152,8 +161,9 @@ fn notify_task_waiter(inner: &mut Inner, task_id: &str) {
 }
 
 impl ProcPool {
-    /// Spawn all `workers` eagerly (PSOCK-style: cluster set up once),
-    /// supervised per the process-wide [`supervisor_config`].
+    /// Spawn all `workers` eagerly on one simulated host (PSOCK-style:
+    /// cluster set up once), supervised per the process-wide
+    /// [`supervisor_config`].
     pub fn new(workers: usize, spawner: Spawner) -> Result<Arc<Self>, FutureError> {
         Self::new_configured(workers, spawner, &supervisor_config())
     }
@@ -166,8 +176,29 @@ impl ProcPool {
         cfg: &SupervisorConfig,
     ) -> Result<Arc<Self>, FutureError> {
         let workers = workers.max(1);
+        Self::new_with_hosts("multisession", &[("local".to_string(), workers)], spawner, cfg)
+    }
+
+    /// A pool whose seats are spread over named hosts (`host` × seat
+    /// count) — the cluster shape.  Each host gets its own respawn budget
+    /// and circuit breaker in the ledger.
+    pub fn new_with_hosts(
+        backend_name: &'static str,
+        hosts: &[(String, usize)],
+        spawner: Spawner,
+        cfg: &SupervisorConfig,
+    ) -> Result<Arc<Self>, FutureError> {
+        let workers: usize = hosts.iter().map(|(_, n)| n).sum::<usize>().max(1);
+        // Supervision ON: per-host budgeted revives (monitor + on-demand
+        // launch path share each host's allowance).  OFF: the historical
+        // unbudgeted on-demand respawn.
+        let policy = if cfg.respawn {
+            RevivePolicy::Budgeted(cfg.max_respawns)
+        } else {
+            RevivePolicy::Unbudgeted
+        };
+        let reg = Arc::new(PoolRegistration::register(backend_name, hosts, policy, cfg.breaker));
         let shared = Arc::new(Shared {
-            scope: crate::metrics::ambient_scope(),
             inner: Mutex::new(Inner {
                 idle: Vec::with_capacity(workers),
                 busy: HashMap::new(),
@@ -175,38 +206,41 @@ impl ProcPool {
                 results: HashMap::new(),
                 waiters: HashMap::new(),
                 abandoned: HashSet::new(),
-                alive: 0,
                 shutting_down: false,
                 next_worker_id: 0,
             }),
-            slot_cv: Condvar::new(),
+            reg,
+            scope: crate::metrics::ambient_scope(),
             result_cv: Condvar::new(),
             death_cv: Condvar::new(),
         });
-        let budget = if cfg.respawn { Some(RespawnBudget::new(cfg.max_respawns)) } else { None };
         let pool = Arc::new(ProcPool {
             shared,
             spawner,
             workers,
-            budget: budget.clone(),
             dispatcher: OnceLock::new(),
         });
-        for _ in 0..workers {
-            let seat = pool.spawn_seat()?;
-            let mut inner = pool.shared.inner.lock().unwrap();
-            inner.alive += 1;
-            inner.idle.push(seat);
+        for (host, seats) in hosts {
+            for _ in 0..*seats {
+                let seat = pool.spawn_seat(host)?;
+                let mut inner = pool.shared.inner.lock().unwrap();
+                inner.idle.push(seat);
+                drop(inner);
+                // Activate AFTER the seat is in the idle set: a lease is
+                // never granted for a seat that is not there yet.
+                pool.shared.reg.activate(host);
+            }
         }
-        if let Some(budget) = budget {
+        if cfg.respawn {
             let weak = Arc::downgrade(&pool);
             let poll = cfg.poll;
             // Detached on purpose: the monitor holds only a Weak and exits
             // on shutdown (death_cv wake) or when the pool is dropped.
             // A failed monitor spawn is tolerable here: the launch path's
-            // on-demand respawn still revives capacity (same budget).
+            // on-demand revive still restores capacity (same budget).
             let _ = std::thread::Builder::new()
                 .name("rustures-procpool-monitor".into())
-                .spawn(move || monitor_loop(weak, budget, poll));
+                .spawn(move || monitor_loop(weak, poll));
         }
         Ok(pool)
     }
@@ -215,9 +249,14 @@ impl ProcPool {
         self.workers
     }
 
-    /// Create a seat + its reader thread.
-    fn spawn_seat(&self) -> Result<Seat, FutureError> {
-        let conn = (self.spawner)()?;
+    /// This pool's capacity-ledger registration (tests/diagnostics).
+    pub fn registration(&self) -> &Arc<PoolRegistration> {
+        &self.shared.reg
+    }
+
+    /// Create a seat + its reader thread on `host`.
+    fn spawn_seat(&self, host: &str) -> Result<Seat, FutureError> {
+        let conn = (self.spawner)(host)?;
         let id = {
             let mut inner = self.shared.inner.lock().unwrap();
             inner.next_worker_id += 1;
@@ -228,87 +267,96 @@ impl ProcPool {
             .name(format!("rustures-reader-{id}"))
             .spawn(move || reader_loop(id, conn.reader, shared))
             .map_err(|e| FutureError::Launch(format!("spawn reader: {e}")))?;
-        Ok(Seat { id, writer: conn.writer, child: conn.child })
+        Ok(Seat { id, host: host.to_string(), writer: conn.writer, child: conn.child })
     }
 
-    /// Launch a task, blocking while every worker is busy (a worker frees
-    /// on *resolution* of its task).
-    pub fn launch(self: &Arc<Self>, task: TaskSpec) -> Result<Box<dyn TaskHandle>, FutureError> {
-        let task_id = task.id.clone();
-        let mut seat = {
-            let mut inner = self.shared.inner.lock().unwrap();
-            loop {
-                if inner.shutting_down {
-                    return Err(FutureError::Launch("pool is shutting down".into()));
-                }
-                if let Some(seat) = inner.idle.pop() {
-                    // Reserve before sending: a fast worker may finish the
-                    // task before we re-acquire the lock below.
-                    inner.pending.insert(seat.id, task_id.clone());
-                    break seat;
-                }
-                if inner.alive < self.workers {
-                    // A worker died earlier: restore capacity — charged to
-                    // the SAME respawn budget the monitor uses, so a
-                    // crash-looping workload cannot fork-bomb the host
-                    // through the launch path either.  (`budget: None` =
-                    // supervision disabled: historical unbudgeted respawn.)
-                    let allowed = self.budget.as_ref().map(|b| b.try_take()).unwrap_or(true);
-                    if !allowed {
-                        if inner.alive == 0 {
-                            // Nothing alive and nothing may be revived:
-                            // error out instead of parking forever.
-                            return Err(FutureError::Launch(
-                                "all pool workers died and the respawn budget is exhausted"
-                                    .into(),
-                            ));
+    /// Acquire a seat through the ledger and match it to an idle worker.
+    /// The ledger may instead hand back a revive ticket (a dead seat whose
+    /// host's budget and breaker admit an on-demand respawn) — then we
+    /// spawn the replacement ourselves and lease it directly.
+    fn claim_seat(
+        self: &Arc<Self>,
+        task: &TaskSpec,
+    ) -> Result<(Seat, SlotLease), FutureError> {
+        loop {
+            match self.shared.reg.acquire_or_revive(task.opts.context.session)? {
+                Acquired::Seat(lease) => {
+                    let mut inner = self.shared.inner.lock().unwrap();
+                    if inner.shutting_down {
+                        return Err(FutureError::Launch("pool is shutting down".into()));
+                    }
+                    match inner.idle.iter().position(|s| s.host == lease.host()) {
+                        Some(pos) => {
+                            let seat = inner.idle.remove(pos);
+                            inner.pending.insert(seat.id, task.id.clone());
+                            return Ok((seat, lease));
                         }
-                        // Live workers remain: wait for one to free.
-                    } else {
-                        inner.alive += 1;
-                        drop(inner);
-                        match self.spawn_seat() {
-                            Ok(seat) => {
-                                self.shared.scope.respawn();
-                                let mut inner = self.shared.inner.lock().unwrap();
-                                inner.pending.insert(seat.id, task_id.clone());
-                                break seat;
-                            }
-                            Err(e) => {
-                                self.shared.inner.lock().unwrap().alive -= 1;
-                                // The reservation is released: wake launchers
-                                // parked in this same wait loop so they observe
-                                // alive < workers and retry the spawn themselves
-                                // (without this they could sleep forever after a
-                                // failed respawn).
-                                self.shared.slot_cv.notify_all();
-                                return Err(e);
-                            }
+                        None => {
+                            // The leased seat died between grant and pop
+                            // (idle-death race): forfeit restores the
+                            // ledger's truth (the seat is dead) and we
+                            // re-enter admission — the revive machinery
+                            // brings real capacity back.
+                            drop(inner);
+                            lease.forfeit();
+                            continue;
                         }
                     }
                 }
-                inner = self.shared.slot_cv.wait(inner).unwrap();
+                Acquired::Revive(ticket) => {
+                    match self.spawn_seat(ticket.host()) {
+                        Ok(mut seat) => {
+                            self.shared.scope.respawn();
+                            let lease = ticket.commit_lease();
+                            let mut inner = self.shared.inner.lock().unwrap();
+                            if inner.shutting_down {
+                                drop(inner);
+                                seat.kill();
+                                return Err(FutureError::Launch(
+                                    "pool is shutting down".into(),
+                                ));
+                            }
+                            inner.pending.insert(seat.id, task.id.clone());
+                            return Ok((seat, lease));
+                        }
+                        // Dropping the ticket aborts the revive (the seat
+                        // returns to dead; the budget charge stands) and
+                        // wakes other parked launchers to try themselves.
+                        Err(e) => return Err(e),
+                    }
+                }
             }
-        };
+        }
+    }
+
+    /// Launch a task, blocking while every worker is busy (a worker frees
+    /// on *resolution* of its task; admission — including per-session
+    /// quotas and the dead-pool guard — is the capacity ledger's).
+    pub fn launch(self: &Arc<Self>, task: TaskSpec) -> Result<Box<dyn TaskHandle>, FutureError> {
+        if self.shared.inner.lock().unwrap().shutting_down {
+            return Err(FutureError::Launch("pool is shutting down".into()));
+        }
+        let task_id = task.id.clone();
+        let (mut seat, lease) = self.claim_seat(&task)?;
+        let host = seat.host.clone();
 
         // Send outside the lock: serializing large globals must not stall
         // other launches or reader threads.
         if let Err(first_err) = seat.send_task(&task) {
+            // The worker died at the write: feed the breaker, then retry
+            // once on a fresh worker of the SAME host, reusing the lease
+            // (net seat accounting is unchanged).
             seat.kill();
+            self.shared.reg.record_death(&host);
             {
-                // Dead worker's slot is immediately re-reserved for the
-                // retry spawn, so `alive` is unchanged net.
                 let mut inner = self.shared.inner.lock().unwrap();
                 inner.pending.remove(&seat.id);
             }
-            // One retry on a fresh worker.
-            seat = match self.spawn_seat() {
+            seat = match self.spawn_seat(&host) {
                 Ok(s) => s,
                 Err(e) => {
-                    self.shared.inner.lock().unwrap().alive -= 1;
-                    // Capacity freed: wake parked launchers (same hang as
-                    // the spawn-retry path above).
-                    self.shared.slot_cv.notify_all();
+                    // Could not replace it: the seat is genuinely dead.
+                    lease.forfeit();
                     return Err(e);
                 }
             };
@@ -317,12 +365,13 @@ impl ProcPool {
                 inner.pending.insert(seat.id, task_id.clone());
             }
             if let Err(e2) = seat.send_task(&task) {
-                let mut inner = self.shared.inner.lock().unwrap();
-                inner.pending.remove(&seat.id);
-                inner.alive -= 1;
-                drop(inner);
+                {
+                    let mut inner = self.shared.inner.lock().unwrap();
+                    inner.pending.remove(&seat.id);
+                }
                 seat.kill();
-                self.shared.slot_cv.notify_all();
+                self.shared.reg.record_death(&host);
+                lease.forfeit();
                 return Err(FutureError::Channel(format!(
                     "send to fresh worker failed after '{first_err}': {e2}"
                 )));
@@ -337,16 +386,18 @@ impl ProcPool {
                 Some(Ok(_)) => {
                     inner.idle.push(seat);
                     drop(inner);
-                    self.shared.slot_cv.notify_one();
+                    // Release AFTER the seat is back in the idle set.
+                    drop(lease);
                 }
                 // Worker died right after (or while) resolving.
                 Some(Err(_)) => {
-                    inner.alive = inner.alive.saturating_sub(1);
                     drop(inner);
                     seat.kill();
+                    self.shared.reg.record_death(&host);
+                    lease.forfeit();
                 }
                 None => {
-                    inner.busy.insert(seat.id, (seat, task_id.clone()));
+                    inner.busy.insert(seat.id, (seat, task_id.clone(), lease));
                 }
             }
         }
@@ -386,9 +437,10 @@ impl ProcPool {
                 std::mem::take(&mut inner.waiters),
             )
         };
-        self.shared.slot_cv.notify_all();
+        // Wake launchers parked in the ledger's waiter queue (they error),
+        // the result waiters, and the health monitor.
+        self.shared.reg.shutdown();
         self.shared.result_cv.notify_all();
-        // The health monitor exits on the shutting_down flag.
         self.shared.death_cv.notify_all();
         // Unblock the dispatcher thread (its in-flight blocking launch now
         // errors), then drain + join it.
@@ -403,8 +455,9 @@ impl ProcPool {
         for seat in idle {
             seat.graceful_shutdown();
         }
-        for (_, (mut seat, _)) in busy {
+        for (_, (mut seat, _, lease)) in busy {
             seat.kill();
+            drop(lease);
         }
     }
 }
@@ -421,7 +474,7 @@ fn reader_loop(worker_id: u64, mut reader: Box<dyn Read + Send>, shared: Arc<Sha
                 let result_id = result.id.clone();
                 let mut inner = shared.inner.lock().unwrap();
                 // The worker is free *now* — before anyone collects.
-                if let Some((seat, task_id)) = inner.busy.remove(&worker_id) {
+                if let Some((seat, task_id, lease)) = inner.busy.remove(&worker_id) {
                     debug_assert_eq!(task_id, result_id);
                     if inner.abandoned.remove(&result_id) {
                         // Nobody wants this result.
@@ -431,11 +484,14 @@ fn reader_loop(worker_id: u64, mut reader: Box<dyn Read + Send>, shared: Arc<Sha
                     notify_task_waiter(&mut inner, &result_id);
                     if inner.shutting_down {
                         drop(inner);
+                        drop(lease);
                         seat.graceful_shutdown();
                     } else {
                         inner.idle.push(seat);
                         drop(inner);
-                        shared.slot_cv.notify_one();
+                        // Release AFTER the seat is back in the idle set:
+                        // a woken launcher must always find it there.
+                        drop(lease);
                     }
                     shared.result_cv.notify_all();
                 } else if inner.pending.get(&worker_id) == Some(&result_id) {
@@ -480,60 +536,45 @@ fn reader_loop(worker_id: u64, mut reader: Box<dyn Read + Send>, shared: Arc<Sha
     }
 }
 
-/// Health monitor: proactively respawn dead workers (the elastic half of
-/// the supervision subsystem).  Launch-path on-demand respawn still exists;
-/// the monitor restores capacity *before* the next launch needs it, so
-/// queued dispatch and parked launchers — including the PR 2 dispatcher
-/// thread blocked inside `launch` — wake into a healthy seat.  Budgeted:
-/// a crash-looping workload stops being revived once `budget` is spent.
-fn monitor_loop(pool: Weak<ProcPool>, budget: Arc<RespawnBudget>, poll: std::time::Duration) {
+/// Health monitor: proactively revive dead seats through the ledger
+/// ([`PoolRegistration::try_revive`] charges the per-host budget and is
+/// gated by each host's circuit breaker).  Launch-path on-demand revival
+/// still exists; the monitor restores capacity *before* the next launch
+/// needs it, so queued dispatch and parked launchers — including the PR 2
+/// dispatcher thread blocked inside `launch` — wake into a healthy seat.
+fn monitor_loop(pool: Weak<ProcPool>, poll: std::time::Duration) {
     loop {
         let Some(pool) = pool.upgrade() else { return };
-        // Reserve capacity under the lock (same protocol as launch()'s
-        // on-demand respawn), spawn outside it.
-        let deficit = {
+        {
             let inner = pool.shared.inner.lock().unwrap();
             if inner.shutting_down {
                 return;
             }
-            pool.workers.saturating_sub(inner.alive)
-        };
-        if deficit > 0 && budget.try_take() {
-            {
-                let mut inner = pool.shared.inner.lock().unwrap();
-                if inner.shutting_down {
-                    return;
-                }
-                if inner.alive >= pool.workers {
-                    // A launcher respawned on demand first.
-                    budget.refund();
-                    continue;
-                }
-                inner.alive += 1;
-            }
-            match pool.spawn_seat() {
+        }
+        if let Some(ticket) = pool.shared.reg.try_revive() {
+            match pool.spawn_seat(ticket.host()) {
                 Ok(seat) => {
                     let mut inner = pool.shared.inner.lock().unwrap();
                     if inner.shutting_down {
-                        inner.alive -= 1;
                         drop(inner);
                         seat.graceful_shutdown();
+                        // Ticket drop aborts the revive; nobody will need
+                        // the seat again.
                         return;
                     }
                     inner.idle.push(seat);
                     drop(inner);
                     pool.shared.scope.respawn();
-                    pool.shared.slot_cv.notify_all();
+                    // Commit AFTER the push: a woken launcher finds the
+                    // seat in the idle set.
+                    ticket.commit_idle();
                     continue; // more deficit?  re-check immediately
                 }
                 Err(_) => {
-                    pool.shared.inner.lock().unwrap().alive -= 1;
-                    // Wake parked launchers so they can try (and surface
-                    // the spawn error to a caller instead of hanging).
-                    pool.shared.slot_cv.notify_all();
-                    // Spawner is failing: the budget charge stands (no
-                    // refund — a broken spawner must not spin forever) and
-                    // we back off one poll interval.
+                    // Spawner is failing: dropping the ticket aborts the
+                    // revive (the budget charge stands — a broken spawner
+                    // must not spin forever); back off one poll interval.
+                    drop(ticket);
                     drop(pool);
                     std::thread::sleep(poll);
                     continue;
@@ -553,35 +594,45 @@ fn monitor_loop(pool: Weak<ProcPool>, budget: Arc<RespawnBudget>, poll: std::tim
 
 fn close_worker(worker_id: u64, shared: &Shared, err: FutureError) {
     let mut inner = shared.inner.lock().unwrap();
-    if !inner.shutting_down {
+    let during_shutdown = inner.shutting_down;
+    if !during_shutdown {
         // An orderly shutdown EOF is not a death worth counting.
         shared.scope.worker_death();
     }
-    if let Some((mut seat, task_id)) = inner.busy.remove(&worker_id) {
+    if let Some((mut seat, task_id, lease)) = inner.busy.remove(&worker_id) {
         seat.kill();
-        inner.alive = inner.alive.saturating_sub(1);
+        // Ledger first (breaker fed, seat forfeited), THEN park the error:
+        // a collector woken by the parked failure must find the breaker
+        // already up to date.  Ledger locks nest inside the pool lock.
+        if !during_shutdown {
+            shared.reg.record_death(&seat.host);
+        }
+        lease.forfeit();
         if !inner.abandoned.remove(&task_id) {
             inner.results.insert(task_id.clone(), Err(err.clone()));
         }
         notify_task_waiter(&mut inner, &task_id);
     } else if let Some(task_id) = inner.pending.remove(&worker_id) {
-        // Died while launch() still owns the seat: park the failure;
-        // launch()'s post-send bookkeeping reclaims the seat.
+        // Died while launch() still owns the seat and its lease: park the
+        // failure; launch()'s post-send bookkeeping kills the seat,
+        // records the death, and forfeits the lease.
         if !inner.abandoned.remove(&task_id) {
             inner.results.insert(task_id.clone(), Err(err.clone()));
         }
         notify_task_waiter(&mut inner, &task_id);
     } else {
-        // Idle worker died (e.g. graceful shutdown EOF): if still seated,
-        // remove it so launch() respawns capacity on demand.
+        // Idle worker died (e.g. crashed between tasks): retire the seat
+        // so the revive machinery restores capacity.
         if let Some(pos) = inner.idle.iter().position(|s| s.id == worker_id) {
             let mut seat = inner.idle.remove(pos);
             seat.kill();
-            inner.alive = inner.alive.saturating_sub(1);
+            if !during_shutdown {
+                shared.reg.seat_died_idle(&seat.host);
+                shared.reg.record_death(&seat.host);
+            }
         }
     }
     drop(inner);
-    shared.slot_cv.notify_all();
     shared.result_cv.notify_all();
     // Wake the health monitor: capacity just dropped.
     shared.death_cv.notify_all();
@@ -597,7 +648,7 @@ pub struct ProcHandle {
 impl ProcHandle {
     /// Is the task still in flight (unresolved, un-parked)?
     fn in_flight(inner: &Inner, task_id: &str) -> bool {
-        inner.busy.values().any(|(_, t)| t == task_id)
+        inner.busy.values().any(|(_, t, _)| t == task_id)
             || inner.pending.values().any(|t| t == task_id)
     }
 }
@@ -645,20 +696,20 @@ impl TaskHandle for ProcHandle {
         let worker_id = inner
             .busy
             .iter()
-            .find(|(_, (_, t))| *t == self.task_id)
+            .find(|(_, (_, t, _))| *t == self.task_id)
             .map(|(w, _)| *w);
         match worker_id {
             Some(w) => {
-                let (mut seat, _) = inner.busy.remove(&w).unwrap();
+                let (mut seat, _, lease) = inner.busy.remove(&w).unwrap();
                 seat.kill();
-                inner.alive = inner.alive.saturating_sub(1);
+                // User intent, not a host failure: the seat is forfeited
+                // (revive restores it, charged to the host budget) but the
+                // breaker window is NOT fed.
+                lease.forfeit();
                 self.collected = true;
                 // Cancellation resolves the future (to an error): wake any
                 // resolve()-subscriber.
                 notify_task_waiter(&mut inner, &self.task_id);
-                drop(inner);
-                // launch() respawns capacity on demand.
-                self.pool.shared.slot_cv.notify_all();
                 true
             }
             None => false,
@@ -718,12 +769,12 @@ mod tests {
     fn failed_respawn_wakes_parked_launchers() {
         // Spawner: the first call hands out a worker that dies shortly
         // after connecting; every later call stalls briefly and fails.
-        // One launcher's failed respawn must wake a second launcher parked
-        // on the slot_cv (regression: the launch error paths returned
-        // without notify_all, leaving concurrent launchers asleep forever).
+        // One launcher's failed on-demand revive must wake a second
+        // launcher parked in the ledger's waiter queue (the ticket-drop
+        // abort notifies), so neither sleeps forever.
         let calls = Arc::new(AtomicUsize::new(0));
         let c = Arc::clone(&calls);
-        let spawner: Spawner = Box::new(move || {
+        let spawner: Spawner = Box::new(move |_host| {
             if c.fetch_add(1, Ordering::SeqCst) == 0 {
                 Ok(Connection {
                     reader: Box::new(DelayedEof(Duration::from_millis(40))),
@@ -739,7 +790,7 @@ mod tests {
         // path's* wakeup discipline, so the monitor must not race it.
         let cfg = SupervisorConfig { respawn: false, ..Default::default() };
         let pool = ProcPool::new_configured(1, spawner, &cfg).unwrap();
-        // Let the delayed EOF retire the idle seat: alive drops to 0.
+        // Let the delayed EOF retire the idle seat.
         std::thread::sleep(Duration::from_millis(120));
 
         let (tx, rx) = std::sync::mpsc::channel();
@@ -755,7 +806,7 @@ mod tests {
         for _ in 0..2 {
             let outcome = rx
                 .recv_timeout(Duration::from_secs(5))
-                .expect("a launcher hung after a failed respawn");
+                .expect("a launcher hung after a failed revive");
             assert!(outcome.is_err(), "launch cannot succeed with a dead spawner");
         }
         pool.shutdown();
@@ -766,7 +817,7 @@ mod tests {
         // Supervision on but zero budget: once the only worker dies,
         // launch must surface a structured error — the historical
         // unbudgeted on-demand respawn is reserved for supervision OFF.
-        let spawner: Spawner = Box::new(|| {
+        let spawner: Spawner = Box::new(|_host| {
             Ok(Connection {
                 reader: Box::new(DelayedEof(Duration::from_millis(5))),
                 writer: Box::new(std::io::sink()),
@@ -777,6 +828,7 @@ mod tests {
             respawn: true,
             max_respawns: 0,
             poll: Duration::from_millis(5),
+            ..Default::default()
         };
         let pool = ProcPool::new_configured(1, spawner, &cfg).unwrap();
         std::thread::sleep(Duration::from_millis(60)); // the worker dies
@@ -795,7 +847,7 @@ mod tests {
         // stop (the crash-loop backstop).
         let calls = Arc::new(AtomicUsize::new(0));
         let c = Arc::clone(&calls);
-        let spawner: Spawner = Box::new(move || {
+        let spawner: Spawner = Box::new(move |_host| {
             c.fetch_add(1, Ordering::SeqCst);
             Ok(Connection {
                 reader: Box::new(DelayedEof(Duration::from_millis(10))),
@@ -807,11 +859,71 @@ mod tests {
             respawn: true,
             max_respawns: 3,
             poll: Duration::from_millis(5),
+            ..Default::default()
         };
         let pool = ProcPool::new_configured(1, spawner, &cfg).unwrap();
         std::thread::sleep(Duration::from_millis(500));
         let n = calls.load(Ordering::SeqCst);
         assert_eq!(n, 4, "1 initial spawn + 3 budgeted respawns, got {n}");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn breaker_routes_launches_away_from_a_dying_host() {
+        // Two hosts: "bad" workers die instantly, "good" ones live.  After
+        // `threshold` deaths the bad host's breaker opens — revives (and
+        // therefore task placements) stop landing there while the good
+        // host keeps serving; the half-open probe later re-tests it.
+        let spawner: Spawner = Box::new(move |host| {
+            if host == "bad" {
+                Ok(Connection {
+                    reader: Box::new(DelayedEof(Duration::from_millis(5))),
+                    writer: Box::new(std::io::sink()),
+                    child: None,
+                })
+            } else {
+                // A "good" worker that simply never speaks (idle forever).
+                Ok(Connection {
+                    reader: Box::new(DelayedEof(Duration::from_secs(3600))),
+                    writer: Box::new(std::io::sink()),
+                    child: None,
+                })
+            }
+        });
+        let cfg = SupervisorConfig {
+            respawn: true,
+            max_respawns: 64,
+            poll: Duration::from_millis(2),
+            breaker: crate::capacity::BreakerConfig {
+                threshold: 2,
+                window: Duration::from_secs(10),
+                cooldown: Duration::from_secs(3600), // stays open for the test
+            },
+        };
+        let pool = ProcPool::new_with_hosts(
+            "cluster",
+            &[("good".to_string(), 1), ("bad".to_string(), 1)],
+            spawner,
+            &cfg,
+        )
+        .unwrap();
+        let reg = Arc::clone(pool.registration());
+        // The bad worker dies repeatedly; the monitor revives it until the
+        // second death trips the breaker.
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while reg.breaker_state("bad") != crate::capacity::BreakerState::Open {
+            assert!(std::time::Instant::now() < deadline, "breaker never opened");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let respawns = reg.host_respawns("bad");
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(
+            reg.host_respawns("bad"),
+            respawns,
+            "an open breaker must stop revives to the dying host"
+        );
+        assert_eq!(reg.dead_seats(), 1, "the bad seat stays down");
+        assert_eq!(reg.alive_seats(), 1, "the good host keeps its capacity");
         pool.shutdown();
     }
 }

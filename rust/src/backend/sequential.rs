@@ -9,14 +9,35 @@
 use crate::api::conditions::relay_immediate;
 use crate::api::error::FutureError;
 use crate::backend::{Backend, TaskHandle};
+use crate::capacity::{BreakerConfig, PoolRegistration, RevivePolicy};
 use crate::ipc::{TaskResult, TaskSpec};
 
-#[derive(Default)]
-pub struct SequentialBackend;
+pub struct SequentialBackend {
+    /// Even the inline backend owns a (one-seat) ledger registration, so
+    /// `metrics::capacity_json()` sees every execution slot in the process
+    /// and the blocking semantic is uniform.  The seat is acquired
+    /// *uncounted* (no session `max_workers` charge): sequential is the
+    /// implicit nested fallback and must never deadlock against its own
+    /// outer future's lease.
+    reg: PoolRegistration,
+}
 
 impl SequentialBackend {
     pub fn new() -> Self {
-        SequentialBackend
+        let reg = PoolRegistration::register(
+            "sequential",
+            &[("local".to_string(), 1)],
+            RevivePolicy::Never,
+            BreakerConfig::default(),
+        );
+        reg.activate("local");
+        SequentialBackend { reg }
+    }
+}
+
+impl Default for SequentialBackend {
+    fn default() -> Self {
+        SequentialBackend::new()
     }
 }
 
@@ -68,6 +89,11 @@ impl Backend for SequentialBackend {
     }
 
     fn launch(&self, task: TaskSpec) -> Result<Box<dyn TaskHandle>, FutureError> {
+        // The one seat, held for the inline evaluation: concurrent callers
+        // of the same sequential backend serialize here — exactly the
+        // paper's "each future() blocks until the previously created
+        // future has been resolved".
+        let _lease = self.reg.acquire_uncounted()?;
         // Kernel runtime resolves lazily inside the evaluator on first Call.
         let kernels = None;
         // Evaluation runs under the task's shipped session context: nested

@@ -8,10 +8,12 @@
 //! * **Respawn** — every multi-worker backend runs a health monitor that
 //!   detects dead workers (ProcPool reader EOF, thread-pool worker death,
 //!   cluster socket drop) and respawns replacements up to a configurable
-//!   budget ([`SupervisorConfig::max_respawns`]).  A fresh seat re-enters
-//!   the pool's idle set and wakes `slot_cv`, so blocked launchers — and
-//!   the PR 2 dispatcher thread parked inside the pool's blocking
-//!   `launch` — acquire it with no extra re-registration step.
+//!   **per-host** budget ([`SupervisorConfig::max_respawns`], tracked by
+//!   the [`crate::capacity::CapacityLedger`] and gated by each host's
+//!   circuit breaker).  A fresh seat re-enters the pool's idle set and the
+//!   ledger wakes its waiter queue, so blocked launchers — and the PR 2
+//!   dispatcher thread parked inside the pool's blocking `launch` —
+//!   acquire it with no extra re-registration step.
 //! * **Retry** — [`RetryPolicy`] (per-future via
 //!   [`crate::api::future::FutureOpts::retry`], or plan-wide via
 //!   [`crate::api::plan::plan_with_retry`]) resubmits a task whose
@@ -45,7 +47,7 @@
 //! marker-file form fires exactly once, so kill-then-recover paths are
 //! testable deterministically.  See the `chaos` CI job.
 
-use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex, Weak};
 use std::time::Duration;
 
@@ -179,16 +181,27 @@ impl RetryPolicy {
 pub struct SupervisorConfig {
     /// Run a health monitor that proactively respawns dead workers.
     pub respawn: bool,
-    /// Lifetime respawn budget per pool — a crash-looping workload cannot
-    /// fork-bomb the host.
+    /// Lifetime respawn budget **per host** (tracked by the
+    /// [`crate::capacity::CapacityLedger`]) — a crash-looping workload
+    /// cannot fork-bomb the machine, and in a heterogeneous cluster one
+    /// flaky host exhausts only its own allowance.
     pub max_respawns: u32,
     /// Monitor poll fallback (deaths also wake it via condvar).
     pub poll: Duration,
+    /// Per-host circuit breaker: after [`crate::capacity::BreakerConfig::threshold`]
+    /// worker deaths within the window, the host stops receiving revives
+    /// (and therefore resubmissions) until a half-open probe succeeds.
+    pub breaker: crate::capacity::BreakerConfig,
 }
 
 impl Default for SupervisorConfig {
     fn default() -> Self {
-        SupervisorConfig { respawn: true, max_respawns: 1024, poll: Duration::from_millis(25) }
+        SupervisorConfig {
+            respawn: true,
+            max_respawns: 1024,
+            poll: Duration::from_millis(25),
+            breaker: crate::capacity::BreakerConfig::default(),
+        }
     }
 }
 
@@ -207,45 +220,6 @@ pub fn set_supervisor_config(cfg: SupervisorConfig) {
 /// Back to the built-in default.
 pub fn reset_supervisor_config() {
     *CONFIG.lock().unwrap() = None;
-}
-
-/// A pool's lifetime respawn allowance (shared by its monitor and any
-/// launch-path respawn guard).
-pub struct RespawnBudget {
-    remaining: AtomicI64,
-}
-
-impl RespawnBudget {
-    pub fn new(max: u32) -> Arc<Self> {
-        Arc::new(RespawnBudget { remaining: AtomicI64::new(max as i64) })
-    }
-
-    /// Charge one respawn; `false` when the budget is spent.
-    pub fn try_take(&self) -> bool {
-        if self.remaining.fetch_sub(1, Ordering::SeqCst) > 0 {
-            true
-        } else {
-            // Went negative: undo so `remaining()` stays meaningful.
-            self.remaining.fetch_add(1, Ordering::SeqCst);
-            false
-        }
-    }
-
-    /// Return a charge (the respawn itself failed before using a slot).
-    pub fn refund(&self) {
-        self.remaining.fetch_add(1, Ordering::SeqCst);
-    }
-
-    /// Zero the budget: no further respawns will ever be granted.  Used
-    /// when the monitor that would perform them could not be started, so
-    /// dead-pool guards stop promising a rescue that cannot come.
-    pub fn drain(&self) {
-        self.remaining.store(0, Ordering::SeqCst);
-    }
-
-    pub fn remaining(&self) -> u32 {
-        self.remaining.load(Ordering::SeqCst).max(0) as u32
-    }
 }
 
 // ------------------------------------------------------ supervised handle ----
@@ -584,18 +558,6 @@ mod tests {
         // even fires; the outcome carries the error.
         let r = h.wait().unwrap();
         assert!(matches!(r.outcome, TaskOutcome::Err(_)));
-    }
-
-    #[test]
-    fn respawn_budget_charges_and_refunds() {
-        let b = RespawnBudget::new(2);
-        assert!(b.try_take());
-        assert!(b.try_take());
-        assert!(!b.try_take(), "budget of 2 allows exactly 2 takes");
-        assert_eq!(b.remaining(), 0);
-        b.refund();
-        assert_eq!(b.remaining(), 1);
-        assert!(b.try_take());
     }
 
     #[test]

@@ -14,9 +14,12 @@
 //! handling as a 1-element one.  No serialization happens anywhere on this
 //! path; `immediateCondition`s relay live.
 //!
-//! `launch()` **blocks while all workers are busy** — the semaphore below is
-//! exactly the paper's "future() blocks until one of the workers is
-//! available".
+//! `launch()` **blocks while all workers are busy** — seat admission goes
+//! through the [`crate::capacity::CapacityLedger`]: a [`SlotLease`] rides
+//! inside each queued job and frees the seat when the worker finishes, so
+//! the ledger's waiter queue is exactly the paper's "future() blocks until
+//! one of the workers is available" (and is where per-session quotas and
+//! the dead-pool guard live — no pool-private slot counting remains).
 //!
 //! Failure contract (shared by all backends): a handle whose worker died is
 //! *resolved* — `is_resolved()` reports `true` and every `wait()` returns
@@ -33,11 +36,13 @@ use std::thread::JoinHandle;
 use crate::api::conditions::relay_immediate;
 use crate::api::error::{EvalError, FutureError};
 use crate::backend::dispatch::{default_backlog, CompletionSignal, CompletionWaker, Dispatcher};
-use crate::backend::supervisor::{
-    supervisor_config, RespawnBudget, SupervisorConfig, WORKER_KILL_ERROR,
-};
+use crate::backend::supervisor::{supervisor_config, SupervisorConfig, WORKER_KILL_ERROR};
 use crate::backend::{Backend, TaskHandle};
+use crate::capacity::{PoolRegistration, RevivePolicy, SlotLease};
 use crate::ipc::{TaskOutcome, TaskResult, TaskSpec};
+
+/// The thread pool's single (simulated) host: threads share the machine.
+const HOST: &str = "local";
 
 struct Job {
     task: TaskSpec,
@@ -45,34 +50,25 @@ struct Job {
     /// Completion latch for `resolve()`-style subscribers: the worker
     /// completes it right after sending the result.
     signal: Arc<CompletionSignal>,
+    /// The seat this job occupies; released (worker finished) or forfeited
+    /// (worker died) by the worker thread.
+    lease: SlotLease,
 }
 
 struct Shared {
     /// Pending jobs; workers pop from the front.
-    queue: Mutex<QueueState>,
-    /// Signals: job available (workers) and slot free (launchers).
+    queue: Mutex<VecDeque<Job>>,
+    /// Signals a job is available (workers park here — job *dispatch*;
+    /// seat *admission* is the ledger's waiter queue).
     job_cv: Condvar,
-    slot_cv: Condvar,
-    /// A worker thread died — wakes the health monitor.  Separate from
-    /// `slot_cv` so the monitor never consumes a launcher's wakeup.
+    /// A worker thread died — wakes the health monitor.
     death_cv: Condvar,
-    /// Respawn allowance; `None` when supervision is disabled.  Consulted
-    /// by the launch path's dead-pool guard.
-    budget: Option<Arc<RespawnBudget>>,
+    /// This pool's seats in the capacity ledger.
+    reg: Arc<PoolRegistration>,
     /// Session-attributed supervision metrics sink, captured from the
     /// constructing session (see `metrics::ambient_scope`).
     scope: crate::metrics::CounterScope,
     shutting_down: AtomicBool,
-}
-
-struct QueueState {
-    jobs: VecDeque<Job>,
-    /// Free-worker count: launch() takes a slot before enqueueing, workers
-    /// return it after finishing — this is what makes launch() block.
-    free_slots: usize,
-    /// Live worker threads.  A chaos-killed worker takes its slot down
-    /// with it (`free_slots + busy == alive`); the monitor restores both.
-    alive: usize,
 }
 
 pub struct ThreadPoolBackend {
@@ -94,17 +90,25 @@ impl ThreadPoolBackend {
     /// (tests inject disabled respawn / tiny budgets here).
     pub fn new_configured(workers: usize, cfg: &SupervisorConfig) -> Self {
         let workers = workers.max(1);
-        let budget = if cfg.respawn { Some(RespawnBudget::new(cfg.max_respawns)) } else { None };
+        // Seats live in the ledger: respawn ON gives each host (one here) a
+        // budgeted revive allowance the monitor draws from; OFF means dead
+        // threads stay dead and a fully dead pool errors at acquire.
+        let policy = if cfg.respawn {
+            RevivePolicy::Budgeted(cfg.max_respawns)
+        } else {
+            RevivePolicy::Never
+        };
+        let reg = Arc::new(PoolRegistration::register(
+            "multicore",
+            &[(HOST.to_string(), workers)],
+            policy,
+            cfg.breaker,
+        ));
         let shared = Arc::new(Shared {
-            queue: Mutex::new(QueueState {
-                jobs: VecDeque::new(),
-                free_slots: workers,
-                alive: workers,
-            }),
+            queue: Mutex::new(VecDeque::new()),
             job_cv: Condvar::new(),
-            slot_cv: Condvar::new(),
             death_cv: Condvar::new(),
-            budget,
+            reg,
             scope: crate::metrics::ambient_scope(),
             shutting_down: AtomicBool::new(false),
         });
@@ -116,6 +120,7 @@ impl ThreadPoolBackend {
                 .spawn(move || worker_loop(shared))
                 .expect("spawn pool worker");
             threads.lock().unwrap().push(handle);
+            shared.reg.activate(HOST);
         }
         let monitor = if cfg.respawn {
             let m_shared = Arc::clone(&shared);
@@ -123,16 +128,15 @@ impl ThreadPoolBackend {
             let poll = cfg.poll;
             match std::thread::Builder::new()
                 .name("rustures-pool-monitor".into())
-                .spawn(move || monitor_loop(m_shared, m_threads, workers, poll))
+                .spawn(move || monitor_loop(m_shared, m_threads, poll))
             {
                 Ok(handle) => Some(handle),
                 Err(_) => {
                     // No monitor will ever respawn anything: zero the
-                    // budget so the dead-pool guard stops promising a
-                    // rescue that cannot come (it would park forever).
-                    if let Some(b) = &shared.budget {
-                        b.drain();
-                    }
+                    // budgets so the ledger's dead-pool guard stops
+                    // promising a rescue that cannot come (it would park
+                    // forever).
+                    shared.reg.drain_budgets();
                     None
                 }
             }
@@ -149,27 +153,21 @@ impl ThreadPoolBackend {
     }
 }
 
-/// Health monitor: revive chaos-killed worker threads up to the pool's
-/// respawn budget, restoring both `alive` and the slot the dead worker
-/// took down with it.  Parked launchers (including the dispatcher thread)
-/// wake via `slot_cv` and find the fresh seat — no re-registration step.
+/// Health monitor: revive chaos-killed worker threads through the ledger
+/// ([`PoolRegistration::try_revive`] charges the per-host budget and is
+/// breaker-gated), restoring the seat the dead worker took down with it.
+/// Parked launchers (including the dispatcher thread) wake via the
+/// ledger's waiter queue when the revive commits — no re-registration.
 fn monitor_loop(
     shared: Arc<Shared>,
     threads: Arc<Mutex<Vec<JoinHandle<()>>>>,
-    workers: usize,
     poll: std::time::Duration,
 ) {
     loop {
-        let mut q = shared.queue.lock().unwrap();
         if shared.shutting_down.load(Ordering::SeqCst) {
             return;
         }
-        let deficit = workers.saturating_sub(q.alive);
-        let budget = shared.budget.as_ref().expect("monitor only runs with a budget");
-        if deficit > 0 && budget.try_take() {
-            q.alive += 1;
-            q.free_slots += 1;
-            drop(q);
+        if let Some(ticket) = shared.reg.try_revive() {
             let w_shared = Arc::clone(&shared);
             match std::thread::Builder::new()
                 .name("rustures-pool-respawn".into())
@@ -178,32 +176,24 @@ fn monitor_loop(
                 Ok(handle) => {
                     threads.lock().unwrap().push(handle);
                     shared.scope.respawn();
-                    shared.slot_cv.notify_all();
+                    // Commit AFTER the thread exists: a woken launcher's
+                    // seat always has a live worker behind it.
+                    ticket.commit_idle();
                 }
                 Err(_) => {
-                    let mut q = shared.queue.lock().unwrap();
-                    q.alive = q.alive.saturating_sub(1);
-                    // A woken launcher may have taken the slot we
-                    // provisionally added; never underflow.
-                    q.free_slots = q.free_slots.saturating_sub(1);
-                    // If that launcher enqueued a job and no worker is
-                    // left to run it, fail it now (dropping the Job drops
-                    // its reply sender → the handle reports WorkerDied)
-                    // instead of stranding its handle forever.
-                    let stranded =
-                        if q.alive == 0 { std::mem::take(&mut q.jobs) } else { VecDeque::new() };
-                    drop(q);
-                    for job in stranded {
-                        job.signal.complete();
-                    }
-                    shared.slot_cv.notify_all();
-                    // Spawning is failing: keep the budget charge (a
-                    // broken host must not spin the monitor forever) and
-                    // back off one poll interval.
+                    // Dropping the ticket aborts the revive (seat returns
+                    // to dead; the budget charge stands — a broken host
+                    // must not spin the monitor forever).  Back off.
+                    drop(ticket);
                     std::thread::sleep(poll);
                 }
             }
             continue;
+        }
+        // Nothing to revive: sleep until a death (death_cv) or poll tick.
+        let q = shared.queue.lock().unwrap();
+        if shared.shutting_down.load(Ordering::SeqCst) {
+            return;
         }
         let (guard, _) = shared.death_cv.wait_timeout(q, poll).unwrap();
         drop(guard);
@@ -216,30 +206,23 @@ fn blocking_launch(
     shared: &Arc<Shared>,
     task: TaskSpec,
 ) -> Result<Box<dyn TaskHandle>, FutureError> {
+    if shared.shutting_down.load(Ordering::SeqCst) {
+        return Err(FutureError::Launch("pool is shutting down".into()));
+    }
+    // The paper's blocking semantic, via the ledger's single waiter queue:
+    // blocks while every seat is leased (or the task's session is at its
+    // max_workers quota); errors — never parks — on a dead, unrevivable
+    // pool or a shutdown.
+    let lease = shared.reg.acquire_for(&task)?;
+
     let label = task.id.clone();
     let (tx, rx) = mpsc::channel();
     let signal = CompletionSignal::new();
-
     let mut q = shared.queue.lock().unwrap();
-    // The paper's blocking semantic: wait for a free worker slot.
-    loop {
-        if shared.shutting_down.load(Ordering::SeqCst) {
-            return Err(FutureError::Launch("pool is shutting down".into()));
-        }
-        if q.free_slots > 0 {
-            break;
-        }
-        // Dead-pool guard: every worker is gone and no monitor/budget can
-        // revive one — error out instead of parking forever.
-        if q.alive == 0 && !shared.budget.as_ref().is_some_and(|b| b.remaining() > 0) {
-            return Err(FutureError::Launch(
-                "all pool workers died and the respawn budget is exhausted".into(),
-            ));
-        }
-        q = shared.slot_cv.wait(q).unwrap();
+    if shared.shutting_down.load(Ordering::SeqCst) {
+        return Err(FutureError::Launch("pool is shutting down".into()));
     }
-    q.free_slots -= 1;
-    q.jobs.push_back(Job { task, reply: tx, signal: Arc::clone(&signal) });
+    q.push_back(Job { task, reply: tx, signal: Arc::clone(&signal), lease });
     drop(q);
     shared.job_cv.notify_one();
 
@@ -251,7 +234,7 @@ fn worker_loop(shared: Arc<Shared>) {
         let job = {
             let mut q = shared.queue.lock().unwrap();
             loop {
-                if let Some(job) = q.jobs.pop_front() {
+                if let Some(job) = q.pop_front() {
                     break job;
                 }
                 if shared.shutting_down.load(Ordering::SeqCst) {
@@ -263,7 +246,7 @@ fn worker_loop(shared: Arc<Shared>) {
 
         // Kernel runtime resolves lazily inside the evaluator on first Call.
         let kernels = None;
-        let task = job.task;
+        let Job { task, reply, signal, lease } = job;
         // Panic isolation: a panicking task must not take the worker down.
         // Evaluation runs under the task's shipped session context, so
         // nested futures created on this worker thread inherit the
@@ -283,33 +266,31 @@ fn worker_loop(shared: Arc<Shared>) {
         });
 
         // Chaos kill: die like a crashed worker thread — no reply (the
-        // handle sees a disconnected channel → WorkerDied), slot NOT
-        // returned (it dies with us), capacity drop visible to the monitor.
+        // handle sees a disconnected channel → WorkerDied), the seat goes
+        // down with us (forfeited, not released), the death feeds the
+        // host's breaker window, and the monitor wakes to revive.
         if matches!(&result.outcome, TaskOutcome::Err(e) if e.message == WORKER_KILL_ERROR) {
-            drop(job.reply);
-            // Wake resolve()-subscribers; their handles report WorkerDied.
-            job.signal.complete();
-            {
-                let mut q = shared.queue.lock().unwrap();
-                q.alive = q.alive.saturating_sub(1);
-            }
+            // Ledger first (death feeds the breaker window, the seat goes
+            // down forfeited), THEN make the failure observable: a handle
+            // that sees the disconnect must find the breaker already fed.
+            shared.reg.record_death(HOST);
+            lease.forfeit();
             shared.scope.worker_death();
+            drop(reply);
+            // Wake resolve()-subscribers; their handles report WorkerDied.
+            signal.complete();
             shared.death_cv.notify_all();
-            // Parked launchers must re-evaluate the dead-pool guard.
-            shared.slot_cv.notify_all();
             return;
         }
 
+        // The worker frees the moment it RESOLVES (paper semantics):
+        // release the seat before the reply becomes observable, so a
+        // collector that saw the result also sees the freed capacity.
+        drop(lease);
         // Receiver may be gone (abandoned future) — that's fine.
-        let _ = job.reply.send(result);
+        let _ = reply.send(result);
         // Wake resolve()-style subscribers AFTER the result is available.
-        job.signal.complete();
-
-        // Return the slot and wake one blocked launcher.
-        let mut q = shared.queue.lock().unwrap();
-        q.free_slots += 1;
-        drop(q);
-        shared.slot_cv.notify_one();
+        signal.complete();
     }
 }
 
@@ -408,12 +389,12 @@ impl Backend for ThreadPoolBackend {
 
     fn shutdown(&self) {
         // Order matters: raise the flag and wake everyone FIRST so a
-        // dispatcher thread parked inside blocking_launch errors out, then
-        // the dispatcher can drain + join, then the monitor (so no new
-        // workers appear), then the workers.
+        // dispatcher thread parked inside blocking_launch (on the ledger's
+        // waiter queue) errors out, then the dispatcher can drain + join,
+        // then the monitor (so no new workers appear), then the workers.
         self.shared.shutting_down.store(true, Ordering::SeqCst);
+        self.shared.reg.shutdown();
         self.shared.job_cv.notify_all();
-        self.shared.slot_cv.notify_all();
         self.shared.death_cv.notify_all();
         if let Some(d) = self.dispatcher.get() {
             d.shutdown();
@@ -426,9 +407,10 @@ impl Backend for ThreadPoolBackend {
             let _ = t.join();
         }
         // Jobs the workers never picked up: complete their signals so
-        // subscribed FutureSets wake (their handles then report WorkerDied).
+        // subscribed FutureSets wake (their handles then report WorkerDied);
+        // dropping the jobs releases their leases.
         let mut q = self.shared.queue.lock().unwrap();
-        for job in q.jobs.drain(..) {
+        for job in q.drain(..) {
             job.signal.complete();
         }
     }
@@ -655,6 +637,7 @@ mod tests {
             respawn: true,
             max_respawns: 2,
             poll: Duration::from_millis(5),
+            ..Default::default()
         };
         let pool = ThreadPoolBackend::new_configured(1, &cfg);
         // Two kills are revived...
@@ -671,6 +654,51 @@ mod tests {
             pool.launch(task(Expr::lit(1i64))),
             Err(FutureError::Launch(_))
         ));
+        pool.shutdown();
+    }
+
+    #[test]
+    fn tripped_breaker_blocks_revival_until_probe() {
+        // Per-host circuit breaker on the thread pool's one host: two
+        // quick kills trip it; the monitor may not revive until the
+        // cooldown passes, then a half-open probe restores service and a
+        // clean task closes the breaker.
+        let cfg = SupervisorConfig {
+            respawn: true,
+            max_respawns: 64,
+            poll: Duration::from_millis(2),
+            breaker: crate::capacity::BreakerConfig {
+                threshold: 2,
+                window: Duration::from_secs(10),
+                cooldown: Duration::from_millis(120),
+            },
+        };
+        let pool = ThreadPoolBackend::new_configured(1, &cfg);
+        for _ in 0..2 {
+            let mut h = pool.launch(task(Expr::chaos_kill())).unwrap();
+            assert!(matches!(h.wait(), Err(FutureError::WorkerDied { .. })));
+        }
+        assert_eq!(
+            pool.shared.reg.breaker_state(HOST),
+            crate::capacity::BreakerState::Open,
+            "two deaths within the window must trip the breaker"
+        );
+        let respawns = pool.shared.reg.host_respawns(HOST);
+        std::thread::sleep(Duration::from_millis(40));
+        assert_eq!(
+            pool.shared.reg.host_respawns(HOST),
+            respawns,
+            "an open breaker must stop the monitor's revives"
+        );
+        // Cooldown passes: the probe revives the worker; a healthy task
+        // closes the breaker and the pool serves again.
+        let mut ok = pool.launch(task(Expr::lit(7i64))).unwrap();
+        assert_eq!(ok.wait().unwrap().outcome, TaskOutcome::Ok(Value::I64(7)));
+        assert_eq!(
+            pool.shared.reg.breaker_state(HOST),
+            crate::capacity::BreakerState::Closed,
+            "a clean completion on the probed host must close the breaker"
+        );
         pool.shutdown();
     }
 

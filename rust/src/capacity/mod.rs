@@ -1,0 +1,1411 @@
+//! The capacity subsystem — ONE ledger for every execution slot.
+//!
+//! Before this layer, each backend re-implemented its own seat accounting
+//! (ProcPool `slot_cv`/`alive`, ThreadPool `free_slots`, the batch
+//! scheduler's `free_slots` node list), so cross-cutting admission policies
+//! — per-session quotas, per-host respawn budgets, circuit-breaking — would
+//! have needed five divergent copies.  The [`CapacityLedger`] centralizes
+//! the shared-state bookkeeping (the `rush` design: one authoritative view
+//! of worker capacity) behind an RAII [`SlotLease`]:
+//!
+//! * **Pools register seats** ([`PoolRegistration`]), keyed by backend ×
+//!   host.  Seats move through four states — `dead` (not spawned/crashed)
+//!   → `reviving` (spawn in flight) → `free` → `in_use` — and every
+//!   transition happens under the ledger's single lock.
+//! * **Launch paths acquire leases** through the ledger's single waiter
+//!   queue (one mutex + condvar): `acquire` blocks while no seat is free —
+//!   the paper's "future() blocks until one of the workers is available" —
+//!   and errors (never parks forever) when the pool is dead and nothing can
+//!   revive it.  Dropping the lease frees the seat and wakes one waiter.
+//! * **Session quotas** ([`SessionLimits`]): `max_workers` caps a session's
+//!   concurrent leases across *all* pools (blocking admission, never a
+//!   silent drop); `max_in_flight` bounds created-but-unresolved futures
+//!   via [`InFlightPermit`]s taken at future creation.
+//! * **Per-host respawn budgets** ([`RevivePolicy`]): each host gets its
+//!   own lifetime revive allowance, so one crash-looping host in a
+//!   heterogeneous cluster exhausts only its own budget.
+//! * **Circuit breaker** per host: `Closed` → `Open` after
+//!   [`BreakerConfig::threshold`] worker deaths within
+//!   [`BreakerConfig::window`] → (after [`BreakerConfig::cooldown`])
+//!   `HalfOpen`, which admits exactly ONE probe revive; a clean lease
+//!   release on the host closes the breaker, another death re-opens it.
+//!   The breaker gates *revives* (resubmission capacity): an open host's
+//!   dead seats stay down, so it receives no further work while healthy
+//!   hosts absorb the load.
+//!
+//! Utilization is rendered by [`capacity_json`] (schema
+//! `rustures.capacity.v1`), surfaced as `metrics::capacity_json()`.
+//!
+//! ## Lock discipline
+//!
+//! The ledger lock is a leaf: ledger methods never call back into pools,
+//! so pools may call the ledger while holding their own locks (pool lock →
+//! ledger lock), never the reverse.  Waiters park on the ledger condvar
+//! only — no pool lock is held while waiting for a seat.
+//!
+//! ## Quotas and nesting
+//!
+//! `max_workers` counts *parallel* leases (sequential evaluation acquires
+//! its pool seat without charging the session — the implicit nested
+//! `plan(sequential)` fallback must never deadlock against its own outer
+//! future).  A nested *parallel* topology can hold leases at two depths at
+//! once; size `max_workers` accordingly (see DESIGN.md §Capacity).
+//! `max_in_flight` gates future **creation** against futures not yet
+//! resolved-or-dropped: a caller that creates more than `max_in_flight`
+//! futures before collecting any will block — that is the backpressure
+//! contract, the same shape as the dispatcher's bounded backlog.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use crate::api::error::FutureError;
+use crate::ipc::TaskSpec;
+use crate::util::json::{self, Json};
+
+// ------------------------------------------------------------- configs ----
+
+/// Per-session admission limits (the multi-tenant quota surface).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SessionLimits {
+    /// Maximum concurrent execution-slot leases attributed to the session,
+    /// across every pool.  `None` = unlimited.
+    pub max_workers: Option<usize>,
+    /// Maximum futures created by the session and not yet resolved (or
+    /// dropped).  `None` = unlimited.
+    ///
+    /// **Semantics warning**: the permit frees when the *creating side*
+    /// observes the future's terminal state (or drops it) — backend
+    /// resolution alone does not release it.  Code that creates more than
+    /// `max_in_flight` futures before collecting ANY of them (including
+    /// `future_lapply` with more chunks than the cap, whose chunk futures
+    /// are all created up front) will therefore block at creation and
+    /// never unblock itself.  Use `max_workers` to bound a map's real
+    /// concurrency; use `max_in_flight` for create/collect-interleaved
+    /// workloads where it acts as a backpressure window, like the
+    /// dispatcher's bounded backlog.
+    pub max_in_flight: Option<usize>,
+}
+
+impl SessionLimits {
+    pub fn new() -> Self {
+        SessionLimits::default()
+    }
+
+    pub fn max_workers(mut self, n: usize) -> Self {
+        self.max_workers = Some(n.max(1));
+        self
+    }
+
+    pub fn max_in_flight(mut self, n: usize) -> Self {
+        self.max_in_flight = Some(n.max(1));
+        self
+    }
+
+    fn is_unlimited(&self) -> bool {
+        self.max_workers.is_none() && self.max_in_flight.is_none()
+    }
+}
+
+/// Circuit-breaker tuning for one pool's hosts.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BreakerConfig {
+    /// Worker deaths within [`BreakerConfig::window`] that trip the host's
+    /// breaker open.  `0` disables the breaker.
+    pub threshold: u32,
+    /// Sliding window the deaths are counted over.
+    pub window: Duration,
+    /// How long an open breaker blocks revives before allowing the
+    /// half-open probe.
+    pub cooldown: Duration,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        BreakerConfig {
+            threshold: 16,
+            window: Duration::from_secs(10),
+            cooldown: Duration::from_millis(250),
+        }
+    }
+}
+
+/// Observable breaker state of one host.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: revives flow freely.
+    Closed,
+    /// Tripped: no revives until the cooldown passes.
+    Open,
+    /// Cooled down: exactly one probe revive is in flight; a clean lease
+    /// release closes the breaker, a death re-opens it.
+    HalfOpen,
+}
+
+impl BreakerState {
+    fn as_str(&self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half-open",
+        }
+    }
+}
+
+/// How (and whether) a pool's dead seats come back.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RevivePolicy {
+    /// Seats are never revived (thread pools without a monitor; batch node
+    /// slots, which never die).  A fully dead pool errors at acquire.
+    Never,
+    /// Each host gets this lifetime revive budget (the supervision
+    /// default) — shared by monitor and on-demand revives.
+    Budgeted(u32),
+    /// Unbudgeted on-demand revival (the historical supervision-disabled
+    /// ProcPool behaviour).
+    Unbudgeted,
+}
+
+// ------------------------------------------------------------- internals ----
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Phase {
+    Closed,
+    Open { until: Instant },
+    HalfOpen,
+}
+
+struct HostState {
+    name: String,
+    free: usize,
+    in_use: usize,
+    reviving: usize,
+    dead: usize,
+    /// Remaining revive budget (`None` for `Never`/`Unbudgeted` policies).
+    budget: Option<u32>,
+    /// Revives committed on this host (diagnostics; the conformance
+    /// breaker check asserts this stops growing once the breaker opens).
+    respawns: u64,
+    deaths: VecDeque<Instant>,
+    phase: Phase,
+}
+
+impl HostState {
+    fn total(&self) -> usize {
+        self.free + self.in_use + self.reviving + self.dead
+    }
+
+    fn breaker_state(&self, now: Instant) -> BreakerState {
+        match self.phase {
+            Phase::Closed => BreakerState::Closed,
+            // An expired cooldown *reads* as HalfOpen even before a probe
+            // transitions the phase — observers see the recoverable state.
+            Phase::Open { until } if now >= until => BreakerState::HalfOpen,
+            Phase::Open { .. } => BreakerState::Open,
+            Phase::HalfOpen => BreakerState::HalfOpen,
+        }
+    }
+}
+
+struct PoolState {
+    backend: &'static str,
+    /// Session that built the backend (metrics attribution only).
+    owner_session: u64,
+    policy: RevivePolicy,
+    breaker: BreakerConfig,
+    shutting_down: bool,
+    hosts: Vec<HostState>,
+}
+
+impl PoolState {
+    fn host_mut(&mut self, host: &str) -> Option<&mut HostState> {
+        self.hosts.iter_mut().find(|h| h.name == host)
+    }
+
+    fn alive(&self) -> usize {
+        self.hosts.iter().map(|h| h.free + h.in_use + h.reviving).sum()
+    }
+
+    /// Can ANY mechanism ever bring a dead seat back?  (Breaker state is
+    /// deliberately ignored — an open breaker is temporary; only budget
+    /// exhaustion / a `Never` policy are terminal.)
+    fn revivable_eventually(&self) -> bool {
+        match self.policy {
+            RevivePolicy::Never => false,
+            RevivePolicy::Unbudgeted => self.hosts.iter().any(|h| h.dead > 0),
+            RevivePolicy::Budgeted(_) => self
+                .hosts
+                .iter()
+                .any(|h| h.dead > 0 && h.budget.unwrap_or(0) > 0),
+        }
+    }
+}
+
+#[derive(Default)]
+struct SessionUsage {
+    in_use: usize,
+    peak_in_use: usize,
+    in_flight: usize,
+    peak_in_flight: usize,
+    limits: SessionLimits,
+}
+
+impl SessionUsage {
+    fn is_idle(&self) -> bool {
+        self.in_use == 0 && self.in_flight == 0 && self.limits.is_unlimited()
+    }
+}
+
+#[derive(Default)]
+struct LedgerState {
+    next_pool: u64,
+    pools: HashMap<u64, PoolState>,
+    sessions: HashMap<u64, SessionUsage>,
+}
+
+/// The process-wide capacity ledger.  All seat state lives behind ONE
+/// mutex; all waiting happens on ONE condvar (the single waiter queue).
+pub struct CapacityLedger {
+    state: Mutex<LedgerState>,
+    cv: Condvar,
+}
+
+static LEDGER: OnceLock<CapacityLedger> = OnceLock::new();
+
+/// The process-wide ledger instance.
+pub fn ledger() -> &'static CapacityLedger {
+    LEDGER.get_or_init(|| CapacityLedger {
+        state: Mutex::new(LedgerState::default()),
+        cv: Condvar::new(),
+    })
+}
+
+// ------------------------------------------------------------ leases ----
+
+/// RAII handle to one acquired execution slot.  Dropping it releases the
+/// seat (clean completion: frees capacity, closes a half-open breaker);
+/// [`SlotLease::forfeit`] consumes it as a *death* instead (the seat goes
+/// down with its worker and only a revive brings it back).
+pub struct SlotLease {
+    pool: u64,
+    host: String,
+    /// Session the lease is charged to (None = uncounted, e.g. the
+    /// sequential fallback seat).
+    session: Option<u64>,
+    done: bool,
+}
+
+impl SlotLease {
+    /// Which host this lease's seat lives on.
+    pub fn host(&self) -> &str {
+        &self.host
+    }
+
+    /// Consume the lease as a worker death: the seat becomes `dead`
+    /// (revive-only) instead of returning to the free set.  The session
+    /// charge is returned either way.  Does NOT record a breaker death —
+    /// call [`PoolRegistration::record_death`] for that (cancellation
+    /// forfeits without feeding the breaker).
+    pub fn forfeit(mut self) {
+        self.done = true;
+        let led = ledger();
+        let mut st = led.state.lock().unwrap();
+        release_session(&mut st, self.session);
+        if let Some(pool) = st.pools.get_mut(&self.pool) {
+            if let Some(h) = pool.host_mut(&self.host) {
+                h.in_use = h.in_use.saturating_sub(1);
+                h.dead += 1;
+            }
+        }
+        drop(st);
+        led.cv.notify_all();
+    }
+}
+
+impl Drop for SlotLease {
+    fn drop(&mut self) {
+        if self.done {
+            return;
+        }
+        let led = ledger();
+        let mut st = led.state.lock().unwrap();
+        release_session(&mut st, self.session);
+        if let Some(pool) = st.pools.get_mut(&self.pool) {
+            if let Some(h) = pool.host_mut(&self.host) {
+                h.in_use = h.in_use.saturating_sub(1);
+                h.free += 1;
+                // A clean completion on a probing host proves it healthy.
+                if h.phase == Phase::HalfOpen {
+                    h.phase = Phase::Closed;
+                    h.deaths.clear();
+                }
+            }
+        }
+        drop(st);
+        led.cv.notify_all();
+    }
+}
+
+fn release_session(st: &mut LedgerState, session: Option<u64>) {
+    if let Some(sid) = session {
+        if let Some(u) = st.sessions.get_mut(&sid) {
+            u.in_use = u.in_use.saturating_sub(1);
+            if u.is_idle() {
+                st.sessions.remove(&sid);
+            }
+        }
+    }
+}
+
+/// Permission to revive one dead seat on `host` (budget already charged,
+/// breaker already consulted).  The holder spawns the worker, then either
+/// [`ReviveTicket::commit_idle`]s (monitor path: seat returns to the free
+/// set) or [`ReviveTicket::commit_lease`]s (launch path: the fresh seat is
+/// immediately leased for the waiting task).  Dropping the ticket aborts:
+/// the seat returns to `dead` (the budget charge stands — a failing
+/// spawner must not spin) and a half-open probe re-opens the breaker.
+pub struct ReviveTicket {
+    pool: u64,
+    host: String,
+    session: Option<u64>,
+    probe: bool,
+    done: bool,
+}
+
+impl ReviveTicket {
+    pub fn host(&self) -> &str {
+        &self.host
+    }
+
+    /// Spawn succeeded; the seat joins the free set (monitor path).  Call
+    /// only AFTER the seat is visible to the pool's own structures (e.g.
+    /// pushed to the idle list), so a woken waiter always finds it.
+    pub fn commit_idle(mut self) {
+        self.done = true;
+        let led = ledger();
+        let mut st = led.state.lock().unwrap();
+        // Monitor revives carry no session charge; return it if present.
+        release_session(&mut st, self.session.take());
+        if let Some(pool) = st.pools.get_mut(&self.pool) {
+            if let Some(h) = pool.host_mut(&self.host) {
+                h.reviving = h.reviving.saturating_sub(1);
+                h.free += 1;
+                h.respawns += 1;
+            }
+        }
+        drop(st);
+        led.cv.notify_all();
+    }
+
+    /// Spawn succeeded; convert directly into a lease for the task that
+    /// triggered the on-demand revive (the session charge carries over).
+    pub fn commit_lease(mut self) -> SlotLease {
+        self.done = true;
+        let led = ledger();
+        let mut st = led.state.lock().unwrap();
+        if let Some(pool) = st.pools.get_mut(&self.pool) {
+            if let Some(h) = pool.host_mut(&self.host) {
+                h.reviving = h.reviving.saturating_sub(1);
+                h.in_use += 1;
+                h.respawns += 1;
+            }
+        }
+        drop(st);
+        SlotLease {
+            pool: self.pool,
+            host: self.host.clone(),
+            session: self.session.take(),
+            done: false,
+        }
+    }
+}
+
+impl Drop for ReviveTicket {
+    fn drop(&mut self) {
+        if self.done {
+            return;
+        }
+        let led = ledger();
+        let mut st = led.state.lock().unwrap();
+        release_session(&mut st, self.session.take());
+        if let Some(pool) = st.pools.get_mut(&self.pool) {
+            if let Some(h) = pool.host_mut(&self.host) {
+                h.reviving = h.reviving.saturating_sub(1);
+                h.dead += 1;
+                if self.probe {
+                    // The probe could not even come up: back to Open.
+                    h.phase = Phase::Open { until: Instant::now() + pool.breaker.cooldown };
+                }
+            }
+        }
+        drop(st);
+        led.cv.notify_all();
+    }
+}
+
+/// Outcome of [`PoolRegistration::acquire_or_revive`].
+pub enum Acquired {
+    /// A free seat was leased.
+    Seat(SlotLease),
+    /// No seat was free, but a dead one may be revived: spawn a worker on
+    /// the ticket's host, then commit.
+    Revive(ReviveTicket),
+}
+
+// ------------------------------------------------------- registration ----
+
+/// A pool's handle into the ledger.  Dropping it deregisters the pool
+/// (outstanding leases then release as no-ops; blocked acquirers error).
+pub struct PoolRegistration {
+    pool: u64,
+}
+
+impl PoolRegistration {
+    /// Register `hosts` (name × seat count) for a backend.  Seats start
+    /// `dead`; the pool calls [`PoolRegistration::activate`] as each
+    /// initial worker comes up, so a seat is never acquirable before its
+    /// worker exists.
+    pub fn register(
+        backend: &'static str,
+        hosts: &[(String, usize)],
+        policy: RevivePolicy,
+        breaker: BreakerConfig,
+    ) -> PoolRegistration {
+        let budget = match policy {
+            RevivePolicy::Budgeted(n) => Some(n),
+            _ => None,
+        };
+        let host_states = hosts
+            .iter()
+            .map(|(name, seats)| HostState {
+                name: name.clone(),
+                free: 0,
+                in_use: 0,
+                reviving: 0,
+                dead: *seats,
+                budget,
+                respawns: 0,
+                deaths: VecDeque::new(),
+                phase: Phase::Closed,
+            })
+            .collect();
+        // Resolved before taking the ledger lock: the ledger is a leaf
+        // lock and must never nest another lock inside it.
+        let owner_session = crate::metrics::ambient_scope().session();
+        let led = ledger();
+        let mut st = led.state.lock().unwrap();
+        st.next_pool += 1;
+        let id = st.next_pool;
+        st.pools.insert(
+            id,
+            PoolState {
+                backend,
+                owner_session,
+                policy,
+                breaker,
+                shutting_down: false,
+                hosts: host_states,
+            },
+        );
+        PoolRegistration { pool: id }
+    }
+
+    /// Ledger-internal pool id (stable for this registration's lifetime).
+    pub fn pool_id(&self) -> u64 {
+        self.pool
+    }
+
+    /// An initial worker on `host` came up: its seat joins the free set.
+    /// Call AFTER the seat is visible to the pool's own structures.
+    pub fn activate(&self, host: &str) {
+        let led = ledger();
+        let mut st = led.state.lock().unwrap();
+        if let Some(pool) = st.pools.get_mut(&self.pool) {
+            if let Some(h) = pool.host_mut(host) {
+                h.dead = h.dead.saturating_sub(1);
+                h.free += 1;
+            }
+        }
+        drop(st);
+        led.cv.notify_all();
+    }
+
+    /// [`PoolRegistration::acquire`] charged to the task's originating
+    /// session (shipped in its [`crate::ipc::SessionContext`]).
+    pub fn acquire_for(&self, task: &TaskSpec) -> Result<SlotLease, FutureError> {
+        self.acquire(task.opts.context.session)
+    }
+
+    /// Block until a seat is free (the paper's blocking launch), charging
+    /// the lease to `session`'s `max_workers` quota.  Errors — instead of
+    /// parking forever — when the pool is shutting down, was deregistered,
+    /// or is fully dead with no possible revival.
+    pub fn acquire(&self, session: u64) -> Result<SlotLease, FutureError> {
+        match self.acquire_inner(Some(session), false)? {
+            Acquired::Seat(lease) => Ok(lease),
+            Acquired::Revive(_) => unreachable!("revive disabled on this path"),
+        }
+    }
+
+    /// [`PoolRegistration::acquire`] without charging any session quota —
+    /// the sequential fallback seat (an inline evaluation must never
+    /// deadlock against its own outer future's lease).
+    pub fn acquire_uncounted(&self) -> Result<SlotLease, FutureError> {
+        match self.acquire_inner(None, false)? {
+            Acquired::Seat(lease) => Ok(lease),
+            Acquired::Revive(_) => unreachable!("revive disabled on this path"),
+        }
+    }
+
+    /// Blocking acquire that may hand back a [`ReviveTicket`] instead of a
+    /// lease when every seat is busy but a dead one can be revived *now*
+    /// (budget available, breaker admits) — the ProcPool launch path's
+    /// on-demand respawn, budgeted and breaker-gated like the monitor's.
+    pub fn acquire_or_revive(&self, session: u64) -> Result<Acquired, FutureError> {
+        self.acquire_inner(Some(session), true)
+    }
+
+    fn acquire_inner(
+        &self,
+        session: Option<u64>,
+        on_demand_revive: bool,
+    ) -> Result<Acquired, FutureError> {
+        let led = ledger();
+        let mut st = led.state.lock().unwrap();
+        loop {
+            let Some(pool) = st.pools.get(&self.pool) else {
+                return Err(FutureError::Launch("pool is shutting down".into()));
+            };
+            if pool.shutting_down {
+                return Err(FutureError::Launch("pool is shutting down".into()));
+            }
+            // Session quota gate (max_workers) — blocking, never a drop.
+            let quota_blocked = session.is_some_and(|sid| {
+                let u = st.sessions.entry(sid).or_default();
+                u.limits.max_workers.is_some_and(|m| u.in_use >= m)
+            });
+            if !quota_blocked {
+                let pool = st.pools.get_mut(&self.pool).expect("checked above");
+                if let Some(idx) = best_free_host(pool) {
+                    let h = &mut pool.hosts[idx];
+                    h.free -= 1;
+                    h.in_use += 1;
+                    let host = h.name.clone();
+                    charge_session(&mut st, session);
+                    return Ok(Acquired::Seat(SlotLease {
+                        pool: self.pool,
+                        host,
+                        session,
+                        done: false,
+                    }));
+                }
+                if on_demand_revive {
+                    if let Some((host, probe)) = take_revive(pool) {
+                        charge_session(&mut st, session);
+                        return Ok(Acquired::Revive(ReviveTicket {
+                            pool: self.pool,
+                            host,
+                            session,
+                            probe,
+                            done: false,
+                        }));
+                    }
+                }
+                // Dead pool, nothing can ever revive: error, don't park.
+                let pool = st.pools.get(&self.pool).expect("checked above");
+                if pool.alive() == 0 && !pool.revivable_eventually() {
+                    return Err(FutureError::Launch(
+                        "all pool workers died and the respawn budget is exhausted".into(),
+                    ));
+                }
+            }
+            // An Open breaker whose cooldown ends soon may be the only
+            // revival path: wake periodically so the half-open probe fires
+            // without needing a fresh external event.
+            let (guard, _) = led.cv.wait_timeout(st, Duration::from_millis(50)).unwrap();
+            st = guard;
+        }
+    }
+
+    /// Non-blocking acquire (the batch scheduler daemon's admission step):
+    /// `None` when no seat is free, the session quota is at its cap, or
+    /// the pool is shutting down — the job simply stays queued.
+    pub fn try_acquire(&self, session: u64) -> Option<SlotLease> {
+        let led = ledger();
+        let mut st = led.state.lock().unwrap();
+        let pool = st.pools.get(&self.pool)?;
+        if pool.shutting_down {
+            return None;
+        }
+        let quota_blocked = {
+            let u = st.sessions.entry(session).or_default();
+            u.limits.max_workers.is_some_and(|m| u.in_use >= m)
+        };
+        if quota_blocked {
+            return None;
+        }
+        let pool = st.pools.get_mut(&self.pool)?;
+        let idx = best_free_host(pool)?;
+        let h = &mut pool.hosts[idx];
+        h.free -= 1;
+        h.in_use += 1;
+        let host = h.name.clone();
+        charge_session(&mut st, Some(session));
+        Some(SlotLease { pool: self.pool, host, session: Some(session), done: false })
+    }
+
+    /// Monitor path: claim permission to revive one dead seat (budget
+    /// charged, breaker consulted), without blocking.  `None` when nothing
+    /// is dead, the budget is spent, or every dead host's breaker is open.
+    pub fn try_revive(&self) -> Option<ReviveTicket> {
+        let led = ledger();
+        let mut st = led.state.lock().unwrap();
+        let pool = st.pools.get_mut(&self.pool)?;
+        if pool.shutting_down {
+            return None;
+        }
+        let (host, probe) = take_revive(pool)?;
+        Some(ReviveTicket { pool: self.pool, host, session: None, probe, done: false })
+    }
+
+    /// A worker on `host` died outside an orderly shutdown: feed the
+    /// host's breaker window (possibly tripping it open).  Seat-state
+    /// transitions are separate ([`SlotLease::forfeit`] /
+    /// [`PoolRegistration::seat_died_idle`]).
+    pub fn record_death(&self, host: &str) {
+        let led = ledger();
+        let mut st = led.state.lock().unwrap();
+        if let Some(pool) = st.pools.get_mut(&self.pool) {
+            let cfg = pool.breaker;
+            if let Some(h) = pool.host_mut(host) {
+                let now = Instant::now();
+                h.deaths.push_back(now);
+                while h.deaths.front().is_some_and(|t| now.duration_since(*t) > cfg.window) {
+                    h.deaths.pop_front();
+                }
+                let tripped = cfg.threshold > 0 && h.deaths.len() >= cfg.threshold as usize;
+                match h.phase {
+                    // A death during the probe re-opens immediately.
+                    Phase::HalfOpen => h.phase = Phase::Open { until: now + cfg.cooldown },
+                    Phase::Closed if tripped => {
+                        h.phase = Phase::Open { until: now + cfg.cooldown }
+                    }
+                    _ => {}
+                }
+            }
+        }
+        drop(st);
+        led.cv.notify_all();
+    }
+
+    /// An *idle* worker died (no lease outstanding): its seat leaves the
+    /// free set for the dead set.  If `free` is already 0, the dying seat
+    /// was concurrently CLAIMED (a lease was granted but the pool-side pop
+    /// has not happened yet): the transition is deliberately skipped here
+    /// — the claim holder finds the seat missing and `forfeit()`s, which
+    /// performs the in_use → dead transition exactly once.  (Doing both
+    /// would double-count the death and mint phantom capacity.)
+    pub fn seat_died_idle(&self, host: &str) {
+        let led = ledger();
+        let mut st = led.state.lock().unwrap();
+        if let Some(pool) = st.pools.get_mut(&self.pool) {
+            if let Some(h) = pool.host_mut(host) {
+                if h.free > 0 {
+                    h.free -= 1;
+                    h.dead += 1;
+                }
+            }
+        }
+        drop(st);
+        led.cv.notify_all();
+    }
+
+    /// Current breaker state of `host` (tests/diagnostics).
+    pub fn breaker_state(&self, host: &str) -> BreakerState {
+        let st = ledger().state.lock().unwrap();
+        st.pools
+            .get(&self.pool)
+            .and_then(|p| p.hosts.iter().find(|h| h.name == host))
+            .map(|h| h.breaker_state(Instant::now()))
+            .unwrap_or(BreakerState::Closed)
+    }
+
+    /// Committed revives on `host` (the conformance breaker check asserts
+    /// this stops growing once the breaker opens).
+    pub fn host_respawns(&self, host: &str) -> u64 {
+        let st = ledger().state.lock().unwrap();
+        st.pools
+            .get(&self.pool)
+            .and_then(|p| p.hosts.iter().find(|h| h.name == host))
+            .map(|h| h.respawns)
+            .unwrap_or(0)
+    }
+
+    /// Dead seats across all hosts (the monitor's deficit probe).
+    pub fn dead_seats(&self) -> usize {
+        let st = ledger().state.lock().unwrap();
+        st.pools
+            .get(&self.pool)
+            .map(|p| p.hosts.iter().map(|h| h.dead).sum())
+            .unwrap_or(0)
+    }
+
+    /// Live seats (free + leased + reviving) across all hosts.
+    pub fn alive_seats(&self) -> usize {
+        let st = ledger().state.lock().unwrap();
+        st.pools.get(&self.pool).map(|p| p.alive()).unwrap_or(0)
+    }
+
+    /// Could any dead seat still be revived some day?  (Budget left under a
+    /// budgeted policy; always for unbudgeted; never for `Never`.)
+    pub fn revivable_eventually(&self) -> bool {
+        let st = ledger().state.lock().unwrap();
+        st.pools.get(&self.pool).map(|p| p.revivable_eventually()).unwrap_or(false)
+    }
+
+    /// Zero every host's revive budget: no rescue will ever come (used
+    /// when the monitor that would perform revives could not start).
+    pub fn drain_budgets(&self) {
+        let led = ledger();
+        let mut st = led.state.lock().unwrap();
+        if let Some(pool) = st.pools.get_mut(&self.pool) {
+            for h in &mut pool.hosts {
+                if h.budget.is_some() {
+                    h.budget = Some(0);
+                }
+            }
+        }
+        drop(st);
+        led.cv.notify_all();
+    }
+
+    /// Flag the pool as shutting down: blocked and future acquires error.
+    pub fn shutdown(&self) {
+        let led = ledger();
+        let mut st = led.state.lock().unwrap();
+        if let Some(pool) = st.pools.get_mut(&self.pool) {
+            pool.shutting_down = true;
+        }
+        drop(st);
+        led.cv.notify_all();
+    }
+}
+
+impl Drop for PoolRegistration {
+    fn drop(&mut self) {
+        let led = ledger();
+        let mut st = led.state.lock().unwrap();
+        st.pools.remove(&self.pool);
+        drop(st);
+        // Outstanding leases release as no-ops; blocked acquirers error.
+        led.cv.notify_all();
+    }
+}
+
+fn charge_session(st: &mut LedgerState, session: Option<u64>) {
+    if let Some(sid) = session {
+        let u = st.sessions.entry(sid).or_default();
+        u.in_use += 1;
+        u.peak_in_use = u.peak_in_use.max(u.in_use);
+    }
+}
+
+/// The host to lease from: most free seats wins (spreads load), ties go to
+/// registration order (deterministic).
+fn best_free_host(pool: &PoolState) -> Option<usize> {
+    let mut best: Option<(usize, usize)> = None;
+    for (i, h) in pool.hosts.iter().enumerate() {
+        if h.free > 0 && best.map(|(_, f)| h.free > f).unwrap_or(true) {
+            best = Some((i, h.free));
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+/// Claim a revive on the first host whose breaker and budget admit one.
+/// Marks the seat `reviving`, charges the budget, and transitions an
+/// expired-cooldown breaker to its half-open probe.
+fn take_revive(pool: &mut PoolState) -> Option<(String, bool)> {
+    let policy = pool.policy;
+    let now = Instant::now();
+    for h in &mut pool.hosts {
+        if h.dead == 0 {
+            continue;
+        }
+        let probe = match h.phase {
+            Phase::Closed => false,
+            Phase::Open { until } if now >= until => true,
+            Phase::Open { .. } | Phase::HalfOpen => continue,
+        };
+        let budget_ok = match policy {
+            RevivePolicy::Never => false,
+            RevivePolicy::Unbudgeted => true,
+            RevivePolicy::Budgeted(_) => match h.budget {
+                Some(n) if n > 0 => {
+                    h.budget = Some(n - 1);
+                    true
+                }
+                _ => false,
+            },
+        };
+        if !budget_ok {
+            continue;
+        }
+        if probe {
+            h.phase = Phase::HalfOpen;
+        }
+        h.dead -= 1;
+        h.reviving += 1;
+        return Some((h.name.clone(), probe));
+    }
+    None
+}
+
+// ------------------------------------------------------------ sessions ----
+
+/// Number of sessions with a `max_in_flight` limit installed — the fast
+/// path for [`admit_in_flight`]: while zero (the overwhelmingly common
+/// case), future creation skips the ledger lock entirely.
+static IN_FLIGHT_LIMITED_SESSIONS: AtomicU64 = AtomicU64::new(0);
+
+/// Maintain [`IN_FLIGHT_LIMITED_SESSIONS`] across a limits change.
+/// Called with the ledger lock held.
+fn track_in_flight_limit(old: &SessionLimits, new: &SessionLimits) {
+    match (old.max_in_flight.is_some(), new.max_in_flight.is_some()) {
+        (false, true) => {
+            IN_FLIGHT_LIMITED_SESSIONS.fetch_add(1, Ordering::SeqCst);
+        }
+        (true, false) => {
+            IN_FLIGHT_LIMITED_SESSIONS.fetch_sub(1, Ordering::SeqCst);
+        }
+        _ => {}
+    }
+}
+
+/// Install (or replace) `session`'s admission limits.
+pub fn set_session_limits(session: u64, limits: SessionLimits) {
+    let led = ledger();
+    let mut st = led.state.lock().unwrap();
+    let u = st.sessions.entry(session).or_default();
+    track_in_flight_limit(&u.limits, &limits);
+    u.limits = limits;
+    // Installing default limits must not strand a forever-idle entry.
+    if u.is_idle() {
+        st.sessions.remove(&session);
+    }
+    drop(st);
+    led.cv.notify_all();
+}
+
+/// Remove `session`'s limits (called on `Session::close`): blocked
+/// admissions wake and proceed unlimited; usage counters drain naturally.
+pub fn clear_session_limits(session: u64) {
+    set_session_limits(session, SessionLimits::default());
+}
+
+/// The limits currently installed for `session`.
+pub fn session_limits(session: u64) -> SessionLimits {
+    let st = ledger().state.lock().unwrap();
+    st.sessions.get(&session).map(|u| u.limits).unwrap_or_default()
+}
+
+/// Concurrent leases currently charged to `session`.
+pub fn session_in_use(session: u64) -> usize {
+    let st = ledger().state.lock().unwrap();
+    st.sessions.get(&session).map(|u| u.in_use).unwrap_or(0)
+}
+
+/// High-water mark of concurrent leases ever charged to `session` — the
+/// quota regression tests assert this never exceeds `max_workers`.
+pub fn session_peak_in_use(session: u64) -> usize {
+    let st = ledger().state.lock().unwrap();
+    st.sessions.get(&session).map(|u| u.peak_in_use).unwrap_or(0)
+}
+
+/// RAII permit counting one created-but-unresolved future against its
+/// session's `max_in_flight` quota.
+pub struct InFlightPermit {
+    session: u64,
+    /// False for fast-path permits minted while NO session had an
+    /// in-flight limit — those never touched the ledger and release for
+    /// free.  (A limit installed while such permits are outstanding
+    /// applies to futures created afterwards; the window under-counts by
+    /// the futures already in flight, which is the price of keeping the
+    /// zero-limit hot path at one atomic load.)
+    counted: bool,
+}
+
+impl Drop for InFlightPermit {
+    fn drop(&mut self) {
+        if !self.counted {
+            return;
+        }
+        let led = ledger();
+        let mut st = led.state.lock().unwrap();
+        if let Some(u) = st.sessions.get_mut(&self.session) {
+            u.in_flight = u.in_flight.saturating_sub(1);
+            if u.is_idle() {
+                st.sessions.remove(&self.session);
+            }
+        }
+        drop(st);
+        led.cv.notify_all();
+    }
+}
+
+/// Admit one future creation for `session`, blocking while the session is
+/// at its `max_in_flight` cap (never a silent drop).  The limit is re-read
+/// each wake, so `clear_session_limits` (session close) unblocks waiters.
+/// §Perf: while no session anywhere has a `max_in_flight` limit, this is
+/// ONE atomic load — future creation does not take the ledger lock.
+pub fn admit_in_flight(session: u64) -> InFlightPermit {
+    if IN_FLIGHT_LIMITED_SESSIONS.load(Ordering::Acquire) == 0 {
+        return InFlightPermit { session, counted: false };
+    }
+    let led = ledger();
+    let mut st = led.state.lock().unwrap();
+    loop {
+        let u = st.sessions.entry(session).or_default();
+        if !u.limits.max_in_flight.is_some_and(|m| u.in_flight >= m) {
+            u.in_flight += 1;
+            u.peak_in_flight = u.peak_in_flight.max(u.in_flight);
+            return InFlightPermit { session, counted: true };
+        }
+        st = led.cv.wait(st).unwrap();
+    }
+}
+
+// ---------------------------------------------------------------- json ----
+
+/// Per-session and per-host utilization, schema `rustures.capacity.v1`:
+///
+/// ```json
+/// {"schema":"rustures.capacity.v1",
+///  "pools":[{"pool":1,"backend":"multicore","session":0,
+///    "hosts":[{"host":"local","total":2,"free":1,"in_use":1,"reviving":0,
+///              "dead":0,"breaker":"closed","recent_deaths":0,"respawns":0,
+///              "budget_remaining":1024}]}],
+///  "sessions":[{"session":3,"in_use":1,"peak_in_use":2,"in_flight":4,
+///               "peak_in_flight":8,"max_workers":2,"max_in_flight":null}]}
+/// ```
+pub fn capacity_json() -> String {
+    let st = ledger().state.lock().unwrap();
+    let now = Instant::now();
+    let mut pool_ids: Vec<u64> = st.pools.keys().copied().collect();
+    pool_ids.sort_unstable();
+    let pools: Vec<Json> = pool_ids
+        .iter()
+        .map(|id| {
+            let p = &st.pools[id];
+            let hosts: Vec<Json> = p
+                .hosts
+                .iter()
+                .map(|h| {
+                    obj(&[
+                        ("host", Json::Str(h.name.clone())),
+                        ("total", Json::Int(h.total() as i64)),
+                        ("free", Json::Int(h.free as i64)),
+                        ("in_use", Json::Int(h.in_use as i64)),
+                        ("reviving", Json::Int(h.reviving as i64)),
+                        ("dead", Json::Int(h.dead as i64)),
+                        ("breaker", Json::Str(h.breaker_state(now).as_str().into())),
+                        ("recent_deaths", Json::Int(h.deaths.len() as i64)),
+                        ("respawns", Json::Int(h.respawns as i64)),
+                        (
+                            "budget_remaining",
+                            h.budget.map(|b| Json::Int(b as i64)).unwrap_or(Json::Null),
+                        ),
+                    ])
+                })
+                .collect();
+            obj(&[
+                ("pool", Json::Int(*id as i64)),
+                ("backend", Json::Str(p.backend.into())),
+                ("session", Json::Int(p.owner_session as i64)),
+                ("hosts", Json::Arr(hosts)),
+            ])
+        })
+        .collect();
+    let mut session_ids: Vec<u64> = st.sessions.keys().copied().collect();
+    session_ids.sort_unstable();
+    let sessions: Vec<Json> = session_ids
+        .iter()
+        .map(|id| {
+            let u = &st.sessions[id];
+            obj(&[
+                ("session", Json::Int(*id as i64)),
+                ("in_use", Json::Int(u.in_use as i64)),
+                ("peak_in_use", Json::Int(u.peak_in_use as i64)),
+                ("in_flight", Json::Int(u.in_flight as i64)),
+                ("peak_in_flight", Json::Int(u.peak_in_flight as i64)),
+                (
+                    "max_workers",
+                    u.limits.max_workers.map(|m| Json::Int(m as i64)).unwrap_or(Json::Null),
+                ),
+                (
+                    "max_in_flight",
+                    u.limits.max_in_flight.map(|m| Json::Int(m as i64)).unwrap_or(Json::Null),
+                ),
+            ])
+        })
+        .collect();
+    json::to_string(&obj(&[
+        ("schema", Json::Str("rustures.capacity.v1".into())),
+        ("pools", Json::Arr(pools)),
+        ("sessions", Json::Arr(sessions)),
+    ]))
+}
+
+fn obj(fields: &[(&str, Json)]) -> Json {
+    Json::Obj(fields.iter().map(|(k, v)| (k.to_string(), v.clone())).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    fn one_host_pool(seats: usize, policy: RevivePolicy) -> PoolRegistration {
+        let reg = PoolRegistration::register(
+            "test",
+            &[("local".to_string(), seats)],
+            policy,
+            BreakerConfig::default(),
+        );
+        for _ in 0..seats {
+            reg.activate("local");
+        }
+        reg
+    }
+
+    #[test]
+    fn acquire_blocks_until_release_and_lease_drop_frees() {
+        let reg = Arc::new(one_host_pool(1, RevivePolicy::Never));
+        let lease = reg.acquire(0).unwrap();
+        let r2 = Arc::clone(&reg);
+        let (tx, rx) = std::sync::mpsc::channel();
+        std::thread::spawn(move || {
+            let l = r2.acquire(0).unwrap();
+            let _ = tx.send(());
+            drop(l);
+        });
+        assert!(
+            rx.recv_timeout(Duration::from_millis(60)).is_err(),
+            "second acquire must block while the seat is leased"
+        );
+        drop(lease);
+        rx.recv_timeout(Duration::from_secs(5))
+            .expect("released seat must wake the waiter");
+    }
+
+    #[test]
+    fn dead_pool_without_revival_errors_instead_of_parking() {
+        let reg = one_host_pool(1, RevivePolicy::Never);
+        let lease = reg.acquire(0).unwrap();
+        lease.forfeit();
+        match reg.acquire(0) {
+            Err(FutureError::Launch(msg)) => assert!(msg.contains("respawn budget"), "{msg}"),
+            other => panic!("expected the dead-pool error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shutdown_wakes_blocked_acquirers_with_error() {
+        let reg = Arc::new(one_host_pool(1, RevivePolicy::Never));
+        let _lease = reg.acquire(0).unwrap();
+        let r2 = Arc::clone(&reg);
+        let (tx, rx) = std::sync::mpsc::channel();
+        std::thread::spawn(move || {
+            let _ = tx.send(r2.acquire(0).map(|_| ()));
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        reg.shutdown();
+        match rx.recv_timeout(Duration::from_secs(5)) {
+            Ok(Err(FutureError::Launch(msg))) => assert!(msg.contains("shutting down"), "{msg}"),
+            other => panic!("expected shutdown error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn on_demand_revive_charges_budget_and_commits_to_lease() {
+        let reg = one_host_pool(1, RevivePolicy::Budgeted(1));
+        reg.acquire(0).unwrap().forfeit();
+        match reg.acquire_or_revive(0).unwrap() {
+            Acquired::Revive(ticket) => {
+                assert_eq!(ticket.host(), "local");
+                let lease = ticket.commit_lease();
+                assert_eq!(reg.host_respawns("local"), 1);
+                lease.forfeit();
+            }
+            Acquired::Seat(_) => panic!("no free seat existed"),
+        }
+        // Budget spent: the pool is now terminally dead.
+        assert!(matches!(reg.acquire_or_revive(0), Err(FutureError::Launch(_))));
+    }
+
+    #[test]
+    fn aborted_revive_keeps_the_budget_charge() {
+        let reg = one_host_pool(1, RevivePolicy::Budgeted(2));
+        reg.acquire(0).unwrap().forfeit();
+        let ticket = reg.try_revive().expect("budget allows a revive");
+        drop(ticket); // spawn failed
+        assert_eq!(reg.dead_seats(), 1, "aborted revive returns the seat to dead");
+        assert!(reg.try_revive().is_some(), "second budget charge still available");
+    }
+
+    #[test]
+    fn max_workers_quota_blocks_and_peak_is_tracked() {
+        let reg = Arc::new(one_host_pool(4, RevivePolicy::Never));
+        let session = 9_100_001;
+        set_session_limits(session, SessionLimits::new().max_workers(2));
+        let l1 = reg.acquire(session).unwrap();
+        let _l2 = reg.acquire(session).unwrap();
+        let r2 = Arc::clone(&reg);
+        let (tx, rx) = std::sync::mpsc::channel();
+        std::thread::spawn(move || {
+            let l = r2.acquire(session).unwrap();
+            let _ = tx.send(());
+            drop(l);
+        });
+        assert!(
+            rx.recv_timeout(Duration::from_millis(60)).is_err(),
+            "third lease must block at max_workers = 2 despite free seats"
+        );
+        drop(l1);
+        rx.recv_timeout(Duration::from_secs(5)).expect("freed quota must admit the waiter");
+        assert!(session_peak_in_use(session) <= 2, "quota must bound the high-water mark");
+        clear_session_limits(session);
+    }
+
+    #[test]
+    fn uncounted_acquire_ignores_quota() {
+        let reg = one_host_pool(2, RevivePolicy::Never);
+        let session = 9_100_002;
+        set_session_limits(session, SessionLimits::new().max_workers(1));
+        let _l1 = reg.acquire(session).unwrap();
+        // The sequential-fallback path must not deadlock against the quota.
+        let _l2 = reg.acquire_uncounted().unwrap();
+        assert_eq!(session_in_use(session), 1);
+        clear_session_limits(session);
+    }
+
+    #[test]
+    fn in_flight_permits_block_at_cap_and_release_on_drop() {
+        let session = 9_100_003;
+        set_session_limits(session, SessionLimits::new().max_in_flight(2));
+        let p1 = admit_in_flight(session);
+        let _p2 = admit_in_flight(session);
+        let (tx, rx) = std::sync::mpsc::channel();
+        std::thread::spawn(move || {
+            let p = admit_in_flight(session);
+            let _ = tx.send(());
+            drop(p);
+        });
+        assert!(rx.recv_timeout(Duration::from_millis(60)).is_err(), "cap must block");
+        drop(p1);
+        rx.recv_timeout(Duration::from_secs(5)).expect("freed permit must admit the waiter");
+        clear_session_limits(session);
+    }
+
+    #[test]
+    fn breaker_opens_after_threshold_blocks_revives_then_probes_and_closes() {
+        let reg = PoolRegistration::register(
+            "test",
+            &[("a".to_string(), 1), ("b".to_string(), 1)],
+            RevivePolicy::Budgeted(16),
+            BreakerConfig {
+                threshold: 2,
+                window: Duration::from_secs(10),
+                cooldown: Duration::from_millis(40),
+            },
+        );
+        reg.activate("a");
+        reg.activate("b");
+
+        // Two deaths on host a within the window trip its breaker.
+        let respawns_before;
+        {
+            let l = reg.acquire(0).unwrap();
+            assert_eq!(l.host(), "a", "deterministic selection: registration order");
+            l.forfeit();
+            reg.record_death("a");
+            let t = reg.try_revive().expect("first death: breaker still closed");
+            assert_eq!(t.host(), "a");
+            t.commit_idle();
+            let l = reg.acquire(0).unwrap();
+            assert_eq!(l.host(), "a");
+            l.forfeit();
+            reg.record_death("a");
+            respawns_before = reg.host_respawns("a");
+        }
+        assert_eq!(reg.breaker_state("a"), BreakerState::Open);
+        // No resubmission capacity flows to the open host...
+        assert!(reg.try_revive().is_none(), "open breaker must deny revives");
+        assert_eq!(reg.host_respawns("a"), respawns_before, "no further respawns on a");
+        // ...while the healthy host keeps serving.
+        let lb = reg.acquire(0).unwrap();
+        assert_eq!(lb.host(), "b");
+        drop(lb);
+
+        // Cooldown passes: exactly one half-open probe is admitted.
+        std::thread::sleep(Duration::from_millis(60));
+        let probe = reg.try_revive().expect("cooled-down breaker must admit the probe");
+        assert_eq!(probe.host(), "a");
+        assert_eq!(reg.breaker_state("a"), BreakerState::HalfOpen);
+        probe.commit_idle();
+        // A clean lease release on the probed host closes the breaker.
+        let la = reg.acquire(0).unwrap();
+        assert_eq!(la.host(), "a");
+        drop(la);
+        assert_eq!(reg.breaker_state("a"), BreakerState::Closed);
+    }
+
+    #[test]
+    fn death_during_half_open_probe_reopens() {
+        let reg = PoolRegistration::register(
+            "test",
+            &[("a".to_string(), 1)],
+            RevivePolicy::Budgeted(16),
+            BreakerConfig {
+                threshold: 1,
+                window: Duration::from_secs(10),
+                cooldown: Duration::from_millis(20),
+            },
+        );
+        reg.activate("a");
+        reg.acquire(0).unwrap().forfeit();
+        reg.record_death("a");
+        assert_eq!(reg.breaker_state("a"), BreakerState::Open);
+        std::thread::sleep(Duration::from_millis(30));
+        let probe = reg.try_revive().expect("probe after cooldown");
+        probe.commit_idle();
+        let l = reg.acquire(0).unwrap();
+        l.forfeit();
+        reg.record_death("a");
+        assert_eq!(reg.breaker_state("a"), BreakerState::Open, "probe death must re-open");
+    }
+
+    #[test]
+    fn blocked_acquirer_rides_out_an_open_breaker_via_on_demand_probe() {
+        // A launcher parked in acquire_or_revive while the only host's
+        // breaker is open must pick up the half-open probe once the
+        // cooldown passes — the timed re-check inside acquire_inner.
+        let reg = Arc::new(PoolRegistration::register(
+            "test",
+            &[("a".to_string(), 1)],
+            RevivePolicy::Budgeted(16),
+            BreakerConfig {
+                threshold: 1,
+                window: Duration::from_secs(10),
+                cooldown: Duration::from_millis(80),
+            },
+        ));
+        reg.activate("a");
+        reg.acquire(0).unwrap().forfeit();
+        reg.record_death("a");
+        let r2 = Arc::clone(&reg);
+        let (tx, rx) = std::sync::mpsc::channel();
+        std::thread::spawn(move || {
+            let got = r2.acquire_or_revive(0);
+            let _ = tx.send(matches!(got, Ok(Acquired::Revive(_))));
+        });
+        assert!(
+            rx.recv_timeout(Duration::from_millis(40)).is_err(),
+            "open breaker must defer the revive"
+        );
+        assert_eq!(
+            rx.recv_timeout(Duration::from_secs(5)),
+            Ok(true),
+            "cooldown expiry must hand the parked launcher the probe ticket"
+        );
+    }
+
+    #[test]
+    fn capacity_json_has_schema_pools_and_sessions() {
+        let reg = one_host_pool(2, RevivePolicy::Budgeted(4));
+        let session = 9_100_004;
+        set_session_limits(session, SessionLimits::new().max_workers(3));
+        let _l = reg.acquire(session).unwrap();
+        let doc = crate::util::json::parse(&capacity_json()).expect("valid JSON");
+        assert_eq!(
+            doc.get("schema").and_then(|s| s.as_str()),
+            Some("rustures.capacity.v1")
+        );
+        let pools = doc.get("pools").unwrap().as_arr().unwrap();
+        let pool = pools
+            .iter()
+            .find(|p| p.get("pool").and_then(|v| v.as_i64()) == Some(reg.pool_id() as i64))
+            .expect("registered pool present");
+        let host = &pool.get("hosts").unwrap().as_arr().unwrap()[0];
+        assert_eq!(host.get("host").unwrap().as_str(), Some("local"));
+        assert_eq!(host.get("in_use").unwrap().as_i64(), Some(1));
+        assert_eq!(host.get("breaker").unwrap().as_str(), Some("closed"));
+        let sessions = doc.get("sessions").unwrap().as_arr().unwrap();
+        let entry = sessions
+            .iter()
+            .find(|e| e.get("session").and_then(|v| v.as_i64()) == Some(session as i64))
+            .expect("session entry present");
+        assert_eq!(entry.get("max_workers").unwrap().as_i64(), Some(3));
+        clear_session_limits(session);
+    }
+
+    #[test]
+    fn deregistered_pool_leases_release_as_noops() {
+        let reg = one_host_pool(1, RevivePolicy::Never);
+        let session = 9_100_005;
+        let lease = reg.acquire(session).unwrap();
+        drop(reg);
+        assert_eq!(session_in_use(session), 1);
+        drop(lease); // must not panic; session charge still returns
+        assert_eq!(session_in_use(session), 0);
+    }
+
+    #[test]
+    fn leases_spread_across_hosts_by_free_count() {
+        let reg = PoolRegistration::register(
+            "test",
+            &[("a".to_string(), 2), ("b".to_string(), 2)],
+            RevivePolicy::Never,
+            BreakerConfig::default(),
+        );
+        for h in ["a", "a", "b", "b"] {
+            reg.activate(h);
+        }
+        let l1 = reg.acquire(0).unwrap();
+        let l2 = reg.acquire(0).unwrap();
+        assert_ne!(l1.host(), l2.host(), "equal-free tie then max-free must alternate");
+    }
+
+    #[test]
+    fn concurrent_acquire_release_is_balanced() {
+        let reg = Arc::new(one_host_pool(3, RevivePolicy::Never));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let cur = Arc::new(AtomicUsize::new(0));
+        let mut joins = Vec::new();
+        for _ in 0..8 {
+            let reg = Arc::clone(&reg);
+            let peak = Arc::clone(&peak);
+            let cur = Arc::clone(&cur);
+            joins.push(std::thread::spawn(move || {
+                for _ in 0..20 {
+                    let lease = reg.acquire(0).unwrap();
+                    let now = cur.fetch_add(1, Ordering::SeqCst) + 1;
+                    peak.fetch_max(now, Ordering::SeqCst);
+                    std::thread::sleep(Duration::from_micros(200));
+                    cur.fetch_sub(1, Ordering::SeqCst);
+                    drop(lease);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert!(
+            peak.load(Ordering::SeqCst) <= 3,
+            "ledger must never over-admit: peak {} > 3 seats",
+            peak.load(Ordering::SeqCst)
+        );
+    }
+}

@@ -511,6 +511,102 @@ fn check_kill_without_retry_is_structured_not_hang() -> Result<(), String> {
     expect_eq(f.value().map_err(|e| e.to_string())?, Value::I64(7), "post-kill future")
 }
 
+// -------------------------------------------------- capacity checks ----
+
+/// Per-session `max_workers` quota, end to end on the ambient backend: a
+/// quota-capped 64-element lapply completes (blocking admission, never a
+/// drop), the seeded result is bit-identical to an unlimited run, and the
+/// ledger's high-water mark proves concurrency never exceeded the cap.
+fn check_capacity_quota_bounds_concurrency() -> Result<(), String> {
+    use crate::api::session::Session;
+    use crate::capacity::{self, SessionLimits};
+
+    let spec = ambient_plan();
+    let env = Env::new();
+    let xs: Vec<Value> = (0..64i64).map(Value::I64).collect();
+    let body = Expr::add(Expr::var("x"), Expr::runif(1));
+    let opts = || LapplyOpts::new().seed(23).chunking(Chunking::ChunkSize(8));
+
+    // Unlimited reference run on its own session (seeded per-element
+    // substreams: the values are invariant to concurrency by design).
+    let unlimited = Session::with_plan(spec.clone());
+    let want = unlimited.lapply(&xs, "x", &body, &env, &opts()).map_err(|e| e.to_string())?;
+    unlimited.close();
+
+    // Quota-capped: at most 2 concurrent execution-slot leases.
+    let s = Session::with_limits(spec, SessionLimits::new().max_workers(2));
+    let got = s.lapply(&xs, "x", &body, &env, &opts()).map_err(|e| e.to_string())?;
+    let peak = capacity::session_peak_in_use(s.id());
+    s.close();
+    expect_eq(got, want, "quota-capped lapply vs unlimited run")?;
+    if peak > 2 {
+        return err(format!(
+            "session max_workers = 2 but peak concurrent leases was {peak}"
+        ));
+    }
+    Ok(())
+}
+
+/// The three-state circuit breaker at the ledger layer (plan-independent
+/// semantics, exercised under every suite): K deaths within the window
+/// open a host's breaker — zero further revives (resubmission capacity)
+/// flow to it while a healthy host keeps serving — and after the cooldown
+/// exactly one half-open probe runs; a clean completion closes the
+/// breaker.
+fn check_circuit_breaker_isolates_dying_host() -> Result<(), String> {
+    use crate::capacity::{BreakerConfig, BreakerState, PoolRegistration, RevivePolicy};
+
+    let reg = PoolRegistration::register(
+        "conformance-probe",
+        &[("a".to_string(), 1), ("b".to_string(), 1)],
+        RevivePolicy::Budgeted(16),
+        BreakerConfig {
+            threshold: 2,
+            window: Duration::from_secs(10),
+            cooldown: Duration::from_millis(30),
+        },
+    );
+    reg.activate("a");
+    reg.activate("b");
+
+    // First death on host a: breaker stays closed, the revive flows.
+    let l = reg.acquire(0).map_err(|e| e.to_string())?;
+    expect_eq(l.host().to_string(), "a".to_string(), "deterministic first host")?;
+    l.forfeit();
+    reg.record_death("a");
+    let t = reg.try_revive().ok_or("first revive denied while the breaker is closed")?;
+    expect_eq(t.host().to_string(), "a".to_string(), "revive targets the dead host")?;
+    t.commit_idle();
+
+    // Second death within the window: the breaker opens.
+    let l = reg.acquire(0).map_err(|e| e.to_string())?;
+    l.forfeit();
+    reg.record_death("a");
+    expect_eq(reg.breaker_state("a"), BreakerState::Open, "breaker after K deaths")?;
+    let respawns = reg.host_respawns("a");
+    if reg.try_revive().is_some() {
+        return err("open breaker must deny revives (no resubmissions to host a)");
+    }
+    expect_eq(reg.host_respawns("a"), respawns, "zero further respawns on the open host")?;
+
+    // The healthy host keeps absorbing the load.
+    let lb = reg.acquire(0).map_err(|e| e.to_string())?;
+    expect_eq(lb.host().to_string(), "b".to_string(), "healthy host serves meanwhile")?;
+    drop(lb);
+
+    // Cooldown passes: exactly one half-open probe is admitted, and a
+    // clean lease release on the probed host closes the breaker.
+    std::thread::sleep(Duration::from_millis(45));
+    let probe = reg.try_revive().ok_or("half-open probe denied after the cooldown")?;
+    expect_eq(probe.host().to_string(), "a".to_string(), "probe targets the tripped host")?;
+    expect_eq(reg.breaker_state("a"), BreakerState::HalfOpen, "probe state")?;
+    probe.commit_idle();
+    let la = reg.acquire(0).map_err(|e| e.to_string())?;
+    expect_eq(la.host().to_string(), "a".to_string(), "probe seat serves")?;
+    drop(la);
+    expect_eq(reg.breaker_state("a"), BreakerState::Closed, "clean release closes the breaker")
+}
+
 // --------------------------------------------------- session checks ----
 
 /// Two concurrent first-class sessions on *different* backends in one
@@ -764,6 +860,16 @@ pub fn checks() -> Vec<Check> {
             name: "kill-no-retry",
             what: "worker kill without retry is a structured error, not a hang; capacity respawns",
             run: check_kill_without_retry_is_structured_not_hang,
+        },
+        Check {
+            name: "capacity-quota",
+            what: "max_workers-capped lapply: bounded concurrency, bit-identical result",
+            run: check_capacity_quota_bounds_concurrency,
+        },
+        Check {
+            name: "circuit-breaker",
+            what: "K deaths open a host's breaker; healthy hosts serve; half-open probe recovers",
+            run: check_circuit_breaker_isolates_dying_host,
         },
         Check {
             name: "sessions-isolated",

@@ -22,7 +22,10 @@
 //!   infrastructure [`api::error::FutureError`]s,
 //! * nested-parallelism protection via plan topologies ([`api::plan`]),
 //! * supervised fault tolerance — worker respawn + transparent,
-//!   determinism-preserving retry ([`backend::supervisor`]).
+//!   determinism-preserving retry ([`backend::supervisor`]),
+//! * capacity-governed execution — one ledger for every execution slot:
+//!   per-session quotas, per-host respawn budgets, circuit breakers
+//!   ([`capacity`]).
 //!
 //! Compute payloads (the paper's `slow_fcn`) are JAX/Pallas programs
 //! AOT-lowered to HLO text and executed through PJRT by [`runtime`] — Python
@@ -45,6 +48,7 @@
 
 pub mod api;
 pub mod backend;
+pub mod capacity;
 pub mod conformance;
 pub mod ipc;
 pub mod mapreduce;
@@ -73,6 +77,7 @@ pub mod prelude {
     pub use crate::api::session::Session;
     pub use crate::api::value::{Tensor, Value};
     pub use crate::backend::supervisor::{RetryPolicy, SupervisorConfig};
+    pub use crate::capacity::{BreakerConfig, BreakerState, SessionLimits};
     pub use crate::mapreduce::{
         future_lapply, future_map, future_map_reduce, Chunking, LapplyOpts,
     };

@@ -257,6 +257,13 @@ pub fn supervision_json() -> String {
     out
 }
 
+/// Per-pool, per-host, per-session execution-slot utilization as JSON —
+/// the capacity ledger's metrics surface (schema `rustures.capacity.v1`;
+/// see [`crate::capacity::capacity_json`] for the shape).
+pub fn capacity_json() -> String {
+    crate::capacity::capacity_json()
+}
+
 fn now_ns() -> u64 {
     SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default().as_nanos() as u64
 }

@@ -25,8 +25,21 @@ use std::time::{Duration, Instant};
 
 use crate::api::error::FutureError;
 use crate::backend::dispatch::CompletionWaker;
+use crate::capacity::{BreakerConfig, PoolRegistration, RevivePolicy, SlotLease};
 use crate::util::exe::worker_exe;
 use crate::util::uuid_v4;
+
+/// Chaos hook (the `!noconnect` family, aimed at the scheduler itself):
+/// when armed, the daemon exits at the top of its next tick — simulating a
+/// crashed scheduler daemon, not just a crashed job process.  The daemon's
+/// exit guard then surfaces structured failures to every waiting handle
+/// (queued futures error instead of hanging).  Self-disarming (fires once).
+static CHAOS_DAEMONDIE: AtomicBool = AtomicBool::new(false);
+
+/// Arm the daemon-death chaos probe for the next daemon tick.
+pub fn arm_chaos_daemondie() {
+    CHAOS_DAEMONDIE.store(true, Ordering::SeqCst);
+}
 
 /// Job identifier (scheduler-scoped).
 pub type JobId = u64;
@@ -85,6 +98,12 @@ struct Job {
     submitted_at: Instant,
     child: Option<Child>,
     node: Option<usize>,
+    /// Originating session (quota key for the ledger admission).
+    session: u64,
+    /// The node-slot lease held while the job runs; dropped (slot freed)
+    /// on the terminal transition — capacity frees when a job *completes*,
+    /// not when its result is collected.
+    lease: Option<SlotLease>,
 }
 
 struct SchedState {
@@ -114,6 +133,14 @@ pub struct Scheduler {
     next_id: AtomicU64,
     stop: Arc<AtomicBool>,
     daemon: Mutex<Option<JoinHandle<()>>>,
+    /// Node slots as capacity-ledger seats: the daemon acquires one lease
+    /// per admitted job (session quotas apply there) and releases it on
+    /// the job's terminal transition.
+    reg: Arc<PoolRegistration>,
+    /// False the moment the daemon thread exits — however it exits.
+    /// Handles consult this so a dead daemon surfaces as a structured
+    /// error instead of an eternal `Pending` poll.
+    daemon_alive: Arc<AtomicBool>,
 }
 
 impl Scheduler {
@@ -135,12 +162,27 @@ impl Scheduler {
             waiters: HashMap::new(),
         }));
         let stop = Arc::new(AtomicBool::new(false));
+        // Node slots never die (jobs are disposable; the node survives a
+        // crashed job), so the seats are registered revive-less and simply
+        // cycle lease → release per admitted job.
+        let reg = Arc::new(PoolRegistration::register(
+            "batchtools",
+            &[("batch".to_string(), config.total_slots())],
+            RevivePolicy::Never,
+            BreakerConfig::default(),
+        ));
+        for _ in 0..config.total_slots() {
+            reg.activate("batch");
+        }
+        let daemon_alive = Arc::new(AtomicBool::new(true));
         let sched = Arc::new(Scheduler {
             config: config.clone(),
             state: Arc::clone(&state),
             next_id: AtomicU64::new(1),
             stop: Arc::clone(&stop),
             daemon: Mutex::new(None),
+            reg: Arc::clone(&reg),
+            daemon_alive: Arc::clone(&daemon_alive),
         });
 
         let daemon_state = Arc::clone(&state);
@@ -151,15 +193,31 @@ impl Scheduler {
         let daemon_scope = crate::metrics::ambient_scope();
         let handle = std::thread::Builder::new()
             .name("rustures-sched".into())
-            .spawn(move || daemon_loop(daemon_cfg, daemon_state, daemon_stop, daemon_scope))
+            .spawn(move || {
+                // The guard fires HOWEVER the daemon exits (orderly stop,
+                // chaos kill, panic): it marks the daemon dead, releases
+                // job leases, and wakes every subscriber so no future ever
+                // hangs on a scheduler that stopped scheduling.
+                let _guard = DaemonGuard { state: Arc::clone(&daemon_state), alive: daemon_alive };
+                daemon_loop(daemon_cfg, daemon_state, daemon_stop, daemon_scope, reg)
+            })
             .map_err(|e| FutureError::Launch(format!("spawn scheduler daemon: {e}")))?;
         *sched.daemon.lock().unwrap() = Some(handle);
         Ok(sched)
     }
 
     /// Submit a spooled task file; returns immediately with the job id
-    /// (fire-and-forget, like `sbatch`).
+    /// (fire-and-forget, like `sbatch`).  Attributed to the default
+    /// session; see [`Scheduler::submit_for_session`].
     pub fn submit(&self, task_file: PathBuf) -> JobId {
+        self.submit_for_session(task_file, 0)
+    }
+
+    /// [`Scheduler::submit`] attributed to an originating session: the
+    /// daemon's admission step charges the job's node-slot lease to this
+    /// session, so per-session `max_workers` quotas hold across the batch
+    /// backend too (a quota-capped job stays queued — FIFO — never drops).
+    pub fn submit_for_session(&self, task_file: PathBuf, session: u64) -> JobId {
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
         let result_file = self.config.spool.join(format!("job-{id}.result"));
         let job = Job {
@@ -170,11 +228,20 @@ impl Scheduler {
             submitted_at: Instant::now(),
             child: None,
             node: None,
+            session,
+            lease: None,
         };
         let mut state = self.state.lock().unwrap();
         state.jobs.insert(id, job);
         state.queue.push_back(id);
         id
+    }
+
+    /// Is the scheduler daemon still running?  A dead daemon can never
+    /// complete a job: handles surface structured errors instead of
+    /// polling a frozen `Pending` forever.
+    pub fn daemon_alive(&self) -> bool {
+        self.daemon_alive.load(Ordering::SeqCst)
     }
 
     /// Current job state (`squeue`-style polling).
@@ -200,8 +267,10 @@ impl Scheduler {
                 if let Some(child) = &mut job.child {
                     let _ = child.kill();
                 }
-                // The daemon harvests the kill; mark eagerly.
+                // The daemon harvests the kill; mark eagerly.  Terminal:
+                // the node-slot lease frees now.
                 job.state = JobState::Cancelled;
+                job.lease.take();
                 if let Some(node) = job.node.take() {
                     state.free_slots.push(node);
                 }
@@ -222,10 +291,16 @@ impl Scheduler {
     pub fn subscribe(&self, id: JobId, waker: &Arc<CompletionWaker>, token: u64) {
         let notify_now = {
             let mut state = self.state.lock().unwrap();
-            let live = matches!(
-                state.jobs.get(&id).map(|j| &j.state),
-                Some(JobState::Pending) | Some(JobState::Running { .. })
-            );
+            // A live job on a DEAD daemon will never transition: notify
+            // now so resolve() surfaces the structured failure instead of
+            // waiting forever.  (Checked under the state lock: the exit
+            // guard drains waiters under the same lock, so a registration
+            // racing the daemon's death is always notified by one side.)
+            let live = self.daemon_alive()
+                && matches!(
+                    state.jobs.get(&id).map(|j| &j.state),
+                    Some(JobState::Pending) | Some(JobState::Running { .. })
+                );
             if live {
                 state.waiters.insert(id, (Arc::clone(waker), token));
             }
@@ -254,6 +329,7 @@ impl Scheduler {
     /// Stop the daemon and kill running jobs.
     pub fn shutdown(&self) {
         self.stop.store(true, Ordering::SeqCst);
+        self.reg.shutdown();
         if let Some(d) = self.daemon.lock().unwrap().take() {
             let _ = d.join();
         }
@@ -263,6 +339,7 @@ impl Scheduler {
                 let _ = child.kill();
                 let _ = child.wait();
             }
+            job.lease.take();
         }
         // Jobs die with the daemon: wake every remaining subscriber.
         let waiters = std::mem::take(&mut state.waiters);
@@ -274,13 +351,45 @@ impl Scheduler {
     }
 }
 
+/// Runs when the daemon thread exits — orderly stop, chaos kill, or panic.
+/// A dead daemon can never harvest or admit: mark it dead FIRST, then wake
+/// every completion subscriber and release the node-slot leases of jobs
+/// nobody will ever harvest, so queued futures surface structured errors
+/// instead of hanging and the ledger stays truthful.
+struct DaemonGuard {
+    state: Arc<Mutex<SchedState>>,
+    alive: Arc<AtomicBool>,
+}
+
+impl Drop for DaemonGuard {
+    fn drop(&mut self) {
+        self.alive.store(false, Ordering::SeqCst);
+        let mut st = self.state.lock().unwrap();
+        for job in st.jobs.values_mut() {
+            job.lease.take();
+        }
+        let waiters = std::mem::take(&mut st.waiters);
+        drop(st);
+        for (_, (waker, token)) in waiters {
+            waker.notify(token);
+        }
+    }
+}
+
 fn daemon_loop(
     config: SchedConfig,
     state: Arc<Mutex<SchedState>>,
     stop: Arc<AtomicBool>,
     scope: crate::metrics::CounterScope,
+    reg: Arc<PoolRegistration>,
 ) {
     while !stop.load(Ordering::SeqCst) {
+        if CHAOS_DAEMONDIE.swap(false, Ordering::SeqCst) {
+            // Chaos: the scheduler daemon itself "crashes" mid-operation.
+            // No cleanup here — the exit guard is the only safety net,
+            // exactly as it would be for a panic.
+            return;
+        }
         {
             let mut st = state.lock().unwrap();
 
@@ -315,6 +424,9 @@ fn daemon_loop(
                     }
                     job.state = new_state;
                     job.child = None;
+                    // Terminal: drop the node-slot lease — capacity frees
+                    // on completion, not collection.
+                    job.lease.take();
                     if let Some(node) = job.node.take() {
                         st.free_slots.push(node);
                     }
@@ -324,39 +436,57 @@ fn daemon_loop(
                 }
             }
 
-            // 2. Admit eligible pending jobs to free slots, FIFO.
+            // 2. Admit eligible pending jobs to free slots — FIFO, but a
+            //    QUOTA-blocked job is skipped rather than treated as a
+            //    barrier: one session at its `max_workers` cap must not
+            //    starve other sessions' jobs queued behind it (per-session
+            //    FIFO still holds — a session's own jobs are only ever
+            //    admitted in order).
             while !st.free_slots.is_empty() {
-                // Find the first queued job past its submission latency.
-                let Some(&front) = st.queue.front() else { break };
-                let eligible = {
-                    let job = &st.jobs[&front];
-                    match job.state {
-                        JobState::Pending => {
-                            job.submitted_at.elapsed() >= config.submit_latency
-                        }
-                        // Cancelled while queued: drop from queue.
-                        _ => {
-                            st.queue.pop_front();
-                            continue;
-                        }
+                // Sweep cancelled/terminal entries off the queue head.
+                while let Some(&front) = st.queue.front() {
+                    if matches!(st.jobs[&front].state, JobState::Pending) {
+                        break;
                     }
-                };
-                if !eligible {
-                    break; // FIFO: later jobs wait behind the head
+                    st.queue.pop_front();
                 }
-                st.queue.pop_front();
+                // First admissible job: eligible (past its submission
+                // latency) AND granted a ledger lease (seat free, session
+                // quota not at cap).  Queue order == submission order, so
+                // the first too-young job ends the scan.
+                let mut admitted = None;
+                for idx in 0..st.queue.len() {
+                    let id = st.queue[idx];
+                    let job = &st.jobs[&id];
+                    if !matches!(job.state, JobState::Pending) {
+                        continue; // cancelled mid-queue: swept at the head
+                    }
+                    if job.submitted_at.elapsed() < config.submit_latency {
+                        break;
+                    }
+                    if let Some(lease) = reg.try_acquire(job.session) {
+                        admitted = Some((idx, id, lease));
+                        break;
+                    }
+                    // Quota-blocked: stays queued, never dropped; the jobs
+                    // behind it (other sessions) get their turn.
+                }
+                let Some((idx, id, lease)) = admitted else { break };
+                st.queue.remove(idx);
                 let node = st.free_slots.pop().unwrap();
-                let job = st.jobs.get_mut(&front).unwrap();
+                let job = st.jobs.get_mut(&id).unwrap();
                 match spawn_job_worker(&job.task_file, &job.result_file, node) {
                     Ok(child) => {
                         job.child = Some(child);
                         job.node = Some(node);
                         job.state = JobState::Running { node };
+                        job.lease = Some(lease);
                     }
                     Err(e) => {
                         job.state = JobState::Failed(e.to_string());
                         st.free_slots.push(node);
-                        st.notify_job_waiter(front);
+                        drop(lease);
+                        st.notify_job_waiter(id);
                     }
                 }
             }

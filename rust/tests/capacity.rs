@@ -1,0 +1,263 @@
+//! Capacity-governed execution, end to end: per-session `max_workers`
+//! quotas bound real concurrency without changing results, supervisor
+//! respawns cannot overshoot a quota, queued dispatch respects quotas, the
+//! batch scheduler daemon's own death surfaces structured errors (never a
+//! hang), and `metrics::capacity_json()` renders the ledger.
+
+use std::time::Duration;
+
+use rustures::api::expr::PrimOp;
+use rustures::api::session::Session;
+use rustures::capacity::{self, SessionLimits};
+use rustures::prelude::*;
+use rustures::util::exe::worker_exe;
+
+fn xs(n: i64) -> Vec<Value> {
+    (0..n).map(Value::I64).collect()
+}
+
+/// One seeded draw per element, so bit-identity against a reference run is
+/// meaningful.
+fn seeded_body() -> Expr {
+    Expr::add(Expr::var("x"), Expr::runif(1))
+}
+
+/// Map body: element `kill_at` kills its worker once (marker-gated), then
+/// every element draws — the conformance suite's chaos shape.
+fn kill_once_body(kill_at: i64, marker: &str) -> Expr {
+    Expr::seq(vec![
+        Expr::if_else(
+            Expr::prim(PrimOp::Eq, vec![Expr::var("x"), Expr::lit(kill_at)]),
+            Expr::chaos_kill_once(marker),
+            Expr::lit(0i64),
+        ),
+        Expr::add(Expr::var("x"), Expr::runif(1)),
+    ])
+}
+
+fn chaos_marker(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("rustures-capacity-{tag}-{}", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+/// The acceptance shape: a session with `max_workers = 2` running a
+/// 64-element lapply never exceeds 2 concurrent leases and completes
+/// bit-identically to an unlimited run — on a pool with MORE than 2
+/// workers, so the quota (not the pool size) is what bounds concurrency.
+#[test]
+fn quota_capped_lapply_is_bit_identical_and_bounded() {
+    let elements = xs(64);
+    let body = seeded_body();
+    let env = Env::new();
+    let opts = || LapplyOpts::new().seed(41).chunking(Chunking::ChunkSize(8));
+
+    for spec in [PlanSpec::multicore(4), PlanSpec::multiprocess(4)] {
+        if matches!(spec, PlanSpec::Multiprocess { .. }) && worker_exe().is_err() {
+            continue; // worker binary not built (unit-test-only invocation)
+        }
+        let unlimited = Session::with_plan(spec.clone());
+        let want = unlimited.lapply(&elements, "x", &body, &env, &opts()).unwrap();
+        unlimited.close();
+
+        let s = Session::with_limits(spec.clone(), SessionLimits::new().max_workers(2));
+        let got = s.lapply(&elements, "x", &body, &env, &opts()).unwrap();
+        let peak = capacity::session_peak_in_use(s.id());
+        s.close();
+        assert_eq!(got, want, "{}: quota must not change results", spec.name());
+        assert!(
+            peak <= 2,
+            "{}: max_workers = 2 but peak concurrent leases was {peak}",
+            spec.name()
+        );
+    }
+}
+
+/// Regression (ledger migration): a supervisor respawn restores capacity
+/// but must NOT let a quota-capped session exceed `max_workers` — kills
+/// mid-map, with retry, still complete bit-identically and the session's
+/// lease high-water mark stays at the cap.
+#[test]
+fn respawn_cannot_exceed_session_quota() {
+    let elements = xs(16);
+    let env = Env::new();
+    let retry = RetryPolicy::idempotent(4).with_backoff(Duration::from_millis(1), 2.0);
+    let opts = |retry: Option<RetryPolicy>| {
+        let o = LapplyOpts::new().seed(59).chunking(Chunking::ChunkSize(2));
+        match retry {
+            Some(r) => o.retry(r),
+            None => o,
+        }
+    };
+
+    // Clean reference, unlimited.
+    let clean_body =
+        Expr::seq(vec![Expr::lit(0i64), Expr::add(Expr::var("x"), Expr::runif(1))]);
+    let reference = Session::with_plan(PlanSpec::multicore(4));
+    let want = reference.lapply(&elements, "x", &clean_body, &env, &opts(None)).unwrap();
+    reference.close();
+
+    // Quota-capped run that loses a worker mid-map.
+    let marker = chaos_marker("respawn-quota");
+    let body = kill_once_body(5, &marker);
+    let s = Session::with_limits(PlanSpec::multicore(4), SessionLimits::new().max_workers(2));
+    let got = s.lapply(&elements, "x", &body, &env, &opts(Some(retry))).unwrap();
+    let peak = capacity::session_peak_in_use(s.id());
+    let counters = s.supervision_counters();
+    s.close();
+    let _ = std::fs::remove_file(&marker);
+
+    assert_eq!(got, want, "kill + retry under a quota must stay bit-identical");
+    assert!(counters.worker_deaths >= 1, "the chaos kill must have been observed");
+    assert!(
+        peak <= 2,
+        "respawn overshot the session quota: peak concurrent leases {peak} > 2"
+    );
+}
+
+/// `Queued`-backlogged admission: queued dispatch enqueues without
+/// blocking creation, but seat acquisition still flows through the ledger
+/// — the quota bounds concurrency exactly like the blocking path.
+#[test]
+fn queued_dispatch_respects_quota() {
+    let elements = xs(32);
+    let body = seeded_body();
+    let env = Env::new();
+    let opts = || LapplyOpts::new().seed(67).chunking(Chunking::ChunkSize(4)).queued();
+
+    let unlimited = Session::with_plan(PlanSpec::multicore(4));
+    let want = unlimited.lapply(&elements, "x", &body, &env, &opts()).unwrap();
+    unlimited.close();
+
+    let s = Session::with_limits(PlanSpec::multicore(4), SessionLimits::new().max_workers(2));
+    let got = s.lapply(&elements, "x", &body, &env, &opts()).unwrap();
+    let peak = capacity::session_peak_in_use(s.id());
+    s.close();
+    assert_eq!(got, want);
+    assert!(peak <= 2, "queued dispatch overshot the quota: peak {peak} > 2");
+}
+
+/// Chaos for the batch scheduler daemon ITSELF (not just job processes):
+/// with futures queued and running, the daemon dies — every future must
+/// surface a structured `FutureError` (or its already-computed value),
+/// never hang, and new submissions must fail fast.
+#[test]
+fn batch_daemon_death_surfaces_structured_errors_not_hangs() {
+    if worker_exe().is_err() {
+        return; // worker binary not built (unit-test-only invocation)
+    }
+    let s = Session::with_plan(PlanSpec::batch(2));
+    let env = Env::new();
+    // More futures than slots: some run, some sit in the daemon's queue.
+    let futures: Vec<Future> = (0..6)
+        .map(|i| {
+            s.future_with(
+                Expr::seq(vec![Expr::Sleep { millis: 40 }, Expr::lit(i as i64)]),
+                &env,
+                FutureOpts::new().queued(),
+            )
+            .unwrap()
+        })
+        .collect();
+
+    rustures::scheduler::arm_chaos_daemondie();
+
+    // Collect on a helper thread so a hang fails the test in bounded time
+    // instead of wedging the whole run.
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let outcomes: Vec<Result<Value, FutureError>> =
+            futures.iter().map(|f| f.value()).collect();
+        let _ = tx.send(outcomes);
+    });
+    let outcomes = rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("queued futures hung after the scheduler daemon died");
+    for (i, outcome) in outcomes.iter().enumerate() {
+        match outcome {
+            // Finished before the daemon died: the value survives.
+            Ok(v) => assert_eq!(*v, Value::I64(i as i64)),
+            // Killed with the daemon: structured infrastructure error,
+            // never a relayed eval error and never a hang.
+            Err(e) => assert!(!e.is_eval(), "future {i}: expected infrastructure error, got {e}"),
+        }
+    }
+
+    // The dead daemon rejects new work immediately.
+    match s.future(Expr::lit(1i64), &env) {
+        Err(FutureError::Launch(msg)) => assert!(msg.contains("daemon"), "{msg}"),
+        Ok(f) => match f.value() {
+            Err(e) => assert!(!e.is_eval(), "expected structured failure, got {e}"),
+            Ok(v) => panic!("dead scheduler daemon completed a future: {v:?}"),
+        },
+        Err(other) => assert!(!other.is_eval(), "unexpected error kind: {other}"),
+    }
+    s.close();
+}
+
+/// The metrics surface: `rustures.capacity.v1` renders per-pool/per-host
+/// seat states and per-session usage/limits.
+#[test]
+fn capacity_json_renders_pools_and_session_usage() {
+    let s = Session::with_limits(PlanSpec::multicore(2), SessionLimits::new().max_workers(2));
+    let env = Env::new();
+    let f = s.future(Expr::Spin { millis: 60 }, &env).unwrap();
+    let doc = rustures::util::json::parse(&rustures::metrics::capacity_json())
+        .expect("capacity_json must be valid JSON");
+    assert_eq!(
+        doc.get("schema").and_then(|v| v.as_str()),
+        Some("rustures.capacity.v1")
+    );
+    let pools = doc.get("pools").unwrap().as_arr().unwrap();
+    let mine = pools
+        .iter()
+        .find(|p| {
+            p.get("backend").and_then(|b| b.as_str()) == Some("multicore")
+                && p.get("session").and_then(|v| v.as_i64()) == Some(s.id() as i64)
+        })
+        .expect("the session's multicore pool must appear");
+    let hosts = mine.get("hosts").unwrap().as_arr().unwrap();
+    assert_eq!(hosts[0].get("host").unwrap().as_str(), Some("local"));
+    assert_eq!(hosts[0].get("total").unwrap().as_i64(), Some(2));
+    let sessions = doc.get("sessions").unwrap().as_arr().unwrap();
+    let entry = sessions
+        .iter()
+        .find(|e| e.get("session").and_then(|v| v.as_i64()) == Some(s.id() as i64))
+        .expect("the limited session must appear");
+    assert_eq!(entry.get("max_workers").unwrap().as_i64(), Some(2));
+    f.value().unwrap();
+    s.close();
+}
+
+/// `max_in_flight`: future creation blocks at the cap and resumes as
+/// earlier futures resolve — backpressure, never a drop.
+#[test]
+fn max_in_flight_gates_future_creation() {
+    let s = Session::with_limits(
+        PlanSpec::multicore(2),
+        SessionLimits::new().max_in_flight(2),
+    );
+    let env = Env::new();
+    let f1 = s.future(Expr::lit(1i64), &env).unwrap();
+    let f2 = s.future(Expr::lit(2i64), &env).unwrap();
+    // Two futures in flight: a third creation must block until one is
+    // collected (terminal observation frees the permit).
+    let s2 = s.clone();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let creator = std::thread::spawn(move || {
+        let f3 = s2.future(Expr::lit(3i64), &env).unwrap();
+        let _ = tx.send(());
+        f3.value().unwrap()
+    });
+    assert!(
+        rx.recv_timeout(Duration::from_millis(80)).is_err(),
+        "third creation must block at max_in_flight = 2"
+    );
+    assert_eq!(f1.value().unwrap(), Value::I64(1)); // terminal: permit frees
+    rx.recv_timeout(Duration::from_secs(5))
+        .expect("freed in-flight permit must admit the blocked creation");
+    assert_eq!(creator.join().unwrap(), Value::I64(3));
+    assert_eq!(f2.value().unwrap(), Value::I64(2));
+    s.close();
+}
