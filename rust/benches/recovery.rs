@@ -8,13 +8,21 @@
 //! to the clean run every time — a recovery that corrupts results would
 //! fail the bench, not just skew it.
 //!
-//! Emits `BENCH_recovery.json` (schema in BENCH.md); `scripts/bench.sh`
-//! runs this in smoke mode.
+//! E14 — liveness plane: the same map with 0 / 1 injected worker *hangs*
+//! (silent, no heartbeats) under an armed stall detector.  The detector
+//! kills the hung worker after `stall_after` of silence, the seat returns
+//! through the capacity ledger, and the retry policy resubmits the chunk —
+//! so the hang premium should be roughly `stall_after` + respawn + one
+//! re-run chunk, never the hang's own (60 s) duration.
+//!
+//! Emits `BENCH_recovery.json` and `BENCH_liveness.json` (schemas in
+//! BENCH.md); `scripts/bench.sh` runs this in smoke mode.
 
 mod common;
 
 use common::{fmt_dur, header, json_row, row, smoke, time_once, write_bench_json, Json};
 use rustures::api::plan::{with_plan, PlanSpec};
+use rustures::liveness::{reset_liveness_config, set_liveness_config, LivenessConfig};
 use rustures::prelude::*;
 use std::time::Duration;
 
@@ -69,6 +77,58 @@ fn run_one(spec: PlanSpec, n: usize, kills: usize, work_iters: u64) -> Duration 
     wall
 }
 
+/// Body: elements in `hangs` hang their worker once (marker-gated, silent —
+/// no heartbeats, so only the stall detector can reclaim the seat), then
+/// every element does a fixed slab of CPU work and squares itself.
+fn body_with_hangs(hang_markers: &[(i64, String)], work_iters: u64) -> Expr {
+    let mut probe = Expr::lit(0i64);
+    for (h, m) in hang_markers {
+        probe = Expr::if_else(
+            Expr::prim(PrimOp::Eq, vec![Expr::var("x"), Expr::lit(*h)]),
+            Expr::chaos_hang_once(60_000, m),
+            probe,
+        );
+    }
+    Expr::seq(vec![
+        probe,
+        Expr::Work { iters: work_iters },
+        Expr::mul(Expr::var("x"), Expr::var("x")),
+    ])
+}
+
+fn run_one_hang(
+    spec: PlanSpec,
+    n: usize,
+    hangs: usize,
+    work_iters: u64,
+    stall_after: Duration,
+) -> Duration {
+    let hang_elems: Vec<i64> = (0..hangs as i64).map(|i| (i + 1) * n as i64 / 4).collect();
+    let hang_markers: Vec<(i64, String)> =
+        hang_elems.iter().map(|h| (*h, marker(&format!("h{h}")))).collect();
+    set_liveness_config(LivenessConfig::with_stall_after(stall_after));
+    let wall = with_plan(spec, || {
+        let env = Env::new();
+        let xs: Vec<Value> = (0..n as i64).map(Value::I64).collect();
+        let body = body_with_hangs(&hang_markers, work_iters);
+        let opts = LapplyOpts::new()
+            .no_capture()
+            .chunking(Chunking::ChunkSize(4))
+            .retry(RetryPolicy::idempotent(4).with_backoff(Duration::from_millis(1), 2.0));
+        let _ = future(Expr::lit(0i64), &env).unwrap().value();
+        let want: Vec<Value> = (0..n as i64).map(|i| Value::I64(i * i)).collect();
+        time_once(|| {
+            let out = future_lapply(&xs, "x", &body, &env, &opts).unwrap();
+            assert_eq!(out, want, "hang recovery must not change values");
+        })
+    });
+    reset_liveness_config();
+    for (_, m) in &hang_markers {
+        let _ = std::fs::remove_file(m);
+    }
+    wall
+}
+
 fn main() {
     header(
         "E12: lapply throughput under injected worker kills (supervised retry, 2 workers)",
@@ -97,4 +157,38 @@ fn main() {
     }
     write_bench_json("recovery", json_rows);
     println!("\nshape check: wall grows modestly per kill (respawn + one re-run chunk)");
+
+    header(
+        "E14: lapply throughput under injected worker hangs (stall detector + retry, 2 workers)",
+        &["backend     ", "N    ", "hangs ", "stall  ", "wall      "],
+    );
+
+    // Hung workers never reply on their own, so only process-seat backends
+    // (the stall detector can SIGKILL the worker) are measured.
+    let stall_after = Duration::from_millis(250);
+    let mut liveness_rows = Vec::new();
+    for spec in [PlanSpec::multiprocess(2), PlanSpec::cluster(&["n1.local", "n2.local"])] {
+        for hangs in [0usize, 1] {
+            let wall = run_one_hang(spec.clone(), n, hangs, work_iters, stall_after);
+            row(&[
+                format!("{:<12}", spec.name()),
+                format!("{n:<5}"),
+                format!("{hangs:<6}"),
+                format!("{:<7}", format!("{}ms", stall_after.as_millis())),
+                format!("{:>10}", fmt_dur(wall)),
+            ]);
+            liveness_rows.push(json_row(&[
+                ("backend", Json::Str(spec.name().to_string())),
+                ("n", Json::Int(n as i64)),
+                ("hangs", Json::Int(hangs as i64)),
+                ("stall_after_ms", Json::Int(stall_after.as_millis() as i64)),
+                ("work_iters", Json::Int(work_iters as i64)),
+                ("wall_ns", Json::Int(wall.as_nanos() as i64)),
+            ]));
+        }
+    }
+    write_bench_json("liveness", liveness_rows);
+    println!(
+        "\nshape check: each hang adds ~stall_after + respawn + one re-run chunk, never the 60s hang"
+    );
 }

@@ -76,6 +76,13 @@ pub enum FutureError {
     /// `suspend()`/cancellation is "Future work" in the paper).
     Cancelled,
 
+    /// The future's deadline expired before it resolved.  `elapsed` is how
+    /// long the caller actually waited; `attempts` is how many launches the
+    /// supervisor made before the clock ran out.  The in-flight attempt is
+    /// *cancelled* on expiry (seat freed), not abandoned — and latched
+    /// terminally: every later `resolved()`/`value()` replays this error.
+    TimedOut { elapsed: std::time::Duration, attempts: u32 },
+
     /// The future's owning [`crate::api::session::Session`] was closed
     /// before the future resolved.  Latched terminally: every later
     /// `resolved()`/`value()` replays the same error — a closed session's
@@ -113,6 +120,14 @@ impl fmt::Display for FutureError {
             FutureError::InvalidPlan(m) => write!(f, "FutureError: invalid plan: {m}"),
             FutureError::Runtime(m) => write!(f, "FutureError: runtime: {m}"),
             FutureError::Cancelled => write!(f, "FutureError: future was cancelled"),
+            FutureError::TimedOut { elapsed, attempts } => {
+                write!(
+                    f,
+                    "FutureError: future timed out after {:.3}s ({attempts} attempt{})",
+                    elapsed.as_secs_f64(),
+                    if *attempts == 1 { "" } else { "s" }
+                )
+            }
             FutureError::SessionClosed { session } => {
                 write!(
                     f,
@@ -235,6 +250,24 @@ mod tests {
         assert!(!e.is_eval());
         assert!(!e.is_recoverable(), "a closed session cannot host a relaunch");
         assert!(e.to_string().contains("session 3"));
+    }
+
+    #[test]
+    fn timed_out_is_terminal_and_structured() {
+        let e = FutureError::TimedOut {
+            elapsed: std::time::Duration::from_millis(1500),
+            attempts: 2,
+        };
+        assert!(!e.is_eval());
+        assert!(!e.is_recoverable(), "deadline expiry must not feed the retry path");
+        let msg = e.to_string();
+        assert!(msg.contains("timed out"), "{msg}");
+        assert!(msg.contains("2 attempts"), "{msg}");
+        let one = FutureError::TimedOut {
+            elapsed: std::time::Duration::from_millis(10),
+            attempts: 1,
+        };
+        assert!(one.to_string().contains("1 attempt)"), "{one}");
     }
 
     #[test]

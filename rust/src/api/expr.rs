@@ -148,6 +148,19 @@ pub enum Expr {
     /// injection for the supervisor/retry tests.  `marker: None` kills on
     /// every execution (retry-exhaustion tests).
     ChaosKill { marker: Option<String> },
+
+    /// Chaos probe: the executing worker *hangs* for `millis` — it stays
+    /// alive, holds its seat, and emits nothing (heartbeats included), then
+    /// evaluates to `0`.  The liveness plane's stall detector should declare
+    /// it hung, kill the seat, and retry; without a detector the task merely
+    /// runs long.
+    ///
+    /// With `marker: Some(path)` the hang fires only while `path` does not
+    /// exist, and the marker file is created *before* hanging — so a retried
+    /// run of the same task proceeds immediately: deterministic
+    /// hang-exactly-once injection, mirroring [`Expr::ChaosKill`]'s
+    /// fail-exactly-once contract.  `marker: None` hangs on every execution.
+    ChaosHang { millis: u64, marker: Option<String> },
 }
 
 impl Expr {
@@ -274,6 +287,19 @@ impl Expr {
         Expr::ChaosKill { marker: Some(marker.to_string()) }
     }
 
+    /// Hang the executing worker for `millis` every time this evaluates
+    /// (chaos probe; see [`Expr::ChaosHang`]).
+    pub fn chaos_hang(millis: u64) -> Expr {
+        Expr::ChaosHang { millis, marker: None }
+    }
+
+    /// Hang the executing worker exactly once: the first evaluation creates
+    /// `marker` and hangs for `millis`; later evaluations (e.g. a retry
+    /// after a stall kill) see the marker and evaluate to `0` immediately.
+    pub fn chaos_hang_once(millis: u64, marker: &str) -> Expr {
+        Expr::ChaosHang { millis, marker: Some(marker.to_string()) }
+    }
+
     /// Whether this expression (statically) may draw random numbers —
     /// used for the `seed = FALSE` misuse warning.
     pub fn uses_rng(&self) -> bool {
@@ -296,7 +322,8 @@ impl Expr {
             | Expr::Spin { .. }
             | Expr::Sleep { .. }
             | Expr::Work { .. }
-            | Expr::ChaosKill { .. } => {}
+            | Expr::ChaosKill { .. }
+            | Expr::ChaosHang { .. } => {}
             Expr::Let { value, body, .. } => {
                 value.walk(f);
                 body.walk(f);

@@ -88,6 +88,14 @@ pub struct FutureOpts {
     /// ([`crate::api::plan::plan_with_retry`]); both absent keeps the
     /// paper's at-most-once submission.
     pub retry: Option<RetryPolicy>,
+    /// Per-future deadline, measured from creation: once it expires, the
+    /// future latches [`FutureError::TimedOut`] terminally and the
+    /// in-flight attempt is *cancelled* (seat freed), not abandoned.  The
+    /// clock includes queue wait and retry backoff — it bounds the
+    /// caller's wait, not the worker's compute.  `None` falls back to the
+    /// session default ([`Session::set_default_deadline`]); both absent
+    /// means no deadline (the paper's semantics).
+    pub deadline: Option<Duration>,
     /// Human-readable label.
     pub label: Option<String>,
 }
@@ -124,6 +132,11 @@ impl FutureOpts {
 
     pub fn retry(mut self, policy: RetryPolicy) -> Self {
         self.retry = Some(policy);
+        self
+    }
+
+    pub fn deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
         self
     }
 
@@ -169,6 +182,11 @@ pub struct Future {
     /// creation) — applied on every launch path, including lazy launch
     /// and [`Future::restart`].
     retry: Option<RetryPolicy>,
+    /// Effective deadline (opts override, else the session default at
+    /// creation), measured from `created_at`.  `None` = never expires.
+    deadline: Option<Duration>,
+    /// Creation instant — the deadline clock's zero.
+    created_at: std::time::Instant,
     /// The owning session: lazy launches and restarts go back to it, and a
     /// closed session latches unresolved futures into `SessionClosed`.
     session: Session,
@@ -233,6 +251,8 @@ pub fn future_with(expr: Expr, env: &Env, opts: FutureOpts) -> Result<Future, Fu
     // Per-future retry wins; otherwise inherit the session's plan-wide
     // default (the same default the context ships to nested workers).
     let retry = opts.retry.clone().or_else(|| context.retry.clone());
+    // Same precedence for the deadline: per-future, else session default.
+    let deadline = opts.deadline.or_else(|| session.default_deadline());
 
     let task = TaskSpec {
         id: id.clone(),
@@ -246,6 +266,8 @@ pub fn future_with(expr: Expr, env: &Env, opts: FutureOpts) -> Result<Future, Fu
             label: opts.label.clone(),
             depth,
             context,
+            // First launch; the supervisor restamps this on every retry.
+            attempt: 0,
         },
     };
 
@@ -278,6 +300,8 @@ pub fn future_with(expr: Expr, env: &Env, opts: FutureOpts) -> Result<Future, Fu
         relayed: Mutex::new(false),
         restart_spec: Mutex::new(restart_spec),
         retry,
+        deadline,
+        created_at: std::time::Instant::now(),
         session,
         permit: Mutex::new(Some(permit)),
         trace,
@@ -458,6 +482,19 @@ impl Future {
                         Err(e) => *state = State::Failed(e),
                     }
                     true
+                } else if self.deadline.is_some_and(|d| self.created_at.elapsed() >= d) {
+                    // Deadline expired with the attempt still in flight:
+                    // cancel it (frees the seat) and latch TimedOut — the
+                    // non-blocking probe reaches the same terminal state a
+                    // blocking result() would.
+                    handle.cancel();
+                    let e = FutureError::TimedOut {
+                        elapsed: self.created_at.elapsed(),
+                        attempts: handle.attempts(),
+                    };
+                    self.session.metrics_scope().timeout();
+                    *state = State::Failed(e);
+                    true
                 } else {
                     false
                 }
@@ -501,7 +538,47 @@ impl Future {
             State::Failed(e) => Err(e.clone()),
             State::Running { handle, .. } => {
                 record_event(&self.trace, "collect-wait");
-                match handle.wait() {
+                let outcome = if let Some(d) = self.deadline {
+                    // Deadline-aware collection: subscribe to the handle's
+                    // completion push and sleep at most until the deadline,
+                    // so expiry interrupts the wait.  The clock runs from
+                    // creation — queue wait and retry backoff count.
+                    let waker = CompletionWaker::new();
+                    let push = handle.subscribe(&waker, 0);
+                    loop {
+                        if handle.is_resolved() {
+                            // A result at the boundary beats the deadline:
+                            // never discard a value that already arrived.
+                            break handle.wait();
+                        }
+                        let elapsed = self.created_at.elapsed();
+                        if elapsed >= d {
+                            // Expired: cancel the in-flight attempt (seat
+                            // freed — cancelled, not abandoned) and latch.
+                            handle.cancel();
+                            self.session.metrics_scope().timeout();
+                            break Err(FutureError::TimedOut {
+                                elapsed,
+                                attempts: handle.attempts(),
+                            });
+                        }
+                        let remaining = d - elapsed;
+                        // Bounded slices even with push support: a
+                        // supervised handle in its retry-backoff window is
+                        // only driven forward by is_resolved() probes, so
+                        // sleeping clear to the deadline would starve the
+                        // relaunch the deadline still has budget for.
+                        let cap = if push {
+                            remaining.min(Duration::from_millis(20))
+                        } else {
+                            remaining.min(Duration::from_millis(5))
+                        };
+                        let _ = waker.wait_next(Some(cap));
+                    }
+                } else {
+                    handle.wait()
+                };
+                match outcome {
                     Ok(result) => {
                         record_event(&self.trace, "resolved");
                         *state = State::Done(Box::new(result.clone()));
@@ -1051,6 +1128,91 @@ mod tests {
             assert_eq!(f.value().unwrap(), Value::I64(42));
             slow.value().unwrap();
         });
+    }
+
+    #[test]
+    fn deadline_expiry_latches_timed_out_terminally() {
+        with_plan(PlanSpec::multicore(1), || {
+            let env = Env::new();
+            // Many small elements so the post-expiry cancel interrupts the
+            // chunk at the next yield point (the pool tears down fast).
+            let body = Arc::new(Expr::Spin { millis: 10 });
+            let elements: Vec<Value> = (0..500).map(Value::I64).collect();
+            let f = future_with(
+                Expr::map_chunk("x", body, elements, 0),
+                &env,
+                FutureOpts::new().deadline(Duration::from_millis(60)),
+            )
+            .unwrap();
+            match f.value() {
+                Err(FutureError::TimedOut { elapsed, attempts }) => {
+                    assert_eq!(attempts, 1);
+                    assert!(elapsed >= Duration::from_millis(60));
+                }
+                other => panic!("expected TimedOut, got {other:?}"),
+            }
+            // Latched terminally: later probes and collections replay it.
+            assert!(f.resolved());
+            assert!(matches!(f.value(), Err(FutureError::TimedOut { .. })));
+        });
+    }
+
+    #[test]
+    fn resolved_probe_latches_deadline_expiry() {
+        with_plan(PlanSpec::multicore(1), || {
+            let env = Env::new();
+            let body = Arc::new(Expr::Spin { millis: 10 });
+            let elements: Vec<Value> = (0..500).map(Value::I64).collect();
+            let f = future_with(
+                Expr::map_chunk("x", body, elements, 0),
+                &env,
+                FutureOpts::new().deadline(Duration::from_millis(40)),
+            )
+            .unwrap();
+            assert!(!f.resolved(), "deadline not expired yet");
+            std::thread::sleep(Duration::from_millis(60));
+            assert!(f.resolved(), "expired future must probe as resolved");
+            assert!(matches!(f.value(), Err(FutureError::TimedOut { .. })));
+        });
+    }
+
+    #[test]
+    fn deadline_does_not_fire_on_a_fast_future() {
+        with_plan(PlanSpec::multicore(1), || {
+            let env = Env::new();
+            let f = future_with(
+                Expr::lit(5i64),
+                &env,
+                FutureOpts::new().deadline(Duration::from_secs(30)),
+            )
+            .unwrap();
+            assert_eq!(f.value().unwrap(), Value::I64(5));
+        });
+    }
+
+    #[test]
+    fn session_default_deadline_applies_with_opts_override() {
+        use crate::api::session::Session;
+        let s = Session::new();
+        s.plan(PlanSpec::multicore(1));
+        s.set_default_deadline(Some(Duration::from_millis(50)));
+        s.scope(|_| {
+            let env = Env::new();
+            let body = Arc::new(Expr::Spin { millis: 10 });
+            let elements: Vec<Value> = (0..500).map(Value::I64).collect();
+            // Inherits the session default: times out.
+            let f = future(Expr::map_chunk("x", body, elements, 0), &env).unwrap();
+            assert!(matches!(f.value(), Err(FutureError::TimedOut { .. })));
+            // Per-future override wins over the (tiny) session default.
+            let g = future_with(
+                Expr::Sleep { millis: 80 },
+                &env,
+                FutureOpts::new().deadline(Duration::from_secs(30)),
+            )
+            .unwrap();
+            assert!(g.value().is_ok(), "explicit deadline must override the default");
+        });
+        s.close();
     }
 
     #[test]

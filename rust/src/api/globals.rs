@@ -96,7 +96,8 @@ fn collect(
         | Expr::Spin { .. }
         | Expr::Sleep { .. }
         | Expr::Work { .. }
-        | Expr::ChaosKill { .. } => {}
+        | Expr::ChaosKill { .. }
+        | Expr::ChaosHang { .. } => {}
     }
 }
 

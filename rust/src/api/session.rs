@@ -78,6 +78,12 @@ struct Core {
     /// [`crate::api::future::FutureOpts::retry`] overrides it.  Shipped to
     /// nested workers inside the [`SessionContext`].
     retry: Option<RetryPolicy>,
+    /// Session-wide deadline default: every future created under this
+    /// session gets this deadline unless its own
+    /// [`crate::api::future::FutureOpts::deadline`] overrides it.  A
+    /// collection-side concern (the deadline clock runs on the caller), so
+    /// it is NOT shipped inside the [`SessionContext`].
+    default_deadline: Option<std::time::Duration>,
 }
 
 struct Inner {
@@ -199,7 +205,7 @@ impl Session {
             inner: Arc::new(Inner {
                 id,
                 origin: id,
-                core: RwLock::new(Core { topology, retry }),
+                core: RwLock::new(Core { topology, retry, default_deadline: None }),
                 backends: Mutex::new(HashMap::new()),
                 counter: AtomicU64::new(counter_base),
                 closed: AtomicBool::new(false),
@@ -258,6 +264,7 @@ impl Session {
                 core: RwLock::new(Core {
                     topology: ctx.nested_plan.clone(),
                     retry: ctx.retry.clone(),
+                    default_deadline: None,
                 }),
                 backends: Mutex::new(HashMap::new()),
                 counter: AtomicU64::new(ctx.counter_base),
@@ -384,6 +391,20 @@ impl Session {
     /// The plan-wide retry default, if any.
     pub fn retry(&self) -> Option<RetryPolicy> {
         self.inner.core.read().unwrap().retry.clone()
+    }
+
+    /// Set (or clear) the session-wide deadline default: every future
+    /// created under this session afterwards times out — latching
+    /// [`crate::api::error::FutureError::TimedOut`] and cancelling the
+    /// in-flight attempt — after this long, unless its own
+    /// [`crate::api::future::FutureOpts::deadline`] overrides it.
+    pub fn set_default_deadline(&self, deadline: Option<std::time::Duration>) {
+        self.inner.core.write().unwrap().default_deadline = deadline;
+    }
+
+    /// The session-wide deadline default, if any.
+    pub fn default_deadline(&self) -> Option<std::time::Duration> {
+        self.inner.core.read().unwrap().default_deadline
     }
 
     // --------------------------------------------------------- counters ----

@@ -42,16 +42,26 @@ impl BatchBackend {
         // ledger admission charges the job's node-slot lease to it, so
         // per-session quotas hold on the batch backend too.
         let session = task.opts.context.session;
-        let task_file = self.scheduler.spool().join(format!("task-{}.task", task.id));
+        // The attempt epoch names the spool file: a resubmitted task never
+        // overwrites the file a still-running previous attempt may be
+        // reading, and the handle can fence a result frame whose echoed
+        // epoch is not its own.
+        let expected_attempt = task.opts.attempt;
+        let task_file = self
+            .scheduler
+            .spool()
+            .join(format!("task-{}-a{}.task", task.id, expected_attempt));
         let bytes = encode_message(&Message::Task(task));
         std::fs::write(&task_file, &bytes)
             .map_err(|e| FutureError::Launch(format!("spool task: {e}")))?;
-        let job = self.scheduler.submit_for_session(task_file, session);
+        let job = self.scheduler.submit_attempt(task_file, session, expected_attempt);
         Ok(Box::new(BatchHandle {
             scheduler: Arc::clone(&self.scheduler),
             job,
             poll_interval: self.poll_interval,
             done: None,
+            expected_attempt,
+            scope: crate::metrics::scope_for_session(session),
         }))
     }
 
@@ -128,6 +138,10 @@ pub struct BatchHandle {
     job: JobId,
     poll_interval: Duration,
     done: Option<TaskResult>,
+    /// Attempt epoch this handle launched; result frames echoing any other
+    /// epoch are stale writes and get fenced, never surfaced.
+    expected_attempt: u32,
+    scope: crate::metrics::CounterScope,
 }
 
 impl BatchHandle {
@@ -147,6 +161,23 @@ impl BatchHandle {
                     .map_err(|e| FutureError::Channel(format!("bad result file: {e}")))?
                 {
                     Message::Result(r) => {
+                        if r.attempt != self.expected_attempt {
+                            // A write from a different attempt epoch landed in
+                            // this job's result slot (e.g. a revived worker from
+                            // a previous attempt flushing late).  Fence it:
+                            // discard the frame and fail this attempt as a
+                            // worker death so the supervisor relaunches —
+                            // surfacing the stale payload could hand the caller
+                            // a value computed from superseded inputs.
+                            self.scope.fenced();
+                            let _ = std::fs::remove_file(&path);
+                            return Err(FutureError::WorkerDied {
+                                detail: format!(
+                                    "fenced stale batch result (attempt {}, expected {})",
+                                    r.attempt, self.expected_attempt
+                                ),
+                            });
+                        }
                         self.done = Some(r.clone());
                         Ok(Some(r))
                     }
@@ -201,7 +232,11 @@ impl TaskHandle for BatchHandle {
     }
 
     fn cancel(&mut self) -> bool {
-        self.scheduler.cancel(self.job)
+        let cancelled = self.scheduler.cancel(self.job);
+        if cancelled {
+            self.scope.cancel();
+        }
+        cancelled
     }
 
     fn subscribe(&mut self, waker: &Arc<CompletionWaker>, token: u64) -> bool {

@@ -49,6 +49,14 @@ pub trait TaskHandle: Send {
         false
     }
 
+    /// How many launches this handle has made (1 = the original submission;
+    /// >1 means the supervisor resubmitted after infrastructure loss).
+    /// Feeds [`FutureError::TimedOut::attempts`] so a deadline expiry
+    /// reports how much work was actually tried.
+    fn attempts(&self) -> u32 {
+        1
+    }
+
     /// Register a completion subscription: when this task resolves, the
     /// backend calls `waker.notify(token)` exactly once.  Returns `true`
     /// when the backend delivers push notifications (every built-in does);

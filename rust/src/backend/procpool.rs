@@ -112,6 +112,17 @@ struct Inner {
     waiters: HashMap<String, (Arc<CompletionWaker>, u64)>,
     /// Task ids whose handles were dropped: discard their results.
     abandoned: HashSet<String>,
+    /// worker id → when a frame (result, immediate, heartbeat, ...) last
+    /// arrived from it.  Set when a task goes in flight, refreshed by the
+    /// reader on every frame; the stall detector reads it.
+    activity: HashMap<u64, std::time::Instant>,
+    /// Workers killed by the stall detector: their reader's imminent
+    /// EOF/error must not double-count the death ([`close_worker`] guard).
+    stalled: HashSet<u64>,
+    /// task id → the attempt epoch of its *current* launch.  A result
+    /// frame carrying any other epoch is stale (a presumed-dead attempt
+    /// spoke up late) and is dropped — the stale-result fence.
+    expected_attempt: HashMap<String, u32>,
     shutting_down: bool,
     next_worker_id: u64,
 }
@@ -206,6 +217,9 @@ impl ProcPool {
                 results: HashMap::new(),
                 waiters: HashMap::new(),
                 abandoned: HashSet::new(),
+                activity: HashMap::new(),
+                stalled: HashSet::new(),
+                expected_attempt: HashMap::new(),
                 shutting_down: false,
                 next_worker_id: 0,
             }),
@@ -241,6 +255,18 @@ impl ProcPool {
             let _ = std::thread::Builder::new()
                 .name("rustures-procpool-monitor".into())
                 .spawn(move || monitor_loop(weak, poll));
+        }
+        {
+            // The stall detector is its own (cheap, mostly-sleeping) thread
+            // so hang detection works even with respawn supervision off; it
+            // re-reads the process-wide liveness config every pass, so
+            // arming `stall_after` after pool construction still takes
+            // effect.  With `stall_after: None` (the default) the loop only
+            // wakes to check for shutdown.
+            let weak = Arc::downgrade(&pool);
+            let _ = std::thread::Builder::new()
+                .name("rustures-procpool-stall".into())
+                .spawn(move || stall_loop(weak));
         }
         Ok(pool)
     }
@@ -289,6 +315,9 @@ impl ProcPool {
                         Some(pos) => {
                             let seat = inner.idle.remove(pos);
                             inner.pending.insert(seat.id, task.id.clone());
+                            // Register the launch's attempt epoch: frames
+                            // from any OTHER epoch of this task are stale.
+                            inner.expected_attempt.insert(task.id.clone(), task.opts.attempt);
                             return Ok((seat, lease));
                         }
                         None => {
@@ -317,6 +346,7 @@ impl ProcPool {
                                 ));
                             }
                             inner.pending.insert(seat.id, task.id.clone());
+                            inner.expected_attempt.insert(task.id.clone(), task.opts.attempt);
                             return Ok((seat, lease));
                         }
                         // Dropping the ticket aborts the revive (the seat
@@ -397,6 +427,9 @@ impl ProcPool {
                     lease.forfeit();
                 }
                 None => {
+                    // The liveness clock starts now: the send completed, so
+                    // silence from here on is the worker's own.
+                    inner.activity.insert(seat.id, std::time::Instant::now());
                     inner.busy.insert(seat.id, (seat, task_id.clone(), lease));
                 }
             }
@@ -465,8 +498,17 @@ impl ProcPool {
 fn reader_loop(worker_id: u64, mut reader: Box<dyn Read + Send>, shared: Arc<Shared>) {
     loop {
         let msg = read_message(&mut reader);
+        if let Ok(Some(_)) = &msg {
+            // ANY frame is proof of life — heartbeats exist for the silent
+            // stretches, but immediates and results reset the clock too.
+            let mut inner = shared.inner.lock().unwrap();
+            if inner.activity.contains_key(&worker_id) {
+                inner.activity.insert(worker_id, std::time::Instant::now());
+            }
+        }
         match msg {
             Ok(Some(Message::Hello { .. })) | Ok(Some(Message::Pong)) => continue,
+            Ok(Some(Message::Heartbeat { .. })) => continue,
             Ok(Some(Message::Immediate { condition, .. })) => {
                 relay_immediate(&condition);
             }
@@ -476,6 +518,7 @@ fn reader_loop(worker_id: u64, mut reader: Box<dyn Read + Send>, shared: Arc<Sha
                 // The worker is free *now* — before anyone collects.
                 if let Some((seat, task_id, lease)) = inner.busy.remove(&worker_id) {
                     debug_assert_eq!(task_id, result_id);
+                    inner.activity.remove(&worker_id);
                     if inner.abandoned.remove(&result_id) {
                         // Nobody wants this result.
                     } else {
@@ -504,7 +547,19 @@ fn reader_loop(worker_id: u64, mut reader: Box<dyn Read + Send>, shared: Arc<Sha
                     drop(inner);
                     shared.result_cv.notify_all();
                 } else {
-                    // cancel() raced us; drop the result.
+                    // This worker no longer owns the task: either cancel()
+                    // raced us, or this is a late frame from a presumed-dead
+                    // attempt (the worker was declared hung, its task
+                    // relaunched under a bumped epoch).  Either way the
+                    // frame is dropped; when the attempt epoch proves it
+                    // stale, count it through the fence.
+                    let stale = inner
+                        .expected_attempt
+                        .get(&result_id)
+                        .is_some_and(|want| *want != result.attempt);
+                    if stale {
+                        shared.scope.fenced();
+                    }
                 }
             }
             Ok(Some(other)) => {
@@ -592,14 +647,116 @@ fn monitor_loop(pool: Weak<ProcPool>, poll: std::time::Duration) {
     }
 }
 
+/// The stall detector: declare busy workers *hung* after
+/// `LivenessConfig::stall_after` of frame silence, kill them, and hand
+/// their tasks to the retry path.  Separate from [`monitor_loop`] so hang
+/// detection works with respawn supervision off; re-reads the process-wide
+/// config every pass (arming `stall_after` after pool construction works).
+fn stall_loop(pool: Weak<ProcPool>) {
+    loop {
+        let Some(pool) = pool.upgrade() else { return };
+        let stall_after = crate::liveness::liveness_config().stall_after;
+        // Scan often enough that detection lands well inside one
+        // `stall_after` of slack; idle otherwise.
+        let poll = match stall_after {
+            Some(s) => (s / 4).max(std::time::Duration::from_millis(5)),
+            None => std::time::Duration::from_millis(50),
+        };
+        if let Some(stall_after) = stall_after {
+            let now = std::time::Instant::now();
+            let hung: Vec<u64> = {
+                let inner = pool.shared.inner.lock().unwrap();
+                if inner.shutting_down {
+                    return;
+                }
+                inner
+                    .busy
+                    .keys()
+                    .filter(|w| {
+                        inner
+                            .activity
+                            .get(w)
+                            .is_some_and(|t| now.duration_since(*t) > stall_after)
+                    })
+                    .copied()
+                    .collect()
+            };
+            for w in hung {
+                kill_stalled(&pool.shared, w, stall_after);
+            }
+        }
+        let shared = Arc::clone(&pool.shared);
+        drop(pool);
+        let guard = shared.inner.lock().unwrap();
+        if guard.shutting_down {
+            return;
+        }
+        let _ = shared.death_cv.wait_timeout(guard, poll);
+    }
+}
+
+/// Kill one hung worker: breaker-counted death, lease forfeited (the seat
+/// returns to the ledger through the revive machinery), and a retryable
+/// `WorkerDied` parked for the handle — the supervised-retry path takes it
+/// from there, exactly as for a crash.
+fn kill_stalled(shared: &Shared, worker_id: u64, stall_after: std::time::Duration) {
+    let mut inner = shared.inner.lock().unwrap();
+    if inner.shutting_down {
+        return;
+    }
+    let Some((mut seat, task_id, lease)) = inner.busy.remove(&worker_id) else {
+        return; // resolved (or died) while we were deciding
+    };
+    // Re-check under the lock: a frame may have landed since the scan.
+    if inner
+        .activity
+        .get(&worker_id)
+        .is_some_and(|t| t.elapsed() <= stall_after)
+    {
+        inner.busy.insert(worker_id, (seat, task_id, lease));
+        return;
+    }
+    inner.activity.remove(&worker_id);
+    // The reader's imminent EOF must not count this death again.
+    inner.stalled.insert(worker_id);
+    shared.scope.stall();
+    shared.scope.worker_death();
+    seat.kill();
+    shared.reg.record_death(&seat.host);
+    lease.forfeit();
+    if !inner.abandoned.remove(&task_id) {
+        inner.results.insert(
+            task_id.clone(),
+            Err(FutureError::WorkerDied {
+                detail: format!(
+                    "worker hung (no liveness signal for {}ms)",
+                    stall_after.as_millis()
+                ),
+            }),
+        );
+    }
+    notify_task_waiter(&mut inner, &task_id);
+    drop(inner);
+    shared.result_cv.notify_all();
+    // Capacity just dropped: wake the health monitor to revive the seat.
+    shared.death_cv.notify_all();
+}
+
 fn close_worker(worker_id: u64, shared: &Shared, err: FutureError) {
     let mut inner = shared.inner.lock().unwrap();
+    if inner.stalled.remove(&worker_id) {
+        // The stall detector already did everything (kill, death count,
+        // breaker, lease forfeit, parked error); this is just its reader
+        // observing the EOF.
+        return;
+    }
     let during_shutdown = inner.shutting_down;
     if !during_shutdown {
         // An orderly shutdown EOF is not a death worth counting.
         shared.scope.worker_death();
     }
     if let Some((mut seat, task_id, lease)) = inner.busy.remove(&worker_id) {
+        inner.activity.remove(&worker_id);
         seat.kill();
         // Ledger first (breaker fed, seat forfeited), THEN park the error:
         // a collector woken by the parked failure must find the breaker
@@ -671,10 +828,12 @@ impl TaskHandle for ProcHandle {
         loop {
             if let Some(parked) = inner.results.remove(&self.task_id) {
                 self.collected = true;
+                inner.expected_attempt.remove(&self.task_id);
                 return parked;
             }
             if !Self::in_flight(&inner, &self.task_id) {
                 self.collected = true;
+                inner.expected_attempt.remove(&self.task_id);
                 return Err(FutureError::WorkerDied {
                     detail: format!("task {} lost (worker gone)", self.task_id),
                 });
@@ -691,6 +850,7 @@ impl TaskHandle for ProcHandle {
         if inner.results.remove(&self.task_id).is_some() {
             // Already resolved: nothing to cancel, result discarded.
             self.collected = true;
+            inner.expected_attempt.remove(&self.task_id);
             return false;
         }
         let worker_id = inner
@@ -701,12 +861,22 @@ impl TaskHandle for ProcHandle {
         match worker_id {
             Some(w) => {
                 let (mut seat, _, lease) = inner.busy.remove(&w).unwrap();
+                inner.activity.remove(&w);
+                inner.expected_attempt.remove(&self.task_id);
+                // Best-effort courtesy frame: a worker that happens to be
+                // between tasks drops the id cleanly; one mid-evaluation
+                // never reads it — the kill below is the enforcement.
+                let _ = write_message(
+                    &mut seat.writer,
+                    &Message::Cancel { task_id: self.task_id.clone() },
+                );
                 seat.kill();
                 // User intent, not a host failure: the seat is forfeited
                 // (revive restores it, charged to the host budget) but the
                 // breaker window is NOT fed.
                 lease.forfeit();
                 self.collected = true;
+                self.pool.shared.scope.cancel();
                 // Cancellation resolves the future (to an error): wake any
                 // resolve()-subscriber.
                 notify_task_waiter(&mut inner, &self.task_id);
@@ -937,6 +1107,7 @@ impl Drop for ProcHandle {
         // A dropped handle's subscription is dead weight: remove it so the
         // reader never notifies a token nobody is waiting on.
         inner.waiters.remove(&self.task_id);
+        inner.expected_attempt.remove(&self.task_id);
         if inner.results.remove(&self.task_id).is_none() && Self::in_flight(&inner, &self.task_id)
         {
             // Still running: mark abandoned so the reader discards the

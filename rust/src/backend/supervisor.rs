@@ -326,6 +326,10 @@ impl SupervisedHandle {
         };
         self.attempts += 1;
         self.scope.retry();
+        // Bump the attempt epoch (0-based: first launch = 0) BEFORE the
+        // clone so the resubmission's frames carry it — readers fence any
+        // late result from the presumed-dead previous attempt.
+        self.spec.opts.attempt = self.attempts - 1;
         // Resubmissions always go through queued dispatch: the backlog
         // hands back a handle immediately, so a retry fired from the
         // non-blocking `is_resolved()` probe never parks on seat
@@ -411,6 +415,10 @@ impl TaskHandle for SupervisedHandle {
         // resulting worker loss is not "recovered" behind the user's back.
         self.cancelled = true;
         self.inner.cancel()
+    }
+
+    fn attempts(&self) -> u32 {
+        self.attempts
     }
 
     fn subscribe(&mut self, waker: &Arc<CompletionWaker>, token: u64) -> bool {

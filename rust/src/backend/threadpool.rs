@@ -53,6 +53,10 @@ struct Job {
     /// The seat this job occupies; released (worker finished) or forfeited
     /// (worker died) by the worker thread.
     lease: SlotLease,
+    /// Per-task progress cell: the evaluator ticks it between `MapChunk`
+    /// elements and honors its cancel flag (a thread cannot be killed, so
+    /// in-process cancellation is strictly cooperative).
+    liveness: Arc<crate::liveness::TaskLiveness>,
 }
 
 struct Shared {
@@ -216,17 +220,35 @@ fn blocking_launch(
     let lease = shared.reg.acquire_for(&task)?;
 
     let label = task.id.clone();
+    // Registry entry so the task is cancellable by id; the handle keeps
+    // its own Arc, so a cancel-before-start still lands on the cell the
+    // worker will read (register() returns the same cell on re-register).
+    let liveness = crate::liveness::register(&task.id);
     let (tx, rx) = mpsc::channel();
     let signal = CompletionSignal::new();
     let mut q = shared.queue.lock().unwrap();
     if shared.shutting_down.load(Ordering::SeqCst) {
         return Err(FutureError::Launch("pool is shutting down".into()));
     }
-    q.push_back(Job { task, reply: tx, signal: Arc::clone(&signal), lease });
+    q.push_back(Job {
+        task,
+        reply: tx,
+        signal: Arc::clone(&signal),
+        lease,
+        liveness: Arc::clone(&liveness),
+    });
     drop(q);
     shared.job_cv.notify_one();
 
-    Ok(Box::new(PoolHandle { rx, done: None, died: false, label, signal }))
+    Ok(Box::new(PoolHandle {
+        rx,
+        done: None,
+        died: false,
+        label,
+        signal,
+        liveness,
+        scope: shared.scope.clone(),
+    }))
 }
 
 fn worker_loop(shared: Arc<Shared>) {
@@ -246,24 +268,45 @@ fn worker_loop(shared: Arc<Shared>) {
 
         // Kernel runtime resolves lazily inside the evaluator on first Call.
         let kernels = None;
-        let Job { task, reply, signal, lease } = job;
+        let Job { task, reply, signal, lease, liveness } = job;
         // Panic isolation: a panicking task must not take the worker down.
         // Evaluation runs under the task's shipped session context, so
         // nested futures created on this worker thread inherit the
         // originating session's topology tail and retry default (depth
         // restarts at 0 against the tail — see api::session).
-        let result = catch_unwind(AssertUnwindSafe(|| {
-            crate::api::session::scope_task_context(&task.opts.context, || {
-                let mut hook = |c: &crate::api::conditions::Condition| relay_immediate(c);
-                crate::worker::execute_task(&task, kernels, Some(&mut hook))
+        //
+        // Cancelled while still queued: skip evaluation entirely — the
+        // sentinel result frees the seat and the handle reports Cancelled.
+        let result = if liveness.is_cancelled() {
+            TaskResult {
+                id: task.id.clone(),
+                outcome: TaskOutcome::Err(EvalError::new(crate::liveness::WORKER_CANCEL_ERROR)),
+                captured: Default::default(),
+                metrics: Default::default(),
+                attempt: task.opts.attempt,
+            }
+        } else {
+            catch_unwind(AssertUnwindSafe(|| {
+                crate::api::session::scope_task_context(&task.opts.context, || {
+                    let mut hook = |c: &crate::api::conditions::Condition| relay_immediate(c);
+                    crate::worker::execute_task_live(
+                        &task,
+                        kernels,
+                        Some(&mut hook),
+                        Some(Arc::clone(&liveness)),
+                        None,
+                    )
+                })
+            }))
+            .unwrap_or_else(|_| TaskResult {
+                id: task.id.clone(),
+                outcome: TaskOutcome::Err(EvalError::new("worker thread panicked")),
+                captured: Default::default(),
+                metrics: Default::default(),
+                attempt: task.opts.attempt,
             })
-        }))
-        .unwrap_or_else(|_| TaskResult {
-            id: task.id.clone(),
-            outcome: TaskOutcome::Err(EvalError::new("worker thread panicked")),
-            captured: Default::default(),
-            metrics: Default::default(),
-        });
+        };
+        crate::liveness::deregister(&task.id);
 
         // Chaos kill: die like a crashed worker thread — no reply (the
         // handle sees a disconnected channel → WorkerDied), the seat goes
@@ -304,12 +347,28 @@ pub struct PoolHandle {
     died: bool,
     label: String,
     signal: Arc<CompletionSignal>,
+    /// The task's progress/cancel cell (shared with the queued job).
+    liveness: Arc<crate::liveness::TaskLiveness>,
+    /// Metrics sink for cancel events, captured from the pool.
+    scope: crate::metrics::CounterScope,
 }
 
 impl PoolHandle {
     fn died_err(&self) -> FutureError {
         FutureError::WorkerDied {
             detail: format!("pool worker dropped reply for {}", self.label),
+        }
+    }
+
+    /// Map the cooperative-cancel sentinel to the structured error: a
+    /// cancelled task did not *fail evaluation*, it was stopped — callers
+    /// must see [`FutureError::Cancelled`], never a fake eval error.
+    fn screen(r: TaskResult) -> Result<TaskResult, FutureError> {
+        match &r.outcome {
+            TaskOutcome::Err(e) if e.message == crate::liveness::WORKER_CANCEL_ERROR => {
+                Err(FutureError::Cancelled)
+            }
+            _ => Ok(r),
         }
     }
 }
@@ -335,18 +394,33 @@ impl TaskHandle for PoolHandle {
 
     fn wait(&mut self) -> Result<TaskResult, FutureError> {
         if let Some(r) = self.done.take() {
-            return Ok(r);
+            return Self::screen(r);
         }
         if self.died {
             return Err(self.died_err());
         }
         match self.rx.recv() {
-            Ok(r) => Ok(r),
+            Ok(r) => Self::screen(r),
             Err(_) => {
                 self.died = true;
                 Err(self.died_err())
             }
         }
+    }
+
+    fn cancel(&mut self) -> bool {
+        // Already resolved (result buffered, or worker dead): nothing left
+        // to prevent — a cancel-after-resolve is a strict no-op.
+        if self.is_resolved() {
+            return false;
+        }
+        // Cooperative: the evaluator sees the flag at its next yield point
+        // (between MapChunk elements / inside ChaosHang slices).  The seat
+        // is freed by the worker's normal reply path — a cancel is NOT a
+        // death and must not feed the breaker.
+        self.liveness.cancel();
+        self.scope.cancel();
+        true
     }
 
     fn subscribe(&mut self, waker: &Arc<CompletionWaker>, token: u64) -> bool {
@@ -510,6 +584,8 @@ mod tests {
             died: false,
             label: "t-dead".into(),
             signal: CompletionSignal::new(),
+            liveness: crate::liveness::TaskLiveness::new(),
+            scope: crate::metrics::default_scope(),
         };
         assert!(h.is_resolved(), "disconnected handle must report resolved");
         for _ in 0..2 {
@@ -698,6 +774,66 @@ mod tests {
             pool.shared.reg.breaker_state(HOST),
             crate::capacity::BreakerState::Closed,
             "a clean completion on the probed host must close the breaker"
+        );
+        pool.shutdown();
+    }
+
+    #[test]
+    fn cooperative_cancel_interrupts_map_chunk_and_frees_seat() {
+        let pool = ThreadPoolBackend::new(1);
+        // 100 × 20 ms elements: without cancellation this runs ~2 s.
+        let body = Arc::new(Expr::Spin { millis: 20 });
+        let elements: Vec<Value> = (0..100).map(Value::I64).collect();
+        let mut h = pool
+            .launch(task(Expr::map_chunk("x", body, elements, 0)))
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        let t0 = Instant::now();
+        assert!(h.cancel(), "unresolved task must report cancellable");
+        match h.wait() {
+            Err(FutureError::Cancelled) => {}
+            other => panic!("expected Cancelled, got {other:?}"),
+        }
+        assert!(
+            t0.elapsed() < Duration::from_millis(500),
+            "cancel must interrupt the chunk, waited {:?}",
+            t0.elapsed()
+        );
+        // The seat came back clean (no death, no respawn needed): the next
+        // launch runs on the same worker.
+        let mut h2 = pool.launch(task(Expr::lit(11i64))).unwrap();
+        assert_eq!(h2.wait().unwrap().outcome, TaskOutcome::Ok(Value::I64(11)));
+        pool.shutdown();
+    }
+
+    #[test]
+    fn cancel_after_resolve_is_noop() {
+        let pool = ThreadPoolBackend::new(1);
+        let mut h = pool.launch(task(Expr::lit(3i64))).unwrap();
+        while !h.is_resolved() {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(!h.cancel(), "cancel after resolution must be a no-op");
+        assert_eq!(h.wait().unwrap().outcome, TaskOutcome::Ok(Value::I64(3)));
+        pool.shutdown();
+    }
+
+    #[test]
+    fn cancel_while_queued_skips_evaluation() {
+        let pool = ThreadPoolBackend::new(1);
+        let _busy = pool.launch(task(Expr::Spin { millis: 120 })).unwrap();
+        // Queued behind the busy worker: never starts evaluating.
+        let mut h = pool.launch_queued(task(Expr::Spin { millis: 5000 })).unwrap();
+        assert!(h.cancel());
+        let t0 = Instant::now();
+        match h.wait() {
+            Err(FutureError::Cancelled) => {}
+            other => panic!("expected Cancelled, got {other:?}"),
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "queued cancel must not evaluate the 5 s body ({:?})",
+            t0.elapsed()
         );
         pool.shutdown();
     }

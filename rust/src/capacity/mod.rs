@@ -811,16 +811,35 @@ fn charge_session(st: &mut LedgerState, session: Option<u64>) {
     }
 }
 
-/// The host to lease from: most free seats wins (spreads load), ties go to
-/// registration order (deterministic).
+/// The host to lease from.  Breaker health ranks first — a `Closed`
+/// breaker beats `HalfOpen` (still probing after deaths) beats `Open`
+/// (cooling down): placing new work on a host that just burned through its
+/// death threshold risks losing that work too, so healthy hosts absorb
+/// load while a shaky one proves itself.  Within a health tier, most free
+/// seats wins (spreads load); ties go to registration order
+/// (deterministic).
 fn best_free_host(pool: &PoolState) -> Option<usize> {
-    let mut best: Option<(usize, usize)> = None;
+    let now = Instant::now();
+    // Lower is healthier; becomes the major sort key.
+    let rank = |h: &HostState| match h.breaker_state(now) {
+        BreakerState::Closed => 0u8,
+        BreakerState::HalfOpen => 1,
+        BreakerState::Open => 2,
+    };
+    let mut best: Option<(usize, u8, usize)> = None;
     for (i, h) in pool.hosts.iter().enumerate() {
-        if h.free > 0 && best.map(|(_, f)| h.free > f).unwrap_or(true) {
-            best = Some((i, h.free));
+        if h.free == 0 {
+            continue;
+        }
+        let r = rank(h);
+        if best
+            .map(|(_, br, bf)| r < br || (r == br && h.free > bf))
+            .unwrap_or(true)
+        {
+            best = Some((i, r, h.free));
         }
     }
-    best.map(|(i, _)| i)
+    best.map(|(i, _, _)| i)
 }
 
 /// Claim a revive on the first host whose breaker and budget admit one.
@@ -1255,6 +1274,10 @@ mod tests {
         assert_eq!(probe.host(), "a");
         assert_eq!(reg.breaker_state("a"), BreakerState::HalfOpen);
         probe.commit_idle();
+        // Breaker-aware placement sends new work to the healthy host first;
+        // take b's seat so the next lease lands on the half-open probe host.
+        let lb = reg.acquire(0).unwrap();
+        assert_eq!(lb.host(), "b", "closed breaker outranks half-open");
         // A clean lease release on the probed host closes the breaker.
         let la = reg.acquire(0).unwrap();
         assert_eq!(la.host(), "a");
@@ -1360,6 +1383,44 @@ mod tests {
         assert_eq!(session_in_use(session), 1);
         drop(lease); // must not panic; session charge still returns
         assert_eq!(session_in_use(session), 0);
+    }
+
+    #[test]
+    fn placement_deprioritizes_open_adjacent_host() {
+        // Host a trips its breaker (Open), cools down into the observable
+        // HalfOpen state, and gets a seat back via the probe.  Even though
+        // it then has MORE free seats than the healthy host, new leases
+        // must prefer the Closed-breaker host until a's probe proves out.
+        let reg = PoolRegistration::register(
+            "test",
+            &[("a".to_string(), 2), ("b".to_string(), 1)],
+            RevivePolicy::Budgeted(16),
+            BreakerConfig {
+                threshold: 1,
+                window: Duration::from_secs(10),
+                cooldown: Duration::from_millis(20),
+            },
+        );
+        for h in ["a", "a", "b"] {
+            reg.activate(h);
+        }
+        // One death on a trips the threshold-1 breaker.
+        let l = reg.acquire(0).unwrap();
+        assert_eq!(l.host(), "a", "all-closed tie: most free seats wins");
+        l.forfeit();
+        reg.record_death("a");
+        assert_eq!(reg.breaker_state("a"), BreakerState::Open);
+        // Cooldown expires (reads as HalfOpen); the probe restores a's seat.
+        std::thread::sleep(Duration::from_millis(30));
+        let probe = reg.try_revive().expect("cooled-down breaker admits probe");
+        probe.commit_idle();
+        assert_eq!(reg.breaker_state("a"), BreakerState::HalfOpen);
+        // a: 2 free, HalfOpen.  b: 1 free, Closed.  Health outranks free.
+        let l1 = reg.acquire(0).unwrap();
+        assert_eq!(l1.host(), "b", "half-open host must be deprioritized");
+        // Only once the healthy host is saturated does a get new work.
+        let l2 = reg.acquire(0).unwrap();
+        assert_eq!(l2.host(), "a");
     }
 
     #[test]

@@ -742,6 +742,139 @@ fn check_nested_retry_context_propagates() -> Result<(), String> {
     expect_eq(out.1, vec![PlanSpec::multicore(2)], "worker-side topology")
 }
 
+// --------------------------------------------------- liveness checks ----
+
+/// Per-future deadlines surface the structured `TimedOut` error, latch
+/// terminally, and free the seat.  Sequential evaluates at creation, so a
+/// completed future must beat an already-expired deadline (resolution is
+/// checked before the clock).
+fn check_deadline_timeout_structured() -> Result<(), String> {
+    let spec = ambient_plan();
+    let env = Env::new();
+    if !disposable_workers(&spec) {
+        let f = future_with(
+            Expr::Spin { millis: 30 },
+            &env,
+            FutureOpts::new().deadline(Duration::from_millis(1)),
+        )
+        .map_err(|e| e.to_string())?;
+        return match f.value() {
+            Ok(_) => Ok(()),
+            other => err(format!("sequential: completed future must win, got {other:?}")),
+        };
+    }
+    let f = future_with(
+        Expr::Spin { millis: 600 },
+        &env,
+        FutureOpts::new().deadline(Duration::from_millis(80)),
+    )
+    .map_err(|e| e.to_string())?;
+    let t0 = Instant::now();
+    match f.value() {
+        Err(FutureError::TimedOut { elapsed, attempts }) => {
+            if elapsed < Duration::from_millis(80) {
+                return err(format!("deadline fired early: {elapsed:?}"));
+            }
+            if attempts < 1 {
+                return err(format!("timeout must report attempts, got {attempts}"));
+            }
+            if t0.elapsed() > Duration::from_secs(5) {
+                return err(format!("deadline fired far too late: {:?}", t0.elapsed()));
+            }
+        }
+        other => return err(format!("expected TimedOut, got {other:?}")),
+    }
+    // Terminal latch: the replayed collection sees the same failure.
+    match f.value() {
+        Err(FutureError::TimedOut { .. }) => {}
+        other => return err(format!("TimedOut must latch, got {other:?}")),
+    }
+    // The seat comes back: a follow-up future still serves.
+    let ok = future(Expr::lit(7i64), &env).map_err(|e| e.to_string())?;
+    expect_eq(ok.value().map_err(|e| e.to_string())?, Value::I64(7), "post-timeout future")
+}
+
+/// Stale-result fencing at the batch daemon (plan-independent semantics,
+/// exercised under every suite): a result frame echoing a superseded
+/// attempt epoch is deleted and the job failed — never surfaced — while a
+/// matching epoch completes normally, and the fence increments the owning
+/// session's `fenced_results` counter.
+fn check_stale_result_fencing() -> Result<(), String> {
+    use crate::ipc::wire::encode_message;
+    use crate::ipc::{Message, TaskOpts, TaskSpec};
+    use crate::scheduler::{JobState, SchedConfig, Scheduler};
+
+    if crate::util::exe::worker_exe().is_err() {
+        // No worker binary in a unit-test-only invocation; the integration
+        // suites run the full path.
+        return Ok(());
+    }
+    let sched = Scheduler::start(SchedConfig {
+        submit_latency: Duration::from_millis(1),
+        ..SchedConfig::local(2)
+    })
+    .map_err(|e| e.to_string())?;
+    let session = 77_000_001u64;
+    let before = crate::metrics::session_supervision_counters(session).fenced_results;
+
+    let spool = |tag: &str, frame_attempt: u32| -> Result<std::path::PathBuf, String> {
+        let task = TaskSpec {
+            id: format!("fence-{tag}"),
+            expr: Expr::lit(1i64),
+            globals: Env::new(),
+            opts: TaskOpts { attempt: frame_attempt, ..TaskOpts::default() },
+        };
+        let p = sched.spool().join(format!("fence-{tag}.task"));
+        std::fs::write(&p, encode_message(&Message::Task(task))).map_err(|e| e.to_string())?;
+        Ok(p)
+    };
+
+    // The frame says attempt 0; the job expects epoch 1 — a delayed write
+    // from a superseded launch, as far as the daemon can tell.
+    let stale = sched.submit_attempt(spool("stale", 0)?, session, 1);
+    // Control: matching epochs harvest normally.
+    let clean = sched.submit_attempt(spool("clean", 3)?, session, 3);
+
+    let terminal = |s: &Option<JobState>| {
+        matches!(
+            s,
+            Some(JobState::Completed) | Some(JobState::Failed(_)) | Some(JobState::Cancelled)
+        )
+    };
+    let give_up = Instant::now() + Duration::from_secs(20);
+    loop {
+        if terminal(&sched.poll(stale)) && terminal(&sched.poll(clean)) {
+            break;
+        }
+        if Instant::now() > give_up {
+            sched.shutdown();
+            return err("fence probe jobs did not reach a terminal state");
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let stale_state = sched.poll(stale);
+    let clean_state = sched.poll(clean);
+    let stale_file_left = sched.result_file(stale).is_some_and(|p| p.exists());
+    sched.shutdown();
+
+    match stale_state {
+        Some(JobState::Failed(detail)) if detail.contains("fenced stale result") => {}
+        other => return err(format!("stale frame must be fenced, got {other:?}")),
+    }
+    if stale_file_left {
+        return err("fenced result file must be deleted, not left for readers");
+    }
+    match clean_state {
+        Some(JobState::Completed) => {}
+        other => return err(format!("matching epoch must complete, got {other:?}")),
+    }
+    let after = crate::metrics::session_supervision_counters(session).fenced_results;
+    if after < before + 1 {
+        return err(format!("fenced_results counter did not move: {before} -> {after}"));
+    }
+    Ok(())
+}
+
 fn check_nested_protection() -> Result<(), String> {
     // A future that itself creates a future: the inner one must resolve
     // (implicit sequential), not deadlock or error.
@@ -880,6 +1013,16 @@ pub fn checks() -> Vec<Check> {
             name: "nested-retry-context",
             what: "wire-roundtripped SessionContext gives workers the parent retry default",
             run: check_nested_retry_context_propagates,
+        },
+        Check {
+            name: "deadline-timeout",
+            what: "per-future deadline surfaces structured TimedOut, latches, frees the seat",
+            run: check_deadline_timeout_structured,
+        },
+        Check {
+            name: "stale-result-fencing",
+            what: "result frames from a superseded attempt epoch are fenced, never surfaced",
+            run: check_stale_result_fencing,
         },
         Check {
             name: "nested-protection",

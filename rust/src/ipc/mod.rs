@@ -61,6 +61,12 @@ pub struct TaskOpts {
     pub depth: u32,
     /// Serialized session context for nested futures on the worker.
     pub context: SessionContext,
+    /// Attempt epoch (protocol v5): 0 for the first launch, bumped by the
+    /// supervisor on every retry.  Workers echo it in [`TaskResult`], and
+    /// readers/the batch daemon *fence* result frames whose epoch does not
+    /// match the handle's current attempt — a slow-but-alive worker from a
+    /// presumed-dead attempt can never corrupt a retried future.
+    pub attempt: u32,
 }
 
 impl Default for TaskOpts {
@@ -73,6 +79,7 @@ impl Default for TaskOpts {
             label: None,
             depth: 0,
             context: SessionContext::default(),
+            attempt: 0,
         }
     }
 }
@@ -116,6 +123,8 @@ pub struct TaskResult {
     pub outcome: TaskOutcome,
     pub captured: Captured,
     pub metrics: TaskMetrics,
+    /// Echo of the launching [`TaskOpts::attempt`] — the stale-result fence.
+    pub attempt: u32,
 }
 
 /// The worker protocol.
@@ -134,6 +143,16 @@ pub enum Message {
     /// Liveness probe (either direction).
     Ping,
     Pong,
+    /// Worker → coordinator: still alive and making progress on `task_id`.
+    /// Emitted from the evaluator's tick hook (between `MapChunk` elements
+    /// and other yield points) over the same writer the immediates use —
+    /// no per-worker heartbeat thread exists.
+    Heartbeat { task_id: String },
+    /// Coordinator → worker: abandon `task_id` if it is still queued.  A
+    /// single-threaded worker mid-evaluation only reads this after the
+    /// task completes (then drops it as a no-op); the coordinator's seat
+    /// kill remains the enforcement path for a running task.
+    Cancel { task_id: String },
 }
 
 /// Protocol version — bump on any wire-format change.
@@ -142,4 +161,7 @@ pub enum Message {
 /// v4: [`SessionContext`] record in `TaskOpts` — session id + topology tail
 ///     + plan-wide retry default + counter base, so nested plans on workers
 ///     inherit the originating session's execution context.
-pub const PROTOCOL_VERSION: u32 = 4;
+/// v5: liveness plane — `Heartbeat` (tag 7) / `Cancel` (tag 8) frames,
+///     attempt epochs on `TaskOpts`/`TaskResult` (stale-result fencing),
+///     and `Expr::ChaosHang` (tag 19).
+pub const PROTOCOL_VERSION: u32 = 5;

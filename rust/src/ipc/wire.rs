@@ -469,6 +469,17 @@ pub fn enc_expr(e: &mut Encoder, expr: &Expr) {
                 None => e.u8(0),
             }
         }
+        Expr::ChaosHang { millis, marker } => {
+            e.u8(19);
+            e.u64(*millis);
+            match marker {
+                Some(m) => {
+                    e.u8(1);
+                    e.str(m);
+                }
+                None => e.u8(0),
+            }
+        }
     }
 }
 
@@ -551,6 +562,15 @@ pub fn dec_expr(d: &mut Decoder) -> Result<Expr, WireError> {
                 t => return Err(d.err(&format!("bad ChaosKill marker flag {t}"))),
             };
             Expr::ChaosKill { marker }
+        }
+        19 => {
+            let millis = d.u64()?;
+            let marker = match d.u8()? {
+                0 => None,
+                1 => Some(d.str()?),
+                t => return Err(d.err(&format!("bad ChaosHang marker flag {t}"))),
+            };
+            Expr::ChaosHang { millis, marker }
         }
         t => return Err(d.err(&format!("bad Expr tag {t}"))),
     })
@@ -743,6 +763,7 @@ pub fn enc_task_opts(e: &mut Encoder, o: &TaskOpts) {
     e.opt_str(&o.label);
     e.u32(o.depth);
     enc_session_context(e, &o.context);
+    e.u32(o.attempt);
 }
 
 pub fn dec_task_opts(d: &mut Decoder) -> Result<TaskOpts, WireError> {
@@ -753,6 +774,7 @@ pub fn dec_task_opts(d: &mut Decoder) -> Result<TaskOpts, WireError> {
     let label = d.opt_str()?;
     let depth = d.u32()?;
     let context = dec_session_context(d)?;
+    let attempt = d.u32()?;
     Ok(TaskOpts {
         seed,
         stream_index,
@@ -761,6 +783,7 @@ pub fn dec_task_opts(d: &mut Decoder) -> Result<TaskOpts, WireError> {
         label,
         depth,
         context,
+        attempt,
     })
 }
 
@@ -814,6 +837,7 @@ pub fn enc_result(e: &mut Encoder, r: &TaskResult) {
     enc_captured(e, &r.captured);
     e.u64(r.metrics.started_ns);
     e.u64(r.metrics.finished_ns);
+    e.u32(r.attempt);
 }
 
 pub fn dec_result(d: &mut Decoder) -> Result<TaskResult, WireError> {
@@ -829,7 +853,8 @@ pub fn dec_result(d: &mut Decoder) -> Result<TaskResult, WireError> {
     };
     let captured = dec_captured(d)?;
     let metrics = TaskMetrics { started_ns: d.u64()?, finished_ns: d.u64()? };
-    Ok(TaskResult { id, outcome, captured, metrics })
+    let attempt = d.u32()?;
+    Ok(TaskResult { id, outcome, captured, metrics, attempt })
 }
 
 // ------------------------------------------------------------- Message --
@@ -863,6 +888,14 @@ pub fn encode_message(m: &Message) -> Vec<u8> {
         Message::Shutdown => e.u8(4),
         Message::Ping => e.u8(5),
         Message::Pong => e.u8(6),
+        Message::Heartbeat { task_id } => {
+            e.u8(7);
+            e.str(task_id);
+        }
+        Message::Cancel { task_id } => {
+            e.u8(8);
+            e.str(task_id);
+        }
     }
     e.into_bytes()
 }
@@ -895,6 +928,8 @@ pub fn decode_message(bytes: &[u8]) -> Result<Message, WireError> {
         4 => Message::Shutdown,
         5 => Message::Ping,
         6 => Message::Pong,
+        7 => Message::Heartbeat { task_id: d.str()? },
+        8 => Message::Cancel { task_id: d.str()? },
         t => return Err(d.err(&format!("bad Message tag {t}"))),
     };
     if !d.finished() {
@@ -957,6 +992,8 @@ mod tests {
             Expr::Spin { millis: 5 },
             Expr::chaos_kill(),
             Expr::chaos_kill_once("/tmp/rustures-marker"),
+            Expr::chaos_hang(25),
+            Expr::chaos_hang_once(25, "/tmp/rustures-hang-marker"),
         ]);
         let mut e = Encoder::new();
         enc_expr(&mut e, &expr);
@@ -1052,6 +1089,7 @@ mod tests {
                     ),
                     counter_base: 11,
                 },
+                attempt: 2,
             },
         };
         let msg = Message::Task(task.clone());
@@ -1100,6 +1138,7 @@ mod tests {
                 rng_used: true,
             },
             metrics: TaskMetrics { started_ns: 10, finished_ns: 30 },
+            attempt: 1,
         };
         assert_eq!(
             decode_message(&encode_message(&Message::Result(ok.clone()))).unwrap(),
@@ -1111,6 +1150,7 @@ mod tests {
             outcome: TaskOutcome::Err(EvalError::with_call("boom", "log(x)")),
             captured: Captured::default(),
             metrics: TaskMetrics::default(),
+            attempt: 0,
         };
         assert_eq!(
             decode_message(&encode_message(&Message::Result(err.clone()))).unwrap(),
@@ -1150,6 +1190,8 @@ mod tests {
                     seq: 3,
                 },
             },
+            Message::Heartbeat { task_id: "t-hb".into() },
+            Message::Cancel { task_id: "t-cx".into() },
         ] {
             assert_eq!(decode_message(&encode_message(&m)).unwrap(), m);
         }

@@ -51,6 +51,7 @@ pub mod backend;
 pub mod capacity;
 pub mod conformance;
 pub mod ipc;
+pub mod liveness;
 pub mod mapreduce;
 pub mod metrics;
 pub mod proptest_lite;
@@ -78,6 +79,7 @@ pub mod prelude {
     pub use crate::api::value::{Tensor, Value};
     pub use crate::backend::supervisor::{RetryPolicy, SupervisorConfig};
     pub use crate::capacity::{BreakerConfig, BreakerState, SessionLimits};
+    pub use crate::liveness::LivenessConfig;
     pub use crate::mapreduce::{
         future_lapply, future_map, future_map_reduce, Chunking, LapplyOpts,
     };

@@ -1,0 +1,203 @@
+//! The liveness plane — heartbeats, stall detection, per-future deadlines,
+//! and cooperative cancellation (protocol v5).
+//!
+//! PRs 3–5 made the framework survive *crash* faults: a dead worker is
+//! visible (reader EOF, nonzero exit) and trips budgets, breakers, and
+//! retries.  A *hung* worker is different: it holds its `SlotLease`
+//! forever, emits nothing, and — worse — may eventually wake up and send
+//! a result for an attempt the supervisor already gave up on.  This
+//! module supplies the missing taxonomy:
+//!
+//! * **Heartbeats** — remote workers emit [`crate::ipc::Message::Heartbeat`]
+//!   frames from the evaluator's tick hook (between `MapChunk` elements),
+//!   over the same writer the immediates use: no per-worker heartbeat
+//!   thread exists.  The ProcPool's monitor declares a busy worker *hung*
+//!   after [`LivenessConfig::stall_after`] of silence, kills it, forfeits
+//!   its lease (a breaker-counted death), and lets the retry path take
+//!   over.
+//! * **Progress cells** — in-process backends cannot kill a thread, so
+//!   they track an epoch-stamped [`TaskLiveness`] cell instead of frames:
+//!   the evaluator bumps the epoch at every tick, and observers read it to
+//!   distinguish "slow but progressing" from "stuck".
+//! * **Cooperative cancellation** — the same cell carries a cancel flag
+//!   the evaluator checks between `MapChunk` elements (and inside
+//!   `ChaosHang` sleep slices); a cancelled in-process task returns the
+//!   [`WORKER_CANCEL_ERROR`] sentinel and frees its seat instead of
+//!   running to completion.  Remote cancellation stays a seat kill (a
+//!   single-threaded worker cannot read a `Cancel` frame mid-evaluation);
+//!   the frame exists for queued tasks and the future multiplexed
+//!   transport.
+//! * **Stale-result fencing** — every launch carries an attempt epoch
+//!   ([`crate::ipc::TaskOpts::attempt`]), workers echo it, and readers /
+//!   the batch daemon drop result frames whose epoch does not match the
+//!   handle's current attempt (`metrics` counts them as `fenced_results`).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Sentinel evaluation-error message produced when the evaluator observes
+/// the cooperative cancel flag between elements.  In-process backends
+/// recognize it and surface [`crate::api::error::FutureError::Cancelled`]
+/// instead of an eval error (mirrors
+/// [`crate::backend::supervisor::WORKER_KILL_ERROR`]).
+pub const WORKER_CANCEL_ERROR: &str = "__rustures_cooperative_cancel__";
+
+/// Process-wide liveness tuning, read by pools/workers at task time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LivenessConfig {
+    /// Minimum spacing between heartbeat frames a remote worker emits
+    /// while evaluating (ticks closer together than this are coalesced).
+    pub heartbeat_interval: Duration,
+    /// Declare a busy remote worker hung after this much silence (no
+    /// result, immediate, or heartbeat frame).  `None` (the default)
+    /// disables the stall detector: a coarse-grained task that spends
+    /// longer than `stall_after` inside one element would otherwise be
+    /// killed as a false positive, so hang detection is strictly opt-in.
+    pub stall_after: Option<Duration>,
+}
+
+impl Default for LivenessConfig {
+    fn default() -> Self {
+        LivenessConfig { heartbeat_interval: Duration::from_millis(25), stall_after: None }
+    }
+}
+
+impl LivenessConfig {
+    /// Convenience: a config with the stall detector armed.
+    pub fn with_stall_after(stall_after: Duration) -> Self {
+        LivenessConfig { stall_after: Some(stall_after), ..Default::default() }
+    }
+}
+
+static CONFIG: Mutex<Option<LivenessConfig>> = Mutex::new(None);
+
+/// The config pools and workers consult (process-wide).
+pub fn liveness_config() -> LivenessConfig {
+    CONFIG.lock().unwrap().clone().unwrap_or_default()
+}
+
+/// Override the process-wide liveness config.
+pub fn set_liveness_config(cfg: LivenessConfig) {
+    *CONFIG.lock().unwrap() = Some(cfg);
+}
+
+/// Back to the built-in default (stall detector off).
+pub fn reset_liveness_config() {
+    *CONFIG.lock().unwrap() = None;
+}
+
+/// The per-task progress cell used by in-process backends: an
+/// epoch-stamped progress counter plus the cooperative cancel flag.
+/// Cheap (`Arc` + two atomics) and lock-free on the evaluation path.
+#[derive(Debug, Default)]
+pub struct TaskLiveness {
+    epoch: AtomicU64,
+    cancelled: AtomicBool,
+}
+
+impl TaskLiveness {
+    pub fn new() -> Arc<Self> {
+        Arc::new(TaskLiveness::default())
+    }
+
+    /// Bumped by the evaluator at every yield point (between `MapChunk`
+    /// elements); a stuck task's epoch stops moving.
+    pub fn tick(&self) {
+        self.epoch.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Relaxed)
+    }
+
+    /// Request cooperative cancellation; the evaluator honors it at its
+    /// next yield point.
+    pub fn cancel(&self) {
+        self.cancelled.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::SeqCst)
+    }
+}
+
+/// Registry of live in-process tasks (task id → progress cell), so a
+/// handle can cancel a task it only knows by id.  Entries are registered
+/// at launch and removed when the task leaves the worker.
+static REGISTRY: Mutex<Option<HashMap<String, Arc<TaskLiveness>>>> = Mutex::new(None);
+
+/// Create (or fetch) the progress cell for `task_id`.
+pub fn register(task_id: &str) -> Arc<TaskLiveness> {
+    let mut reg = REGISTRY.lock().unwrap();
+    let map = reg.get_or_insert_with(HashMap::new);
+    Arc::clone(map.entry(task_id.to_string()).or_insert_with(TaskLiveness::new))
+}
+
+/// The progress cell for `task_id`, if the task is live.
+pub fn lookup(task_id: &str) -> Option<Arc<TaskLiveness>> {
+    REGISTRY.lock().unwrap().as_ref().and_then(|m| m.get(task_id).cloned())
+}
+
+/// Drop the registry entry (the cell itself lives as long as its `Arc`s).
+pub fn deregister(task_id: &str) {
+    if let Some(map) = REGISTRY.lock().unwrap().as_mut() {
+        map.remove(task_id);
+    }
+}
+
+/// Set the cooperative cancel flag for `task_id`; `true` if it was live.
+pub fn cancel_task(task_id: &str) -> bool {
+    match lookup(task_id) {
+        Some(cell) => {
+            cell.cancel();
+            true
+        }
+        None => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_roundtrip_and_reset() {
+        reset_liveness_config();
+        assert_eq!(liveness_config(), LivenessConfig::default());
+        assert!(liveness_config().stall_after.is_none(), "detector must default off");
+        set_liveness_config(LivenessConfig::with_stall_after(Duration::from_millis(150)));
+        assert_eq!(liveness_config().stall_after, Some(Duration::from_millis(150)));
+        reset_liveness_config();
+        assert!(liveness_config().stall_after.is_none());
+    }
+
+    #[test]
+    fn progress_cell_ticks_and_cancels() {
+        let cell = TaskLiveness::new();
+        assert_eq!(cell.epoch(), 0);
+        cell.tick();
+        cell.tick();
+        assert_eq!(cell.epoch(), 2);
+        assert!(!cell.is_cancelled());
+        cell.cancel();
+        assert!(cell.is_cancelled());
+    }
+
+    #[test]
+    fn registry_register_cancel_deregister() {
+        let id = format!("lv-{}", crate::util::uuid_v4());
+        assert!(lookup(&id).is_none());
+        assert!(!cancel_task(&id), "cancel of an unknown task is a no-op");
+        let cell = register(&id);
+        // Re-registration returns the SAME cell (cancel-before-start races
+        // land on the flag the evaluator will actually read).
+        let again = register(&id);
+        assert!(Arc::ptr_eq(&cell, &again));
+        assert!(cancel_task(&id));
+        assert!(cell.is_cancelled());
+        deregister(&id);
+        assert!(lookup(&id).is_none());
+    }
+}

@@ -102,6 +102,12 @@ pub struct LapplyOpts {
     /// to a no-failure run.  Requires the policy's `idempotent` gate
     /// (elements finished before the crash run twice).
     pub retry: Option<RetryPolicy>,
+    /// Per-chunk deadline ([`crate::api::future::FutureOpts::deadline`]):
+    /// each chunk future times out — latching
+    /// [`crate::api::error::FutureError::TimedOut`] and cancelling its
+    /// in-flight attempt — this long after its creation.  The whole map
+    /// then fails with the first chunk's timeout at collection.
+    pub deadline: Option<std::time::Duration>,
 }
 
 impl LapplyOpts {
@@ -136,6 +142,11 @@ impl LapplyOpts {
 
     pub fn retry(mut self, policy: RetryPolicy) -> Self {
         self.retry = Some(policy);
+        self
+    }
+
+    pub fn deadline(mut self, deadline: std::time::Duration) -> Self {
+        self.deadline = Some(deadline);
         self
     }
 }
@@ -269,6 +280,7 @@ pub fn lapply_futures(
         fopts.conditions = opts.capture;
         fopts.queued = opts.queued;
         fopts.retry = opts.retry.clone();
+        fopts.deadline = opts.deadline;
         fopts.label = Some(match &opts.label {
             Some(l) => format!("{l}[chunk {ci}]"),
             None => format!("lapply[chunk {ci}]"),

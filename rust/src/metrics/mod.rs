@@ -27,6 +27,10 @@ use std::time::{SystemTime, UNIX_EPOCH};
 static WORKER_DEATHS: AtomicU64 = AtomicU64::new(0);
 static RESPAWNS: AtomicU64 = AtomicU64::new(0);
 static RETRIES: AtomicU64 = AtomicU64::new(0);
+static STALLS: AtomicU64 = AtomicU64::new(0);
+static TIMEOUTS: AtomicU64 = AtomicU64::new(0);
+static CANCELS: AtomicU64 = AtomicU64::new(0);
+static FENCED_RESULTS: AtomicU64 = AtomicU64::new(0);
 
 /// Snapshot of the supervision counters.  Monotonic — tests compare
 /// before/after deltas instead of resetting (safe under parallel tests).
@@ -39,6 +43,16 @@ pub struct SupervisionCounters {
     pub respawns: u64,
     /// Task resubmissions performed by supervised handles.
     pub retries: u64,
+    /// Busy workers declared *hung* by the stall detector (no liveness
+    /// signal for `stall_after`) and killed.
+    pub stalls: u64,
+    /// Futures whose deadline expired before resolution.
+    pub timeouts: u64,
+    /// Futures cancelled before resolution (user intent or deadline expiry).
+    pub cancels: u64,
+    /// Result frames dropped because their attempt epoch did not match the
+    /// handle's current attempt (the stale-result fence).
+    pub fenced_results: u64,
 }
 
 struct ScopeInner {
@@ -46,6 +60,25 @@ struct ScopeInner {
     deaths: AtomicU64,
     respawns: AtomicU64,
     retries: AtomicU64,
+    stalls: AtomicU64,
+    timeouts: AtomicU64,
+    cancels: AtomicU64,
+    fenced: AtomicU64,
+}
+
+impl ScopeInner {
+    fn new(session: u64) -> Self {
+        ScopeInner {
+            session,
+            deaths: AtomicU64::new(0),
+            respawns: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            stalls: AtomicU64::new(0),
+            timeouts: AtomicU64::new(0),
+            cancels: AtomicU64::new(0),
+            fenced: AtomicU64::new(0),
+        }
+    }
 }
 
 /// A session-attributed counter sink.  Backends capture the scope of the
@@ -81,12 +114,40 @@ impl CounterScope {
         RETRIES.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// The stall detector declared a busy worker hung and killed it.
+    pub fn stall(&self) {
+        self.inner.stalls.fetch_add(1, Ordering::Relaxed);
+        STALLS.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A future's deadline expired before resolution.
+    pub fn timeout(&self) {
+        self.inner.timeouts.fetch_add(1, Ordering::Relaxed);
+        TIMEOUTS.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A future was cancelled before resolution.
+    pub fn cancel(&self) {
+        self.inner.cancels.fetch_add(1, Ordering::Relaxed);
+        CANCELS.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A stale result frame (attempt-epoch mismatch) was dropped.
+    pub fn fenced(&self) {
+        self.inner.fenced.fetch_add(1, Ordering::Relaxed);
+        FENCED_RESULTS.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Snapshot of this scope's (session-local) counters.
     pub fn counters(&self) -> SupervisionCounters {
         SupervisionCounters {
             worker_deaths: self.inner.deaths.load(Ordering::Relaxed),
             respawns: self.inner.respawns.load(Ordering::Relaxed),
             retries: self.inner.retries.load(Ordering::Relaxed),
+            stalls: self.inner.stalls.load(Ordering::Relaxed),
+            timeouts: self.inner.timeouts.load(Ordering::Relaxed),
+            cancels: self.inner.cancels.load(Ordering::Relaxed),
+            fenced_results: self.inner.fenced.load(Ordering::Relaxed),
         }
     }
 }
@@ -101,14 +162,7 @@ pub fn scope_for_session(session: u64) -> CounterScope {
     guard
         .get_or_insert_with(HashMap::new)
         .entry(session)
-        .or_insert_with(|| CounterScope {
-            inner: Arc::new(ScopeInner {
-                session,
-                deaths: AtomicU64::new(0),
-                respawns: AtomicU64::new(0),
-                retries: AtomicU64::new(0),
-            }),
-        })
+        .or_insert_with(|| CounterScope { inner: Arc::new(ScopeInner::new(session)) })
         .clone()
 }
 
@@ -122,14 +176,7 @@ pub fn default_scope() -> CounterScope {
 /// registry — for work racing a closed session, so eviction is not
 /// undone.  Records still feed the process-wide totals.
 pub fn detached_scope(session: u64) -> CounterScope {
-    CounterScope {
-        inner: Arc::new(ScopeInner {
-            session,
-            deaths: AtomicU64::new(0),
-            respawns: AtomicU64::new(0),
-            retries: AtomicU64::new(0),
-        }),
-    }
+    CounterScope { inner: Arc::new(ScopeInner::new(session)) }
 }
 
 /// Evict a session's registry entry (called by `Session::close`).  Live
@@ -219,6 +266,10 @@ pub fn supervision_counters() -> SupervisionCounters {
         worker_deaths: WORKER_DEATHS.load(Ordering::Relaxed),
         respawns: RESPAWNS.load(Ordering::Relaxed),
         retries: RETRIES.load(Ordering::Relaxed),
+        stalls: STALLS.load(Ordering::Relaxed),
+        timeouts: TIMEOUTS.load(Ordering::Relaxed),
+        cancels: CANCELS.load(Ordering::Relaxed),
+        fenced_results: FENCED_RESULTS.load(Ordering::Relaxed),
     }
 }
 
@@ -228,8 +279,8 @@ fn counters_json(c: &SupervisionCounters, session: Option<u64>, out: &mut String
         out.push_str(&format!("\"session\":{id},"));
     }
     out.push_str(&format!(
-        "\"worker_deaths\":{},\"respawns\":{},\"retries\":{}",
-        c.worker_deaths, c.respawns, c.retries
+        "\"worker_deaths\":{},\"respawns\":{},\"retries\":{},\"liveness\":{{\"stalls\":{},\"timeouts\":{},\"cancels\":{},\"fenced_results\":{}}}",
+        c.worker_deaths, c.respawns, c.retries, c.stalls, c.timeouts, c.cancels, c.fenced_results
     ));
     out.push('}');
 }
@@ -442,6 +493,31 @@ mod tests {
             .find(|e| e.get("session").and_then(|v| v.as_i64()) == Some(9_000_004))
             .expect("session entry present");
         assert!(entry.get("respawns").unwrap().as_i64().unwrap() >= 1);
+    }
+
+    #[test]
+    fn liveness_counters_attribute_and_render() {
+        let s = scope_for_session(9_000_005);
+        s.stall();
+        s.timeout();
+        s.cancel();
+        s.cancel();
+        s.fenced();
+        let c = session_supervision_counters(9_000_005);
+        assert_eq!((c.stalls, c.timeouts, c.cancels, c.fenced_results), (1, 1, 2, 1));
+        let json = supervision_json();
+        let doc = crate::util::json::parse(&json).expect("valid JSON");
+        let sessions = doc.get("sessions").unwrap().as_arr().unwrap();
+        let entry = sessions
+            .iter()
+            .find(|e| e.get("session").and_then(|v| v.as_i64()) == Some(9_000_005))
+            .expect("session entry present");
+        let lv = entry.get("liveness").expect("liveness object");
+        assert_eq!(lv.get("stalls").unwrap().as_i64(), Some(1));
+        assert_eq!(lv.get("cancels").unwrap().as_i64(), Some(2));
+        assert_eq!(lv.get("fenced_results").unwrap().as_i64(), Some(1));
+        let total = doc.get("total").unwrap().get("liveness").expect("total liveness");
+        assert!(total.get("timeouts").unwrap().as_i64().unwrap() >= 1);
     }
 
     #[test]

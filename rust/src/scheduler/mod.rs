@@ -100,6 +100,11 @@ struct Job {
     node: Option<usize>,
     /// Originating session (quota key for the ledger admission).
     session: u64,
+    /// Attempt epoch the submitter launched this job under.  The daemon
+    /// fences any harvested result frame echoing a different epoch — a
+    /// late write from a superseded attempt must never surface as this
+    /// job's value.
+    expected_attempt: u32,
     /// The node-slot lease held while the job runs; dropped (slot freed)
     /// on the terminal transition — capacity frees when a job *completes*,
     /// not when its result is collected.
@@ -218,6 +223,13 @@ impl Scheduler {
     /// session, so per-session `max_workers` quotas hold across the batch
     /// backend too (a quota-capped job stays queued — FIFO — never drops).
     pub fn submit_for_session(&self, task_file: PathBuf, session: u64) -> JobId {
+        self.submit_attempt(task_file, session, 0)
+    }
+
+    /// [`Scheduler::submit_for_session`] carrying the submitter's attempt
+    /// epoch, which the daemon checks against the harvested result frame
+    /// (stale-result fencing).
+    pub fn submit_attempt(&self, task_file: PathBuf, session: u64, attempt: u32) -> JobId {
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
         let result_file = self.config.spool.join(format!("job-{id}.result"));
         let job = Job {
@@ -229,6 +241,7 @@ impl Scheduler {
             child: None,
             node: None,
             session,
+            expected_attempt: attempt,
             lease: None,
         };
         let mut state = self.state.lock().unwrap();
@@ -376,6 +389,17 @@ impl Drop for DaemonGuard {
     }
 }
 
+/// Attempt epoch echoed by the result frame on disk, or `None` when the
+/// file cannot be read or decoded (the handle surfaces that as a channel
+/// error; the daemon only fences frames it can positively date).
+fn result_epoch(path: &PathBuf) -> Option<u32> {
+    let bytes = std::fs::read(path).ok()?;
+    match crate::ipc::wire::decode_message(&bytes).ok()? {
+        crate::ipc::Message::Result(r) => Some(r.attempt),
+        _ => None,
+    }
+}
+
 fn daemon_loop(
     config: SchedConfig,
     state: Arc<Mutex<SchedState>>,
@@ -402,10 +426,29 @@ fn daemon_loop(
                 .collect();
             for id in ids {
                 let job = st.jobs.get_mut(&id).unwrap();
+                let mut fenced = false;
                 let done = match &mut job.child {
                     Some(child) => match child.try_wait() {
                         Ok(Some(status)) => Some(if status.success() && job.result_file.exists() {
-                            JobState::Completed
+                            match result_epoch(&job.result_file) {
+                                Some(got) if got != job.expected_attempt => {
+                                    // Stale-result fencing: a frame from a
+                                    // superseded attempt epoch landed in this
+                                    // job's result slot.  Drop it on the floor
+                                    // so no reader can surface it; the job
+                                    // fails and the supervisor relaunches.
+                                    fenced = true;
+                                    crate::metrics::scope_for_session(job.session).fenced();
+                                    let _ = std::fs::remove_file(&job.result_file);
+                                    JobState::Failed(format!(
+                                        "fenced stale result (attempt {got}, expected {})",
+                                        job.expected_attempt
+                                    ))
+                                }
+                                // Unreadable frames are left for the handle to
+                                // surface as a structured channel error.
+                                _ => JobState::Completed,
+                            }
                         } else {
                             JobState::Failed(format!("worker exit: {status}"))
                         }),
@@ -415,7 +458,7 @@ fn daemon_loop(
                     None => Some(JobState::Failed("no child".into())),
                 };
                 if let Some(new_state) = done {
-                    if matches!(new_state, JobState::Failed(_)) {
+                    if matches!(new_state, JobState::Failed(_)) && !fenced {
                         // A crashed/killed job process is a worker death
                         // (supervision metrics, keyed to the owning
                         // session; batch jobs are inherently disposable so

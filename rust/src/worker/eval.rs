@@ -56,6 +56,30 @@ pub struct EvalCtx<'a, 'b> {
     pub kernels: Option<RuntimeHandle>,
     /// Live relay hook for `immediateCondition`s (backends that support it).
     pub on_immediate: Option<&'b mut dyn FnMut(&Condition)>,
+    /// In-process progress cell: the evaluator bumps its epoch at every
+    /// yield point (between `MapChunk` elements) and honors its cancel
+    /// flag by failing with [`crate::liveness::WORKER_CANCEL_ERROR`].
+    pub liveness: Option<Arc<crate::liveness::TaskLiveness>>,
+    /// Remote liveness hook: called at every yield point so `run_worker`
+    /// can emit heartbeat frames without a dedicated heartbeat thread.
+    pub on_tick: Option<&'b mut dyn FnMut()>,
+}
+
+impl EvalCtx<'_, '_> {
+    /// A cooperative yield point: advance the progress epoch, let the
+    /// worker loop emit a heartbeat, and honor a pending cancel request.
+    fn yield_point(&mut self) -> Result<(), EvalError> {
+        if let Some(cell) = &self.liveness {
+            cell.tick();
+            if cell.is_cancelled() {
+                return Err(EvalError::new(crate::liveness::WORKER_CANCEL_ERROR));
+            }
+        }
+        if let Some(f) = self.on_tick.as_mut() {
+            f();
+        }
+        Ok(())
+    }
 }
 
 /// Local scope stack: innermost binding wins; globals behind it.
@@ -266,6 +290,12 @@ fn eval(expr: &Expr, scope: &mut Scope, ctx: &mut EvalCtx<'_, '_>) -> Result<Val
             scope.locals.push((param.clone(), Value::Unit));
             let mut failed = None;
             for (i, el) in elements.iter().enumerate() {
+                // Element boundary = the liveness plane's yield point:
+                // heartbeat/epoch tick plus the cooperative-cancel check.
+                if let Err(e) = ctx.yield_point() {
+                    failed = Some(e);
+                    break;
+                }
                 scope.locals.last_mut().expect("chunk param slot").1 = el.clone();
                 let r = if seeded {
                     with_stream_index(ctx, *base_index + i as u64, |ctx| {
@@ -289,14 +319,35 @@ fn eval(expr: &Expr, scope: &mut Scope, ctx: &mut EvalCtx<'_, '_>) -> Result<Val
             }
         }
         Expr::Spin { millis } => {
+            // Spin in short slices with yield points between them: a busy
+            // worker keeps proving liveness (heartbeats) — only a genuinely
+            // silent hang trips the stall detector — and honors cooperative
+            // cancellation mid-burn.
             let until = std::time::Instant::now() + std::time::Duration::from_millis(*millis);
-            while std::time::Instant::now() < until {
-                std::hint::spin_loop();
+            loop {
+                ctx.yield_point()?;
+                let now = std::time::Instant::now();
+                if now >= until {
+                    break;
+                }
+                let slice_end = now + (until - now).min(std::time::Duration::from_millis(5));
+                while std::time::Instant::now() < slice_end {
+                    std::hint::spin_loop();
+                }
             }
             Ok(Value::Unit)
         }
         Expr::Sleep { millis } => {
-            std::thread::sleep(std::time::Duration::from_millis(*millis));
+            // Sliced for the same reason as `Spin`: liveness while blocked.
+            let until = std::time::Instant::now() + std::time::Duration::from_millis(*millis);
+            loop {
+                ctx.yield_point()?;
+                let now = std::time::Instant::now();
+                if now >= until {
+                    break;
+                }
+                std::thread::sleep((until - now).min(std::time::Duration::from_millis(10)));
+            }
             Ok(Value::Unit)
         }
         Expr::Work { iters } => {
@@ -329,6 +380,35 @@ fn eval(expr: &Expr, scope: &mut Scope, ctx: &mut EvalCtx<'_, '_>) -> Result<Val
             // death; under plan(sequential) it is just an eval error (there
             // is no disposable worker to kill).
             Err(EvalError::new(crate::backend::supervisor::WORKER_KILL_ERROR))
+        }
+        Expr::ChaosHang { millis, marker } => {
+            if let Some(m) = marker {
+                if std::path::Path::new(m).exists() {
+                    // The hang already fired on an earlier attempt: proceed
+                    // immediately (a post-stall retry takes this branch).
+                    return Ok(Value::I64(0));
+                }
+                // Create the marker BEFORE hanging so the retried run sees it.
+                let _ = std::fs::write(m, b"hung");
+            }
+            // Hang *silently*: no ticks, no heartbeats — exactly the
+            // pathology the stall detector exists to catch.  We do honor
+            // cooperative cancellation between sleep slices so an
+            // in-process hang can still be timed out.
+            let until = std::time::Instant::now() + std::time::Duration::from_millis(*millis);
+            loop {
+                if let Some(cell) = &ctx.liveness {
+                    if cell.is_cancelled() {
+                        return Err(EvalError::new(crate::liveness::WORKER_CANCEL_ERROR));
+                    }
+                }
+                let now = std::time::Instant::now();
+                if now >= until {
+                    break;
+                }
+                std::thread::sleep((until - now).min(std::time::Duration::from_millis(10)));
+            }
+            Ok(Value::I64(0))
         }
     }
 }
@@ -543,6 +623,8 @@ mod tests {
             rng: RngCtx::new(Some(1), 0),
             kernels: None,
             on_immediate: None,
+            liveness: None,
+            on_tick: None,
         };
         evaluate(expr, env, &mut ctx)
     }
@@ -634,6 +716,8 @@ mod tests {
             rng: RngCtx::new(None, 0),
             kernels: None,
             on_immediate: None,
+            liveness: None,
+            on_tick: None,
         };
         let v = evaluate(&e, &env, &mut ctx).unwrap();
         assert_eq!(v, Value::I64(55));
@@ -656,6 +740,8 @@ mod tests {
                 rng: RngCtx::new(seed, 5),
                 kernels: None,
                 on_immediate: None,
+                liveness: None,
+                on_tick: None,
             };
             let v = evaluate(&draw, &env, &mut ctx).unwrap();
             (v, buf.finish().rng_used)
@@ -681,6 +767,8 @@ mod tests {
                 rng: RngCtx::new(Some(7), 0),
                 kernels: None,
                 on_immediate: None,
+                liveness: None,
+                on_tick: None,
             };
             evaluate(&Expr::list(exprs), &env, &mut ctx).unwrap()
         };
@@ -710,6 +798,8 @@ mod tests {
                 rng: RngCtx::new(Some(11), 0),
                 kernels: None,
                 on_immediate: None,
+                liveness: None,
+                on_tick: None,
             };
             evaluate(expr, &env, &mut ctx).unwrap()
         };
@@ -808,5 +898,83 @@ mod tests {
         let e = Expr::call("slow_fcn", vec![Expr::lit(1.0)]);
         let err = run(&e, &env).unwrap_err();
         assert!(err.message.contains("slow_fcn"));
+    }
+
+    #[test]
+    fn cancelled_cell_aborts_map_chunk_with_sentinel() {
+        let env = Env::new();
+        let cell = crate::liveness::TaskLiveness::new();
+        cell.cancel();
+        let chunk = Expr::map_chunk(
+            "x",
+            Arc::new(Expr::var("x")),
+            (0..3i64).map(Value::I64).collect(),
+            0,
+        );
+        let mut buf = CaptureBuffer::new();
+        let mut ctx = EvalCtx {
+            buffer: &mut buf,
+            rng: RngCtx::new(Some(1), 0),
+            kernels: None,
+            on_immediate: None,
+            liveness: Some(Arc::clone(&cell)),
+            on_tick: None,
+        };
+        let err = evaluate(&chunk, &env, &mut ctx).unwrap_err();
+        assert_eq!(err.message, crate::liveness::WORKER_CANCEL_ERROR);
+    }
+
+    #[test]
+    fn map_chunk_ticks_progress_epoch_per_element() {
+        let env = Env::new();
+        let cell = crate::liveness::TaskLiveness::new();
+        let chunk = Expr::map_chunk(
+            "x",
+            Arc::new(Expr::var("x")),
+            (0..4i64).map(Value::I64).collect(),
+            0,
+        );
+        let mut ticks = 0u32;
+        let mut on_tick = || ticks += 1;
+        let mut buf = CaptureBuffer::new();
+        let mut ctx = EvalCtx {
+            buffer: &mut buf,
+            rng: RngCtx::new(Some(1), 0),
+            kernels: None,
+            on_immediate: None,
+            liveness: Some(Arc::clone(&cell)),
+            on_tick: Some(&mut on_tick),
+        };
+        evaluate(&chunk, &env, &mut ctx).unwrap();
+        assert_eq!(cell.epoch(), 4, "one epoch bump per element");
+        assert_eq!(ticks, 4, "one worker tick per element");
+    }
+
+    #[test]
+    fn chaos_hang_marker_skips_and_cancel_interrupts() {
+        let env = Env::new();
+        // Marker already present: no hang, evaluates to 0 immediately.
+        let m = std::env::temp_dir().join(format!("rustures-hang-{}", crate::util::uuid_v4()));
+        let marker = m.to_str().unwrap().to_string();
+        std::fs::write(&m, b"hung").unwrap();
+        let t0 = std::time::Instant::now();
+        let v = run(&Expr::chaos_hang_once(5_000, &marker), &env).unwrap();
+        assert_eq!(v, Value::I64(0));
+        assert!(t0.elapsed() < std::time::Duration::from_millis(1_000));
+        let _ = std::fs::remove_file(&m);
+        // Pre-cancelled cell: the hang aborts with the cancel sentinel.
+        let cell = crate::liveness::TaskLiveness::new();
+        cell.cancel();
+        let mut buf = CaptureBuffer::new();
+        let mut ctx = EvalCtx {
+            buffer: &mut buf,
+            rng: RngCtx::new(Some(1), 0),
+            kernels: None,
+            on_immediate: None,
+            liveness: Some(cell),
+            on_tick: None,
+        };
+        let err = evaluate(&Expr::chaos_hang(60_000), &env, &mut ctx).unwrap_err();
+        assert_eq!(err.message, crate::liveness::WORKER_CANCEL_ERROR);
     }
 }

@@ -27,7 +27,20 @@ fn now_ns() -> u64 {
 pub fn execute_task(
     task: &TaskSpec,
     kernels: Option<RuntimeHandle>,
+    on_immediate: Option<&mut dyn FnMut(&Condition)>,
+) -> TaskResult {
+    execute_task_live(task, kernels, on_immediate, None, None)
+}
+
+/// [`execute_task`] plus the liveness plane: an optional in-process
+/// progress/cancel cell and an optional per-yield-point tick hook (the
+/// remote worker loop uses the hook to emit heartbeat frames).
+pub fn execute_task_live(
+    task: &TaskSpec,
+    kernels: Option<RuntimeHandle>,
     mut on_immediate: Option<&mut dyn FnMut(&Condition)>,
+    liveness: Option<std::sync::Arc<crate::liveness::TaskLiveness>>,
+    mut on_tick: Option<&mut dyn FnMut()>,
 ) -> TaskResult {
     let mut buffer = CaptureBuffer::new();
     let started_ns = now_ns();
@@ -37,7 +50,18 @@ pub fn execute_task(
             Some(f) => Some(&mut **f),
             None => None,
         };
-        let mut ctx = EvalCtx { buffer: &mut buffer, rng, kernels, on_immediate: hook };
+        let tick: Option<&mut dyn FnMut()> = match &mut on_tick {
+            Some(f) => Some(&mut **f),
+            None => None,
+        };
+        let mut ctx = EvalCtx {
+            buffer: &mut buffer,
+            rng,
+            kernels,
+            on_immediate: hook,
+            liveness,
+            on_tick: tick,
+        };
         match evaluate(&task.expr, &task.globals, &mut ctx) {
             Ok(v) => TaskOutcome::Ok(v),
             Err(e) => TaskOutcome::Err(e),
@@ -56,6 +80,8 @@ pub fn execute_task(
         outcome,
         captured,
         metrics: TaskMetrics { started_ns, finished_ns },
+        // Echo the attempt epoch so the coordinator can fence stale frames.
+        attempt: task.opts.attempt,
     }
 }
 
@@ -89,18 +115,43 @@ pub fn run_worker<R: Read, W: Write>(
                 // topology tail (empty ⇒ sequential — the nested-parallelism
                 // protection) PLUS the originating session's plan-wide
                 // retry default and counter base.
-                let mut send_err = None;
+                //
+                // Both the immediate relay and the heartbeat tick write to
+                // the same transport from inside the evaluator, so the
+                // writer lives in a `RefCell` the two closures share — no
+                // per-worker heartbeat thread exists, beats ride the
+                // evaluator's yield points.
+                let send_err = std::cell::RefCell::new(None);
+                let writer_cell = std::cell::RefCell::new(&mut writer);
+                let hb_interval = crate::liveness::liveness_config().heartbeat_interval;
+                let mut last_beat = std::time::Instant::now();
                 let result = crate::api::session::scope_task_context(&task.opts.context, || {
                     let mut on_imm = |c: &Condition| {
                         let msg =
                             Message::Immediate { task_id: task.id.clone(), condition: c.clone() };
-                        if let Err(e) = write_message(&mut writer, &msg) {
-                            send_err = Some(e);
+                        if let Err(e) = write_message(&mut *writer_cell.borrow_mut(), &msg) {
+                            *send_err.borrow_mut() = Some(e);
                         }
                     };
-                    execute_task(&task, kernels.clone(), Some(&mut on_imm))
+                    let mut on_tick = || {
+                        if last_beat.elapsed() < hb_interval {
+                            return;
+                        }
+                        let msg = Message::Heartbeat { task_id: task.id.clone() };
+                        match write_message(&mut *writer_cell.borrow_mut(), &msg) {
+                            Ok(()) => last_beat = std::time::Instant::now(),
+                            Err(e) => *send_err.borrow_mut() = Some(e),
+                        }
+                    };
+                    execute_task_live(
+                        &task,
+                        kernels.clone(),
+                        Some(&mut on_imm),
+                        None,
+                        Some(&mut on_tick),
+                    )
                 });
-                if let Some(e) = send_err {
+                if let Some(e) = send_err.into_inner() {
                     return Err(e);
                 }
                 if let Some(marker) = &midwrite {
@@ -108,6 +159,11 @@ pub fn run_worker<R: Read, W: Write>(
                 }
                 write_message(&mut writer, &Message::Result(result))?;
             }
+            // A cancel for a task we are *not* currently running (it already
+            // finished, or was never dispatched here) is a no-op; a
+            // single-threaded worker cannot observe one mid-evaluation —
+            // the coordinator's seat kill is the enforcement path there.
+            Some(Message::Cancel { .. }) => {}
             Some(other) => {
                 return Err(FutureError::Channel(format!(
                     "worker received unexpected message: {other:?}"

@@ -5,9 +5,11 @@
 //! chaos-killed in the middle of a `future_lapply` and the supervised
 //! retry must reproduce the no-failure run bit-identically.
 
+use std::sync::Mutex;
 use std::time::Duration;
 
 use rustures::api::plan::{with_plan, PlanSpec};
+use rustures::liveness::{reset_liveness_config, set_liveness_config};
 use rustures::prelude::*;
 
 // ---------------------------------------------------- mid-map kill harness --
@@ -91,6 +93,129 @@ fn assert_midmap_kill_contract(spec: PlanSpec) {
             assert!(e.is_recoverable(), "{}: worker loss not recoverable: {e}", spec.name());
         }
         Ok(_) => panic!("{}: kill without retry must fail the map", spec.name()),
+    }
+}
+
+// ---------------------------------------------------- mid-map hang harness --
+
+/// Tests that arm the process-wide stall detector serialize through this
+/// guard; the config resets when the guard drops (panic-safe).
+static STALL_GUARD: Mutex<()> = Mutex::new(());
+
+struct ArmedStall(#[allow(dead_code)] std::sync::MutexGuard<'static, ()>);
+
+impl Drop for ArmedStall {
+    fn drop(&mut self) {
+        reset_liveness_config();
+    }
+}
+
+fn arm_stall(stall_after: Duration) -> ArmedStall {
+    let g = STALL_GUARD.lock().unwrap_or_else(|e| e.into_inner());
+    set_liveness_config(LivenessConfig::with_stall_after(stall_after));
+    ArmedStall(g)
+}
+
+/// Like [`killed_lapply`], but the probe *hangs* the worker (silently — no
+/// heartbeats) instead of killing it: element `h_i` hangs exactly once.
+fn hung_lapply(
+    spec: PlanSpec,
+    n: i64,
+    hangs: &[i64],
+    retry: Option<RetryPolicy>,
+    deadline: Option<Duration>,
+) -> (Result<Vec<Value>, FutureError>, Vec<String>) {
+    let markers: Vec<String> = hangs.iter().map(|h| marker(&format!("h{h}"))).collect();
+    let out = with_plan(spec, || {
+        let env = Env::new();
+        let xs: Vec<Value> = (0..n).map(Value::I64).collect();
+        let mut probe = Expr::lit(0i64);
+        for (h, m) in hangs.iter().zip(&markers) {
+            probe = Expr::if_else(
+                Expr::prim(PrimOp::Eq, vec![Expr::var("x"), Expr::lit(*h)]),
+                Expr::chaos_hang_once(30_000, m),
+                probe,
+            );
+        }
+        let body = Expr::seq(vec![probe, Expr::add(Expr::var("x"), Expr::runif(1))]);
+        let mut opts = LapplyOpts::new().seed(99).chunking(Chunking::ChunkSize(3));
+        if let Some(p) = retry {
+            opts = opts.retry(p);
+        }
+        if let Some(d) = deadline {
+            opts = opts.deadline(d);
+        }
+        future_lapply(&xs, "x", &body, &env, &opts)
+    });
+    (out, markers)
+}
+
+/// Remote backends (disposable worker processes): a worker hung mid-map is
+/// declared stalled after `stall_after` of heartbeat silence and killed.
+/// With retry the resubmitted chunk makes the map bit-identical to the
+/// clean run; without retry the map fails with a structured recoverable
+/// error — never a hang.
+fn assert_midmap_hang_contract(spec: PlanSpec) {
+    let _armed = arm_stall(Duration::from_millis(250));
+
+    // Clean reference run (no hangs, same seed), under the armed detector:
+    // busy-but-alive workers heartbeat and must NOT be culled.
+    let (want, _) = hung_lapply(spec.clone(), 12, &[], None, None);
+    let want = want.expect("clean run under armed stall detector");
+
+    let (got, markers) = hung_lapply(spec.clone(), 12, &[4], Some(retry_policy()), None);
+    cleanup(&markers);
+    assert_eq!(got.expect("supervised hang run"), want, "{}: hang+retry != clean", spec.name());
+
+    let (got, markers) = hung_lapply(spec.clone(), 12, &[4], None, None);
+    cleanup(&markers);
+    match got {
+        Err(e) => {
+            assert!(!e.is_eval(), "{}: stall kill reported as eval error: {e}", spec.name());
+            assert!(e.is_recoverable(), "{}: stall kill not recoverable: {e}", spec.name());
+        }
+        Ok(_) => panic!("{}: hang without retry must fail the map", spec.name()),
+    }
+}
+
+#[test]
+fn midmap_hang_contract_multisession() {
+    assert_midmap_hang_contract(PlanSpec::multiprocess(2));
+}
+
+#[test]
+fn midmap_hang_contract_cluster() {
+    assert_midmap_hang_contract(PlanSpec::cluster(&["n1.local", "n2.local"]));
+}
+
+#[test]
+fn midmap_hang_multicore_is_bounded_by_deadline() {
+    // In-process workers are threads — there is nothing to kill, so the
+    // deadline plane bounds the hang instead: expiry flips the cancel
+    // flag, the hang's sleep slices observe it, and the map surfaces
+    // TimedOut within bounded time whether or not retry is armed
+    // (timeouts are terminal, never resubmitted).
+    for retry in [None, Some(retry_policy())] {
+        let t0 = std::time::Instant::now();
+        let (got, markers) = hung_lapply(
+            PlanSpec::multicore(2),
+            12,
+            &[4],
+            retry,
+            Some(Duration::from_millis(150)),
+        );
+        cleanup(&markers);
+        match got {
+            Err(FutureError::TimedOut { elapsed, .. }) => {
+                assert!(elapsed >= Duration::from_millis(150), "early timeout: {elapsed:?}");
+            }
+            other => panic!("expected TimedOut from a deadlined in-process hang, got {other:?}"),
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "deadline did not bound the hang: {:?}",
+            t0.elapsed()
+        );
     }
 }
 

@@ -1,0 +1,271 @@
+//! Liveness plane integration: per-future deadlines (including the queued
+//! dispatcher path), cooperative cancellation edge cases, stall detection
+//! returning a hung worker's seat to the capacity ledger, and stale-result
+//! fencing of delayed frames at the batch scheduler.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use rustures::api::plan::{with_plan, PlanSpec};
+use rustures::api::session::Session;
+use rustures::liveness::{reset_liveness_config, set_liveness_config, LivenessConfig};
+use rustures::prelude::*;
+
+/// Tests that arm the process-wide stall detector serialize through this
+/// guard; the config resets when the guard drops (panic-safe).
+static STALL_GUARD: Mutex<()> = Mutex::new(());
+
+struct ArmedStall(#[allow(dead_code)] std::sync::MutexGuard<'static, ()>);
+
+impl Drop for ArmedStall {
+    fn drop(&mut self) {
+        reset_liveness_config();
+    }
+}
+
+fn arm_stall(stall_after: Duration) -> ArmedStall {
+    let g = STALL_GUARD.lock().unwrap_or_else(|e| e.into_inner());
+    set_liveness_config(LivenessConfig::with_stall_after(stall_after));
+    ArmedStall(g)
+}
+
+fn marker(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("rustures-lv-{tag}-{}", rustures::util::uuid_v4()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+#[test]
+fn deadline_shorter_than_queue_wait_times_out_queued_future() {
+    // One seat, occupied.  The queued future's deadline expires while it is
+    // still waiting for admission — the clock covers queue wait, and the
+    // cancelled cell must never reach the seat.
+    with_plan(PlanSpec::multicore(1), || {
+        let env = Env::new();
+        let busy = future(Expr::Sleep { millis: 400 }, &env).unwrap();
+        let f = future_with(
+            Expr::Sleep { millis: 400 },
+            &env,
+            FutureOpts::new().queued().deadline(Duration::from_millis(60)),
+        )
+        .unwrap();
+        let t0 = Instant::now();
+        match f.value() {
+            Err(FutureError::TimedOut { elapsed, .. }) => {
+                assert!(elapsed >= Duration::from_millis(60), "short-changed: {elapsed:?}");
+                assert!(
+                    t0.elapsed() < Duration::from_millis(350),
+                    "timeout must fire during the queue wait, not after admission: {:?}",
+                    t0.elapsed()
+                );
+            }
+            other => panic!("expected TimedOut, got {other:?}"),
+        }
+        busy.value().unwrap();
+        // The seat serves the next future immediately — the timed-out cell
+        // was skipped by the dispatcher, not left squatting.
+        let g = future(Expr::lit(3i64), &env).unwrap();
+        assert_eq!(g.value().unwrap(), Value::I64(3));
+    });
+}
+
+#[test]
+fn already_expired_deadline_times_out_despite_inflight_serialization() {
+    // A deadline that expires while the (large) payload is still being
+    // shipped / evaluated: collection must surface TimedOut promptly
+    // rather than ride out the transfer, and the seat must recover.
+    with_plan(PlanSpec::multiprocess(1), || {
+        let mut env = Env::new();
+        let n = 256 * 256;
+        env.insert("t", Tensor::new(vec![256, 256], vec![1.0f32; n]).unwrap());
+        let f = future_with(
+            Expr::seq(vec![
+                Expr::prim(PrimOp::Sum, vec![Expr::var("t")]),
+                Expr::Sleep { millis: 400 },
+            ]),
+            &env,
+            FutureOpts::new().deadline(Duration::from_nanos(1)),
+        )
+        .unwrap();
+        let t0 = Instant::now();
+        match f.value() {
+            Err(FutureError::TimedOut { .. }) => {}
+            other => panic!("expected TimedOut, got {other:?}"),
+        }
+        assert!(t0.elapsed() < Duration::from_millis(300), "timeout lagged: {:?}", t0.elapsed());
+        let g = future(Expr::lit(5i64), &env).unwrap();
+        assert_eq!(g.value().unwrap(), Value::I64(5));
+    });
+}
+
+#[test]
+fn cancel_after_resolve_is_a_noop() {
+    with_plan(PlanSpec::multiprocess(1), || {
+        let env = Env::new();
+        let f = future(Expr::lit(9i64), &env).unwrap();
+        let give_up = Instant::now() + Duration::from_secs(10);
+        while !f.resolved() {
+            assert!(Instant::now() < give_up, "future never resolved");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(!f.cancel(), "cancel after resolution must report false");
+        assert_eq!(f.value().unwrap(), Value::I64(9), "value must survive the late cancel");
+    });
+}
+
+#[test]
+fn deadline_is_inert_on_a_fast_map() {
+    // A generous deadline on work that finishes early must never fire.
+    with_plan(PlanSpec::multicore(2), || {
+        let env = Env::new();
+        let xs: Vec<Value> = (0..6i64).map(Value::I64).collect();
+        let body = Expr::add(Expr::var("x"), Expr::runif(1));
+        let got = future_lapply(
+            &xs,
+            "x",
+            &body,
+            &env,
+            &LapplyOpts::new()
+                .seed(7)
+                .chunking(Chunking::ChunkSize(2))
+                .deadline(Duration::from_secs(60)),
+        )
+        .unwrap();
+        let want = future_lapply(
+            &xs,
+            "x",
+            &body,
+            &env,
+            &LapplyOpts::new().seed(7).chunking(Chunking::ChunkSize(2)),
+        )
+        .unwrap();
+        assert_eq!(got, want, "a deadline that never fires must not perturb results");
+    });
+}
+
+#[test]
+fn stale_frame_from_superseded_attempt_is_fenced_even_when_delayed() {
+    // A job whose result frame (attempt epoch 2) lands only after a delay,
+    // into a slot expecting epoch 5: the daemon must fence it on harvest —
+    // Failed, file deleted, counter bumped — never surface it.
+    use rustures::ipc::wire::encode_message;
+    use rustures::ipc::{Message, TaskOpts, TaskSpec};
+    use rustures::scheduler::{JobState, SchedConfig, Scheduler};
+
+    let sched = Scheduler::start(SchedConfig {
+        submit_latency: Duration::from_millis(1),
+        ..SchedConfig::local(1)
+    })
+    .unwrap();
+    let session = 88_000_011u64;
+    let before = rustures::metrics::session_supervision_counters(session).fenced_results;
+
+    let task = TaskSpec {
+        id: "fence-delayed".into(),
+        expr: Expr::Sleep { millis: 150 },
+        globals: Env::new(),
+        opts: TaskOpts { attempt: 2, ..TaskOpts::default() },
+    };
+    let task_file = sched.spool().join("fence-delayed.task");
+    std::fs::write(&task_file, encode_message(&Message::Task(task))).unwrap();
+    let job = sched.submit_attempt(task_file, session, 5);
+
+    let give_up = Instant::now() + Duration::from_secs(20);
+    let detail = loop {
+        match sched.poll(job) {
+            Some(JobState::Failed(detail)) => break detail,
+            Some(JobState::Completed) => panic!("stale frame surfaced as a completed job"),
+            Some(JobState::Cancelled) | None => panic!("fence probe lost its job"),
+            _ => {
+                assert!(Instant::now() < give_up, "fence probe never reached a terminal state");
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    };
+    assert!(
+        detail.contains("fenced stale result"),
+        "expected a fencing failure, got: {detail}"
+    );
+    let file_left = sched.result_file(job).is_some_and(|p| p.exists());
+    sched.shutdown();
+    assert!(!file_left, "fenced result file must be deleted");
+    let after = rustures::metrics::session_supervision_counters(session).fenced_results;
+    assert!(after > before, "fenced_results must tick: {before} -> {after}");
+}
+
+#[test]
+fn hung_worker_seat_returns_to_ledger() {
+    // Acceptance: a worker hung mid-lapply is killed by the stall detector
+    // and its seat returns through the ledger — after the (retried) map
+    // completes, the session holds zero execution-slot leases, in both the
+    // programmatic accounting and the capacity_json surface.
+    let _armed = arm_stall(Duration::from_millis(250));
+    let s = Session::with_plan(PlanSpec::multiprocess(2));
+    let sid = s.id();
+    let env = Env::new();
+    let xs: Vec<Value> = (0..12i64).map(Value::I64).collect();
+    let m = marker("seat");
+    let body = Expr::seq(vec![
+        Expr::if_else(
+            Expr::prim(PrimOp::Eq, vec![Expr::var("x"), Expr::lit(3i64)]),
+            Expr::chaos_hang_once(60_000, &m),
+            Expr::lit(0i64),
+        ),
+        Expr::add(Expr::var("x"), Expr::runif(1)),
+    ]);
+    let opts = LapplyOpts::new()
+        .seed(41)
+        .chunking(Chunking::ChunkSize(3))
+        .retry(RetryPolicy::idempotent(4).with_backoff(Duration::from_millis(1), 2.0));
+    let got = s.lapply(&xs, "x", &body, &env, &opts);
+    let _ = std::fs::remove_file(&m);
+    got.expect("hang + stall kill + retry must complete the map");
+
+    assert_eq!(
+        rustures::capacity::session_in_use(sid),
+        0,
+        "hung worker's lease leaked past the stall kill"
+    );
+    let json = rustures::util::json::parse(&rustures::metrics::capacity_json()).unwrap();
+    let sessions = json.get("sessions").unwrap().as_arr().unwrap();
+    let entry = sessions
+        .iter()
+        .find(|e| e.get("session").and_then(|v| v.as_i64()) == Some(sid as i64))
+        .expect("session missing from capacity_json");
+    assert_eq!(
+        entry.get("in_use").unwrap().as_i64(),
+        Some(0),
+        "capacity_json shows a leaked in_use lease"
+    );
+
+    // The stall registered in the session's liveness counters.
+    let c = rustures::metrics::session_supervision_counters(sid);
+    assert!(c.stalls >= 1, "stall kill must be counted, got {c:?}");
+    s.close();
+}
+
+#[test]
+fn session_default_deadline_is_a_collection_side_default() {
+    // The session-level default applies to futures created without an
+    // explicit deadline and is overridden per future.
+    let s = Session::with_plan(PlanSpec::multicore(1));
+    s.set_default_deadline(Some(Duration::from_millis(60)));
+    let env = Env::new();
+    s.scope(|sess| {
+        let slow = sess.future(Expr::Sleep { millis: 60_000 }, &env).unwrap();
+        match slow.value() {
+            Err(FutureError::TimedOut { .. }) => {}
+            other => panic!("session default deadline must apply, got {other:?}"),
+        }
+        let generous = sess
+            .future_with(
+                Expr::Sleep { millis: 80 },
+                &env,
+                FutureOpts::new().deadline(Duration::from_secs(30)),
+            )
+            .unwrap();
+        assert!(generous.value().is_ok(), "per-future deadline must override the default");
+    });
+    s.close();
+}

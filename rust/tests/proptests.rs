@@ -260,7 +260,8 @@ fn naive_free_vars(expr: &Expr, bound: &mut Vec<String>, out: &mut Vec<String>) 
         | Expr::Spin { .. }
         | Expr::Sleep { .. }
         | Expr::Work { .. }
-        | Expr::ChaosKill { .. } => {}
+        | Expr::ChaosKill { .. }
+        | Expr::ChaosHang { .. } => {}
     }
 }
 
