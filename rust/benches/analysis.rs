@@ -1,0 +1,91 @@
+//! E15 — per-create static-analysis overhead.
+//!
+//! The analyzer runs on every `future_with` call, so its cost must be a
+//! small fraction of the create path itself.  Target: `analysis-on` vs
+//! `analysis-off` delta under 5% of the BENCH_overhead sequential create
+//! round trip.  The `lint-only` mode isolates the analyzer passes from
+//! the rest of creation (globals identification, launch, value collect).
+//!
+//! Emits `BENCH_analysis.json` (schema in BENCH.md); `scripts/bench.sh`
+//! runs this in smoke mode.
+
+mod common;
+
+use common::{fmt_dur, header, json_row, measure, row, scale_iters, write_bench_json, Json};
+use rustures::prelude::*;
+
+fn workload() -> (Env, Expr) {
+    let mut env = Env::new();
+    env.insert("t", Tensor::new(vec![256], vec![1.0f32; 256]).unwrap());
+    // A realistic small expression: touch the captured global, draw
+    // nothing (the RNG pass still scans the tree).
+    let expr = Expr::add(Expr::prim(PrimOp::Sum, vec![Expr::var("t")]), Expr::lit(1.0));
+    (env, expr)
+}
+
+fn main() {
+    let iters = scale_iters(2000);
+    let (env, expr) = workload();
+
+    header(
+        "E15: per-create static-analysis overhead (sequential)",
+        &["mode         ", "mean      ", "p50       ", "p95       "],
+    );
+
+    let mut json_rows = Vec::new();
+    let configs = [
+        ("analysis-off", AnalysisConfig::disabled()),
+        ("analysis-on", AnalysisConfig::new()),
+    ];
+    for (mode, config) in configs {
+        let session = Session::with_plan(PlanSpec::sequential());
+        session.set_analysis_config(config);
+        let stats = session.scope(|_| {
+            measure(3, iters, || {
+                let f = future_with(expr.clone(), &env, FutureOpts::new().no_capture()).unwrap();
+                let _ = f.value().unwrap();
+            })
+        });
+        session.close();
+        row(&[
+            format!("{mode:<13}"),
+            format!("{:>10}", fmt_dur(stats.mean)),
+            format!("{:>10}", fmt_dur(stats.p50)),
+            format!("{:>10}", fmt_dur(stats.p95)),
+        ]);
+        json_rows.push(json_row(&[
+            ("mode", Json::Str(mode.to_string())),
+            ("mean_ns", Json::Int(stats.mean.as_nanos() as i64)),
+            ("p50_ns", Json::Int(stats.p50.as_nanos() as i64)),
+            ("p95_ns", Json::Int(stats.p95.as_nanos() as i64)),
+            ("iters", Json::Int(stats.n as i64)),
+        ]));
+    }
+
+    // The analyzer alone (all passes, Allow findings included), no future.
+    let session = Session::with_plan(PlanSpec::sequential());
+    let opts = FutureOpts::new();
+    let stats = measure(3, iters, || {
+        let _ = session.lint(&expr, &env, &opts);
+    });
+    session.close();
+    row(&[
+        format!("{:<13}", "lint-only"),
+        format!("{:>10}", fmt_dur(stats.mean)),
+        format!("{:>10}", fmt_dur(stats.p50)),
+        format!("{:>10}", fmt_dur(stats.p95)),
+    ]);
+    json_rows.push(json_row(&[
+        ("mode", Json::Str("lint-only".to_string())),
+        ("mean_ns", Json::Int(stats.mean.as_nanos() as i64)),
+        ("p50_ns", Json::Int(stats.p50.as_nanos() as i64)),
+        ("p95_ns", Json::Int(stats.p95.as_nanos() as i64)),
+        ("iters", Json::Int(stats.n as i64)),
+    ]));
+
+    write_bench_json("analysis", json_rows);
+    println!(
+        "\nshape check: (analysis-on − analysis-off) must stay under 5% of the \
+         analysis-off create round trip; lint-only bounds the analyzer's own cost"
+    );
+}

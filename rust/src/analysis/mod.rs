@@ -1,0 +1,907 @@
+//! Plan-time static analysis — a multi-pass linter over `(Expr, globals,
+//! FutureOpts, session plan/limits)` that runs *before* a future costs
+//! anything: no capacity lease, no serialization, no worker round trip.
+//!
+//! This is the reproduction of the paper's guard rails around automatic
+//! globals identification: `future.globals.maxSize` (the export-size
+//! budget), `future.rng.onMisuse` (RNG hygiene), and the `get("k")`
+//! opacity trap — plus plan-level cross-checks the R package surfaces as
+//! runtime errors (nested-blocking deadlock shapes, deadlines shorter
+//! than a heartbeat, exhausted topology tails).
+//!
+//! Design rules:
+//!
+//! * **Stable lint codes.** [`LintCode`] is the public contract; messages
+//!   and help text may be reworded, codes never change meaning.
+//! * **Configurable severity.** [`AnalysisConfig`] maps every code to
+//!   [`Severity::Deny`] / [`Severity::Warn`] / [`Severity::Allow`] with
+//!   documented defaults; sessions carry their own config.
+//! * **Diagnostics never perturb execution.** An `Allow`ed (or disabled)
+//!   analysis run is bit-identical to no analysis at all; a `Warn` run
+//!   only relays conditions and bumps counters — values and RNG streams
+//!   are untouched. Only `Deny` changes behavior, by refusing creation
+//!   with [`crate::api::error::FutureError::Rejected`].
+//! * **The export estimator may over-count but never under-counts.** See
+//!   [`estimate_export_size`]; the property test in `tests/proptests.rs`
+//!   machine-checks domination over the actual wire encoding.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::time::Duration;
+
+use crate::api::env::Env;
+use crate::api::expr::Expr;
+use crate::api::future::FutureOpts;
+use crate::api::globals::{free_variables, GlobalsSpec};
+use crate::api::value::Value;
+
+/// Stable identifiers for everything the analyzer can flag.
+///
+/// The string form ([`LintCode::as_str`]) is what appears in diagnostics,
+/// metrics JSON (`rustures.analysis.v1`), and config files — treat it as
+/// a wire format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LintCode {
+    /// Estimated export (globals + literal payloads) exceeds
+    /// `max_globals_size` — the `future.globals.maxSize` analog.
+    ExportSize,
+    /// The expression draws random numbers but no seed was supplied —
+    /// the creation-time promotion of `future.rng.onMisuse`.
+    UnseededRng,
+    /// A seed was supplied but the expression never draws — a wasted
+    /// (and probably misplaced) RNG stream.
+    UnusedSeed,
+    /// Two `WithRngStream` scopes in one expression reuse the same
+    /// substream index, so their draws are correlated.
+    DuplicateRngStream,
+    /// `DynLookup` (the paper's `get("k")` trap) is reachable under
+    /// `GlobalsSpec::Auto`, where static capture cannot see the name.
+    DynLookup,
+    /// `ChaosKill` / `ChaosHang` fault injection outside a chaos-armed
+    /// session.
+    ChaosInjection,
+    /// A blocking (non-queued, non-lazy) create from a worker-side
+    /// derived session while `SessionLimits::max_workers` caps the very
+    /// pool the parent occupies — the classic nested-blocking deadlock
+    /// shape.
+    DeadlockHazard,
+    /// Effective deadline shorter than the liveness heartbeat interval:
+    /// the future can time out before the worker's first sign of life.
+    DeadlineHeartbeat,
+    /// Create at a nesting depth past the last topology level — the
+    /// plan silently degrades to sequential (the paper's nested-
+    /// protection tail).
+    TopologyTail,
+    /// An explicit/`AutoPlus` capture name that the expression never
+    /// references (probable typo), or a free variable missing from an
+    /// `Explicit` list (guaranteed eval-time failure).
+    UselessCapture,
+}
+
+impl LintCode {
+    /// Every code, in catalog order (DESIGN.md §Static Analysis).
+    pub const ALL: [LintCode; 10] = [
+        LintCode::ExportSize,
+        LintCode::UnseededRng,
+        LintCode::UnusedSeed,
+        LintCode::DuplicateRngStream,
+        LintCode::DynLookup,
+        LintCode::ChaosInjection,
+        LintCode::DeadlockHazard,
+        LintCode::DeadlineHeartbeat,
+        LintCode::TopologyTail,
+        LintCode::UselessCapture,
+    ];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            LintCode::ExportSize => "export-size",
+            LintCode::UnseededRng => "unseeded-rng",
+            LintCode::UnusedSeed => "unused-seed",
+            LintCode::DuplicateRngStream => "duplicate-rng-stream",
+            LintCode::DynLookup => "dyn-lookup",
+            LintCode::ChaosInjection => "chaos-injection",
+            LintCode::DeadlockHazard => "deadlock-hazard",
+            LintCode::DeadlineHeartbeat => "deadline-heartbeat",
+            LintCode::TopologyTail => "topology-tail",
+            LintCode::UselessCapture => "useless-capture",
+        }
+    }
+}
+
+impl fmt::Display for LintCode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// What happens when a lint fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Severity {
+    /// Recorded by `Session::lint` only; creation proceeds untouched.
+    Allow,
+    /// Creation proceeds; the diagnostic is relayed through the
+    /// conditions plane and counted per session in metrics.
+    Warn,
+    /// Creation fails with `FutureError::Rejected` before any capacity
+    /// lease or worker round trip.
+    Deny,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Severity::Allow => "allow",
+            Severity::Warn => "warn",
+            Severity::Deny => "deny",
+        })
+    }
+}
+
+/// One finding: a stable code, the severity it resolved to under the
+/// active config, a coarse path locating the finding, a human message,
+/// and actionable help.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diagnostic {
+    pub code: LintCode,
+    pub severity: Severity,
+    /// Coarse locator: `"globals"`, `"expr"`, `"plan"`, or a refinement
+    /// like `"globals['weights']"` / `"expr.with_rng_stream[7]"`.
+    pub path: String,
+    pub message: String,
+    pub help: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "lint {} [{}] at {}: {} (help: {})",
+            self.code, self.severity, self.path, self.message, self.help
+        )
+    }
+}
+
+/// Default export budget: 500 MiB, matching `future.globals.maxSize`'s
+/// R default of 500 MB in spirit (we use binary units throughout).
+pub const DEFAULT_MAX_GLOBALS_SIZE: usize = 500 * 1024 * 1024;
+
+/// Per-session analyzer policy: an on/off switch, the export budget,
+/// chaos arming, and per-code severity overrides on top of the
+/// documented defaults.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AnalysisConfig {
+    /// Master switch consulted by `future_with`; `Session::lint` runs
+    /// the passes regardless so a disabled session can still be probed.
+    pub enabled: bool,
+    /// Export budget in estimated bytes (see [`estimate_export_size`]).
+    pub max_globals_size: usize,
+    /// Chaos-armed sessions (the default — ambient sessions double as
+    /// the test harness) treat `ChaosKill`/`ChaosHang` as `Allow`;
+    /// disarmed sessions deny them. [`AnalysisConfig::hardened`] disarms.
+    pub chaos_armed: bool,
+    overrides: BTreeMap<LintCode, Severity>,
+}
+
+impl Default for AnalysisConfig {
+    fn default() -> Self {
+        AnalysisConfig {
+            enabled: true,
+            max_globals_size: DEFAULT_MAX_GLOBALS_SIZE,
+            chaos_armed: true,
+            overrides: BTreeMap::new(),
+        }
+    }
+}
+
+impl AnalysisConfig {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Analysis fully off: `future_with` skips the passes entirely.
+    pub fn disabled() -> Self {
+        AnalysisConfig { enabled: false, ..Self::default() }
+    }
+
+    /// Production preset for multi-tenant sessions: chaos injection is
+    /// disarmed (→ `Deny`) and the softer hygiene lints are promoted to
+    /// `Warn` so misconfiguration is at least visible.
+    pub fn hardened() -> Self {
+        AnalysisConfig { chaos_armed: false, ..Self::default() }
+            .warn(LintCode::UnseededRng)
+            .warn(LintCode::UnusedSeed)
+            .warn(LintCode::TopologyTail)
+    }
+
+    /// Override one code's severity.
+    pub fn set(mut self, code: LintCode, severity: Severity) -> Self {
+        self.overrides.insert(code, severity);
+        self
+    }
+
+    pub fn deny(self, code: LintCode) -> Self {
+        self.set(code, Severity::Deny)
+    }
+
+    pub fn warn(self, code: LintCode) -> Self {
+        self.set(code, Severity::Warn)
+    }
+
+    pub fn allow(self, code: LintCode) -> Self {
+        self.set(code, Severity::Allow)
+    }
+
+    /// Set the export budget (estimated bytes).
+    pub fn max_globals_size(mut self, bytes: usize) -> Self {
+        self.max_globals_size = bytes;
+        self
+    }
+
+    /// The severity `code` resolves to under this config: an explicit
+    /// override wins; otherwise the documented default (which for
+    /// `ChaosInjection` depends on [`AnalysisConfig::chaos_armed`]).
+    pub fn action(&self, code: LintCode) -> Severity {
+        if let Some(s) = self.overrides.get(&code) {
+            return *s;
+        }
+        match code {
+            LintCode::ExportSize => Severity::Deny,
+            // The eval-time warning remains the default surface for
+            // unseeded draws; promoting this to Warn/Deny is the
+            // fail-fast opt-in.
+            LintCode::UnseededRng => Severity::Allow,
+            LintCode::UnusedSeed => Severity::Allow,
+            LintCode::DuplicateRngStream => Severity::Warn,
+            LintCode::DynLookup => Severity::Warn,
+            LintCode::ChaosInjection => {
+                if self.chaos_armed {
+                    Severity::Allow
+                } else {
+                    Severity::Deny
+                }
+            }
+            LintCode::DeadlockHazard => Severity::Warn,
+            LintCode::DeadlineHeartbeat => Severity::Warn,
+            // Nested tails are ubiquitous and intentional in topology
+            // tests; surfacing them is opt-in (hardened() warns).
+            LintCode::TopologyTail => Severity::Allow,
+            LintCode::UselessCapture => Severity::Warn,
+        }
+    }
+}
+
+/// The session-side facts the plan cross-check pass needs, assembled by
+/// `Session::analysis_facts` without instantiating any backend.
+#[derive(Debug, Clone, Default)]
+pub struct SessionFacts {
+    /// True for worker-side derived sessions (`id != origin_id`).
+    pub derived: bool,
+    /// Current nesting depth (0 = top level).
+    pub depth: u32,
+    /// Number of plan levels in the session topology.
+    pub topology_levels: usize,
+    /// The origin session's `SessionLimits::max_workers`, if capped.
+    pub max_workers: Option<usize>,
+    /// Session default deadline (applied when `FutureOpts::deadline`
+    /// is unset).
+    pub default_deadline: Option<Duration>,
+}
+
+/// Conservative upper bound for one value's wire footprint: the
+/// in-memory [`Value::byte_size`] accounting plus a fixed 16-byte margin
+/// per node for tags/lengths/dims. Lists are summed recursively so every
+/// nested element gets its own margin.
+fn value_upper(v: &Value) -> usize {
+    match v {
+        Value::List(items) => 16 + items.iter().map(value_upper).sum::<usize>(),
+        other => other.byte_size() + 16,
+    }
+}
+
+/// Static upper bound (bytes) for what shipping this future would
+/// serialize: captured globals plus the expression tree with its literal
+/// payloads (`Lit` values, `MapChunk` elements).
+///
+/// The estimate intentionally **over**-counts — every node carries a
+/// fixed margin dominating its wire tag/length fields — and never
+/// under-counts, so an export-size `Deny` can trust it: if the estimate
+/// is within budget, the encoded task is too. Machine-checked against
+/// `ipc::wire::enc_expr` by `prop_export_estimate_dominates_encoding`.
+pub fn estimate_export_size(expr: &Expr, globals: &Env) -> usize {
+    // Base margin for the task frame: id, opts, session context header.
+    let mut est = 128usize;
+    for (name, value) in globals.iter() {
+        est += name.len() + 16 + value_upper(value);
+    }
+    expr.walk(&mut |e| {
+        // Per-node margin dominating the wire tag plus any fixed-width
+        // operands (counts, indices, millis).
+        est += 24;
+        match e {
+            Expr::Lit(v) => est += value_upper(v),
+            Expr::Var(name) => est += name.len(),
+            Expr::Let { name, .. } => est += name.len(),
+            Expr::Call { kernel, .. } => est += kernel.len(),
+            Expr::Rng { shape, .. } => est += 8 * shape.len(),
+            Expr::MapChunk { param, elements, .. } => {
+                est += param.len() + 8 * elements.len();
+                est += elements.iter().map(value_upper).sum::<usize>();
+            }
+            Expr::ChaosKill { marker } => {
+                est += marker.as_deref().map_or(0, str::len);
+            }
+            Expr::ChaosHang { marker, .. } => {
+                est += marker.as_deref().map_or(0, str::len);
+            }
+            _ => {}
+        }
+    });
+    est
+}
+
+struct Collector<'c> {
+    config: &'c AnalysisConfig,
+    include_allowed: bool,
+    out: Vec<Diagnostic>,
+}
+
+impl Collector<'_> {
+    /// Whether a pass should bother computing findings for `code`.
+    fn wants(&self, code: LintCode) -> bool {
+        self.include_allowed || self.config.action(code) != Severity::Allow
+    }
+
+    fn emit(&mut self, code: LintCode, path: impl Into<String>, message: String, help: &str) {
+        let severity = self.config.action(code);
+        if severity == Severity::Allow && !self.include_allowed {
+            return;
+        }
+        self.out.push(Diagnostic {
+            code,
+            severity,
+            path: path.into(),
+            message,
+            help: help.to_string(),
+        });
+    }
+}
+
+/// Enforcement entry point used by `future_with`: runs all passes and
+/// returns only findings whose configured severity is `Warn` or `Deny`
+/// (an `Allow`ed finding costs nothing, preserving bit-identity with a
+/// disabled analyzer).
+pub fn analyze(
+    expr: &Expr,
+    globals: &Env,
+    spec: &GlobalsSpec,
+    opts: &FutureOpts,
+    facts: &SessionFacts,
+    config: &AnalysisConfig,
+) -> Vec<Diagnostic> {
+    run_passes(expr, globals, spec, opts, facts, config, false)
+}
+
+/// Introspection entry point used by `Session::lint`: like [`analyze`]
+/// but includes `Allow`-severity findings, so callers can see everything
+/// the analyzer knows regardless of the enforcement policy.
+pub fn lint(
+    expr: &Expr,
+    globals: &Env,
+    spec: &GlobalsSpec,
+    opts: &FutureOpts,
+    facts: &SessionFacts,
+    config: &AnalysisConfig,
+) -> Vec<Diagnostic> {
+    run_passes(expr, globals, spec, opts, facts, config, true)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_passes(
+    expr: &Expr,
+    globals: &Env,
+    spec: &GlobalsSpec,
+    opts: &FutureOpts,
+    facts: &SessionFacts,
+    config: &AnalysisConfig,
+    include_allowed: bool,
+) -> Vec<Diagnostic> {
+    let mut c = Collector { config, include_allowed, out: Vec::new() };
+    pass_export_audit(expr, globals, config, &mut c);
+    pass_rng_hygiene(expr, opts, &mut c);
+    pass_opacity(expr, spec, &mut c);
+    pass_plan_cross_check(opts, facts, &mut c);
+    pass_capture_typos(expr, spec, &mut c);
+    c.out
+}
+
+/// Pass 1 — export audit (`future.globals.maxSize`).
+fn pass_export_audit(expr: &Expr, globals: &Env, config: &AnalysisConfig, c: &mut Collector<'_>) {
+    if !c.wants(LintCode::ExportSize) {
+        return;
+    }
+    let est = estimate_export_size(expr, globals);
+    if est > config.max_globals_size {
+        c.emit(
+            LintCode::ExportSize,
+            "globals",
+            format!(
+                "estimated export is {est} bytes, exceeding the \
+                 max_globals_size budget of {} bytes",
+                config.max_globals_size
+            ),
+            "shrink the captured globals (capture a slice, not the whole \
+             tensor), or raise AnalysisConfig::max_globals_size if the \
+             transfer is intentional",
+        );
+    }
+}
+
+/// Pass 2 — RNG hygiene (`future.rng.onMisuse`).
+fn pass_rng_hygiene(expr: &Expr, opts: &FutureOpts, c: &mut Collector<'_>) {
+    let uses_rng = expr.uses_rng();
+    if opts.seed.is_none() && uses_rng && c.wants(LintCode::UnseededRng) {
+        c.emit(
+            LintCode::UnseededRng,
+            "expr",
+            "expression draws random numbers but no seed was supplied; \
+             results are not reproducible"
+                .to_string(),
+            "pass FutureOpts::new().seed(s) to derive a parallel-safe \
+             per-future stream",
+        );
+    }
+    if opts.seed.is_some() && !uses_rng && c.wants(LintCode::UnusedSeed) {
+        c.emit(
+            LintCode::UnusedSeed,
+            "expr",
+            "a seed was supplied but the expression never draws random \
+             numbers; the dedicated RNG stream is wasted"
+                .to_string(),
+            "drop the seed, or move it to the future that actually draws",
+        );
+    }
+    if c.wants(LintCode::DuplicateRngStream) {
+        let mut seen: BTreeMap<u64, usize> = BTreeMap::new();
+        expr.walk(&mut |e| {
+            if let Expr::WithRngStream { index, .. } = e {
+                *seen.entry(*index).or_insert(0) += 1;
+            }
+        });
+        for (index, count) in seen {
+            if count > 1 {
+                c.emit(
+                    LintCode::DuplicateRngStream,
+                    format!("expr.with_rng_stream[{index}]"),
+                    format!(
+                        "RNG substream index {index} is opened by {count} \
+                         sibling scopes; their draws are identical, not \
+                         independent"
+                    ),
+                    "give every WithRngStream scope in one expression a \
+                     distinct index (the map-reduce layer derives them \
+                     from element positions)",
+                );
+            }
+        }
+    }
+}
+
+/// Pass 3 — opacity / exportability (`get("k")`, chaos injection).
+fn pass_opacity(expr: &Expr, spec: &GlobalsSpec, c: &mut Collector<'_>) {
+    let mut has_dyn = false;
+    let mut chaos: Option<&'static str> = None;
+    expr.walk(&mut |e| match e {
+        Expr::DynLookup(_) => has_dyn = true,
+        Expr::ChaosKill { .. } => chaos = chaos.or(Some("ChaosKill")),
+        Expr::ChaosHang { .. } => chaos = chaos.or(Some("ChaosHang")),
+        _ => {}
+    });
+    if has_dyn && *spec == GlobalsSpec::Auto && c.wants(LintCode::DynLookup) {
+        c.emit(
+            LintCode::DynLookup,
+            "expr",
+            "expression looks up a global by computed name (the paper's \
+             get(\"k\") trap); automatic capture cannot see which \
+             variable it needs"
+                .to_string(),
+            "name the dynamic globals with \
+             GlobalsSpec::AutoPlus([\"k\", ...]) — the paper's fix — or \
+             capture everything explicitly with GlobalsSpec::Explicit",
+        );
+    }
+    if let Some(kind) = chaos {
+        if c.wants(LintCode::ChaosInjection) {
+            c.emit(
+                LintCode::ChaosInjection,
+                "expr",
+                format!("expression contains {kind} fault injection"),
+                "chaos expressions are for arming tests; run them in a \
+                 chaos-armed session (the default config) or strip them \
+                 before production",
+            );
+        }
+    }
+}
+
+/// Pass 4 — plan cross-check (deadlocks, deadlines, topology tails).
+fn pass_plan_cross_check(opts: &FutureOpts, facts: &SessionFacts, c: &mut Collector<'_>) {
+    if facts.derived
+        && !opts.queued
+        && !opts.lazy
+        && facts.max_workers.is_some()
+        && c.wants(LintCode::DeadlockHazard)
+    {
+        c.emit(
+            LintCode::DeadlockHazard,
+            "plan",
+            format!(
+                "blocking create from a worker-side derived session while \
+                 SessionLimits::max_workers = {:?} caps the pool the \
+                 parent already occupies; if all capped slots hold \
+                 blocked parents, no child can ever run",
+                facts.max_workers
+            ),
+            "use FutureOpts::new().queued() (non-blocking admission), \
+             make the future lazy, or raise max_workers",
+        );
+    }
+    if c.wants(LintCode::DeadlineHeartbeat) {
+        let effective = opts.deadline.or(facts.default_deadline);
+        if let Some(d) = effective {
+            let hb = crate::liveness::liveness_config().heartbeat_interval;
+            if d < hb {
+                c.emit(
+                    LintCode::DeadlineHeartbeat,
+                    "plan",
+                    format!(
+                        "deadline {}ms is shorter than the liveness \
+                         heartbeat interval {}ms; the future can time out \
+                         before the worker's first sign of life",
+                        d.as_millis(),
+                        hb.as_millis()
+                    ),
+                    "raise the deadline above \
+                     LivenessConfig::heartbeat_interval, or lower the \
+                     heartbeat interval for latency-critical sessions",
+                );
+            }
+        }
+    }
+    if facts.depth > 0
+        && facts.depth as usize >= facts.topology_levels
+        && c.wants(LintCode::TopologyTail)
+    {
+        c.emit(
+            LintCode::TopologyTail,
+            "plan",
+            format!(
+                "create at nesting depth {} but the topology declares \
+                 only {} level(s); execution silently falls back to \
+                 sequential (nested protection)",
+                facts.depth, facts.topology_levels
+            ),
+            "declare one plan level per intended nesting depth with \
+             Session::with_topology, or keep the fallback and silence \
+             this lint",
+        );
+    }
+}
+
+/// Satellite pass — explicit/`AutoPlus` capture-list cross-check.
+fn pass_capture_typos(expr: &Expr, spec: &GlobalsSpec, c: &mut Collector<'_>) {
+    if !c.wants(LintCode::UselessCapture) {
+        return;
+    }
+    let (names, explicit) = match spec {
+        GlobalsSpec::Explicit(names) => (names, true),
+        GlobalsSpec::AutoPlus(names) => (names, false),
+        _ => return,
+    };
+    let free = free_variables(expr);
+    let mut has_dyn = false;
+    expr.walk(&mut |e| {
+        if matches!(e, Expr::DynLookup(_)) {
+            has_dyn = true;
+        }
+    });
+    // A listed name the expression never references statically: with no
+    // DynLookup in sight it cannot be reached at all — probable typo.
+    if !has_dyn {
+        for name in names {
+            if !free.contains(name) {
+                c.emit(
+                    LintCode::UselessCapture,
+                    format!("globals['{name}']"),
+                    format!(
+                        "'{name}' is captured explicitly but the \
+                         expression never references it — useless capture \
+                         or probable typo"
+                    ),
+                    "drop the name from the capture list, or fix the \
+                     variable reference in the expression",
+                );
+            }
+        }
+    }
+    // The converse only bites Explicit (AutoPlus still auto-captures):
+    // a free variable missing from the list fails at eval time with
+    // "object not found" — surface it at creation instead.
+    if explicit {
+        for name in &free {
+            if !names.contains(name) {
+                c.emit(
+                    LintCode::UselessCapture,
+                    format!("globals['{name}']"),
+                    format!(
+                        "free variable '{name}' is not in the Explicit \
+                         capture list; evaluation is guaranteed to fail \
+                         with \"object '{name}' not found\""
+                    ),
+                    "add the name to GlobalsSpec::Explicit, or switch to \
+                     GlobalsSpec::Auto",
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::value::Tensor;
+    use crate::ipc::wire::{enc_expr, Encoder};
+
+    fn facts() -> SessionFacts {
+        SessionFacts { topology_levels: 1, ..SessionFacts::default() }
+    }
+
+    fn run(
+        expr: &Expr,
+        spec: &GlobalsSpec,
+        opts: &FutureOpts,
+        config: &AnalysisConfig,
+    ) -> Vec<Diagnostic> {
+        let globals = crate::api::globals::identify_globals(expr, &Env::new(), &GlobalsSpec::None)
+            .expect("no globals needed");
+        lint(expr, &globals, spec, opts, &facts(), config)
+    }
+
+    fn codes(diags: &[Diagnostic]) -> Vec<LintCode> {
+        diags.iter().map(|d| d.code).collect()
+    }
+
+    #[test]
+    fn catalog_is_stable_and_distinct() {
+        let strs: std::collections::BTreeSet<&str> =
+            LintCode::ALL.iter().map(|c| c.as_str()).collect();
+        assert_eq!(strs.len(), LintCode::ALL.len());
+        assert!(strs.contains("export-size"));
+        assert!(strs.contains("useless-capture"));
+    }
+
+    #[test]
+    fn default_severities_match_design_doc() {
+        let c = AnalysisConfig::default();
+        assert_eq!(c.action(LintCode::ExportSize), Severity::Deny);
+        assert_eq!(c.action(LintCode::UnseededRng), Severity::Allow);
+        assert_eq!(c.action(LintCode::DuplicateRngStream), Severity::Warn);
+        assert_eq!(c.action(LintCode::ChaosInjection), Severity::Allow);
+        assert_eq!(c.action(LintCode::TopologyTail), Severity::Allow);
+        let hardened = AnalysisConfig::hardened();
+        assert_eq!(hardened.action(LintCode::ChaosInjection), Severity::Deny);
+        assert_eq!(hardened.action(LintCode::UnseededRng), Severity::Warn);
+        let overridden = AnalysisConfig::new().deny(LintCode::DynLookup);
+        assert_eq!(overridden.action(LintCode::DynLookup), Severity::Deny);
+    }
+
+    #[test]
+    fn export_audit_fires_over_budget_only() {
+        let mut env = Env::new();
+        env.insert("t", Tensor::new(vec![256], vec![1.0f32; 256]).unwrap());
+        let expr = Expr::prim(crate::api::expr::PrimOp::Sum, vec![Expr::var("t")]);
+        let config = AnalysisConfig::new().max_globals_size(64);
+        let diags = lint(
+            &expr,
+            &env,
+            &GlobalsSpec::Auto,
+            &FutureOpts::new(),
+            &facts(),
+            &config,
+        );
+        assert!(codes(&diags).contains(&LintCode::ExportSize), "{diags:?}");
+        let roomy = AnalysisConfig::new().max_globals_size(1 << 20);
+        let diags = lint(&expr, &env, &GlobalsSpec::Auto, &FutureOpts::new(), &facts(), &roomy);
+        assert!(!codes(&diags).contains(&LintCode::ExportSize), "{diags:?}");
+    }
+
+    #[test]
+    fn estimate_dominates_wire_encoding_for_a_nasty_expr() {
+        let expr = Expr::let_in(
+            "x",
+            Expr::lit(Value::List(vec![
+                Value::Str("abc".into()),
+                Value::Tensor(Tensor::new(vec![2, 3], vec![0.0; 6]).unwrap()),
+            ])),
+            Expr::seq(vec![
+                Expr::with_rng_stream(3, Expr::runif_shaped(vec![2, 2, 2])),
+                Expr::chaos_hang_once(5, "m"),
+                Expr::var("x"),
+            ]),
+        );
+        let mut enc = Encoder::new();
+        enc_expr(&mut enc, &expr);
+        let bytes = enc.into_bytes().len();
+        let est = estimate_export_size(&expr, &Env::new());
+        assert!(est >= bytes, "estimate {est} under-counts wire {bytes}");
+    }
+
+    #[test]
+    fn rng_hygiene_unseeded_unused_and_duplicates() {
+        let draws = Expr::runif(4);
+        let diags = run(&draws, &GlobalsSpec::Auto, &FutureOpts::new(), &AnalysisConfig::new());
+        assert!(codes(&diags).contains(&LintCode::UnseededRng));
+        let diags = run(
+            &Expr::lit(1i64),
+            &GlobalsSpec::Auto,
+            &FutureOpts::new().seed(7),
+            &AnalysisConfig::new(),
+        );
+        assert!(codes(&diags).contains(&LintCode::UnusedSeed));
+        let dup = Expr::list(vec![
+            Expr::with_rng_stream(7, Expr::runif(2)),
+            Expr::with_rng_stream(7, Expr::runif(2)),
+        ]);
+        let diags =
+            run(&dup, &GlobalsSpec::Auto, &FutureOpts::new().seed(1), &AnalysisConfig::new());
+        let dup_diag = diags.iter().find(|d| d.code == LintCode::DuplicateRngStream);
+        assert!(dup_diag.is_some(), "{diags:?}");
+        assert_eq!(dup_diag.unwrap().path, "expr.with_rng_stream[7]");
+        let distinct = Expr::list(vec![
+            Expr::with_rng_stream(1, Expr::runif(2)),
+            Expr::with_rng_stream(2, Expr::runif(2)),
+        ]);
+        let diags =
+            run(&distinct, &GlobalsSpec::Auto, &FutureOpts::new().seed(1), &AnalysisConfig::new());
+        assert!(!codes(&diags).contains(&LintCode::DuplicateRngStream));
+    }
+
+    #[test]
+    fn dyn_lookup_flagged_only_under_auto() {
+        let expr = Expr::dyn_lookup(Expr::lit("k"));
+        let diags = run(&expr, &GlobalsSpec::Auto, &FutureOpts::new(), &AnalysisConfig::new());
+        let d = diags.iter().find(|d| d.code == LintCode::DynLookup).expect("flagged");
+        assert!(d.help.contains("AutoPlus"), "help must name the paper's fix: {}", d.help);
+        let fixed = GlobalsSpec::AutoPlus(vec!["k".to_string()]);
+        let diags = run(&expr, &fixed, &FutureOpts::new(), &AnalysisConfig::new());
+        assert!(!codes(&diags).contains(&LintCode::DynLookup), "{diags:?}");
+    }
+
+    #[test]
+    fn chaos_denied_only_when_disarmed() {
+        let expr = Expr::chaos_kill();
+        let armed = run(&expr, &GlobalsSpec::Auto, &FutureOpts::new(), &AnalysisConfig::new());
+        let d = armed.iter().find(|d| d.code == LintCode::ChaosInjection).expect("visible in lint");
+        assert_eq!(d.severity, Severity::Allow);
+        let disarmed =
+            run(&expr, &GlobalsSpec::Auto, &FutureOpts::new(), &AnalysisConfig::hardened());
+        let d = disarmed.iter().find(|d| d.code == LintCode::ChaosInjection).expect("flagged");
+        assert_eq!(d.severity, Severity::Deny);
+        // Enforcement path: armed config emits nothing for chaos.
+        let enforced = analyze(
+            &expr,
+            &Env::new(),
+            &GlobalsSpec::Auto,
+            &FutureOpts::new(),
+            &facts(),
+            &AnalysisConfig::new(),
+        );
+        assert!(!codes(&enforced).contains(&LintCode::ChaosInjection));
+    }
+
+    #[test]
+    fn plan_cross_check_shapes() {
+        let expr = Expr::lit(1i64);
+        let hazard = SessionFacts {
+            derived: true,
+            max_workers: Some(2),
+            topology_levels: 1,
+            ..SessionFacts::default()
+        };
+        let diags = lint(
+            &expr,
+            &Env::new(),
+            &GlobalsSpec::Auto,
+            &FutureOpts::new(),
+            &hazard,
+            &AnalysisConfig::new(),
+        );
+        assert!(codes(&diags).contains(&LintCode::DeadlockHazard), "{diags:?}");
+        // queued() admission defuses the hazard.
+        let diags = lint(
+            &expr,
+            &Env::new(),
+            &GlobalsSpec::Auto,
+            &FutureOpts::new().queued(),
+            &hazard,
+            &AnalysisConfig::new(),
+        );
+        assert!(!codes(&diags).contains(&LintCode::DeadlockHazard), "{diags:?}");
+
+        let opts = FutureOpts::new().deadline(Duration::from_millis(1));
+        let diags =
+            lint(&expr, &Env::new(), &GlobalsSpec::Auto, &opts, &facts(), &AnalysisConfig::new());
+        assert!(codes(&diags).contains(&LintCode::DeadlineHeartbeat), "{diags:?}");
+
+        let tail = SessionFacts { depth: 2, topology_levels: 1, ..SessionFacts::default() };
+        let diags = lint(
+            &expr,
+            &Env::new(),
+            &GlobalsSpec::Auto,
+            &FutureOpts::new(),
+            &tail,
+            &AnalysisConfig::new(),
+        );
+        let d = diags.iter().find(|d| d.code == LintCode::TopologyTail).expect("flagged");
+        assert_eq!(d.severity, Severity::Allow);
+    }
+
+    #[test]
+    fn capture_typos_both_directions() {
+        let expr = Expr::add(Expr::var("weights"), Expr::lit(1.0));
+        // Misspelled explicit name: useless capture AND missing free var.
+        let spec = GlobalsSpec::Explicit(vec!["wieghts".to_string()]);
+        let diags = run(&expr, &spec, &FutureOpts::new(), &AnalysisConfig::new());
+        let hits: Vec<&Diagnostic> =
+            diags.iter().filter(|d| d.code == LintCode::UselessCapture).collect();
+        assert_eq!(hits.len(), 2, "{diags:?}");
+        assert!(hits.iter().any(|d| d.path == "globals['wieghts']"));
+        assert!(hits.iter().any(|d| d.path == "globals['weights']"));
+        // AutoPlus extra with a DynLookup present is the documented fix,
+        // not a typo.
+        let dyn_expr = Expr::dyn_lookup(Expr::lit("k"));
+        let spec = GlobalsSpec::AutoPlus(vec!["k".to_string()]);
+        let diags = run(&dyn_expr, &spec, &FutureOpts::new(), &AnalysisConfig::new());
+        assert!(!codes(&diags).contains(&LintCode::UselessCapture), "{diags:?}");
+        // Correct explicit list is clean.
+        let spec = GlobalsSpec::Explicit(vec!["weights".to_string()]);
+        let diags = run(&expr, &spec, &FutureOpts::new(), &AnalysisConfig::new());
+        assert!(!codes(&diags).contains(&LintCode::UselessCapture), "{diags:?}");
+    }
+
+    #[test]
+    fn analyze_filters_allowed_lint_keeps_them() {
+        let expr = Expr::runif(2); // unseeded → Allow by default
+        let all = lint(
+            &expr,
+            &Env::new(),
+            &GlobalsSpec::Auto,
+            &FutureOpts::new(),
+            &facts(),
+            &AnalysisConfig::new(),
+        );
+        assert!(codes(&all).contains(&LintCode::UnseededRng));
+        let enforced = analyze(
+            &expr,
+            &Env::new(),
+            &GlobalsSpec::Auto,
+            &FutureOpts::new(),
+            &facts(),
+            &AnalysisConfig::new(),
+        );
+        assert!(enforced.is_empty(), "{enforced:?}");
+    }
+
+    #[test]
+    fn diagnostic_display_is_greppable() {
+        let d = Diagnostic {
+            code: LintCode::ExportSize,
+            severity: Severity::Deny,
+            path: "globals".to_string(),
+            message: "too big".to_string(),
+            help: "shrink it".to_string(),
+        };
+        let s = d.to_string();
+        assert!(s.contains("export-size") && s.contains("deny") && s.contains("shrink it"), "{s}");
+    }
+}

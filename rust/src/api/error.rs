@@ -98,6 +98,14 @@ pub enum FutureError {
     /// "failed N times on N different workers".
     Retried { attempts: u32, last: Box<FutureError> },
 
+    /// Plan-time static analysis refused to create the future: at least
+    /// one lint resolved to `Deny` under the session's
+    /// [`crate::analysis::AnalysisConfig`].  Raised *before* any capacity
+    /// lease is taken or any worker is contacted, so a rejected future
+    /// costs nothing but the analysis itself.  Carries every denied
+    /// diagnostic (code, path, message, help).
+    Rejected { diagnostics: Vec<crate::analysis::Diagnostic> },
+
     /// An evaluation error relayed through `value()`.  Kept in this enum so
     /// `value()` has a single error type; pattern-match to distinguish —
     /// everything else is an infrastructure failure.
@@ -136,6 +144,19 @@ impl fmt::Display for FutureError {
             }
             FutureError::Retried { attempts, last } => {
                 write!(f, "FutureError: failed after {attempts} attempts (retry exhausted): {last}")
+            }
+            FutureError::Rejected { diagnostics } => {
+                let codes: Vec<&str> =
+                    diagnostics.iter().map(|d| d.code.as_str()).collect();
+                write!(
+                    f,
+                    "FutureError: rejected by static analysis [{}]",
+                    codes.join(", ")
+                )?;
+                if let Some(first) = diagnostics.first() {
+                    write!(f, ": {} (help: {})", first.message, first.help)?;
+                }
+                Ok(())
             }
             FutureError::Eval(e) => write!(f, "{e}"),
         }
@@ -268,6 +289,25 @@ mod tests {
             attempts: 1,
         };
         assert!(one.to_string().contains("1 attempt)"), "{one}");
+    }
+
+    #[test]
+    fn rejected_lists_codes_and_first_help() {
+        use crate::analysis::{Diagnostic, LintCode, Severity};
+        let e = FutureError::Rejected {
+            diagnostics: vec![Diagnostic {
+                code: LintCode::ExportSize,
+                severity: Severity::Deny,
+                path: "globals".into(),
+                message: "estimated export is 9001 bytes".into(),
+                help: "shrink the capture".into(),
+            }],
+        };
+        assert!(!e.is_eval(), "a rejection is framework policy, not user code");
+        assert!(!e.is_recoverable(), "relaunching the same future is rejected again");
+        let msg = e.to_string();
+        assert!(msg.contains("export-size"), "{msg}");
+        assert!(msg.contains("shrink the capture"), "{msg}");
     }
 
     #[test]

@@ -26,7 +26,7 @@
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, SystemTime, UNIX_EPOCH};
 
-use crate::api::conditions::{relay, Condition, ConditionKind};
+use crate::api::conditions::{relay, relay_immediate, Condition, ConditionKind};
 use crate::api::env::Env;
 use crate::api::error::{EvalError, FutureError};
 use crate::api::expr::Expr;
@@ -225,24 +225,62 @@ pub fn future(expr: Expr, env: &Env) -> Result<Future, FutureError> {
 pub fn future_with(expr: Expr, env: &Env, opts: FutureOpts) -> Result<Future, FutureError> {
     let session = session::current();
     session.ensure_open()?;
-    // Per-session in-flight quota (SessionLimits::max_in_flight): blocks —
-    // never drops — while the session has that many unresolved futures
-    // outstanding.  The permit frees on the future's first terminal
-    // transition, or when it is dropped.
-    let permit = crate::capacity::admit_in_flight(session.origin_id());
-    let id = session.next_future_id();
-    let created_ns = now_ns();
 
     // 1. Identify and snapshot globals (creation-time capture).
     let globals = identify_globals(&expr, env, &opts.globals)?;
 
-    // 2. Deterministic RNG stream index by creation order — per session,
+    // 2. Plan-time static analysis — BEFORE the capacity ledger is
+    //    touched, so a denied future costs no in-flight permit, no slot
+    //    lease, and no worker round trip.  Deny → structured rejection;
+    //    Warn → relayed through the conditions plane and counted per
+    //    session (`rustures.analysis.v1`).  Allow findings are skipped
+    //    inside `analyze`, so a clean run is bit-identical to a disabled
+    //    analyzer.
+    let depth = current_depth();
+    let config = session.analysis_config();
+    if config.enabled {
+        let facts = session.analysis_facts(depth);
+        let diagnostics =
+            crate::analysis::analyze(&expr, &globals, &opts.globals, &opts, &facts, &config);
+        if !diagnostics.is_empty() {
+            let origin = session.origin_id();
+            let denied: Vec<crate::analysis::Diagnostic> = diagnostics
+                .iter()
+                .filter(|d| d.severity == crate::analysis::Severity::Deny)
+                .cloned()
+                .collect();
+            if !denied.is_empty() {
+                for d in &denied {
+                    crate::metrics::record_analysis(origin, d.code.as_str(), true);
+                }
+                return Err(FutureError::Rejected { diagnostics: denied });
+            }
+            // All remaining findings are Warn severity.
+            for d in &diagnostics {
+                crate::metrics::record_analysis(origin, d.code.as_str(), false);
+                relay_immediate(&Condition {
+                    kind: ConditionKind::Warning,
+                    message: d.to_string(),
+                    seq: 0,
+                });
+            }
+        }
+    }
+
+    // 3. Per-session in-flight quota (SessionLimits::max_in_flight):
+    //    blocks — never drops — while the session has that many
+    //    unresolved futures outstanding.  The permit frees on the
+    //    future's first terminal transition, or when it is dropped.
+    let permit = crate::capacity::admit_in_flight(session.origin_id());
+    let id = session.next_future_id();
+    let created_ns = now_ns();
+
+    // 4. Deterministic RNG stream index by creation order — per session,
     //    so concurrent sessions assign streams independently.
     let ordinal = session.next_ordinal();
     let stream_index = opts.stream_index.unwrap_or(ordinal);
 
-    // 3. Backend + serialized session context for the current depth.
-    let depth = current_depth();
+    // 5. Backend + serialized session context for the current depth.
     let backend = session.backend_for_depth(depth)?;
     let context = session.context_for_depth(depth);
 

@@ -84,6 +84,11 @@ struct Core {
     /// collection-side concern (the deadline clock runs on the caller), so
     /// it is NOT shipped inside the [`SessionContext`].
     default_deadline: Option<std::time::Duration>,
+    /// Plan-time static-analysis policy for futures created under this
+    /// session (see [`crate::analysis`]).  A creation-side concern — the
+    /// analyzer runs where `future_with` runs — so, like the deadline
+    /// default, it is NOT shipped inside the [`SessionContext`].
+    analysis: crate::analysis::AnalysisConfig,
 }
 
 struct Inner {
@@ -205,7 +210,12 @@ impl Session {
             inner: Arc::new(Inner {
                 id,
                 origin: id,
-                core: RwLock::new(Core { topology, retry, default_deadline: None }),
+                core: RwLock::new(Core {
+                    topology,
+                    retry,
+                    default_deadline: None,
+                    analysis: crate::analysis::AnalysisConfig::default(),
+                }),
                 backends: Mutex::new(HashMap::new()),
                 counter: AtomicU64::new(counter_base),
                 closed: AtomicBool::new(false),
@@ -265,6 +275,7 @@ impl Session {
                     topology: ctx.nested_plan.clone(),
                     retry: ctx.retry.clone(),
                     default_deadline: None,
+                    analysis: crate::analysis::AnalysisConfig::default(),
                 }),
                 backends: Mutex::new(HashMap::new()),
                 counter: AtomicU64::new(ctx.counter_base),
@@ -405,6 +416,55 @@ impl Session {
     /// The session-wide deadline default, if any.
     pub fn default_deadline(&self) -> Option<std::time::Duration> {
         self.inner.core.read().unwrap().default_deadline
+    }
+
+    // --------------------------------------------------------- analysis ----
+
+    /// Replace this session's plan-time static-analysis policy: per-code
+    /// severities, export budget, chaos arming (see
+    /// [`crate::analysis::AnalysisConfig`]).  Applies to every future
+    /// created under this session afterwards.
+    pub fn set_analysis_config(&self, config: crate::analysis::AnalysisConfig) {
+        self.inner.core.write().unwrap().analysis = config;
+    }
+
+    /// This session's static-analysis policy (a snapshot).
+    pub fn analysis_config(&self) -> crate::analysis::AnalysisConfig {
+        self.inner.core.read().unwrap().analysis.clone()
+    }
+
+    /// The session-side facts the analyzer's plan cross-check pass needs,
+    /// assembled without instantiating any backend.
+    pub(crate) fn analysis_facts(&self, depth: u32) -> crate::analysis::SessionFacts {
+        crate::analysis::SessionFacts {
+            derived: self.inner.id != self.inner.origin,
+            depth,
+            topology_levels: self.inner.core.read().unwrap().topology.len(),
+            max_workers: self.limits().max_workers,
+            default_deadline: self.default_deadline(),
+        }
+    }
+
+    /// Run the full static analyzer over `(expr, env, opts)` under this
+    /// session's plan and policy WITHOUT creating a future: no capacity
+    /// lease, no metrics, no relayed conditions — just the diagnostics,
+    /// including `Allow`-severity findings that enforcement would skip.
+    ///
+    /// Globals are identified best-effort: a
+    /// [`crate::api::globals::GlobalsSpec`]-level failure
+    /// (missing explicit name) simply yields an empty capture here, since
+    /// the capture-typo pass reports the underlying problem as a
+    /// diagnostic anyway.
+    pub fn lint(
+        &self,
+        expr: &Expr,
+        env: &crate::api::env::Env,
+        opts: &crate::api::future::FutureOpts,
+    ) -> Vec<crate::analysis::Diagnostic> {
+        let globals = crate::api::globals::identify_globals(expr, env, &opts.globals)
+            .unwrap_or_else(|_| crate::api::env::Env::new());
+        let facts = self.analysis_facts(crate::api::plan::current_depth());
+        crate::analysis::lint(expr, &globals, &opts.globals, opts, &facts, &self.analysis_config())
     }
 
     // --------------------------------------------------------- counters ----

@@ -18,6 +18,7 @@ use crate::api::future::{
 };
 use crate::api::globals::GlobalsSpec;
 use crate::api::plan::{current_topology, with_plan_topology, PlanSpec};
+use crate::api::session::Session;
 use crate::api::value::{Tensor, Value};
 use crate::backend::supervisor::RetryPolicy;
 use crate::mapreduce::{future_lapply, Chunking, LapplyOpts};
@@ -890,6 +891,92 @@ fn check_nested_protection() -> Result<(), String> {
     Ok(())
 }
 
+/// A Deny-configured lint must reject identically on EVERY backend — at
+/// creation, before any capacity lease or worker round trip.  Probes with
+/// an export-size budget far below a ~16KB tensor capture.
+fn check_analysis_deny_rejects_before_launch() -> Result<(), String> {
+    use crate::analysis::{AnalysisConfig, LintCode, Severity};
+    let s = Session::with_plan(ambient_plan());
+    s.set_analysis_config(AnalysisConfig::new().max_globals_size(64));
+    let mut env = Env::new();
+    env.insert("payload", Tensor::new(vec![64, 64], vec![0.5f32; 4096]).unwrap());
+    let got = s.scope(|_| future(Expr::prim(PrimOp::Sum, vec![Expr::var("payload")]), &env));
+    let outcome = match got {
+        Err(FutureError::Rejected { diagnostics }) => {
+            if diagnostics
+                .iter()
+                .any(|d| d.code == LintCode::ExportSize && d.severity == Severity::Deny)
+            {
+                Ok(())
+            } else {
+                err(format!("rejected without the export-size diagnostic: {diagnostics:?}"))
+            }
+        }
+        Ok(_) => err("oversized export must be rejected at creation"),
+        Err(other) => err(format!("expected FutureError::Rejected, got: {other}")),
+    };
+    // No lease was ever taken: the denial happened before admission.
+    let peak = crate::capacity::session_peak_in_use(s.id());
+    let denies = crate::metrics::session_analysis_counters(s.id()).denies;
+    s.close();
+    outcome?;
+    expect_eq(peak, 0, "denied create must not touch the capacity ledger")?;
+    expect_eq(denies, 1, "denial counted once in rustures.analysis.v1")
+}
+
+/// A Warn-configured run must be bit-identical to an Allow run:
+/// diagnostics relay conditions and bump counters but never perturb
+/// values or RNG streams.
+fn check_analysis_warn_bit_identical_to_allow() -> Result<(), String> {
+    use crate::analysis::{AnalysisConfig, LintCode, Severity};
+    let spec = ambient_plan();
+    // Duplicate RNG substream indices: a real hygiene lint, yet the
+    // seeded result is deterministic, so runs are comparable.
+    let body = Expr::list(vec![
+        Expr::with_rng_stream(7, Expr::runif(2)),
+        Expr::with_rng_stream(7, Expr::runif(2)),
+    ]);
+    let run = |sev: Severity| -> Result<(Value, u64), String> {
+        let s = Session::with_plan(spec.clone());
+        s.set_analysis_config(AnalysisConfig::new().set(LintCode::DuplicateRngStream, sev));
+        let v = s
+            .scope(|_| {
+                let f = future_with(body.clone(), &Env::new(), FutureOpts::new().seed(1234))
+                    .map_err(|e| e.to_string())?;
+                f.value().map_err(|e| e.to_string())
+            })?;
+        let warns = crate::metrics::session_analysis_counters(s.id()).warns;
+        s.close();
+        Ok((v, warns))
+    };
+    let (warned, warn_count) = run(Severity::Warn)?;
+    let (allowed, allow_count) = run(Severity::Allow)?;
+    expect_eq(warned, allowed, "Warn run bit-identical to Allow run")?;
+    if warn_count == 0 {
+        return err("Warn run must count the diagnostic in rustures.analysis.v1");
+    }
+    expect_eq(allow_count, 0, "Allow run must count nothing")
+}
+
+/// Outside a chaos-armed session (`AnalysisConfig::hardened`), fault
+/// injection is denied at creation on every backend.
+fn check_analysis_chaos_denied_when_disarmed() -> Result<(), String> {
+    use crate::analysis::{AnalysisConfig, LintCode};
+    let s = Session::with_plan(ambient_plan());
+    s.set_analysis_config(AnalysisConfig::hardened());
+    let got = s.scope(|_| future(Expr::chaos_kill(), &Env::new()));
+    s.close();
+    match got {
+        Err(FutureError::Rejected { diagnostics })
+            if diagnostics.iter().any(|d| d.code == LintCode::ChaosInjection) =>
+        {
+            Ok(())
+        }
+        Err(other) => err(format!("expected chaos-injection rejection, got: {other}")),
+        Ok(_) => err("hardened session must deny chaos injection at creation"),
+    }
+}
+
 /// All conformance checks.
 pub fn checks() -> Vec<Check> {
     vec![
@@ -1028,6 +1115,21 @@ pub fn checks() -> Vec<Check> {
             name: "nested-protection",
             what: "nested topology ships to workers",
             run: check_nested_protection,
+        },
+        Check {
+            name: "analysis-deny",
+            what: "Deny lint rejects at creation: no lease, structured diagnostics",
+            run: check_analysis_deny_rejects_before_launch,
+        },
+        Check {
+            name: "analysis-warn-bit-identical",
+            what: "Warn run bit-identical to Allow run; diagnostics only counted/relayed",
+            run: check_analysis_warn_bit_identical_to_allow,
+        },
+        Check {
+            name: "analysis-chaos-deny",
+            what: "hardened (chaos-disarmed) session denies ChaosKill at creation",
+            run: check_analysis_chaos_denied_when_disarmed,
         },
     ]
 }

@@ -25,7 +25,10 @@
 //!   determinism-preserving retry ([`backend::supervisor`]),
 //! * capacity-governed execution — one ledger for every execution slot:
 //!   per-session quotas, per-host respawn budgets, circuit breakers
-//!   ([`capacity`]).
+//!   ([`capacity`]),
+//! * plan-time static analysis — a multi-pass linter (export-size
+//!   budgets, RNG hygiene, opacity traps, plan cross-checks) that rejects
+//!   or flags bad futures before they cost anything ([`analysis`]).
 //!
 //! Compute payloads (the paper's `slow_fcn`) are JAX/Pallas programs
 //! AOT-lowered to HLO text and executed through PJRT by [`runtime`] — Python
@@ -46,6 +49,7 @@
 //! assert_eq!(f.value().unwrap(), Value::from(42.0));
 //! ```
 
+pub mod analysis;
 pub mod api;
 pub mod backend;
 pub mod capacity;
@@ -62,6 +66,7 @@ pub mod worker;
 
 /// One-stop imports for examples and downstream users.
 pub mod prelude {
+    pub use crate::analysis::{AnalysisConfig, Diagnostic, LintCode, Severity};
     pub use crate::api::conditions::{Condition, ConditionKind};
     pub use crate::api::either::future_either;
     pub use crate::api::env::Env;

@@ -201,6 +201,13 @@ pub fn chunk_count(n: usize, workers: usize, chunking: Chunking) -> usize {
 /// or worker count.  Chunk results are harvested **as they complete** (see
 /// the module docs) unless [`LapplyOpts::in_order`] asks for the historical
 /// strictly-ordered collect; the output is bit-identical either way.
+///
+/// Every chunk future passes through the session's plan-time static
+/// analyzer (see [`crate::analysis`]) like any other create: a `Deny`
+/// lint — say an oversized global capture — rejects the whole map at the
+/// first chunk with [`FutureError::Rejected`], *before* any worker round
+/// trip, so misconfiguration surfaces once at plan time instead of N
+/// times at eval time.
 pub fn future_lapply(
     xs: &[Value],
     param: &str,
@@ -456,6 +463,37 @@ mod tests {
                 assert_eq!(streamed, ordered, "{chunking:?}");
             }
         });
+    }
+
+    #[test]
+    fn lapply_denied_by_analysis_rejects_before_any_launch() {
+        use crate::analysis::{AnalysisConfig, LintCode};
+        use crate::api::session::Session;
+        use crate::api::value::Tensor;
+        let s = Session::with_plan(PlanSpec::multicore(2));
+        s.set_analysis_config(AnalysisConfig::new().max_globals_size(64));
+        let mut env = Env::new();
+        env.insert("big", Tensor::new(vec![1024], vec![1.0f32; 1024]).unwrap());
+        let body = Expr::add(
+            Expr::var("x"),
+            Expr::prim(crate::api::expr::PrimOp::Sum, vec![Expr::var("big")]),
+        );
+        let got = s.scope(|_| {
+            let opts = LapplyOpts::new().chunking(Chunking::ChunkSize(2));
+            future_lapply(&xs(8), "x", &body, &env, &opts)
+        });
+        match got {
+            Err(FutureError::Rejected { diagnostics }) => {
+                assert!(
+                    diagnostics.iter().any(|d| d.code == LintCode::ExportSize),
+                    "{diagnostics:?}"
+                );
+            }
+            other => panic!("expected Rejected at creation, got {other:?}"),
+        }
+        // The denial pre-empted admission entirely.
+        assert_eq!(crate::capacity::session_peak_in_use(s.id()), 0);
+        s.close();
     }
 
     #[test]

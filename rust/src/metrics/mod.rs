@@ -14,7 +14,7 @@
 //! [`supervision_json`] renders the whole picture in a stable JSON schema.
 
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{SystemTime, UNIX_EPOCH};
@@ -188,6 +188,9 @@ pub fn drop_session_scope(session: u64) {
     if let Some(map) = SCOPES.lock().unwrap().as_mut() {
         map.remove(&session);
     }
+    if let Some(map) = ANALYSIS.lock().unwrap().as_mut() {
+        map.remove(&session);
+    }
 }
 
 /// Per-session snapshot (all zeros for a session that never recorded).
@@ -313,6 +316,112 @@ pub fn supervision_json() -> String {
 /// see [`crate::capacity::capacity_json`] for the shape).
 pub fn capacity_json() -> String {
     crate::capacity::capacity_json()
+}
+
+// --------------------------------------------------- analysis counters ----
+
+/// Process-wide static-analysis totals (monotonic; mirror the per-session
+/// cells the way the supervision statics mirror [`CounterScope`]s).
+static ANALYSIS_DENIES: AtomicU64 = AtomicU64::new(0);
+static ANALYSIS_WARNS: AtomicU64 = AtomicU64::new(0);
+
+#[derive(Default)]
+struct AnalysisCell {
+    denies: u64,
+    warns: u64,
+    /// lint code → occurrences (denied + warned), sorted for stable JSON.
+    codes: BTreeMap<String, u64>,
+}
+
+/// session id → analysis counters, created on first record.
+static ANALYSIS: Mutex<Option<HashMap<u64, AnalysisCell>>> = Mutex::new(None);
+
+/// Snapshot of one session's static-analysis counters.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct AnalysisCounters {
+    /// Futures refused at creation (`FutureError::Rejected`); one count
+    /// per denied diagnostic.
+    pub denies: u64,
+    /// Warn-severity diagnostics relayed at creation.
+    pub warns: u64,
+    /// Per-lint-code occurrence counts (denied + warned), sorted by code.
+    pub codes: Vec<(String, u64)>,
+}
+
+/// Record one enforced diagnostic against `session` (the origin id).
+/// Called by `future_with`; `Session::lint` never records.
+pub fn record_analysis(session: u64, code: &str, denied: bool) {
+    if denied {
+        ANALYSIS_DENIES.fetch_add(1, Ordering::Relaxed);
+    } else {
+        ANALYSIS_WARNS.fetch_add(1, Ordering::Relaxed);
+    }
+    let mut guard = ANALYSIS.lock().unwrap();
+    let cell = guard.get_or_insert_with(HashMap::new).entry(session).or_default();
+    if denied {
+        cell.denies += 1;
+    } else {
+        cell.warns += 1;
+    }
+    *cell.codes.entry(code.to_string()).or_insert(0) += 1;
+}
+
+/// Process-wide (denies, warns) totals across every session (monotonic).
+pub fn analysis_totals() -> (u64, u64) {
+    (ANALYSIS_DENIES.load(Ordering::Relaxed), ANALYSIS_WARNS.load(Ordering::Relaxed))
+}
+
+/// Per-session snapshot (all zeros for a session that never recorded).
+pub fn session_analysis_counters(session: u64) -> AnalysisCounters {
+    let guard = ANALYSIS.lock().unwrap();
+    guard
+        .as_ref()
+        .and_then(|m| m.get(&session))
+        .map(|c| AnalysisCounters {
+            denies: c.denies,
+            warns: c.warns,
+            codes: c.codes.iter().map(|(k, v)| (k.clone(), *v)).collect(),
+        })
+        .unwrap_or_default()
+}
+
+/// The static-analysis counters as JSON, keyed per session — the metrics
+/// schema surface (`rustures.analysis.v1`):
+///
+/// ```json
+/// {"schema":"rustures.analysis.v1",
+///  "total":{"denies":2,"warns":5},
+///  "sessions":[{"session":3,"denies":2,"warns":0,
+///               "codes":{"export-size":2}}]}
+/// ```
+pub fn analysis_json() -> String {
+    let (denies, warns) = analysis_totals();
+    let mut out = format!(
+        "{{\"schema\":\"rustures.analysis.v1\",\"total\":{{\"denies\":{denies},\"warns\":{warns}}},\"sessions\":["
+    );
+    let guard = ANALYSIS.lock().unwrap();
+    let mut ids: Vec<u64> =
+        guard.as_ref().map(|m| m.keys().copied().collect()).unwrap_or_default();
+    ids.sort_unstable();
+    for (i, id) in ids.iter().enumerate() {
+        let cell = &guard.as_ref().unwrap()[id];
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"session\":{id},\"denies\":{},\"warns\":{},\"codes\":{{",
+            cell.denies, cell.warns
+        ));
+        for (j, (code, n)) in cell.codes.iter().enumerate() {
+            if j > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\"{code}\":{n}"));
+        }
+        out.push_str("}}");
+    }
+    out.push_str("]}");
+    out
 }
 
 fn now_ns() -> u64 {

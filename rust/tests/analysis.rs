@@ -1,0 +1,223 @@
+//! Plan-time static-analysis integration tests: the acceptance gates for
+//! the analyzer subsystem.
+//!
+//! * A Deny-configured lint rejects at creation with structured
+//!   diagnostics — no capacity lease, no worker round trip (asserted via
+//!   the capacity ledger AND `metrics::capacity_json()`).
+//! * An Allow run is bit-identical to a run with analysis disabled.
+//! * A Warn run relays the diagnostic through the conditions plane and
+//!   counts it in `rustures.analysis.v1` — without perturbing values.
+//! * `Session::lint` is a pure probe: full diagnostics, zero side effects.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use rustures::api::conditions::{set_sink, RecordingSink};
+use rustures::api::globals::GlobalsSpec;
+use rustures::prelude::*;
+
+/// The condition sink is process-global; tests that install a
+/// `RecordingSink` take this lock so parallel test threads cannot steal
+/// each other's relayed diagnostics.
+static SINK_LOCK: Mutex<()> = Mutex::new(());
+
+/// A future whose single global is a ~16KB tensor — far over a 64-byte
+/// budget, far under the 500MiB default.
+fn oversized(env: &mut Env) -> Expr {
+    env.insert("payload", Tensor::new(vec![64, 64], vec![0.5f32; 4096]).unwrap());
+    Expr::prim(PrimOp::Sum, vec![Expr::var("payload")])
+}
+
+#[test]
+fn deny_rejects_at_creation_with_no_capacity_lease() {
+    let s = Session::with_plan(PlanSpec::multicore(2));
+    s.set_analysis_config(AnalysisConfig::new().max_globals_size(64));
+    let mut env = Env::new();
+    let expr = oversized(&mut env);
+
+    let got = s.scope(|_| future(expr, &env));
+    let diagnostics = match got {
+        Err(FutureError::Rejected { diagnostics }) => diagnostics,
+        other => panic!("expected FutureError::Rejected, got {other:?}"),
+    };
+    assert!(
+        diagnostics
+            .iter()
+            .any(|d| d.code == LintCode::ExportSize && d.severity == Severity::Deny),
+        "{diagnostics:?}"
+    );
+
+    // The rejection happened before admission: the ledger never saw this
+    // session.  Check both the typed API and the JSON metrics surface.
+    assert_eq!(rustures::capacity::session_peak_in_use(s.id()), 0);
+    let cap = rustures::metrics::capacity_json();
+    let doc = rustures::util::json::parse(&cap).expect("valid capacity JSON");
+    let sessions = doc.get("sessions").unwrap().as_arr().unwrap();
+    assert!(
+        !sessions
+            .iter()
+            .any(|e| e.get("session").and_then(|v| v.as_i64()) == Some(s.id() as i64)),
+        "denied session must not appear in the capacity ledger: {cap}"
+    );
+
+    // Counted in the analysis metrics surface.
+    let counters = rustures::metrics::session_analysis_counters(s.id());
+    assert_eq!(counters.denies, 1);
+    assert!(counters.codes.iter().any(|(c, n)| c == "export-size" && *n == 1));
+    let json = rustures::metrics::analysis_json();
+    assert!(json.contains("\"schema\":\"rustures.analysis.v1\""), "{json}");
+    assert!(json.contains(&format!("\"session\":{}", s.id())), "{json}");
+    s.close();
+}
+
+#[test]
+fn allow_run_is_bit_identical_to_disabled_analysis() {
+    // Seeded draw + payload sum: deterministic, so the two runs compare
+    // bit-for-bit.
+    let run = |config: AnalysisConfig| -> Value {
+        let s = Session::with_plan(PlanSpec::sequential());
+        s.set_analysis_config(config);
+        let mut env = Env::new();
+        env.insert("payload", Tensor::new(vec![64, 64], vec![0.5f32; 4096]).unwrap());
+        let expr = Expr::list(vec![
+            Expr::prim(PrimOp::Sum, vec![Expr::var("payload")]),
+            Expr::runif(4),
+        ]);
+        let v = s
+            .scope(|_| {
+                let f = future_with(expr, &env, FutureOpts::new().seed(7)).unwrap();
+                f.value().unwrap()
+            });
+        s.close();
+        v
+    };
+    // Budget of 64 bytes would deny — Allow overrides the severity, so
+    // the same over-budget future must run untouched.
+    let allowed =
+        run(AnalysisConfig::new().max_globals_size(64).allow(LintCode::ExportSize));
+    let disabled = run(AnalysisConfig::disabled());
+    assert_eq!(allowed, disabled);
+}
+
+#[test]
+fn warn_is_relayed_and_counted_without_perturbing_the_value() {
+    let _sink = SINK_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let s = Session::with_plan(PlanSpec::sequential());
+    s.set_analysis_config(
+        AnalysisConfig::new().warn(LintCode::ExportSize).max_globals_size(64),
+    );
+    let mut env = Env::new();
+    let expr = oversized(&mut env);
+
+    let rec = RecordingSink::new();
+    set_sink(Some(Box::new(rec.clone())));
+    let v = s.scope(|_| future(expr, &env).unwrap().value().unwrap());
+    set_sink(None);
+
+    assert_eq!(v, Value::F64(4096.0 * 0.5));
+    assert!(
+        rec.conditions()
+            .iter()
+            .any(|c| c.kind == ConditionKind::Warning && c.message.contains("export-size")),
+        "warn diagnostic must be relayed through the conditions plane: {:?}",
+        rec.conditions()
+    );
+    let counters = rustures::metrics::session_analysis_counters(s.id());
+    assert_eq!(counters.warns, 1);
+    assert_eq!(counters.denies, 0);
+    s.close();
+}
+
+#[test]
+fn session_lint_probes_without_side_effects() {
+    let s = Session::with_plan(PlanSpec::sequential());
+    s.set_default_deadline(Some(Duration::from_millis(1)));
+    let env = Env::new();
+    // Unseeded draws (Allow by default — only lint shows it) plus a
+    // deadline below the heartbeat interval (Warn by default).
+    let diags = s.scope(|_| s.lint(&Expr::runif(2), &env, &FutureOpts::new()));
+    assert!(
+        diags.iter().any(|d| d.code == LintCode::UnseededRng && d.severity == Severity::Allow),
+        "{diags:?}"
+    );
+    assert!(diags.iter().any(|d| d.code == LintCode::DeadlineHeartbeat), "{diags:?}");
+    // A pure probe: nothing counted, nothing admitted.
+    let counters = rustures::metrics::session_analysis_counters(s.id());
+    assert_eq!((counters.denies, counters.warns), (0, 0));
+    assert_eq!(rustures::capacity::session_peak_in_use(s.id()), 0);
+    s.close();
+}
+
+#[test]
+fn explicit_capture_typo_warns_at_creation_but_still_runs() {
+    let _sink = SINK_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let s = Session::with_plan(PlanSpec::sequential());
+    let mut env = Env::new();
+    env.insert("weights", 2.0f64);
+    env.insert("wieghts", 3.0f64); // the typo also exists in the env
+    let expr = Expr::mul(Expr::var("weights"), Expr::lit(10.0));
+    let opts = FutureOpts::new().globals(GlobalsSpec::Explicit(vec![
+        "weights".to_string(),
+        "wieghts".to_string(),
+    ]));
+
+    let rec = RecordingSink::new();
+    set_sink(Some(Box::new(rec.clone())));
+    let v = s.scope(|_| future_with(expr, &env, opts).unwrap().value().unwrap());
+    set_sink(None);
+
+    assert_eq!(v, Value::F64(20.0));
+    assert!(
+        rec.conditions().iter().any(|c| c.message.contains("useless-capture")
+            && c.message.contains("wieghts")),
+        "typo capture must warn at creation: {:?}",
+        rec.conditions()
+    );
+    assert_eq!(rustures::metrics::session_analysis_counters(s.id()).warns, 1);
+    s.close();
+}
+
+#[test]
+fn rejection_cost_is_zero_retries_and_replayable() {
+    // A rejected create must not enter the retry path: Rejected is not
+    // recoverable, so supervised relaunch loops cannot spin on it.
+    let e = FutureError::Rejected {
+        diagnostics: vec![Diagnostic {
+            code: LintCode::ExportSize,
+            severity: Severity::Deny,
+            path: "globals".into(),
+            message: "m".into(),
+            help: "h".into(),
+        }],
+    };
+    assert!(!e.is_recoverable());
+    assert!(!e.is_eval());
+    // Clone preserves the diagnostics (futures replay terminal errors).
+    match e.clone() {
+        FutureError::Rejected { diagnostics } => assert_eq!(diagnostics.len(), 1),
+        other => panic!("clone changed the error kind: {other:?}"),
+    }
+}
+
+#[test]
+fn default_config_stays_out_of_the_way() {
+    // The 500MiB default budget and Allow-heavy defaults must not reject
+    // or warn on an ordinary seeded future.
+    let s = Session::with_plan(PlanSpec::sequential());
+    let mut env = Env::new();
+    env.insert("x", 21.0f64);
+    let v = s
+        .scope(|_| {
+            let f = future_with(
+                Expr::mul(Expr::var("x"), Expr::lit(2.0)),
+                &env,
+                FutureOpts::new(),
+            )
+            .unwrap();
+            f.value().unwrap()
+        });
+    assert_eq!(v, Value::F64(42.0));
+    let counters = rustures::metrics::session_analysis_counters(s.id());
+    assert_eq!((counters.denies, counters.warns), (0, 0));
+    s.close();
+}

@@ -320,6 +320,113 @@ fn prop_env_subset_snapshot_independence() {
     });
 }
 
+/// Like [`gen_expr`] but never generates `DynLookup` — the one construct
+/// the optimistic static analysis is documented NOT to see through.
+fn gen_sound_expr(g: &mut Gen, depth: usize) -> Expr {
+    if depth == 0 {
+        return match g.usize_in(0, 1) {
+            0 => Expr::lit(gen_value(g, 1)),
+            _ => Expr::var(&g.ident()),
+        };
+    }
+    match g.usize_in(0, 10) {
+        0 => Expr::lit(gen_value(g, 1)),
+        1 => Expr::var(&g.ident()),
+        2 => Expr::let_in(&g.ident(), gen_sound_expr(g, depth - 1), gen_sound_expr(g, depth - 1)),
+        3 => Expr::seq((0..g.usize_in(1, 3)).map(|_| gen_sound_expr(g, depth - 1)).collect()),
+        4 => Expr::list((0..g.usize_in(0, 3)).map(|_| gen_sound_expr(g, depth - 1)).collect()),
+        5 => Expr::prim(
+            *g.choose(&[PrimOp::Add, PrimOp::Sub, PrimOp::Mul, PrimOp::Div, PrimOp::Sum]),
+            vec![gen_sound_expr(g, depth - 1), gen_sound_expr(g, depth - 1)],
+        ),
+        6 => Expr::if_else(
+            gen_sound_expr(g, depth - 1),
+            gen_sound_expr(g, depth - 1),
+            gen_sound_expr(g, depth - 1),
+        ),
+        7 => Expr::index(gen_sound_expr(g, depth - 1), gen_sound_expr(g, depth - 1)),
+        8 => Expr::call(&g.ident(), vec![gen_sound_expr(g, depth - 1)]),
+        9 => {
+            let n = g.usize_in(0, 4);
+            Expr::map_chunk(
+                &g.ident(),
+                Arc::new(gen_sound_expr(g, depth - 1)),
+                (0..n).map(|_| gen_value(g, 1)).collect(),
+                g.u64() % 10_000,
+            )
+        }
+        _ => Expr::with_rng_stream(g.u64() % 1000, gen_sound_expr(g, depth - 1)),
+    }
+}
+
+#[test]
+fn prop_eval_lookups_outside_dyn_lookup_contained_in_free_variables() {
+    // The analysis-soundness contract from api/globals.rs, machine-checked:
+    // bind exactly `free_variables(expr)` in the env and evaluate — no
+    // variable lookup may miss.  Evaluation is allowed to fail for other
+    // reasons (type errors, unknown kernels, out-of-bounds indexing,
+    // Stop), but never with an "object ... not found" lookup failure,
+    // because every reachable `Var` outside `DynLookup` is in the free set.
+    use rustures::api::conditions::CaptureBuffer;
+    use rustures::worker::eval::{evaluate, EvalCtx, RngCtx};
+    check("eval-lookups-in-free-vars", 250, |g| {
+        let expr = gen_sound_expr(g, 4);
+        let mut env = Env::new();
+        for name in free_variables(&expr) {
+            env.insert(&name, Value::I64(1));
+        }
+        let mut buf = CaptureBuffer::new();
+        let mut ctx = EvalCtx {
+            buffer: &mut buf,
+            rng: RngCtx::new(Some(1), 0),
+            kernels: None,
+            on_immediate: None,
+            liveness: None,
+            on_tick: None,
+        };
+        match evaluate(&expr, &env, &mut ctx) {
+            Ok(_) => Ok(()),
+            Err(e) if e.message.starts_with("object '") && e.message.contains("' not found") => {
+                Err(format!("lookup escaped free-variable analysis: {e:?} in {expr:?}"))
+            }
+            Err(_) => Ok(()),
+        }
+    });
+}
+
+#[test]
+fn prop_export_estimate_dominates_wire_encoding() {
+    // The export-size lint's contract: the static estimator may over-count
+    // but never under-counts what the wire layer would actually ship —
+    // expression tree (including DynLookup, chaos markers, packed chunk
+    // elements) plus the captured globals.
+    check("export-estimate-dominates", 200, |g| {
+        let expr = gen_expr(g, 4);
+        let mut env = Env::new();
+        let mut globals_wire = 0usize;
+        for _ in 0..g.usize_in(0, 4) {
+            let name = g.ident();
+            if env.contains(&name) {
+                continue; // keep the byte tally aligned with the env
+            }
+            let value = gen_value(g, 2);
+            let mut e = Encoder::new();
+            enc_value(&mut e, &value);
+            // Name framing on the wire is 4 length bytes + the bytes.
+            globals_wire += 4 + name.len() + e.into_bytes().len();
+            env.insert(&name, value);
+        }
+        let mut e = Encoder::new();
+        enc_expr(&mut e, &expr);
+        let wire = e.into_bytes().len() + globals_wire;
+        let est = rustures::analysis::estimate_export_size(&expr, &env);
+        if est < wire {
+            return Err(format!("estimate {est} under-counts wire {wire} for {expr:?}"));
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_relay_order_stdout_first_conditions_in_seq() {
     use rustures::api::conditions::{CaptureBuffer, ConditionKind};
