@@ -1,0 +1,167 @@
+//! E16 — wire protocol v6: bytes on the wire and codec cost.
+//!
+//! Measures the serialization substrate directly (no backend in the loop):
+//! encode/decode nanoseconds and bytes-on-wire for a task carrying one
+//! large tensor global, across four modes —
+//!
+//! * `raw-resend`     — uncompressed, uninterned: the v5-equivalent
+//!                      baseline every other mode is judged against.
+//! * `compressed`     — v6 per-frame codec, no interning (fresh ledger per
+//!                      send).
+//! * `interned-first` — interning on, first send to a seat (pays the
+//!                      provide: digest + blob + compression).
+//! * `interned-ref`   — interning on, steady state (the global collapses
+//!                      to a 17-byte reference).
+//!
+//! The PR 8 acceptance bar: at the 1 MB payload point, `compressed` and
+//! `interned-ref` bytes-on-wire MUST be strictly below `raw-resend`.
+//! Emits `BENCH_wire.json` (schema in BENCH.md); `scripts/bench.sh` runs
+//! this in smoke mode.
+
+mod common;
+
+use common::{fmt_dur, header, json_row, measure, row, scale_iters, write_bench_json, Json};
+use rustures::api::env::Env;
+use rustures::api::expr::{Expr, PrimOp};
+use rustures::api::value::{Tensor, Value};
+use rustures::ipc::intern::SeatLedger;
+use rustures::ipc::wire::{decode_message, encode_message_opts, encode_task_message_interned};
+use rustures::ipc::{Message, TaskOpts, TaskSpec};
+
+/// A task shipping one `payload_bytes`-sized f32 tensor global plus a
+/// small expression that uses it — the shape the paper's repeated-`lapply`
+/// workloads send per chunk.
+fn payload_task(payload_bytes: usize) -> TaskSpec {
+    let n = payload_bytes / 4;
+    // Slowly varying values: realistic enough that RLE has runs to find
+    // but the win comes from the lag-4 delta, not an all-zeros fluke.
+    let data: Vec<f32> = (0..n).map(|i| (i / 64) as f32).collect();
+    let mut globals = Env::new();
+    globals
+        .insert("weights", Value::Tensor(Tensor::new(vec![n], data).unwrap()));
+    TaskSpec {
+        id: "f-0-1".to_string(),
+        expr: Expr::prim(PrimOp::Sum, vec![Expr::var("weights")]),
+        globals,
+        opts: TaskOpts::default(),
+    }
+}
+
+struct Mode {
+    name: &'static str,
+    encode: fn(&TaskSpec) -> Vec<u8>,
+}
+
+fn enc_raw(t: &TaskSpec) -> Vec<u8> {
+    encode_message_opts(&Message::Task(t.clone()), false)
+}
+
+fn enc_compressed(t: &TaskSpec) -> Vec<u8> {
+    encode_message_opts(&Message::Task(t.clone()), true)
+}
+
+fn enc_interned_first(t: &TaskSpec) -> Vec<u8> {
+    // Fresh ledger: every send pays the provide.
+    let mut ledger = SeatLedger::new();
+    encode_task_message_interned(t, &mut ledger)
+}
+
+fn main() {
+    let iters = scale_iters(200);
+    let payloads: &[usize] = &[1 << 14, 1 << 17, 1 << 20]; // 16 KiB .. 1 MiB
+
+    header(
+        "E16: wire v6 bytes-on-wire + codec cost",
+        &["payload ", "mode          ", "bytes     ", "encode p50", "decode p50"],
+    );
+
+    let modes: &[Mode] = &[
+        Mode { name: "raw-resend", encode: enc_raw },
+        Mode { name: "compressed", encode: enc_compressed },
+        Mode { name: "interned-first", encode: enc_interned_first },
+    ];
+
+    let mut json_rows = Vec::new();
+    let mut emit = |payload: usize,
+                    mode: &str,
+                    bytes: usize,
+                    enc: common::Stats,
+                    dec: common::Stats,
+                    json_rows: &mut Vec<Json>| {
+        row(&[
+            format!("{:<8}", payload),
+            format!("{mode:<14}"),
+            format!("{bytes:>10}"),
+            format!("{:>10}", fmt_dur(enc.p50)),
+            format!("{:>10}", fmt_dur(dec.p50)),
+        ]);
+        json_rows.push(json_row(&[
+            ("payload_bytes", Json::Int(payload as i64)),
+            ("mode", Json::Str(mode.to_string())),
+            ("bytes_on_wire", Json::Int(bytes as i64)),
+            ("encode_ns_p50", Json::Int(enc.p50.as_nanos() as i64)),
+            ("encode_ns_mean", Json::Int(enc.mean.as_nanos() as i64)),
+            ("decode_ns_p50", Json::Int(dec.p50.as_nanos() as i64)),
+            ("decode_ns_mean", Json::Int(dec.mean.as_nanos() as i64)),
+            ("iters", Json::Int(enc.n as i64)),
+        ]));
+    };
+
+    for &payload in payloads {
+        let task = payload_task(payload);
+        for m in modes {
+            let frame = (m.encode)(&task);
+            let bytes = frame.len();
+            let enc = measure(2, iters, || {
+                std::hint::black_box((m.encode)(std::hint::black_box(&task)));
+            });
+            let dec = measure(2, iters, || {
+                // Decoded without a cache: these three modes never emit
+                // references (a fresh ledger's first send is all provides,
+                // which install into the decoder's own scratch cache).
+                std::hint::black_box(decode_message(std::hint::black_box(&frame)).unwrap());
+            });
+            emit(payload, m.name, bytes, enc, dec, &mut json_rows);
+        }
+
+        // Steady-state interning: one warm ledger, measure the Nth send.
+        let mut ledger = SeatLedger::new();
+        let first = encode_task_message_interned(&task, &mut ledger);
+        drop(first);
+        let frame = encode_task_message_interned(&task, &mut ledger);
+        let bytes = frame.len();
+        let enc = measure(2, iters, || {
+            std::hint::black_box(encode_task_message_interned(
+                std::hint::black_box(&task),
+                &mut ledger,
+            ));
+        });
+        // A reference-only frame needs the worker-side cache primed with
+        // the blob, exactly as a real worker's would be after the first
+        // frame: decode the provide frame into a cache, then measure.
+        let cache = rustures::ipc::intern::InternCache::new();
+        let provide_frame = {
+            let mut fresh = SeatLedger::new();
+            encode_task_message_interned(&task, &mut fresh)
+        };
+        rustures::ipc::wire::decode_message_cached(&provide_frame, Some(&cache)).unwrap();
+        let dec = measure(2, iters, || {
+            std::hint::black_box(
+                rustures::ipc::wire::decode_message_cached(
+                    std::hint::black_box(&frame),
+                    Some(&cache),
+                )
+                .unwrap(),
+            );
+        });
+        emit(payload, "interned-ref", bytes, enc, dec, &mut json_rows);
+    }
+
+    write_bench_json("wire", json_rows);
+    println!(
+        "\nshape check: at every payload point, compressed and interned-ref \
+         bytes_on_wire must sit strictly below raw-resend (interned-ref by \
+         orders of magnitude); encode/decode p50 for interned-ref must be \
+         payload-independent"
+    );
+}

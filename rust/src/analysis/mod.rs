@@ -309,10 +309,16 @@ fn value_upper(v: &Value) -> usize {
 /// is within budget, the encoded task is too. Machine-checked against
 /// `ipc::wire::enc_expr` by `prop_export_estimate_dominates_encoding`.
 pub fn estimate_export_size(expr: &Expr, globals: &Env) -> usize {
-    // Base margin for the task frame: id, opts, session context header.
-    let mut est = 128usize;
+    // Base margin for the task frame: v6 frame header (magic, version,
+    // kind, codec, varint length), provide-section count, id, opts,
+    // session context header.
+    let mut est = 256usize;
     for (name, value) in globals.iter() {
-        est += name.len() + 16 + value_upper(value);
+        // 56 dominates both wire shapes of a captured global: the plain
+        // encoding (name varint + value tag/length fields) and the v6
+        // interned shape (a 16-byte digest + varint blob length in the
+        // provide section PLUS a 17-byte reference slot in the record).
+        est += name.len() + 56 + value_upper(value);
     }
     expr.walk(&mut |e| {
         // Per-node margin dominating the wire tag plus any fixed-width

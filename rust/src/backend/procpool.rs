@@ -32,7 +32,8 @@ use crate::backend::supervisor::{supervisor_config, SupervisorConfig};
 use crate::backend::TaskHandle;
 use crate::capacity::{Acquired, PoolRegistration, RevivePolicy, SlotLease};
 use crate::ipc::frame::{read_message, write_message};
-use crate::ipc::{Message, TaskResult, TaskSpec};
+use crate::ipc::intern::{self, SeatLedger};
+use crate::ipc::{wire, Message, TaskResult, TaskSpec};
 
 /// A connected worker's coordinator-side seat: the write half + lifecycle.
 pub struct Seat {
@@ -42,16 +43,24 @@ pub struct Seat {
     host: String,
     writer: Box<dyn Write + Send>,
     child: Option<Child>,
+    /// Mirror of the worker's intern cache (protocol v6): which blob
+    /// digests this seat has already been sent.  A fresh seat starts
+    /// empty, so a respawned worker is never assumed to hold anything.
+    intern: SeatLedger,
 }
 
 impl Seat {
     fn send_task(&mut self, task: &TaskSpec) -> Result<(), FutureError> {
         // Encode from the reference — no clone of (possibly large) globals.
-        let payload = crate::ipc::wire::encode_task_message(task);
-        let len = payload.len() as u32;
+        // v6 frames are self-delimiting (varint body length in the header),
+        // so the historical u32 length prefix is gone.
+        let frame = if intern::session_interning(task.opts.context.session) {
+            wire::encode_task_message_interned(task, &mut self.intern)
+        } else {
+            wire::encode_task_message(task)
+        };
         self.writer
-            .write_all(&len.to_le_bytes())
-            .and_then(|_| self.writer.write_all(&payload))
+            .write_all(&frame)
             .and_then(|_| self.writer.flush())
             .map_err(|e| FutureError::Channel(format!("write failed: {e}")))
     }
@@ -293,7 +302,13 @@ impl ProcPool {
             .name(format!("rustures-reader-{id}"))
             .spawn(move || reader_loop(id, conn.reader, shared))
             .map_err(|e| FutureError::Launch(format!("spawn reader: {e}")))?;
-        Ok(Seat { id, host: host.to_string(), writer: conn.writer, child: conn.child })
+        Ok(Seat {
+            id,
+            host: host.to_string(),
+            writer: conn.writer,
+            child: conn.child,
+            intern: SeatLedger::new(),
+        })
     }
 
     /// Acquire a seat through the ledger and match it to an idle worker.
@@ -509,6 +524,20 @@ fn reader_loop(worker_id: u64, mut reader: Box<dyn Read + Send>, shared: Arc<Sha
         match msg {
             Ok(Some(Message::Hello { .. })) | Ok(Some(Message::Pong)) => continue,
             Ok(Some(Message::Heartbeat { .. })) => continue,
+            Ok(Some(Message::NeedBlob { digests })) => {
+                // The worker's intern cache is missing blobs our seat
+                // ledger thought it held (eviction skew, a mid-decode
+                // respawn): answer from the process-global store.
+                intern::note_need_blob();
+                if !serve_need_blob(worker_id, &shared, &digests) {
+                    close_worker(
+                        worker_id,
+                        &shared,
+                        FutureError::Channel("failed to answer NeedBlob".into()),
+                    );
+                    return;
+                }
+            }
             Ok(Some(Message::Immediate { condition, .. })) => {
                 relay_immediate(&condition);
             }
@@ -582,12 +611,49 @@ fn reader_loop(worker_id: u64, mut reader: Box<dyn Read + Send>, shared: Arc<Sha
             }
             Err(e) => {
                 // Frame-level failure — typically a worker killed MID-WRITE
-                // (truncated length prefix or body, corrupt bytes).  `e` is
+                // (truncated frame header or body, corrupt bytes).  `e` is
                 // already a structured `Channel` error; park it as such.
                 close_worker(worker_id, &shared, e);
                 return;
             }
         }
+    }
+}
+
+/// Answer a worker's `NeedBlob`: look each digest up in the process-global
+/// intern store and write a `Blob` frame back over the seat's writer.
+/// `bytes: None` (blob evicted from the store) still gets a frame — the
+/// worker fails its decode closed and the supervisor retries on a fresh
+/// seat.  A `NeedBlob` can only arrive while the worker decodes a task
+/// frame, so the seat is normally in the busy map; it may briefly still be
+/// `pending` (launch() owns the seat until its post-send bookkeeping) —
+/// a bounded retry covers that window.  Writes hold the pool lock, same as
+/// the cancel courtesy frame: the worker is parked in its recovery read
+/// loop, so the pipe drains.  Returns false if the seat never became
+/// reachable or a write failed.
+fn serve_need_blob(worker_id: u64, shared: &Shared, digests: &[intern::Digest]) -> bool {
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(2);
+    loop {
+        {
+            let mut inner = shared.inner.lock().unwrap();
+            if let Some((seat, _, _)) = inner.busy.get_mut(&worker_id) {
+                for d in digests {
+                    let bytes = intern::store_get(d).map(|a| (*a).clone());
+                    let msg = Message::Blob { digest: *d, bytes };
+                    if write_message(&mut seat.writer, &msg).is_err() {
+                        return false;
+                    }
+                }
+                return true;
+            }
+            if inner.shutting_down || !inner.pending.contains_key(&worker_id) {
+                return false;
+            }
+        }
+        if std::time::Instant::now() >= deadline {
+            return false;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(1));
     }
 }
 

@@ -977,6 +977,83 @@ fn check_analysis_chaos_denied_when_disarmed() -> Result<(), String> {
     }
 }
 
+/// Protocol v6 interning is a transport optimization, never a semantic
+/// one: a seeded lapply whose chunk body embeds a large (interned-size)
+/// literal is bit-identical with interning on and off, and on the
+/// process-seat backends the hot body is *transmitted* to each worker at
+/// most once — every later chunk frame carries a 17-byte reference.
+fn check_wire_v6_interning_bit_identical() -> Result<(), String> {
+    use crate::ipc::intern;
+    let spec = ambient_plan();
+    // The body ships a ~2.4 KB literal tensor (≥ INTERN_MIN encoded) so
+    // the MapChunk body interns, plus one seeded draw per element so
+    // bit-identity between runs is meaningful.
+    let big = Value::Tensor(Tensor::new(vec![600], vec![0.5f32; 600]).unwrap());
+    let body = Expr::seq(vec![
+        Expr::prim(PrimOp::Sum, vec![Expr::lit(big)]),
+        Expr::add(Expr::var("x"), Expr::runif(1)),
+    ]);
+    let xs: Vec<Value> = (0..8i64).map(Value::I64).collect();
+    let env = Env::new();
+    // ChunkSize(1): more chunks than workers, so references actually occur.
+    let opts = LapplyOpts::new().seed(7).chunking(Chunking::ChunkSize(1));
+
+    let run = |enabled: bool| -> Result<(Vec<Value>, intern::InternCounters), String> {
+        let s = Session::with_plan(spec.clone());
+        intern::set_session_interning(s.id(), enabled);
+        intern::reset_session_counters(s.id());
+        let got = s.lapply(&xs, "x", &body, &env, &opts).map_err(|e| e.to_string());
+        let counters = intern::session_counters(s.id());
+        let id = s.id();
+        s.close();
+        intern::clear_session(id);
+        Ok((got?, counters))
+    };
+    let (on, on_counters) = run(true)?;
+    let (off, off_counters) = run(false)?;
+    expect_eq(on, off, "interning on vs off")?;
+    expect_eq(
+        off_counters.provides + off_counters.refs,
+        0,
+        "disabled interning must not touch the intern path",
+    )?;
+
+    // Transmission-count accounting only exists where tasks cross a byte
+    // channel through a seat ledger (multisession pipes, cluster sockets);
+    // in-process and spool-file backends never enter the interning encoder.
+    let seat_bound = match &spec {
+        PlanSpec::Multiprocess { workers } if *workers > 0 => Some(*workers),
+        PlanSpec::Cluster { hosts } if !hosts.is_empty() => Some(hosts.len()),
+        PlanSpec::Multiprocess { .. } | PlanSpec::Cluster { .. } => Some(xs.len() - 1),
+        _ => None,
+    };
+    match seat_bound {
+        Some(bound) => {
+            let c = on_counters;
+            expect_eq(
+                (c.provides + c.refs) as usize,
+                xs.len(),
+                "every chunk frame is a provide or a reference",
+            )?;
+            if c.provides == 0 {
+                return err("at least one chunk must have provided the body blob");
+            }
+            if c.provides as usize > bound {
+                return err(format!(
+                    "body transmitted {} times for {bound} workers (must be ≤ once per seat)",
+                    c.provides
+                ));
+            }
+            Ok(())
+        }
+        None => expect_eq(
+            (on_counters.provides + on_counters.refs) as usize,
+            0,
+            "in-process/spool backends never intern",
+        ),
+    }
+}
+
 /// All conformance checks.
 pub fn checks() -> Vec<Check> {
     vec![
@@ -1130,6 +1207,11 @@ pub fn checks() -> Vec<Check> {
             name: "analysis-chaos-deny",
             what: "hardened (chaos-disarmed) session denies ChaosKill at creation",
             run: check_analysis_chaos_denied_when_disarmed,
+        },
+        Check {
+            name: "wire-v6-interning",
+            what: "interned lapply bit-identical to uninterned; hot body shipped at most once per seat",
+            run: check_wire_v6_interning_bit_identical,
         },
     ]
 }

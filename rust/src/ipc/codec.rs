@@ -1,0 +1,266 @@
+//! Per-frame compression codec (wire protocol v6).
+//!
+//! Stdlib-only, deterministic, and *stateless per frame*: every frame is
+//! compressed independently, so a concatenation of frames compresses to the
+//! concatenation of the per-frame outputs — the "linear under
+//! concatenation" property borrowed from the tagger `.tags.zst` design
+//! (WIRE.md §Codec is the normative description of this format).
+//!
+//! The transform is a lag-4 byte delta followed by run-length encoding.
+//! f32 tensor payloads are 4-byte-periodic, so constant (or slowly varying)
+//! tensors delta to long zero runs that RLE collapses; incompressible
+//! payloads fall back to the raw codec via [`maybe_compress`], which only
+//! selects compression when it is a strict byte win.
+
+/// Codec byte for an uncompressed frame body.
+pub const CODEC_RAW: u8 = 0;
+
+/// Codec byte for a lag-4 delta + RLE compressed frame body.
+pub const CODEC_DELTA_RLE: u8 = 1;
+
+/// Frame bodies below this size are never compressed (the codec framing
+/// overhead would dominate, and small frames are latency-sensitive).
+pub const COMPRESS_MIN: usize = 1024;
+
+/// The delta lag: f32 payloads repeat on a 4-byte period, so differencing
+/// against the byte 4 positions back turns constant tensors into zeros.
+const LAG: usize = 4;
+
+/// Minimum run length worth a Run op (a run op costs >= 3 bytes).
+const MIN_RUN: usize = 4;
+
+fn push_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            break;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+fn read_varint(bytes: &[u8], pos: &mut usize) -> Result<u64, &'static str> {
+    let mut out = 0u64;
+    let mut shift = 0u32;
+    loop {
+        if *pos >= bytes.len() {
+            return Err("truncated varint");
+        }
+        let b = bytes[*pos];
+        *pos += 1;
+        if shift >= 64 || (shift == 63 && (b & 0x7f) > 1) {
+            return Err("varint overflow");
+        }
+        out |= u64::from(b & 0x7f) << shift;
+        if b & 0x80 == 0 {
+            return Ok(out);
+        }
+        shift += 7;
+    }
+}
+
+/// Compress `raw` with the lag-4 delta + RLE codec.
+///
+/// Output layout: `varint raw_len` followed by ops until the deltas sum to
+/// exactly `raw_len` bytes. Op 0 = `Run { varint len, byte }`, op 1 =
+/// `Literal { varint len, bytes }`. Always succeeds; the output may be
+/// larger than the input for incompressible data (see [`maybe_compress`]).
+pub fn compress(raw: &[u8]) -> Vec<u8> {
+    let mut delta = Vec::with_capacity(raw.len());
+    for (i, &b) in raw.iter().enumerate() {
+        let prev = if i >= LAG { raw[i - LAG] } else { 0 };
+        delta.push(b.wrapping_sub(prev));
+    }
+    let mut out = Vec::with_capacity(raw.len() / 4 + 16);
+    push_varint(&mut out, raw.len() as u64);
+    let mut i = 0;
+    let mut lit_start = 0;
+    let flush_literal = |out: &mut Vec<u8>, lit: &[u8]| {
+        if !lit.is_empty() {
+            out.push(1);
+            push_varint(out, lit.len() as u64);
+            out.extend_from_slice(lit);
+        }
+    };
+    while i < delta.len() {
+        let b = delta[i];
+        let mut j = i + 1;
+        while j < delta.len() && delta[j] == b {
+            j += 1;
+        }
+        let run = j - i;
+        if run >= MIN_RUN {
+            flush_literal(&mut out, &delta[lit_start..i]);
+            out.push(0);
+            push_varint(&mut out, run as u64);
+            out.push(b);
+            lit_start = j;
+        }
+        i = j;
+    }
+    flush_literal(&mut out, &delta[lit_start..]);
+    out
+}
+
+/// Decompress a [`compress`] stream, rejecting malformed input.
+///
+/// `max_len` bounds the claimed raw length (callers pass the frame-size
+/// cap) so a tiny corrupt frame cannot demand an unbounded allocation.
+/// Every failure mode — truncated varints, unknown ops, ops that overrun
+/// or undershoot the declared length — is a clean `Err`, never a panic.
+pub fn decompress(bytes: &[u8], max_len: usize) -> Result<Vec<u8>, &'static str> {
+    let mut pos = 0;
+    let raw_len = read_varint(bytes, &mut pos)?;
+    if raw_len > max_len as u64 {
+        return Err("declared length exceeds frame cap");
+    }
+    let raw_len = raw_len as usize;
+    // Grow as ops arrive instead of trusting raw_len for the allocation.
+    let mut delta = Vec::with_capacity(raw_len.min(bytes.len().saturating_mul(8)));
+    while pos < bytes.len() {
+        let op = bytes[pos];
+        pos += 1;
+        let n = read_varint(bytes, &mut pos)? as usize;
+        if delta.len() + n > raw_len {
+            return Err("ops overrun declared length");
+        }
+        match op {
+            0 => {
+                if pos >= bytes.len() {
+                    return Err("truncated run byte");
+                }
+                let b = bytes[pos];
+                pos += 1;
+                delta.resize(delta.len() + n, b);
+            }
+            1 => {
+                if pos + n > bytes.len() {
+                    return Err("truncated literal");
+                }
+                delta.extend_from_slice(&bytes[pos..pos + n]);
+                pos += n;
+            }
+            _ => return Err("unknown codec op"),
+        }
+    }
+    if delta.len() != raw_len {
+        return Err("ops undershoot declared length");
+    }
+    // Undo the lag-4 delta in place: positions < LAG are stored raw.
+    let mut raw = delta;
+    for i in LAG..raw.len() {
+        raw[i] = raw[i].wrapping_add(raw[i - LAG]);
+    }
+    Ok(raw)
+}
+
+/// Pick the codec for a frame body: compress when the body is at least
+/// [`COMPRESS_MIN`] bytes *and* compression is a strict byte win, else ship
+/// raw. Deterministic, so encode → decode → encode is bit-stable.
+pub fn maybe_compress(body: Vec<u8>) -> (u8, Vec<u8>) {
+    if body.len() >= COMPRESS_MIN {
+        let c = compress(&body);
+        if c.len() < body.len() {
+            return (CODEC_DELTA_RLE, c);
+        }
+    }
+    (CODEC_RAW, body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::uuid::splitmix64;
+
+    fn roundtrip(raw: &[u8]) {
+        let c = compress(raw);
+        let back = decompress(&c, raw.len().max(1)).unwrap();
+        assert_eq!(back, raw);
+    }
+
+    #[test]
+    fn roundtrips_edge_cases() {
+        roundtrip(&[]);
+        roundtrip(&[7]);
+        roundtrip(&[1, 2, 3]);
+        roundtrip(&[0; 4]);
+        roundtrip(b"hello world, hello world, hello world");
+    }
+
+    #[test]
+    fn zeros_compress_to_under_one_percent() {
+        let raw = vec![0u8; 1 << 20];
+        let c = compress(&raw);
+        assert!(c.len() < raw.len() / 100, "{} bytes for 1MiB of zeros", c.len());
+        assert_eq!(decompress(&c, raw.len()).unwrap(), raw);
+    }
+
+    #[test]
+    fn constant_f32_pattern_compresses() {
+        // A constant non-zero tensor: every 4-byte group identical, so the
+        // lag-4 delta is zero everywhere past the first word.
+        let word = 1.5f32.to_le_bytes();
+        let raw: Vec<u8> = word.iter().copied().cycle().take(1 << 16).collect();
+        let c = compress(&raw);
+        assert!(c.len() < raw.len() / 50, "{} bytes", c.len());
+        assert_eq!(decompress(&c, raw.len()).unwrap(), raw);
+    }
+
+    #[test]
+    fn pseudorandom_bytes_roundtrip_and_fall_back_raw() {
+        let raw: Vec<u8> = (0..4096u64).map(|i| splitmix64(i) as u8).collect();
+        roundtrip(&raw);
+        let (codec, body) = maybe_compress(raw.clone());
+        assert_eq!(codec, CODEC_RAW, "incompressible data must ship raw");
+        assert_eq!(body, raw);
+    }
+
+    #[test]
+    fn maybe_compress_thresholds() {
+        let small = vec![0u8; COMPRESS_MIN - 1];
+        assert_eq!(maybe_compress(small.clone()), (CODEC_RAW, small));
+        let (codec, body) = maybe_compress(vec![0u8; COMPRESS_MIN]);
+        assert_eq!(codec, CODEC_DELTA_RLE);
+        assert!(body.len() < COMPRESS_MIN);
+    }
+
+    #[test]
+    fn linear_under_concatenation() {
+        // Compressing two frames independently and concatenating the
+        // outputs decodes to the concatenation of the inputs: no codec
+        // state leaks across frames.
+        let a = vec![3u8; 2048];
+        let b: Vec<u8> = (0..2048u64).map(|i| splitmix64(i ^ 9) as u8).collect();
+        let ca = compress(&a);
+        let cb = compress(&b);
+        let da = decompress(&ca, a.len()).unwrap();
+        let db = decompress(&cb, b.len()).unwrap();
+        let mut joined = da;
+        joined.extend_from_slice(&db);
+        let mut want = a;
+        want.extend_from_slice(&b);
+        assert_eq!(joined, want);
+    }
+
+    #[test]
+    fn malformed_streams_rejected() {
+        // Truncated varint.
+        assert!(decompress(&[0x80], 1024).is_err());
+        // Claimed length over the cap.
+        let mut big = Vec::new();
+        push_varint(&mut big, 1 << 40);
+        assert!(decompress(&big, 1024).is_err());
+        // Unknown op.
+        assert!(decompress(&[4, 9, 1, 0], 1024).is_err());
+        // Run overruns declared length.
+        assert!(decompress(&[2, 0, 200, 0], 1024).is_err());
+        // Truncated literal.
+        assert!(decompress(&[8, 1, 8, 1, 2], 1024).is_err());
+        // Ops undershoot declared length.
+        assert!(decompress(&[8, 1, 2, 1, 2], 1024).is_err());
+        // Truncated run byte.
+        assert!(decompress(&[8, 0, 8], 1024).is_err());
+    }
+}

@@ -1,51 +1,106 @@
-//! Length-prefixed message framing over any byte transport.
+//! v6 frame I/O over any byte transport.
 //!
-//! Frame = `u32 LE length` + payload ([`wire`]-encoded [`Message`]).
+//! Frame = `magic "RF" + version + kind + codec + varint body length +
+//! body` ([`wire`]-encoded [`Message`]; WIRE.md §Framing is normative).
 //! Used identically over child-process pipes (multisession), TCP sockets
-//! (cluster), and in tests over in-memory buffers.
+//! (cluster), batch spool files, and in tests over in-memory buffers.
 
 use std::io::{Read, Write};
 
 use crate::api::error::FutureError;
-use crate::ipc::wire::{decode_message, encode_message};
-use crate::ipc::Message;
+use crate::ipc::wire::{self, encode_message};
+use crate::ipc::{Message, PROTOCOL_VERSION};
 
-/// Maximum accepted frame (guards against corrupt length prefixes).
+/// Maximum accepted frame body (guards against corrupt length prefixes).
 pub const MAX_FRAME: u32 = 1 << 30; // 1 GiB
 
-/// Write one message as a frame and flush.
+/// One frame as read off a stream, header parsed but body not yet decoded.
+/// Stream readers that need the kind byte before decoding (the worker's
+/// `NeedBlob` recovery loop) consume this; everyone else uses
+/// [`read_message`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RawFrame {
+    /// Frame kind byte ([`wire::FRAME_KIND_TABLE`]).
+    pub kind: u8,
+    /// Codec byte ([`wire::CODEC_TABLE`]).
+    pub codec: u8,
+    /// The (possibly compressed) frame body bytes.
+    pub body: Vec<u8>,
+}
+
+/// Write one message as a complete v6 frame and flush.
 pub fn write_message<W: Write>(w: &mut W, msg: &Message) -> Result<(), FutureError> {
-    let payload = encode_message(msg);
-    let len = payload.len() as u32;
-    w.write_all(&len.to_le_bytes())
-        .and_then(|_| w.write_all(&payload))
+    let frame = encode_message(msg);
+    w.write_all(&frame)
         .and_then(|_| w.flush())
         .map_err(|e| FutureError::Channel(format!("write failed: {e}")))
 }
 
-/// Read one frame, blocking.  `Ok(None)` = clean EOF at a frame boundary.
-pub fn read_message<R: Read>(r: &mut R) -> Result<Option<Message>, FutureError> {
-    let mut len_buf = [0u8; 4];
-    // EOF before any length byte is a clean close; mid-prefix EOF is not.
-    match r.read(&mut len_buf) {
+/// Read one frame header + body, blocking. `Ok(None)` = clean EOF at a
+/// frame boundary; EOF mid-frame, bad magic, a version mismatch, or a body
+/// length over [`MAX_FRAME`] are channel errors.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<RawFrame>, FutureError> {
+    // EOF before any header byte is a clean close; mid-header EOF is not.
+    let mut first = [0u8; 1];
+    match r.read(&mut first) {
         Ok(0) => return Ok(None),
-        Ok(n) if n < 4 => {
-            r.read_exact(&mut len_buf[n..])
-                .map_err(|e| FutureError::Channel(format!("truncated frame length: {e}")))?;
-        }
         Ok(_) => {}
         Err(e) => return Err(FutureError::Channel(format!("read failed: {e}"))),
     }
-    let len = u32::from_le_bytes(len_buf);
-    if len > MAX_FRAME {
+    let mut rest = [0u8; 4];
+    r.read_exact(&mut rest)
+        .map_err(|e| FutureError::Channel(format!("truncated frame header: {e}")))?;
+    if [first[0], rest[0]] != wire::MAGIC {
+        return Err(FutureError::Channel(format!(
+            "bad frame magic {:02x}{:02x}",
+            first[0], rest[0]
+        )));
+    }
+    let version = rest[1];
+    if version != PROTOCOL_VERSION as u8 {
+        return Err(FutureError::Channel(format!(
+            "protocol version {version} (this build speaks {PROTOCOL_VERSION})"
+        )));
+    }
+    let kind = rest[2];
+    let codec = rest[3];
+    // Byte-at-a-time varint body length with a 64-bit overflow guard.
+    let mut len: u64 = 0;
+    let mut shift: u32 = 0;
+    loop {
+        let mut b = [0u8; 1];
+        r.read_exact(&mut b)
+            .map_err(|e| FutureError::Channel(format!("truncated frame length: {e}")))?;
+        let b = b[0];
+        if shift >= 64 || (shift == 63 && (b & 0x7f) > 1) {
+            return Err(FutureError::Channel("frame length varint overflow".into()));
+        }
+        len |= u64::from(b & 0x7f) << shift;
+        if b & 0x80 == 0 {
+            break;
+        }
+        shift += 7;
+    }
+    if len > u64::from(MAX_FRAME) {
         return Err(FutureError::Channel(format!("frame too large: {len} bytes")));
     }
-    let mut payload = vec![0u8; len as usize];
-    r.read_exact(&mut payload)
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body)
         .map_err(|e| FutureError::Channel(format!("truncated frame body: {e}")))?;
-    let msg = decode_message(&payload)
-        .map_err(|e| FutureError::Channel(format!("bad frame: {e}")))?;
-    Ok(Some(msg))
+    Ok(Some(RawFrame { kind, codec, body }))
+}
+
+/// Read one frame and decode its message (no intern cache — interned
+/// references from prior frames will fail; workers that participate in
+/// interning use [`read_frame`] + [`wire::decode_frame_body`] with their
+/// cache). `Ok(None)` = clean EOF at a frame boundary.
+pub fn read_message<R: Read>(r: &mut R) -> Result<Option<Message>, FutureError> {
+    match read_frame(r)? {
+        None => Ok(None),
+        Some(f) => wire::decode_frame_body(f.kind, f.codec, &f.body, None)
+            .map(Some)
+            .map_err(|e| FutureError::Channel(format!("bad frame: {e}"))),
+    }
 }
 
 #[cfg(test)]
@@ -75,8 +130,30 @@ mod tests {
 
     #[test]
     fn oversized_length_rejected() {
+        // Hand-built v6 header claiming a body one byte over the cap.
+        let mut buf = Vec::from(wire::MAGIC);
+        buf.push(PROTOCOL_VERSION as u8);
+        buf.push(5); // Ping kind
+        buf.push(0); // raw codec
+        let mut len = u64::from(MAX_FRAME) + 1;
+        loop {
+            let b = (len & 0x7f) as u8;
+            len >>= 7;
+            if len == 0 {
+                buf.push(b);
+                break;
+            }
+            buf.push(b | 0x80);
+        }
+        let mut cur = Cursor::new(buf);
+        assert!(matches!(read_message(&mut cur), Err(FutureError::Channel(_))));
+    }
+
+    #[test]
+    fn wrong_version_is_channel_error() {
         let mut buf = Vec::new();
-        buf.extend_from_slice(&(MAX_FRAME + 1).to_le_bytes());
+        write_message(&mut buf, &Message::Ping).unwrap();
+        buf[2] = 5; // a v5 peer
         let mut cur = Cursor::new(buf);
         assert!(matches!(read_message(&mut cur), Err(FutureError::Channel(_))));
     }

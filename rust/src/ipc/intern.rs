@@ -1,0 +1,539 @@
+//! Content-hashed global interning (wire protocol v6).
+//!
+//! The dominant per-future serialization cost the paper attributes to
+//! `serialize()` round trips is *re-sending the same captured globals with
+//! every task*. v6 fixes that: large captured globals and hot `MapChunk`
+//! bodies are addressed by a 128-bit content [`Digest`]; a task frame
+//! carries the full blob bytes only the first time a given worker sees a
+//! digest, and a 17-byte reference afterwards.
+//!
+//! Three cooperating structures (WIRE.md §Interning is normative):
+//!
+//! * [`SeatLedger`] — coordinator-side, one per worker seat: a bounded
+//!   FIFO set of digests this seat has been *provided*. Decides
+//!   provide-vs-reference at encode time.
+//! * [`InternCache`] — worker-side mirror: digest → decoded blob, same
+//!   capacity and FIFO policy, populated by the provide entries in task
+//!   frames (and by `NeedBlob`/`Blob` recovery on a miss).
+//! * The process-global *intern store* — digest → encoded blob bytes, so
+//!   the coordinator can answer a worker's `NeedBlob` without re-encoding.
+//!
+//! The ledger and cache stay in lockstep because provides are inserted in
+//! identical encounter order on both sides with the same capacity; the
+//! mirror is *approximate*, not load-bearing — any drift (a frame that was
+//! encoded but never delivered, an eviction skew after a `NeedBlob`
+//! install) degrades to an extra `NeedBlob` round trip, never to a wrong
+//! result.
+//!
+//! Interning is per-session togglable ([`set_session_interning`], default
+//! on) and observable via [`session_counters`]; results are bit-identical
+//! either way, which the `wire-v6-interning` conformance check enforces on
+//! every backend.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::api::expr::Expr;
+use crate::api::value::Value;
+
+/// Minimum *encoded* size (bytes) for a captured global or chunk body to
+/// be interned. Below this, inline encoding is cheaper than the digest +
+/// cache bookkeeping.
+pub const INTERN_MIN: usize = 1024;
+
+/// Default capacity of each [`SeatLedger`] / [`InternCache`] pair
+/// (overridable with `RUSTURES_INTERN_CAP`).
+pub const DEFAULT_INTERN_CAP: usize = 64;
+
+/// Default capacity of the process-global intern store (overridable with
+/// `RUSTURES_INTERN_STORE_CAP`).
+const DEFAULT_STORE_CAP: usize = 256;
+
+fn env_cap(var: &str, default: usize) -> usize {
+    std::env::var(var)
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .unwrap_or(default)
+        .max(1)
+}
+
+/// Effective per-seat intern capacity (`RUSTURES_INTERN_CAP`, min 1).
+pub fn intern_cap() -> usize {
+    env_cap("RUSTURES_INTERN_CAP", DEFAULT_INTERN_CAP)
+}
+
+// ---------------------------------------------------------------- digest --
+
+/// 128-bit content digest of an interned blob: two independent FNV-1a-64
+/// passes over the canonical content stream (WIRE.md §Digest). Not
+/// cryptographic — it keys an in-process cache, where 128 bits of a good
+/// mixing hash make accidental collision negligible.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Digest(pub [u8; 16]);
+
+impl std::fmt::Display for Digest {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for b in self.0 {
+            write!(f, "{b:02x}")?;
+        }
+        Ok(())
+    }
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Two-lane FNV-1a streaming hasher; lane B perturbs each input byte so
+/// the lanes decorrelate without a second pass over the data.
+struct Fnv2 {
+    a: u64,
+    b: u64,
+}
+
+impl Fnv2 {
+    fn new() -> Self {
+        Fnv2 { a: FNV_OFFSET, b: FNV_OFFSET ^ 0x9e37_79b9_7f4a_7c15 }
+    }
+
+    fn update(&mut self, bytes: &[u8]) {
+        for &x in bytes {
+            self.a = (self.a ^ u64::from(x)).wrapping_mul(FNV_PRIME);
+            self.b = (self.b ^ u64::from(x ^ 0xa5)).wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    fn finish(self) -> Digest {
+        let mut out = [0u8; 16];
+        out[..8].copy_from_slice(&self.a.to_le_bytes());
+        out[8..].copy_from_slice(&self.b.to_le_bytes());
+        Digest(out)
+    }
+}
+
+/// Digest of arbitrary bytes (used for expression blobs, which are hashed
+/// over their encoded form).
+pub fn digest_bytes(bytes: &[u8]) -> Digest {
+    let mut h = Fnv2::new();
+    h.update(bytes);
+    h.finish()
+}
+
+/// Structural digest of a [`Value`] — streams the content (tags, lengths,
+/// payload bytes) through the hasher without materializing an encoding, so
+/// reference-only sends of a 1MB tensor cost a hash pass, not an encode.
+/// Domain-separated from [`digest_bytes`] expression blobs by the leading
+/// kind byte (0 = value; expression blob bytes start with 1).
+pub fn digest_value(v: &Value) -> Digest {
+    let mut h = Fnv2::new();
+    h.update(&[0]);
+    hash_value(&mut h, v);
+    h.finish()
+}
+
+fn hash_value(h: &mut Fnv2, v: &Value) {
+    match v {
+        Value::Unit => h.update(&[0]),
+        Value::Bool(b) => h.update(&[1, u8::from(*b)]),
+        Value::I64(x) => {
+            h.update(&[2]);
+            h.update(&x.to_le_bytes());
+        }
+        Value::F64(x) => {
+            h.update(&[3]);
+            h.update(&x.to_bits().to_le_bytes());
+        }
+        Value::Str(s) => {
+            h.update(&[4]);
+            h.update(&(s.len() as u64).to_le_bytes());
+            h.update(s.as_bytes());
+        }
+        Value::Tensor(t) => {
+            h.update(&[5]);
+            h.update(&(t.shape.len() as u64).to_le_bytes());
+            for d in &t.shape {
+                h.update(&(*d as u64).to_le_bytes());
+            }
+            h.update(&(t.data.len() as u64).to_le_bytes());
+            #[cfg(target_endian = "little")]
+            {
+                // Same justification as the wire encoder's bulk tensor
+                // path: on LE targets the in-memory f32 layout is the
+                // canonical byte stream.
+                let bytes = unsafe {
+                    std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+                };
+                h.update(bytes);
+            }
+            #[cfg(not(target_endian = "little"))]
+            {
+                for f in t.data.iter() {
+                    h.update(&f.to_bits().to_le_bytes());
+                }
+            }
+        }
+        Value::List(items) => {
+            h.update(&[6]);
+            h.update(&(items.len() as u64).to_le_bytes());
+            for item in items {
+                hash_value(h, item);
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------- seat ledger --
+
+/// Coordinator-side record of which digests one worker seat has been
+/// provided: a bounded FIFO set. `admit` answers "can I send a reference?"
+/// and books the provide when the answer is no.
+#[derive(Debug)]
+pub struct SeatLedger {
+    known: HashSet<Digest>,
+    fifo: VecDeque<Digest>,
+    cap: usize,
+}
+
+impl Default for SeatLedger {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SeatLedger {
+    /// Ledger with the process-default capacity ([`intern_cap`]).
+    pub fn new() -> Self {
+        Self::with_cap(intern_cap())
+    }
+
+    /// Ledger with an explicit capacity (minimum 1).
+    pub fn with_cap(cap: usize) -> Self {
+        SeatLedger { known: HashSet::new(), fifo: VecDeque::new(), cap: cap.max(1) }
+    }
+
+    /// Returns `true` if the seat already holds `d` (encode a reference);
+    /// otherwise records it — evicting the oldest entry at capacity, the
+    /// same FIFO policy as the worker's [`InternCache`] — and returns
+    /// `false` (encode a provide).
+    pub fn admit(&mut self, d: Digest) -> bool {
+        if self.known.contains(&d) {
+            return true;
+        }
+        self.known.insert(d);
+        self.fifo.push_back(d);
+        if self.fifo.len() > self.cap {
+            if let Some(old) = self.fifo.pop_front() {
+                self.known.remove(&old);
+            }
+        }
+        false
+    }
+
+    /// Number of digests currently tracked.
+    pub fn len(&self) -> usize {
+        self.fifo.len()
+    }
+
+    /// True when no digest has been provided to this seat yet.
+    pub fn is_empty(&self) -> bool {
+        self.fifo.is_empty()
+    }
+}
+
+// ---------------------------------------------------------- worker cache --
+
+/// A decoded interned blob: either a captured global [`Value`] or a shared
+/// `MapChunk` body expression.
+#[derive(Debug, Clone)]
+pub enum InternedBlob {
+    /// A captured global (values keep `Arc` tensor payloads, so cache hits
+    /// are O(1) clones).
+    Value(Value),
+    /// A shared chunk body, held behind `Arc` so every task referencing it
+    /// reuses one allocation.
+    Expr(Arc<Expr>),
+}
+
+/// Worker-side intern cache: digest → decoded blob, bounded FIFO with the
+/// same capacity as the coordinator's [`SeatLedger`]. Interior-mutable so
+/// the wire decoder can install provides through a shared reference.
+#[derive(Debug)]
+pub struct InternCache {
+    inner: Mutex<CacheInner>,
+}
+
+#[derive(Debug)]
+struct CacheInner {
+    map: HashMap<Digest, InternedBlob>,
+    fifo: VecDeque<Digest>,
+    cap: usize,
+}
+
+impl Default for InternCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl InternCache {
+    /// Cache with the process-default capacity ([`intern_cap`]).
+    pub fn new() -> Self {
+        Self::with_cap(intern_cap())
+    }
+
+    /// Cache with an explicit capacity (minimum 1).
+    pub fn with_cap(cap: usize) -> Self {
+        InternCache {
+            inner: Mutex::new(CacheInner {
+                map: HashMap::new(),
+                fifo: VecDeque::new(),
+                cap: cap.max(1),
+            }),
+        }
+    }
+
+    /// Install a blob. Re-inserting an existing digest replaces the blob
+    /// without perturbing FIFO order (provides replayed during a decode
+    /// retry stay idempotent).
+    pub fn insert(&self, d: Digest, blob: InternedBlob) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.map.insert(d, blob).is_none() {
+            inner.fifo.push_back(d);
+            if inner.fifo.len() > inner.cap {
+                if let Some(old) = inner.fifo.pop_front() {
+                    inner.map.remove(&old);
+                }
+            }
+        }
+    }
+
+    /// Look up a value blob (None on miss *or* kind mismatch — both are
+    /// recovered through the `NeedBlob` path).
+    pub fn value(&self, d: &Digest) -> Option<Value> {
+        match self.inner.lock().unwrap().map.get(d) {
+            Some(InternedBlob::Value(v)) => Some(v.clone()),
+            _ => None,
+        }
+    }
+
+    /// Look up an expression blob.
+    pub fn expr(&self, d: &Digest) -> Option<Arc<Expr>> {
+        match self.inner.lock().unwrap().map.get(d) {
+            Some(InternedBlob::Expr(e)) => Some(Arc::clone(e)),
+            _ => None,
+        }
+    }
+
+    /// Number of cached blobs.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().fifo.len()
+    }
+
+    /// True when the cache is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+// ----------------------------------------------------------- blob store --
+
+#[derive(Default)]
+struct StoreInner {
+    map: HashMap<Digest, Arc<Vec<u8>>>,
+    fifo: VecDeque<Digest>,
+}
+
+static STORE: OnceLock<Mutex<StoreInner>> = OnceLock::new();
+
+fn store() -> &'static Mutex<StoreInner> {
+    STORE.get_or_init(|| Mutex::new(StoreInner::default()))
+}
+
+/// Ensure the process-global intern store holds the encoded blob bytes for
+/// `d`, building them with `make` only on absence. Returns the shared
+/// bytes. The store is what answers a worker's `NeedBlob`; it is bounded
+/// (`RUSTURES_INTERN_STORE_CAP`, FIFO) — an evicted digest makes the
+/// worker's recovery fail closed into a seat respawn, never a wrong value.
+pub fn store_ensure(d: Digest, make: impl FnOnce() -> Vec<u8>) -> Arc<Vec<u8>> {
+    let mut inner = store().lock().unwrap();
+    if let Some(bytes) = inner.map.get(&d) {
+        return Arc::clone(bytes);
+    }
+    let bytes = Arc::new(make());
+    inner.map.insert(d, Arc::clone(&bytes));
+    inner.fifo.push_back(d);
+    let cap = env_cap("RUSTURES_INTERN_STORE_CAP", DEFAULT_STORE_CAP);
+    while inner.fifo.len() > cap {
+        if let Some(old) = inner.fifo.pop_front() {
+            inner.map.remove(&old);
+        }
+    }
+    bytes
+}
+
+/// Fetch encoded blob bytes for `d` from the process-global store.
+pub fn store_get(d: &Digest) -> Option<Arc<Vec<u8>>> {
+    store().lock().unwrap().map.get(d).map(Arc::clone)
+}
+
+// ------------------------------------------------- per-session registry --
+
+/// Per-session interning observability counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct InternCounters {
+    /// Interned slots shipped with full blob bytes (first send to a seat).
+    pub provides: u64,
+    /// Interned slots shipped as a 16-byte digest reference.
+    pub refs: u64,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct SessionEntry {
+    enabled: bool,
+    counters: InternCounters,
+}
+
+static SESSIONS: OnceLock<Mutex<HashMap<u64, SessionEntry>>> = OnceLock::new();
+
+fn sessions() -> &'static Mutex<HashMap<u64, SessionEntry>> {
+    SESSIONS.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn with_entry<R>(session: u64, f: impl FnOnce(&mut SessionEntry) -> R) -> R {
+    let mut map = sessions().lock().unwrap();
+    let entry = map
+        .entry(session)
+        .or_insert(SessionEntry { enabled: true, counters: InternCounters::default() });
+    f(entry)
+}
+
+/// Is interning enabled for `session`? Defaults to true.
+pub fn session_interning(session: u64) -> bool {
+    sessions().lock().unwrap().get(&session).map(|e| e.enabled).unwrap_or(true)
+}
+
+/// Enable or disable interning for one session. Results are bit-identical
+/// either way; off trades bytes-on-wire for zero cache state (useful for
+/// debugging and for the conformance cross-check).
+pub fn set_session_interning(session: u64, enabled: bool) {
+    with_entry(session, |e| e.enabled = enabled);
+}
+
+/// Snapshot the interning counters for one session.
+pub fn session_counters(session: u64) -> InternCounters {
+    sessions().lock().unwrap().get(&session).map(|e| e.counters).unwrap_or_default()
+}
+
+/// Zero the interning counters for one session (the toggle is preserved).
+pub fn reset_session_counters(session: u64) {
+    with_entry(session, |e| e.counters = InternCounters::default());
+}
+
+/// Drop a session's interning state entirely (toggle and counters).
+pub fn clear_session(session: u64) {
+    sessions().lock().unwrap().remove(&session);
+}
+
+pub(crate) fn note_provide(session: u64) {
+    with_entry(session, |e| e.counters.provides += 1);
+}
+
+pub(crate) fn note_ref(session: u64) {
+    with_entry(session, |e| e.counters.refs += 1);
+}
+
+static NEED_BLOBS: AtomicU64 = AtomicU64::new(0);
+
+/// Record one `NeedBlob` recovery round trip (process-global: the frame
+/// carries no session id, by design — its body was undecodable).
+pub fn note_need_blob() {
+    NEED_BLOBS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Total `NeedBlob` recovery round trips served by this process.
+pub fn need_blob_count() -> u64 {
+    NEED_BLOBS.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::value::Tensor;
+
+    #[test]
+    fn digest_is_content_addressed() {
+        let a = Value::Tensor(Tensor::new(vec![4], vec![1.0, 2.0, 3.0, 4.0]).unwrap());
+        let b = Value::Tensor(Tensor::new(vec![4], vec![1.0, 2.0, 3.0, 4.0]).unwrap());
+        assert_eq!(digest_value(&a), digest_value(&b));
+        let c = Value::Tensor(Tensor::new(vec![4], vec![1.0, 2.0, 3.0, 5.0]).unwrap());
+        assert_ne!(digest_value(&a), digest_value(&c));
+        // Shape participates: [4] vs [2,2] with identical data differ.
+        let d = Value::Tensor(Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap());
+        assert_ne!(digest_value(&a), digest_value(&d));
+    }
+
+    #[test]
+    fn digest_separates_structurally_ambiguous_values() {
+        assert_ne!(digest_value(&Value::Str("ab".into())), digest_value(&Value::Str("a".into())));
+        assert_ne!(
+            digest_value(&Value::List(vec![Value::I64(1)])),
+            digest_value(&Value::I64(1))
+        );
+        assert_ne!(digest_bytes(b"x"), digest_bytes(b"y"));
+    }
+
+    #[test]
+    fn ledger_and_cache_mirror_fifo_eviction() {
+        let mut ledger = SeatLedger::with_cap(2);
+        let cache = InternCache::with_cap(2);
+        let d = |i: u8| Digest([i; 16]);
+        for i in 0..3u8 {
+            assert!(!ledger.admit(d(i)), "first admit of {i} must be a provide");
+            cache.insert(d(i), InternedBlob::Value(Value::I64(i64::from(i))));
+        }
+        // Oldest (0) evicted on both sides; 1 and 2 retained.
+        assert!(!ledger.admit(d(0)), "evicted digest re-provides");
+        assert!(ledger.admit(d(2)));
+        assert!(cache.value(&d(1)).is_some());
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn cache_reinsert_is_idempotent() {
+        let cache = InternCache::with_cap(4);
+        let d = Digest([9; 16]);
+        cache.insert(d, InternedBlob::Value(Value::I64(1)));
+        cache.insert(d, InternedBlob::Value(Value::I64(1)));
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.value(&d), Some(Value::I64(1)));
+        // Kind mismatch is a miss, not a panic.
+        assert!(cache.expr(&d).is_none());
+    }
+
+    #[test]
+    fn store_roundtrip_and_dedup() {
+        let d = Digest([0xCD; 16]);
+        let first = store_ensure(d, || vec![1, 2, 3]);
+        let again = store_ensure(d, || panic!("must not rebuild an existing blob"));
+        assert_eq!(*first, vec![1, 2, 3]);
+        assert!(Arc::ptr_eq(&first, &again));
+        assert_eq!(store_get(&d).as_deref(), Some(&vec![1, 2, 3]));
+    }
+
+    #[test]
+    fn session_toggle_and_counters() {
+        let sid = 0x5eed_0001;
+        assert!(session_interning(sid), "interning defaults on");
+        set_session_interning(sid, false);
+        assert!(!session_interning(sid));
+        note_provide(sid);
+        note_ref(sid);
+        note_ref(sid);
+        assert_eq!(session_counters(sid), InternCounters { provides: 1, refs: 2 });
+        reset_session_counters(sid);
+        assert_eq!(session_counters(sid), InternCounters::default());
+        assert!(!session_interning(sid), "reset keeps the toggle");
+        clear_session(sid);
+        assert!(session_interning(sid));
+    }
+}

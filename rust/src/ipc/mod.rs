@@ -1,13 +1,29 @@
 //! Inter-process plumbing: the task/result message model, a from-scratch
-//! binary wire format ([`wire`] — serde is unavailable offline), and
-//! length-prefixed framing over any `Read`/`Write` transport ([`frame`]).
+//! binary wire format ([`wire`] — serde is unavailable offline), v6
+//! self-describing framing over any `Read`/`Write` transport ([`frame`]),
+//! per-frame compression ([`codec`]), and content-hashed global interning
+//! ([`intern`]).
 //!
 //! Every backend speaks the same protocol: the in-process backends shortcut
 //! the bytes but share the *types*; the multiprocess, cluster, and batch
 //! backends move [`Message`]s over pipes, TCP sockets, and spool files
-//! respectively.
+//! respectively. **WIRE.md at the repository root is the normative
+//! specification of the byte format**; the `wire_spec` integration test
+//! keeps it and this module in lockstep.
+//!
+//! ```
+//! use rustures::ipc::{frame, Message};
+//!
+//! let mut buf = Vec::new();
+//! frame::write_message(&mut buf, &Message::Ping).unwrap();
+//! let mut cur = std::io::Cursor::new(buf);
+//! assert_eq!(frame::read_message(&mut cur).unwrap(), Some(Message::Ping));
+//! ```
+#![deny(missing_docs)]
 
+pub mod codec;
 pub mod frame;
+pub mod intern;
 pub mod wire;
 
 use crate::api::conditions::{Captured, Condition};
@@ -88,16 +104,22 @@ impl Default for TaskOpts {
 /// options.  This is what "a future" is on the wire.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TaskSpec {
+    /// Globally unique future id (`f-<session>-<counter>` scheme).
     pub id: String,
+    /// The expression to evaluate on the worker.
     pub expr: Expr,
+    /// Captured globals the expression closes over.
     pub globals: Env,
+    /// Evaluation options (seed, capture flags, session context, attempt).
     pub opts: TaskOpts,
 }
 
 /// Worker-side evaluation outcome (wire-encodable `Result`).
 #[derive(Debug, Clone, PartialEq)]
 pub enum TaskOutcome {
+    /// Evaluation produced a value.
     Ok(Value),
+    /// Evaluation raised an error (R's `stop()` analog).
     Err(EvalError),
 }
 
@@ -111,6 +133,7 @@ pub struct TaskMetrics {
 }
 
 impl TaskMetrics {
+    /// Wall-clock evaluation time in nanoseconds (saturating).
     pub fn eval_nanos(&self) -> u64 {
         self.finished_ns.saturating_sub(self.started_ns)
     }
@@ -119,40 +142,80 @@ impl TaskMetrics {
 /// Everything a resolved future sends home.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TaskResult {
+    /// The task id this result answers.
     pub id: String,
+    /// Evaluation outcome (value or structured error).
     pub outcome: TaskOutcome,
+    /// Captured stdout and conditions from the worker.
     pub captured: Captured,
+    /// Worker-side timing of the evaluation.
     pub metrics: TaskMetrics,
     /// Echo of the launching [`TaskOpts::attempt`] — the stale-result fence.
     pub attempt: u32,
 }
 
-/// The worker protocol.
+/// The worker protocol.  Each variant maps 1:1 to a frame kind byte
+/// ([`wire::FRAME_KIND_TABLE`], WIRE.md §Frame kinds).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Message {
     /// Worker → coordinator on connect: identity + protocol version.
-    Hello { worker_id: String, version: u32 },
+    Hello {
+        /// Worker's self-reported id (seat name).
+        worker_id: String,
+        /// Protocol version the worker speaks.
+        version: u32,
+    },
     /// Coordinator → worker: run this task.
     Task(TaskSpec),
     /// Worker → coordinator: a live `immediateCondition` (progress).
-    Immediate { task_id: String, condition: Condition },
+    Immediate {
+        /// The task that emitted the condition.
+        task_id: String,
+        /// The condition itself.
+        condition: Condition,
+    },
     /// Worker → coordinator: task finished.
     Result(TaskResult),
     /// Coordinator → worker: exit the event loop.
     Shutdown,
     /// Liveness probe (either direction).
     Ping,
+    /// Liveness probe response.
     Pong,
     /// Worker → coordinator: still alive and making progress on `task_id`.
     /// Emitted from the evaluator's tick hook (between `MapChunk` elements
     /// and other yield points) over the same writer the immediates use —
     /// no per-worker heartbeat thread exists.
-    Heartbeat { task_id: String },
+    Heartbeat {
+        /// The task being heartbeat.
+        task_id: String,
+    },
     /// Coordinator → worker: abandon `task_id` if it is still queued.  A
     /// single-threaded worker mid-evaluation only reads this after the
     /// task completes (then drops it as a no-op); the coordinator's seat
     /// kill remains the enforcement path for a running task.
-    Cancel { task_id: String },
+    Cancel {
+        /// The task to abandon.
+        task_id: String,
+    },
+    /// Worker → coordinator (protocol v6): the worker's intern cache is
+    /// missing these digests — resend the blobs. The recovery path when
+    /// the coordinator's [`intern::SeatLedger`] and the worker's
+    /// [`intern::InternCache`] drift (eviction skew, a respawned worker).
+    NeedBlob {
+        /// The digests to resend.
+        digests: Vec<intern::Digest>,
+    },
+    /// Coordinator → worker (protocol v6): one intern blob, answering a
+    /// `NeedBlob`. `bytes: None` means the blob is unknown (evicted from
+    /// the process-global store) — the worker fails the task's decode
+    /// closed and the supervisor retries through a fresh seat.
+    Blob {
+        /// Which digest this answers.
+        digest: intern::Digest,
+        /// Encoded blob bytes ([`wire::decode_blob`]), or `None` if gone.
+        bytes: Option<Vec<u8>>,
+    },
 }
 
 /// Protocol version — bump on any wire-format change.
@@ -164,4 +227,8 @@ pub enum Message {
 /// v5: liveness plane — `Heartbeat` (tag 7) / `Cancel` (tag 8) frames,
 ///     attempt epochs on `TaskOpts`/`TaskResult` (stale-result fencing),
 ///     and `Expr::ChaosHang` (tag 19).
-pub const PROTOCOL_VERSION: u32 = 5;
+/// v6: self-describing frames (magic + version + kind + codec header,
+///     varint lengths), per-frame delta+RLE compression, and content-hashed
+///     global interning (`ValueRef`/`ExprRef` tags, `NeedBlob`/`Blob`
+///     frames).  WIRE.md is the normative spec.
+pub const PROTOCOL_VERSION: u32 = 6;

@@ -1,12 +1,53 @@
-//! Binary wire format — the serialization substrate (R's `serialize()`
+//! Binary wire format v6 — the serialization substrate (R's `serialize()`
 //! analog; serde is unavailable in this offline image, so this is a
 //! from-scratch, versioned, tagged little-endian encoding).
+//!
+//! **WIRE.md at the repository root is the normative specification** of
+//! this format (frame grammar, tag tables, codec, interning protocol,
+//! version rules); this module is the reference implementation, and the
+//! `wire_spec` integration test asserts the two agree constant-by-constant.
 //!
 //! Every type that crosses a process boundary round-trips through
 //! [`Encoder`]/[`Decoder`]: values, expressions, captured globals,
 //! conditions, task specs and results, plan topologies, and the
-//! [`Message`] envelope.  Tags are one byte; lengths are u32 LE; integers
-//! u64/i64 LE; floats IEEE-754 bits.
+//! [`Message`] envelope. Tags are one byte; counts and lengths are LEB128
+//! varints; semantic integers (seeds, session ids, nanosecond clocks) stay
+//! fixed-width u64/i64 LE; floats are IEEE-754 bits.
+//!
+//! A v6 frame is self-describing: `magic "RF" + version + frame-kind +
+//! codec + varint body length + body`, where the body may be compressed
+//! ([`crate::ipc::codec`]) and large captured globals / hot `MapChunk`
+//! bodies may be replaced by 16-byte content digests
+//! ([`crate::ipc::intern`]).
+//!
+//! Primitive round-trip:
+//!
+//! ```
+//! use rustures::ipc::wire::{Decoder, Encoder};
+//!
+//! let mut e = Encoder::new();
+//! e.varint(300);
+//! e.str("hello");
+//! let bytes = e.into_bytes();
+//!
+//! let mut d = Decoder::new(&bytes);
+//! assert_eq!(d.varint().unwrap(), 300);
+//! assert_eq!(d.str().unwrap(), "hello");
+//! assert!(d.finished());
+//! ```
+//!
+//! Whole-frame round-trip:
+//!
+//! ```
+//! use rustures::ipc::{wire, Message};
+//!
+//! let frame = wire::encode_message(&Message::Ping);
+//! assert_eq!(frame[0..2], wire::MAGIC);
+//! assert_eq!(wire::decode_message(&frame).unwrap(), Message::Ping);
+//! ```
+
+use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::api::conditions::{Captured, Condition, ConditionKind};
 use crate::api::env::Env;
@@ -15,25 +56,243 @@ use crate::api::expr::{EmitKind, Expr, PrimOp, RngDist};
 use crate::api::plan::PlanSpec;
 use crate::api::value::{Tensor, Value};
 use crate::backend::supervisor::RetryPolicy;
+use crate::ipc::codec;
+use crate::ipc::intern::{self, Digest, InternCache, InternedBlob, SeatLedger};
 use crate::ipc::{
     Message, SessionContext, TaskMetrics, TaskOpts, TaskOutcome, TaskResult, TaskSpec,
+    PROTOCOL_VERSION,
 };
 
-/// Decode failure: offset + description (possibly a truncated/corrupt frame).
+// ------------------------------------------------------------ tag tables --
+//
+// These tables are the single in-code source of truth for every tag byte;
+// WIRE.md documents the same tables and tests/wire_spec.rs asserts the two
+// never drift. Keep them sorted by tag.
+
+/// Frame kind byte → name (WIRE.md §Frame kinds).
+pub const FRAME_KIND_TABLE: &[(u8, &str)] = &[
+    (0, "Hello"),
+    (1, "Task"),
+    (2, "Immediate"),
+    (3, "Result"),
+    (4, "Shutdown"),
+    (5, "Ping"),
+    (6, "Pong"),
+    (7, "Heartbeat"),
+    (8, "Cancel"),
+    (9, "NeedBlob"),
+    (10, "Blob"),
+];
+
+/// Value tag byte → name (WIRE.md §Values).
+pub const VALUE_TAG_TABLE: &[(u8, &str)] = &[
+    (0, "Unit"),
+    (1, "Bool"),
+    (2, "I64"),
+    (3, "F64"),
+    (4, "Str"),
+    (5, "Tensor"),
+    (6, "List"),
+    (7, "ValueRef"),
+];
+
+/// Expression tag byte → name (WIRE.md §Expressions).
+pub const EXPR_TAG_TABLE: &[(u8, &str)] = &[
+    (0, "Lit"),
+    (1, "Var"),
+    (2, "Let"),
+    (3, "Seq"),
+    (4, "List"),
+    (5, "Index"),
+    (6, "Call"),
+    (7, "Prim"),
+    (8, "If"),
+    (9, "DynLookup"),
+    (10, "Emit"),
+    (11, "Stop"),
+    (12, "Rng"),
+    (13, "WithRngStream"),
+    (14, "Spin"),
+    (15, "Sleep"),
+    (16, "Work"),
+    (17, "MapChunk"),
+    (18, "ChaosKill"),
+    (19, "ChaosHang"),
+    (20, "ExprRef"),
+];
+
+/// Plan tag byte → name (WIRE.md §Plans).
+pub const PLAN_TAG_TABLE: &[(u8, &str)] = &[
+    (0, "Sequential"),
+    (1, "ThreadPool"),
+    (2, "Multiprocess"),
+    (3, "Cluster"),
+    (4, "Batch"),
+    (5, "Custom"),
+];
+
+/// Primitive-op tag byte → name (WIRE.md §Expressions).
+pub const PRIM_TAG_TABLE: &[(u8, &str)] = &[
+    (0, "Add"),
+    (1, "Sub"),
+    (2, "Mul"),
+    (3, "Div"),
+    (4, "Neg"),
+    (5, "Lt"),
+    (6, "Le"),
+    (7, "Eq"),
+    (8, "Not"),
+    (9, "Len"),
+    (10, "Sum"),
+    (11, "Mean"),
+    (12, "Sqrt"),
+    (13, "Concat"),
+];
+
+/// Emit-kind tag byte → name (WIRE.md §Expressions).
+pub const EMIT_TAG_TABLE: &[(u8, &str)] =
+    &[(0, "Stdout"), (1, "Message"), (2, "Warning"), (3, "Progress")];
+
+/// Condition-kind tag byte → name (WIRE.md §Conditions).
+pub const CONDITION_TAG_TABLE: &[(u8, &str)] =
+    &[(0, "Message"), (1, "Warning"), (2, "Immediate")];
+
+/// RNG distribution tag byte → name (WIRE.md §Expressions).
+pub const RNG_DIST_TABLE: &[(u8, &str)] = &[(0, "Unif"), (1, "Norm")];
+
+/// Codec byte → name (WIRE.md §Codec).
+pub const CODEC_TABLE: &[(u8, &str)] = &[(0, "Raw"), (1, "DeltaRle")];
+
+/// Human name for a frame kind byte (used by [`WireError`]'s `Display`).
+pub fn frame_kind_name(kind: u8) -> &'static str {
+    FRAME_KIND_TABLE.iter().find(|(k, _)| *k == kind).map(|(_, n)| *n).unwrap_or("unknown")
+}
+
+// --------------------------------------------------------------- errors --
+
+/// Structured decode failure: byte offset, the frame kind being decoded
+/// (when known), and a typed [`WireErrorKind`] that preserves expected vs.
+/// found bytes instead of flattening them into free text.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct WireError {
+    /// Byte offset (within the failing buffer) where decoding stopped.
     pub offset: usize,
-    pub message: String,
+    /// Frame kind byte of the enclosing frame, when the header was parsed.
+    pub frame: Option<u8>,
+    /// What went wrong.
+    pub kind: WireErrorKind,
+}
+
+/// Typed decode failure cases (WIRE.md §Errors lists the normative set).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireErrorKind {
+    /// The buffer ended before a fixed-width read completed.
+    Truncated {
+        /// Bytes the read needed.
+        needed: usize,
+        /// Bytes actually remaining.
+        remaining: usize,
+    },
+    /// The first two frame bytes were not the `"RF"` magic.
+    BadMagic {
+        /// The two bytes found instead.
+        found: [u8; 2],
+    },
+    /// The frame's version byte differs from this build's protocol version.
+    BadVersion {
+        /// Version byte on the wire.
+        found: u8,
+        /// Version this build speaks.
+        expected: u8,
+    },
+    /// The frame-kind byte is outside [`FRAME_KIND_TABLE`].
+    BadFrameKind {
+        /// The unknown kind byte.
+        found: u8,
+    },
+    /// The codec byte is outside [`CODEC_TABLE`].
+    BadCodec {
+        /// The unknown codec byte.
+        found: u8,
+    },
+    /// A tag byte did not match any variant of the record being decoded.
+    BadTag {
+        /// Which tag table was being consulted (e.g. `"Value"`, `"Expr"`).
+        what: &'static str,
+        /// The tag byte found.
+        found: u8,
+    },
+    /// A length prefix claims more bytes than remain in the buffer — the
+    /// decoder rejects *before* allocating.
+    LengthOverflow {
+        /// Which length field overflowed (e.g. `"string"`, `"frame body"`).
+        what: &'static str,
+        /// The claimed element count / byte length.
+        length: u64,
+        /// Bytes actually remaining.
+        remaining: usize,
+    },
+    /// A varint continued past 64 bits.
+    VarintOverflow,
+    /// A string field held invalid UTF-8.
+    BadUtf8,
+    /// Bytes remained after the record was fully decoded.
+    TrailingBytes {
+        /// How many bytes were left over.
+        count: usize,
+    },
+    /// An interned reference named a digest absent from the decode cache
+    /// (recovered out-of-band via the `NeedBlob` protocol).
+    MissingBlob {
+        /// The digest that missed.
+        digest: Digest,
+    },
+    /// Any other semantic violation (shape mismatches, codec stream
+    /// corruption) with a free-text description.
+    Invalid(String),
 }
 
 impl std::fmt::Display for WireError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "wire decode error at byte {}: {}", self.offset, self.message)
+        write!(f, "wire decode error at byte {}", self.offset)?;
+        if let Some(k) = self.frame {
+            write!(f, " in {} frame", frame_kind_name(k))?;
+        }
+        write!(f, ": ")?;
+        match &self.kind {
+            WireErrorKind::Truncated { needed, remaining } => {
+                write!(f, "truncated: need {needed} bytes, {remaining} remain")
+            }
+            WireErrorKind::BadMagic { found } => {
+                write!(f, "bad magic {:02x}{:02x} (want \"RF\")", found[0], found[1])
+            }
+            WireErrorKind::BadVersion { found, expected } => {
+                write!(f, "protocol version {found} (this build speaks {expected})")
+            }
+            WireErrorKind::BadFrameKind { found } => write!(f, "unknown frame kind {found}"),
+            WireErrorKind::BadCodec { found } => write!(f, "unknown codec {found}"),
+            WireErrorKind::BadTag { what, found } => {
+                write!(f, "bad {what} tag: found {found}")
+            }
+            WireErrorKind::LengthOverflow { what, length, remaining } => {
+                write!(f, "{what} length {length} exceeds {remaining} remaining bytes")
+            }
+            WireErrorKind::VarintOverflow => write!(f, "varint exceeds 64 bits"),
+            WireErrorKind::BadUtf8 => write!(f, "invalid UTF-8"),
+            WireErrorKind::TrailingBytes { count } => write!(f, "{count} trailing bytes"),
+            WireErrorKind::MissingBlob { digest } => {
+                write!(f, "interned blob {digest} not in cache")
+            }
+            WireErrorKind::Invalid(m) => write!(f, "{m}"),
+        }
     }
 }
 
 impl std::error::Error for WireError {}
 
+// -------------------------------------------------------------- encoder --
+
+/// Append-only byte sink for the v6 encoding primitives.
 pub struct Encoder {
     buf: Vec<u8>,
 }
@@ -45,6 +304,7 @@ impl Default for Encoder {
 }
 
 impl Encoder {
+    /// Encoder with a small default buffer.
     pub fn new() -> Self {
         Encoder { buf: Vec::with_capacity(256) }
     }
@@ -56,47 +316,82 @@ impl Encoder {
         Encoder { buf: Vec::with_capacity(bytes.max(64)) }
     }
 
+    /// Consume the encoder, returning the encoded bytes.
     pub fn into_bytes(self) -> Vec<u8> {
         self.buf
     }
 
+    /// Append one raw byte (tag bytes, flags).
     #[inline]
     pub fn u8(&mut self, v: u8) {
         self.buf.push(v);
     }
 
+    /// Append a fixed-width u32 LE (legacy fixed-width records only; new
+    /// counts use [`Encoder::varint`]).
     #[inline]
     pub fn u32(&mut self, v: u32) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
+    /// Append a fixed-width u64 LE (semantic integers: ids, seeds, clocks).
     #[inline]
     pub fn u64(&mut self, v: u64) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
+    /// Append a fixed-width i64 LE.
     #[inline]
     pub fn i64(&mut self, v: i64) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
+    /// Append an f64 as IEEE-754 bits, LE.
     #[inline]
     pub fn f64(&mut self, v: f64) {
         self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
     }
 
+    /// Append a bool as one byte (0 or 1).
     #[inline]
     pub fn bool(&mut self, v: bool) {
         self.buf.push(v as u8);
     }
 
+    /// Append a LEB128 varint (WIRE.md §Varints): 7 value bits per byte,
+    /// low bits first, high bit = continuation. Counts and lengths use
+    /// this; a length under 128 costs one byte instead of four.
+    pub fn varint(&mut self, mut v: u64) {
+        loop {
+            let b = (v & 0x7f) as u8;
+            v >>= 7;
+            if v == 0 {
+                self.buf.push(b);
+                break;
+            }
+            self.buf.push(b | 0x80);
+        }
+    }
+
+    /// Append raw bytes verbatim (blob payloads).
+    pub fn raw(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Append a 16-byte content [`Digest`].
+    pub fn digest(&mut self, d: &Digest) {
+        self.buf.extend_from_slice(&d.0);
+    }
+
+    /// Append a varint-length-prefixed UTF-8 string.
     pub fn str(&mut self, s: &str) {
-        self.u32(s.len() as u32);
+        self.varint(s.len() as u64);
         self.buf.extend_from_slice(s.as_bytes());
     }
 
+    /// Append a varint-count-prefixed f32 buffer.
     pub fn f32_slice(&mut self, data: &[f32]) {
-        self.u32(data.len() as u32);
+        self.varint(data.len() as u64);
         #[cfg(target_endian = "little")]
         {
             // §Perf: on LE targets the in-memory f32 layout *is* the wire
@@ -136,71 +431,148 @@ impl Encoder {
     }
 }
 
+// -------------------------------------------------------------- decoder --
+
+/// Cursor over an encoded buffer. Never panics on malformed input: every
+/// read validates against the remaining bytes and returns a structured
+/// [`WireError`]. Optionally carries an [`InternCache`] so interned
+/// references (`ValueRef`/`ExprRef`) resolve to previously provided blobs.
 pub struct Decoder<'a> {
     bytes: &'a [u8],
     pos: usize,
+    frame: Option<u8>,
+    cache: Option<&'a InternCache>,
+    local: Option<InternCache>,
 }
 
 impl<'a> Decoder<'a> {
+    /// Decoder without an intern cache: provides carried *in* the buffer
+    /// still resolve (a lazily created frame-local cache holds them), but
+    /// references to blobs from earlier frames miss with
+    /// [`WireErrorKind::MissingBlob`].
     pub fn new(bytes: &'a [u8]) -> Self {
-        Decoder { bytes, pos: 0 }
+        Decoder { bytes, pos: 0, frame: None, cache: None, local: None }
     }
 
+    /// Decoder backed by a long-lived worker [`InternCache`]: provides are
+    /// installed into it and references resolve across frames.
+    pub fn with_cache(bytes: &'a [u8], cache: &'a InternCache) -> Self {
+        Decoder { bytes, pos: 0, frame: None, cache: Some(cache), local: None }
+    }
+
+    /// True when every byte has been consumed.
     pub fn finished(&self) -> bool {
         self.pos == self.bytes.len()
     }
 
+    fn err_kind(&self, kind: WireErrorKind) -> WireError {
+        WireError { offset: self.pos, frame: self.frame, kind }
+    }
+
     fn err(&self, msg: &str) -> WireError {
-        WireError { offset: self.pos, message: msg.to_string() }
+        self.err_kind(WireErrorKind::Invalid(msg.to_string()))
+    }
+
+    fn bad_tag(&self, what: &'static str, found: u8) -> WireError {
+        self.err_kind(WireErrorKind::BadTag { what, found })
     }
 
     fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
-        if self.pos + n > self.bytes.len() {
-            return Err(self.err(&format!("truncated: need {n} bytes")));
+        let remaining = self.bytes.len() - self.pos;
+        if n > remaining {
+            return Err(self.err_kind(WireErrorKind::Truncated { needed: n, remaining }));
         }
         let s = &self.bytes[self.pos..self.pos + n];
         self.pos += n;
         Ok(s)
     }
 
+    /// Read one byte.
     pub fn u8(&mut self) -> Result<u8, WireError> {
         Ok(self.take(1)?[0])
     }
 
+    /// Read a fixed-width u32 LE.
     pub fn u32(&mut self) -> Result<u32, WireError> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
+    /// Read a fixed-width u64 LE.
     pub fn u64(&mut self) -> Result<u64, WireError> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
+    /// Read a fixed-width i64 LE.
     pub fn i64(&mut self) -> Result<i64, WireError> {
         Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
+    /// Read an f64 from IEEE-754 bits.
     pub fn f64(&mut self) -> Result<f64, WireError> {
         Ok(f64::from_bits(self.u64()?))
     }
 
+    /// Read a one-byte bool (any nonzero byte is `true`).
     pub fn bool(&mut self) -> Result<bool, WireError> {
         Ok(self.u8()? != 0)
     }
 
-    pub fn str(&mut self) -> Result<String, WireError> {
-        let n = self.u32()? as usize;
-        let bytes = self.take(n)?;
-        String::from_utf8(bytes.to_vec()).map_err(|_| self.err("invalid UTF-8"))
+    /// Read a LEB128 varint, rejecting encodings past 64 bits.
+    pub fn varint(&mut self) -> Result<u64, WireError> {
+        let mut out = 0u64;
+        let mut shift = 0u32;
+        loop {
+            let b = self.u8()?;
+            if shift >= 64 || (shift == 63 && (b & 0x7f) > 1) {
+                return Err(self.err_kind(WireErrorKind::VarintOverflow));
+            }
+            out |= u64::from(b & 0x7f) << shift;
+            if b & 0x80 == 0 {
+                return Ok(out);
+            }
+            shift += 7;
+        }
     }
 
-    /// Decode a length-prefixed f32 buffer into the **shared** allocation
-    /// [`Tensor`] stores.  §Perf: `from_le_bytes` is a no-op on LE targets,
-    /// so the loop compiles to a bulk copy; collecting from a `chunks_exact`
-    /// iterator lets the standard library write the `Arc` allocation
-    /// directly when it can (and costs at most one intermediate buffer
-    /// otherwise — safely, with no unsafe reinterpret).
+    /// Read a varint element count whose elements each occupy at least
+    /// `elem_min` bytes, rejecting counts the remaining buffer cannot
+    /// possibly satisfy — *before* any allocation sized by the count.
+    fn len_varint(&mut self, elem_min: usize, what: &'static str) -> Result<usize, WireError> {
+        let n = self.varint()?;
+        let remaining = self.bytes.len() - self.pos;
+        if n.checked_mul(elem_min as u64).map_or(true, |need| need > remaining as u64) {
+            return Err(self.err_kind(WireErrorKind::LengthOverflow {
+                what,
+                length: n,
+                remaining,
+            }));
+        }
+        Ok(n as usize)
+    }
+
+    /// Read a 16-byte content [`Digest`].
+    pub fn digest(&mut self) -> Result<Digest, WireError> {
+        let raw = self.take(16)?;
+        let mut out = [0u8; 16];
+        out.copy_from_slice(raw);
+        Ok(Digest(out))
+    }
+
+    /// Read a varint-length-prefixed UTF-8 string.
+    pub fn str(&mut self) -> Result<String, WireError> {
+        let n = self.len_varint(1, "string")?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| self.err_kind(WireErrorKind::BadUtf8))
+    }
+
+    /// Decode a varint-count-prefixed f32 buffer into the **shared**
+    /// allocation [`Tensor`] stores. §Perf: `from_le_bytes` is a no-op on
+    /// LE targets, so the loop compiles to a bulk copy; collecting from a
+    /// `chunks_exact` iterator lets the standard library write the `Arc`
+    /// allocation directly when it can (and costs at most one intermediate
+    /// buffer otherwise — safely, with no unsafe reinterpret).
     pub fn f32_arc(&mut self) -> Result<std::sync::Arc<[f32]>, WireError> {
-        let n = self.u32()? as usize;
+        let n = self.len_varint(4, "tensor data")?;
         let raw = self.take(n * 4)?;
         Ok(raw
             .chunks_exact(4)
@@ -215,10 +587,36 @@ impl<'a> Decoder<'a> {
     fn opt_u64(&mut self) -> Result<Option<u64>, WireError> {
         Ok(if self.bool()? { Some(self.u64()?) } else { None })
     }
+
+    /// Install a provided blob into the active cache (the shared worker
+    /// cache when present, else a lazily created frame-local one).
+    fn install_blob(&mut self, d: Digest, blob: InternedBlob) {
+        match self.cache {
+            Some(c) => c.insert(d, blob),
+            None => self.local.get_or_insert_with(InternCache::new).insert(d, blob),
+        }
+    }
+
+    fn value_blob(&self, dg: &Digest) -> Result<Value, WireError> {
+        let hit = match self.cache {
+            Some(c) => c.value(dg),
+            None => self.local.as_ref().and_then(|c| c.value(dg)),
+        };
+        hit.ok_or_else(|| self.err_kind(WireErrorKind::MissingBlob { digest: *dg }))
+    }
+
+    fn expr_blob(&self, dg: &Digest) -> Result<Arc<Expr>, WireError> {
+        let hit = match self.cache {
+            Some(c) => c.expr(dg),
+            None => self.local.as_ref().and_then(|c| c.expr(dg)),
+        };
+        hit.ok_or_else(|| self.err_kind(WireErrorKind::MissingBlob { digest: *dg }))
+    }
 }
 
 // ---------------------------------------------------------------- Value --
 
+/// Encode a [`Value`] (tag byte + payload, [`VALUE_TAG_TABLE`]).
 pub fn enc_value(e: &mut Encoder, v: &Value) {
     match v {
         Value::Unit => e.u8(0),
@@ -240,15 +638,15 @@ pub fn enc_value(e: &mut Encoder, v: &Value) {
         }
         Value::Tensor(t) => {
             e.u8(5);
-            e.u32(t.shape.len() as u32);
+            e.varint(t.shape.len() as u64);
             for d in &t.shape {
-                e.u64(*d as u64);
+                e.varint(*d as u64);
             }
             e.f32_slice(&t.data);
         }
         Value::List(items) => {
             e.u8(6);
-            e.u32(items.len() as u32);
+            e.varint(items.len() as u64);
             for item in items {
                 enc_value(e, item);
             }
@@ -256,6 +654,8 @@ pub fn enc_value(e: &mut Encoder, v: &Value) {
     }
 }
 
+/// Decode a [`Value`]. Tag 7 (`ValueRef`) resolves through the decoder's
+/// intern cache and fails with [`WireErrorKind::MissingBlob`] on a miss.
 pub fn dec_value(d: &mut Decoder) -> Result<Value, WireError> {
     Ok(match d.u8()? {
         0 => Value::Unit,
@@ -264,23 +664,39 @@ pub fn dec_value(d: &mut Decoder) -> Result<Value, WireError> {
         3 => Value::F64(d.f64()?),
         4 => Value::Str(d.str()?),
         5 => {
-            let rank = d.u32()? as usize;
+            let rank = d.len_varint(1, "tensor shape")?;
             let mut shape = Vec::with_capacity(rank);
             for _ in 0..rank {
-                shape.push(d.u64()? as usize);
+                shape.push(d.varint()? as usize);
             }
             let data = d.f32_arc()?;
+            let mut need: usize = 1;
+            for &dim in &shape {
+                need = need
+                    .checked_mul(dim)
+                    .ok_or_else(|| d.err("tensor shape product overflows"))?;
+            }
+            if need != data.len() {
+                return Err(d.err(&format!(
+                    "tensor shape wants {need} elements, data has {}",
+                    data.len()
+                )));
+            }
             Value::Tensor(Tensor::from_shared(shape, data).map_err(|m| d.err(&m))?)
         }
         6 => {
-            let n = d.u32()? as usize;
+            let n = d.len_varint(1, "list items")?;
             let mut items = Vec::with_capacity(n);
             for _ in 0..n {
                 items.push(dec_value(d)?);
             }
             Value::List(items)
         }
-        t => return Err(d.err(&format!("bad Value tag {t}"))),
+        7 => {
+            let dg = d.digest()?;
+            d.value_blob(&dg)?
+        }
+        t => return Err(d.bad_tag("Value", t)),
     })
 }
 
@@ -321,7 +737,7 @@ fn prim_from(tag: u8, d: &Decoder) -> Result<PrimOp, WireError> {
         11 => PrimOp::Mean,
         12 => PrimOp::Sqrt,
         13 => PrimOp::Concat,
-        t => return Err(d.err(&format!("bad PrimOp tag {t}"))),
+        t => return Err(d.bad_tag("PrimOp", t)),
     })
 }
 
@@ -340,19 +756,19 @@ fn emit_from(tag: u8, d: &Decoder) -> Result<EmitKind, WireError> {
         1 => EmitKind::Message,
         2 => EmitKind::Warning,
         3 => EmitKind::Progress,
-        t => return Err(d.err(&format!("bad EmitKind tag {t}"))),
+        t => return Err(d.bad_tag("EmitKind", t)),
     })
 }
 
 fn enc_exprs(e: &mut Encoder, items: &[Expr]) {
-    e.u32(items.len() as u32);
+    e.varint(items.len() as u64);
     for item in items {
         enc_expr(e, item);
     }
 }
 
 fn dec_exprs(d: &mut Decoder) -> Result<Vec<Expr>, WireError> {
-    let n = d.u32()? as usize;
+    let n = d.len_varint(1, "expression list")?;
     let mut out = Vec::with_capacity(n);
     for _ in 0..n {
         out.push(dec_expr(d)?);
@@ -360,6 +776,7 @@ fn dec_exprs(d: &mut Decoder) -> Result<Vec<Expr>, WireError> {
     Ok(out)
 }
 
+/// Encode an [`Expr`] (tag byte + payload, [`EXPR_TAG_TABLE`]).
 pub fn enc_expr(e: &mut Encoder, expr: &Expr) {
     match expr {
         Expr::Lit(v) => {
@@ -424,9 +841,9 @@ pub fn enc_expr(e: &mut Encoder, expr: &Expr) {
                 RngDist::Unif => 0,
                 RngDist::Norm => 1,
             });
-            e.u32(shape.len() as u32);
+            e.varint(shape.len() as u64);
             for d in shape {
-                e.u64(*d as u64);
+                e.varint(*d as u64);
             }
         }
         Expr::WithRngStream { index, body } => {
@@ -454,7 +871,7 @@ pub fn enc_expr(e: &mut Encoder, expr: &Expr) {
             e.str(param);
             e.u64(*base_index);
             enc_expr(e, body);
-            e.u32(elements.len() as u32);
+            e.varint(elements.len() as u64);
             for v in elements {
                 enc_value(e, v);
             }
@@ -483,8 +900,16 @@ pub fn enc_expr(e: &mut Encoder, expr: &Expr) {
     }
 }
 
+/// Decode an [`Expr`]. Tag 20 (`ExprRef`) resolves through the decoder's
+/// intern cache; inside a `MapChunk` (tag 17) the body slot may itself be
+/// an `ExprRef`, which shares the cached `Arc` directly.
 pub fn dec_expr(d: &mut Decoder) -> Result<Expr, WireError> {
-    Ok(match d.u8()? {
+    let tag = d.u8()?;
+    dec_expr_tagged(d, tag)
+}
+
+fn dec_expr_tagged(d: &mut Decoder, tag: u8) -> Result<Expr, WireError> {
+    Ok(match tag {
         0 => Expr::Lit(dec_value(d)?),
         1 => Expr::Var(d.str()?),
         2 => {
@@ -528,12 +953,12 @@ pub fn dec_expr(d: &mut Decoder) -> Result<Expr, WireError> {
             let dist = match d.u8()? {
                 0 => RngDist::Unif,
                 1 => RngDist::Norm,
-                t => return Err(d.err(&format!("bad RngDist tag {t}"))),
+                t => return Err(d.bad_tag("RngDist", t)),
             };
-            let rank = d.u32()? as usize;
+            let rank = d.len_varint(1, "rng shape")?;
             let mut shape = Vec::with_capacity(rank);
             for _ in 0..rank {
-                shape.push(d.u64()? as usize);
+                shape.push(d.varint()? as usize);
             }
             Expr::Rng { dist, shape }
         }
@@ -547,8 +972,14 @@ pub fn dec_expr(d: &mut Decoder) -> Result<Expr, WireError> {
         17 => {
             let param = d.str()?;
             let base_index = d.u64()?;
-            let body = std::sync::Arc::new(dec_expr(d)?);
-            let n = d.u32()? as usize;
+            let btag = d.u8()?;
+            let body = if btag == 20 {
+                let dg = d.digest()?;
+                d.expr_blob(&dg)?
+            } else {
+                Arc::new(dec_expr_tagged(d, btag)?)
+            };
+            let n = d.len_varint(1, "chunk elements")?;
             let mut elements = Vec::with_capacity(n);
             for _ in 0..n {
                 elements.push(dec_value(d)?);
@@ -559,7 +990,7 @@ pub fn dec_expr(d: &mut Decoder) -> Result<Expr, WireError> {
             let marker = match d.u8()? {
                 0 => None,
                 1 => Some(d.str()?),
-                t => return Err(d.err(&format!("bad ChaosKill marker flag {t}"))),
+                t => return Err(d.bad_tag("ChaosKill marker flag", t)),
             };
             Expr::ChaosKill { marker }
         }
@@ -568,27 +999,33 @@ pub fn dec_expr(d: &mut Decoder) -> Result<Expr, WireError> {
             let marker = match d.u8()? {
                 0 => None,
                 1 => Some(d.str()?),
-                t => return Err(d.err(&format!("bad ChaosHang marker flag {t}"))),
+                t => return Err(d.bad_tag("ChaosHang marker flag", t)),
             };
             Expr::ChaosHang { millis, marker }
         }
-        t => return Err(d.err(&format!("bad Expr tag {t}"))),
+        20 => {
+            let dg = d.digest()?;
+            let arc = d.expr_blob(&dg)?;
+            (*arc).clone()
+        }
+        t => return Err(d.bad_tag("Expr", t)),
     })
 }
 
 // ------------------------------------------------------------------ Env --
 
+/// Encode an [`Env`] of captured globals (count + name/value pairs).
 pub fn enc_env(e: &mut Encoder, env: &Env) {
-    let n = env.len();
-    e.u32(n as u32);
+    e.varint(env.len() as u64);
     for (k, v) in env.iter() {
         e.str(k);
         enc_value(e, v);
     }
 }
 
+/// Decode an [`Env`] of captured globals.
 pub fn dec_env(d: &mut Decoder) -> Result<Env, WireError> {
-    let n = d.u32()? as usize;
+    let n = d.len_varint(2, "env entries")?;
     let mut env = Env::new();
     for _ in 0..n {
         let k = d.str()?;
@@ -613,34 +1050,38 @@ fn cond_kind_from(tag: u8, d: &Decoder) -> Result<ConditionKind, WireError> {
         0 => ConditionKind::Message,
         1 => ConditionKind::Warning,
         2 => ConditionKind::Immediate,
-        t => return Err(d.err(&format!("bad ConditionKind tag {t}"))),
+        t => return Err(d.bad_tag("ConditionKind", t)),
     })
 }
 
+/// Encode a relayed [`Condition`] ([`CONDITION_TAG_TABLE`]).
 pub fn enc_condition(e: &mut Encoder, c: &Condition) {
     e.u8(cond_kind_tag(c.kind));
     e.str(&c.message);
     e.u64(c.seq);
 }
 
+/// Decode a relayed [`Condition`].
 pub fn dec_condition(d: &mut Decoder) -> Result<Condition, WireError> {
     let tag = d.u8()?;
     let kind = cond_kind_from(tag, d)?;
     Ok(Condition { kind, message: d.str()?, seq: d.u64()? })
 }
 
+/// Encode a [`Captured`] record (stdout + conditions + RNG-used flag).
 pub fn enc_captured(e: &mut Encoder, c: &Captured) {
     e.str(&c.stdout);
-    e.u32(c.conditions.len() as u32);
+    e.varint(c.conditions.len() as u64);
     for cond in &c.conditions {
         enc_condition(e, cond);
     }
     e.bool(c.rng_used);
 }
 
+/// Decode a [`Captured`] record.
 pub fn dec_captured(d: &mut Decoder) -> Result<Captured, WireError> {
     let stdout = d.str()?;
-    let n = d.u32()? as usize;
+    let n = d.len_varint(10, "conditions")?;
     let mut conditions = Vec::with_capacity(n);
     for _ in 0..n {
         conditions.push(dec_condition(d)?);
@@ -650,45 +1091,47 @@ pub fn dec_captured(d: &mut Decoder) -> Result<Captured, WireError> {
 
 // ----------------------------------------------------------- PlanSpec ----
 
+/// Encode a [`PlanSpec`] topology entry ([`PLAN_TAG_TABLE`]).
 pub fn enc_plan(e: &mut Encoder, p: &PlanSpec) {
     match p {
         PlanSpec::Sequential => e.u8(0),
         PlanSpec::ThreadPool { workers } => {
             e.u8(1);
-            e.u64(*workers as u64);
+            e.varint(*workers as u64);
         }
         PlanSpec::Multiprocess { workers } => {
             e.u8(2);
-            e.u64(*workers as u64);
+            e.varint(*workers as u64);
         }
         PlanSpec::Cluster { hosts } => {
             e.u8(3);
-            e.u32(hosts.len() as u32);
+            e.varint(hosts.len() as u64);
             for h in hosts {
                 e.str(h);
             }
         }
         PlanSpec::Batch { workers, submit_latency_ms, poll_interval_ms } => {
             e.u8(4);
-            e.u64(*workers as u64);
+            e.varint(*workers as u64);
             e.u64(*submit_latency_ms);
             e.u64(*poll_interval_ms);
         }
         PlanSpec::Custom { name, workers } => {
             e.u8(5);
             e.str(name);
-            e.u64(*workers as u64);
+            e.varint(*workers as u64);
         }
     }
 }
 
+/// Decode a [`PlanSpec`] topology entry.
 pub fn dec_plan(d: &mut Decoder) -> Result<PlanSpec, WireError> {
     Ok(match d.u8()? {
         0 => PlanSpec::Sequential,
-        1 => PlanSpec::ThreadPool { workers: d.u64()? as usize },
-        2 => PlanSpec::Multiprocess { workers: d.u64()? as usize },
+        1 => PlanSpec::ThreadPool { workers: d.varint()? as usize },
+        2 => PlanSpec::Multiprocess { workers: d.varint()? as usize },
         3 => {
-            let n = d.u32()? as usize;
+            let n = d.len_varint(1, "hosts")?;
             let mut hosts = Vec::with_capacity(n);
             for _ in 0..n {
                 hosts.push(d.str()?);
@@ -696,12 +1139,12 @@ pub fn dec_plan(d: &mut Decoder) -> Result<PlanSpec, WireError> {
             PlanSpec::Cluster { hosts }
         }
         4 => PlanSpec::Batch {
-            workers: d.u64()? as usize,
+            workers: d.varint()? as usize,
             submit_latency_ms: d.u64()?,
             poll_interval_ms: d.u64()?,
         },
-        5 => PlanSpec::Custom { name: d.str()?, workers: d.u64()? as usize },
-        t => return Err(d.err(&format!("bad PlanSpec tag {t}"))),
+        5 => PlanSpec::Custom { name: d.str()?, workers: d.varint()? as usize },
+        t => return Err(d.bad_tag("PlanSpec", t)),
     })
 }
 
@@ -711,7 +1154,7 @@ fn enc_retry(e: &mut Encoder, r: &Option<RetryPolicy>) {
     match r {
         Some(p) => {
             e.bool(true);
-            e.u32(p.max_attempts);
+            e.varint(u64::from(p.max_attempts));
             e.u64(p.backoff.as_nanos() as u64);
             e.f64(p.factor);
             e.bool(p.idempotent);
@@ -724,18 +1167,18 @@ fn dec_retry(d: &mut Decoder) -> Result<Option<RetryPolicy>, WireError> {
     if !d.bool()? {
         return Ok(None);
     }
-    let max_attempts = d.u32()?;
+    let max_attempts = d.varint()? as u32;
     let backoff = std::time::Duration::from_nanos(d.u64()?);
     let factor = d.f64()?;
     let idempotent = d.bool()?;
     Ok(Some(RetryPolicy { max_attempts, backoff, factor, idempotent }))
 }
 
-/// Protocol-v4 session context record: origin session id, topology tail,
+/// Encode the session-context record: origin session id, topology tail,
 /// plan-wide retry default, and the nested counter base.
 pub fn enc_session_context(e: &mut Encoder, c: &SessionContext) {
     e.u64(c.session);
-    e.u32(c.nested_plan.len() as u32);
+    e.varint(c.nested_plan.len() as u64);
     for p in &c.nested_plan {
         enc_plan(e, p);
     }
@@ -743,9 +1186,10 @@ pub fn enc_session_context(e: &mut Encoder, c: &SessionContext) {
     e.u64(c.counter_base);
 }
 
+/// Decode the session-context record.
 pub fn dec_session_context(d: &mut Decoder) -> Result<SessionContext, WireError> {
     let session = d.u64()?;
-    let n = d.u32()? as usize;
+    let n = d.len_varint(1, "nested plans")?;
     let mut nested_plan = Vec::with_capacity(n);
     for _ in 0..n {
         nested_plan.push(dec_plan(d)?);
@@ -755,26 +1199,28 @@ pub fn dec_session_context(d: &mut Decoder) -> Result<SessionContext, WireError>
     Ok(SessionContext { session, nested_plan, retry, counter_base })
 }
 
+/// Encode per-task options (seed, streams, capture flags, context).
 pub fn enc_task_opts(e: &mut Encoder, o: &TaskOpts) {
     e.opt_u64(&o.seed);
     e.u64(o.stream_index);
     e.bool(o.capture_stdout);
     e.bool(o.capture_conditions);
     e.opt_str(&o.label);
-    e.u32(o.depth);
+    e.varint(u64::from(o.depth));
     enc_session_context(e, &o.context);
-    e.u32(o.attempt);
+    e.varint(u64::from(o.attempt));
 }
 
+/// Decode per-task options.
 pub fn dec_task_opts(d: &mut Decoder) -> Result<TaskOpts, WireError> {
     let seed = d.opt_u64()?;
     let stream_index = d.u64()?;
     let capture_stdout = d.bool()?;
     let capture_conditions = d.bool()?;
     let label = d.opt_str()?;
-    let depth = d.u32()?;
+    let depth = d.varint()? as u32;
     let context = dec_session_context(d)?;
-    let attempt = d.u32()?;
+    let attempt = d.varint()? as u32;
     Ok(TaskOpts {
         seed,
         stream_index,
@@ -787,16 +1233,166 @@ pub fn dec_task_opts(d: &mut Decoder) -> Result<TaskOpts, WireError> {
     })
 }
 
+// ------------------------------------------------------------ interning --
+
+/// Encoded blob bytes for a value: kind byte 0 + the value encoding.
+/// These bytes are what the intern store holds and what `Blob` frames and
+/// task-frame provides carry.
+pub fn value_blob_bytes(v: &Value) -> Vec<u8> {
+    let mut e = Encoder::with_capacity(v.byte_size() + 16);
+    e.u8(0);
+    enc_value(&mut e, v);
+    e.into_bytes()
+}
+
+/// Encoded blob bytes for an expression: kind byte 1 + the expression
+/// encoding. Digested with [`intern::digest_bytes`] over exactly these
+/// bytes, so the digest is trivially content-addressed.
+pub fn expr_blob_bytes(x: &Expr) -> Vec<u8> {
+    let mut e = Encoder::new();
+    e.u8(1);
+    enc_expr(&mut e, x);
+    e.into_bytes()
+}
+
+/// Decode intern blob bytes (as produced by [`value_blob_bytes`] /
+/// [`expr_blob_bytes`]) into an [`InternedBlob`].
+pub fn decode_blob(bytes: &[u8]) -> Result<InternedBlob, WireError> {
+    let mut d = Decoder::new(bytes);
+    let blob = match d.u8()? {
+        0 => InternedBlob::Value(dec_value(&mut d)?),
+        1 => InternedBlob::Expr(Arc::new(dec_expr(&mut d)?)),
+        t => return Err(d.bad_tag("blob kind", t)),
+    };
+    if !d.finished() {
+        let count = d.bytes.len() - d.pos;
+        return Err(d.err_kind(WireErrorKind::TrailingBytes { count }));
+    }
+    Ok(blob)
+}
+
+/// Which task slots encode as digest references instead of inline payloads.
+struct RefPlan {
+    globals: HashMap<String, Digest>,
+    body: Option<Digest>,
+}
+
+/// Encode a task frame with content-hashed interning against one worker
+/// seat's [`SeatLedger`]: captured globals and `MapChunk` bodies whose
+/// encoded size reaches [`intern::INTERN_MIN`] are digested; blobs the seat
+/// has not been provided yet ride in the frame's provide section, and
+/// everything else is a 17-byte reference. Blob bytes are pinned in the
+/// process-global intern store so a worker cache miss can be answered via
+/// the `NeedBlob` protocol.
+pub fn encode_task_message_interned(t: &TaskSpec, ledger: &mut SeatLedger) -> Vec<u8> {
+    let session = t.opts.context.session;
+    let mut provides: Vec<(Digest, Arc<Vec<u8>>)> = Vec::new();
+    let mut plan = RefPlan { globals: HashMap::new(), body: None };
+    for (name, value) in t.globals.iter() {
+        if value.byte_size() < intern::INTERN_MIN {
+            continue;
+        }
+        let dg = intern::digest_value(value);
+        let bytes = intern::store_ensure(dg, || value_blob_bytes(value));
+        if ledger.admit(dg) {
+            intern::note_ref(session);
+        } else {
+            intern::note_provide(session);
+            provides.push((dg, bytes));
+        }
+        plan.globals.insert(name.to_string(), dg);
+    }
+    if let Expr::MapChunk { body, .. } = &t.expr {
+        let bytes = expr_blob_bytes(body);
+        if bytes.len() - 1 >= intern::INTERN_MIN {
+            let dg = intern::digest_bytes(&bytes);
+            let shared = intern::store_ensure(dg, move || bytes);
+            if ledger.admit(dg) {
+                intern::note_ref(session);
+            } else {
+                intern::note_provide(session);
+                provides.push((dg, shared));
+            }
+            plan.body = Some(dg);
+        }
+    }
+    let mut e = Encoder::with_capacity(task_size_hint(t));
+    e.varint(provides.len() as u64);
+    for (dg, bytes) in &provides {
+        e.digest(dg);
+        e.varint(bytes.len() as u64);
+        e.raw(bytes);
+    }
+    enc_task_record(&mut e, t, Some(&plan));
+    finish_frame(1, e.into_bytes(), true)
+}
+
+/// Encode a [`TaskSpec`] body with no interning: an empty provide section
+/// followed by the plain task record.
 pub fn enc_task(e: &mut Encoder, t: &TaskSpec) {
+    e.varint(0);
+    enc_task_record(e, t, None);
+}
+
+fn enc_task_record(e: &mut Encoder, t: &TaskSpec, plan: Option<&RefPlan>) {
     e.str(&t.id);
-    enc_expr(e, &t.expr);
-    enc_env(e, &t.globals);
+    match (plan.and_then(|p| p.body), &t.expr) {
+        (Some(dg), Expr::MapChunk { param, elements, base_index, .. }) => {
+            e.u8(17);
+            e.str(param);
+            e.u64(*base_index);
+            e.u8(20);
+            e.digest(&dg);
+            e.varint(elements.len() as u64);
+            for v in elements {
+                enc_value(e, v);
+            }
+        }
+        _ => enc_expr(e, &t.expr),
+    }
+    let interned = plan.map(|p| &p.globals);
+    e.varint(t.globals.len() as u64);
+    for (k, v) in t.globals.iter() {
+        e.str(k);
+        match interned.and_then(|m| m.get(k)) {
+            Some(dg) => {
+                e.u8(7);
+                e.digest(dg);
+            }
+            None => enc_value(e, v),
+        }
+    }
     enc_task_opts(e, &t.opts);
+}
+
+/// Decode a task body: install the provide section into the decoder's
+/// intern cache, then decode the task record (whose `ValueRef`/`ExprRef`
+/// slots resolve through that cache).
+pub fn dec_task(d: &mut Decoder) -> Result<TaskSpec, WireError> {
+    let n = d.len_varint(17, "intern provides")?;
+    for _ in 0..n {
+        let dg = d.digest()?;
+        let len = d.len_varint(1, "intern blob")?;
+        let bytes = d.take(len)?;
+        let blob = decode_blob(bytes).map_err(|mut e| {
+            e.frame = d.frame;
+            e
+        })?;
+        d.install_blob(dg, blob);
+    }
+    Ok(TaskSpec {
+        id: d.str()?,
+        expr: dec_expr(d)?,
+        globals: dec_env(d)?,
+        opts: dec_task_opts(d)?,
+    })
 }
 
 /// Approximate encoded size of a task (§Perf: drives
 /// [`Encoder::with_capacity`] so tensor-heavy tasks — large captured
 /// globals, packed `MapChunk` elements — serialize into one allocation).
+/// Always an over-estimate of the *uncompressed* v6 encoding, which is
+/// what lets `analysis::estimate_export_size` stay a sound upper bound.
 pub fn task_size_hint(t: &TaskSpec) -> usize {
     let mut hint = 128 + t.id.len() + t.globals.byte_size();
     t.expr.walk(&mut |e| {
@@ -812,15 +1408,7 @@ pub fn task_size_hint(t: &TaskSpec) -> usize {
     hint
 }
 
-pub fn dec_task(d: &mut Decoder) -> Result<TaskSpec, WireError> {
-    Ok(TaskSpec {
-        id: d.str()?,
-        expr: dec_expr(d)?,
-        globals: dec_env(d)?,
-        opts: dec_task_opts(d)?,
-    })
-}
-
+/// Encode a task result (outcome, captured output, metrics, attempt).
 pub fn enc_result(e: &mut Encoder, r: &TaskResult) {
     e.str(&r.id);
     match &r.outcome {
@@ -837,9 +1425,10 @@ pub fn enc_result(e: &mut Encoder, r: &TaskResult) {
     enc_captured(e, &r.captured);
     e.u64(r.metrics.started_ns);
     e.u64(r.metrics.finished_ns);
-    e.u32(r.attempt);
+    e.varint(u64::from(r.attempt));
 }
 
+/// Decode a task result.
 pub fn dec_result(d: &mut Decoder) -> Result<TaskResult, WireError> {
     let id = d.str()?;
     let outcome = match d.u8()? {
@@ -849,17 +1438,73 @@ pub fn dec_result(d: &mut Decoder) -> Result<TaskResult, WireError> {
             let call = d.opt_str()?;
             TaskOutcome::Err(EvalError { message, call })
         }
-        t => return Err(d.err(&format!("bad TaskOutcome tag {t}"))),
+        t => return Err(d.bad_tag("TaskOutcome", t)),
     };
     let captured = dec_captured(d)?;
     let metrics = TaskMetrics { started_ns: d.u64()?, finished_ns: d.u64()? };
-    let attempt = d.u32()?;
+    let attempt = d.varint()? as u32;
     Ok(TaskResult { id, outcome, captured, metrics, attempt })
 }
 
-// ------------------------------------------------------------- Message --
+// ------------------------------------------------------------- framing --
 
+/// The two magic bytes opening every v6 frame.
+pub const MAGIC: [u8; 2] = *b"RF";
+
+/// Frame kind byte for a [`Message`] ([`FRAME_KIND_TABLE`]).
+pub fn frame_kind(m: &Message) -> u8 {
+    match m {
+        Message::Hello { .. } => 0,
+        Message::Task(_) => 1,
+        Message::Immediate { .. } => 2,
+        Message::Result(_) => 3,
+        Message::Shutdown => 4,
+        Message::Ping => 5,
+        Message::Pong => 6,
+        Message::Heartbeat { .. } => 7,
+        Message::Cancel { .. } => 8,
+        Message::NeedBlob { .. } => 9,
+        Message::Blob { .. } => 10,
+    }
+}
+
+/// Wrap an encoded body in the v6 frame header: magic + version + kind +
+/// codec + varint body length. When `compress` is set the body goes
+/// through [`codec::maybe_compress`] (which only picks the compressed
+/// codec on a strict byte win).
+fn finish_frame(kind: u8, body: Vec<u8>, compress: bool) -> Vec<u8> {
+    let (codec_id, body) =
+        if compress { codec::maybe_compress(body) } else { (codec::CODEC_RAW, body) };
+    let mut out = Vec::with_capacity(body.len() + 16);
+    out.extend_from_slice(&MAGIC);
+    out.push(PROTOCOL_VERSION as u8);
+    out.push(kind);
+    out.push(codec_id);
+    let mut len = body.len() as u64;
+    loop {
+        let b = (len & 0x7f) as u8;
+        len >>= 7;
+        if len == 0 {
+            out.push(b);
+            break;
+        }
+        out.push(b | 0x80);
+    }
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Encode a [`Message`] as a complete v6 frame (header + body), with
+/// payload-bearing frames (`Task`/`Result`/`Blob`) eligible for
+/// compression.
 pub fn encode_message(m: &Message) -> Vec<u8> {
+    encode_message_opts(m, true)
+}
+
+/// [`encode_message`] with explicit control over compression. Passing
+/// `compress = false` yields the raw (still framed) encoding — the
+/// baseline the benches and the export-size estimator compare against.
+pub fn encode_message_opts(m: &Message, compress: bool) -> Vec<u8> {
     let mut e = match m {
         // §Perf: size-hinted buffer for the payload-bearing messages.
         Message::Task(t) => Encoder::with_capacity(task_size_hint(t)),
@@ -868,46 +1513,49 @@ pub fn encode_message(m: &Message) -> Vec<u8> {
     };
     match m {
         Message::Hello { worker_id, version } => {
-            e.u8(0);
             e.str(worker_id);
-            e.u32(*version);
+            e.varint(u64::from(*version));
         }
-        Message::Task(t) => {
-            e.u8(1);
-            enc_task(&mut e, t);
-        }
+        Message::Task(t) => enc_task(&mut e, t),
         Message::Immediate { task_id, condition } => {
-            e.u8(2);
             e.str(task_id);
             enc_condition(&mut e, condition);
         }
-        Message::Result(r) => {
-            e.u8(3);
-            enc_result(&mut e, r);
+        Message::Result(r) => enc_result(&mut e, r),
+        Message::Shutdown | Message::Ping | Message::Pong => {}
+        Message::Heartbeat { task_id } => e.str(task_id),
+        Message::Cancel { task_id } => e.str(task_id),
+        Message::NeedBlob { digests } => {
+            e.varint(digests.len() as u64);
+            for dg in digests {
+                e.digest(dg);
+            }
         }
-        Message::Shutdown => e.u8(4),
-        Message::Ping => e.u8(5),
-        Message::Pong => e.u8(6),
-        Message::Heartbeat { task_id } => {
-            e.u8(7);
-            e.str(task_id);
-        }
-        Message::Cancel { task_id } => {
-            e.u8(8);
-            e.str(task_id);
+        Message::Blob { digest, bytes } => {
+            e.digest(digest);
+            match bytes {
+                Some(b) => {
+                    e.bool(true);
+                    e.varint(b.len() as u64);
+                    e.raw(b);
+                }
+                None => e.bool(false),
+            }
         }
     }
-    e.into_bytes()
+    let do_compress = compress
+        && matches!(m, Message::Task(_) | Message::Result(_) | Message::Blob { .. });
+    finish_frame(frame_kind(m), e.into_bytes(), do_compress)
 }
 
-/// Encode a `Message::Task` directly from a reference (§Perf: avoids
+/// Encode a `Message::Task` frame directly from a reference (§Perf: avoids
 /// cloning large captured globals just to wrap them in the enum, and
-/// pre-sizes the buffer from the task's payload bytes).
+/// pre-sizes the buffer from the task's payload bytes). No interning; see
+/// [`encode_task_message_interned`] for the seat-aware path.
 pub fn encode_task_message(t: &TaskSpec) -> Vec<u8> {
-    let mut e = Encoder::with_capacity(1 + task_size_hint(t));
-    e.u8(1); // Message::Task tag — keep in sync with encode_message
+    let mut e = Encoder::with_capacity(task_size_hint(t));
     enc_task(&mut e, t);
-    e.into_bytes()
+    finish_frame(1, e.into_bytes(), true)
 }
 
 fn result_size_hint(r: &TaskResult) -> usize {
@@ -918,10 +1566,83 @@ fn result_size_hint(r: &TaskResult) -> usize {
     payload + r.id.len() + r.captured.stdout.len()
 }
 
+/// Decode a complete v6 frame (header + body) without an intern cache.
 pub fn decode_message(bytes: &[u8]) -> Result<Message, WireError> {
+    decode_message_cached(bytes, None)
+}
+
+/// Decode a complete v6 frame, resolving interned references through
+/// `cache` when provided. Validates magic, version, frame kind, codec,
+/// and that the declared body length matches the bytes present.
+pub fn decode_message_cached(
+    bytes: &[u8],
+    cache: Option<&InternCache>,
+) -> Result<Message, WireError> {
     let mut d = Decoder::new(bytes);
-    let m = match d.u8()? {
-        0 => Message::Hello { worker_id: d.str()?, version: d.u32()? },
+    let magic = d.take(2)?;
+    if magic != MAGIC {
+        let found = [magic[0], magic[1]];
+        return Err(d.err_kind(WireErrorKind::BadMagic { found }));
+    }
+    let version = d.u8()?;
+    if version != PROTOCOL_VERSION as u8 {
+        return Err(d.err_kind(WireErrorKind::BadVersion {
+            found: version,
+            expected: PROTOCOL_VERSION as u8,
+        }));
+    }
+    let kind = d.u8()?;
+    let codec_id = d.u8()?;
+    let len = d.varint()?;
+    let remaining = bytes.len() - d.pos;
+    if len != remaining as u64 {
+        let mut e = d.err_kind(WireErrorKind::LengthOverflow {
+            what: "frame body",
+            length: len,
+            remaining,
+        });
+        e.frame = Some(kind);
+        return Err(e);
+    }
+    decode_frame_body(kind, codec_id, &bytes[d.pos..], cache)
+}
+
+/// Decode a frame *body* whose header (`kind`, `codec_id`) was already
+/// parsed — the entry point stream readers use after
+/// [`crate::ipc::frame::read_frame`].
+pub fn decode_frame_body(
+    kind: u8,
+    codec_id: u8,
+    body: &[u8],
+    cache: Option<&InternCache>,
+) -> Result<Message, WireError> {
+    let decompressed;
+    let body: &[u8] = match codec_id {
+        codec::CODEC_RAW => body,
+        codec::CODEC_DELTA_RLE => {
+            decompressed = codec::decompress(body, crate::ipc::frame::MAX_FRAME as usize)
+                .map_err(|m| WireError {
+                    offset: 0,
+                    frame: Some(kind),
+                    kind: WireErrorKind::Invalid(format!("codec: {m}")),
+                })?;
+            &decompressed
+        }
+        other => {
+            return Err(WireError {
+                offset: 0,
+                frame: Some(kind),
+                kind: WireErrorKind::BadCodec { found: other },
+            })
+        }
+    };
+    let mut d = match cache {
+        Some(c) => Decoder::with_cache(body, c),
+        None => Decoder::new(body),
+    };
+    d.frame = Some(kind);
+    let m = match kind {
+        0 => Message::Hello { worker_id: d.str()?, version: d.varint()? as u32 },
         1 => Message::Task(dec_task(&mut d)?),
         2 => Message::Immediate { task_id: d.str()?, condition: dec_condition(&mut d)? },
         3 => Message::Result(dec_result(&mut d)?),
@@ -930,10 +1651,29 @@ pub fn decode_message(bytes: &[u8]) -> Result<Message, WireError> {
         6 => Message::Pong,
         7 => Message::Heartbeat { task_id: d.str()? },
         8 => Message::Cancel { task_id: d.str()? },
-        t => return Err(d.err(&format!("bad Message tag {t}"))),
+        9 => {
+            let n = d.len_varint(16, "digest list")?;
+            let mut digests = Vec::with_capacity(n);
+            for _ in 0..n {
+                digests.push(d.digest()?);
+            }
+            Message::NeedBlob { digests }
+        }
+        10 => {
+            let digest = d.digest()?;
+            let bytes = if d.bool()? {
+                let n = d.len_varint(1, "blob")?;
+                Some(d.take(n)?.to_vec())
+            } else {
+                None
+            };
+            Message::Blob { digest, bytes }
+        }
+        other => return Err(d.err_kind(WireErrorKind::BadFrameKind { found: other })),
     };
     if !d.finished() {
-        return Err(d.err("trailing bytes in message"));
+        let count = d.bytes.len() - d.pos;
+        return Err(d.err_kind(WireErrorKind::TrailingBytes { count }));
     }
     Ok(m)
 }
@@ -1005,7 +1745,7 @@ mod tests {
 
     #[test]
     fn map_chunk_roundtrips_with_tensor_elements() {
-        let body = std::sync::Arc::new(Expr::add(Expr::var("x"), Expr::runif(1)));
+        let body = Arc::new(Expr::add(Expr::var("x"), Expr::runif(1)));
         let chunk = Expr::map_chunk(
             "x",
             body,
@@ -1023,14 +1763,14 @@ mod tests {
     #[test]
     fn map_chunk_encodes_body_once() {
         // The whole point of the first-class chunk: n elements, one body.
-        let body = std::sync::Arc::new(Expr::call(
+        let body = Arc::new(Expr::call(
             "a_rather_long_kernel_name_to_make_body_bytes_visible",
             vec![Expr::var("x")],
         ));
         let encoded_len = |n: usize| {
             let chunk = Expr::map_chunk(
                 "x",
-                std::sync::Arc::clone(&body),
+                Arc::clone(&body),
                 (0..n as i64).map(Value::I64).collect(),
                 0,
             );
@@ -1045,6 +1785,129 @@ mod tests {
     }
 
     #[test]
+    fn varint_roundtrip_boundaries() {
+        for v in [0u64, 1, 127, 128, 16383, 16384, u64::from(u32::MAX), u64::MAX] {
+            let mut e = Encoder::new();
+            e.varint(v);
+            let bytes = e.into_bytes();
+            let mut d = Decoder::new(&bytes);
+            assert_eq!(d.varint().unwrap(), v, "varint {v}");
+            assert!(d.finished());
+        }
+        // A 10-byte varint claiming a 65th bit must be rejected.
+        let overlong = [0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0xff, 0x02];
+        let err = Decoder::new(&overlong).varint().unwrap_err();
+        assert_eq!(err.kind, WireErrorKind::VarintOverflow);
+    }
+
+    #[test]
+    fn length_claims_beyond_buffer_rejected() {
+        // A Value::Str claiming 1 GiB with 3 bytes remaining: the decoder
+        // must reject before allocating.
+        let mut e = Encoder::new();
+        e.u8(4); // Str tag
+        e.varint(1 << 30);
+        e.raw(b"abc");
+        let bytes = e.into_bytes();
+        let err = dec_value(&mut Decoder::new(&bytes)).unwrap_err();
+        assert!(
+            matches!(err.kind, WireErrorKind::LengthOverflow { what: "string", .. }),
+            "{err}"
+        );
+        // Same for tensor data: the claimed f32 count must fit in bytes.
+        let mut e = Encoder::new();
+        e.u8(5); // Tensor tag
+        e.varint(1); // rank
+        e.varint(1 << 40); // dim
+        e.varint(1 << 40); // claimed f32 count
+        let bytes = e.into_bytes();
+        assert!(dec_value(&mut Decoder::new(&bytes)).is_err());
+    }
+
+    #[test]
+    fn structured_error_reports_tag_and_frame() {
+        // Unknown frame kind in a hand-built v6 header.
+        let mut frame = Vec::from(MAGIC);
+        frame.push(PROTOCOL_VERSION as u8);
+        frame.push(99); // kind
+        frame.push(codec::CODEC_RAW);
+        frame.push(0); // body length varint
+        let err = decode_message(&frame).unwrap_err();
+        assert_eq!(err.kind, WireErrorKind::BadFrameKind { found: 99 });
+        assert_eq!(err.frame, Some(99));
+        assert!(format!("{err}").contains("unknown frame kind 99"), "{err}");
+        // A bad tag inside a payload reports which table and which byte.
+        let err = dec_value(&mut Decoder::new(&[42])).unwrap_err();
+        assert_eq!(err.kind, WireErrorKind::BadTag { what: "Value", found: 42 });
+    }
+
+    #[test]
+    fn bad_magic_and_version_rejected() {
+        let mut frame = encode_message(&Message::Ping);
+        let mut wrong_magic = frame.clone();
+        wrong_magic[0] = b'X';
+        let err = decode_message(&wrong_magic).unwrap_err();
+        assert!(matches!(err.kind, WireErrorKind::BadMagic { .. }), "{err}");
+        // A v5 frame arriving at a v6 decoder is a structured version error.
+        frame[2] = 5;
+        let err = decode_message(&frame).unwrap_err();
+        assert_eq!(
+            err.kind,
+            WireErrorKind::BadVersion { found: 5, expected: PROTOCOL_VERSION as u8 }
+        );
+    }
+
+    #[test]
+    fn tags_match_tables() {
+        let samples: Vec<Message> = vec![
+            Message::Hello { worker_id: "w".into(), version: PROTOCOL_VERSION },
+            Message::Task(TaskSpec {
+                id: "t".into(),
+                expr: Expr::lit(1.0),
+                globals: Env::new(),
+                opts: TaskOpts::default(),
+            }),
+            Message::Immediate {
+                task_id: "t".into(),
+                condition: Condition {
+                    kind: ConditionKind::Message,
+                    message: "m".into(),
+                    seq: 0,
+                },
+            },
+            Message::Result(TaskResult {
+                id: "t".into(),
+                outcome: TaskOutcome::Ok(Value::Unit),
+                captured: Captured::default(),
+                metrics: TaskMetrics::default(),
+                attempt: 0,
+            }),
+            Message::Shutdown,
+            Message::Ping,
+            Message::Pong,
+            Message::Heartbeat { task_id: "t".into() },
+            Message::Cancel { task_id: "t".into() },
+            Message::NeedBlob { digests: vec![Digest([0; 16])] },
+            Message::Blob { digest: Digest([0; 16]), bytes: None },
+        ];
+        assert_eq!(samples.len(), FRAME_KIND_TABLE.len());
+        for (i, m) in samples.iter().enumerate() {
+            assert_eq!(frame_kind(m), FRAME_KIND_TABLE[i].0, "{}", FRAME_KIND_TABLE[i].1);
+            let frame = encode_message(m);
+            assert_eq!(frame[3], FRAME_KIND_TABLE[i].0, "header {}", FRAME_KIND_TABLE[i].1);
+        }
+        // Spot-check the value/expr tag bytes against the tables.
+        let mut e = Encoder::new();
+        enc_value(&mut e, &Value::Tensor(Tensor::scalar(1.0)));
+        assert_eq!(e.into_bytes()[0], 5, "Tensor tag");
+        let mut e = Encoder::new();
+        enc_expr(&mut e, &Expr::var("x"));
+        assert_eq!(e.into_bytes()[0], 1, "Var tag");
+        assert_eq!(VALUE_TAG_TABLE.len(), 8);
+        assert_eq!(EXPR_TAG_TABLE.len(), 21);
+    }
+
+    #[test]
     fn task_size_hint_covers_tensor_payload() {
         let mut globals = Env::new();
         globals.insert("t", Value::Tensor(Tensor::zeros(&[1 << 14])));
@@ -1055,9 +1918,9 @@ mod tests {
             opts: TaskOpts::default(),
         };
         let hint = task_size_hint(&task);
-        let actual = encode_task_message(&task).len();
-        // The hint must cover at least the dominant payload bytes so the
-        // encoder allocates once, and stay within 2x of the actual size.
+        // Compare against the *uncompressed* frame: the hint sizes the
+        // encode buffer, which is filled before any compression runs.
+        let actual = encode_message_opts(&Message::Task(task.clone()), false).len();
         assert!(hint >= (1 << 14) * 4, "hint {hint} misses the payload");
         assert!(hint <= actual * 2, "hint {hint} vs actual {actual}");
     }
@@ -1192,16 +2055,79 @@ mod tests {
             },
             Message::Heartbeat { task_id: "t-hb".into() },
             Message::Cancel { task_id: "t-cx".into() },
+            Message::NeedBlob { digests: vec![Digest([1; 16]), Digest([2; 16])] },
+            Message::Blob { digest: Digest([3; 16]), bytes: Some(vec![9, 8, 7]) },
+            Message::Blob { digest: Digest([4; 16]), bytes: None },
         ] {
             assert_eq!(decode_message(&encode_message(&m)).unwrap(), m);
         }
     }
 
     #[test]
+    fn compression_roundtrip_and_wins() {
+        let mut globals = Env::new();
+        globals.insert("t", Value::Tensor(Tensor::zeros(&[1 << 14]))); // 64 KiB
+        let task = TaskSpec {
+            id: "c".into(),
+            expr: Expr::prim(PrimOp::Sum, vec![Expr::var("t")]),
+            globals,
+            opts: TaskOpts::default(),
+        };
+        let msg = Message::Task(task);
+        let raw = encode_message_opts(&msg, false);
+        let packed = encode_message_opts(&msg, true);
+        assert!(packed.len() < raw.len() / 10, "packed {} raw {}", packed.len(), raw.len());
+        assert_eq!(decode_message(&raw).unwrap(), msg);
+        assert_eq!(decode_message(&packed).unwrap(), msg);
+    }
+
+    #[test]
+    fn interned_task_roundtrips_and_shrinks() {
+        let mut globals = Env::new();
+        globals.insert("g", Value::Tensor(Tensor::zeros(&[1024]))); // 4 KiB
+        let body = Arc::new(Expr::seq(vec![
+            Expr::lit(Value::Tensor(Tensor::zeros(&[600]))), // ~2.4 KiB body
+            Expr::var("x"),
+        ]));
+        let mk = |attempt: u32| TaskSpec {
+            id: format!("t-{attempt}"),
+            expr: Expr::map_chunk(
+                "x",
+                Arc::clone(&body),
+                vec![Value::I64(1), Value::I64(2)],
+                0,
+            ),
+            globals: globals.clone(),
+            opts: TaskOpts { attempt, ..TaskOpts::default() },
+        };
+        let mut ledger = SeatLedger::with_cap(8);
+        let cache = InternCache::with_cap(8);
+        let first = encode_task_message_interned(&mk(0), &mut ledger);
+        let second = encode_task_message_interned(&mk(1), &mut ledger);
+        // The second frame carries only references — it must be a small
+        // fraction of the raw (uninterned, uncompressed) resend.
+        let resend = encode_message_opts(&Message::Task(mk(1)), false).len();
+        assert!(second.len() < resend / 10, "refs {} vs resend {resend}", second.len());
+        // Both frames decode bit-identically through the worker cache.
+        assert_eq!(
+            decode_message_cached(&first, Some(&cache)).unwrap(),
+            Message::Task(mk(0))
+        );
+        assert_eq!(
+            decode_message_cached(&second, Some(&cache)).unwrap(),
+            Message::Task(mk(1))
+        );
+        // Without the provides, a reference-only frame is a structured miss
+        // (recovered in production via the NeedBlob protocol).
+        let err = decode_message(&second).unwrap_err();
+        assert!(matches!(err.kind, WireErrorKind::MissingBlob { .. }), "{err}");
+    }
+
+    #[test]
     fn corrupt_bytes_fail_cleanly() {
         assert!(decode_message(&[]).is_err());
         assert!(decode_message(&[99]).is_err());
-        // Truncated task message.
+        // Truncated task frame.
         let msg = Message::Task(TaskSpec {
             id: "x".into(),
             expr: Expr::lit(1.0),
@@ -1210,7 +2136,7 @@ mod tests {
         });
         let bytes = encode_message(&msg);
         assert!(decode_message(&bytes[..bytes.len() - 3]).is_err());
-        // Trailing garbage.
+        // Trailing garbage breaks the declared body length.
         let mut extended = bytes.clone();
         extended.push(0);
         assert!(decode_message(&extended).is_err());

@@ -9,7 +9,9 @@ use std::time::{SystemTime, UNIX_EPOCH};
 
 use crate::api::conditions::{CaptureBuffer, Condition};
 use crate::api::error::FutureError;
-use crate::ipc::frame::{read_message, write_message};
+use crate::ipc::frame::{read_frame, write_message};
+use crate::ipc::intern::InternCache;
+use crate::ipc::wire;
 use crate::ipc::{Message, TaskMetrics, TaskOutcome, TaskResult, TaskSpec, PROTOCOL_VERSION};
 use crate::runtime::RuntimeHandle;
 use crate::util::uuid_v4;
@@ -104,9 +106,13 @@ pub fn run_worker<R: Read, W: Write>(
 ) -> Result<(), FutureError> {
     let worker_id = uuid_v4();
     let midwrite = std::env::var(crate::backend::supervisor::MIDWRITE_ENV).ok();
+    // Protocol-v6 intern cache: task frames install provided blobs here and
+    // reference-only frames resolve through it (with NeedBlob recovery on a
+    // miss — see read_worker_message).
+    let cache = InternCache::new();
     write_message(&mut writer, &Message::Hello { worker_id, version: PROTOCOL_VERSION })?;
     loop {
-        match read_message(&mut reader)? {
+        match read_worker_message(&mut reader, &mut writer, &cache)? {
             None | Some(Message::Shutdown) => return Ok(()),
             Some(Message::Ping) => write_message(&mut writer, &Message::Pong)?,
             Some(Message::Task(task)) => {
@@ -164,6 +170,9 @@ pub fn run_worker<R: Read, W: Write>(
             // single-threaded worker cannot observe one mid-evaluation —
             // the coordinator's seat kill is the enforcement path there.
             Some(Message::Cancel { .. }) => {}
+            // A stray Blob (answering a NeedBlob that already resolved) or
+            // a NeedBlob echoed back at us is dropped, not fatal.
+            Some(Message::NeedBlob { .. }) | Some(Message::Blob { .. }) => {}
             Some(other) => {
                 return Err(FutureError::Channel(format!(
                     "worker received unexpected message: {other:?}"
@@ -173,8 +182,76 @@ pub fn run_worker<R: Read, W: Write>(
     }
 }
 
-/// The kill-during-serialization chaos probe: write the length prefix and
-/// only HALF the result payload, flush, and exit like a crash.  Gated on
+/// Read and decode one frame against the worker's intern cache, running
+/// the `NeedBlob` recovery protocol on a miss: ask the coordinator for the
+/// missing blob, install the answer, and retry the decode.  The mirror
+/// drift this recovers from (coordinator ledger vs. worker cache) is
+/// bounded, so recovery is capped — a non-converging frame is a channel
+/// error, never a hang or a wrong result.
+fn read_worker_message<R: Read, W: Write>(
+    reader: &mut R,
+    writer: &mut W,
+    cache: &InternCache,
+) -> Result<Option<Message>, FutureError> {
+    let frame = match read_frame(reader)? {
+        None => return Ok(None),
+        Some(f) => f,
+    };
+    let mut recoveries = 0;
+    loop {
+        let missing = match wire::decode_frame_body(frame.kind, frame.codec, &frame.body, Some(cache))
+        {
+            Ok(m) => return Ok(Some(m)),
+            Err(e) => match e.kind {
+                wire::WireErrorKind::MissingBlob { digest } => digest,
+                _ => return Err(FutureError::Channel(format!("bad frame: {e}"))),
+            },
+        };
+        recoveries += 1;
+        if recoveries > 64 {
+            return Err(FutureError::Channel(format!(
+                "intern recovery did not converge after {recoveries} round trips"
+            )));
+        }
+        write_message(writer, &Message::NeedBlob { digests: vec![missing] })?;
+        // Block until the Blob answer lands, servicing control frames that
+        // arrive in between.
+        loop {
+            let f2 = match read_frame(reader)? {
+                None => return Ok(None),
+                Some(f2) => f2,
+            };
+            match wire::decode_frame_body(f2.kind, f2.codec, &f2.body, Some(cache)) {
+                Ok(Message::Blob { digest, bytes }) => {
+                    let Some(bytes) = bytes else {
+                        // The coordinator's store evicted the blob: fail
+                        // closed — the supervisor retries via a fresh seat
+                        // whose ledger re-provides everything.
+                        return Err(FutureError::Channel(format!(
+                            "coordinator no longer holds interned blob {digest}"
+                        )));
+                    };
+                    let blob = wire::decode_blob(&bytes)
+                        .map_err(|e| FutureError::Channel(format!("bad blob frame: {e}")))?;
+                    cache.insert(digest, blob);
+                    break; // retry the original frame
+                }
+                Ok(Message::Shutdown) => return Ok(Some(Message::Shutdown)),
+                Ok(Message::Ping) => write_message(writer, &Message::Pong)?,
+                Ok(Message::Cancel { .. }) => {}
+                Ok(other) => {
+                    return Err(FutureError::Channel(format!(
+                        "unexpected frame during intern recovery: {other:?}"
+                    )))
+                }
+                Err(e) => return Err(FutureError::Channel(format!("bad frame: {e}"))),
+            }
+        }
+    }
+}
+
+/// The kill-during-serialization chaos probe: write only HALF the encoded
+/// result frame, flush, and exit like a crash.  Gated on
 /// [`crate::backend::supervisor::kill_exits_process`] so an in-process
 /// `run_worker` (tests over in-memory pipes) can never take the test
 /// runner down; the marker file makes it fire exactly once per path.
@@ -194,11 +271,9 @@ fn maybe_die_mid_write<W: Write>(marker: &str, writer: &mut W, result: &TaskResu
         }
         Err(_) => return,
     }
-    let payload = crate::ipc::wire::encode_message(&Message::Result(result.clone()));
-    let len = payload.len() as u32;
-    let half = payload.len() / 2;
-    let _ = writer.write_all(&len.to_le_bytes());
-    let _ = writer.write_all(&payload[..half]);
+    let frame = crate::ipc::wire::encode_message(&Message::Result(result.clone()));
+    let half = frame.len() / 2;
+    let _ = writer.write_all(&frame[..half]);
     let _ = writer.flush();
     std::process::exit(137);
 }
@@ -243,6 +318,7 @@ mod tests {
     use super::*;
     use crate::api::env::Env;
     use crate::api::expr::Expr;
+    use crate::ipc::frame::read_message;
     use crate::ipc::TaskOpts;
 
     fn task(expr: Expr) -> TaskSpec {
@@ -316,6 +392,65 @@ mod tests {
                 assert_eq!(r.outcome, TaskOutcome::Ok(crate::api::value::Value::I64(3)));
             }
             other => panic!("expected result, got {other:?}"),
+        }
+        assert_eq!(read_message(&mut cur).unwrap(), None);
+    }
+
+    #[test]
+    fn worker_intern_recovery_via_need_blob() {
+        use crate::api::value::{Tensor, Value};
+        use crate::ipc::intern::{digest_bytes, digest_value, SeatLedger};
+        use std::io::Cursor;
+
+        let big = Value::Tensor(Tensor::zeros(&[1024]));
+        let mut globals = Env::new();
+        globals.insert("g", big.clone());
+        let body = std::sync::Arc::new(Expr::seq(vec![
+            Expr::lit(Value::Tensor(Tensor::zeros(&[600]))),
+            Expr::var("g"),
+        ]));
+        let t = TaskSpec {
+            id: uuid_v4(),
+            expr: Expr::map_chunk("x", std::sync::Arc::clone(&body), vec![Value::I64(0)], 0),
+            globals,
+            opts: TaskOpts::default(),
+        };
+        let mut ledger = SeatLedger::new();
+        // Burn the provides against an earlier frame so the frame under
+        // test is reference-only — the respawned-worker scenario, where
+        // the coordinator's ledger says "sent" but the cache is empty.
+        let _first = wire::encode_task_message_interned(&t, &mut ledger);
+        let second = wire::encode_task_message_interned(&t, &mut ledger);
+
+        let body_blob = wire::expr_blob_bytes(&body);
+        let body_digest = digest_bytes(&body_blob);
+        let value_digest = digest_value(&big);
+        let value_blob = wire::value_blob_bytes(&big);
+
+        // Pre-stage the Blob answers in decode order: the MapChunk body
+        // reference misses first, then the captured global.
+        let mut input = second;
+        for (dg, blob) in [(body_digest, body_blob), (value_digest, value_blob)] {
+            input.extend_from_slice(&wire::encode_message(&Message::Blob {
+                digest: dg,
+                bytes: Some(blob),
+            }));
+        }
+        let mut output = Vec::new();
+        let cache = InternCache::new();
+        let msg = read_worker_message(&mut Cursor::new(input), &mut output, &cache)
+            .unwrap()
+            .unwrap();
+        assert_eq!(msg, Message::Task(t));
+        // The worker asked for exactly the two blobs, in decode order.
+        let mut cur = Cursor::new(output);
+        match read_message(&mut cur).unwrap().unwrap() {
+            Message::NeedBlob { digests } => assert_eq!(digests, vec![body_digest]),
+            other => panic!("{other:?}"),
+        }
+        match read_message(&mut cur).unwrap().unwrap() {
+            Message::NeedBlob { digests } => assert_eq!(digests, vec![value_digest]),
+            other => panic!("{other:?}"),
         }
         assert_eq!(read_message(&mut cur).unwrap(), None);
     }

@@ -412,7 +412,8 @@ fn prop_export_estimate_dominates_wire_encoding() {
             let value = gen_value(g, 2);
             let mut e = Encoder::new();
             enc_value(&mut e, &value);
-            // Name framing on the wire is 4 length bytes + the bytes.
+            // Over-states the v6 name framing (varint length, ≤ 4 bytes
+            // here) — fine, the estimator only has to dominate.
             globals_wire += 4 + name.len() + e.into_bytes().len();
             env.insert(&name, value);
         }
@@ -422,6 +423,161 @@ fn prop_export_estimate_dominates_wire_encoding() {
         let est = rustures::analysis::estimate_export_size(&expr, &env);
         if est < wire {
             return Err(format!("estimate {est} under-counts wire {wire} for {expr:?}"));
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------- v6 frame robustness
+
+fn gen_digest(g: &mut Gen) -> rustures::ipc::intern::Digest {
+    let mut out = [0u8; 16];
+    out[..8].copy_from_slice(&g.u64().to_le_bytes());
+    out[8..].copy_from_slice(&g.u64().to_le_bytes());
+    rustures::ipc::intern::Digest(out)
+}
+
+fn gen_condition(g: &mut Gen) -> rustures::api::conditions::Condition {
+    use rustures::api::conditions::{Condition, ConditionKind};
+    Condition {
+        kind: *g.choose(&[ConditionKind::Message, ConditionKind::Warning, ConditionKind::Immediate]),
+        message: g.ident(),
+        seq: g.u64() % 1000,
+    }
+}
+
+/// One arbitrary [`Message`], cycling through every frame kind (the
+/// `variant` selector is driven by the iteration counter upstream so all
+/// eleven kinds are exercised, not just whichever the RNG favors).
+fn gen_message(g: &mut Gen, variant: usize) -> rustures::ipc::Message {
+    use rustures::api::conditions::Captured;
+    use rustures::api::error::EvalError;
+    use rustures::ipc::{
+        Message, TaskMetrics, TaskOpts, TaskOutcome, TaskResult, TaskSpec,
+    };
+    match variant % 11 {
+        0 => Message::Hello { worker_id: g.ident(), version: g.u64() as u32 % 1000 },
+        1 => {
+            let mut globals = Env::new();
+            for _ in 0..g.usize_in(0, 3) {
+                globals.insert(&g.ident(), gen_value(g, 2));
+            }
+            if g.bool() {
+                // A compressible payload large enough to trip the codec.
+                globals.insert("big", Value::Tensor(Tensor::zeros(&[g.usize_in(512, 2048)])));
+            }
+            Message::Task(TaskSpec {
+                id: g.ident(),
+                expr: gen_expr(g, 3),
+                globals,
+                opts: TaskOpts {
+                    seed: if g.bool() { Some(g.u64()) } else { None },
+                    stream_index: g.u64() % 100,
+                    attempt: g.u64() as u32 % 4,
+                    ..TaskOpts::default()
+                },
+            })
+        }
+        2 => Message::Immediate { task_id: g.ident(), condition: gen_condition(g) },
+        3 => Message::Result(TaskResult {
+            id: g.ident(),
+            outcome: if g.bool() {
+                TaskOutcome::Ok(gen_value(g, 3))
+            } else {
+                TaskOutcome::Err(EvalError {
+                    message: g.ident(),
+                    call: if g.bool() { Some(g.ident()) } else { None },
+                })
+            },
+            captured: Captured {
+                stdout: g.ident(),
+                conditions: (0..g.usize_in(0, 3)).map(|_| gen_condition(g)).collect(),
+                rng_used: g.bool(),
+            },
+            metrics: TaskMetrics { started_ns: g.u64(), finished_ns: g.u64() },
+            attempt: g.u64() as u32 % 4,
+        }),
+        4 => Message::Shutdown,
+        5 => Message::Ping,
+        6 => Message::Pong,
+        7 => Message::Heartbeat { task_id: g.ident() },
+        8 => Message::Cancel { task_id: g.ident() },
+        9 => Message::NeedBlob {
+            digests: (0..g.usize_in(0, 3)).map(|_| gen_digest(g)).collect(),
+        },
+        _ => Message::Blob {
+            digest: gen_digest(g),
+            bytes: if g.bool() {
+                Some((0..g.usize_in(0, 64)).map(|_| g.u64() as u8).collect())
+            } else {
+                None
+            },
+        },
+    }
+}
+
+#[test]
+fn prop_decoder_rejects_every_truncated_prefix() {
+    // A strict prefix of a valid frame must decode to a clean error —
+    // never a panic, never a bogus success (the header's body length can
+    // no longer match the remaining bytes).
+    use rustures::ipc::wire::{decode_message, encode_message};
+    let variant = std::cell::Cell::new(0usize);
+    check("decoder-truncation", 120, |g| {
+        let msg = gen_message(g, variant.get());
+        variant.set(variant.get() + 1);
+        let frame = encode_message(&msg);
+        // Every short frame fully; long frames at sampled cut points.
+        let cuts: Vec<usize> = if frame.len() <= 64 {
+            (0..frame.len()).collect()
+        } else {
+            (0..64).map(|i| i * frame.len() / 64).collect()
+        };
+        for cut in cuts {
+            if decode_message(&frame[..cut]).is_ok() {
+                return Err(format!("truncated frame (cut {cut}/{}) decoded", frame.len()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_decoder_never_panics_on_bitflips() {
+    // Arbitrary single-bit corruption anywhere in the frame: decoding may
+    // succeed (a flipped payload bit) or fail with a structured error, but
+    // must never panic or over-allocate its way to an abort.
+    use rustures::ipc::wire::{decode_message, encode_message};
+    let variant = std::cell::Cell::new(0usize);
+    check("decoder-bitflips", 150, |g| {
+        let msg = gen_message(g, variant.get());
+        variant.set(variant.get() + 1);
+        let frame = encode_message(&msg);
+        for _ in 0..16 {
+            let mut corrupt = frame.clone();
+            let bit = g.usize_in(0, corrupt.len() * 8 - 1);
+            corrupt[bit / 8] ^= 1 << (bit % 8);
+            let _ = decode_message(&corrupt); // any Result is fine; no panic
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_compressed_and_raw_frames_decode_identically() {
+    // Compression is a transport detail: for every message, the compressed
+    // and raw encodings decode to the same (original) message.
+    use rustures::ipc::wire::{decode_message, encode_message_opts};
+    let variant = std::cell::Cell::new(0usize);
+    check("codec-identity", 120, |g| {
+        let msg = gen_message(g, variant.get());
+        variant.set(variant.get() + 1);
+        let packed = decode_message(&encode_message_opts(&msg, true))
+            .map_err(|e| format!("compressed decode: {e}"))?;
+        let raw = decode_message(&encode_message_opts(&msg, false))
+            .map_err(|e| format!("raw decode: {e}"))?;
+        if packed != msg || raw != msg {
+            return Err("compressed/raw decode disagreed with the original".into());
         }
         Ok(())
     });
