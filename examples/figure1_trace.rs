@@ -129,6 +129,10 @@ fn main() {
 
     // Supervision metrics, keyed per session (JSON schema v1).
     println!("supervision: {}", rustures::metrics::supervision_json());
+    // Capacity ledger + result-cache counters for the same run — queried
+    // before close() so this session's rows are still resident.
+    println!("capacity: {}", rustures::metrics::capacity_json());
+    println!("cache: {}", rustures::metrics::cache_json());
 
     session.close();
 }

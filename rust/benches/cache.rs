@@ -1,0 +1,138 @@
+//! E17 — result-cache hit/miss economics.
+//!
+//! Four modes per plan, same seeded lapply workload: `disabled` (the
+//! baseline — cache config off, every run evaluates), `cold` (cached, but
+//! a fresh session per run so every element misses and publishes — the
+//! price of cache bookkeeping), `warm-mem` (one session, repeated runs —
+//! pure in-memory hits), and `warm-disk` (fresh session per run over a
+//! shared store root — hits through the disk tier).  Plus the headline
+//! number: per-hit `future_with` round-trip latency, which is the
+//! admission-free fast path (no permit, no lease, no backend).
+//!
+//! Shape: warm-mem ≪ disabled (that is the point of the cache), cold stays
+//! within a small factor of disabled (bookkeeping must be cheap), and the
+//! per-hit round trip is microseconds, not milliseconds.
+//!
+//! Emits `BENCH_cache.json` (schema in BENCH.md); `scripts/bench.sh` runs
+//! this in smoke mode.
+
+mod common;
+
+use common::{fmt_dur, header, json_row, measure, row, scale_iters, write_bench_json, Json};
+use rustures::prelude::*;
+use rustures::util::uuid_v4;
+
+const ELEMENTS: i64 = 16;
+const SPIN_MS: u64 = 1;
+
+fn workload() -> (Vec<Value>, Expr, Env) {
+    // Spin makes the evaluation cost real (so hits have something to
+    // save); the seeded draw makes bit-identity meaningful.
+    let body = Expr::seq(vec![
+        Expr::Spin { millis: SPIN_MS },
+        Expr::add(Expr::var("x"), Expr::runif(1)),
+    ]);
+    ((0..ELEMENTS).map(Value::I64).collect(), body, Env::new())
+}
+
+fn opts() -> LapplyOpts {
+    LapplyOpts::new().seed(5).chunking(Chunking::ChunkSize(4)).cached()
+}
+
+fn emit(rows: &mut Vec<Json>, plan: &str, mode: &str, stats: &common::Stats) {
+    row(&[
+        format!("{plan:<12}"),
+        format!("{mode:<10}"),
+        format!("{:>10}", fmt_dur(stats.mean)),
+        format!("{:>10}", fmt_dur(stats.p50)),
+        format!("{:>10}", fmt_dur(stats.p95)),
+    ]);
+    rows.push(json_row(&[
+        ("plan", Json::Str(plan.to_string())),
+        ("mode", Json::Str(mode.to_string())),
+        ("mean_ns", Json::Int(stats.mean.as_nanos() as i64)),
+        ("p50_ns", Json::Int(stats.p50.as_nanos() as i64)),
+        ("p95_ns", Json::Int(stats.p95.as_nanos() as i64)),
+        ("iters", Json::Int(stats.n as i64)),
+    ]));
+}
+
+fn bench_plan(plan: &str, spec: PlanSpec, json_rows: &mut Vec<Json>) {
+    let iters = scale_iters(30);
+    let (xs, body, env) = workload();
+
+    // disabled: the no-cache baseline — every run pays full evaluation.
+    let s = Session::with_plan(spec.clone());
+    s.set_cache_config(CacheConfig::disabled());
+    let stats = measure(1, iters, || {
+        let _ = s.lapply(&xs, "x", &body, &env, &opts()).unwrap();
+    });
+    s.close();
+    emit(json_rows, plan, "disabled", &stats);
+
+    // cold: fresh memory-only session per run — all misses, all publishes.
+    let stats = measure(1, iters, || {
+        let s = Session::with_plan(spec.clone());
+        s.set_cache_config(CacheConfig::new());
+        let _ = s.lapply(&xs, "x", &body, &env, &opts()).unwrap();
+        s.close();
+    });
+    emit(json_rows, plan, "cold", &stats);
+
+    // warm-mem: one session, repeated runs — in-memory hits after run one.
+    let s = Session::with_plan(spec.clone());
+    s.set_cache_config(CacheConfig::new());
+    let stats = measure(1, iters, || {
+        let _ = s.lapply(&xs, "x", &body, &env, &opts()).unwrap();
+    });
+    s.close();
+    emit(json_rows, plan, "warm-mem", &stats);
+
+    // warm-disk: fresh session per run over a shared root — disk hits.
+    let root = std::env::temp_dir().join(format!("rustures-bench-cache-{}", uuid_v4()));
+    let cfg = CacheConfig::new().disk(&root);
+    let populate = Session::with_plan(spec.clone());
+    populate.set_cache_config(cfg.clone());
+    let _ = populate.lapply(&xs, "x", &body, &env, &opts()).unwrap();
+    populate.close();
+    let stats = measure(1, iters, || {
+        let s = Session::with_plan(spec.clone());
+        s.set_cache_config(cfg.clone());
+        let _ = s.lapply(&xs, "x", &body, &env, &opts()).unwrap();
+        s.close();
+    });
+    let _ = std::fs::remove_dir_all(&root);
+    emit(json_rows, plan, "warm-disk", &stats);
+}
+
+fn main() {
+    header(
+        "E17: result-cache hit/miss economics",
+        &["plan        ", "mode      ", "mean      ", "p50       ", "p95       "],
+    );
+
+    let mut json_rows = Vec::new();
+    bench_plan("sequential", PlanSpec::sequential(), &mut json_rows);
+    bench_plan("multicore-2", PlanSpec::multicore(2), &mut json_rows);
+
+    // Headline: the per-hit future_with round trip — create consults the
+    // cache and resolves Done before admission, so this is the full
+    // admission-free fast path, backend not involved.
+    let s = Session::with_plan(PlanSpec::sequential());
+    s.set_cache_config(CacheConfig::new());
+    let expr = Expr::add(Expr::lit(40i64), Expr::lit(2i64));
+    let env = Env::new();
+    let _ = s.future_with(expr.clone(), &env, FutureOpts::new().cached()).unwrap().value();
+    let stats = measure(10, scale_iters(5000), || {
+        let f = s.future_with(expr.clone(), &env, FutureOpts::new().cached()).unwrap();
+        let _ = f.value().unwrap();
+    });
+    s.close();
+    emit(&mut json_rows, "sequential", "per-hit", &stats);
+
+    write_bench_json("cache", json_rows);
+    println!(
+        "\nshape check: warm-mem ≪ disabled; cold within a small factor of \
+         disabled; per-hit round trip is the microsecond admission-free path"
+    );
+}

@@ -76,11 +76,17 @@ pub enum LintCode {
     /// references (probable typo), or a free variable missing from an
     /// `Explicit` list (guaranteed eval-time failure).
     UselessCapture,
+    /// `FutureOpts::cached` on a future whose result is not a pure
+    /// function of its cache key: unseeded RNG draws, or `DynLookup`
+    /// under `GlobalsSpec::Auto` (the captured globals — hence the key —
+    /// cannot see the dynamically-named input).  A cached
+    /// nondeterministic future silently freezes one sample.
+    CacheNondeterministic,
 }
 
 impl LintCode {
     /// Every code, in catalog order (DESIGN.md §Static Analysis).
-    pub const ALL: [LintCode; 10] = [
+    pub const ALL: [LintCode; 11] = [
         LintCode::ExportSize,
         LintCode::UnseededRng,
         LintCode::UnusedSeed,
@@ -91,6 +97,7 @@ impl LintCode {
         LintCode::DeadlineHeartbeat,
         LintCode::TopologyTail,
         LintCode::UselessCapture,
+        LintCode::CacheNondeterministic,
     ];
 
     pub fn as_str(&self) -> &'static str {
@@ -105,6 +112,7 @@ impl LintCode {
             LintCode::DeadlineHeartbeat => "deadline-heartbeat",
             LintCode::TopologyTail => "topology-tail",
             LintCode::UselessCapture => "useless-capture",
+            LintCode::CacheNondeterministic => "cache-nondeterministic",
         }
     }
 }
@@ -212,6 +220,7 @@ impl AnalysisConfig {
             .warn(LintCode::UnseededRng)
             .warn(LintCode::UnusedSeed)
             .warn(LintCode::TopologyTail)
+            .deny(LintCode::CacheNondeterministic)
     }
 
     /// Override one code's severity.
@@ -267,6 +276,10 @@ impl AnalysisConfig {
             // tests; surfacing them is opt-in (hardened() warns).
             LintCode::TopologyTail => Severity::Allow,
             LintCode::UselessCapture => Severity::Warn,
+            // The cache layer already refuses to KEY such futures
+            // (they evaluate normally, uncached) — the lint makes the
+            // silent downgrade visible; hardened() denies.
+            LintCode::CacheNondeterministic => Severity::Warn,
         }
     }
 }
@@ -418,6 +431,7 @@ fn run_passes(
     pass_opacity(expr, spec, &mut c);
     pass_plan_cross_check(opts, facts, &mut c);
     pass_capture_typos(expr, spec, &mut c);
+    pass_cache_determinism(expr, spec, opts, &mut c);
     c.out
 }
 
@@ -652,6 +666,57 @@ fn pass_capture_typos(expr: &Expr, spec: &GlobalsSpec, c: &mut Collector<'_>) {
     }
 }
 
+/// Satellite pass — result-cache determinism (`FutureOpts::cached`).
+///
+/// The cache layer itself refuses to key chaos-marked and unseeded-RNG
+/// expressions (they simply evaluate uncached, every time), so nothing
+/// here is needed for soundness — the lint exists to make that silent
+/// downgrade, and the subtler `get("k")` key-blindness, visible at
+/// creation: a key derived from statically-captured globals cannot see a
+/// dynamically-named input, so two semantically different futures could
+/// collide on one entry.
+fn pass_cache_determinism(
+    expr: &Expr,
+    spec: &GlobalsSpec,
+    opts: &FutureOpts,
+    c: &mut Collector<'_>,
+) {
+    if !opts.cached || !c.wants(LintCode::CacheNondeterministic) {
+        return;
+    }
+    if opts.seed.is_none() && expr.uses_rng() {
+        c.emit(
+            LintCode::CacheNondeterministic,
+            "expr",
+            "cached future draws random numbers without a seed; its result \
+             is not a function of its cache key, so the cache layer will \
+             refuse to memoize it (it evaluates uncached every time)"
+                .to_string(),
+            "pass FutureOpts::new().seed(s) so draws come from a keyed \
+             substream, or drop cached() for genuinely random futures",
+        );
+    }
+    let mut has_dyn = false;
+    expr.walk(&mut |e| {
+        if matches!(e, Expr::DynLookup(_)) {
+            has_dyn = true;
+        }
+    });
+    if has_dyn && *spec == GlobalsSpec::Auto {
+        c.emit(
+            LintCode::CacheNondeterministic,
+            "expr",
+            "cached future looks up a global by computed name under \
+             automatic capture; the cache key is derived from the \
+             statically-captured globals and cannot see the dynamic \
+             input, so distinct computations may share one cache entry"
+                .to_string(),
+            "name the dynamic globals with GlobalsSpec::AutoPlus so they \
+             enter the captured set (and the key), or drop cached()",
+        );
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -684,6 +749,7 @@ mod tests {
         assert_eq!(strs.len(), LintCode::ALL.len());
         assert!(strs.contains("export-size"));
         assert!(strs.contains("useless-capture"));
+        assert!(strs.contains("cache-nondeterministic"));
     }
 
     #[test]
@@ -694,9 +760,11 @@ mod tests {
         assert_eq!(c.action(LintCode::DuplicateRngStream), Severity::Warn);
         assert_eq!(c.action(LintCode::ChaosInjection), Severity::Allow);
         assert_eq!(c.action(LintCode::TopologyTail), Severity::Allow);
+        assert_eq!(c.action(LintCode::CacheNondeterministic), Severity::Warn);
         let hardened = AnalysisConfig::hardened();
         assert_eq!(hardened.action(LintCode::ChaosInjection), Severity::Deny);
         assert_eq!(hardened.action(LintCode::UnseededRng), Severity::Warn);
+        assert_eq!(hardened.action(LintCode::CacheNondeterministic), Severity::Deny);
         let overridden = AnalysisConfig::new().deny(LintCode::DynLookup);
         assert_eq!(overridden.action(LintCode::DynLookup), Severity::Deny);
     }
@@ -896,6 +964,42 @@ mod tests {
             &AnalysisConfig::new(),
         );
         assert!(enforced.is_empty(), "{enforced:?}");
+    }
+
+    #[test]
+    fn cache_nondeterminism_fires_only_for_cached_futures() {
+        let mut cached = FutureOpts::new();
+        cached.cached = true;
+        // Unseeded draws under cached(): flagged.
+        let rng = Expr::runif(2);
+        let diags = run(&rng, &GlobalsSpec::Auto, &cached, &AnalysisConfig::new());
+        let d = diags
+            .iter()
+            .find(|d| d.code == LintCode::CacheNondeterministic)
+            .expect("unseeded cached RNG must be flagged");
+        assert_eq!(d.severity, Severity::Warn);
+        // Seeding fixes it.
+        let mut seeded = cached.clone();
+        seeded.seed = Some(7);
+        let diags = run(&rng, &GlobalsSpec::Auto, &seeded, &AnalysisConfig::new());
+        assert!(!codes(&diags).contains(&LintCode::CacheNondeterministic), "{diags:?}");
+        // Same expression without cached(): not this lint's business.
+        let diags = run(&rng, &GlobalsSpec::Auto, &FutureOpts::new(), &AnalysisConfig::new());
+        assert!(!codes(&diags).contains(&LintCode::CacheNondeterministic), "{diags:?}");
+        // DynLookup under Auto: key-blind input → flagged; AutoPlus fixes.
+        let dyn_expr = Expr::dyn_lookup(Expr::lit("k"));
+        let diags = run(&dyn_expr, &GlobalsSpec::Auto, &cached, &AnalysisConfig::new());
+        assert!(codes(&diags).contains(&LintCode::CacheNondeterministic), "{diags:?}");
+        let fixed = GlobalsSpec::AutoPlus(vec!["k".to_string()]);
+        let diags = run(&dyn_expr, &fixed, &cached, &AnalysisConfig::new());
+        assert!(!codes(&diags).contains(&LintCode::CacheNondeterministic), "{diags:?}");
+        // hardened() denies.
+        let diags = run(&rng, &GlobalsSpec::Auto, &cached, &AnalysisConfig::hardened());
+        let d = diags
+            .iter()
+            .find(|d| d.code == LintCode::CacheNondeterministic)
+            .expect("flagged under hardened");
+        assert_eq!(d.severity, Severity::Deny);
     }
 
     #[test]

@@ -98,6 +98,16 @@ pub struct FutureOpts {
     pub deadline: Option<Duration>,
     /// Human-readable label.
     pub label: Option<String>,
+    /// Opt into the content-addressed result cache ([`crate::cache`]):
+    /// before any capacity admission, the future's key — `digest(expr ‖
+    /// resolved globals ‖ seed+stream ‖ protocol version)` — is looked up,
+    /// and a hit resolves the future immediately **without acquiring a
+    /// capacity lease or backend at all**.  A miss evaluates normally and
+    /// publishes on clean resolution only (eval errors, `TimedOut`,
+    /// `Cancelled`, and chaos-marked expressions are never cached; unseeded
+    /// RNG expressions are never keyed).  Subject to the session's
+    /// [`crate::cache::CacheConfig`].
+    pub cached: bool,
 }
 
 impl FutureOpts {
@@ -142,6 +152,13 @@ impl FutureOpts {
 
     pub fn label(mut self, label: &str) -> Self {
         self.label = Some(label.to_string());
+        self
+    }
+
+    /// Opt into the content-addressed result cache (see
+    /// [`FutureOpts::cached`]).
+    pub fn cached(mut self) -> Self {
+        self.cached = true;
         self
     }
 
@@ -194,6 +211,10 @@ pub struct Future {
     /// returned on the first terminal transition — or, as the backstop,
     /// when the future is dropped.
     permit: Mutex<Option<crate::capacity::InFlightPermit>>,
+    /// Result-cache publication plan for a `cached` future that MISSED at
+    /// creation (hits carry `None` — nothing re-publishes).  Snapshotted at
+    /// creation so publication never reads session state.
+    cache_plan: Option<crate::cache::CachePlan>,
     pub trace: Arc<FutureTrace>,
 }
 
@@ -267,20 +288,74 @@ pub fn future_with(expr: Expr, env: &Env, opts: FutureOpts) -> Result<Future, Fu
         }
     }
 
-    // 3. Per-session in-flight quota (SessionLimits::max_in_flight):
+    // 3. Deterministic RNG stream index by creation order — per session,
+    //    so concurrent sessions assign streams independently.  Computed
+    //    BEFORE capacity admission so a cache hit can key without touching
+    //    the ledger; a hit still consumes this ordinal, so every later
+    //    future's stream index matches an uncached run bit-identically.
+    let id = session.next_future_id();
+    let created_ns = now_ns();
+    let ordinal = session.next_ordinal();
+    let stream_index = opts.stream_index.unwrap_or(ordinal);
+
+    // 4. Content-addressed result cache (opt-in): a hit constructs a
+    //    born-resolved future with NO in-flight permit, NO slot lease, and
+    //    NO backend — the session never appears in `capacity_json()` for
+    //    it.  `plan_for_task` refuses uncacheable tasks (config disabled,
+    //    chaos markers, unseeded RNG), which then evaluate normally.
+    let cache_plan = if opts.cached {
+        crate::cache::plan_for_task(
+            session.origin_id(),
+            &expr,
+            &globals,
+            opts.seed,
+            stream_index,
+            &session.cache_config(),
+        )
+    } else {
+        None
+    };
+    if let Some(plan) = &cache_plan {
+        if let Some(mut result) = crate::cache::lookup(plan) {
+            result.id = id.clone();
+            let trace = Arc::new(FutureTrace::new(
+                &id,
+                opts.label.as_deref(),
+                "cache",
+                session.origin_id(),
+                created_ns,
+            ));
+            record_event(&trace, "cache-hit");
+            record_event(&trace, "resolved");
+            return Ok(Future {
+                id,
+                label: opts.label,
+                state: Mutex::new(State::Done(Box::new(result))),
+                // Cacheable futures are seeded whenever they draw RNG, so
+                // the cold run's flag was false too — relay stays
+                // bit-identical.
+                warn_unseeded_rng: false,
+                relayed: Mutex::new(false),
+                restart_spec: Mutex::new(None),
+                retry: None,
+                deadline: None,
+                created_at: std::time::Instant::now(),
+                session,
+                permit: Mutex::new(None),
+                // A hit never re-publishes what it just read.
+                cache_plan: None,
+                trace,
+            });
+        }
+    }
+
+    // 5. Per-session in-flight quota (SessionLimits::max_in_flight):
     //    blocks — never drops — while the session has that many
     //    unresolved futures outstanding.  The permit frees on the
     //    future's first terminal transition, or when it is dropped.
     let permit = crate::capacity::admit_in_flight(session.origin_id());
-    let id = session.next_future_id();
-    let created_ns = now_ns();
 
-    // 4. Deterministic RNG stream index by creation order — per session,
-    //    so concurrent sessions assign streams independently.
-    let ordinal = session.next_ordinal();
-    let stream_index = opts.stream_index.unwrap_or(ordinal);
-
-    // 5. Backend + serialized session context for the current depth.
+    // 6. Backend + serialized session context for the current depth.
     let backend = session.backend_for_depth(depth)?;
     let context = session.context_for_depth(depth);
 
@@ -342,6 +417,7 @@ pub fn future_with(expr: Expr, env: &Env, opts: FutureOpts) -> Result<Future, Fu
         created_at: std::time::Instant::now(),
         session,
         permit: Mutex::new(Some(permit)),
+        cache_plan,
         trace,
     })
 }
@@ -383,6 +459,21 @@ impl Future {
     /// `Future` is the backstop for futures abandoned mid-flight.
     fn release_permit(&self) {
         self.permit.lock().unwrap().take();
+    }
+
+    /// Publish a cleanly-collected result to the result cache — miss-path
+    /// `cached` futures only (hits carry no plan, so a hit never re-writes
+    /// what it just read).  Runs at the two Running→Done promotions in
+    /// [`Self::resolved`] and [`Self::result`]; eval errors are filtered
+    /// inside [`crate::cache::publish`], and `TimedOut`/`Cancelled`/infra
+    /// failures latch `State::Failed`, which never reaches here.  The
+    /// promotion inside [`Self::latch_if_session_closed`] deliberately does
+    /// NOT publish: a closing session is tearing down — it should salvage
+    /// its own value, not grow shared state.
+    fn publish_to_cache(&self, result: &TaskResult) {
+        if let Some(plan) = &self.cache_plan {
+            crate::cache::publish(plan, result);
+        }
     }
 
     /// Latch `SessionClosed` into an unresolvable future of a closed
@@ -515,6 +606,7 @@ impl Future {
                     match handle.wait() {
                         Ok(result) => {
                             record_event(&self.trace, "resolved");
+                            self.publish_to_cache(&result);
                             *state = State::Done(Box::new(result));
                         }
                         Err(e) => *state = State::Failed(e),
@@ -619,6 +711,7 @@ impl Future {
                 match outcome {
                     Ok(result) => {
                         record_event(&self.trace, "resolved");
+                        self.publish_to_cache(&result);
                         *state = State::Done(Box::new(result.clone()));
                         Ok(result)
                     }
@@ -1250,6 +1343,27 @@ mod tests {
             .unwrap();
             assert!(g.value().is_ok(), "explicit deadline must override the default");
         });
+        s.close();
+    }
+
+    #[test]
+    fn cached_future_hits_in_memory_and_skips_capacity() {
+        use crate::api::session::Session;
+        let s = Session::new();
+        s.plan(PlanSpec::sequential());
+        s.scope(|_| {
+            let mut env = Env::new();
+            env.insert("x", 20i64);
+            let expr = || Expr::add(Expr::var("x"), Expr::lit(22i64));
+            let cold = future_with(expr(), &env, FutureOpts::new().cached()).unwrap();
+            assert_eq!(cold.value().unwrap(), Value::I64(42));
+            let warm = future_with(expr(), &env, FutureOpts::new().cached()).unwrap();
+            assert!(warm.resolved());
+            assert_eq!(warm.value().unwrap(), Value::I64(42));
+        });
+        let c = crate::cache::session_counters(s.id());
+        assert_eq!(c.memory.hits, 1, "second creation must be served by the cache");
+        assert!(c.memory.publishes >= 1, "cold resolution must publish");
         s.close();
     }
 

@@ -89,6 +89,12 @@ struct Core {
     /// analyzer runs where `future_with` runs — so, like the deadline
     /// default, it is NOT shipped inside the [`SessionContext`].
     analysis: crate::analysis::AnalysisConfig,
+    /// Result-cache policy for `cached` futures created under this session
+    /// (see [`crate::cache`]).  A creation-side concern — lookup and
+    /// publication both happen where `future_with` runs — so it is NOT
+    /// shipped inside the [`SessionContext`]; keys are content-addressed,
+    /// so nested workers sharing a disk root interoperate regardless.
+    cache: crate::cache::CacheConfig,
 }
 
 struct Inner {
@@ -215,6 +221,7 @@ impl Session {
                     retry,
                     default_deadline: None,
                     analysis: crate::analysis::AnalysisConfig::default(),
+                    cache: crate::cache::CacheConfig::default(),
                 }),
                 backends: Mutex::new(HashMap::new()),
                 counter: AtomicU64::new(counter_base),
@@ -276,6 +283,7 @@ impl Session {
                     retry: ctx.retry.clone(),
                     default_deadline: None,
                     analysis: crate::analysis::AnalysisConfig::default(),
+                    cache: crate::cache::CacheConfig::default(),
                 }),
                 backends: Mutex::new(HashMap::new()),
                 counter: AtomicU64::new(ctx.counter_base),
@@ -431,6 +439,23 @@ impl Session {
     /// This session's static-analysis policy (a snapshot).
     pub fn analysis_config(&self) -> crate::analysis::AnalysisConfig {
         self.inner.core.read().unwrap().analysis.clone()
+    }
+
+    // ------------------------------------------------------ result cache ----
+
+    /// Replace this session's result-cache policy: master switch, memory
+    /// budget, disk root (see [`crate::cache::CacheConfig`]).  Applies to
+    /// every `cached` future created under this session afterwards; the
+    /// cache stays opt-in per future via
+    /// [`crate::api::future::FutureOpts::cached`] /
+    /// [`crate::mapreduce::LapplyOpts::cached`].
+    pub fn set_cache_config(&self, config: crate::cache::CacheConfig) {
+        self.inner.core.write().unwrap().cache = config;
+    }
+
+    /// This session's result-cache policy (a snapshot).
+    pub fn cache_config(&self) -> crate::cache::CacheConfig {
+        self.inner.core.read().unwrap().cache.clone()
     }
 
     /// The session-side facts the analyzer's plan cross-check pass needs,

@@ -1,0 +1,950 @@
+//! Content-addressed result cache — memoized futures (E17).
+//!
+//! The paper's central promise — "the same code works on all backends" —
+//! makes a future's result a *pure function* of its expression, captured
+//! globals, seed/stream, and wire protocol version.  Pure functions are
+//! memoizable, and at the ROADMAP's millions-of-users scale the dominant
+//! waste is duplicate evaluation of identical map-reduce stages.  This
+//! module turns PR 8's content [`Digest`] into a result cache:
+//!
+//! * **Keying.**  [`cache_key`] digests the canonical task identity —
+//!   `PROTOCOL_VERSION ‖ canonical expr bytes ‖ resolved globals ‖ seed ‖
+//!   RNG stream` — reusing the exact [`crate::ipc::wire`] encoders that
+//!   produce the task frame, under a dedicated hash domain
+//!   ([`crate::ipc::intern::digest_cache_key`]).  The RNG stream index
+//!   participates only when the expression actually draws from the RNG, so
+//!   deterministic expressions hit regardless of creation order.
+//!   `MapChunk` tasks are keyed **per element** ([`chunk_element_keys`],
+//!   substream `base_index + i` — the PR 1 chunking-invariance rule), so a
+//!   warm `future_lapply` hits under *any* chunking policy.
+//!
+//! * **Tiers.**  A bounded per-session in-memory tier (LRU by bytes,
+//!   [`CacheConfig::memory_bytes`]) in front of an optional spill-to-disk
+//!   [`CacheStore`] (content-named object files, scratch-dir write +
+//!   atomic `rename` publish, startup sweep of orphaned scratch entries)
+//!   so results survive process restarts.  Entries in both tiers are
+//!   encoded [`Message::Result`] frames — the wire decoder doubles as the
+//!   corruption check: a torn or bit-rotted entry fails to decode and is
+//!   treated as a miss (and deleted), never surfaced.
+//!
+//! * **Admission-free hits.**  `future_with` consults the cache *before*
+//!   capacity admission: a hit constructs a born-resolved future with no
+//!   in-flight permit, no slot lease, and no backend instantiation — the
+//!   session never appears in `capacity_json()` (asserted by conformance
+//!   `cached-bit-identical` and `tests/cache.rs`).
+//!
+//! * **Determinism contract** (DESIGN.md §Result Cache is normative):
+//!   only clean `TaskOutcome::Ok` resolutions publish.  Eval errors,
+//!   `TimedOut`, `Cancelled`, and infrastructure failures never do;
+//!   chaos-marked and unseeded-RNG expressions are not even keyed
+//!   ([`plan_for_task`] returns `None`), and the `cache-nondeterministic`
+//!   lint warns (denies under `AnalysisConfig::hardened`) when a cached
+//!   future could freeze one nondeterministic sample.
+//!
+//! Observability: per-session per-tier hit/miss/publish/eviction/byte
+//! counters, surfaced as [`cache_json`] (schema `rustures.cache.v1`,
+//! re-exported as `metrics::cache_json()`).
+
+use std::collections::HashMap;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::api::conditions::Captured;
+use crate::api::env::Env;
+use crate::api::expr::Expr;
+use crate::api::value::Value;
+use crate::ipc::intern::{digest_cache_key, Digest};
+use crate::ipc::wire::{decode_message, enc_env, enc_expr, enc_value, encode_message, Encoder};
+use crate::ipc::{Message, TaskMetrics, TaskOutcome, TaskResult, PROTOCOL_VERSION};
+use crate::util::uuid_v4;
+
+/// Default in-memory tier budget per session (bytes).
+pub const DEFAULT_MEMORY_BYTES: usize = 64 << 20;
+
+// ---------------------------------------------------------------- config --
+
+/// Per-session result-cache policy (see [`crate::api::session::Session::set_cache_config`]).
+///
+/// The cache is additionally opt-in **per future** via
+/// `FutureOpts::cached` / `LapplyOpts::cached`: this config gates and
+/// shapes what those opted-in futures may use.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CacheConfig {
+    /// Master switch: `false` makes every `cached` future evaluate
+    /// normally (and publish nothing) — the A/B baseline.
+    pub enabled: bool,
+    /// In-memory tier budget in bytes (LRU by bytes; an entry larger than
+    /// the whole budget is simply not admitted).
+    pub memory_bytes: usize,
+    /// Root directory of the disk tier ([`CacheStore`]); `None` keeps the
+    /// cache memory-only.  The store is content-addressed and safely
+    /// shared across sessions and processes.
+    pub disk: Option<PathBuf>,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig { enabled: true, memory_bytes: DEFAULT_MEMORY_BYTES, disk: None }
+    }
+}
+
+impl CacheConfig {
+    /// The default policy: enabled, memory-only, 64 MiB budget.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A disabled cache: `cached` futures evaluate normally.
+    pub fn disabled() -> Self {
+        CacheConfig { enabled: false, ..Self::default() }
+    }
+
+    /// Set the in-memory tier budget (bytes).
+    pub fn memory_bytes(mut self, bytes: usize) -> Self {
+        self.memory_bytes = bytes;
+        self
+    }
+
+    /// Attach a disk tier rooted at `path` (created on first use).
+    pub fn disk(mut self, path: impl Into<PathBuf>) -> Self {
+        self.disk = Some(path.into());
+        self
+    }
+}
+
+// ------------------------------------------------------------------ keys --
+
+/// Canonical key bytes shared by both key forms.  Domain layout:
+/// `varint(PROTOCOL_VERSION)` then a form byte (0 = whole future, 1 = map
+/// element), then the form's fields — all through the same `ipc::wire`
+/// encoders that build task frames, so the key is exactly as canonical as
+/// the wire format (and `Env`'s `BTreeMap` keeps globals ordered).
+fn whole_key_frame(expr: &Expr, globals: &Env, seed: Option<u64>, stream_index: u64) -> Vec<u8> {
+    let mut e = Encoder::new();
+    e.varint(u64::from(PROTOCOL_VERSION));
+    e.u8(0);
+    enc_expr(&mut e, expr);
+    enc_env(&mut e, globals);
+    match seed {
+        Some(s) => {
+            e.u8(1);
+            e.u64(s);
+        }
+        None => e.u8(0),
+    }
+    // The stream index participates only when the expression draws from
+    // the RNG: a deterministic expression must hit regardless of the
+    // creation ordinal the session happened to assign it.
+    if expr.uses_rng() {
+        e.varint(stream_index);
+    }
+    e.into_bytes()
+}
+
+/// The content-addressed identity of one (non-chunk) future:
+/// `digest(PROTOCOL_VERSION ‖ expr ‖ resolved globals ‖ seed ‖ stream)`,
+/// hashed under the cache-key domain.  Backend-independent by
+/// construction — no backend, topology, or session field participates.
+pub fn cache_key(expr: &Expr, globals: &Env, seed: Option<u64>, stream_index: u64) -> Digest {
+    digest_cache_key(&whole_key_frame(expr, globals, seed, stream_index))
+}
+
+/// Per-element keys for a `MapChunk` task: element `i` (global index
+/// `base_index + i`) is keyed by `digest(version ‖ param ‖ body ‖ element
+/// ‖ globals ‖ seed ‖ global index)` — the same substream-selection rule
+/// that makes seeded maps chunking-invariant, so a chunk built under ANY
+/// chunking policy addresses the same entries.  For non-RNG bodies the
+/// index is excluded, so identical elements dedup across the whole map.
+pub fn chunk_element_keys(
+    param: &str,
+    body: &Expr,
+    elements: &[Value],
+    base_index: u64,
+    seed: Option<u64>,
+    globals: &Env,
+) -> Vec<Digest> {
+    let rng = body.uses_rng();
+    elements
+        .iter()
+        .enumerate()
+        .map(|(i, v)| {
+            let mut e = Encoder::new();
+            e.varint(u64::from(PROTOCOL_VERSION));
+            e.u8(1);
+            e.str(param);
+            enc_expr(&mut e, body);
+            enc_value(&mut e, v);
+            enc_env(&mut e, globals);
+            match seed {
+                Some(s) => {
+                    e.u8(1);
+                    e.u64(s);
+                }
+                None => e.u8(0),
+            }
+            if rng {
+                e.varint(base_index + i as u64);
+            }
+            digest_cache_key(&e.into_bytes())
+        })
+        .collect()
+}
+
+/// Does the expression carry a chaos marker anywhere?  Chaos-marked
+/// expressions are never cached: their whole point is to *not* be a pure
+/// function of their inputs.
+fn has_chaos(expr: &Expr) -> bool {
+    match expr {
+        Expr::ChaosKill { .. } | Expr::ChaosHang { .. } => true,
+        Expr::Let { value, body, .. } => has_chaos(value) || has_chaos(body),
+        Expr::Seq(items) | Expr::List(items) => items.iter().any(has_chaos),
+        Expr::Index { list, index } => has_chaos(list) || has_chaos(index),
+        Expr::Call { args, .. } | Expr::Prim { args, .. } => items_any(args),
+        Expr::If { cond, then, otherwise } => {
+            has_chaos(cond) || has_chaos(then) || has_chaos(otherwise)
+        }
+        Expr::DynLookup(inner) | Expr::Stop(inner) => has_chaos(inner),
+        Expr::Emit { message, .. } => has_chaos(message),
+        Expr::WithRngStream { body, .. } => has_chaos(body),
+        Expr::MapChunk { body, .. } => has_chaos(body),
+        Expr::Lit(_)
+        | Expr::Var(_)
+        | Expr::Rng { .. }
+        | Expr::Spin { .. }
+        | Expr::Sleep { .. }
+        | Expr::Work { .. } => false,
+    }
+}
+
+fn items_any(items: &[Expr]) -> bool {
+    items.iter().any(has_chaos)
+}
+
+// ------------------------------------------------------------------ plan --
+
+/// How one future addresses the cache.
+#[derive(Debug, Clone)]
+pub(crate) enum KeyPlan {
+    /// One entry for the whole result.
+    Whole(Digest),
+    /// One entry per map element (chunking-invariant `future_lapply`).
+    Chunk { elements: Vec<Digest> },
+}
+
+/// Everything a `cached` future needs to consult and later publish the
+/// cache — snapshotted at creation so resolution never reads session
+/// state (the session may be closed by then; promoted results of a closed
+/// session deliberately do NOT publish — see `latch_if_session_closed`).
+#[derive(Debug, Clone)]
+pub(crate) struct CachePlan {
+    pub(crate) session: u64,
+    pub(crate) keys: KeyPlan,
+    pub(crate) memory_bytes: usize,
+    pub(crate) disk: Option<PathBuf>,
+}
+
+/// Build the cache plan for one opted-in task, or `None` when the task is
+/// not cacheable: config disabled, a chaos marker anywhere in the
+/// expression, or unseeded RNG use (caching a nondeterministic future
+/// would silently freeze one sample — the `cache-nondeterministic` lint's
+/// territory).
+pub(crate) fn plan_for_task(
+    session: u64,
+    expr: &Expr,
+    globals: &Env,
+    seed: Option<u64>,
+    stream_index: u64,
+    config: &CacheConfig,
+) -> Option<CachePlan> {
+    if !config.enabled || has_chaos(expr) || (seed.is_none() && expr.uses_rng()) {
+        return None;
+    }
+    let keys = match expr {
+        Expr::MapChunk { param, body, elements, base_index } => KeyPlan::Chunk {
+            elements: chunk_element_keys(param, body, elements, *base_index, seed, globals),
+        },
+        _ => KeyPlan::Whole(cache_key(expr, globals, seed, stream_index)),
+    };
+    Some(CachePlan {
+        session,
+        keys,
+        memory_bytes: config.memory_bytes,
+        disk: config.disk.clone(),
+    })
+}
+
+// -------------------------------------------------------------- counters --
+
+/// Hit/miss/publish/eviction/byte counters for one tier.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TierCounters {
+    /// Lookups served by this tier.
+    pub hits: u64,
+    /// Lookups this tier could not serve.
+    pub misses: u64,
+    /// Entries written to this tier (disk-to-memory promotions count as
+    /// memory publishes).
+    pub publishes: u64,
+    /// Entries evicted (memory LRU; the disk tier never evicts in v1).
+    pub evictions: u64,
+    /// Memory: live resident bytes.  Disk: cumulative bytes written.
+    pub bytes: u64,
+}
+
+impl TierCounters {
+    fn add(&mut self, other: &TierCounters) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.publishes += other.publishes;
+        self.evictions += other.evictions;
+        self.bytes += other.bytes;
+    }
+}
+
+/// Per-session cache counters, one [`TierCounters`] per tier.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheCounters {
+    /// The in-memory tier.
+    pub memory: TierCounters,
+    /// The spill-to-disk tier.
+    pub disk: TierCounters,
+}
+
+impl CacheCounters {
+    fn add(&mut self, other: &CacheCounters) {
+        self.memory.add(&other.memory);
+        self.disk.add(&other.disk);
+    }
+}
+
+// ----------------------------------------------------------- memory tier --
+
+struct MemEntry {
+    frame: Arc<Vec<u8>>,
+    tick: u64,
+}
+
+#[derive(Default)]
+struct SessionCache {
+    counters: CacheCounters,
+    entries: HashMap<Digest, MemEntry>,
+    bytes: usize,
+    clock: u64,
+}
+
+static SESSIONS: OnceLock<Mutex<HashMap<u64, SessionCache>>> = OnceLock::new();
+
+/// Counters of sessions already cleared — keeps the process totals in
+/// `cache_json()` monotonic, matching the supervision plane's convention.
+static RETIRED: Mutex<CacheCounters> = Mutex::new(CacheCounters {
+    memory: TierCounters { hits: 0, misses: 0, publishes: 0, evictions: 0, bytes: 0 },
+    disk: TierCounters { hits: 0, misses: 0, publishes: 0, evictions: 0, bytes: 0 },
+});
+
+fn sessions() -> &'static Mutex<HashMap<u64, SessionCache>> {
+    SESSIONS.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn with_session<R>(session: u64, f: impl FnOnce(&mut SessionCache) -> R) -> R {
+    let mut map = sessions().lock().unwrap();
+    f(map.entry(session).or_default())
+}
+
+fn memory_get(session: u64, key: &Digest) -> Option<Arc<Vec<u8>>> {
+    with_session(session, |e| {
+        e.clock += 1;
+        let clock = e.clock;
+        match e.entries.get_mut(key) {
+            Some(m) => {
+                m.tick = clock;
+                e.counters.memory.hits += 1;
+                Some(Arc::clone(&m.frame))
+            }
+            None => {
+                e.counters.memory.misses += 1;
+                None
+            }
+        }
+    })
+}
+
+fn memory_remove(session: u64, key: &Digest) {
+    with_session(session, |e| {
+        if let Some(m) = e.entries.remove(key) {
+            e.bytes -= m.frame.len();
+            e.counters.memory.bytes = e.bytes as u64;
+        }
+    });
+}
+
+fn memory_insert(session: u64, cap: usize, key: Digest, frame: Arc<Vec<u8>>) {
+    let len = frame.len();
+    if len > cap {
+        // An entry larger than the whole tier budget is never admitted
+        // (it would evict everything and then be evicted itself).
+        return;
+    }
+    with_session(session, |e| {
+        e.clock += 1;
+        let tick = e.clock;
+        match e.entries.insert(key, MemEntry { frame, tick }) {
+            Some(old) => e.bytes = e.bytes - old.frame.len() + len,
+            None => {
+                e.bytes += len;
+                e.counters.memory.publishes += 1;
+            }
+        }
+        // LRU by last-use tick; the linear min-scan per eviction is O(n)
+        // but runs only while over budget, off the lookup hot path.
+        while e.bytes > cap {
+            let Some(oldest) = e.entries.iter().min_by_key(|(_, m)| m.tick).map(|(k, _)| *k)
+            else {
+                break;
+            };
+            if let Some(m) = e.entries.remove(&oldest) {
+                e.bytes -= m.frame.len();
+                e.counters.memory.evictions += 1;
+            }
+        }
+        e.counters.memory.bytes = e.bytes as u64;
+    });
+}
+
+// ------------------------------------------------------------- disk tier --
+
+/// The spill-to-disk tier: a content-addressed object store.
+///
+/// Layout under the root: `objects/<32-hex-digest>` holds one encoded
+/// `Message::Result` frame per key; `scratch/` stages in-progress writes.
+/// **Publishing is atomic**: the frame is fully written to a unique
+/// scratch file (`<pid>-<uuid>`), then `rename`d into `objects/` — readers
+/// can never observe a torn object, and a crashed publisher leaves only a
+/// scratch orphan, which [`CacheStore::open`] sweeps.  Should a torn or
+/// bit-rotted object appear anyway (hostile disk), the wire decode fails
+/// and the lookup path deletes it and reports a miss.  The disk tier has
+/// no eviction in v1 — it is an explicit operator-owned directory.
+#[derive(Debug)]
+pub struct CacheStore {
+    root: PathBuf,
+}
+
+impl CacheStore {
+    /// Open (creating if needed) the store rooted at `root`, sweeping any
+    /// orphaned scratch entries left by a crashed publisher.
+    pub fn open(root: &Path) -> io::Result<CacheStore> {
+        fs::create_dir_all(root.join("objects"))?;
+        fs::create_dir_all(root.join("scratch"))?;
+        // Startup sweep: every scratch file is a torn write that never
+        // reached its atomic rename — dead by definition, never publishable.
+        for entry in fs::read_dir(root.join("scratch"))?.flatten() {
+            let _ = fs::remove_file(entry.path());
+        }
+        Ok(CacheStore { root: root.to_path_buf() })
+    }
+
+    /// The object file path for `key` (content-named: the hex digest).
+    pub fn object_path(&self, key: &Digest) -> PathBuf {
+        self.root.join("objects").join(key.to_string())
+    }
+
+    /// Read the raw frame for `key`, if present.  Decoding (and deleting
+    /// undecodable objects) is the caller's job.
+    pub fn load(&self, key: &Digest) -> Option<Vec<u8>> {
+        fs::read(self.object_path(key)).ok()
+    }
+
+    /// Atomically publish `frame` under `key`: scratch write, then rename.
+    /// Returns `Ok(false)` if the object already existed (content-named
+    /// entries are immutable — first write wins, rewrites are pointless).
+    pub fn publish(&self, key: &Digest, frame: &[u8]) -> io::Result<bool> {
+        let object = self.object_path(key);
+        if object.exists() {
+            return Ok(false);
+        }
+        let scratch =
+            self.root.join("scratch").join(format!("{}-{}", std::process::id(), uuid_v4()));
+        fs::write(&scratch, frame)?;
+        fs::rename(&scratch, &object)?;
+        Ok(true)
+    }
+
+    /// Delete the object for `key` (corrupt-entry quarantine).
+    pub fn remove(&self, key: &Digest) {
+        let _ = fs::remove_file(self.object_path(key));
+    }
+}
+
+/// One [`CacheStore`] per root path per process — the orphan sweep runs
+/// once, and every session sharing a root shares the handle.
+static STORES: OnceLock<Mutex<HashMap<PathBuf, Arc<CacheStore>>>> = OnceLock::new();
+
+fn store_for(root: &Path) -> Option<Arc<CacheStore>> {
+    let mut map = STORES.get_or_init(|| Mutex::new(HashMap::new())).lock().unwrap();
+    if let Some(store) = map.get(root) {
+        return Some(Arc::clone(store));
+    }
+    match CacheStore::open(root) {
+        Ok(store) => {
+            let store = Arc::new(store);
+            map.insert(root.to_path_buf(), Arc::clone(&store));
+            Some(store)
+        }
+        // An unusable disk tier degrades to memory-only, never to an error
+        // on the future path.
+        Err(_) => None,
+    }
+}
+
+// --------------------------------------------------------- lookup/publish --
+
+fn decode_frame(frame: &[u8]) -> Option<TaskResult> {
+    match decode_message(frame) {
+        Ok(Message::Result(result)) => Some(result),
+        _ => None,
+    }
+}
+
+fn lookup_result(plan: &CachePlan, key: &Digest) -> Option<TaskResult> {
+    if let Some(frame) = memory_get(plan.session, key) {
+        match decode_frame(&frame) {
+            Some(result) => return Some(result),
+            // A memory entry can only corrupt through a bug, but the
+            // decode gate is already there — drop it and fall through.
+            None => memory_remove(plan.session, key),
+        }
+    }
+    let root = plan.disk.as_deref()?;
+    let store = store_for(root)?;
+    match store.load(key).map(|frame| (decode_frame(&frame), frame)) {
+        Some((Some(result), frame)) => {
+            with_session(plan.session, |e| e.counters.disk.hits += 1);
+            // Promote to the memory tier so the next hit skips the read.
+            memory_insert(plan.session, plan.memory_bytes, *key, Arc::new(frame));
+            Some(result)
+        }
+        Some((None, _)) => {
+            // Undecodable object: quarantine it so it cannot keep failing.
+            store.remove(key);
+            with_session(plan.session, |e| e.counters.disk.misses += 1);
+            None
+        }
+        None => {
+            with_session(plan.session, |e| e.counters.disk.misses += 1);
+            None
+        }
+    }
+}
+
+/// Resolve a cache hit for `plan`, or `None` on any miss.  Chunk plans are
+/// all-or-nothing: the first missing element aborts (the chunk then
+/// evaluates normally and re-publishes every element).  The returned
+/// result carries an empty id — the creation path stamps the new future's.
+pub(crate) fn lookup(plan: &CachePlan) -> Option<TaskResult> {
+    match &plan.keys {
+        KeyPlan::Whole(key) => lookup_result(plan, key),
+        KeyPlan::Chunk { elements } => {
+            let mut values = Vec::with_capacity(elements.len());
+            let mut rng_used = false;
+            for key in elements {
+                let result = lookup_result(plan, key)?;
+                rng_used |= result.captured.rng_used;
+                match result.outcome {
+                    TaskOutcome::Ok(v) => values.push(v),
+                    // Errors are never published; treat a rogue entry as a miss.
+                    TaskOutcome::Err(_) => return None,
+                }
+            }
+            Some(TaskResult {
+                id: String::new(),
+                outcome: TaskOutcome::Ok(Value::List(values)),
+                captured: Captured {
+                    stdout: String::new(),
+                    conditions: Vec::new(),
+                    rng_used,
+                },
+                metrics: TaskMetrics { started_ns: 0, finished_ns: 0 },
+                attempt: 0,
+            })
+        }
+    }
+}
+
+fn publish_frame(plan: &CachePlan, key: &Digest, frame: Vec<u8>) {
+    let len = frame.len();
+    let frame = Arc::new(frame);
+    memory_insert(plan.session, plan.memory_bytes, *key, Arc::clone(&frame));
+    if let Some(root) = &plan.disk {
+        if let Some(store) = store_for(root) {
+            // Best-effort: a full or read-only disk never fails the future.
+            if let Ok(true) = store.publish(key, &frame) {
+                with_session(plan.session, |e| {
+                    e.counters.disk.publishes += 1;
+                    e.counters.disk.bytes += len as u64;
+                });
+            }
+        }
+    }
+}
+
+/// Publish a cleanly-resolved result under `plan`.  Anything that is not
+/// `TaskOutcome::Ok` is silently skipped — **eval errors are never
+/// cached** (and `TimedOut`/`Cancelled`/infra failures never reach here:
+/// they latch `State::Failed`, which has no result to publish).
+pub(crate) fn publish(plan: &CachePlan, result: &TaskResult) {
+    if !matches!(result.outcome, TaskOutcome::Ok(_)) {
+        return;
+    }
+    match &plan.keys {
+        KeyPlan::Whole(key) => {
+            // Canonical stored identity: id/attempt/timings are
+            // per-creation facts, not content — zero them so the same
+            // computation stores byte-identical frames from any session.
+            let canonical = TaskResult {
+                id: String::new(),
+                metrics: TaskMetrics { started_ns: 0, finished_ns: 0 },
+                attempt: 0,
+                ..result.clone()
+            };
+            publish_frame(plan, key, encode_message(&Message::Result(canonical)));
+        }
+        KeyPlan::Chunk { elements } => {
+            // Chunk results split into per-element entries (chunking
+            // invariance).  Chunk-level captured output cannot be
+            // attributed back to elements, so such chunks don't publish.
+            if !result.captured.stdout.is_empty() || !result.captured.conditions.is_empty() {
+                return;
+            }
+            let TaskOutcome::Ok(Value::List(values)) = &result.outcome else {
+                return;
+            };
+            if values.len() != elements.len() {
+                return;
+            }
+            for (key, value) in elements.iter().zip(values) {
+                let element = TaskResult {
+                    id: String::new(),
+                    outcome: TaskOutcome::Ok(value.clone()),
+                    captured: Captured {
+                        stdout: String::new(),
+                        conditions: Vec::new(),
+                        rng_used: result.captured.rng_used,
+                    },
+                    metrics: TaskMetrics { started_ns: 0, finished_ns: 0 },
+                    attempt: 0,
+                };
+                publish_frame(plan, key, encode_message(&Message::Result(element)));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------- observability --
+
+/// Snapshot one session's cache counters.
+pub fn session_counters(session: u64) -> CacheCounters {
+    sessions().lock().unwrap().get(&session).map(|e| e.counters).unwrap_or_default()
+}
+
+/// Drop a session's in-memory tier and counters (its counters fold into
+/// the process totals first, so `cache_json()` stays monotonic).  Disk
+/// objects persist by design — they are content-addressed and shared
+/// across sessions and process restarts.
+pub fn clear_session(session: u64) {
+    if let Some(entry) = sessions().lock().unwrap().remove(&session) {
+        let mut retired = RETIRED.lock().unwrap();
+        retired.add(&entry.counters);
+        // Resident bytes are not a monotonic counter: the freed tier no
+        // longer holds them.
+        retired.memory.bytes -= entry.counters.memory.bytes;
+    }
+}
+
+fn tier_json(t: &TierCounters) -> String {
+    format!(
+        "{{\"hits\":{},\"misses\":{},\"publishes\":{},\"evictions\":{},\"bytes\":{}}}",
+        t.hits, t.misses, t.publishes, t.evictions, t.bytes
+    )
+}
+
+/// Result-cache utilization as JSON, schema **`rustures.cache.v1`**:
+///
+/// ```json
+/// {"schema":"rustures.cache.v1",
+///  "total":{"memory":{"hits":1,"misses":1,"publishes":1,"evictions":0,"bytes":64},
+///           "disk":{...}},
+///  "sessions":[{"session":3,"memory":{...},"disk":{...}}]}
+/// ```
+///
+/// `total` includes cleared sessions (monotonic, except `memory.bytes`,
+/// which is resident); `sessions` lists live per-session counters.
+pub fn cache_json() -> String {
+    let map = sessions().lock().unwrap();
+    let mut rows: Vec<(u64, CacheCounters)> = map.iter().map(|(s, e)| (*s, e.counters)).collect();
+    drop(map);
+    rows.sort_by_key(|(s, _)| *s);
+    let mut total = *RETIRED.lock().unwrap();
+    for (_, c) in &rows {
+        total.add(c);
+    }
+    let sessions_json: Vec<String> = rows
+        .iter()
+        .map(|(s, c)| {
+            format!(
+                "{{\"session\":{s},\"memory\":{},\"disk\":{}}}",
+                tier_json(&c.memory),
+                tier_json(&c.disk)
+            )
+        })
+        .collect();
+    format!(
+        "{{\"schema\":\"rustures.cache.v1\",\"total\":{{\"memory\":{},\"disk\":{}}},\"sessions\":[{}]}}",
+        tier_json(&total.memory),
+        tier_json(&total.disk),
+        sessions_json.join(",")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::error::EvalError;
+    use std::sync::Arc as StdArc;
+
+    fn tmp_root(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("rustures-cache-{tag}-{}", uuid_v4()))
+    }
+
+    fn ok_result(v: Value) -> TaskResult {
+        TaskResult {
+            id: "t".into(),
+            outcome: TaskOutcome::Ok(v),
+            captured: Captured {
+                stdout: String::new(),
+                conditions: Vec::new(),
+                rng_used: false,
+            },
+            metrics: TaskMetrics { started_ns: 1, finished_ns: 2 },
+            attempt: 0,
+        }
+    }
+
+    fn whole_plan(session: u64, key: Digest, disk: Option<PathBuf>) -> CachePlan {
+        CachePlan { session, keys: KeyPlan::Whole(key), memory_bytes: 1 << 20, disk }
+    }
+
+    #[test]
+    fn cache_key_is_deterministic_and_input_sensitive() {
+        let env = {
+            let mut e = Env::new();
+            e.insert("x", 7i64);
+            e
+        };
+        let expr = Expr::add(Expr::var("x"), Expr::lit(1i64));
+        let k1 = cache_key(&expr, &env, Some(42), 0);
+        let k2 = cache_key(&expr, &env, Some(42), 0);
+        assert_eq!(k1, k2, "same identity, same key");
+        assert_ne!(k1, cache_key(&expr, &env, Some(43), 0), "seed participates");
+        let mut env2 = env.clone();
+        env2.insert("x", 8i64);
+        assert_ne!(k1, cache_key(&expr, &env2, Some(42), 0), "globals participate");
+        assert_ne!(
+            k1,
+            cache_key(&Expr::add(Expr::var("x"), Expr::lit(2i64)), &env, Some(42), 0),
+            "expression participates"
+        );
+    }
+
+    #[test]
+    fn stream_index_participates_only_under_rng() {
+        let env = Env::new();
+        let pure = Expr::lit(1i64);
+        assert_eq!(
+            cache_key(&pure, &env, Some(1), 0),
+            cache_key(&pure, &env, Some(1), 99),
+            "deterministic exprs must hit regardless of creation ordinal"
+        );
+        let rng = Expr::runif(2);
+        assert_ne!(
+            cache_key(&rng, &env, Some(1), 0),
+            cache_key(&rng, &env, Some(1), 1),
+            "RNG exprs draw from their stream: the index is identity"
+        );
+    }
+
+    #[test]
+    fn chunk_element_keys_are_chunking_invariant() {
+        let body = Expr::add(Expr::var("x"), Expr::runif(1));
+        let env = Env::new();
+        let elements: Vec<Value> = (0..8i64).map(Value::I64).collect();
+        let whole = chunk_element_keys("x", &body, &elements, 0, Some(9), &env);
+        // Split 3 | 5: per-element keys must line up with the whole map's.
+        let mut split = chunk_element_keys("x", &body, &elements[..3], 0, Some(9), &env);
+        split.extend(chunk_element_keys("x", &body, &elements[3..], 3, Some(9), &env));
+        assert_eq!(whole, split, "keys depend on global index, not chunk shape");
+    }
+
+    #[test]
+    fn plan_refuses_uncacheable_tasks() {
+        let env = Env::new();
+        let config = CacheConfig::new();
+        assert!(
+            plan_for_task(1, &Expr::chaos_kill(), &env, Some(1), 0, &config).is_none(),
+            "chaos-marked expressions are never keyed"
+        );
+        assert!(
+            plan_for_task(1, &Expr::runif(1), &env, None, 0, &config).is_none(),
+            "unseeded RNG is never keyed"
+        );
+        assert!(
+            plan_for_task(1, &Expr::lit(1i64), &env, None, 0, &CacheConfig::disabled())
+                .is_none(),
+            "disabled config keys nothing"
+        );
+        assert!(plan_for_task(1, &Expr::lit(1i64), &env, None, 0, &config).is_some());
+    }
+
+    #[test]
+    fn memory_roundtrip_and_counters() {
+        let session = 0xCAC4E_001;
+        let plan = whole_plan(session, cache_key(&Expr::lit(5i64), &Env::new(), None, 0), None);
+        assert!(lookup(&plan).is_none(), "cold lookup misses");
+        publish(&plan, &ok_result(Value::I64(5)));
+        let got = lookup(&plan).expect("warm lookup hits");
+        assert_eq!(got.outcome, TaskOutcome::Ok(Value::I64(5)));
+        assert_eq!(got.id, "", "stored identity is canonical (id zeroed)");
+        let c = session_counters(session);
+        assert_eq!(c.memory.hits, 1);
+        assert_eq!(c.memory.misses, 1);
+        assert_eq!(c.memory.publishes, 1);
+        assert!(c.memory.bytes > 0);
+        clear_session(session);
+        assert_eq!(session_counters(session), CacheCounters::default());
+    }
+
+    #[test]
+    fn eval_errors_are_never_published() {
+        let session = 0xCAC4E_002;
+        let plan = whole_plan(session, Digest([3; 16]), None);
+        let mut r = ok_result(Value::I64(1));
+        r.outcome = TaskOutcome::Err(EvalError { message: "boom".into(), call: None });
+        publish(&plan, &r);
+        assert_eq!(session_counters(session).memory.publishes, 0);
+        assert!(lookup(&plan).is_none());
+        clear_session(session);
+    }
+
+    #[test]
+    fn chunk_with_captured_output_is_not_split_published() {
+        let session = 0xCAC4E_003;
+        let keys = vec![Digest([7; 16]), Digest([8; 16])];
+        let plan = CachePlan {
+            session,
+            keys: KeyPlan::Chunk { elements: keys },
+            memory_bytes: 1 << 20,
+            disk: None,
+        };
+        let mut r = ok_result(Value::List(vec![Value::I64(1), Value::I64(2)]));
+        r.captured.stdout = "printed".into();
+        publish(&plan, &r);
+        assert_eq!(
+            session_counters(session).memory.publishes,
+            0,
+            "chunk-level output cannot be attributed to elements"
+        );
+        clear_session(session);
+    }
+
+    #[test]
+    fn lru_eviction_is_by_bytes_and_counted() {
+        let session = 0xCAC4E_004;
+        let frame = encode_message(&Message::Result(ok_result(Value::I64(1))));
+        let cap = frame.len() * 2 + 1; // room for two entries, not three
+        for i in 0..3u8 {
+            memory_insert(session, cap, Digest([i; 16]), StdArc::new(frame.clone()));
+        }
+        let c = session_counters(session);
+        assert_eq!(c.memory.publishes, 3);
+        assert_eq!(c.memory.evictions, 1, "third insert evicts the LRU entry");
+        assert!(c.memory.bytes as usize <= cap);
+        assert!(memory_get(session, &Digest([0; 16])).is_none(), "oldest entry evicted");
+        assert!(memory_get(session, &Digest([2; 16])).is_some());
+        clear_session(session);
+    }
+
+    #[test]
+    fn disk_store_publishes_atomically_and_survives_sessions() {
+        let root = tmp_root("disk");
+        let session = 0xCAC4E_005;
+        let key = cache_key(&Expr::lit(11i64), &Env::new(), None, 0);
+        let plan = whole_plan(session, key, Some(root.clone()));
+        publish(&plan, &ok_result(Value::I64(11)));
+        let c = session_counters(session);
+        assert_eq!(c.disk.publishes, 1);
+        assert!(c.disk.bytes > 0);
+        clear_session(session);
+        // A different session (fresh memory tier) hits from disk.
+        let other = whole_plan(0xCAC4E_006, key, Some(root.clone()));
+        let got = lookup(&other).expect("disk tier survives the session");
+        assert_eq!(got.outcome, TaskOutcome::Ok(Value::I64(11)));
+        let c2 = session_counters(0xCAC4E_006);
+        assert_eq!(c2.disk.hits, 1);
+        assert_eq!(c2.memory.publishes, 1, "disk hits promote into memory");
+        clear_session(0xCAC4E_006);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn torn_scratch_files_are_swept_never_published() {
+        let root = tmp_root("torn");
+        fs::create_dir_all(root.join("scratch")).unwrap();
+        fs::create_dir_all(root.join("objects")).unwrap();
+        // A torn write: a publisher crashed mid-frame, before its rename.
+        let orphan = root.join("scratch").join("4242-deadbeef");
+        fs::write(&orphan, b"torn-half-frame").unwrap();
+        let store = CacheStore::open(&root).unwrap();
+        assert!(!orphan.exists(), "open() must sweep orphaned scratch entries");
+        assert_eq!(
+            fs::read_dir(root.join("objects")).unwrap().count(),
+            0,
+            "a torn scratch file must never reach objects/"
+        );
+        // And a clean publish through the same store works.
+        let key = Digest([0xAB; 16]);
+        assert!(store.publish(&key, b"frame").unwrap());
+        assert!(!store.publish(&key, b"frame").unwrap(), "content-named: first write wins");
+        assert_eq!(store.load(&key).as_deref(), Some(b"frame".as_slice()));
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn corrupt_disk_objects_are_quarantined_as_misses() {
+        let root = tmp_root("corrupt");
+        let key = Digest([0xCC; 16]);
+        let store = CacheStore::open(&root).unwrap();
+        // Bit-rotted object: present on disk but not a decodable frame.
+        store.publish(&key, b"not a wire frame").unwrap();
+        let plan = whole_plan(0xCAC4E_007, key, Some(root.clone()));
+        assert!(lookup(&plan).is_none(), "undecodable object must read as a miss");
+        assert!(!store.object_path(&key).exists(), "corrupt object must be quarantined");
+        assert_eq!(session_counters(0xCAC4E_007).disk.misses, 1);
+        clear_session(0xCAC4E_007);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn cache_json_has_schema_totals_and_sessions() {
+        let session = 0xCAC4E_008;
+        let plan = whole_plan(session, Digest([0x44; 16]), None);
+        publish(&plan, &ok_result(Value::I64(4)));
+        let _ = lookup(&plan);
+        let json = cache_json();
+        assert!(json.starts_with("{\"schema\":\"rustures.cache.v1\""), "{json}");
+        assert!(json.contains(&format!("\"session\":{session}")), "{json}");
+        assert!(json.contains("\"memory\":{\"hits\":"), "{json}");
+        assert!(json.contains("\"disk\":{\"hits\":"), "{json}");
+        clear_session(session);
+        assert!(!cache_json().contains(&format!("\"session\":{session}")));
+    }
+}

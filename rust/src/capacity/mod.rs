@@ -978,6 +978,11 @@ impl Drop for InFlightPermit {
 /// each wake, so `clear_session_limits` (session close) unblocks waiters.
 /// §Perf: while no session anywhere has a `max_in_flight` limit, this is
 /// ONE atomic load — future creation does not take the ledger lock.
+///
+/// Result-cache hits never reach this function: a `cached` future whose
+/// key is already published resolves before admission, taking no in-flight
+/// permit, no backend lease, and leaving no trace in [`capacity_json`] —
+/// the cache is strictly upstream of the capacity plane ([`crate::cache`]).
 pub fn admit_in_flight(session: u64) -> InFlightPermit {
     if IN_FLIGHT_LIMITED_SESSIONS.load(Ordering::Acquire) == 0 {
         return InFlightPermit { session, counted: false };

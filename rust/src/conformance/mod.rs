@@ -1054,6 +1054,131 @@ fn check_wire_v6_interning_bit_identical() -> Result<(), String> {
     }
 }
 
+/// The result cache is a scheduling optimization, never a semantic one:
+/// on every backend, a seeded cached lapply is bit-identical cold (all
+/// misses), warm (all hits — from a FRESH session under a DIFFERENT
+/// chunking, through the disk tier), and with the cache disabled; warm
+/// hits take zero capacity-ledger footprint; captured conditions replay
+/// identically on a hit; and eval errors are provably never cached.
+fn check_cached_bit_identical() -> Result<(), String> {
+    use crate::cache::{self, CacheConfig};
+    let spec = ambient_plan();
+    let root =
+        std::env::temp_dir().join(format!("rustures-conf-cache-{}", crate::util::uuid_v4()));
+    let outcome = check_cached_bit_identical_in(&spec, &root);
+    let _ = std::fs::remove_dir_all(&root);
+    outcome?;
+
+    // Eval errors are never published: the same cached error expression
+    // errors again on a second creation (a miss, not a poisoned hit).
+    let s = Session::with_plan(spec);
+    s.set_cache_config(CacheConfig::new());
+    let run_err = s.scope(|_| -> Result<(), String> {
+        for _ in 0..2 {
+            let f = future_with(
+                Expr::stop(Expr::lit("boom")),
+                &Env::new(),
+                FutureOpts::new().cached(),
+            )
+            .map_err(|e| e.to_string())?;
+            match f.value() {
+                Err(FutureError::Eval(e)) if e.message == "boom" => {}
+                other => return err(format!("expected eval error both times, got {other:?}")),
+            }
+        }
+        Ok(())
+    });
+    let c = cache::session_counters(s.id());
+    s.close();
+    run_err?;
+    expect_eq(c.memory.publishes + c.disk.publishes, 0, "eval errors must never publish")?;
+    if c.memory.misses < 2 {
+        return err(format!("both error creations must consult and miss the cache: {c:?}"));
+    }
+    Ok(())
+}
+
+fn check_cached_bit_identical_in(
+    spec: &PlanSpec,
+    root: &std::path::Path,
+) -> Result<(), String> {
+    use crate::cache::{self, CacheConfig};
+    // Seeded draws per element make bit-identity meaningful; per-element
+    // keys make the warm run chunking-invariant.
+    let body = Expr::add(Expr::var("x"), Expr::runif(1));
+    let xs: Vec<Value> = (0..8i64).map(Value::I64).collect();
+    let env = Env::new();
+
+    let run = |cfg: CacheConfig,
+               chunk: Chunking|
+     -> Result<(Vec<Value>, u64, cache::CacheCounters), String> {
+        let s = Session::with_plan(spec.clone());
+        s.set_cache_config(cfg);
+        let opts = LapplyOpts::new().seed(7).chunking(chunk).cached();
+        let got = s.lapply(&xs, "x", &body, &env, &opts).map_err(|e| e.to_string());
+        let counters = cache::session_counters(s.id());
+        let peak = crate::capacity::session_peak_in_use(s.id());
+        s.close();
+        Ok((got?, peak, counters))
+    };
+
+    // Cold: evaluates everything, publishes per element into the shared
+    // disk root.  Warm: a FRESH session (empty memory tier) under a
+    // DIFFERENT chunking — every element must hit through the disk tier.
+    let cfg = CacheConfig::new().disk(root.to_path_buf());
+    let (cold, _, cold_c) = run(cfg.clone(), Chunking::ChunkSize(2))?;
+    let (warm, warm_peak, warm_c) = run(cfg, Chunking::ChunkSize(3))?;
+    let (disabled, _, dis_c) = run(CacheConfig::disabled(), Chunking::ChunkSize(2))?;
+    expect_eq(warm.clone(), cold.clone(), "warm-hit run vs cold run")?;
+    expect_eq(disabled, cold, "cache-disabled run vs cold run")?;
+    expect_eq(cold_c.disk.publishes, xs.len() as u64, "cold run publishes per element")?;
+    expect_eq(warm_c.disk.hits, xs.len() as u64, "warm run hits per element via disk")?;
+    expect_eq(warm_c.disk.publishes, 0, "warm run must re-publish nothing")?;
+    expect_eq(warm_peak, 0, "warm hits must take no capacity lease or in-flight permit")?;
+    expect_eq(dis_c, cache::CacheCounters::default(), "disabled config must not touch the cache")?;
+
+    // Whole-future hit with captured output: relays identically cold and
+    // warm, and the warm session — whose ONLY future is the hit — never
+    // touches a backend or the ledger, so it is absent from capacity_json.
+    let chatty = Expr::seq(vec![
+        Expr::cat(Expr::lit("tick\n")),
+        Expr::message(Expr::lit("halfway")),
+        Expr::warning(Expr::lit("carefully")),
+        Expr::lit(55i64),
+    ]);
+    let relay_run = |expect_hit: bool| -> Result<(String, Vec<(ConditionKind, String)>), String> {
+        let s = Session::with_plan(spec.clone());
+        s.set_cache_config(CacheConfig::new().disk(root.to_path_buf()));
+        let outcome = s.scope(|_| -> Result<(String, Vec<(ConditionKind, String)>), String> {
+            let f = future_with(chatty.clone(), &Env::new(), FutureOpts::new().cached())
+                .map_err(|e| e.to_string())?;
+            let rec = RecordingSink::new();
+            set_sink(Some(Box::new(rec.clone())));
+            let v = f.value();
+            set_sink(None);
+            expect_eq(v.map_err(|e| e.to_string())?, Value::I64(55), "chatty value")?;
+            let conds =
+                rec.conditions().iter().map(|c| (c.kind, c.message.clone())).collect();
+            Ok((rec.stdout_text(), conds))
+        });
+        let c = cache::session_counters(s.id());
+        let id = s.id();
+        let absent = !crate::capacity::capacity_json().contains(&format!("\"session\":{id}"));
+        s.close();
+        let relayed = outcome?;
+        if expect_hit {
+            expect_eq(c.memory.hits + c.disk.hits, 1, "warm chatty future must hit")?;
+            if !absent {
+                return err("warm cached session must be absent from capacity_json");
+            }
+        }
+        Ok(relayed)
+    };
+    let cold_relay = relay_run(false)?;
+    let warm_relay = relay_run(true)?;
+    expect_eq(warm_relay, cold_relay, "warm relay (stdout + conditions) vs cold relay")
+}
+
 /// All conformance checks.
 pub fn checks() -> Vec<Check> {
     vec![
@@ -1212,6 +1337,11 @@ pub fn checks() -> Vec<Check> {
             name: "wire-v6-interning",
             what: "interned lapply bit-identical to uninterned; hot body shipped at most once per seat",
             run: check_wire_v6_interning_bit_identical,
+        },
+        Check {
+            name: "cached-bit-identical",
+            what: "cold ≡ warm-hit ≡ cache-disabled (values + relay); lease-free hits; errors never cached",
+            run: check_cached_bit_identical,
         },
     ]
 }

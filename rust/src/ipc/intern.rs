@@ -131,6 +131,18 @@ pub fn digest_value(v: &Value) -> Digest {
     h.finish()
 }
 
+/// Digest of a result-cache key frame (see [`crate::cache`]): the canonical
+/// task-identity bytes hashed under a dedicated domain — the leading kind
+/// byte 2 keeps cache keys disjoint from [`digest_value`] content digests
+/// (0) and expression blobs (1), so a cache object name can never collide
+/// with an interned blob digest.
+pub fn digest_cache_key(bytes: &[u8]) -> Digest {
+    let mut h = Fnv2::new();
+    h.update(&[2]);
+    h.update(bytes);
+    h.finish()
+}
+
 fn hash_value(h: &mut Fnv2, v: &Value) {
     match v {
         Value::Unit => h.update(&[0]),

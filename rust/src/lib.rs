@@ -28,7 +28,10 @@
 //!   ([`capacity`]),
 //! * plan-time static analysis — a multi-pass linter (export-size
 //!   budgets, RNG hygiene, opacity traps, plan cross-checks) that rejects
-//!   or flags bad futures before they cost anything ([`analysis`]).
+//!   or flags bad futures before they cost anything ([`analysis`]),
+//! * a content-addressed result cache — memoized futures with a bounded
+//!   in-memory tier and an atomic spill-to-disk store; hits resolve with
+//!   no capacity lease and no backend at all ([`cache`]).
 //!
 //! Compute payloads (the paper's `slow_fcn`) are JAX/Pallas programs
 //! AOT-lowered to HLO text and executed through PJRT by [`runtime`] — Python
@@ -52,6 +55,7 @@
 pub mod analysis;
 pub mod api;
 pub mod backend;
+pub mod cache;
 pub mod capacity;
 pub mod conformance;
 pub mod ipc;
@@ -83,6 +87,7 @@ pub mod prelude {
     pub use crate::api::session::Session;
     pub use crate::api::value::{Tensor, Value};
     pub use crate::backend::supervisor::{RetryPolicy, SupervisorConfig};
+    pub use crate::cache::CacheConfig;
     pub use crate::capacity::{BreakerConfig, BreakerState, SessionLimits};
     pub use crate::liveness::LivenessConfig;
     pub use crate::mapreduce::{

@@ -108,6 +108,12 @@ pub struct LapplyOpts {
     /// in-flight attempt — this long after its creation.  The whole map
     /// then fails with the first chunk's timeout at collection.
     pub deadline: Option<std::time::Duration>,
+    /// Opt every chunk future into the content-addressed result cache
+    /// ([`crate::api::future::FutureOpts::cached`]).  Entries are keyed
+    /// **per element** under the same `base_index` substream rule as the
+    /// RNG, so a warm map hits under ANY chunking policy — cached
+    /// `future_lapply` is chunking-invariant by construction.
+    pub cached: bool,
 }
 
 impl LapplyOpts {
@@ -147,6 +153,13 @@ impl LapplyOpts {
 
     pub fn deadline(mut self, deadline: std::time::Duration) -> Self {
         self.deadline = Some(deadline);
+        self
+    }
+
+    /// Opt every chunk future into the result cache (see
+    /// [`LapplyOpts::cached`]).
+    pub fn cached(mut self) -> Self {
+        self.cached = true;
         self
     }
 }
@@ -288,6 +301,7 @@ pub fn lapply_futures(
         fopts.queued = opts.queued;
         fopts.retry = opts.retry.clone();
         fopts.deadline = opts.deadline;
+        fopts.cached = opts.cached;
         fopts.label = Some(match &opts.label {
             Some(l) => format!("{l}[chunk {ci}]"),
             None => format!("lapply[chunk {ci}]"),

@@ -191,6 +191,9 @@ pub fn drop_session_scope(session: u64) {
     if let Some(map) = ANALYSIS.lock().unwrap().as_mut() {
         map.remove(&session);
     }
+    // Frees the session's in-memory result-cache tier too (its counters
+    // fold into the process totals; disk objects persist by design).
+    crate::cache::clear_session(session);
 }
 
 /// Per-session snapshot (all zeros for a session that never recorded).
@@ -316,6 +319,13 @@ pub fn supervision_json() -> String {
 /// see [`crate::capacity::capacity_json`] for the shape).
 pub fn capacity_json() -> String {
     crate::capacity::capacity_json()
+}
+
+/// Result-cache utilization as JSON — hits/misses/publishes/evictions/bytes
+/// per tier per session (schema `rustures.cache.v1`; see
+/// [`crate::cache::cache_json`] for the shape).
+pub fn cache_json() -> String {
+    crate::cache::cache_json()
 }
 
 // --------------------------------------------------- analysis counters ----

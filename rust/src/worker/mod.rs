@@ -1,6 +1,14 @@
 //! Worker runtime: execute one task ([`execute_task`]) and the remote-worker
 //! event loop ([`run_worker`]) used by the multiprocess, cluster, and batch
 //! backends.
+//!
+//! Evaluation here is deterministic in the task frame: the same `TaskSpec`
+//! (expression, globals, seed + stream selection) produces the same
+//! `TaskResult` on every backend — PR 1's substream rule makes that hold
+//! even for RNG draws.  That determinism is what licenses the result cache
+//! ([`crate::cache`]): a published result frame can stand in for
+//! re-executing the task anywhere, and a cache hit is observationally
+//! identical to a fresh evaluation.
 
 pub mod eval;
 

@@ -1,0 +1,223 @@
+//! The result cache, end to end through the public API: warm hits served
+//! from the disk tier survive session (and would survive process) restarts
+//! with ZERO capacity footprint, torn scratch files are swept and never
+//! published, corrupt disk objects quarantine as misses and self-heal,
+//! cached `future_lapply` is chunking-invariant across sessions, and eval
+//! errors never populate the store.
+
+use std::fs;
+use std::path::PathBuf;
+
+use rustures::cache::{self, CacheStore};
+use rustures::prelude::*;
+use rustures::util::uuid_v4;
+
+fn temp_root(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("rustures-it-cache-{tag}-{}", uuid_v4()))
+}
+
+fn xs(n: i64) -> Vec<Value> {
+    (0..n).map(Value::I64).collect()
+}
+
+/// Elements of `objects/` under a store root (the content-named frames).
+fn object_names(root: &PathBuf) -> Vec<String> {
+    let mut names: Vec<String> = fs::read_dir(root.join("objects"))
+        .map(|rd| rd.flatten().map(|e| e.file_name().to_string_lossy().into_owned()).collect())
+        .unwrap_or_default();
+    names.sort();
+    names
+}
+
+/// A cold session publishes through the disk tier; a FRESH session (empty
+/// memory tier — the in-memory tier is per-session) then hits purely from
+/// disk, takes no in-flight permit and no lease, leaves no row in
+/// `capacity_json`, and the hit is visible in `cache_json`.
+#[test]
+fn disk_tier_survives_sessions_with_zero_capacity_footprint() {
+    let root = temp_root("restart");
+    let expr = Expr::add(Expr::lit(40i64), Expr::lit(2i64));
+
+    let cold = Session::with_plan(PlanSpec::Sequential);
+    cold.set_cache_config(CacheConfig::new().disk(&root));
+    let v = cold
+        .scope(|_| future_with(expr.clone(), &Env::new(), FutureOpts::new().cached()))
+        .unwrap()
+        .value()
+        .unwrap();
+    assert_eq!(v, Value::I64(42));
+    let c = cache::session_counters(cold.id());
+    assert_eq!(c.disk.publishes, 1, "cold run must spill to disk: {c:?}");
+    cold.close();
+    assert_eq!(object_names(&root).len(), 1, "one content-named object after cold run");
+
+    let warm = Session::with_plan(PlanSpec::Sequential);
+    warm.set_cache_config(CacheConfig::new().disk(&root));
+    let v = warm
+        .scope(|_| future_with(expr, &Env::new(), FutureOpts::new().cached()))
+        .unwrap()
+        .value()
+        .unwrap();
+    assert_eq!(v, Value::I64(42));
+    let c = cache::session_counters(warm.id());
+    assert_eq!(c.disk.hits, 1, "warm session must hit via the disk tier: {c:?}");
+    assert_eq!(c.disk.publishes, 0, "a hit must not re-publish");
+    assert_eq!(
+        rustures::capacity::session_peak_in_use(warm.id()),
+        0,
+        "a pure-hit session must never hold a lease"
+    );
+    assert!(
+        !rustures::metrics::capacity_json().contains(&format!("\"session\":{}", warm.id())),
+        "a pure-hit session must be absent from capacity_json"
+    );
+    let json = rustures::metrics::cache_json();
+    assert!(json.contains("\"schema\":\"rustures.cache.v1\""), "schema tag: {json}");
+    assert!(json.contains(&format!("\"session\":{}", warm.id())), "hit session row: {json}");
+    warm.close();
+
+    let _ = fs::remove_dir_all(&root);
+}
+
+/// A crashed publisher leaves only a scratch orphan; `CacheStore::open`
+/// sweeps it, and a torn file can never become an object (publish goes
+/// through its own scratch file + atomic rename).
+#[test]
+fn torn_scratch_files_are_swept_and_never_published() {
+    let root = temp_root("torn");
+    let _ = CacheStore::open(&root).unwrap();
+
+    // Simulate a publisher that died mid-write: a half-frame in scratch/.
+    let torn = root.join("scratch").join("4242-deadbeef");
+    fs::write(&torn, b"half a frame").unwrap();
+
+    let store = CacheStore::open(&root).unwrap();
+    assert!(!torn.exists(), "reopening the store must sweep torn scratch files");
+    assert!(object_names(&root).is_empty(), "a torn write must never surface as an object");
+
+    // A real publish still lands, content-named, and is immutable.
+    let key = cache::cache_key(&Expr::lit(7i64), &Env::new(), None, 0);
+    assert!(store.publish(&key, b"frame-bytes").unwrap());
+    assert!(!store.publish(&key, b"other-bytes").unwrap(), "first write wins");
+    assert_eq!(object_names(&root), vec![key.to_string()]);
+    assert_eq!(store.load(&key).unwrap(), b"frame-bytes");
+    assert!(
+        fs::read_dir(root.join("scratch")).unwrap().next().is_none(),
+        "publish must leave no scratch residue"
+    );
+
+    let _ = fs::remove_dir_all(&root);
+}
+
+/// A bit-rotted object fails the wire decode, is deleted, reports a miss —
+/// and the re-evaluation heals the store with a fresh publish.
+#[test]
+fn corrupt_disk_objects_quarantine_as_misses_and_self_heal() {
+    let root = temp_root("corrupt");
+    let expr = Expr::add(Expr::lit(20i64), Expr::lit(22i64));
+
+    let cold = Session::with_plan(PlanSpec::Sequential);
+    cold.set_cache_config(CacheConfig::new().disk(&root));
+    cold.scope(|_| future_with(expr.clone(), &Env::new(), FutureOpts::new().cached()))
+        .unwrap()
+        .value()
+        .unwrap();
+    cold.close();
+
+    // Non-RNG expression: the key excludes the stream index, so it is
+    // recomputable here without knowing the session's ordinal assignment.
+    let key = cache::cache_key(&expr, &Env::new(), None, 0);
+    let store = CacheStore::open(&root).unwrap();
+    let object = store.object_path(&key);
+    assert!(object.exists(), "cold run must have published under the public key derivation");
+    fs::write(&object, b"bit rot").unwrap();
+
+    let warm = Session::with_plan(PlanSpec::Sequential);
+    warm.set_cache_config(CacheConfig::new().disk(&root));
+    let v = warm
+        .scope(|_| future_with(expr, &Env::new(), FutureOpts::new().cached()))
+        .unwrap()
+        .value()
+        .unwrap();
+    assert_eq!(v, Value::I64(42), "a corrupt entry must fall back to evaluation");
+    let c = cache::session_counters(warm.id());
+    assert_eq!(c.disk.hits, 0, "a corrupt object must not count as a hit: {c:?}");
+    assert!(c.disk.misses >= 1, "quarantine reports a miss: {c:?}");
+    assert_eq!(c.disk.publishes, 1, "re-evaluation re-publishes: {c:?}");
+    warm.close();
+
+    let bytes = fs::read(&object).unwrap();
+    assert_ne!(bytes, b"bit rot".to_vec(), "the store must self-heal the object");
+
+    let _ = fs::remove_dir_all(&root);
+}
+
+/// Per-element keying makes cached maps chunking-invariant: a warm session
+/// under a DIFFERENT chunking hits every element published by the cold one,
+/// and the values are bit-identical to both the cold run and a cache-free
+/// reference.
+#[test]
+fn cached_lapply_is_chunking_invariant_across_sessions() {
+    let root = temp_root("chunks");
+    let body = Expr::add(Expr::var("x"), Expr::runif(1));
+    let elements = xs(12);
+    let env = Env::new();
+    let opts = |chunk| LapplyOpts::new().seed(11).chunking(chunk).cached();
+
+    let run = |chunk| {
+        let s = Session::with_plan(PlanSpec::Sequential);
+        s.set_cache_config(CacheConfig::new().disk(&root));
+        let got = s.lapply(&elements, "x", &body, &env, &opts(chunk)).unwrap();
+        let counters = cache::session_counters(s.id());
+        s.close();
+        (got, counters)
+    };
+
+    let (cold, cold_c) = run(Chunking::ChunkSize(4));
+    let (warm, warm_c) = run(Chunking::ChunkSize(5));
+    assert_eq!(warm, cold, "warm run under different chunking must be bit-identical");
+    assert_eq!(cold_c.disk.publishes, 12, "one object per element: {cold_c:?}");
+    assert_eq!(warm_c.disk.hits, 12, "every element hits under the new chunking: {warm_c:?}");
+    assert_eq!(warm_c.disk.publishes, 0, "nothing re-published on a warm run: {warm_c:?}");
+
+    // Reference: same seed, cache disabled — the cache is invisible.
+    let s = Session::with_plan(PlanSpec::Sequential);
+    s.set_cache_config(CacheConfig::disabled());
+    let reference =
+        s.lapply(&elements, "x", &body, &env, &opts(Chunking::ChunkSize(3))).unwrap();
+    assert_eq!(cache::session_counters(s.id()), cache::CacheCounters::default());
+    s.close();
+    assert_eq!(reference, cold, "disabled-cache reference must match");
+
+    let _ = fs::remove_dir_all(&root);
+}
+
+/// Eval errors are never cached: the store stays empty and a second cached
+/// creation misses and errors again.
+#[test]
+fn eval_errors_never_reach_the_store() {
+    let root = temp_root("errors");
+    for round in 0..2 {
+        let s = Session::with_plan(PlanSpec::Sequential);
+        s.set_cache_config(CacheConfig::new().disk(&root));
+        let f = s
+            .scope(|_| {
+                future_with(
+                    Expr::stop(Expr::lit("nope")),
+                    &Env::new(),
+                    FutureOpts::new().cached(),
+                )
+            })
+            .unwrap();
+        match f.value() {
+            Err(FutureError::Eval(e)) => assert_eq!(e.message, "nope"),
+            other => panic!("round {round}: expected eval error, got {other:?}"),
+        }
+        let c = cache::session_counters(s.id());
+        assert_eq!(c.memory.publishes + c.disk.publishes, 0, "round {round}: {c:?}");
+        assert!(c.memory.misses >= 1, "round {round} must consult and miss: {c:?}");
+        s.close();
+    }
+    assert!(object_names(&root).is_empty(), "error results must never land on disk");
+    let _ = fs::remove_dir_all(&root);
+}

@@ -617,3 +617,66 @@ fn prop_relay_order_stdout_first_conditions_in_seq() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_cache_key_is_chunking_invariant_and_pure() {
+    use rustures::cache::{cache_key, chunk_element_keys};
+    check("cache-key-chunking-invariant", 200, |g| {
+        let param = g.ident();
+        // `gen_sound_expr` never draws from the RNG; append a draw to half
+        // the bodies so both keying regimes are exercised.
+        let mut body = gen_sound_expr(g, 3);
+        if g.bool() {
+            body = Expr::seq(vec![body, Expr::runif(1)]);
+        }
+        let n = g.usize_in(1, 16);
+        let elements: Vec<Value> = (0..n).map(|_| gen_value(g, 2)).collect();
+        let seed = if g.bool() { Some(g.u64()) } else { None };
+        let mut env = Env::new();
+        for _ in 0..g.usize_in(0, 3) {
+            env.insert(&g.ident(), gen_value(g, 1));
+        }
+
+        // Reference: one chunk covering every element from base index 0.
+        let reference = chunk_element_keys(&param, &body, &elements, 0, seed, &env);
+
+        // ANY partition of the same elements — each chunk keyed under its
+        // global base index, the rule `future_lapply` uses — reproduces the
+        // reference key stream element for element.  This is exactly why a
+        // warm run under a different chunking policy hits every entry.
+        let mut keys = Vec::with_capacity(n);
+        let mut start = 0usize;
+        while start < n {
+            let len = g.usize_in(1, n - start);
+            let chunk = &elements[start..start + len];
+            keys.extend(chunk_element_keys(&param, &body, chunk, start as u64, seed, &env));
+            start += len;
+        }
+        if keys != reference {
+            return Err(format!("partitioned keys diverge for n={n}"));
+        }
+
+        // Keys are a pure function of their inputs (same call, same
+        // digests) — no backend, session, or ambient state participates.
+        if chunk_element_keys(&param, &body, &elements, 0, seed, &env) != reference {
+            return Err("chunk keys are not deterministic".into());
+        }
+        let whole = cache_key(&body, &env, seed, 3);
+        if cache_key(&body, &env, seed, 3) != whole {
+            return Err("whole-future key is not deterministic".into());
+        }
+
+        // The stream index participates exactly when the body draws RNG:
+        // deterministic work dedups across creation ordinals, seeded draws
+        // stay distinct per substream.
+        let shifted = cache_key(&body, &env, seed, 4);
+        if body.uses_rng() {
+            if shifted == whole {
+                return Err("RNG body must key per stream index".into());
+            }
+        } else if shifted != whole {
+            return Err("non-RNG body must ignore the stream index".into());
+        }
+        Ok(())
+    });
+}
