@@ -133,6 +133,10 @@ fn main() {
     // before close() so this session's rows are still resident.
     println!("capacity: {}", rustures::metrics::capacity_json());
     println!("cache: {}", rustures::metrics::cache_json());
+    // Transport reactor: one poll thread drove all four worker channels —
+    // wakeups/frames/outbox gauges for the run (queried before close()
+    // while the channels are still registered).
+    println!("transport: {}", rustures::metrics::transport_json());
 
     session.close();
 }

@@ -1,0 +1,210 @@
+//! E18 — async multiplexed transport core.
+//!
+//! Three measurements, one story: what the poll-driven reactor buys over
+//! the legacy thread-per-connection shape, and what promise pipelining
+//! buys over collect-then-reship.
+//!
+//! * `lapply` — the same seeded map on a multiprocess pool with channels
+//!   on the reactor (default) vs forced onto blocking pump threads (the
+//!   legacy per-seat reader/writer shape).  Results are bit-identical
+//!   (the conformance suite asserts it); this measures the time.
+//! * `chain` — a dependency chain `f1 → f2 → … → fK`: `pipelined` ships
+//!   each dependency's outcome straight to the consumer's seat as a
+//!   wire-v7 Forward frame (one hop); `round-trip` collects each value at
+//!   the coordinator and re-ships it inside the next future's globals
+//!   (two hops).
+//! * `fanout-256` — register 256 simulated worker channels (socketpairs),
+//!   deliver one frame from each, tear down: the reactor does it on ONE
+//!   poll thread; pump mode pays 256 thread spawns + stack churn.
+//!
+//! Shape: reactor ≤ pump on `lapply` (same work, fewer threads), pipelined
+//! < round-trip on `chain` (one hop beats two), and reactor ≪ pump on
+//! `fanout-256` (thread churn dominates at scale).
+//!
+//! Emits `BENCH_transport.json` (schema in BENCH.md); `scripts/bench.sh`
+//! runs this in smoke mode.
+
+mod common;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use common::{fmt_dur, header, json_row, measure, row, scale_iters, write_bench_json, Json};
+use rustures::prelude::*;
+
+const CHAIN_DEPTH: usize = 4;
+const FANOUT: usize = 256;
+
+fn emit(rows: &mut Vec<Json>, plan: &str, mode: &str, stats: &common::Stats) {
+    row(&[
+        format!("{plan:<12}"),
+        format!("{mode:<10}"),
+        format!("{:>10}", fmt_dur(stats.mean)),
+        format!("{:>10}", fmt_dur(stats.p50)),
+        format!("{:>10}", fmt_dur(stats.p95)),
+    ]);
+    rows.push(json_row(&[
+        ("plan", Json::Str(plan.to_string())),
+        ("mode", Json::Str(mode.to_string())),
+        ("mean_ns", Json::Int(stats.mean.as_nanos() as i64)),
+        ("p50_ns", Json::Int(stats.p50.as_nanos() as i64)),
+        ("p95_ns", Json::Int(stats.p95.as_nanos() as i64)),
+        ("iters", Json::Int(stats.n as i64)),
+    ]));
+}
+
+/// The same seeded lapply, channels on the reactor vs on pump threads.
+/// Fresh session per run: `force_pump_scope` only affects registrations
+/// made while the guard lives, so the pool must be built inside it.
+fn bench_lapply(json_rows: &mut Vec<Json>) {
+    let iters = scale_iters(20);
+    let env = Env::new();
+    let xs: Vec<Value> = (0..12i64).map(Value::I64).collect();
+    let body = Expr::add(Expr::var("x"), Expr::runif(1));
+    let opts = || LapplyOpts::new().seed(11).chunking(Chunking::ChunkSize(3));
+
+    let stats = measure(1, iters, || {
+        let s = Session::with_plan(PlanSpec::multiprocess(2));
+        let _ = s.lapply(&xs, "x", &body, &env, &opts()).unwrap();
+        s.close();
+    });
+    emit(json_rows, "mp-2 lapply", "reactor", &stats);
+
+    let stats = measure(1, iters, || {
+        let _pump = rustures::transport::force_pump_scope();
+        let s = Session::with_plan(PlanSpec::multiprocess(2));
+        let _ = s.lapply(&xs, "x", &body, &env, &opts()).unwrap();
+        s.close();
+    });
+    emit(json_rows, "mp-2 lapply", "pump", &stats);
+}
+
+/// A K-deep dependency chain: pipelined (Forward frames, one hop per
+/// link) vs classic round-trip (collect at the coordinator, re-ship in
+/// the next future's globals).
+fn bench_chain(json_rows: &mut Vec<Json>) {
+    let iters = scale_iters(20);
+    let s = Session::with_plan(PlanSpec::multiprocess(2));
+    let env = Env::new();
+
+    let stats = measure(1, iters, || {
+        let mut prev = s.future(Expr::lit(0i64), &env).unwrap();
+        for _ in 0..CHAIN_DEPTH {
+            let dep_id = prev.id().to_string();
+            let link = Expr::seq(vec![
+                Expr::Spin { millis: 1 },
+                Expr::add(Expr::await_future(&dep_id), Expr::lit(1i64)),
+            ]);
+            prev = s
+                .future_pipelined(link, &env, FutureOpts::new(), vec![prev])
+                .unwrap();
+        }
+        assert_eq!(prev.value().unwrap(), Value::I64(CHAIN_DEPTH as i64));
+    });
+    emit(json_rows, "chain-4", "pipelined", &stats);
+
+    let stats = measure(1, iters, || {
+        let mut v = s.future(Expr::lit(0i64), &env).unwrap().value().unwrap();
+        for _ in 0..CHAIN_DEPTH {
+            let mut link_env = Env::new();
+            link_env.insert("prev", v);
+            let link = Expr::seq(vec![
+                Expr::Spin { millis: 1 },
+                Expr::add(Expr::var("prev"), Expr::lit(1i64)),
+            ]);
+            v = s.future(link, &link_env).unwrap().value().unwrap();
+        }
+        assert_eq!(v, Value::I64(CHAIN_DEPTH as i64));
+    });
+    emit(json_rows, "chain-4", "round-trip", &stats);
+    s.close();
+}
+
+/// Register `FANOUT` simulated worker channels, deliver one frame from
+/// each, tear down.  One reactor thread vs one pump thread per channel.
+#[cfg(unix)]
+fn fanout_once(force_pump: bool) {
+    use std::os::unix::io::AsRawFd;
+    use std::os::unix::net::UnixStream;
+
+    use rustures::ipc::frame::write_message;
+    use rustures::ipc::Message;
+    use rustures::transport::{self, ChannelEvent, Endpoint};
+
+    let _pump = force_pump.then(transport::force_pump_scope);
+    let frames = Arc::new(AtomicUsize::new(0));
+    let closed = Arc::new(AtomicUsize::new(0));
+    let mut peers = Vec::with_capacity(FANOUT);
+    let mut channels = Vec::with_capacity(FANOUT);
+    for i in 0..FANOUT {
+        let (ours, theirs) = UnixStream::pair().expect("socketpair");
+        let reader = ours.try_clone().expect("dup");
+        let (rfd, wfd) = (reader.as_raw_fd(), ours.as_raw_fd());
+        let frames = Arc::clone(&frames);
+        let closed = Arc::clone(&closed);
+        channels.push(transport::register(
+            &format!("bench-fanout-{i}"),
+            Endpoint::with_fds(Box::new(reader), Box::new(ours), rfd, wfd),
+            Arc::new(move |ev| match ev {
+                ChannelEvent::Message(_) => {
+                    frames.fetch_add(1, Ordering::SeqCst);
+                }
+                ChannelEvent::Closed | ChannelEvent::Error(_) => {
+                    closed.fetch_add(1, Ordering::SeqCst);
+                }
+                ChannelEvent::Stalled { .. } => {}
+            }),
+        ));
+        peers.push(theirs);
+    }
+    for peer in &mut peers {
+        write_message(peer, &Message::Ping).expect("peer write");
+    }
+    let give_up = Instant::now() + Duration::from_secs(60);
+    while frames.load(Ordering::SeqCst) < FANOUT {
+        assert!(Instant::now() < give_up, "fan-out frames never all arrived");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    drop(peers);
+    while closed.load(Ordering::SeqCst) < FANOUT {
+        assert!(Instant::now() < give_up, "fan-out channels never all closed");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    for ch in &channels {
+        ch.close();
+    }
+}
+
+#[cfg(unix)]
+fn bench_fanout(json_rows: &mut Vec<Json>) {
+    let iters = scale_iters(10);
+    let stats = measure(1, iters, || fanout_once(false));
+    emit(json_rows, "fanout-256", "reactor", &stats);
+    let stats = measure(1, iters, || fanout_once(true));
+    emit(json_rows, "fanout-256", "pump", &stats);
+}
+
+#[cfg(not(unix))]
+fn bench_fanout(_json_rows: &mut Vec<Json>) {
+    println!("fanout-256: skipped (no socketpair on this platform)");
+}
+
+fn main() {
+    header(
+        "E18: async multiplexed transport core",
+        &["plan        ", "mode      ", "mean      ", "p50       ", "p95       "],
+    );
+
+    let mut json_rows = Vec::new();
+    bench_lapply(&mut json_rows);
+    bench_chain(&mut json_rows);
+    bench_fanout(&mut json_rows);
+
+    write_bench_json("transport", json_rows);
+    println!(
+        "\nshape check: reactor ≤ pump on lapply; pipelined < round-trip on \
+         the chain (one hop per link beats two); reactor ≪ pump on the \
+         256-channel fan-out (thread churn dominates at scale)"
+    );
+}

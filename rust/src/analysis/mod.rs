@@ -353,6 +353,7 @@ pub fn estimate_export_size(expr: &Expr, globals: &Env) -> usize {
             Expr::ChaosHang { marker, .. } => {
                 est += marker.as_deref().map_or(0, str::len);
             }
+            Expr::Await { future_id } => est += future_id.len(),
             _ => {}
         }
     });

@@ -161,6 +161,21 @@ pub enum Expr {
     /// hang-exactly-once injection, mirroring [`Expr::ChaosKill`]'s
     /// fail-exactly-once contract.  `marker: None` hangs on every execution.
     ChaosHang { millis: u64, marker: Option<String> },
+
+    /// The value of a *pipelined* future dependency (protocol v7).  When
+    /// `future(g(f1))` is created with `f1` still unresolved, the consumer
+    /// task ships with `Await(f1.id)` in place of the value and lists the
+    /// id in [`crate::ipc::TaskOpts::pending`]; the coordinator forwards
+    /// `f1`'s outcome straight to the consumer's seat as a
+    /// [`crate::ipc::Message::Forward`] frame, and the worker binds it
+    /// before evaluation — one hop instead of a resolve-and-resubmit round
+    /// trip through the caller.  A dependency that *failed* re-raises its
+    /// error here.  Never a free variable for globals analysis (the
+    /// binding arrives out-of-band), and never an RNG consumer.
+    Await {
+        /// The pipelined dependency's future id.
+        future_id: String,
+    },
 }
 
 impl Expr {
@@ -300,6 +315,12 @@ impl Expr {
         Expr::ChaosHang { millis, marker: Some(marker.to_string()) }
     }
 
+    /// Reference a pipelined future dependency by id (see [`Expr::Await`];
+    /// [`crate::api::future::future_pipelined`] builds these for you).
+    pub fn await_future(future_id: &str) -> Expr {
+        Expr::Await { future_id: future_id.to_string() }
+    }
+
     /// Whether this expression (statically) may draw random numbers —
     /// used for the `seed = FALSE` misuse warning.
     pub fn uses_rng(&self) -> bool {
@@ -323,7 +344,8 @@ impl Expr {
             | Expr::Sleep { .. }
             | Expr::Work { .. }
             | Expr::ChaosKill { .. }
-            | Expr::ChaosHang { .. } => {}
+            | Expr::ChaosHang { .. }
+            | Expr::Await { .. } => {}
             Expr::Let { value, body, .. } => {
                 value.walk(f);
                 body.walk(f);

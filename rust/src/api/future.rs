@@ -244,11 +244,130 @@ pub fn future(expr: Expr, env: &Env) -> Result<Future, FutureError> {
 /// Create a future with explicit options, under the current
 /// [`Session`] (the innermost [`Session::scope`], else the default).
 pub fn future_with(expr: Expr, env: &Env, opts: FutureOpts) -> Result<Future, FutureError> {
+    future_inner(expr, env, opts, Env::new(), Vec::new())
+}
+
+/// `f2 <- future(g(f1))` — promise pipelining.  `expr` may reference each
+/// dependency through [`Expr::await_future`]`(dep.id())`; the dependency's
+/// resolved outcome reaches the consumer's worker either **prebound** into
+/// its globals (dependency already resolved at creation, or the backend
+/// cannot pipeline) or as a wire-v7 `Forward` frame sent straight from the
+/// coordinator to the consumer's seat the moment the dependency resolves —
+/// one hop, instead of collect-here-then-reship.  A failed dependency
+/// surfaces on the consumer as an evaluation error (never a hang);
+/// supervised retries of the consumer re-deliver every forward to the
+/// fresh seat.  Pipelined futures are never cached: their inputs arrive
+/// out-of-band, invisible to the content-addressed cache key.
+pub fn future_pipelined(
+    expr: Expr,
+    env: &Env,
+    mut opts: FutureOpts,
+    deps: Vec<Future>,
+) -> Result<Future, FutureError> {
+    opts.cached = false;
+    let session = session::current();
+    session.ensure_open()?;
+    let backend = session.backend_for_depth(current_depth())?;
+    // Lazy consumers have no seat to forward to until poked — resolve
+    // dependencies at creation instead (still correct, just eager on the
+    // dependency side).
+    let pipelining = backend.supports_pipelining() && !opts.lazy;
+
+    let mut prebound = Env::new();
+    let mut pending: Vec<String> = Vec::new();
+    let mut live: Vec<Future> = Vec::new();
+    for dep in deps {
+        if pipelining && !dep.resolved() {
+            pending.push(dep.id().to_string());
+            live.push(dep);
+        } else {
+            // Already resolved — or resolving it here is the fallback:
+            // bind the outcome into the consumer's globals at creation.
+            prebind_dep(&mut prebound, &dep);
+        }
+    }
+
+    let fut = future_inner(expr, env, opts, prebound, pending)?;
+    for dep in live {
+        let dep = Arc::new(dep);
+        let fwd_backend = Arc::clone(&backend);
+        let fwd_dep = Arc::clone(&dep);
+        let consumer = fut.id().to_string();
+        let spawned = std::thread::Builder::new()
+            .name("rustures-pipeline-fwd".into())
+            .spawn(move || forward_dep(&fwd_backend, &consumer, &fwd_dep));
+        if spawned.is_err() {
+            // Could not detach a forwarder (thread exhaustion): deliver
+            // synchronously — slower, never lost.
+            forward_dep(&backend, fut.id(), &dep);
+        }
+    }
+    Ok(fut)
+}
+
+/// Resolve `dep` (blocking if needed) and bind its outcome under the
+/// reserved pipeline sentinel key in `prebound` — the creation-time
+/// delivery path ([`Expr::Await`] reads these on the worker).
+fn prebind_dep(prebound: &mut Env, dep: &Future) {
+    match dep.result() {
+        Ok(r) => match r.outcome {
+            TaskOutcome::Ok(v) => {
+                prebound.insert(&crate::ipc::pipeline_ok_key(dep.id()), v);
+            }
+            TaskOutcome::Err(e) => {
+                prebound.insert(
+                    &crate::ipc::pipeline_err_key(dep.id()),
+                    Value::Str(e.message),
+                );
+            }
+        },
+        Err(e) => {
+            prebound.insert(
+                &crate::ipc::pipeline_err_key(dep.id()),
+                Value::Str(format!("pipelined dependency failed: {e}")),
+            );
+        }
+    }
+    crate::transport::note_prebind();
+}
+
+/// Block on `dep`, then hand its outcome to the backend for direct
+/// seat-to-seat delivery (the forwarder-thread body).  An infrastructure
+/// failure of the dependency forwards as an evaluation error so the
+/// consumer fails fast instead of hanging.
+fn forward_dep(backend: &Arc<dyn Backend>, consumer_id: &str, dep: &Future) {
+    let outcome = match dep.result() {
+        Ok(r) => r.outcome,
+        Err(e) => TaskOutcome::Err(EvalError::new(format!(
+            "pipelined dependency '{}' failed: {e}",
+            dep.id()
+        ))),
+    };
+    let _ = backend.pipeline_forward(consumer_id, dep.id(), &outcome);
+}
+
+/// Shared creation path behind [`future_with`] (no extras) and
+/// [`future_pipelined`] (prebound sentinels and/or pending dependency
+/// ids).  `extra_globals` are merged into the captured globals *after*
+/// free-variable analysis — sentinel keys are not user bindings and must
+/// never shadow one; `pending` rides to the worker in
+/// [`TaskOpts::pending`], telling it how many `Forward` frames to await
+/// before evaluation.
+fn future_inner(
+    expr: Expr,
+    env: &Env,
+    opts: FutureOpts,
+    extra_globals: Env,
+    pending: Vec<String>,
+) -> Result<Future, FutureError> {
     let session = session::current();
     session.ensure_open()?;
 
     // 1. Identify and snapshot globals (creation-time capture).
-    let globals = identify_globals(&expr, env, &opts.globals)?;
+    let mut globals = identify_globals(&expr, env, &opts.globals)?;
+    for (k, v) in extra_globals.iter() {
+        globals.insert(k, v.clone());
+    }
 
     // 2. Plan-time static analysis — BEFORE the capacity ledger is
     //    touched, so a denied future costs no in-flight permit, no slot
@@ -381,6 +500,7 @@ pub fn future_with(expr: Expr, env: &Env, opts: FutureOpts) -> Result<Future, Fu
             context,
             // First launch; the supervisor restamps this on every retry.
             attempt: 0,
+            pending,
         },
     };
 

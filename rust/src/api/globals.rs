@@ -91,13 +91,17 @@ fn collect(
             collect(body, bound, seen, out);
             bound.pop();
         }
+        // `Await` is not a free variable: its binding arrives out-of-band
+        // as a Forward frame (or a creation-time prebind), never from the
+        // caller's environment.
         Expr::Lit(_)
         | Expr::Rng { .. }
         | Expr::Spin { .. }
         | Expr::Sleep { .. }
         | Expr::Work { .. }
         | Expr::ChaosKill { .. }
-        | Expr::ChaosHang { .. } => {}
+        | Expr::ChaosHang { .. }
+        | Expr::Await { .. } => {}
     }
 }
 

@@ -95,6 +95,14 @@ struct Core {
     /// shipped inside the [`SessionContext`]; keys are content-addressed,
     /// so nested workers sharing a disk root interoperate regardless.
     cache: crate::cache::CacheConfig,
+    /// Per-session liveness settings (heartbeat cadence + stall deadline),
+    /// shipped inside every [`SessionContext`] so workers heartbeat at this
+    /// session's cadence and the transport reactor arms this session's
+    /// stall deadline — no process-global state on the hot path.  `None` =
+    /// fall back to the process-global
+    /// [`crate::liveness::liveness_config`] (kept for the historical free
+    /// functions) at context-build time.
+    liveness: Option<crate::liveness::LivenessConfig>,
 }
 
 struct Inner {
@@ -222,6 +230,7 @@ impl Session {
                     default_deadline: None,
                     analysis: crate::analysis::AnalysisConfig::default(),
                     cache: crate::cache::CacheConfig::default(),
+                    liveness: None,
                 }),
                 backends: Mutex::new(HashMap::new()),
                 counter: AtomicU64::new(counter_base),
@@ -284,6 +293,7 @@ impl Session {
                     default_deadline: None,
                     analysis: crate::analysis::AnalysisConfig::default(),
                     cache: crate::cache::CacheConfig::default(),
+                    liveness: None,
                 }),
                 backends: Mutex::new(HashMap::new()),
                 counter: AtomicU64::new(ctx.counter_base),
@@ -458,6 +468,31 @@ impl Session {
         self.inner.core.read().unwrap().cache.clone()
     }
 
+    // ---------------------------------------------------------- liveness ----
+
+    /// Set this session's liveness policy: worker heartbeat cadence and the
+    /// stall deadline after which a silent busy seat is declared hung (see
+    /// [`crate::liveness::LivenessConfig`]).  Shipped inside the
+    /// [`SessionContext`] of every future created afterwards, so it reaches
+    /// workers and the transport reactor without process-global state; pass
+    /// `None` to fall back to the process-global
+    /// [`crate::liveness::set_liveness_config`] default.
+    pub fn set_liveness_config(&self, config: Option<crate::liveness::LivenessConfig>) {
+        self.inner.core.write().unwrap().liveness = config;
+    }
+
+    /// This session's *effective* liveness policy: the per-session setting
+    /// if one was given, else the process-global fallback.
+    pub fn liveness_config(&self) -> crate::liveness::LivenessConfig {
+        self.inner
+            .core
+            .read()
+            .unwrap()
+            .liveness
+            .clone()
+            .unwrap_or_else(crate::liveness::liveness_config)
+    }
+
     /// The session-side facts the analyzer's plan cross-check pass needs,
     /// assembled without instantiating any backend.
     pub(crate) fn analysis_facts(&self, depth: u32) -> crate::analysis::SessionFacts {
@@ -554,6 +589,11 @@ impl Session {
     /// worker: topology tail, retry default, counter base.
     pub fn context_for_depth(&self, depth: u32) -> SessionContext {
         let core = self.inner.core.read().unwrap();
+        // Resolve the effective liveness policy NOW (per-session override,
+        // else the process-global fallback) so workers and the transport
+        // reactor never consult global state themselves.
+        let liveness =
+            core.liveness.clone().unwrap_or_else(crate::liveness::liveness_config);
         SessionContext {
             // The ORIGIN id, not the local one: a derived session's nested
             // context must keep attributing (and purge-keying) to the real
@@ -571,6 +611,11 @@ impl Session {
             // without another wire change; derived sessions already honor
             // a non-zero base.
             counter_base: 0,
+            heartbeat_ms: liveness.heartbeat_interval.as_millis().max(1) as u64,
+            stall_after_ms: liveness
+                .stall_after
+                .map(|d| d.as_millis().max(1) as u64)
+                .unwrap_or(0),
         }
     }
 
@@ -633,6 +678,17 @@ impl Session {
         opts: crate::api::future::FutureOpts,
     ) -> Result<crate::api::future::Future, FutureError> {
         self.scope(|_| crate::api::future::future_with(expr, env, opts))
+    }
+
+    /// [`crate::api::future::future_pipelined`] under this session.
+    pub fn future_pipelined(
+        &self,
+        expr: Expr,
+        env: &Env,
+        opts: crate::api::future::FutureOpts,
+        deps: Vec<crate::api::future::Future>,
+    ) -> Result<crate::api::future::Future, FutureError> {
+        self.scope(|_| crate::api::future::future_pipelined(expr, env, opts, deps))
     }
 
     /// [`crate::mapreduce::future_lapply`] under this session.
@@ -998,7 +1054,7 @@ mod tests {
             session: 12345,
             nested_plan: vec![PlanSpec::multicore(3), PlanSpec::Sequential],
             retry: Some(retry.clone()),
-            counter_base: 0,
+            ..SessionContext::default()
         };
         scope_task_context(&ctx, || {
             // The worker-side view: the tail IS the topology, retry is the
@@ -1044,8 +1100,7 @@ mod tests {
         let ctx = SessionContext {
             session: 54321,
             nested_plan: vec![PlanSpec::Sequential],
-            retry: None,
-            counter_base: 0,
+            ..SessionContext::default()
         };
         let a = scope_task_context(&ctx, || current().id());
         let b = scope_task_context(&ctx, || current().id());
@@ -1136,8 +1191,7 @@ mod tests {
         let mk = |sid: u64| SessionContext {
             session: sid, // unknown (non-local) origins: cacheable
             nested_plan: vec![PlanSpec::Sequential],
-            retry: None,
-            counter_base: 0,
+            ..SessionContext::default()
         };
         let contexts: Vec<SessionContext> = (0..4).map(|i| mk(9_200_001 + i)).collect();
         let first_id = scope_task_context(&contexts[0], || current().id());

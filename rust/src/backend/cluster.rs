@@ -113,7 +113,23 @@ fn launch_host_worker(
     let reader: TcpStream = stream
         .try_clone()
         .map_err(|e| FutureError::Launch(format!("clone socket: {e}")))?;
-    Ok(Connection { reader: Box::new(reader), writer: Box::new(stream), child: Some(child) })
+    // Hand the raw socket descriptors to the transport reactor: the
+    // connection becomes poll-driven (no per-seat thread).  Reader and
+    // writer are distinct fds (try_clone dups), each owned by its box.
+    #[cfg(unix)]
+    let (read_fd, write_fd) = {
+        use std::os::unix::io::AsRawFd;
+        (Some(reader.as_raw_fd()), Some(stream.as_raw_fd()))
+    };
+    #[cfg(not(unix))]
+    let (read_fd, write_fd) = (None, None);
+    Ok(Connection {
+        reader: Box::new(reader),
+        writer: Box::new(stream),
+        child: Some(child),
+        read_fd,
+        write_fd,
+    })
 }
 
 impl ClusterBackend {
@@ -185,6 +201,19 @@ impl Backend for ClusterBackend {
 
     fn launch_queued(&self, task: TaskSpec) -> Result<Box<dyn TaskHandle>, FutureError> {
         self.pool.launch_queued(task)
+    }
+
+    fn supports_pipelining(&self) -> bool {
+        true // live socket to every worker: Forward frames deliver
+    }
+
+    fn pipeline_forward(
+        &self,
+        consumer_task_id: &str,
+        dep_future_id: &str,
+        outcome: &crate::ipc::TaskOutcome,
+    ) -> bool {
+        self.pool.pipeline_forward(consumer_task_id, dep_future_id, outcome)
     }
 
     fn shutdown(&self) {

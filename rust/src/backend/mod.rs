@@ -32,7 +32,7 @@ use std::sync::Arc;
 use crate::api::error::FutureError;
 use crate::api::plan::{lookup_backend_factory, PlanSpec};
 use crate::backend::dispatch::CompletionWaker;
-use crate::ipc::{TaskResult, TaskSpec};
+use crate::ipc::{TaskOutcome, TaskResult, TaskSpec};
 
 /// Handle to one launched (possibly still running) task.
 pub trait TaskHandle: Send {
@@ -104,6 +104,34 @@ pub trait Backend: Send + Sync {
     /// block-on-create semantics for backends without a dispatcher.
     fn launch_queued(&self, task: TaskSpec) -> Result<Box<dyn TaskHandle>, FutureError> {
         self.launch(task)
+    }
+
+    /// Whether this backend can deliver a resolved dependency's outcome
+    /// directly to the seat evaluating a consumer task (wire-v7 `Forward`
+    /// frames) — promise pipelining.  Backends answering `false` force
+    /// [`crate::api::future::future_pipelined`] to resolve dependencies
+    /// coordinator-side before launch (prebinding), which is always
+    /// correct, just a round trip slower.
+    fn supports_pipelining(&self) -> bool {
+        false
+    }
+
+    /// Forward `outcome` (the resolved value of dependency future
+    /// `dep_future_id`) to whichever worker is evaluating
+    /// `consumer_task_id`.  Outcomes must survive the consumer's
+    /// supervised retries — a relaunched attempt's fresh seat receives
+    /// every forward again.  Returns `false` when the backend cannot
+    /// deliver (shutting down, or pipelining unsupported); the caller
+    /// then has no fallback, which is why creation probes
+    /// [`Backend::supports_pipelining`] first.
+    fn pipeline_forward(
+        &self,
+        consumer_task_id: &str,
+        dep_future_id: &str,
+        outcome: &TaskOutcome,
+    ) -> bool {
+        let _ = (consumer_task_id, dep_future_id, outcome);
+        false
     }
 
     /// Tear down workers (called on `plan()` change and process exit).

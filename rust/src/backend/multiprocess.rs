@@ -39,7 +39,24 @@ fn spawn_stdio_worker() -> Result<Connection, FutureError> {
         .map_err(|e| FutureError::Launch(format!("spawn {}: {e}", exe.display())))?;
     let stdin = child.stdin.take().expect("piped stdin");
     let stdout = child.stdout.take().expect("piped stdout");
-    Ok(Connection { reader: Box::new(stdout), writer: Box::new(stdin), child: Some(child) })
+    // Name the raw pipe descriptors so the transport reactor owns this
+    // connection poll-driven (no pump thread).  The boxes still own the
+    // handles; the reactor keeps them alive and closes them with the
+    // channel.
+    #[cfg(unix)]
+    let (read_fd, write_fd) = {
+        use std::os::unix::io::AsRawFd;
+        (Some(stdout.as_raw_fd()), Some(stdin.as_raw_fd()))
+    };
+    #[cfg(not(unix))]
+    let (read_fd, write_fd) = (None, None);
+    Ok(Connection {
+        reader: Box::new(stdout),
+        writer: Box::new(stdin),
+        child: Some(child),
+        read_fd,
+        write_fd,
+    })
 }
 
 impl MultiprocessBackend {
@@ -71,6 +88,19 @@ impl Backend for MultiprocessBackend {
 
     fn launch_queued(&self, task: TaskSpec) -> Result<Box<dyn TaskHandle>, FutureError> {
         self.pool.launch_queued(task)
+    }
+
+    fn supports_pipelining(&self) -> bool {
+        true // live channel to every worker: Forward frames deliver
+    }
+
+    fn pipeline_forward(
+        &self,
+        consumer_task_id: &str,
+        dep_future_id: &str,
+        outcome: &crate::ipc::TaskOutcome,
+    ) -> bool {
+        self.pool.pipeline_forward(consumer_task_id, dep_future_id, outcome)
     }
 
     fn shutdown(&self) {

@@ -4,26 +4,46 @@
 //! Central semantic (paper, "blocking" example): a worker becomes free the
 //! moment it **resolves** its future — not when the result is collected.
 //! Creating three futures on two workers must unblock as soon as either of
-//! the first two finishes, even if no one has called `value()` yet.  The
-//! per-worker reader thread therefore returns the worker to the idle set
-//! (and releases its [`SlotLease`]) as soon as the `Result` frame arrives,
-//! parking the result in a shared map until the handle asks for it.
+//! the first two finishes, even if no one has called `value()` yet.  Since
+//! PR 10 the pool owns **no per-seat reader threads**: every worker channel
+//! is registered with the process-wide [`crate::transport`] reactor, whose
+//! single poll thread demultiplexes inbound frames and invokes this pool's
+//! event handler — which returns the worker to the idle set (and releases
+//! its [`SlotLease`]) as soon as the `Result` frame arrives, parking the
+//! result in a shared map until the handle asks for it.
 //!
 //! Seat **admission** lives in the [`crate::capacity::CapacityLedger`]:
 //! every launch acquires a lease through the ledger's single waiter queue
 //! (per-session quotas and the dead-pool guard apply there), keyed by the
 //! worker's **host** — so a heterogeneous cluster gets per-host respawn
 //! budgets and per-host circuit breakers for free.  The pool keeps only
-//! the seat *objects* (writers, children, reader threads); it holds no
-//! private slot counters or admission condvars.
+//! the seat *objects* (channel handles, children); it holds no private
+//! slot counters or admission condvars.
 //!
-//! `immediateCondition`s are relayed **live** from the reader threads — the
-//! paper's "relayed as soon as possible ... depending on the backend used".
+//! Liveness is the reactor's too: each launched task arms its seat's stall
+//! deadline (from the task's [`crate::ipc::SessionContext`], so per-session
+//! [`crate::liveness::LivenessConfig`]s apply) as a timer entry on the poll
+//! loop — the historical per-pool `stall_loop` scan thread is gone.  The
+//! [`ChannelEvent::Stalled`] callback kills the hung worker exactly the way
+//! the old detector did.
+//!
+//! Promise pipelining (wire v7): a task may launch with unresolved
+//! dependency ids in `TaskOpts::pending`.  When a dependency resolves, the
+//! coordinator forwards its outcome straight to the consumer's seat as a
+//! `Forward` frame ([`ProcPool::pipeline_forward`]) — one hop instead of a
+//! worker→coordinator→worker round trip.  Forwarded outcomes survive the
+//! consumer's retries: each relaunch retransmits them to the fresh seat
+//! under the new attempt epoch.
+//!
+//! `immediateCondition`s are relayed **live** from the reactor handler —
+//! the paper's "relayed as soon as possible ... depending on the backend
+//! used".
 
 use std::collections::{HashMap, HashSet};
 use std::io::{Read, Write};
 use std::process::Child;
 use std::sync::{Arc, Condvar, Mutex, OnceLock, Weak};
+use std::time::{Duration, Instant};
 
 use crate::api::conditions::relay_immediate;
 use crate::api::error::FutureError;
@@ -31,17 +51,19 @@ use crate::backend::dispatch::{default_backlog, CompletionWaker, Dispatcher};
 use crate::backend::supervisor::{supervisor_config, SupervisorConfig};
 use crate::backend::TaskHandle;
 use crate::capacity::{Acquired, PoolRegistration, RevivePolicy, SlotLease};
-use crate::ipc::frame::{read_message, write_message};
 use crate::ipc::intern::{self, SeatLedger};
-use crate::ipc::{wire, Message, TaskResult, TaskSpec};
+use crate::ipc::{wire, Message, TaskOutcome, TaskResult, TaskSpec};
+use crate::transport::{self, ChannelEvent, ChannelHandle, Endpoint, Handler};
 
-/// A connected worker's coordinator-side seat: the write half + lifecycle.
+/// A connected worker's coordinator-side seat: the outbound channel handle
+/// + process lifecycle.  The inbound half lives on the transport reactor.
 pub struct Seat {
     pub id: u64,
     /// The (possibly simulated) host this worker runs on — the ledger key
     /// for its seat, budget, and breaker.
     host: String,
-    writer: Box<dyn Write + Send>,
+    /// The transport channel to this worker (reactor-owned or pump-backed).
+    channel: ChannelHandle,
     child: Option<Child>,
     /// Mirror of the worker's intern cache (protocol v6): which blob
     /// digests this seat has already been sent.  A fresh seat starts
@@ -52,17 +74,13 @@ pub struct Seat {
 impl Seat {
     fn send_task(&mut self, task: &TaskSpec) -> Result<(), FutureError> {
         // Encode from the reference — no clone of (possibly large) globals.
-        // v6 frames are self-delimiting (varint body length in the header),
-        // so the historical u32 length prefix is gone.
+        // v6+ frames are self-delimiting (varint body length in the header).
         let frame = if intern::session_interning(task.opts.context.session) {
             wire::encode_task_message_interned(task, &mut self.intern)
         } else {
             wire::encode_task_message(task)
         };
-        self.writer
-            .write_all(&frame)
-            .and_then(|_| self.writer.flush())
-            .map_err(|e| FutureError::Channel(format!("write failed: {e}")))
+        self.channel.send_bytes(&frame)
     }
 
     fn kill(&mut self) {
@@ -73,14 +91,17 @@ impl Seat {
     }
 
     fn graceful_shutdown(mut self) {
-        let _ = write_message(&mut self.writer, &Message::Shutdown);
+        let _ = self.channel.send_bytes(&wire::encode_message(&Message::Shutdown));
+        // Give the reactor a beat to flush the Shutdown frame before the
+        // channel (and with it the descriptors) is retired.
+        let _ = self.channel.wait_outbox_below(0, Duration::from_millis(250));
         if let Some(child) = &mut self.child {
-            let deadline = std::time::Instant::now() + std::time::Duration::from_millis(500);
+            let deadline = Instant::now() + Duration::from_millis(500);
             loop {
                 match child.try_wait() {
                     Ok(Some(_)) => break,
-                    Ok(None) if std::time::Instant::now() < deadline => {
-                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    Ok(None) if Instant::now() < deadline => {
+                        std::thread::sleep(Duration::from_millis(5));
                     }
                     _ => {
                         let _ = child.kill();
@@ -90,12 +111,13 @@ impl Seat {
                 }
             }
         }
+        self.channel.close();
     }
 }
 
 /// What a finished task leaves in the results map.  Failures park the
-/// *structured* error: a reader that died at a frame boundary parks
-/// `WorkerDied`, a reader that errored mid-frame (truncated/corrupt bytes —
+/// *structured* error: a channel that died at a frame boundary parks
+/// `WorkerDied`, one that errored mid-frame (truncated/corrupt bytes —
 /// e.g. a worker killed during serialization) parks `Channel`, so callers
 /// can tell a clean crash from a torn write.
 type Parked = Result<TaskResult, FutureError>;
@@ -104,12 +126,12 @@ struct Inner {
     /// Workers ready for a task.
     idle: Vec<Seat>,
     /// worker id → (seat, task id, seat lease) while a task is in flight.
-    /// The lease releases (seat frees) when the reader parks the result,
+    /// The lease releases (seat frees) when the handler parks the result,
     /// or is forfeited (seat dies) when the worker goes down.
     busy: HashMap<u64, (Seat, String, SlotLease)>,
     /// worker id → task id reserved *before* the task frame is written.
     /// Fast tasks can complete before `launch` re-acquires the lock; the
-    /// reader parks such results against this reservation instead of
+    /// handler parks such results against this reservation instead of
     /// dropping them (the send/insert race).  `launch` still owns the seat
     /// and its lease for these workers.
     pending: HashMap<u64, String>,
@@ -123,15 +145,36 @@ struct Inner {
     abandoned: HashSet<String>,
     /// worker id → when a frame (result, immediate, heartbeat, ...) last
     /// arrived from it.  Set when a task goes in flight, refreshed by the
-    /// reader on every frame; the stall detector reads it.
-    activity: HashMap<u64, std::time::Instant>,
-    /// Workers killed by the stall detector: their reader's imminent
+    /// event handler on every frame; the stall recheck reads it.
+    activity: HashMap<u64, Instant>,
+    /// Workers killed by the stall handler: their channel's imminent
     /// EOF/error must not double-count the death ([`close_worker`] guard).
     stalled: HashSet<u64>,
     /// task id → the attempt epoch of its *current* launch.  A result
     /// frame carrying any other epoch is stale (a presumed-dead attempt
     /// spoke up late) and is dropped — the stale-result fence.
     expected_attempt: HashMap<String, u32>,
+    /// worker id → transport channel, for every live seat regardless of
+    /// which set currently owns it (idle, busy, or the pending window
+    /// where `launch` holds the seat object) — the NeedBlob answer path
+    /// and the Forward flusher look channels up here.
+    channels: HashMap<u64, ChannelHandle>,
+    /// worker id → the in-flight task's stall span (from its
+    /// `SessionContext`); absent when liveness is disabled for the task.
+    stall_spans: HashMap<u64, Duration>,
+    /// consumer task id → forwarded dependency outcomes, in arrival order.
+    /// Survives worker death: a retried launch retransmits the whole list
+    /// to the fresh seat (see `pipe_sent`).
+    pipe_parked: HashMap<String, Vec<(String, TaskOutcome)>>,
+    /// consumer task id → (attempt the forwards were sent under, how many
+    /// of `pipe_parked` have been sent).  An attempt mismatch resets the
+    /// cursor so the new seat receives everything again.
+    pipe_sent: HashMap<String, (u32, usize)>,
+    /// consumer task id → how many dependency outcomes the task declared
+    /// in `TaskOpts::pending`.  The stall deadline arms only once all of
+    /// them have been forwarded (a worker waiting on a dependency is not
+    /// hung).
+    pipe_expected: HashMap<String, usize>,
     shutting_down: bool,
     next_worker_id: u64,
 }
@@ -150,11 +193,18 @@ struct Shared {
     death_cv: Condvar,
 }
 
-/// Transport halves for one fresh worker connection.
+/// Transport halves for one fresh worker connection.  Spawners that can
+/// name raw descriptors (child pipes, sockets) should fill `read_fd` /
+/// `write_fd`: the reactor then owns the connection without any thread.
+/// In-memory transports leave them `None` and get a pump-thread fallback.
 pub struct Connection {
     pub reader: Box<dyn Read + Send>,
     pub writer: Box<dyn Write + Send>,
     pub child: Option<Child>,
+    /// Raw fd behind `reader`, when one exists (`AsRawFd`).
+    pub read_fd: Option<i32>,
+    /// Raw fd behind `writer`, when one exists (`AsRawFd`).
+    pub write_fd: Option<i32>,
 }
 
 /// Spawner contract: produce a fresh connected worker transport **on the
@@ -229,6 +279,11 @@ impl ProcPool {
                 activity: HashMap::new(),
                 stalled: HashSet::new(),
                 expected_attempt: HashMap::new(),
+                channels: HashMap::new(),
+                stall_spans: HashMap::new(),
+                pipe_parked: HashMap::new(),
+                pipe_sent: HashMap::new(),
+                pipe_expected: HashMap::new(),
                 shutting_down: false,
                 next_worker_id: 0,
             }),
@@ -265,18 +320,10 @@ impl ProcPool {
                 .name("rustures-procpool-monitor".into())
                 .spawn(move || monitor_loop(weak, poll));
         }
-        {
-            // The stall detector is its own (cheap, mostly-sleeping) thread
-            // so hang detection works even with respawn supervision off; it
-            // re-reads the process-wide liveness config every pass, so
-            // arming `stall_after` after pool construction still takes
-            // effect.  With `stall_after: None` (the default) the loop only
-            // wakes to check for shutdown.
-            let weak = Arc::downgrade(&pool);
-            let _ = std::thread::Builder::new()
-                .name("rustures-procpool-stall".into())
-                .spawn(move || stall_loop(weak));
-        }
+        // No stall thread: hang detection is the transport reactor's timer
+        // scan.  Each launch arms its seat's deadline from the task's own
+        // SessionContext, so per-session liveness configs apply and a pool
+        // with liveness disabled costs nothing.
         Ok(pool)
     }
 
@@ -289,7 +336,10 @@ impl ProcPool {
         &self.shared.reg
     }
 
-    /// Create a seat + its reader thread on `host`.
+    /// Create a seat on `host` and register its connection with the
+    /// transport reactor (fd-backed when the spawner named descriptors,
+    /// pump-thread fallback otherwise).  The handler holds only a `Weak`
+    /// to the pool state: a dropped pool silently drains late events.
     fn spawn_seat(&self, host: &str) -> Result<Seat, FutureError> {
         let conn = (self.spawner)(host)?;
         let id = {
@@ -297,15 +347,22 @@ impl ProcPool {
             inner.next_worker_id += 1;
             inner.next_worker_id
         };
-        let shared = Arc::clone(&self.shared);
-        std::thread::Builder::new()
-            .name(format!("rustures-reader-{id}"))
-            .spawn(move || reader_loop(id, conn.reader, shared))
-            .map_err(|e| FutureError::Launch(format!("spawn reader: {e}")))?;
+        let weak = Arc::downgrade(&self.shared);
+        let handler: Handler = Arc::new(move |ev| {
+            if let Some(shared) = weak.upgrade() {
+                handle_event(id, &shared, ev);
+            }
+        });
+        let endpoint = match (conn.read_fd, conn.write_fd) {
+            (Some(rfd), Some(wfd)) => Endpoint::with_fds(conn.reader, conn.writer, rfd, wfd),
+            _ => Endpoint::stream(conn.reader, conn.writer),
+        };
+        let channel = transport::register(&format!("procpool-{id}"), endpoint, handler);
+        self.shared.inner.lock().unwrap().channels.insert(id, channel.clone());
         Ok(Seat {
             id,
             host: host.to_string(),
-            writer: conn.writer,
+            channel,
             child: conn.child,
             intern: SeatLedger::new(),
         })
@@ -354,8 +411,10 @@ impl ProcPool {
                             let lease = ticket.commit_lease();
                             let mut inner = self.shared.inner.lock().unwrap();
                             if inner.shutting_down {
+                                inner.channels.remove(&seat.id);
                                 drop(inner);
                                 seat.kill();
+                                seat.channel.close();
                                 return Err(FutureError::Launch(
                                     "pool is shutting down".into(),
                                 ));
@@ -386,17 +445,19 @@ impl ProcPool {
         let host = seat.host.clone();
 
         // Send outside the lock: serializing large globals must not stall
-        // other launches or reader threads.
+        // other launches or the reactor.  A reactor channel only errors
+        // here when the transport has already observed the worker dead —
+        // then retry once on a fresh worker of the SAME host, reusing the
+        // lease (net seat accounting is unchanged).
         if let Err(first_err) = seat.send_task(&task) {
-            // The worker died at the write: feed the breaker, then retry
-            // once on a fresh worker of the SAME host, reusing the lease
-            // (net seat accounting is unchanged).
             seat.kill();
             self.shared.reg.record_death(&host);
             {
                 let mut inner = self.shared.inner.lock().unwrap();
                 inner.pending.remove(&seat.id);
+                inner.channels.remove(&seat.id);
             }
+            seat.channel.close();
             seat = match self.spawn_seat(&host) {
                 Ok(s) => s,
                 Err(e) => {
@@ -413,8 +474,10 @@ impl ProcPool {
                 {
                     let mut inner = self.shared.inner.lock().unwrap();
                     inner.pending.remove(&seat.id);
+                    inner.channels.remove(&seat.id);
                 }
                 seat.kill();
+                seat.channel.close();
                 self.shared.reg.record_death(&host);
                 lease.forfeit();
                 return Err(FutureError::Channel(format!(
@@ -423,6 +486,9 @@ impl ProcPool {
             }
         }
 
+        // Backpressure target, taken only when the task actually goes in
+        // flight (waiting must happen outside the pool lock).
+        let mut backpressure: Option<ChannelHandle> = None;
         {
             let mut inner = self.shared.inner.lock().unwrap();
             inner.pending.remove(&seat.id);
@@ -436,18 +502,48 @@ impl ProcPool {
                 }
                 // Worker died right after (or while) resolving.
                 Some(Err(_)) => {
+                    inner.channels.remove(&seat.id);
                     drop(inner);
                     seat.kill();
+                    seat.channel.close();
                     self.shared.reg.record_death(&host);
                     lease.forfeit();
                 }
                 None => {
                     // The liveness clock starts now: the send completed, so
                     // silence from here on is the worker's own.
-                    inner.activity.insert(seat.id, std::time::Instant::now());
-                    inner.busy.insert(seat.id, (seat, task_id.clone(), lease));
+                    inner.activity.insert(seat.id, Instant::now());
+                    let span_ms = task.opts.context.stall_after_ms;
+                    if span_ms > 0 {
+                        inner.stall_spans.insert(seat.id, Duration::from_millis(span_ms));
+                    }
+                    let channel = seat.channel.clone();
+                    let worker_id = seat.id;
+                    inner.busy.insert(worker_id, (seat, task_id.clone(), lease));
+                    if task.opts.pending.is_empty() {
+                        // No pipelined dependencies: the deadline arms now.
+                        if span_ms > 0 {
+                            channel.arm_stall(Some(Duration::from_millis(span_ms)));
+                        }
+                    } else {
+                        // The deadline arms only once every declared
+                        // dependency outcome has been forwarded — a worker
+                        // blocked on its inputs is waiting, not hung.
+                        inner
+                            .pipe_expected
+                            .insert(task_id.clone(), task.opts.pending.len());
+                        flush_forwards(&mut inner, &task_id);
+                    }
+                    backpressure = Some(channel);
                 }
             }
+        }
+        if let Some(channel) = backpressure {
+            // Bounded outbox: a launch storm against a slow worker parks
+            // here instead of growing the reactor's buffers without limit.
+            // Timeout is advisory — a genuinely wedged worker is the stall
+            // detector's to kill, not ours.
+            let _ = channel.wait_outbox_below(8 << 20, Duration::from_secs(30));
         }
 
         Ok(Box::new(ProcHandle { pool: Arc::clone(self), task_id, collected: false }))
@@ -475,14 +571,44 @@ impl ProcPool {
         dispatcher.launch(task)
     }
 
+    /// Forward a resolved dependency's outcome to the seat evaluating
+    /// `consumer_task_id` as a wire-v7 `Forward` frame — the coordinator
+    /// half of promise pipelining.  The outcome is parked first, so a
+    /// consumer between attempts (or still in its launch window) receives
+    /// it on the next flush; parked outcomes are retransmitted to fresh
+    /// seats under bumped attempt epochs.  Returns `false` only when the
+    /// pool is shutting down.
+    pub fn pipeline_forward(
+        &self,
+        consumer_task_id: &str,
+        dep_future_id: &str,
+        outcome: &TaskOutcome,
+    ) -> bool {
+        let mut inner = self.shared.inner.lock().unwrap();
+        if inner.shutting_down {
+            return false;
+        }
+        inner
+            .pipe_parked
+            .entry(consumer_task_id.to_string())
+            .or_default()
+            .push((dep_future_id.to_string(), outcome.clone()));
+        flush_forwards(&mut inner, consumer_task_id);
+        true
+    }
+
     pub fn shutdown(&self) {
-        let (idle, busy, waiters) = {
+        let (idle, busy, waiters, channels) = {
             let mut inner = self.shared.inner.lock().unwrap();
             inner.shutting_down = true;
+            inner.pipe_parked.clear();
+            inner.pipe_sent.clear();
+            inner.pipe_expected.clear();
             (
                 std::mem::take(&mut inner.idle),
                 std::mem::take(&mut inner.busy),
                 std::mem::take(&mut inner.waiters),
+                std::mem::take(&mut inner.channels),
             )
         };
         // Wake launchers parked in the ledger's waiter queue (they error),
@@ -497,163 +623,210 @@ impl ProcPool {
         }
         // Tasks die with their seats below: wake their subscribers so a
         // FutureSet never waits on a torn-down pool.
-        for (_, (waker, token)) in waiters {
+        for (waker, token) in waiters.into_values() {
             waker.notify(token);
         }
         for seat in idle {
             seat.graceful_shutdown();
         }
-        for (_, (mut seat, _, lease)) in busy {
+        for (mut seat, _, lease) in busy.into_values() {
             seat.kill();
+            seat.channel.close();
             drop(lease);
+        }
+        // Channels for seats in neither set (a launch's pending window)
+        // are retired too; close() is idempotent for the ones above.
+        for ch in channels.into_values() {
+            ch.close();
         }
     }
 }
 
-fn reader_loop(worker_id: u64, mut reader: Box<dyn Read + Send>, shared: Arc<Shared>) {
-    loop {
-        let msg = read_message(&mut reader);
-        if let Ok(Some(_)) = &msg {
-            // ANY frame is proof of life — heartbeats exist for the silent
-            // stretches, but immediates and results reset the clock too.
-            let mut inner = shared.inner.lock().unwrap();
-            if inner.activity.contains_key(&worker_id) {
-                inner.activity.insert(worker_id, std::time::Instant::now());
+/// The transport handler for one worker channel — the replacement for the
+/// historical per-seat `reader_loop` thread.  Runs on the reactor (or a
+/// pump thread for non-fd endpoints); events for one channel arrive in
+/// order.  Takes the pool lock per event; never blocks.
+fn handle_event(worker_id: u64, shared: &Shared, ev: ChannelEvent) {
+    match ev {
+        ChannelEvent::Message(msg) => {
+            {
+                // ANY frame is proof of life — heartbeats exist for the
+                // silent stretches, but immediates and results reset the
+                // clock too.  (The transport's own activity clock, which
+                // slides the stall deadline, was already touched.)
+                let mut inner = shared.inner.lock().unwrap();
+                if inner.activity.contains_key(&worker_id) {
+                    inner.activity.insert(worker_id, Instant::now());
+                }
             }
-        }
-        match msg {
-            Ok(Some(Message::Hello { .. })) | Ok(Some(Message::Pong)) => continue,
-            Ok(Some(Message::Heartbeat { .. })) => continue,
-            Ok(Some(Message::NeedBlob { digests })) => {
-                // The worker's intern cache is missing blobs our seat
-                // ledger thought it held (eviction skew, a mid-decode
-                // respawn): answer from the process-global store.
-                intern::note_need_blob();
-                if !serve_need_blob(worker_id, &shared, &digests) {
+            match msg {
+                Message::Hello { .. } | Message::Pong | Message::Heartbeat { .. } => {}
+                Message::NeedBlob { digests } => {
+                    // The worker's intern cache is missing blobs our seat
+                    // ledger thought it held (eviction skew, a mid-decode
+                    // respawn): answer from the process-global store.
+                    intern::note_need_blob();
+                    if !serve_need_blob(worker_id, shared, &digests) {
+                        close_worker(
+                            worker_id,
+                            shared,
+                            FutureError::Channel("failed to answer NeedBlob".into()),
+                        );
+                    }
+                }
+                Message::Immediate { condition, .. } => {
+                    relay_immediate(&condition);
+                }
+                Message::Result(result) => {
+                    handle_result(worker_id, shared, result);
+                }
+                other => {
                     close_worker(
                         worker_id,
-                        &shared,
-                        FutureError::Channel("failed to answer NeedBlob".into()),
+                        shared,
+                        FutureError::Channel(format!("unexpected message {other:?}")),
                     );
-                    return;
                 }
             }
-            Ok(Some(Message::Immediate { condition, .. })) => {
-                relay_immediate(&condition);
-            }
-            Ok(Some(Message::Result(result))) => {
-                let result_id = result.id.clone();
-                let mut inner = shared.inner.lock().unwrap();
-                // The worker is free *now* — before anyone collects.
-                if let Some((seat, task_id, lease)) = inner.busy.remove(&worker_id) {
-                    debug_assert_eq!(task_id, result_id);
-                    inner.activity.remove(&worker_id);
-                    if inner.abandoned.remove(&result_id) {
-                        // Nobody wants this result.
-                    } else {
-                        inner.results.insert(result_id.clone(), Ok(result));
-                    }
-                    notify_task_waiter(&mut inner, &result_id);
-                    if inner.shutting_down {
-                        drop(inner);
-                        drop(lease);
-                        seat.graceful_shutdown();
-                    } else {
-                        inner.idle.push(seat);
-                        drop(inner);
-                        // Release AFTER the seat is back in the idle set:
-                        // a woken launcher must always find it there.
-                        drop(lease);
-                    }
-                    shared.result_cv.notify_all();
-                } else if inner.pending.get(&worker_id) == Some(&result_id) {
-                    // Fast completion before launch() re-registered the
-                    // seat: park the result; launch() returns the seat.
-                    if !inner.abandoned.remove(&result_id) {
-                        inner.results.insert(result_id.clone(), Ok(result));
-                    }
-                    notify_task_waiter(&mut inner, &result_id);
-                    drop(inner);
-                    shared.result_cv.notify_all();
-                } else {
-                    // This worker no longer owns the task: either cancel()
-                    // raced us, or this is a late frame from a presumed-dead
-                    // attempt (the worker was declared hung, its task
-                    // relaunched under a bumped epoch).  Either way the
-                    // frame is dropped; when the attempt epoch proves it
-                    // stale, count it through the fence.
-                    let stale = inner
-                        .expected_attempt
-                        .get(&result_id)
-                        .is_some_and(|want| *want != result.attempt);
-                    if stale {
-                        shared.scope.fenced();
-                    }
-                }
-            }
-            Ok(Some(other)) => {
-                close_worker(
-                    worker_id,
-                    &shared,
-                    FutureError::Channel(format!("unexpected message {other:?}")),
-                );
-                return;
-            }
-            Ok(None) => {
-                // Clean EOF at a frame boundary: the worker died (or was
-                // killed) between frames.
-                close_worker(
-                    worker_id,
-                    &shared,
-                    FutureError::WorkerDied { detail: "worker closed the channel".into() },
-                );
-                return;
-            }
-            Err(e) => {
-                // Frame-level failure — typically a worker killed MID-WRITE
-                // (truncated frame header or body, corrupt bytes).  `e` is
-                // already a structured `Channel` error; park it as such.
-                close_worker(worker_id, &shared, e);
-                return;
-            }
+        }
+        // Clean EOF at a frame boundary: the worker died (or was killed)
+        // between frames.
+        ChannelEvent::Closed => close_worker(
+            worker_id,
+            shared,
+            FutureError::WorkerDied { detail: "worker closed the channel".into() },
+        ),
+        // Frame-level failure — typically a worker killed MID-WRITE
+        // (truncated frame header or body, corrupt bytes).  Already a
+        // structured `Channel` error; park it as such.
+        ChannelEvent::Error(e) => close_worker(worker_id, shared, e),
+        ChannelEvent::Stalled { silent_for } => stall_worker(worker_id, shared, silent_for),
+    }
+}
+
+fn handle_result(worker_id: u64, shared: &Shared, result: TaskResult) {
+    let result_id = result.id.clone();
+    let mut inner = shared.inner.lock().unwrap();
+    // The worker is free *now* — before anyone collects.
+    if let Some((seat, task_id, lease)) = inner.busy.remove(&worker_id) {
+        debug_assert_eq!(task_id, result_id);
+        seat.channel.disarm_stall();
+        inner.activity.remove(&worker_id);
+        inner.stall_spans.remove(&worker_id);
+        if !inner.abandoned.remove(&result_id) {
+            inner.results.insert(result_id.clone(), Ok(result));
+        }
+        notify_task_waiter(&mut inner, &result_id);
+        if inner.shutting_down {
+            inner.channels.remove(&worker_id);
+            drop(inner);
+            drop(lease);
+            seat.graceful_shutdown();
+        } else {
+            inner.idle.push(seat);
+            drop(inner);
+            // Release AFTER the seat is back in the idle set: a woken
+            // launcher must always find it there.
+            drop(lease);
+        }
+        shared.result_cv.notify_all();
+    } else if inner.pending.get(&worker_id) == Some(&result_id) {
+        // Fast completion before launch() re-registered the seat: park
+        // the result; launch() returns the seat.
+        if !inner.abandoned.remove(&result_id) {
+            inner.results.insert(result_id.clone(), Ok(result));
+        }
+        notify_task_waiter(&mut inner, &result_id);
+        drop(inner);
+        shared.result_cv.notify_all();
+    } else {
+        // This worker no longer owns the task: either cancel() raced us,
+        // or this is a late frame from a presumed-dead attempt (the worker
+        // was declared hung, its task relaunched under a bumped epoch).
+        // Either way the frame is dropped; when the attempt epoch proves
+        // it stale, count it through the fence.
+        let stale = inner
+            .expected_attempt
+            .get(&result_id)
+            .is_some_and(|want| *want != result.attempt);
+        if stale {
+            shared.scope.fenced();
         }
     }
 }
 
 /// Answer a worker's `NeedBlob`: look each digest up in the process-global
-/// intern store and write a `Blob` frame back over the seat's writer.
-/// `bytes: None` (blob evicted from the store) still gets a frame — the
-/// worker fails its decode closed and the supervisor retries on a fresh
-/// seat.  A `NeedBlob` can only arrive while the worker decodes a task
-/// frame, so the seat is normally in the busy map; it may briefly still be
-/// `pending` (launch() owns the seat until its post-send bookkeeping) —
-/// a bounded retry covers that window.  Writes hold the pool lock, same as
-/// the cancel courtesy frame: the worker is parked in its recovery read
-/// loop, so the pipe drains.  Returns false if the seat never became
-/// reachable or a write failed.
+/// intern store and queue a `Blob` frame on the seat's channel.  `bytes:
+/// None` (blob evicted from the store) still gets a frame — the worker
+/// fails its decode closed and the supervisor retries on a fresh seat.
+/// The channels map covers every live seat including the launch pending
+/// window, so no retry loop is needed.  Returns false if the seat is gone
+/// or the channel is closed.
 fn serve_need_blob(worker_id: u64, shared: &Shared, digests: &[intern::Digest]) -> bool {
-    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(2);
-    loop {
-        {
-            let mut inner = shared.inner.lock().unwrap();
-            if let Some((seat, _, _)) = inner.busy.get_mut(&worker_id) {
-                for d in digests {
-                    let bytes = intern::store_get(d).map(|a| (*a).clone());
-                    let msg = Message::Blob { digest: *d, bytes };
-                    if write_message(&mut seat.writer, &msg).is_err() {
-                        return false;
-                    }
-                }
-                return true;
-            }
-            if inner.shutting_down || !inner.pending.contains_key(&worker_id) {
-                return false;
-            }
-        }
-        if std::time::Instant::now() >= deadline {
+    let channel = shared.inner.lock().unwrap().channels.get(&worker_id).cloned();
+    let Some(channel) = channel else { return false };
+    for d in digests {
+        let bytes = intern::store_get(d).map(|a| (*a).clone());
+        let frame = wire::encode_message(&Message::Blob { digest: *d, bytes });
+        if channel.send_bytes(&frame).is_err() {
             return false;
         }
-        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    true
+}
+
+/// Send every not-yet-delivered forwarded dependency outcome for
+/// `task_id` to whichever seat currently evaluates it (busy, or still in
+/// the launch pending window).  Retransmits from the start after a retry
+/// (attempt-epoch mismatch); arms the seat's stall deadline once the last
+/// declared dependency is on the wire.  No-op when the consumer has no
+/// seat right now — the next launch flushes again.
+fn flush_forwards(inner: &mut Inner, task_id: &str) {
+    let Inner {
+        busy,
+        pending,
+        channels,
+        expected_attempt,
+        stall_spans,
+        pipe_parked,
+        pipe_sent,
+        pipe_expected,
+        ..
+    } = inner;
+    let Some(parked) = pipe_parked.get(task_id) else { return };
+    let worker_id = busy
+        .iter()
+        .find(|(_, (_, t, _))| t == task_id)
+        .map(|(w, _)| *w)
+        .or_else(|| pending.iter().find(|(_, t)| *t == task_id).map(|(w, _)| *w));
+    let Some(worker_id) = worker_id else { return };
+    let Some(channel) = channels.get(&worker_id) else { return };
+    let attempt = expected_attempt.get(task_id).copied().unwrap_or(0);
+    let cursor = pipe_sent.entry(task_id.to_string()).or_insert((attempt, 0));
+    if cursor.0 != attempt {
+        // A fresh attempt evaluates on a fresh seat: start over.
+        *cursor = (attempt, 0);
+    }
+    while cursor.1 < parked.len() {
+        let (dep_id, outcome) = &parked[cursor.1];
+        let frame = wire::encode_message(&Message::Forward {
+            future_id: dep_id.clone(),
+            outcome: outcome.clone(),
+        });
+        // A closed channel means the worker is already dying; the retry
+        // path retransmits everything to its replacement.
+        let _ = channel.send_bytes(&frame);
+        transport::note_forward();
+        cursor.1 += 1;
+    }
+    if busy.contains_key(&worker_id) {
+        if let Some(&expected) = pipe_expected.get(task_id) {
+            if cursor.1 >= expected {
+                if let Some(span) = stall_spans.get(&worker_id) {
+                    channel.arm_stall(Some(*span));
+                }
+            }
+        }
     }
 }
 
@@ -663,7 +836,7 @@ fn serve_need_blob(worker_id: u64, shared: &Shared, digests: &[intern::Digest]) 
 /// still exists; the monitor restores capacity *before* the next launch
 /// needs it, so queued dispatch and parked launchers — including the PR 2
 /// dispatcher thread blocked inside `launch` — wake into a healthy seat.
-fn monitor_loop(pool: Weak<ProcPool>, poll: std::time::Duration) {
+fn monitor_loop(pool: Weak<ProcPool>, poll: Duration) {
     loop {
         let Some(pool) = pool.upgrade() else { return };
         {
@@ -677,6 +850,7 @@ fn monitor_loop(pool: Weak<ProcPool>, poll: std::time::Duration) {
                 Ok(seat) => {
                     let mut inner = pool.shared.inner.lock().unwrap();
                     if inner.shutting_down {
+                        inner.channels.remove(&seat.id);
                         drop(inner);
                         seat.graceful_shutdown();
                         // Ticket drop aborts the revive; nobody will need
@@ -713,90 +887,52 @@ fn monitor_loop(pool: Weak<ProcPool>, poll: std::time::Duration) {
     }
 }
 
-/// The stall detector: declare busy workers *hung* after
-/// `LivenessConfig::stall_after` of frame silence, kill them, and hand
-/// their tasks to the retry path.  Separate from [`monitor_loop`] so hang
-/// detection works with respawn supervision off; re-reads the process-wide
-/// config every pass (arming `stall_after` after pool construction works).
-fn stall_loop(pool: Weak<ProcPool>) {
-    loop {
-        let Some(pool) = pool.upgrade() else { return };
-        let stall_after = crate::liveness::liveness_config().stall_after;
-        // Scan often enough that detection lands well inside one
-        // `stall_after` of slack; idle otherwise.
-        let poll = match stall_after {
-            Some(s) => (s / 4).max(std::time::Duration::from_millis(5)),
-            None => std::time::Duration::from_millis(50),
-        };
-        if let Some(stall_after) = stall_after {
-            let now = std::time::Instant::now();
-            let hung: Vec<u64> = {
-                let inner = pool.shared.inner.lock().unwrap();
-                if inner.shutting_down {
-                    return;
-                }
-                inner
-                    .busy
-                    .keys()
-                    .filter(|w| {
-                        inner
-                            .activity
-                            .get(w)
-                            .is_some_and(|t| now.duration_since(*t) > stall_after)
-                    })
-                    .copied()
-                    .collect()
-            };
-            for w in hung {
-                kill_stalled(&pool.shared, w, stall_after);
-            }
-        }
-        let shared = Arc::clone(&pool.shared);
-        drop(pool);
-        let guard = shared.inner.lock().unwrap();
-        if guard.shutting_down {
-            return;
-        }
-        let _ = shared.death_cv.wait_timeout(guard, poll);
-    }
-}
-
-/// Kill one hung worker: breaker-counted death, lease forfeited (the seat
-/// returns to the ledger through the revive machinery), and a retryable
-/// `WorkerDied` parked for the handle — the supervised-retry path takes it
-/// from there, exactly as for a crash.
-fn kill_stalled(shared: &Shared, worker_id: u64, stall_after: std::time::Duration) {
+/// The reactor declared this seat's task hung (its armed stall deadline
+/// expired with no inbound frame): kill the worker — breaker-counted
+/// death, lease forfeited (the seat returns to the ledger through the
+/// revive machinery) — and park a retryable `WorkerDied` for the handle;
+/// the supervised-retry path takes it from there, exactly as for a crash.
+fn stall_worker(worker_id: u64, shared: &Shared, silent_for: Duration) {
     let mut inner = shared.inner.lock().unwrap();
     if inner.shutting_down {
         return;
     }
     let Some((mut seat, task_id, lease)) = inner.busy.remove(&worker_id) else {
-        return; // resolved (or died) while we were deciding
+        return; // resolved (or died) while the event was in flight
     };
-    // Re-check under the lock: a frame may have landed since the scan.
-    if inner
-        .activity
-        .get(&worker_id)
-        .is_some_and(|t| t.elapsed() <= stall_after)
-    {
-        inner.busy.insert(worker_id, (seat, task_id, lease));
-        return;
+    let span = inner.stall_spans.get(&worker_id).copied();
+    // Defensive recheck under the pool lock: a pump-thread frame may have
+    // refreshed the activity clock after the reactor's timer fired.
+    if let Some(span) = span {
+        if inner
+            .activity
+            .get(&worker_id)
+            .is_some_and(|t| t.elapsed() <= span)
+        {
+            // Not actually silent: re-arm (the reactor disarmed on fire)
+            // and put the seat back.
+            seat.channel.arm_stall(Some(span));
+            inner.busy.insert(worker_id, (seat, task_id, lease));
+            return;
+        }
     }
     inner.activity.remove(&worker_id);
-    // The reader's imminent EOF must not count this death again.
+    inner.stall_spans.remove(&worker_id);
+    // The channel's imminent EOF must not count this death again.
     inner.stalled.insert(worker_id);
     shared.scope.stall();
     shared.scope.worker_death();
     seat.kill();
     shared.reg.record_death(&seat.host);
     lease.forfeit();
+    let silent = span.unwrap_or(silent_for);
     if !inner.abandoned.remove(&task_id) {
         inner.results.insert(
             task_id.clone(),
             Err(FutureError::WorkerDied {
                 detail: format!(
                     "worker hung (no liveness signal for {}ms)",
-                    stall_after.as_millis()
+                    silent.as_millis()
                 ),
             }),
         );
@@ -810,10 +946,15 @@ fn kill_stalled(shared: &Shared, worker_id: u64, stall_after: std::time::Duratio
 
 fn close_worker(worker_id: u64, shared: &Shared, err: FutureError) {
     let mut inner = shared.inner.lock().unwrap();
+    let channel = inner.channels.remove(&worker_id);
     if inner.stalled.remove(&worker_id) {
-        // The stall detector already did everything (kill, death count,
-        // breaker, lease forfeit, parked error); this is just its reader
-        // observing the EOF.
+        // The stall handler already did everything (kill, death count,
+        // breaker, lease forfeit, parked error); this is just its channel
+        // reporting the EOF.
+        drop(inner);
+        if let Some(ch) = channel {
+            ch.close();
+        }
         return;
     }
     let during_shutdown = inner.shutting_down;
@@ -823,6 +964,7 @@ fn close_worker(worker_id: u64, shared: &Shared, err: FutureError) {
     }
     if let Some((mut seat, task_id, lease)) = inner.busy.remove(&worker_id) {
         inner.activity.remove(&worker_id);
+        inner.stall_spans.remove(&worker_id);
         seat.kill();
         // Ledger first (breaker fed, seat forfeited), THEN park the error:
         // a collector woken by the parked failure must find the breaker
@@ -856,6 +998,9 @@ fn close_worker(worker_id: u64, shared: &Shared, err: FutureError) {
         }
     }
     drop(inner);
+    if let Some(ch) = channel {
+        ch.close();
+    }
     shared.result_cv.notify_all();
     // Wake the health monitor: capacity just dropped.
     shared.death_cv.notify_all();
@@ -873,6 +1018,14 @@ impl ProcHandle {
     fn in_flight(inner: &Inner, task_id: &str) -> bool {
         inner.busy.values().any(|(_, t, _)| t == task_id)
             || inner.pending.values().any(|t| t == task_id)
+    }
+
+    /// Drop the pipelining state for a task that will never launch again
+    /// (collected, cancelled, or its handle dropped).
+    fn clear_pipeline(inner: &mut Inner, task_id: &str) {
+        inner.pipe_parked.remove(task_id);
+        inner.pipe_sent.remove(task_id);
+        inner.pipe_expected.remove(task_id);
     }
 }
 
@@ -895,6 +1048,12 @@ impl TaskHandle for ProcHandle {
             if let Some(parked) = inner.results.remove(&self.task_id) {
                 self.collected = true;
                 inner.expected_attempt.remove(&self.task_id);
+                // Forwards are retransmitted per ATTEMPT, not per result:
+                // a supervised retry reuses the task id, so the state must
+                // survive until the caller actually takes an outcome.
+                if parked.is_ok() {
+                    Self::clear_pipeline(&mut inner, &self.task_id);
+                }
                 return parked;
             }
             if !Self::in_flight(&inner, &self.task_id) {
@@ -917,6 +1076,7 @@ impl TaskHandle for ProcHandle {
             // Already resolved: nothing to cancel, result discarded.
             self.collected = true;
             inner.expected_attempt.remove(&self.task_id);
+            Self::clear_pipeline(&mut inner, &self.task_id);
             return false;
         }
         let worker_id = inner
@@ -928,14 +1088,16 @@ impl TaskHandle for ProcHandle {
             Some(w) => {
                 let (mut seat, _, lease) = inner.busy.remove(&w).unwrap();
                 inner.activity.remove(&w);
+                inner.stall_spans.remove(&w);
                 inner.expected_attempt.remove(&self.task_id);
+                Self::clear_pipeline(&mut inner, &self.task_id);
+                seat.channel.disarm_stall();
                 // Best-effort courtesy frame: a worker that happens to be
                 // between tasks drops the id cleanly; one mid-evaluation
                 // never reads it — the kill below is the enforcement.
-                let _ = write_message(
-                    &mut seat.writer,
-                    &Message::Cancel { task_id: self.task_id.clone() },
-                );
+                let _ = seat.channel.send_bytes(&wire::encode_message(&Message::Cancel {
+                    task_id: self.task_id.clone(),
+                }));
                 seat.kill();
                 // User intent, not a host failure: the seat is forfeited
                 // (revive restores it, charged to the host budget) but the
@@ -991,7 +1153,8 @@ mod tests {
 
     /// A reader that stays silent for a beat, then signals clean EOF — a
     /// worker that connects successfully and dies shortly after, once the
-    /// pool has registered its seat.
+    /// pool has registered its seat.  No raw fds: the transport falls back
+    /// to a pump thread, same handler path.
     struct DelayedEof(Duration);
 
     impl std::io::Read for DelayedEof {
@@ -1016,6 +1179,8 @@ mod tests {
                     reader: Box::new(DelayedEof(Duration::from_millis(40))),
                     writer: Box::new(std::io::sink()),
                     child: None,
+                    read_fd: None,
+                    write_fd: None,
                 })
             } else {
                 std::thread::sleep(Duration::from_millis(120));
@@ -1058,6 +1223,8 @@ mod tests {
                 reader: Box::new(DelayedEof(Duration::from_millis(5))),
                 writer: Box::new(std::io::sink()),
                 child: None,
+                read_fd: None,
+                write_fd: None,
             })
         });
         let cfg = SupervisorConfig {
@@ -1089,6 +1256,8 @@ mod tests {
                 reader: Box::new(DelayedEof(Duration::from_millis(10))),
                 writer: Box::new(std::io::sink()),
                 child: None,
+                read_fd: None,
+                write_fd: None,
             })
         });
         let cfg = SupervisorConfig {
@@ -1116,6 +1285,8 @@ mod tests {
                     reader: Box::new(DelayedEof(Duration::from_millis(5))),
                     writer: Box::new(std::io::sink()),
                     child: None,
+                    read_fd: None,
+                    write_fd: None,
                 })
             } else {
                 // A "good" worker that simply never speaks (idle forever).
@@ -1123,6 +1294,8 @@ mod tests {
                     reader: Box::new(DelayedEof(Duration::from_secs(3600))),
                     writer: Box::new(std::io::sink()),
                     child: None,
+                    read_fd: None,
+                    write_fd: None,
                 })
             }
         });
@@ -1171,14 +1344,19 @@ impl Drop for ProcHandle {
         }
         let mut inner = self.pool.shared.inner.lock().unwrap();
         // A dropped handle's subscription is dead weight: remove it so the
-        // reader never notifies a token nobody is waiting on.
+        // handler never notifies a token nobody is waiting on.
         inner.waiters.remove(&self.task_id);
         inner.expected_attempt.remove(&self.task_id);
+        inner.pipe_expected.remove(&self.task_id);
         if inner.results.remove(&self.task_id).is_none() && Self::in_flight(&inner, &self.task_id)
         {
-            // Still running: mark abandoned so the reader discards the
-            // result but the worker itself returns to the pool.
+            // Still running: mark abandoned so the handler discards the
+            // result but the worker itself returns to the pool.  Parked
+            // forwards stay until then — the worker may still need them
+            // to finish and free its seat.
             inner.abandoned.insert(self.task_id.clone());
+        } else {
+            Self::clear_pipeline(&mut inner, &self.task_id);
         }
     }
 }

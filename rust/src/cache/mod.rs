@@ -197,7 +197,10 @@ pub fn chunk_element_keys(
 /// function of their inputs.
 fn has_chaos(expr: &Expr) -> bool {
     match expr {
-        Expr::ChaosKill { .. } | Expr::ChaosHang { .. } => true,
+        // `Await` rides along: a pipelined dependency's value arrives
+        // out-of-band, so the expression is not a pure function of its
+        // encoded bytes either — never cache it.
+        Expr::ChaosKill { .. } | Expr::ChaosHang { .. } | Expr::Await { .. } => true,
         Expr::Let { value, body, .. } => has_chaos(value) || has_chaos(body),
         Expr::Seq(items) | Expr::List(items) => items.iter().any(has_chaos),
         Expr::Index { list, index } => has_chaos(list) || has_chaos(index),

@@ -1180,6 +1180,72 @@ fn check_cached_bit_identical_in(
 }
 
 /// All conformance checks.
+// --------------------------------------------------- transport checks ----
+
+/// Serializes transport-reactor checks across concurrently-running backend
+/// suites: [`crate::transport::force_pump_scope`] is process-global, so one
+/// suite's pump window must not leak into another's reactor-shape probe.
+static TRANSPORT_CHECK_GATE: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// The transport plane is invisible to results: the same seeded lapply is
+/// bit-identical whether worker channels ride the poll reactor (default)
+/// or the blocking pump-thread fallback (the legacy thread-per-connection
+/// shape, forced for run A).  On Linux the thread shape is also probed:
+/// zero per-seat reader threads exist, and channel-backed plans are
+/// multiplexed by exactly ONE reactor thread regardless of seat count.
+fn check_transport_reactor() -> Result<(), String> {
+    let _gate = TRANSPORT_CHECK_GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let spec = ambient_plan();
+    let env = Env::new();
+    let xs: Vec<Value> = (0..8i64).map(Value::I64).collect();
+    let body = Expr::add(Expr::var("x"), Expr::runif(1));
+    let opts = || LapplyOpts::new().seed(29).chunking(Chunking::ChunkSize(2));
+
+    // Run A: a fresh session whose pool registers every worker channel
+    // inside the forced-pump window — each seat served by a blocking
+    // thread, exactly like the historical per-connection readers.
+    let want = {
+        let _pump = crate::transport::force_pump_scope();
+        let s = Session::with_plan(spec.clone());
+        let out = s.lapply(&xs, "x", &body, &env, &opts()).map_err(|e| e.to_string());
+        s.close();
+        out?
+    };
+
+    // Run B: the reactor path (default) — probe the thread shape while
+    // the pool is still alive.
+    let s = Session::with_plan(spec.clone());
+    let got = s.lapply(&xs, "x", &body, &env, &opts()).map_err(|e| e.to_string());
+    let shape = crate::transport::thread_counts();
+    s.close();
+    expect_eq(got?, want, "reactor-transport lapply vs pump-thread run")?;
+
+    if let Some(tc) = shape {
+        if tc.readers != 0 {
+            return err(format!(
+                "{} per-seat reader threads alive; the reactor must own all channels",
+                tc.readers
+            ));
+        }
+        if tc.reactor > 1 {
+            return err(format!(
+                "{} reactor threads alive; the design is ONE poll loop",
+                tc.reactor
+            ));
+        }
+        let channel_backed =
+            matches!(spec, PlanSpec::Multiprocess { .. } | PlanSpec::Cluster { .. });
+        if channel_backed && tc.reactor != 1 {
+            return err(format!(
+                "expected exactly 1 reactor thread multiplexing {} seats, found {}",
+                spec.effective_workers(),
+                tc.reactor
+            ));
+        }
+    }
+    Ok(())
+}
+
 pub fn checks() -> Vec<Check> {
     vec![
         Check { name: "basic-value", what: "future()/value() roundtrip", run: check_basic_value },
@@ -1342,6 +1408,11 @@ pub fn checks() -> Vec<Check> {
             name: "cached-bit-identical",
             what: "cold ≡ warm-hit ≡ cache-disabled (values + relay); lease-free hits; errors never cached",
             run: check_cached_bit_identical,
+        },
+        Check {
+            name: "transport-reactor",
+            what: "reactor transport bit-identical to pump-thread fallback; one poller, zero per-seat readers",
+            run: check_transport_reactor,
         },
     ]
 }

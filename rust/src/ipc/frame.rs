@@ -90,6 +90,65 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<RawFrame>, FutureError> {
     Ok(Some(RawFrame { kind, codec, body }))
 }
 
+/// Try to split one complete frame off the front of `buf` without
+/// blocking — the incremental twin of [`read_frame`] for nonblocking
+/// transports (the [`crate::transport`] reactor accumulates socket/pipe
+/// bytes in a per-channel buffer and calls this until it returns
+/// `Ok(None)`).
+///
+/// Returns `Ok(Some((frame, consumed)))` when `buf[..consumed]` held a
+/// complete frame, `Ok(None)` when more bytes are needed, and an error on
+/// bad magic / version mismatch / oversized length — the same validation
+/// (and error text) as the blocking reader, so both paths classify
+/// corruption identically.
+pub fn try_split_frame(buf: &[u8]) -> Result<Option<(RawFrame, usize)>, FutureError> {
+    if buf.len() < 2 {
+        return Ok(None);
+    }
+    if buf[..2] != wire::MAGIC {
+        return Err(FutureError::Channel(format!(
+            "bad frame magic {:02x}{:02x}",
+            buf[0], buf[1]
+        )));
+    }
+    if buf.len() < 5 {
+        return Ok(None);
+    }
+    let version = buf[2];
+    if version != PROTOCOL_VERSION as u8 {
+        return Err(FutureError::Channel(format!(
+            "protocol version {version} (this build speaks {PROTOCOL_VERSION})"
+        )));
+    }
+    let kind = buf[3];
+    let codec = buf[4];
+    // Varint body length with the same 64-bit overflow guard as read_frame.
+    let mut len: u64 = 0;
+    let mut shift: u32 = 0;
+    let mut at = 5usize;
+    loop {
+        let Some(&b) = buf.get(at) else { return Ok(None) };
+        at += 1;
+        if shift >= 64 || (shift == 63 && (b & 0x7f) > 1) {
+            return Err(FutureError::Channel("frame length varint overflow".into()));
+        }
+        len |= u64::from(b & 0x7f) << shift;
+        if b & 0x80 == 0 {
+            break;
+        }
+        shift += 7;
+    }
+    if len > u64::from(MAX_FRAME) {
+        return Err(FutureError::Channel(format!("frame too large: {len} bytes")));
+    }
+    let len = len as usize;
+    if buf.len() < at + len {
+        return Ok(None);
+    }
+    let body = buf[at..at + len].to_vec();
+    Ok(Some((RawFrame { kind, codec, body }, at + len)))
+}
+
 /// Read one frame and decode its message (no intern cache — interned
 /// references from prior frames will fail; workers that participate in
 /// interning use [`read_frame`] + [`wire::decode_frame_body`] with their
@@ -147,6 +206,37 @@ mod tests {
         }
         let mut cur = Cursor::new(buf);
         assert!(matches!(read_message(&mut cur), Err(FutureError::Channel(_))));
+    }
+
+    #[test]
+    fn try_split_frame_matches_blocking_reader() {
+        let mut buf = Vec::new();
+        write_message(&mut buf, &Message::Ping).unwrap();
+        write_message(&mut buf, &Message::Shutdown).unwrap();
+        let (f1, n1) = try_split_frame(&buf).unwrap().unwrap();
+        // Every strict prefix of the first frame is "need more bytes".
+        for cut in 0..n1 {
+            assert_eq!(try_split_frame(&buf[..cut]).unwrap(), None, "prefix {cut}");
+        }
+        let m1 = wire::decode_frame_body(f1.kind, f1.codec, &f1.body, None).unwrap();
+        assert_eq!(m1, Message::Ping);
+        let (f2, n2) = try_split_frame(&buf[n1..]).unwrap().unwrap();
+        let m2 = wire::decode_frame_body(f2.kind, f2.codec, &f2.body, None).unwrap();
+        assert_eq!(m2, Message::Shutdown);
+        assert_eq!(n1 + n2, buf.len());
+        assert_eq!(try_split_frame(&[]).unwrap(), None);
+    }
+
+    #[test]
+    fn try_split_frame_rejects_bad_magic_and_version() {
+        let mut buf = Vec::new();
+        write_message(&mut buf, &Message::Ping).unwrap();
+        let mut bad = buf.clone();
+        bad[0] = b'X';
+        assert!(matches!(try_split_frame(&bad), Err(FutureError::Channel(_))));
+        let mut old = buf;
+        old[2] = 5; // a v5 peer
+        assert!(matches!(try_split_frame(&old), Err(FutureError::Channel(_))));
     }
 
     #[test]

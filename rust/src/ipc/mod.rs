@@ -39,7 +39,7 @@ use crate::backend::supervisor::RetryPolicy;
 /// worker inherit?".  One compact wire record (protocol v4) instead of a
 /// bare topology tail, so plan-level retry defaults no longer silently
 /// drop on nested workers (the PR 3 gap).
-#[derive(Debug, Clone, PartialEq, Default)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SessionContext {
     /// Originating [`crate::api::session::Session`] id (0 = the default
     /// session).  Worker-side derived sessions attribute supervision
@@ -56,6 +56,28 @@ pub struct SessionContext {
     /// Starting value for the worker-side session's future-creation
     /// counter (RNG stream index assignment for nested futures).
     pub counter_base: u64,
+    /// Heartbeat interval in milliseconds the worker should use while
+    /// evaluating this task (protocol v7 — [`crate::liveness::LivenessConfig`]
+    /// became per-session, carried here instead of read from process-global
+    /// state on the worker).
+    pub heartbeat_ms: u64,
+    /// Stall deadline in milliseconds: a seat silent for longer than this
+    /// while busy is declared hung by the transport reactor's timer and
+    /// recycled into the retry path.  `0` = stall detection disabled.
+    pub stall_after_ms: u64,
+}
+
+impl Default for SessionContext {
+    fn default() -> Self {
+        SessionContext {
+            session: 0,
+            nested_plan: Vec::new(),
+            retry: None,
+            counter_base: 0,
+            heartbeat_ms: crate::liveness::DEFAULT_HEARTBEAT_MS,
+            stall_after_ms: 0,
+        }
+    }
 }
 
 /// Per-task options shipped with the expression (the `future(...)` args).
@@ -83,6 +105,14 @@ pub struct TaskOpts {
     /// match the handle's current attempt — a slow-but-alive worker from a
     /// presumed-dead attempt can never corrupt a retried future.
     pub attempt: u32,
+    /// Pipelined-dependency ids (protocol v7): futures whose results this
+    /// task consumes via [`crate::api::expr::Expr::Await`] but which were
+    /// *unresolved* at launch.  The worker must collect one
+    /// [`Message::Forward`] frame per listed id (in any order) before
+    /// evaluating — the coordinator forwards each dependency's outcome
+    /// directly to this task's seat, saving the resolve-and-resubmit round
+    /// trip through the caller.
+    pub pending: Vec<String>,
 }
 
 impl Default for TaskOpts {
@@ -96,6 +126,7 @@ impl Default for TaskOpts {
             depth: 0,
             context: SessionContext::default(),
             attempt: 0,
+            pending: Vec::new(),
         }
     }
 }
@@ -216,6 +247,37 @@ pub enum Message {
         /// Encoded blob bytes ([`wire::decode_blob`]), or `None` if gone.
         bytes: Option<Vec<u8>>,
     },
+    /// Coordinator → worker (protocol v7): the outcome of a pipelined
+    /// dependency, forwarded directly to the seat running a consumer task
+    /// that listed `future_id` in [`TaskOpts::pending`].  The worker binds
+    /// it for [`crate::api::expr::Expr::Await`] and only starts evaluating
+    /// once every pending id has arrived.  Forwards ride the same
+    /// attempt-fenced launch path as the task itself: a consumer relaunch
+    /// resends the task *and* its forwards, so retry semantics are
+    /// unchanged.
+    Forward {
+        /// The pipelined dependency this outcome resolves.
+        future_id: String,
+        /// The dependency's outcome (value, or the error `Await` re-raises).
+        outcome: TaskOutcome,
+    },
+}
+
+/// Reserved environment key a pipelined dependency's *successful* value is
+/// bound under in the consumer task's globals (creation-time prebind) or
+/// worker-side environment (Forward collection).  The `__pipe:` prefix
+/// cannot collide with user globals: [`crate::api::expr::Expr::Var`] names
+/// come from user code and the analyzer flags unknown captures long before
+/// a name like this could be typed by accident.
+pub fn pipeline_ok_key(future_id: &str) -> String {
+    format!("__pipe:{future_id}")
+}
+
+/// Reserved environment key a pipelined dependency's *error message* is
+/// bound under (as a [`Value::Str`]) — [`crate::api::expr::Expr::Await`]
+/// re-raises it as an evaluation error.
+pub fn pipeline_err_key(future_id: &str) -> String {
+    format!("__pipe_err:{future_id}")
 }
 
 /// Protocol version — bump on any wire-format change.
@@ -231,4 +293,11 @@ pub enum Message {
 ///     varint lengths), per-frame delta+RLE compression, and content-hashed
 ///     global interning (`ValueRef`/`ExprRef` tags, `NeedBlob`/`Blob`
 ///     frames).  WIRE.md is the normative spec.
-pub const PROTOCOL_VERSION: u32 = 6;
+/// v7: async transport + promise pipelining — `Forward` (tag 11) frames
+///     carry a pipelined dependency's outcome straight to the consumer's
+///     seat, `Expr::Await` (tag 21) consumes it, `TaskOpts::pending` lists
+///     the forwards a task must collect before evaluating, and
+///     [`SessionContext`] carries per-session liveness settings
+///     (`heartbeat_ms`, `stall_after_ms`) now that stall deadlines live in
+///     the transport reactor's timer instead of per-pool scan threads.
+pub const PROTOCOL_VERSION: u32 = 7;

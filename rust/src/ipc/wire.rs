@@ -82,6 +82,7 @@ pub const FRAME_KIND_TABLE: &[(u8, &str)] = &[
     (8, "Cancel"),
     (9, "NeedBlob"),
     (10, "Blob"),
+    (11, "Forward"),
 ];
 
 /// Value tag byte → name (WIRE.md §Values).
@@ -119,6 +120,7 @@ pub const EXPR_TAG_TABLE: &[(u8, &str)] = &[
     (18, "ChaosKill"),
     (19, "ChaosHang"),
     (20, "ExprRef"),
+    (21, "Await"),
 ];
 
 /// Plan tag byte → name (WIRE.md §Plans).
@@ -897,6 +899,10 @@ pub fn enc_expr(e: &mut Encoder, expr: &Expr) {
                 None => e.u8(0),
             }
         }
+        Expr::Await { future_id } => {
+            e.u8(21);
+            e.str(future_id);
+        }
     }
 }
 
@@ -1008,6 +1014,7 @@ fn dec_expr_tagged(d: &mut Decoder, tag: u8) -> Result<Expr, WireError> {
             let arc = d.expr_blob(&dg)?;
             (*arc).clone()
         }
+        21 => Expr::Await { future_id: d.str()? },
         t => return Err(d.bad_tag("Expr", t)),
     })
 }
@@ -1184,6 +1191,8 @@ pub fn enc_session_context(e: &mut Encoder, c: &SessionContext) {
     }
     enc_retry(e, &c.retry);
     e.u64(c.counter_base);
+    e.varint(c.heartbeat_ms);
+    e.varint(c.stall_after_ms);
 }
 
 /// Decode the session-context record.
@@ -1196,7 +1205,16 @@ pub fn dec_session_context(d: &mut Decoder) -> Result<SessionContext, WireError>
     }
     let retry = dec_retry(d)?;
     let counter_base = d.u64()?;
-    Ok(SessionContext { session, nested_plan, retry, counter_base })
+    let heartbeat_ms = d.varint()?;
+    let stall_after_ms = d.varint()?;
+    Ok(SessionContext {
+        session,
+        nested_plan,
+        retry,
+        counter_base,
+        heartbeat_ms,
+        stall_after_ms,
+    })
 }
 
 /// Encode per-task options (seed, streams, capture flags, context).
@@ -1209,6 +1227,10 @@ pub fn enc_task_opts(e: &mut Encoder, o: &TaskOpts) {
     e.varint(u64::from(o.depth));
     enc_session_context(e, &o.context);
     e.varint(u64::from(o.attempt));
+    e.varint(o.pending.len() as u64);
+    for id in &o.pending {
+        e.str(id);
+    }
 }
 
 /// Decode per-task options.
@@ -1221,6 +1243,11 @@ pub fn dec_task_opts(d: &mut Decoder) -> Result<TaskOpts, WireError> {
     let depth = d.varint()? as u32;
     let context = dec_session_context(d)?;
     let attempt = d.varint()? as u32;
+    let n = d.len_varint(1, "pending ids")?;
+    let mut pending = Vec::with_capacity(n);
+    for _ in 0..n {
+        pending.push(d.str()?);
+    }
     Ok(TaskOpts {
         seed,
         stream_index,
@@ -1230,6 +1257,7 @@ pub fn dec_task_opts(d: &mut Decoder) -> Result<TaskOpts, WireError> {
         depth,
         context,
         attempt,
+        pending,
     })
 }
 
@@ -1411,7 +1439,27 @@ pub fn task_size_hint(t: &TaskSpec) -> usize {
 /// Encode a task result (outcome, captured output, metrics, attempt).
 pub fn enc_result(e: &mut Encoder, r: &TaskResult) {
     e.str(&r.id);
-    match &r.outcome {
+    enc_outcome(e, &r.outcome);
+    enc_captured(e, &r.captured);
+    e.u64(r.metrics.started_ns);
+    e.u64(r.metrics.finished_ns);
+    e.varint(u64::from(r.attempt));
+}
+
+/// Decode a task result.
+pub fn dec_result(d: &mut Decoder) -> Result<TaskResult, WireError> {
+    let id = d.str()?;
+    let outcome = dec_outcome(d)?;
+    let captured = dec_captured(d)?;
+    let metrics = TaskMetrics { started_ns: d.u64()?, finished_ns: d.u64()? };
+    let attempt = d.varint()? as u32;
+    Ok(TaskResult { id, outcome, captured, metrics, attempt })
+}
+
+/// Encode a bare [`TaskOutcome`] (tag byte 0 = Ok + value, 1 = Err +
+/// message + optional call) — shared by `Result` and `Forward` frames.
+pub fn enc_outcome(e: &mut Encoder, outcome: &TaskOutcome) {
+    match outcome {
         TaskOutcome::Ok(v) => {
             e.u8(0);
             enc_value(e, v);
@@ -1422,16 +1470,11 @@ pub fn enc_result(e: &mut Encoder, r: &TaskResult) {
             e.opt_str(&err.call);
         }
     }
-    enc_captured(e, &r.captured);
-    e.u64(r.metrics.started_ns);
-    e.u64(r.metrics.finished_ns);
-    e.varint(u64::from(r.attempt));
 }
 
-/// Decode a task result.
-pub fn dec_result(d: &mut Decoder) -> Result<TaskResult, WireError> {
-    let id = d.str()?;
-    let outcome = match d.u8()? {
+/// Decode a bare [`TaskOutcome`].
+pub fn dec_outcome(d: &mut Decoder) -> Result<TaskOutcome, WireError> {
+    Ok(match d.u8()? {
         0 => TaskOutcome::Ok(dec_value(d)?),
         1 => {
             let message = d.str()?;
@@ -1439,11 +1482,7 @@ pub fn dec_result(d: &mut Decoder) -> Result<TaskResult, WireError> {
             TaskOutcome::Err(EvalError { message, call })
         }
         t => return Err(d.bad_tag("TaskOutcome", t)),
-    };
-    let captured = dec_captured(d)?;
-    let metrics = TaskMetrics { started_ns: d.u64()?, finished_ns: d.u64()? };
-    let attempt = d.varint()? as u32;
-    Ok(TaskResult { id, outcome, captured, metrics, attempt })
+    })
 }
 
 // ------------------------------------------------------------- framing --
@@ -1465,6 +1504,7 @@ pub fn frame_kind(m: &Message) -> u8 {
         Message::Cancel { .. } => 8,
         Message::NeedBlob { .. } => 9,
         Message::Blob { .. } => 10,
+        Message::Forward { .. } => 11,
     }
 }
 
@@ -1509,6 +1549,9 @@ pub fn encode_message_opts(m: &Message, compress: bool) -> Vec<u8> {
         // §Perf: size-hinted buffer for the payload-bearing messages.
         Message::Task(t) => Encoder::with_capacity(task_size_hint(t)),
         Message::Result(r) => Encoder::with_capacity(64 + result_size_hint(r)),
+        Message::Forward { future_id, outcome } => {
+            Encoder::with_capacity(32 + future_id.len() + outcome_size_hint(outcome))
+        }
         _ => Encoder::new(),
     };
     match m {
@@ -1542,9 +1585,16 @@ pub fn encode_message_opts(m: &Message, compress: bool) -> Vec<u8> {
                 None => e.bool(false),
             }
         }
+        Message::Forward { future_id, outcome } => {
+            e.str(future_id);
+            enc_outcome(e, outcome);
+        }
     }
     let do_compress = compress
-        && matches!(m, Message::Task(_) | Message::Result(_) | Message::Blob { .. });
+        && matches!(
+            m,
+            Message::Task(_) | Message::Result(_) | Message::Blob { .. } | Message::Forward { .. }
+        );
     finish_frame(frame_kind(m), e.into_bytes(), do_compress)
 }
 
@@ -1558,12 +1608,15 @@ pub fn encode_task_message(t: &TaskSpec) -> Vec<u8> {
     finish_frame(1, e.into_bytes(), true)
 }
 
-fn result_size_hint(r: &TaskResult) -> usize {
-    let payload = match &r.outcome {
+fn outcome_size_hint(o: &TaskOutcome) -> usize {
+    match o {
         TaskOutcome::Ok(v) => v.byte_size(),
         TaskOutcome::Err(e) => e.message.len() + 16,
-    };
-    payload + r.id.len() + r.captured.stdout.len()
+    }
+}
+
+fn result_size_hint(r: &TaskResult) -> usize {
+    outcome_size_hint(&r.outcome) + r.id.len() + r.captured.stdout.len()
 }
 
 /// Decode a complete v6 frame (header + body) without an intern cache.
@@ -1668,6 +1721,11 @@ pub fn decode_frame_body(
                 None
             };
             Message::Blob { digest, bytes }
+        }
+        11 => {
+            let future_id = d.str()?;
+            let outcome = dec_outcome(&mut d)?;
+            Message::Forward { future_id, outcome }
         }
         other => return Err(d.err_kind(WireErrorKind::BadFrameKind { found: other })),
     };
@@ -1889,6 +1947,7 @@ mod tests {
             Message::Cancel { task_id: "t".into() },
             Message::NeedBlob { digests: vec![Digest([0; 16])] },
             Message::Blob { digest: Digest([0; 16]), bytes: None },
+            Message::Forward { future_id: "f".into(), outcome: TaskOutcome::Ok(Value::Unit) },
         ];
         assert_eq!(samples.len(), FRAME_KIND_TABLE.len());
         for (i, m) in samples.iter().enumerate() {
@@ -1904,7 +1963,7 @@ mod tests {
         enc_expr(&mut e, &Expr::var("x"));
         assert_eq!(e.into_bytes()[0], 1, "Var tag");
         assert_eq!(VALUE_TAG_TABLE.len(), 8);
-        assert_eq!(EXPR_TAG_TABLE.len(), 21);
+        assert_eq!(EXPR_TAG_TABLE.len(), 22);
     }
 
     #[test]
@@ -1951,8 +2010,11 @@ mod tests {
                             .with_backoff(std::time::Duration::from_millis(7), 1.5),
                     ),
                     counter_base: 11,
+                    heartbeat_ms: 10,
+                    stall_after_ms: 4000,
                 },
                 attempt: 2,
+                pending: vec!["f-9-1".into(), "f-9-2".into()],
             },
         };
         let msg = Message::Task(task.clone());
@@ -1969,12 +2031,16 @@ mod tests {
                 nested_plan: vec![PlanSpec::Multiprocess { workers: 2 }],
                 retry: None,
                 counter_base: 0,
+                heartbeat_ms: 1,
+                stall_after_ms: 0,
             },
             SessionContext {
                 session: 3,
                 nested_plan: vec![],
                 retry: Some(RetryPolicy::idempotent(5)),
                 counter_base: 1 << 40,
+                heartbeat_ms: 25,
+                stall_after_ms: 120_000,
             },
         ] {
             let mut e = Encoder::new();
@@ -2058,6 +2124,14 @@ mod tests {
             Message::NeedBlob { digests: vec![Digest([1; 16]), Digest([2; 16])] },
             Message::Blob { digest: Digest([3; 16]), bytes: Some(vec![9, 8, 7]) },
             Message::Blob { digest: Digest([4; 16]), bytes: None },
+            Message::Forward {
+                future_id: "f-1-1".into(),
+                outcome: TaskOutcome::Ok(Value::F64(2.5)),
+            },
+            Message::Forward {
+                future_id: "f-1-2".into(),
+                outcome: TaskOutcome::Err(EvalError::with_call("dep boom", "g(x)")),
+            },
         ] {
             assert_eq!(decode_message(&encode_message(&m)).unwrap(), m);
         }

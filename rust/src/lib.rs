@@ -65,6 +65,7 @@ pub mod metrics;
 pub mod proptest_lite;
 pub mod runtime;
 pub mod scheduler;
+pub mod transport;
 pub mod util;
 pub mod worker;
 
@@ -77,7 +78,8 @@ pub mod prelude {
     pub use crate::api::error::{EvalError, FutureError};
     pub use crate::api::expr::{Expr, PrimOp};
     pub use crate::api::future::{
-        future, future_with, resolve, resolve_all, resolve_any, Future, FutureOpts, FutureSet,
+        future, future_pipelined, future_with, resolve, resolve_all, resolve_any, Future,
+        FutureOpts, FutureSet,
     };
     pub use crate::api::lazy::merge_futures;
     pub use crate::api::plan::{plan, plan_topology, with_plan, PlanSpec};

@@ -44,7 +44,19 @@ use std::time::Duration;
 /// [`crate::backend::supervisor::WORKER_KILL_ERROR`]).
 pub const WORKER_CANCEL_ERROR: &str = "__rustures_cooperative_cancel__";
 
-/// Process-wide liveness tuning, read by pools/workers at task time.
+/// Default worker heartbeat cadence in milliseconds
+/// ([`LivenessConfig::heartbeat_interval`] and the
+/// [`crate::ipc::SessionContext`] default agree through this constant).
+pub const DEFAULT_HEARTBEAT_MS: u64 = 25;
+
+/// Liveness tuning (heartbeat cadence + stall deadline).
+///
+/// Since the transport reactor took over stall deadlines (protocol v7),
+/// the *authoritative* copy travels per-session: set it with
+/// [`crate::api::session::Session::set_liveness_config`] and it ships to
+/// workers inside every task's [`crate::ipc::SessionContext`].  The
+/// process-global [`set_liveness_config`] remains as the fallback default
+/// for sessions that never set their own.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LivenessConfig {
     /// Minimum spacing between heartbeat frames a remote worker emits
@@ -60,7 +72,10 @@ pub struct LivenessConfig {
 
 impl Default for LivenessConfig {
     fn default() -> Self {
-        LivenessConfig { heartbeat_interval: Duration::from_millis(25), stall_after: None }
+        LivenessConfig {
+            heartbeat_interval: Duration::from_millis(DEFAULT_HEARTBEAT_MS),
+            stall_after: None,
+        }
     }
 }
 
@@ -73,12 +88,14 @@ impl LivenessConfig {
 
 static CONFIG: Mutex<Option<LivenessConfig>> = Mutex::new(None);
 
-/// The config pools and workers consult (process-wide).
+/// The process-wide *fallback* config — what sessions without a
+/// per-session [`crate::api::session::Session::set_liveness_config`]
+/// resolve at context-build time.
 pub fn liveness_config() -> LivenessConfig {
     CONFIG.lock().unwrap().clone().unwrap_or_default()
 }
 
-/// Override the process-wide liveness config.
+/// Override the process-wide fallback liveness config.
 pub fn set_liveness_config(cfg: LivenessConfig) {
     *CONFIG.lock().unwrap() = Some(cfg);
 }

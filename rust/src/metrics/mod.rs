@@ -328,6 +328,48 @@ pub fn cache_json() -> String {
     crate::cache::cache_json()
 }
 
+/// Transport-reactor counters and per-channel outbox gauges as JSON — the
+/// async multiplexed transport core's metrics surface (schema
+/// `rustures.transport.v1`):
+///
+/// ```json
+/// {"schema":"rustures.transport.v1",
+///  "wakeups":812,"ready_events":1430,"timer_fires":2,
+///  "frames_in":5210,"bytes_in":88211,"bytes_out":91724,
+///  "pipeline":{"forwards":12,"prebinds":3},
+///  "backpressure_waits":1,
+///  "channels":{"open":8,"pump":0,"outbox_bytes":0,
+///              "outboxes":[{"name":"procpool-1","queued":0}]}}
+/// ```
+///
+/// Counters are monotonic process totals; `channels` is a point-in-time
+/// gauge (empty before the reactor's first channel registers).
+pub fn transport_json() -> String {
+    let s = crate::transport::stats();
+    let mut out = String::from("{\"schema\":\"rustures.transport.v1\",");
+    out.push_str(&format!(
+        "\"wakeups\":{},\"ready_events\":{},\"timer_fires\":{},\"frames_in\":{},\"bytes_in\":{},\"bytes_out\":{},",
+        s.wakeups, s.ready_events, s.timer_fires, s.frames_in, s.bytes_in, s.bytes_out
+    ));
+    out.push_str(&format!(
+        "\"pipeline\":{{\"forwards\":{},\"prebinds\":{}}},\"backpressure_waits\":{},",
+        s.forwards, s.prebinds, s.backpressure_waits
+    ));
+    out.push_str(&format!(
+        "\"channels\":{{\"open\":{},\"pump\":{},\"outbox_bytes\":{},\"outboxes\":[",
+        s.channels_open, s.channels_pump, s.outbox_bytes
+    ));
+    for (i, (name, queued)) in crate::transport::per_channel_outbox().iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let name = crate::util::json::to_string(&crate::util::json::Json::Str(name.clone()));
+        out.push_str(&format!("{{\"name\":{name},\"queued\":{queued}}}"));
+    }
+    out.push_str("]}}");
+    out
+}
+
 // --------------------------------------------------- analysis counters ----
 
 /// Process-wide static-analysis totals (monotonic; mirror the per-session

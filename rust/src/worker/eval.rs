@@ -410,6 +410,25 @@ fn eval(expr: &Expr, scope: &mut Scope, ctx: &mut EvalCtx<'_, '_>) -> Result<Val
             }
             Ok(Value::I64(0))
         }
+        Expr::Await { future_id } => {
+            // A pipelined dependency: its outcome was bound into the task
+            // environment under a reserved key — either at creation (the
+            // dependency was already resolved) or by the worker's
+            // Forward-collection loop before evaluation started.
+            if let Some(v) = scope.lookup(&crate::ipc::pipeline_ok_key(future_id)) {
+                return Ok(v.clone());
+            }
+            if let Some(v) = scope.lookup(&crate::ipc::pipeline_err_key(future_id)) {
+                let msg = match v {
+                    Value::Str(s) => s.clone(),
+                    other => format!("{other}"),
+                };
+                return Err(EvalError::new(msg));
+            }
+            Err(EvalError::new(format!(
+                "unresolved pipelined dependency '{future_id}' (no forwarded outcome)"
+            )))
+        }
     }
 }
 

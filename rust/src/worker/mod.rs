@@ -118,12 +118,69 @@ pub fn run_worker<R: Read, W: Write>(
     // reference-only frames resolve through it (with NeedBlob recovery on a
     // miss — see read_worker_message).
     let cache = InternCache::new();
+    // Wire-v7 `Forward` frames (pipelined dependency outcomes) can arrive
+    // interleaved with anything — even mid-NeedBlob-recovery.  They are
+    // stashed here and consumed by the pending-collection loop below.
+    let mut stash: Vec<Message> = Vec::new();
     write_message(&mut writer, &Message::Hello { worker_id, version: PROTOCOL_VERSION })?;
     loop {
-        match read_worker_message(&mut reader, &mut writer, &cache)? {
+        let msg = if stash.is_empty() {
+            read_worker_message(&mut reader, &mut writer, &cache, &mut stash)?
+        } else {
+            Some(stash.remove(0))
+        };
+        match msg {
             None | Some(Message::Shutdown) => return Ok(()),
             Some(Message::Ping) => write_message(&mut writer, &Message::Pong)?,
-            Some(Message::Task(task)) => {
+            Some(Message::Task(mut task)) => {
+                // Promise pipelining: a task declaring pending dependency
+                // ids blocks here until every declared outcome has arrived
+                // as a Forward frame, binding each under its reserved
+                // sentinel key ([`Expr::Await`] reads them during eval).
+                // The coordinator arms this seat's stall deadline only
+                // after the last forward, so waiting here is never
+                // mistaken for a hang.
+                if !task.opts.pending.is_empty() {
+                    let mut want: std::collections::HashSet<String> =
+                        task.opts.pending.iter().cloned().collect();
+                    // Creation-time prebinds satisfy their ids up front.
+                    want.retain(|id| {
+                        !task.globals.contains(&crate::ipc::pipeline_ok_key(id))
+                            && !task.globals.contains(&crate::ipc::pipeline_err_key(id))
+                    });
+                    let mut cancelled = false;
+                    while !want.is_empty() {
+                        let msg = if stash.is_empty() {
+                            read_worker_message(&mut reader, &mut writer, &cache, &mut stash)?
+                        } else {
+                            Some(stash.remove(0))
+                        };
+                        match msg {
+                            None | Some(Message::Shutdown) => return Ok(()),
+                            Some(Message::Ping) => {
+                                write_message(&mut writer, &Message::Pong)?
+                            }
+                            Some(Message::Forward { future_id, outcome }) => {
+                                want.remove(&future_id);
+                                bind_forward(&mut task.globals, &future_id, outcome);
+                            }
+                            Some(Message::Cancel { task_id }) if task_id == task.id => {
+                                cancelled = true;
+                                break;
+                            }
+                            Some(Message::Cancel { .. }) => {}
+                            Some(Message::NeedBlob { .. }) | Some(Message::Blob { .. }) => {}
+                            Some(other) => {
+                                return Err(FutureError::Channel(format!(
+                                    "unexpected message while awaiting forwards: {other:?}"
+                                )));
+                            }
+                        }
+                    }
+                    if cancelled {
+                        continue;
+                    }
+                }
                 // Nested futures created while evaluating this task follow
                 // the serialized session context the coordinator shipped:
                 // topology tail (empty ⇒ sequential — the nested-parallelism
@@ -137,7 +194,14 @@ pub fn run_worker<R: Read, W: Write>(
                 // evaluator's yield points.
                 let send_err = std::cell::RefCell::new(None);
                 let writer_cell = std::cell::RefCell::new(&mut writer);
-                let hb_interval = crate::liveness::liveness_config().heartbeat_interval;
+                // Per-session liveness rides in the task's context; the
+                // process-global config is only the fallback for contexts
+                // predating it (heartbeat_ms == 0).
+                let hb_interval = if task.opts.context.heartbeat_ms > 0 {
+                    std::time::Duration::from_millis(task.opts.context.heartbeat_ms)
+                } else {
+                    crate::liveness::liveness_config().heartbeat_interval
+                };
                 let mut last_beat = std::time::Instant::now();
                 let result = crate::api::session::scope_task_context(&task.opts.context, || {
                     let mut on_imm = |c: &Condition| {
@@ -181,6 +245,9 @@ pub fn run_worker<R: Read, W: Write>(
             // A stray Blob (answering a NeedBlob that already resolved) or
             // a NeedBlob echoed back at us is dropped, not fatal.
             Some(Message::NeedBlob { .. }) | Some(Message::Blob { .. }) => {}
+            // A Forward with no task collecting it: the consumer was
+            // cancelled between frames (or the coordinator retransmitted).
+            Some(Message::Forward { .. }) => {}
             Some(other) => {
                 return Err(FutureError::Channel(format!(
                     "worker received unexpected message: {other:?}"
@@ -190,16 +257,37 @@ pub fn run_worker<R: Read, W: Write>(
     }
 }
 
+/// Bind a forwarded (or prebound) pipelined-dependency outcome into a
+/// task's globals under the reserved sentinel key the worker-side
+/// [`crate::api::expr::Expr::Await`] evaluation reads.
+fn bind_forward(globals: &mut crate::api::env::Env, future_id: &str, outcome: TaskOutcome) {
+    match outcome {
+        TaskOutcome::Ok(v) => {
+            globals.insert(&crate::ipc::pipeline_ok_key(future_id), v);
+        }
+        TaskOutcome::Err(e) => {
+            globals.insert(
+                &crate::ipc::pipeline_err_key(future_id),
+                crate::api::value::Value::Str(e.message),
+            );
+        }
+    }
+}
+
 /// Read and decode one frame against the worker's intern cache, running
 /// the `NeedBlob` recovery protocol on a miss: ask the coordinator for the
 /// missing blob, install the answer, and retry the decode.  The mirror
 /// drift this recovers from (coordinator ledger vs. worker cache) is
 /// bounded, so recovery is capped — a non-converging frame is a channel
-/// error, never a hang or a wrong result.
+/// error, never a hang or a wrong result.  `Forward` frames that arrive
+/// mid-recovery (the coordinator flushes pipelined outcomes right behind
+/// the task frame) are pushed onto `stash` for the caller, preserving
+/// arrival order.
 fn read_worker_message<R: Read, W: Write>(
     reader: &mut R,
     writer: &mut W,
     cache: &InternCache,
+    stash: &mut Vec<Message>,
 ) -> Result<Option<Message>, FutureError> {
     let frame = match read_frame(reader)? {
         None => return Ok(None),
@@ -247,6 +335,7 @@ fn read_worker_message<R: Read, W: Write>(
                 Ok(Message::Shutdown) => return Ok(Some(Message::Shutdown)),
                 Ok(Message::Ping) => write_message(writer, &Message::Pong)?,
                 Ok(Message::Cancel { .. }) => {}
+                Ok(fwd @ Message::Forward { .. }) => stash.push(fwd),
                 Ok(other) => {
                     return Err(FutureError::Channel(format!(
                         "unexpected frame during intern recovery: {other:?}"
@@ -446,7 +535,8 @@ mod tests {
         }
         let mut output = Vec::new();
         let cache = InternCache::new();
-        let msg = read_worker_message(&mut Cursor::new(input), &mut output, &cache)
+        let mut stash = Vec::new();
+        let msg = read_worker_message(&mut Cursor::new(input), &mut output, &cache, &mut stash)
             .unwrap()
             .unwrap();
         assert_eq!(msg, Message::Task(t));

@@ -261,7 +261,8 @@ fn naive_free_vars(expr: &Expr, bound: &mut Vec<String>, out: &mut Vec<String>) 
         | Expr::Sleep { .. }
         | Expr::Work { .. }
         | Expr::ChaosKill { .. }
-        | Expr::ChaosHang { .. } => {}
+        | Expr::ChaosHang { .. }
+        | Expr::Await { .. } => {}
     }
 }
 

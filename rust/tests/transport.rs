@@ -1,0 +1,240 @@
+//! Transport-core integration: promise pipelining end-to-end (Forward
+//! frames and the prebind fallback), dependency-failure propagation, the
+//! reactor thread-shape guarantee, and an ignored 256-channel soak that
+//! asserts one poll thread multiplexes every registered channel.
+
+use std::time::{Duration, Instant};
+
+use rustures::api::plan::with_plan;
+use rustures::prelude::*;
+
+/// `f2 = future(g(f1))` where `f1` is still in flight: the dependency's
+/// value reaches the consumer's worker as a Forward frame (one hop), and
+/// the consumer resolves to the composed result.
+#[test]
+fn pipelined_future_forwards_unresolved_dependency() {
+    with_plan(PlanSpec::multiprocess(2), || {
+        let env = Env::new();
+        // Slow enough that f2 is created while f1 is still executing.
+        let f1 = future(
+            Expr::seq(vec![Expr::Sleep { millis: 120 }, Expr::lit(21i64)]),
+            &env,
+        )
+        .unwrap();
+        let dep_id = f1.id().to_string();
+        let f2 = future_pipelined(
+            Expr::add(Expr::await_future(&dep_id), Expr::lit(21i64)),
+            &env,
+            FutureOpts::new(),
+            vec![f1],
+        )
+        .unwrap();
+        assert_eq!(f2.value().unwrap(), Value::I64(42));
+    });
+}
+
+/// A dependency that already resolved at creation time takes the prebind
+/// path (its outcome ships inside the consumer's globals) and composes to
+/// the same result as the forwarded path.
+#[test]
+fn pipelined_future_prebinds_resolved_dependency() {
+    with_plan(PlanSpec::multiprocess(2), || {
+        let env = Env::new();
+        let f1 = future(Expr::lit(40i64), &env).unwrap();
+        let give_up = Instant::now() + Duration::from_secs(10);
+        while !f1.resolved() {
+            assert!(Instant::now() < give_up, "dependency never resolved");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let dep_id = f1.id().to_string();
+        let f2 = future_pipelined(
+            Expr::add(Expr::await_future(&dep_id), Expr::lit(2i64)),
+            &env,
+            FutureOpts::new(),
+            vec![f1],
+        )
+        .unwrap();
+        assert_eq!(f2.value().unwrap(), Value::I64(42));
+    });
+}
+
+/// Backends without channel transports (sequential) fall back to prebind —
+/// pipelining is an optimization, never a requirement.
+#[test]
+fn pipelined_future_works_on_sequential_backend() {
+    with_plan(PlanSpec::sequential(), || {
+        let env = Env::new();
+        let f1 = future(Expr::lit(20i64), &env).unwrap();
+        let dep_id = f1.id().to_string();
+        let f2 = future_pipelined(
+            Expr::add(Expr::await_future(&dep_id), Expr::lit(22i64)),
+            &env,
+            FutureOpts::new(),
+            vec![f1],
+        )
+        .unwrap();
+        assert_eq!(f2.value().unwrap(), Value::I64(42));
+    });
+}
+
+/// A failed dependency surfaces on the consumer as an evaluation error
+/// carrying the original message — never a hang, never a silent default.
+#[test]
+fn pipelined_dependency_error_propagates_to_consumer() {
+    with_plan(PlanSpec::multiprocess(2), || {
+        let env = Env::new();
+        let f1 = future(
+            Expr::seq(vec![
+                Expr::Sleep { millis: 80 },
+                Expr::stop(Expr::lit("boom")),
+            ]),
+            &env,
+        )
+        .unwrap();
+        let dep_id = f1.id().to_string();
+        let f2 = future_pipelined(
+            Expr::add(Expr::await_future(&dep_id), Expr::lit(1i64)),
+            &env,
+            FutureOpts::new(),
+            vec![f1],
+        )
+        .unwrap();
+        match f2.value() {
+            Err(e) => {
+                let msg = e.to_string();
+                assert!(msg.contains("boom"), "original error text lost: {msg}");
+            }
+            Ok(v) => panic!("failed dependency produced a value: {v:?}"),
+        }
+    });
+}
+
+/// After a multiprocess run the process holds exactly one reactor thread
+/// and zero legacy per-seat reader threads (Linux probe; skipped where
+/// /proc is unavailable).
+#[test]
+fn multiprocess_run_leaves_one_reactor_zero_readers() {
+    with_plan(PlanSpec::multiprocess(3), || {
+        let env = Env::new();
+        let xs: Vec<Value> = (0..9i64).map(Value::I64).collect();
+        let body = Expr::add(Expr::var("x"), Expr::runif(1));
+        let got = future_lapply(
+            &xs,
+            "x",
+            &body,
+            &env,
+            &LapplyOpts::new().seed(13).chunking(Chunking::ChunkSize(3)),
+        )
+        .unwrap();
+        assert_eq!(got.len(), xs.len());
+        if let Some(tc) = rustures::transport::thread_counts() {
+            assert_eq!(
+                tc.readers, 0,
+                "per-seat reader threads must not exist: {tc:?}"
+            );
+            assert_eq!(
+                tc.reactor, 1,
+                "exactly one poll thread must serve all seats: {tc:?}"
+            );
+        }
+    });
+}
+
+/// Soak: 256 simulated worker channels (socketpairs) registered with the
+/// transport at once — every inbound frame demultiplexed, every outbound
+/// write drained, all by ONE reactor thread.  Ignored by default (fd- and
+/// wall-clock-heavy); CI runs it in the transport soak step via
+/// `cargo test --test transport -- --ignored`.
+#[cfg(unix)]
+#[test]
+#[ignore]
+fn soak_256_channels_single_reactor_thread() {
+    use std::os::unix::io::AsRawFd;
+    use std::os::unix::net::UnixStream;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    use rustures::ipc::frame::write_message;
+    use rustures::ipc::Message;
+    use rustures::transport::{self, ChannelEvent, Endpoint};
+
+    const N: usize = 256;
+
+    let frames = Arc::new(AtomicUsize::new(0));
+    let closed = Arc::new(AtomicUsize::new(0));
+    let mut peers = Vec::with_capacity(N);
+    let mut channels = Vec::with_capacity(N);
+
+    for i in 0..N {
+        let (ours, theirs) = UnixStream::pair().expect("socketpair");
+        let reader = ours.try_clone().expect("dup");
+        let (rfd, wfd) = (reader.as_raw_fd(), ours.as_raw_fd());
+        let frames = Arc::clone(&frames);
+        let closed = Arc::clone(&closed);
+        let ch = transport::register(
+            &format!("soak-{i}"),
+            Endpoint::with_fds(Box::new(reader), Box::new(ours), rfd, wfd),
+            Arc::new(move |ev| match ev {
+                ChannelEvent::Message(_) => {
+                    frames.fetch_add(1, Ordering::SeqCst);
+                }
+                ChannelEvent::Closed | ChannelEvent::Error(_) => {
+                    closed.fetch_add(1, Ordering::SeqCst);
+                }
+                ChannelEvent::Stalled { .. } => {}
+            }),
+        );
+        peers.push(theirs);
+        channels.push(ch);
+    }
+
+    // Every simulated worker speaks once; the reactor must demultiplex all
+    // 256 inbound frames.
+    for peer in &mut peers {
+        write_message(peer, &Message::Ping).expect("peer write");
+    }
+    let give_up = Instant::now() + Duration::from_secs(30);
+    while frames.load(Ordering::SeqCst) < N {
+        assert!(
+            Instant::now() < give_up,
+            "only {}/{N} frames demultiplexed",
+            frames.load(Ordering::SeqCst)
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // Every channel takes an outbound frame and the reactor drains it.
+    let mut pong = Vec::new();
+    write_message(&mut pong, &Message::Pong).expect("encode");
+    for ch in &channels {
+        ch.send_bytes(&pong).expect("send");
+    }
+    for ch in &channels {
+        assert!(
+            ch.wait_outbox_below(0, Duration::from_secs(10)),
+            "outbox for {} never drained",
+            ch.name()
+        );
+    }
+
+    // The whole fleet is served by exactly one poll thread; the legacy
+    // thread-per-connection shape would need 256 readers here.
+    let tc = transport::thread_counts().expect("/proc thread probe");
+    assert_eq!(tc.reactor, 1, "one reactor must serve all {N} channels: {tc:?}");
+    assert_eq!(tc.readers, 0, "zero per-seat readers allowed: {tc:?}");
+
+    // Teardown: peers hang up; every channel reports Closed exactly once.
+    drop(peers);
+    let give_up = Instant::now() + Duration::from_secs(30);
+    while closed.load(Ordering::SeqCst) < N {
+        assert!(
+            Instant::now() < give_up,
+            "only {}/{N} channels reported Closed",
+            closed.load(Ordering::SeqCst)
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    for ch in &channels {
+        ch.close();
+    }
+}

@@ -1,11 +1,12 @@
 #!/usr/bin/env bash
 # Run the perf-trajectory benches (E1 overhead, E3 chunking, E11 resolve,
 # E12 recovery, E13 capacity, E14 liveness, E15 analysis, E16 wire,
-# E17 cache) and write machine-readable BENCH_overhead.json /
-# BENCH_chunking.json / BENCH_resolve.json / BENCH_recovery.json /
-# BENCH_capacity.json / BENCH_liveness.json / BENCH_analysis.json /
-# BENCH_wire.json / BENCH_cache.json at the repo root, so every PR can
-# diff perf against the previous one.
+# E17 cache, E18 transport) and write machine-readable
+# BENCH_overhead.json / BENCH_chunking.json / BENCH_resolve.json /
+# BENCH_recovery.json / BENCH_capacity.json / BENCH_liveness.json /
+# BENCH_analysis.json / BENCH_wire.json / BENCH_cache.json /
+# BENCH_transport.json at the repo root, so every PR can diff perf
+# against the previous one.
 #
 # Usage:
 #   scripts/bench.sh           # smoke mode (reduced iterations; CI default)
@@ -35,9 +36,10 @@ cargo bench --manifest-path rust/Cargo.toml --bench scaling
 cargo bench --manifest-path rust/Cargo.toml --bench analysis
 cargo bench --manifest-path rust/Cargo.toml --bench wire
 cargo bench --manifest-path rust/Cargo.toml --bench cache
+cargo bench --manifest-path rust/Cargo.toml --bench transport
 
 echo
 echo "== bench artifacts =="
 ls -l BENCH_overhead.json BENCH_chunking.json BENCH_resolve.json BENCH_recovery.json \
       BENCH_capacity.json BENCH_liveness.json BENCH_analysis.json BENCH_wire.json \
-      BENCH_cache.json
+      BENCH_cache.json BENCH_transport.json
